@@ -1,0 +1,126 @@
+//! Design-space exploration: sweep precision, subarray geometry, cell
+//! design and lane provisioning; print energy/latency/area Pareto rows.
+//!
+//! ```bash
+//! cargo run --release --example design_space
+//! ```
+
+use mram_pim::arch::{AccelKind, Accelerator};
+use mram_pim::device::{CellKind, CellParams, TechNode, SOT_MRAM_TABLE1};
+use mram_pim::fpu::{FloatFormat, FpCostModel};
+use mram_pim::metrics::fmt_si;
+use mram_pim::model::Network;
+use mram_pim::nvsim::{ArrayGeometry, OpCosts, PeripheryModel};
+
+fn main() {
+    let net = Network::lenet5();
+
+    println!("== precision sweep (per fp MAC, proposed design) ==");
+    println!("{:<8} {:>12} {:>12}", "format", "latency", "energy");
+    for (name, fmt) in [
+        ("fp32", FloatFormat::FP32),
+        ("fp16", FloatFormat::FP16),
+        ("bf16", FloatFormat::BF16),
+    ] {
+        let m = FpCostModel::new(OpCosts::proposed_default(), fmt);
+        println!(
+            "{:<8} {:>12} {:>12}",
+            name,
+            fmt_si(m.t_mac(), "s"),
+            fmt_si(m.e_mac(), "J")
+        );
+    }
+
+    println!("\n== cell-design sweep (per-op costs, Table 1 device) ==");
+    println!(
+        "{:<12} {:>12} {:>12} {:>14}",
+        "cell", "T_read", "T_write", "row-parallel?"
+    );
+    for (name, kind) in [
+        ("1T-1R*", CellKind::OneT1R),
+        ("2T-1R", CellKind::TwoT1R),
+        ("single-MTJ", CellKind::SingleMtj),
+    ] {
+        let c = OpCosts::derive(
+            &SOT_MRAM_TABLE1,
+            kind,
+            &TechNode::default(),
+            ArrayGeometry::default(),
+            &PeripheryModel::default(),
+        );
+        let d = mram_pim::device::CellDesign::of(kind);
+        println!(
+            "{:<12} {:>12} {:>12} {:>14}",
+            name,
+            fmt_si(c.t_read, "s"),
+            fmt_si(c.t_write, "s"),
+            if d.row_parallel_write { "yes" } else { "no (+1 step)" }
+        );
+    }
+    println!("(* = proposed; single-MTJ pays the §2 extra write step)");
+
+    println!("\n== subarray geometry sweep (fp32 MAC latency) ==");
+    println!("{:<12} {:>12} {:>12}", "geometry", "T_read", "MAC latency");
+    for rows in [256usize, 512, 1024, 2048] {
+        let geom = ArrayGeometry { rows, cols: rows };
+        let c = OpCosts::derive(
+            &SOT_MRAM_TABLE1,
+            CellKind::OneT1R,
+            &TechNode::default(),
+            geom,
+            &PeripheryModel::default(),
+        );
+        let m = FpCostModel::new(c, FloatFormat::FP32);
+        println!(
+            "{:<12} {:>12} {:>12}",
+            format!("{rows}x{rows}"),
+            fmt_si(c.t_read, "s"),
+            fmt_si(m.t_mac(), "s")
+        );
+    }
+
+    println!("\n== switching-device sweep (t_switch vs MAC latency) ==");
+    println!("{:<14} {:>12} {:>14}", "t_switch", "MAC latency", "vs Table 1");
+    let base = FpCostModel::proposed_fp32().t_mac();
+    for t_ns in [2.0f64, 1.0, 0.5, 0.32, 0.1] {
+        let mut cell: CellParams = SOT_MRAM_TABLE1;
+        cell.t_switch = t_ns * 1e-9;
+        cell.e_switch = 12.0e-15 * t_ns / 2.0;
+        let c = OpCosts::derive(
+            &cell,
+            CellKind::OneT1R,
+            &TechNode::default(),
+            ArrayGeometry::default(),
+            &PeripheryModel::default(),
+        );
+        let m = FpCostModel::new(c, FloatFormat::FP32);
+        println!(
+            "{:<14} {:>12} {:>13.1}%",
+            format!("{t_ns} ns"),
+            fmt_si(m.t_mac(), "s"),
+            (1.0 - m.t_mac() / base) * 100.0
+        );
+    }
+
+    println!("\n== model sweep (training step @ batch 32, proposed vs FloatPIM) ==");
+    println!(
+        "{:<16} {:>10} {:>12} {:>12} {:>8}",
+        "model", "params", "E ratio", "T ratio", "A ratio"
+    );
+    for net in [Network::lenet5(), Network::lenet_300_100(), Network::cnn_medium()] {
+        let ours = Accelerator::new(AccelKind::Proposed, FloatFormat::FP32, 32_768);
+        let theirs = Accelerator::new(AccelKind::FloatPim, FloatFormat::FP32, 32_768);
+        let o = ours.train_step_cost(&net, 32);
+        let f = theirs.train_step_cost(&net, 32);
+        println!(
+            "{:<16} {:>10} {:>11.2}x {:>11.2}x {:>7.2}x",
+            net.name,
+            net.param_count(),
+            f.energy_j / o.energy_j,
+            f.latency_s / o.latency_s,
+            f.area_m2 / o.area_m2
+        );
+    }
+    let _ = net;
+    println!("\ndesign_space OK");
+}

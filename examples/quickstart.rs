@@ -1,0 +1,66 @@
+//! Quickstart: build the proposed accelerator from a config, run one fp32
+//! MAC through the bit-level subarray procedure, and print the priced
+//! ledger plus the analytic cost the paper's equations predict.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use mram_pim::config::AccelConfig;
+use mram_pim::fpu::procedure::FpEngine;
+use mram_pim::fpu::softfloat;
+use mram_pim::fpu::FpCostModel;
+use mram_pim::metrics::fmt_si;
+use mram_pim::nvsim::ArrayGeometry;
+
+fn main() -> mram_pim::Result<()> {
+    // 1. Configuration (defaults == the paper's setup: Table 1 cell,
+    //    1T-1R, 1024×1024 subarray, fp32).
+    let cfg = AccelConfig::default();
+    let costs = cfg.op_costs();
+    println!("proposed accelerator @ 28 nm, {}×{} subarray", cfg.geometry.rows, cfg.geometry.cols);
+    println!(
+        "per-op: T_read {} T_write {} T_search {} | E_read {} E_write {} E_search {}\n",
+        fmt_si(costs.t_read, "s"),
+        fmt_si(costs.t_write, "s"),
+        fmt_si(costs.t_search, "s"),
+        fmt_si(costs.e_read, "J"),
+        fmt_si(costs.e_write, "J"),
+        fmt_si(costs.e_search, "J"),
+    );
+
+    // 2. Run a row-parallel batch of fp32 MACs through the bit-level
+    //    subarray procedures (one multiply + one accumulate-add).
+    let a = 3.14159f32;
+    let b = -2.71828f32;
+    let c = 1.41421f32;
+    let mut engine = FpEngine::new(ArrayGeometry { rows: 256, cols: 256 }, costs);
+    let prod = engine.mul(&[(a.to_bits(), b.to_bits())])[0];
+    let sum = engine.add(&[(prod, c.to_bits())])[0];
+    let result = f32::from_bits(sum);
+    println!("MAC: {a} * {b} + {c} = {result}");
+    assert_eq!(result, softfloat::pim_mac_f32(a, b, c), "bit-exact vs gold model");
+    assert_eq!(result, softfloat::ftz(softfloat::ftz(a * b) + c), "bit-exact vs host IEEE (FTZ)");
+
+    // 3. The priced ledger of that MAC (all 256 rows would have computed
+    //    in the same steps — that is the PIM win).
+    let l = &engine.sub.ledger;
+    println!(
+        "\nledger: {} reads, {} writes, {} searches -> latency {}, energy {}",
+        l.reads,
+        l.writes,
+        l.searches,
+        fmt_si(l.time_s, "s"),
+        fmt_si(l.energy_j, "J"),
+    );
+
+    // 4. The analytic model (the paper's §3.3 equations).
+    let model = FpCostModel::new(costs, cfg.format);
+    println!(
+        "analytic MAC (eq. §3.3): latency {}, energy {}",
+        fmt_si(model.t_mac(), "s"),
+        fmt_si(model.e_mac(), "J"),
+    );
+    println!("\nquickstart OK");
+    Ok(())
+}

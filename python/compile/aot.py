@@ -1,0 +1,124 @@
+"""AOT pipeline: lower every L2/L1 entry point once to HLO *text* artifacts.
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (wired as
+``make artifacts``).  The rust runtime (`rust/src/runtime/`) loads these
+with ``HloModuleProto::from_text_file`` and executes them on the PJRT CPU
+client; python is never on the request path.
+
+HLO text -- NOT ``lowered.compile()`` / proto ``.serialize()`` -- is the
+interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit
+instruction ids which the crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import pim_mac
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def artifact_specs():
+    """name -> (fn, example_args, doc). Shapes are the runtime contract."""
+    pshapes = model.param_shapes()
+    params = [_f32(*s) for s in pshapes]
+    tb, eb, hw = model.TRAIN_BATCH, model.EVAL_BATCH, model.IMAGE_HW
+    n = pim_mac.LANES
+
+    def train_tuple(*a):
+        return model.train_step(*a)
+
+    def eval_tuple(*a):
+        return model.eval_step(*a)
+
+    def init_tuple(seed):
+        return model.init_step(seed)
+
+    def pim_mul(a, b):
+        return (pim_mac.pim_mul_f32(a, b),)
+
+    def pim_add(a, b):
+        return (pim_mac.pim_add_f32(a, b),)
+
+    return {
+        "lenet_train_step": (
+            train_tuple,
+            params + [_f32(tb, 1, hw, hw), _i32(tb), _f32()],
+            f"(p0..p7, x f32[{tb},1,{hw},{hw}], y i32[{tb}], lr f32[]) -> (p0'..p7', loss)",
+        ),
+        "lenet_eval": (
+            eval_tuple,
+            params + [_f32(eb, 1, hw, hw), _i32(eb)],
+            f"(p0..p7, x f32[{eb},1,{hw},{hw}], y i32[{eb}]) -> (loss, correct)",
+        ),
+        "lenet_init": (
+            init_tuple,
+            [_i32()],
+            "(seed i32[]) -> (p0..p7)",
+        ),
+        "pim_fp32_mul": (
+            pim_mul,
+            [_f32(n), _f32(n)],
+            f"(a f32[{n}], b f32[{n}]) -> (a*b via bit-level PIM shift-and-add,)",
+        ),
+        "pim_fp32_add": (
+            pim_add,
+            [_f32(n), _f32(n)],
+            f"(a f32[{n}], b f32[{n}]) -> (a+b via bit-level PIM search-align add,)",
+        ),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="lower a single artifact")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+    for name, (fn, example_args, doc) in artifact_specs().items():
+        if args.only and name != args.only:
+            continue
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"{name}.hlo.txt\t{doc}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    if not args.only:
+        manifest.append(f"# param_count={model.param_count()}")
+        manifest.append(
+            f"# train_batch={model.TRAIN_BATCH} eval_batch={model.EVAL_BATCH}"
+        )
+        with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+            f.write("\n".join(manifest) + "\n")
+        print(f"wrote {os.path.join(args.out_dir, 'manifest.txt')}")
+
+
+if __name__ == "__main__":
+    main()

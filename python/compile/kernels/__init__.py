@@ -1,0 +1,3 @@
+"""L1 Pallas kernels (build-time only; lowered into the AOT artifacts)."""
+
+from . import conv2d, matmul, pim_mac, ref  # noqa: F401

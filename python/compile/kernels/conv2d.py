@@ -1,0 +1,61 @@
+"""L1: valid 2-D convolution as im2col patches x Pallas matmul.
+
+The patch extraction (``conv_general_dilated_patches``) is pure data movement
+and stays in jnp where XLA fuses it; every FLOP of the convolution goes
+through :func:`kernels.matmul.matmul`, i.e. the Pallas kernel, in both the
+forward and backward pass (via the kernel's custom VJP).
+
+Layout convention: NCHW activations, OIHW weights -- matching the paper's
+LeNet description and the rust-side `model::Layer` shapes.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .matmul import matmul
+
+
+def im2col(x, kh: int, kw: int):
+    """x: f[B, C, H, W] -> patches f[B*OH*OW, C*kh*kw] (valid, stride 1).
+
+    Column ordering is (C, kh, kw) fastest-last, matching a reshape of an
+    OIHW weight tensor to [O, C*kh*kw].
+    """
+    b, c, h, w = x.shape
+    oh, ow = h - kh + 1, w - kw + 1
+    # [B, C*kh*kw, OH, OW]; feature dim ordered (C, kh, kw).
+    patches = lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    # -> [B, OH, OW, C*kh*kw] -> [B*OH*OW, C*kh*kw]
+    patches = jnp.moveaxis(patches, 1, -1)
+    return patches.reshape(b * oh * ow, c * kh * kw), (b, oh, ow)
+
+
+def conv2d(x, w, b=None):
+    """Valid stride-1 convolution.
+
+    x: f[B, C, H, W]; w: f[O, C, KH, KW]; b: f[O] or None.
+    Returns f[B, O, OH, OW].
+    """
+    o, c, kh, kw = w.shape
+    cols, (batch, oh, ow) = im2col(x, kh, kw)          # [B*OH*OW, C*kh*kw]
+    wmat = w.reshape(o, c * kh * kw).T                 # [C*kh*kw, O]
+    out = matmul(cols, wmat)                           # [B*OH*OW, O]
+    out = out.reshape(batch, oh, ow, o)
+    out = jnp.moveaxis(out, -1, 1)                     # [B, O, OH, OW]
+    if b is not None:
+        out = out + b[None, :, None, None]
+    return out
+
+
+def avg_pool2(x):
+    """2x2 average pool, stride 2. x: f[B, C, H, W] with even H, W."""
+    b, c, h, w = x.shape
+    x = x.reshape(b, c, h // 2, 2, w // 2, 2)
+    return x.mean(axis=(3, 5))

@@ -1,0 +1,92 @@
+"""L1 Pallas kernel: tiled matrix multiply with a custom VJP.
+
+This is the single dense-compute primitive the whole LeNet training graph is
+built on (convolutions are lowered to im2col patches x weights, FC layers use
+it directly).  The kernel is written for TPU-style tiling -- (block_m x K) LHS
+block and (K x block_n) RHS block streamed into VMEM, accumulated in fp32 on
+the MXU -- but is lowered here with ``interpret=True`` so the emitted HLO runs
+on any PJRT backend (see DESIGN.md `Hardware-Adaptation`).
+
+The custom VJP routes both backward matmuls through the same Pallas kernel so
+the *entire* training step, forward and backward, exercises the L1 kernel.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block sizes: multiples of the TPU (8, 128) fp32 tile; a
+# (128 x K) + (K x 128) + (128 x 128) working set stays well under VMEM for
+# every K used by LeNet (K <= 1152).
+DEFAULT_BLOCK_M = 128
+DEFAULT_BLOCK_N = 128
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One (block_m x block_n) output tile: full-K dot in fp32."""
+    o_ref[...] = jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _matmul_impl(a, b, *, block_m=DEFAULT_BLOCK_M, block_n=DEFAULT_BLOCK_N):
+    """Pad-to-tile, run the Pallas grid, slice back to the true shape."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch: {a.shape} @ {b.shape}"
+    out_dtype = jnp.result_type(a.dtype, b.dtype)
+
+    bm = min(block_m, _ceil_to(m, 8))
+    bn = min(block_n, _ceil_to(n, 128))
+    pm, pn = _ceil_to(m, bm), _ceil_to(n, bn)
+    pa = jnp.pad(a, ((0, pm - m), (0, 0))) if pm != m else a
+    pb = jnp.pad(b, ((0, 0), (0, pn - n))) if pn != n else b
+
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(pm // bm, pn // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pm, pn), out_dtype),
+        interpret=True,
+    )(pa, pb)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def matmul(a, b):
+    """``a @ b`` through the Pallas kernel, differentiable.
+
+    a: f[M, K], b: f[K, N] -> f[M, N] (fp32 accumulation).
+    """
+    return _matmul_impl(a, b)
+
+
+def _matmul_fwd(a, b):
+    return _matmul_impl(a, b), (a, b)
+
+
+def _matmul_bwd(res, g):
+    a, b = res
+    # dA = g @ B^T, dB = A^T @ g -- both through the same Pallas kernel.
+    da = _matmul_impl(g, b.T).astype(a.dtype)
+    db = _matmul_impl(a.T, g).astype(b.dtype)
+    return da, db
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def matmul_jit(a, b, block_m=DEFAULT_BLOCK_M, block_n=DEFAULT_BLOCK_N):
+    """Jitted non-VJP entry point used by the shape/dtype sweep tests."""
+    return _matmul_impl(a, b, block_m=block_m, block_n=block_n)

@@ -1,0 +1,290 @@
+"""L1 Pallas kernel: bit-level emulation of the paper's PIM floating-point
+datapath (section 3.3).
+
+The accelerator computes fp32 arithmetic *digitally inside the memory array*:
+
+* **multiply** -- the mantissa product is formed by the paper's
+  shift-and-add procedure (Fig. 4b): the 24-bit multiplicand is ANDed with
+  one multiplier bit at a time, shifted, and accumulated into a two-limb
+  carry-propagate result held in two cache columns;
+* **add** -- exponents are aligned with the CAM-style "search" (Fig. 4a)
+  which shifts the smaller mantissa by the exponent difference in one go
+  (the O(Nm) scheme), then the mantissas are added with the 4-step full
+  adder and renormalised.
+
+This kernel reproduces those procedures bit-for-bit on uint32 lanes: one
+subarray **row** in the paper maps to one vector **lane** here, so the
+row-parallelism the memory array provides is expressed as lane-parallelism
+in the TPU VPU (see DESIGN.md `Hardware-Adaptation`).  The point is
+*certification*, not speed: the procedures must produce IEEE-754
+round-to-nearest-even results (with flush-to-zero for subnormals, the
+digital-PIM convention) so that training in the simulator is numerically
+identical to training on the host.
+
+The rust simulator (`rust/src/fpu/`) implements the same procedures over
+simulated memory cells; `rust/tests/runtime_artifacts.rs` checks rust, this
+kernel (via the AOT artifact) and host IEEE agree on the same operands.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+U32 = jnp.uint32
+I32 = jnp.int32
+
+# Plain python ints: jnp array constants at module scope would be captured
+# by the pallas kernel trace ("captures constants" error); literals are not.
+_QNAN = 0x7FC00000
+_EXP_MASK = 0xFF
+_FRAC_MASK = 0x7FFFFF
+_IMPLIED = 0x800000
+
+MANTISSA_BITS = 24  # 23 stored + 1 implied
+LANES = 1024  # one 1024-wide subarray row per grid step
+
+
+def _u(x):
+    return jnp.asarray(x, U32)
+
+
+def _fields(bits):
+    """Unpack sign / biased exponent / fraction from raw fp32 bits."""
+    sign = bits >> 31
+    exp = (bits >> 23) & _EXP_MASK
+    frac = bits & _FRAC_MASK
+    return sign, exp, frac
+
+
+def _msb_pos(x):
+    """Index of the most significant set bit (x assumed > 0), vectorised.
+
+    The PIM array finds this with a parallel search over bit columns; here
+    it is the classic 5-step binary reduction.
+    """
+    p = jnp.zeros_like(x)
+    for sh in (16, 8, 4, 2, 1):
+        big = x >= _u(1 << sh)
+        x = jnp.where(big, x >> sh, x)
+        p = jnp.where(big, p + _u(sh), p)
+    return p
+
+
+def mul_bits(abits, bbits):
+    """fp32 multiply on raw bits via the paper's shift-and-add procedure.
+
+    Semantics: IEEE-754 round-to-nearest-even with flush-to-zero (FTZ) for
+    subnormal inputs and outputs; NaN results are canonical 0x7FC00000.
+    """
+    sa, ea, fa = _fields(abits)
+    sb, eb, fb = _fields(bbits)
+
+    a_nan = (ea == 255) & (fa != 0)
+    b_nan = (eb == 255) & (fb != 0)
+    a_inf = (ea == 255) & (fa == 0)
+    b_inf = (eb == 255) & (fb == 0)
+    a_zero = ea == 0  # FTZ: exponent 0 => value treated as (signed) zero
+    b_zero = eb == 0
+
+    sign = sa ^ sb
+    ma = jnp.where(a_zero, _u(0), fa | _IMPLIED)  # 24-bit significand
+    mb = jnp.where(b_zero, _u(0), fb | _IMPLIED)
+
+    # ---- mantissa product: shift-and-add into two 32-bit limbs ----------
+    # The paper stores the running partial sum in two cache columns that
+    # swap roles each step; two u32 limbs (lo, hi) model the 48-bit value.
+    lo = jnp.zeros_like(ma)
+    hi = jnp.zeros_like(ma)
+    for i in range(MANTISSA_BITS):
+        bit = (mb >> i) & _u(1)
+        addend = ma * bit                     # AND row: ma or 0
+        add_lo = addend << i                  # low 32 of (addend << i)
+        # (addend >> (32 - i)) written as two shifts so i = 0 stays legal.
+        add_hi = (addend >> (31 - i)) >> 1 if i > 0 else jnp.zeros_like(ma)
+        new_lo = lo + add_lo
+        carry = jnp.where(new_lo < lo, _u(1), _u(0))
+        hi = hi + add_hi + carry
+        lo = new_lo
+
+    # ---- normalise + round-to-nearest-even ------------------------------
+    # Product of two [2^23, 2^24) significands lies in [2^46, 2^48).
+    top_set = (hi >> 15) & _u(1)              # bit 47 of the product
+    # Drop `s` low bits so 24 significand bits remain (implied bit at 23).
+    # s = 24 when bit47 set (product in [2,4)), else 23.
+    m24_s24 = ((lo >> 24) | (hi << 8)) & _u(0xFFFFFF)
+    m24_s23 = ((lo >> 23) | (hi << 9)) & _u(0xFFFFFF)
+    mant = jnp.where(top_set == 1, m24_s24, m24_s23)
+    guard = jnp.where(top_set == 1, (lo >> 23) & _u(1), (lo >> 22) & _u(1))
+    sticky = jnp.where(
+        top_set == 1, (lo & _u(0x7FFFFF)) != 0, (lo & _u(0x3FFFFF)) != 0
+    )
+    round_up = (guard == 1) & (sticky | ((mant & _u(1)) == 1))
+    mant = mant + jnp.where(round_up, _u(1), _u(0))
+    mant_ovf = mant == _u(1 << 24)
+    mant = jnp.where(mant_ovf, mant >> 1, mant)
+
+    e0 = ea.astype(I32) + eb.astype(I32) - 127 + top_set.astype(I32)
+    e = e0 + mant_ovf.astype(I32)
+
+    normal = (sign << 31) | (e.astype(U32) << 23) | (mant & _FRAC_MASK)
+    overflow = e >= 255
+    underflow = e <= 0  # below the normal range
+    # Subnormal-boundary case: IEEE gradual-underflow rounding sends any
+    # value >= min_normal - 2^-150 up to min_normal (tie-to-even lands on
+    # the even mantissa).  That happens exactly when the pre-round
+    # significand at e0 == 0 has all 24 bits set; everything else in the
+    # subnormal range flushes to zero (FTZ).
+    boundary = (e0 == 0) & (
+        jnp.where(top_set == 1, m24_s24, m24_s23) == _u(0xFFFFFF)
+    )
+    min_normal = (sign << 31) | _u(0x00800000)
+
+    result = jnp.where(underflow, jnp.where(boundary, min_normal, sign << 31), normal)
+    result = jnp.where(overflow, (sign << 31) | _u(0x7F800000), result)
+    result = jnp.where(a_zero | b_zero, sign << 31, result)
+    result = jnp.where(a_inf | b_inf, (sign << 31) | _u(0x7F800000), result)
+    is_nan = a_nan | b_nan | (a_inf & b_zero) | (b_inf & a_zero)
+    result = jnp.where(is_nan, _QNAN, result)
+    return result
+
+
+def add_bits(abits, bbits):
+    """fp32 add on raw bits via search-aligned mantissa addition.
+
+    Exponent alignment happens in ONE shift of `d` bits (the proposed
+    O(Nm) scheme -- the 1T-1R cell lets whole groups of rows shift by the
+    amount found by the CAM search), then a carry-propagate mantissa
+    add/sub and renormalisation.  IEEE RNE + FTZ semantics as `mul_bits`.
+    """
+    sa, ea, fa = _fields(abits)
+    sb, eb, fb = _fields(bbits)
+
+    a_nan = (ea == 255) & (fa != 0)
+    b_nan = (eb == 255) & (fb != 0)
+    a_inf = (ea == 255) & (fa == 0)
+    b_inf = (eb == 255) & (fb == 0)
+    a_zero = ea == 0  # FTZ
+    b_zero = eb == 0
+
+    # Order by magnitude: |x| >= |y|.  Magnitude order == integer order of
+    # the low 31 bits for (FTZ-)normal values.
+    amag = abits & _u(0x7FFFFFFF)
+    bmag = bbits & _u(0x7FFFFFFF)
+    a_big = amag >= bmag
+    sx = jnp.where(a_big, sa, sb)
+    ex = jnp.where(a_big, ea, eb)
+    fx = jnp.where(a_big, fa, fb)
+    sy = jnp.where(a_big, sb, sa)
+    ey = jnp.where(a_big, eb, ea)
+    fy = jnp.where(a_big, fb, fa)
+
+    mx = (fx | _IMPLIED) << 3  # 27 bits: significand + G,R,S space
+    my = (fy | _IMPLIED) << 3
+
+    # ---- exponent alignment: single d-bit shift (the "search" result) ---
+    d = (ex - ey).astype(U32)
+    d_c = jnp.minimum(d, _u(27))
+    lost = my & ((_u(1) << d_c) - _u(1))
+    my_al = (my >> d_c) | jnp.where(lost != 0, _u(1), _u(0))  # fold sticky
+
+    subtract = sx != sy
+    total = jnp.where(subtract, mx - my_al, mx + my_al)  # <= 28 bits
+
+    # ---- renormalise ------------------------------------------------------
+    is_cancel = total == 0
+    safe_total = jnp.where(is_cancel, _u(1), total)
+    p = _msb_pos(safe_total)  # target implied-bit position is 26
+
+    shift_r = p == _u(27)  # carry out: shift right 1, keep sticky
+    total_r = (safe_total >> 1) | (safe_total & _u(1))
+    shl = jnp.where(p < _u(26), _u(26) - p, _u(0))
+    total_n = jnp.where(shift_r, total_r, safe_total << shl)
+
+    kept = total_n >> 3  # 24-bit significand
+    kept_preround = kept
+    rb = (total_n >> 2) & _u(1)
+    st = (total_n & _u(3)) != 0
+    round_up = (rb == 1) & (st | ((kept & _u(1)) == 1))
+    kept = kept + jnp.where(round_up, _u(1), _u(0))
+    kept_ovf = kept == _u(1 << 24)
+    kept = jnp.where(kept_ovf, kept >> 1, kept)
+
+    e0 = ex.astype(I32) + jnp.where(shift_r, 1, 0) - shl.astype(I32)
+    e = e0 + kept_ovf.astype(I32)
+
+    normal = (sx << 31) | (e.astype(U32) << 23) | (kept & _FRAC_MASK)
+    # Same subnormal-boundary handling as mul_bits: all-ones pre-round
+    # significand at e0 == 0 rounds up to min_normal under IEEE gradual
+    # underflow; everything else below the normal range flushes (FTZ).
+    boundary = (e0 == 0) & (kept_preround == _u(0xFFFFFF))
+    min_normal = (sx << 31) | _u(0x00800000)
+    # Inexact subnormal results flush to *signed* zero; only exact
+    # cancellation yields +0 (the RNE rule).
+    underflowed = jnp.where(boundary, min_normal, sx << 31)
+    result = jnp.where(is_cancel, _u(0), jnp.where(e <= 0, underflowed, normal))
+    result = jnp.where(e >= 255, (sx << 31) | _u(0x7F800000), result)
+
+    # ---- specials ----------------------------------------------------------
+    # zeros: x + (+-0) = x;  (+-0) + (+-0): +0 under RNE unless both -0.
+    both_zero_sign = (sa & sb) << 31
+    result = jnp.where(a_zero & b_zero, both_zero_sign, result)
+    result = jnp.where(a_zero & ~b_zero, bbits, result)
+    result = jnp.where(b_zero & ~a_zero, abits, result)
+    # infinities
+    result = jnp.where(a_inf, abits, result)
+    result = jnp.where(b_inf, bbits, result)
+    is_nan = a_nan | b_nan | (a_inf & b_inf & (sa != sb))
+    result = jnp.where(is_nan, _QNAN, result)
+    return result
+
+
+def mac_bits(abits, bbits, cbits):
+    """Non-fused PIM MAC: round(round(a*b) + c) -- two array passes."""
+    return add_bits(mul_bits(abits, bbits), cbits)
+
+
+# --------------------------------------------------------------------------
+# Pallas wrappers: one grid step processes one LANES-wide subarray row.
+# --------------------------------------------------------------------------
+
+
+def _wrap_binary(bit_fn):
+    def kernel(a_ref, b_ref, o_ref):
+        o_ref[...] = bit_fn(a_ref[...], b_ref[...])
+
+    def call(abits, bbits):
+        (n,) = abits.shape
+        assert n % LANES == 0, f"operand length {n} not a multiple of {LANES}"
+        return pl.pallas_call(
+            kernel,
+            grid=(n // LANES,),
+            in_specs=[
+                pl.BlockSpec((LANES,), lambda i: (i,)),
+                pl.BlockSpec((LANES,), lambda i: (i,)),
+            ],
+            out_specs=pl.BlockSpec((LANES,), lambda i: (i,)),
+            out_shape=jax.ShapeDtypeStruct((n,), U32),
+            interpret=True,
+        )(abits, bbits)
+
+    return call
+
+
+pim_mul_u32 = _wrap_binary(mul_bits)
+pim_add_u32 = _wrap_binary(add_bits)
+
+
+def pim_mul_f32(a, b):
+    """fp32 in/out wrapper: bitcast -> PIM multiply kernel -> bitcast."""
+    bits = pim_mul_u32(
+        jax.lax.bitcast_convert_type(a, U32), jax.lax.bitcast_convert_type(b, U32)
+    )
+    return jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def pim_add_f32(a, b):
+    """fp32 in/out wrapper: bitcast -> PIM add kernel -> bitcast."""
+    bits = pim_add_u32(
+        jax.lax.bitcast_convert_type(a, U32), jax.lax.bitcast_convert_type(b, U32)
+    )
+    return jax.lax.bitcast_convert_type(bits, jnp.float32)

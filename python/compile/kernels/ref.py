@@ -1,0 +1,56 @@
+"""Pure-jnp / numpy oracles for every L1 kernel.
+
+These are the correctness references the pytest + hypothesis suites compare
+the Pallas kernels against.  Nothing here is ever lowered into an artifact.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+
+def matmul_ref(a, b):
+    """Oracle for kernels.matmul.matmul."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32).astype(
+        jnp.result_type(a.dtype, b.dtype)
+    )
+
+
+def conv2d_ref(x, w, b=None):
+    """Oracle for kernels.conv2d.conv2d: XLA's own convolution."""
+    out = lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    if b is not None:
+        out = out + b[None, :, None, None]
+    return out
+
+
+def avg_pool2_ref(x):
+    """Oracle for kernels.conv2d.avg_pool2."""
+    return lax.reduce_window(
+        x, 0.0, lax.add, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+    ) / 4.0
+
+
+def _ftz32(x):
+    """Flush subnormals to (sign-preserving) zero, the PIM convention."""
+    x = np.asarray(x, np.float32)
+    bits = x.view(np.uint32)
+    sub = (bits & 0x7F800000) == 0
+    out = np.where(sub, (bits & 0x80000000).astype(np.uint32), bits)
+    return out.view(np.float32)
+
+
+def pim_mul_ref(a, b):
+    """Oracle for the PIM multiply: host IEEE multiply under FTZ."""
+    return _ftz32(_ftz32(a) * _ftz32(b))
+
+
+def pim_add_ref(a, b):
+    """Oracle for the PIM add: host IEEE add under FTZ."""
+    return _ftz32(_ftz32(a) + _ftz32(b))

@@ -1,0 +1,32 @@
+"""Shared fixtures + hypothesis profile for the kernel/model suites."""
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, settings
+
+settings.register_profile(
+    "kernels",
+    deadline=None,  # interpret-mode pallas is slow; wallclock is meaningless
+    max_examples=25,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+settings.load_profile("kernels")
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0xC0FFEE)
+
+
+def assert_bits_equal(got, want, msg=""):
+    """Exact fp32 bit equality, treating any-NaN == any-NaN."""
+    got = np.asarray(got, np.float32)
+    want = np.asarray(want, np.float32)
+    gb, wb = got.view(np.uint32), want.view(np.uint32)
+    ok = (gb == wb) | (np.isnan(got) & np.isnan(want))
+    if not ok.all():
+        i = int(np.argmax(~ok))
+        raise AssertionError(
+            f"{msg} bit mismatch at {i}: got {got.flat[i]!r} ({gb.flat[i]:#010x}) "
+            f"want {want.flat[i]!r} ({wb.flat[i]:#010x})"
+        )

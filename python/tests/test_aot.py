@@ -1,0 +1,71 @@
+"""AOT artifact contract: every spec lowers to parseable HLO text with the
+expected entry computation signature."""
+
+import re
+
+import jax
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def specs():
+    return aot.artifact_specs()
+
+
+def test_spec_inventory(specs):
+    assert set(specs) == {
+        "lenet_train_step",
+        "lenet_eval",
+        "lenet_init",
+        "pim_fp32_mul",
+        "pim_fp32_add",
+    }
+
+
+@pytest.mark.parametrize(
+    "name,n_args,n_outs",
+    [
+        ("lenet_train_step", 11, 9),
+        ("lenet_eval", 10, 2),
+        ("lenet_init", 1, 8),
+        ("pim_fp32_mul", 2, 1),
+        ("pim_fp32_add", 2, 1),
+    ],
+)
+def test_lowering_signature(specs, name, n_args, n_outs):
+    fn, example_args, _doc = specs[name]
+    assert len(example_args) == n_args
+    lowered = jax.jit(fn).lower(*example_args)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule"), text[:60]
+    # Extract the ENTRY computation body (this dump style puts no signature
+    # on the ENTRY line) and count parameter instructions + ROOT tuple arity.
+    lines = text.splitlines()
+    start = next(i for i, l in enumerate(lines) if l.startswith("ENTRY"))
+    body = []
+    for l in lines[start + 1 :]:
+        if l.strip() == "}":
+            break
+        body.append(l)
+    params = [l for l in body if re.search(r"= \S+ parameter\(\d+\)", l)]
+    assert len(params) == n_args, f"{name}: {len(params)} parameters"
+    root = next(l for l in body if l.strip().startswith("ROOT"))
+    m = re.search(r"tuple\((?P<elems>.*)\)", root)
+    assert m, root
+    elems = [e for e in m.group("elems").split(", ") if e]
+    assert len(elems) == n_outs, root
+
+
+def test_no_custom_calls(specs):
+    """interpret=True pallas must lower to plain HLO the CPU client can run."""
+    for name, (fn, example_args, _doc) in specs.items():
+        text = aot.to_hlo_text(jax.jit(fn).lower(*example_args))
+        assert "custom-call" not in text, f"{name} contains a custom-call"
+
+
+def test_train_batch_shape_in_text(specs):
+    fn, example_args, _ = specs["lenet_train_step"]
+    text = aot.to_hlo_text(jax.jit(fn).lower(*example_args))
+    assert f"f32[{model.TRAIN_BATCH},1,28,28]" in text

@@ -1,0 +1,97 @@
+"""Pallas-backed conv2d / avg_pool2 vs XLA's own convolution."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.conv2d import avg_pool2, conv2d, im2col
+from compile.kernels.ref import avg_pool2_ref, conv2d_ref
+
+
+def _rand(rng, shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+@pytest.mark.parametrize(
+    "b,c,h,w,o,kh,kw",
+    [
+        (1, 1, 5, 5, 1, 5, 5),      # degenerate 1x1 output
+        (2, 1, 28, 28, 6, 5, 5),    # LeNet conv1
+        (2, 6, 12, 12, 12, 5, 5),   # LeNet conv2
+        (3, 4, 9, 11, 7, 3, 3),     # asymmetric
+        (1, 2, 8, 8, 3, 1, 1),      # pointwise
+    ],
+)
+def test_conv_shapes(rng, b, c, h, w, o, kh, kw):
+    x = _rand(rng, (b, c, h, w))
+    wgt = _rand(rng, (o, c, kh, kw))
+    bias = _rand(rng, (o,))
+    got = np.asarray(conv2d(x, wgt, bias))
+    want = np.asarray(conv2d_ref(x, wgt, bias))
+    assert got.shape == (b, o, h - kh + 1, w - kw + 1)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(
+    b=st.integers(1, 3),
+    c=st.integers(1, 4),
+    o=st.integers(1, 6),
+    k=st.sampled_from([1, 3, 5]),
+    extra=st.integers(0, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=15)
+def test_hypothesis_conv_sweep(b, c, o, k, extra, seed):
+    rng = np.random.default_rng(seed)
+    h = w = k + extra
+    x = _rand(rng, (b, c, h, w))
+    wgt = _rand(rng, (o, c, k, k))
+    got = np.asarray(conv2d(x, wgt))
+    want = np.asarray(conv2d_ref(x, wgt))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_im2col_column_order(rng):
+    """Column ordering must match OIHW weight reshape (C, KH, KW)."""
+    x = _rand(rng, (1, 2, 4, 4))
+    cols, (b, oh, ow) = im2col(x, 3, 3)
+    assert cols.shape == (1 * 2 * 2, 2 * 9)
+    # patch at output (0,0): x[0, :, 0:3, 0:3] flattened C-major
+    want = np.asarray(x)[0, :, 0:3, 0:3].reshape(-1)
+    np.testing.assert_array_equal(np.asarray(cols)[0], want)
+
+
+def test_avg_pool(rng):
+    x = _rand(rng, (2, 3, 8, 10))
+    np.testing.assert_allclose(
+        np.asarray(avg_pool2(x)), np.asarray(avg_pool2_ref(x)), rtol=1e-5, atol=1e-7
+    )
+
+
+def test_conv_grad_matches_xla(rng):
+    x = _rand(rng, (2, 1, 10, 10))
+    wgt = _rand(rng, (3, 1, 5, 5))
+    bias = _rand(rng, (3,))
+
+    ours = lambda w, b: jnp.sum(conv2d(x, w, b) ** 2)
+    ref = lambda w, b: jnp.sum(conv2d_ref(x, w, b) ** 2)
+    gw1, gb1 = jax.grad(ours, argnums=(0, 1))(wgt, bias)
+    gw2, gb2 = jax.grad(ref, argnums=(0, 1))(wgt, bias)
+    np.testing.assert_allclose(np.asarray(gw1), np.asarray(gw2), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gb1), np.asarray(gb2), rtol=1e-4, atol=1e-4)
+
+
+def test_conv_input_grad(rng):
+    x = _rand(rng, (1, 2, 9, 9))
+    wgt = _rand(rng, (4, 2, 3, 3))
+    ours = lambda x: jnp.sum(jnp.sin(conv2d(x, wgt)))
+    ref = lambda x: jnp.sum(jnp.sin(conv2d_ref(x, wgt)))
+    np.testing.assert_allclose(
+        np.asarray(jax.grad(ours)(x)),
+        np.asarray(jax.grad(ref)(x)),
+        rtol=1e-4,
+        atol=1e-4,
+    )

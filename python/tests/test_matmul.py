@@ -1,0 +1,102 @@
+"""Pallas matmul kernel vs the jnp oracle: shapes, dtypes, VJP."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.matmul import matmul, matmul_jit
+from compile.kernels.ref import matmul_ref
+
+
+def _rand(rng, shape, dtype):
+    x = rng.standard_normal(shape).astype(np.float32)
+    return x.astype(dtype)
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (1, 1, 1),
+        (8, 8, 8),
+        (128, 128, 128),
+        (5, 7, 3),          # nothing aligned
+        (130, 150, 97),     # straddles block boundaries
+        (32, 1152, 10),     # LeNet fc-ish
+        (256, 192, 97),
+    ],
+)
+def test_shapes_f32(rng, m, k, n):
+    a, b = _rand(rng, (m, k), np.float32), _rand(rng, (k, n), np.float32)
+    got = np.asarray(matmul_jit(a, b))
+    want = np.asarray(matmul_ref(a, b))
+    # accumulation order differs between the tiled kernel and the oracle;
+    # scale the absolute tolerance with the contraction length
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5 * np.sqrt(k))
+
+
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_dtypes(rng, dtype):
+    a = jnp.asarray(_rand(rng, (33, 65), np.float32)).astype(dtype)
+    b = jnp.asarray(_rand(rng, (65, 17), np.float32)).astype(dtype)
+    got = np.asarray(matmul_jit(a, b), np.float32)
+    want = np.asarray(matmul_ref(a, b), np.float32)
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+@given(
+    m=st.integers(1, 64),
+    k=st.integers(1, 64),
+    n=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=20)
+def test_hypothesis_shape_sweep(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((m, k)).astype(np.float32)
+    b = rng.standard_normal((k, n)).astype(np.float32)
+    got = np.asarray(matmul_jit(a, b))
+    want = np.asarray(matmul_ref(a, b))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("bm,bn", [(8, 128), (16, 128), (128, 256)])
+def test_block_shape_invariance(rng, bm, bn):
+    """Result must not depend on the BlockSpec tiling."""
+    a, b = _rand(rng, (100, 60), np.float32), _rand(rng, (60, 140), np.float32)
+    got = np.asarray(matmul_jit(a, b, block_m=bm, block_n=bn))
+    want = np.asarray(matmul_jit(a, b))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_vjp_matches_jnp(rng):
+    a = _rand(rng, (12, 20), np.float32)
+    b = _rand(rng, (20, 9), np.float32)
+    g = _rand(rng, (12, 9), np.float32)
+
+    def ours(a, b):
+        return jnp.vdot(matmul(a, b), g)
+
+    def theirs(a, b):
+        return jnp.vdot(jnp.matmul(a, b), g)
+
+    da1, db1 = jax.grad(ours, argnums=(0, 1))(a, b)
+    da2, db2 = jax.grad(theirs, argnums=(0, 1))(a, b)
+    np.testing.assert_allclose(np.asarray(da1), np.asarray(da2), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(db1), np.asarray(db2), rtol=1e-5, atol=1e-6)
+
+
+def test_grad_through_chain(rng):
+    """Two chained kernel matmuls differentiate like the jnp chain."""
+    a = _rand(rng, (6, 8), np.float32)
+    w1 = _rand(rng, (8, 16), np.float32)
+    w2 = _rand(rng, (16, 4), np.float32)
+
+    ours = lambda w1, w2: jnp.sum(matmul(jax.nn.relu(matmul(a, w1)), w2) ** 2)
+    ref = lambda w1, w2: jnp.sum((jax.nn.relu(a @ w1) @ w2) ** 2)
+    g1 = jax.grad(ours, argnums=(0, 1))(w1, w2)
+    g2 = jax.grad(ref, argnums=(0, 1))(w1, w2)
+    for x, y in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-4, atol=1e-5)

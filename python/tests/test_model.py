@@ -1,0 +1,97 @@
+"""L2 model: shapes, parameter count, gradients, training progress."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(0)
+
+
+def _batch(rng, n):
+    x = rng.standard_normal((n, 1, 28, 28)).astype(np.float32)
+    y = rng.integers(0, 10, n).astype(np.int32)
+    return x, y
+
+
+def test_param_count_near_paper(params):
+    """Paper quotes 21,690; our LeNet variant lands at 21,669 (see DESIGN.md)."""
+    n = sum(int(np.prod(p.shape)) for p in params)
+    assert n == model.param_count() == 21_669
+    assert abs(n - 21_690) <= 25
+
+
+def test_param_shapes(params):
+    assert tuple(tuple(p.shape) for p in params) == model.param_shapes()
+
+
+def test_forward_shape(params, rng=np.random.default_rng(0)):
+    x, _ = _batch(rng, 4)
+    logits = model.forward(params, x)
+    assert logits.shape == (4, 10)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_loss_uniform_at_init(params):
+    """Zero-ish logits => loss ~= ln(10)."""
+    rng = np.random.default_rng(1)
+    x, y = _batch(rng, 16)
+    loss = float(model.loss_fn(params, x, y))
+    assert abs(loss - np.log(10)) < 0.5
+
+
+def test_grads_match_finite_differences(params):
+    rng = np.random.default_rng(2)
+    x, y = _batch(rng, 4)
+    grads = jax.grad(model.loss_fn)(params, x, y)
+    # check a handful of coordinates of the fc2 weight by central difference
+    w4 = params[6]
+    g4 = np.asarray(grads[6])
+    eps = 1e-3
+    for idx in [(0, 0), (10, 3), (96, 9)]:
+        bump = np.zeros_like(np.asarray(w4))
+        bump[idx] = eps
+        pp = list(params)
+        pp[6] = w4 + bump
+        lp = float(model.loss_fn(tuple(pp), x, y))
+        pp[6] = w4 - bump
+        lm = float(model.loss_fn(tuple(pp), x, y))
+        fd = (lp - lm) / (2 * eps)
+        assert abs(fd - g4[idx]) < 2e-3, (idx, fd, g4[idx])
+
+
+def test_train_step_reduces_loss(params):
+    rng = np.random.default_rng(3)
+    x, y = _batch(rng, model.TRAIN_BATCH)
+    lr = jnp.float32(0.1)
+    state = params
+    losses = []
+    for _ in range(8):
+        out = model.train_step(*state, x, y, lr)
+        state, loss = out[:8], out[8]
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.05, losses
+
+
+def test_eval_step_counts(params):
+    rng = np.random.default_rng(4)
+    x, y = _batch(rng, model.EVAL_BATCH)
+    loss, correct = model.eval_step(*params, x, y)
+    assert 0.0 <= float(correct) <= model.EVAL_BATCH
+    assert np.isfinite(float(loss))
+
+
+def test_init_step_deterministic():
+    p1 = model.init_step(jnp.int32(7))
+    p2 = model.init_step(jnp.int32(7))
+    p3 = model.init_step(jnp.int32(8))
+    for a, b in zip(p1, p2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert any(
+        not np.array_equal(np.asarray(a), np.asarray(c)) for a, c in zip(p1, p3)
+    )

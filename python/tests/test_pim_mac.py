@@ -1,0 +1,159 @@
+"""Bit-exactness of the PIM datapath emulation kernel vs host IEEE-754.
+
+This is the certification that the paper's section 3.3 procedures
+(shift-and-add mantissa multiply, search-aligned mantissa add) compute
+true fp32 round-to-nearest-even results under the FTZ convention.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import pim_mac, ref
+from .conftest import assert_bits_equal
+
+N = pim_mac.LANES
+
+EDGE = np.array(
+    [
+        0.0, -0.0, 1.0, -1.0, 2.0, 0.5, 1.5,
+        np.inf, -np.inf, np.nan,
+        3.4028235e38, -3.4028235e38,          # max normal
+        1.1754944e-38, 2.3509887e-38,          # min normal, 2x min normal
+        1e-40, -1e-40,                          # subnormals (FTZ to 0)
+        1.0000001, 0.99999994,                  # ulp neighbours of 1
+        16777216.0, 16777215.0,                 # 2^24 boundary
+        np.pi, np.e, 1 / 3, -1 / 3,
+    ],
+    dtype=np.float32,
+)
+
+
+def _pad(x):
+    out = np.zeros(N, np.float32)
+    out[: len(x)] = x
+    return out
+
+
+def _pairs(rng, n, lo=-40, hi=40):
+    a = (rng.standard_normal(n) * np.exp2(rng.integers(lo, hi, n))).astype(np.float32)
+    return a
+
+
+class TestMul:
+    def test_edge_grid(self):
+        """Every edge value against every edge value."""
+        a, b = np.meshgrid(EDGE, EDGE)
+        a, b = a.ravel(), b.ravel()
+        pad = (-len(a)) % N
+        a = np.concatenate([a, np.ones(pad, np.float32)])
+        b = np.concatenate([b, np.ones(pad, np.float32)])
+        got = np.asarray(pim_mac.pim_mul_f32(a, b))
+        assert_bits_equal(got, ref.pim_mul_ref(a, b), "mul edge grid:")
+
+    @given(seed=st.integers(0, 2**31 - 1), scale=st.sampled_from([5, 20, 38]))
+    @settings(max_examples=12)
+    def test_hypothesis_random(self, seed, scale):
+        rng = np.random.default_rng(seed)
+        a = _pairs(rng, N, -scale, scale)
+        b = _pairs(rng, N, -scale, scale)
+        got = np.asarray(pim_mac.pim_mul_f32(a, b))
+        assert_bits_equal(got, ref.pim_mul_ref(a, b), f"mul seed={seed}:")
+
+    def test_overflow_to_inf(self):
+        a = _pad(np.array([2e38, -2e38, 2e38], np.float32))
+        b = _pad(np.array([3.0, 3.0, -3.0], np.float32))
+        got = np.asarray(pim_mac.pim_mul_f32(a, b))[:3]
+        assert np.isposinf(got[0]) and np.isneginf(got[1]) and np.isneginf(got[2])
+
+    def test_underflow_ftz(self):
+        a = _pad(np.array([1.2e-38, -1.2e-38], np.float32))
+        b = _pad(np.array([0.5, 0.5], np.float32))
+        got = np.asarray(pim_mac.pim_mul_f32(a, b))[:2]
+        bits = got.view(np.uint32)
+        assert bits[0] == 0x00000000 and bits[1] == 0x80000000
+
+    def test_rounding_ties_to_even(self):
+        # 1.0000001 * 1.0000001: exercises the guard/sticky path.
+        vals = np.float32([1.0000001, 1.9999999, 1.5, 16777215.0])
+        a = _pad(vals)
+        got = np.asarray(pim_mac.pim_mul_f32(a, a))[:4]
+        assert_bits_equal(got, ref.pim_mul_ref(vals, vals), "RNE:")
+
+
+class TestAdd:
+    def test_edge_grid(self):
+        a, b = np.meshgrid(EDGE, EDGE)
+        a, b = a.ravel(), b.ravel()
+        pad = (-len(a)) % N
+        a = np.concatenate([a, np.ones(pad, np.float32)])
+        b = np.concatenate([b, np.ones(pad, np.float32)])
+        got = np.asarray(pim_mac.pim_add_f32(a, b))
+        assert_bits_equal(got, ref.pim_add_ref(a, b), "add edge grid:")
+
+    @given(seed=st.integers(0, 2**31 - 1), scale=st.sampled_from([3, 20, 38]))
+    @settings(max_examples=12)
+    def test_hypothesis_random(self, seed, scale):
+        rng = np.random.default_rng(seed)
+        a = _pairs(rng, N, -scale, scale)
+        b = _pairs(rng, N, -scale, scale)
+        got = np.asarray(pim_mac.pim_add_f32(a, b))
+        assert_bits_equal(got, ref.pim_add_ref(a, b), f"add seed={seed}:")
+
+    def test_exact_cancellation_gives_pos_zero(self):
+        a = _pad(np.array([1.5, -1.5, 42.0], np.float32))
+        b = _pad(np.array([-1.5, 1.5, -42.0], np.float32))
+        got = np.asarray(pim_mac.pim_add_f32(a, b))[:3]
+        assert (got.view(np.uint32)[:3] == 0).all()
+
+    def test_near_cancellation(self):
+        """Catastrophic cancellation: result needs a long left renormalise."""
+        vals_a = np.float32([1.0000001, 16777216.0, 3.0000002])
+        vals_b = np.float32([-1.0, -16777215.0, -3.0])
+        got = np.asarray(pim_mac.pim_add_f32(_pad(vals_a), _pad(vals_b)))[:3]
+        assert_bits_equal(got, ref.pim_add_ref(vals_a, vals_b), "cancel:")
+
+    def test_tiny_plus_huge_is_huge(self):
+        a = _pad(np.float32([1e30, -1e30]))
+        b = _pad(np.float32([1.0, 1.0]))
+        got = np.asarray(pim_mac.pim_add_f32(a, b))[:2]
+        assert_bits_equal(got, ref.pim_add_ref(a[:2], b[:2]), "huge+tiny:")
+
+    def test_subnormal_flush_keeps_sign(self):
+        """min_normal - (min_normal + ulp) = -1 subnormal ulp -> -0."""
+        mn = np.float32(1.1754944e-38)
+        mn_ulp = np.uint32(0x00800001).view(np.float32)
+        a = _pad(np.array([mn, -mn], np.float32))
+        b = _pad(np.array([-mn_ulp, mn_ulp], np.float32))
+        got = np.asarray(pim_mac.pim_add_f32(a, b))[:2]
+        assert got.view(np.uint32)[0] == 0x80000000, hex(got.view(np.uint32)[0])
+        assert got.view(np.uint32)[1] == 0x00000000
+        assert_bits_equal(got, ref.pim_add_ref(a[:2], b[:2]), "signed flush:")
+
+    def test_inf_minus_inf_is_nan(self):
+        a = _pad(np.float32([np.inf]))
+        b = _pad(np.float32([-np.inf]))
+        got = np.asarray(pim_mac.pim_add_f32(a, b))[0]
+        assert np.isnan(got)
+
+
+class TestMacComposition:
+    @given(seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=8)
+    def test_mac_two_roundings(self, seed):
+        """mac(a,b,c) must equal round(round(a*b)+c) on the host, too."""
+        rng = np.random.default_rng(seed)
+        a, b, c = (_pairs(rng, N, -10, 10) for _ in range(3))
+        import jax
+        import jax.numpy as jnp
+
+        abits = jax.lax.bitcast_convert_type(jnp.asarray(a), pim_mac.U32)
+        bbits = jax.lax.bitcast_convert_type(jnp.asarray(b), pim_mac.U32)
+        cbits = jax.lax.bitcast_convert_type(jnp.asarray(c), pim_mac.U32)
+        got_bits = pim_mac.mac_bits(abits, bbits, cbits)
+        got = np.asarray(
+            jax.lax.bitcast_convert_type(got_bits, jnp.float32)
+        )
+        want = ref.pim_add_ref(ref.pim_mul_ref(a, b), c)
+        assert_bits_equal(got, want, f"mac seed={seed}:")

@@ -1,0 +1,68 @@
+//! Bench for the §3.3 exponent-alignment claim (E7): O(Nm) for the
+//! proposed search-based scheme vs O(Nm²) for FloatPIM's bit-by-bit
+//! shifting — swept over mantissa width.
+//!
+//! Run: `cargo bench --bench align_scaling`
+
+use mram_pim::bench::{bench, print_table};
+use mram_pim::floatpim::FloatPimCostModel;
+use mram_pim::fpu::procedure::FpEngine;
+use mram_pim::fpu::{FloatFormat, FpCostModel};
+use mram_pim::nvsim::{ArrayGeometry, OpCosts};
+use mram_pim::report;
+
+fn main() {
+    println!("exponent-alignment scaling (add-path steps vs mantissa bits):\n");
+    println!(
+        "{:>4} {:>18} {:>22} {:>8}",
+        "Nm", "ours (searches)", "floatpim (switches)", "ratio"
+    );
+    let mut rows = Vec::new();
+    for nm in [4u32, 8, 10, 16, 23, 32, 40, 52] {
+        let ours = FpCostModel::new(
+            OpCosts::proposed_default(),
+            FloatFormat { ne: 8, nm },
+        );
+        let theirs = FloatPimCostModel::new(Default::default(), FloatFormat { ne: 8, nm });
+        let o = ours.add_search_steps();
+        let f = theirs.add_switch_steps();
+        println!("{nm:>4} {o:>18.0} {f:>22.0} {:>7.1}x", f / o);
+        rows.push(vec![
+            nm.to_string(),
+            format!("{o:.0}"),
+            format!("{f:.0}"),
+            format!("{:.2}", f / o),
+        ]);
+    }
+    let _ = report::write_csv(
+        "target/align_scaling.csv",
+        "nm,ours_search_steps,floatpim_switch_steps,ratio",
+        &rows,
+    );
+    println!("\nwrote target/align_scaling.csv");
+    println!("(linear vs quadratic: the gap widens with every extra mantissa bit)\n");
+
+    // Executable check: the engine's actual search count at fp32, plus
+    // host wall-clock for the full add wave.
+    let pairs: Vec<(u32, u32)> = (0..1024u32)
+        .map(|i| (0x3F80_0000 + i * 31, 0x4100_0000 + i * 17))
+        .collect();
+    let mut e = FpEngine::new(
+        ArrayGeometry { rows: 1024, cols: 256 },
+        OpCosts::proposed_default(),
+    );
+    e.add(&pairs);
+    println!(
+        "executed fp32 add wave: {} searches (analytic 2(Nm+2) = 50)",
+        e.sub.ledger.searches
+    );
+
+    let results = vec![bench("fp32 add wave w/ alignment (1024 rows)", 1, 20, || {
+        let mut e = FpEngine::new(
+            ArrayGeometry { rows: 1024, cols: 256 },
+            OpCosts::proposed_default(),
+        );
+        std::hint::black_box(e.add(&pairs));
+    })];
+    print_table(&results);
+}

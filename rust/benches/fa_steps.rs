@@ -1,0 +1,81 @@
+//! Bench for the §3.2 full-adder claim (E6): the proposed 4-step/4-cell
+//! FA vs FloatPIM's 13-step/12-cell NOR FA — executed on the subarray
+//! simulator, with both simulated (array) and host wall-clock costs.
+//!
+//! Run: `cargo bench --bench fa_steps`
+
+use mram_pim::bench::{bench, print_table};
+use mram_pim::floatpim::fa::{NorFa, NorFaLayout};
+use mram_pim::logic::fa::{FaLayout, ProposedFa};
+use mram_pim::logic::RippleAdder;
+use mram_pim::metrics::fmt_si;
+use mram_pim::nvsim::{ArrayGeometry, OpCosts};
+use mram_pim::report;
+use mram_pim::sim::Subarray;
+
+fn main() {
+    println!("{}", report::fa_table());
+
+    // Simulated array cost of one row-parallel FA, both designs.
+    let geom = ArrayGeometry { rows: 1024, cols: 32 };
+    let mut ours = Subarray::new(geom, OpCosts::proposed_default());
+    ProposedFa::execute(
+        &mut ours,
+        &FaLayout { x: 0, y: 1, z: 2, cache: [3, 4, 5, 6], z_out: 7 },
+    );
+    let mut theirs = Subarray::new(geom, OpCosts::proposed_default());
+    NorFa::execute(
+        &mut theirs,
+        &NorFaLayout { x: 0, y: 1, z: 2, work: [3, 4, 5, 6, 7, 8, 9, 10, 11] },
+    );
+    println!(
+        "simulated 1-bit FA (1024 rows parallel):\n  proposed: {} steps, latency {}, energy {}\n  floatpim: {} steps, latency {}, energy {}\n",
+        ours.ledger.steps(),
+        fmt_si(ours.ledger.time_s, "s"),
+        fmt_si(ours.ledger.energy_j, "J"),
+        theirs.ledger.steps(),
+        fmt_si(theirs.ledger.time_s, "s"),
+        fmt_si(theirs.ledger.energy_j, "J"),
+    );
+
+    // Multi-bit ripple adds (the building block of everything else).
+    for width in [8usize, 16, 24, 32] {
+        let mut s = Subarray::new(ArrayGeometry { rows: 1024, cols: 128 }, OpCosts::proposed_default());
+        let adder = RippleAdder { cache: [100, 101, 102, 103], carry: 104, carry2: 105 };
+        adder.add(&mut s, 0, 40, 80, width);
+        println!(
+            "{width:>2}-bit row-parallel add: {} steps, simulated latency {}",
+            s.ledger.steps(),
+            fmt_si(s.ledger.time_s, "s")
+        );
+    }
+
+    // Host wall-clock of the simulator itself.
+    let mut results = Vec::new();
+    results.push(bench("proposed FA (1024 rows)", 10, 2_000, || {
+        let mut s = Subarray::new(geom, OpCosts::proposed_default());
+        ProposedFa::execute(
+            &mut s,
+            &FaLayout { x: 0, y: 1, z: 2, cache: [3, 4, 5, 6], z_out: 7 },
+        );
+        std::hint::black_box(s.ledger.steps());
+    }));
+    results.push(bench("floatpim NOR FA (1024 rows)", 10, 2_000, || {
+        let mut s = Subarray::new(geom, OpCosts::proposed_default());
+        NorFa::execute(
+            &mut s,
+            &NorFaLayout { x: 0, y: 1, z: 2, work: [3, 4, 5, 6, 7, 8, 9, 10, 11] },
+        );
+        std::hint::black_box(s.ledger.steps());
+    }));
+    results.push(bench("24-bit ripple add (1024 rows)", 5, 500, || {
+        let mut s = Subarray::new(
+            ArrayGeometry { rows: 1024, cols: 128 },
+            OpCosts::proposed_default(),
+        );
+        let adder = RippleAdder { cache: [100, 101, 102, 103], carry: 104, carry2: 105 };
+        adder.add(&mut s, 0, 40, 80, 24);
+        std::hint::black_box(s.ledger.steps());
+    }));
+    print_table(&results);
+}

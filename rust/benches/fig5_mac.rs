@@ -1,0 +1,82 @@
+//! Bench for paper Fig. 5 (E2/E3): fp32 MAC latency + energy, proposed
+//! vs FloatPIM, with breakdown — regenerates the figure's numbers and
+//! times the simulator paths that produce them.
+//!
+//! Run: `cargo bench --bench fig5_mac`
+
+use mram_pim::bench::{bench, print_table};
+use mram_pim::floatpim::FloatPimCostModel;
+use mram_pim::fpu::procedure::FpEngine;
+use mram_pim::fpu::FpCostModel;
+use mram_pim::nvsim::{ArrayGeometry, OpCosts};
+use mram_pim::report;
+
+fn main() {
+    println!("{}", report::fig5());
+    println!("{}", report::fast_switch());
+
+    // CSV series for the figure.
+    let ours = FpCostModel::proposed_fp32();
+    let theirs = FloatPimCostModel::fp32_default();
+    let tb = ours.t_mac_breakdown();
+    let eb = ours.e_mac_breakdown();
+    let rows = vec![
+        vec![
+            "proposed".into(),
+            format!("{:.1}", ours.t_mac() * 1e9),
+            format!("{:.2}", ours.e_mac() * 1e12),
+            format!("{:.1}", tb.read * 1e9),
+            format!("{:.1}", tb.write * 1e9),
+            format!("{:.1}", tb.search * 1e9),
+            format!("{:.2}", eb.read * 1e12),
+            format!("{:.2}", eb.write * 1e12),
+            format!("{:.2}", eb.search * 1e12),
+        ],
+        vec![
+            "floatpim".into(),
+            format!("{:.1}", theirs.t_mac() * 1e9),
+            format!("{:.2}", theirs.e_mac() * 1e12),
+            String::new(),
+            String::new(),
+            String::new(),
+            String::new(),
+            String::new(),
+            String::new(),
+        ],
+    ];
+    let _ = report::write_csv(
+        "target/fig5_mac.csv",
+        "design,latency_ns,energy_pj,t_read_ns,t_write_ns,t_search_ns,e_read_pj,e_write_pj,e_search_pj",
+        &rows,
+    );
+    println!("wrote target/fig5_mac.csv");
+
+    // Host-side timing: how fast the simulator itself evaluates.
+    let mut results = Vec::new();
+    results.push(bench("analytic mac cost (ours)", 100, 10_000, || {
+        let m = FpCostModel::proposed_fp32();
+        std::hint::black_box((m.t_mac(), m.e_mac()));
+    }));
+    results.push(bench("analytic mac cost (floatpim)", 100, 10_000, || {
+        let m = FloatPimCostModel::fp32_default();
+        std::hint::black_box((m.t_mac(), m.e_mac()));
+    }));
+    let pairs: Vec<(u32, u32)> = (0..1024u32)
+        .map(|i| (0x3F80_0000 + i * 7919, 0x4000_0000 + i * 104_729))
+        .collect();
+    results.push(bench("bit-level mul wave (1024 rows)", 1, 20, || {
+        let mut e = FpEngine::new(
+            ArrayGeometry { rows: 1024, cols: 256 },
+            OpCosts::proposed_default(),
+        );
+        std::hint::black_box(e.mul(&pairs));
+    }));
+    results.push(bench("bit-level add wave (1024 rows)", 1, 20, || {
+        let mut e = FpEngine::new(
+            ArrayGeometry { rows: 1024, cols: 256 },
+            OpCosts::proposed_default(),
+        );
+        std::hint::black_box(e.add(&pairs));
+    }));
+    print_table(&results);
+}

@@ -1,0 +1,82 @@
+//! Bench for paper Fig. 6 (E4): LeNet-5 training area/latency/energy,
+//! proposed vs FloatPIM, normalised — plus the model-size ablation and
+//! the end-to-end simulator timing the §Perf pass tracks.
+//!
+//! Run: `cargo bench --bench fig6_training`
+
+use mram_pim::arch::{AccelKind, Accelerator};
+use mram_pim::bench::{bench, print_table};
+use mram_pim::fpu::FloatFormat;
+use mram_pim::model::Network;
+use mram_pim::report;
+
+fn main() {
+    println!("{}", report::fig6(300));
+
+    // CSV for the figure (normalised bars).
+    let net = Network::lenet5();
+    let ours = Accelerator::new(AccelKind::Proposed, FloatFormat::FP32, 32_768);
+    let fpim = Accelerator::new(AccelKind::FloatPim, FloatFormat::FP32, 32_768);
+    let o = ours.training_cost(&net, 32, 300);
+    let f = fpim.training_cost(&net, 32, 300);
+    let rows = vec![vec![
+        "lenet5".into(),
+        format!("{:.3}", f.area_m2 / o.area_m2),
+        format!("{:.3}", f.latency_s / o.latency_s),
+        format!("{:.3}", f.energy_j / o.energy_j),
+    ]];
+    let _ = report::write_csv(
+        "target/fig6_training.csv",
+        "model,area_ratio,latency_ratio,energy_ratio",
+        &rows,
+    );
+    println!("wrote target/fig6_training.csv");
+
+    // Scalability ablation (§5 future work): same ratios on bigger nets.
+    println!("model-size ablation (energy/latency/area ratios vs FloatPIM):");
+    for net in [Network::lenet5(), Network::lenet_300_100(), Network::cnn_medium()] {
+        let o = ours.train_step_cost(&net, 32);
+        let f = fpim.train_step_cost(&net, 32);
+        println!(
+            "  {:<16} E {:.2}x  T {:.2}x  A {:.2}x",
+            net.name,
+            f.energy_j / o.energy_j,
+            f.latency_s / o.latency_s,
+            f.area_m2 / o.area_m2
+        );
+    }
+
+    // Pipelined-deployment ablation: how much of Fig. 6's latency a
+    // PipeLayer-style layer pipeline recovers (arch::schedule).
+    use mram_pim::arch::PipelineSchedule;
+    println!("\npipeline ablation (LeNet-5, batch 32, 300 batches in flight):");
+    let sched = PipelineSchedule::build(&ours, &Network::lenet5(), 32, 300);
+    println!(
+        "  stages {}  bottleneck {:.2} ms  serial {:.2} s  pipelined {:.2} s  speedup {:.2}x  util {:.0}%",
+        sched.stages,
+        sched.bottleneck_s() * 1e3,
+        sched.serial_s(),
+        sched.total_s(),
+        sched.speedup(),
+        sched.utilisation() * 100.0
+    );
+
+    // Host timing of the whole-training-cost evaluation (the fig6 hot
+    // path the perf pass optimises).
+    let mut results = Vec::new();
+    for net in [Network::lenet5(), Network::cnn_medium()] {
+        let name = format!("training_cost({}, 300 steps)", net.name);
+        let netc = net.clone();
+        results.push(bench(&name, 10, 2_000, || {
+            let c = Accelerator::new(AccelKind::Proposed, FloatFormat::FP32, 32_768)
+                .training_cost(&netc, 32, 300);
+            std::hint::black_box(c);
+        }));
+    }
+    let netc = Network::lenet5();
+    results.push(bench("plan + area (lenet5)", 10, 5_000, || {
+        let a = Accelerator::new(AccelKind::FloatPim, FloatFormat::FP32, 32_768);
+        std::hint::black_box(a.area_m2(&netc, 32));
+    }));
+    print_table(&results);
+}

@@ -1,0 +1,68 @@
+//! Host-performance bench of the subarray simulator's hot paths — the
+//! target of the §Perf optimisation pass (EXPERIMENTS.md).  Simulated
+//! (array) costs are constant; what this measures is how fast the
+//! *simulator* runs on the host.
+//!
+//! Run: `cargo bench --bench subarray_hotpath`
+
+use mram_pim::bench::{bench, print_table, BenchResult};
+use mram_pim::device::LogicOp;
+use mram_pim::nvsim::{ArrayGeometry, OpCosts};
+use mram_pim::sim::Subarray;
+
+fn main() {
+    let geom = ArrayGeometry { rows: 1024, cols: 1024 };
+    let costs = OpCosts::proposed_default();
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    // Column ops over the full 1024-row height.
+    let mut s = Subarray::new(geom, costs);
+    results.push(bench("stateful XOR col (1024 rows)", 100, 50_000, || {
+        s.stateful(LogicOp::Xor, 0, 1);
+    }));
+
+    let mut s2 = Subarray::new(geom, costs);
+    results.push(bench("copy col (1024 rows)", 100, 50_000, || {
+        s2.copy_col(2, 3);
+    }));
+
+    let mut s3 = Subarray::new(geom, costs);
+    let key_cols: Vec<usize> = (10..18).collect();
+    results.push(bench("8-col CAM search (1024 rows)", 100, 20_000, || {
+        std::hint::black_box(s3.search_eq(&key_cols, 0x5A));
+    }));
+
+    let mut s4 = Subarray::new(geom, costs);
+    let mask = vec![u64::MAX; s4.words_per_col()];
+    results.push(bench("masked 28-col shift (1024 rows)", 100, 10_000, || {
+        s4.masked_copy_shifted(&mask, 20, 28, 60, 28, 5);
+    }));
+
+    let mut s5 = Subarray::new(geom, costs);
+    results.push(bench("write col w/ switch count", 100, 50_000, || {
+        let data = vec![0xAAAA_AAAA_AAAA_AAAAu64; 16];
+        s5.write_col(4, &data);
+    }));
+
+    // The throughput figure the perf pass optimises: simulated MACs/s.
+    use mram_pim::fpu::procedure::FpEngine;
+    let pairs: Vec<(u32, u32)> = (0..1024u32)
+        .map(|i| (0x3F80_0000 + i * 7919, 0x4000_0000 + i * 104_729))
+        .collect();
+    let r = bench("full MAC wave: mul+add (1024 rows)", 1, 20, || {
+        let mut e = FpEngine::new(
+            ArrayGeometry { rows: 1024, cols: 256 },
+            costs,
+        );
+        let p = e.mul(&pairs);
+        let ps: Vec<(u32, u32)> = p.iter().map(|&x| (x, 0x3F00_0000)).collect();
+        std::hint::black_box(e.add(&ps));
+    });
+    println!(
+        "bit-level simulator throughput: {:.1}k MACs/s (host)",
+        r.throughput(1024.0) / 1e3
+    );
+    results.push(r);
+
+    print_table(&results);
+}

@@ -1,0 +1,330 @@
+//! The accelerator-level model: MAC costs + mapping + scheduling for one
+//! full training run.  This is what regenerates Fig. 6.
+
+use crate::arch::mapper::{MappingPlan, FLOATPIM_LANE_COLS, OURS_LANE_COLS};
+use crate::device::{CellKind, TechNode};
+use crate::floatpim::{FloatPimCostModel, ReRamParams};
+use crate::fpu::{CostBreakdown, FloatFormat, FpCostModel};
+use crate::model::Network;
+use crate::nvsim::array::ArrayArea;
+use crate::nvsim::{ArrayGeometry, OpCosts};
+
+/// Which accelerator a cost query targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccelKind {
+    /// The proposed SOT-MRAM design (Table 1 cell).
+    Proposed,
+    /// The proposed design with the ultra-fast MTJ of [15] (§4.2).
+    ProposedUltraFast,
+    /// The FloatPIM baseline [1].
+    FloatPim,
+}
+
+/// Aggregate cost of a simulated run (a MAC, a step, or full training).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RunCost {
+    pub latency_s: f64,
+    pub energy_j: f64,
+    pub area_m2: f64,
+    pub macs: u64,
+}
+
+impl RunCost {
+    pub fn area_mm2(&self) -> f64 {
+        self.area_m2 * 1e6
+    }
+}
+
+/// Accelerator model (cost + mapping + schedule).
+#[derive(Debug, Clone)]
+pub struct Accelerator {
+    pub kind: AccelKind,
+    pub format: FloatFormat,
+    pub lanes: usize,
+    pub geometry: ArrayGeometry,
+    pub tech: TechNode,
+    ours: Option<FpCostModel>,
+    theirs: Option<FloatPimCostModel>,
+}
+
+impl Accelerator {
+    pub fn new(kind: AccelKind, format: FloatFormat, lanes: usize) -> Self {
+        let (ours, theirs) = match kind {
+            AccelKind::Proposed => (
+                Some(FpCostModel::new(OpCosts::proposed_default(), format)),
+                None,
+            ),
+            AccelKind::ProposedUltraFast => (
+                Some(FpCostModel::new(OpCosts::proposed_ultrafast(), format)),
+                None,
+            ),
+            AccelKind::FloatPim => (
+                None,
+                Some(FloatPimCostModel::new(ReRamParams::default(), format)),
+            ),
+        };
+        Accelerator {
+            kind,
+            format,
+            lanes,
+            geometry: ArrayGeometry::default(),
+            tech: TechNode::default(),
+            ours,
+            theirs,
+        }
+    }
+
+    /// Same accelerator with explicit per-op costs (config-driven).
+    pub fn with_costs(format: FloatFormat, lanes: usize, costs: OpCosts) -> Self {
+        Accelerator {
+            kind: AccelKind::Proposed,
+            format,
+            lanes,
+            geometry: ArrayGeometry::default(),
+            tech: TechNode::default(),
+            ours: Some(FpCostModel::new(costs, format)),
+            theirs: None,
+        }
+    }
+
+    // ---- MAC-level (Fig. 5) ----
+
+    pub fn mac_latency_s(&self) -> f64 {
+        match (&self.ours, &self.theirs) {
+            (Some(m), _) => m.t_mac(),
+            (_, Some(m)) => m.t_mac(),
+            _ => unreachable!(),
+        }
+    }
+
+    pub fn mac_energy_j(&self) -> f64 {
+        match (&self.ours, &self.theirs) {
+            (Some(m), _) => m.e_mac(),
+            (_, Some(m)) => m.e_mac(),
+            _ => unreachable!(),
+        }
+    }
+
+    pub fn mac_latency_breakdown(&self) -> CostBreakdown {
+        match (&self.ours, &self.theirs) {
+            (Some(m), _) => m.t_mac_breakdown(),
+            (_, Some(m)) => m.t_mac_breakdown(),
+            _ => unreachable!(),
+        }
+    }
+
+    pub fn mac_energy_breakdown(&self) -> CostBreakdown {
+        match (&self.ours, &self.theirs) {
+            (Some(m), _) => m.e_mac_breakdown(),
+            (_, Some(m)) => m.e_mac_breakdown(),
+            _ => unreachable!(),
+        }
+    }
+
+    /// Per-bit write energy for data-movement accounting.
+    fn e_bit_write(&self) -> f64 {
+        match (&self.ours, &self.theirs) {
+            (Some(m), _) => m.costs.e_write,
+            (_, Some(m)) => m.params.e_write,
+            _ => unreachable!(),
+        }
+    }
+
+    fn is_destructive(&self) -> bool {
+        self.kind == AccelKind::FloatPim
+    }
+
+    fn lane_cols(&self) -> usize {
+        if self.kind == AccelKind::FloatPim {
+            FLOATPIM_LANE_COLS
+        } else {
+            OURS_LANE_COLS
+        }
+    }
+
+    fn cell_kind(&self) -> CellKind {
+        if self.kind == AccelKind::FloatPim {
+            CellKind::ReRam1T1R
+        } else {
+            CellKind::OneT1R
+        }
+    }
+
+    fn driver_scale(&self) -> f64 {
+        // ReRAM write current is ~10× the SOT-MRAM 65 µA: wider drivers.
+        if self.kind == AccelKind::FloatPim {
+            2.5
+        } else {
+            1.0
+        }
+    }
+
+    /// Map a network and return the mapping plan.
+    pub fn plan(&self, net: &Network, batch: usize) -> MappingPlan {
+        MappingPlan::map(
+            net,
+            batch,
+            self.lanes,
+            self.lane_cols(),
+            self.is_destructive(),
+            (self.geometry.rows * self.geometry.cols) as u64,
+        )
+    }
+
+    /// Accelerator area for a training configuration, m².
+    pub fn area_m2(&self, net: &Network, batch: usize) -> f64 {
+        let plan = self.plan(net, batch);
+        let per = ArrayArea::derive(
+            self.cell_kind(),
+            &self.tech,
+            self.geometry,
+            self.driver_scale(),
+        )
+        .total_m2();
+        plan.subarrays as f64 * per
+    }
+
+    // ---- step/training level (Fig. 6) ----
+
+    /// Cost of one training step (fwd + bwd + update) at `batch`.
+    pub fn train_step_cost(&self, net: &Network, batch: usize) -> RunCost {
+        let work = net.training_work(batch);
+        let macs = work.total_macs();
+        // MAC waves: `lanes` MACs execute per array step (row-parallel
+        // across all provisioned lanes).
+        let waves = macs.div_ceil(self.lanes as u64);
+        let latency = waves as f64 * self.mac_latency_s();
+        let mut energy = macs as f64 * self.mac_energy_j();
+        // Data movement: activations written once for the bwd stash; the
+        // destructive-FA design writes them twice (operand copies, §2).
+        let stash_writes = work.stored_activations * 32;
+        let copy_factor = if self.is_destructive() { 2.0 } else { 1.0 };
+        energy += stash_writes as f64 * copy_factor * self.e_bit_write();
+        // Plain adds (bias/pool) ride along at ~1/20 of a MAC each.
+        energy += work.adds as f64 * self.mac_energy_j() / 20.0;
+        RunCost {
+            latency_s: latency,
+            energy_j: energy,
+            area_m2: self.area_m2(net, batch),
+            macs,
+        }
+    }
+
+    /// Cost of `steps` training steps.
+    pub fn training_cost(&self, net: &Network, batch: usize, steps: usize) -> RunCost {
+        let one = self.train_step_cost(net, batch);
+        RunCost {
+            latency_s: one.latency_s * steps as f64,
+            energy_j: one.energy_j * steps as f64,
+            area_m2: one.area_m2,
+            macs: one.macs * steps as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn proposed() -> Accelerator {
+        Accelerator::new(AccelKind::Proposed, FloatFormat::FP32, 32_768)
+    }
+
+    fn floatpim() -> Accelerator {
+        Accelerator::new(AccelKind::FloatPim, FloatFormat::FP32, 32_768)
+    }
+
+    #[test]
+    fn fig6_energy_ratio_near_3_3() {
+        let net = Network::lenet5();
+        let ours = proposed().training_cost(&net, 32, 100);
+        let theirs = floatpim().training_cost(&net, 32, 100);
+        let ratio = theirs.energy_j / ours.energy_j;
+        assert!(
+            (2.9..=3.7).contains(&ratio),
+            "training energy ratio {ratio:.2} (paper: 3.3×)"
+        );
+    }
+
+    #[test]
+    fn fig6_latency_ratio_near_1_8() {
+        let net = Network::lenet5();
+        let ours = proposed().training_cost(&net, 32, 100);
+        let theirs = floatpim().training_cost(&net, 32, 100);
+        let ratio = theirs.latency_s / ours.latency_s;
+        assert!(
+            (1.5..=2.1).contains(&ratio),
+            "training latency ratio {ratio:.2} (paper: 1.8×)"
+        );
+    }
+
+    #[test]
+    fn fig6_area_ratio_near_2_5() {
+        let net = Network::lenet5();
+        let ours = proposed().area_m2(&net, 32);
+        let theirs = floatpim().area_m2(&net, 32);
+        let ratio = theirs / ours;
+        assert!(
+            (2.1..=2.9).contains(&ratio),
+            "area ratio {ratio:.2} (paper: 2.5×)"
+        );
+    }
+
+    #[test]
+    fn training_ratio_tracks_mac_ratio() {
+        // §4.3: "the improvement ... is similar to that of a MAC, because
+        // computation dominates".
+        let net = Network::lenet5();
+        let mac_ratio = floatpim().mac_energy_j() / proposed().mac_energy_j();
+        let ours = proposed().training_cost(&net, 32, 10);
+        let theirs = floatpim().training_cost(&net, 32, 10);
+        let train_ratio = theirs.energy_j / ours.energy_j;
+        assert!(
+            (train_ratio / mac_ratio - 1.0).abs() < 0.25,
+            "train {train_ratio:.2} vs mac {mac_ratio:.2}"
+        );
+    }
+
+    #[test]
+    fn ultrafast_cuts_mac_latency_56_7pct() {
+        // §4.2: "the MAC latency will be reduced by 56.7%".
+        let slow = proposed().mac_latency_s();
+        let fast = Accelerator::new(AccelKind::ProposedUltraFast, FloatFormat::FP32, 1)
+            .mac_latency_s();
+        let reduction = 1.0 - fast / slow;
+        assert!(
+            (0.53..=0.60).contains(&reduction),
+            "reduction {:.1}% (paper: 56.7%)",
+            reduction * 100.0
+        );
+    }
+
+    #[test]
+    fn training_cost_scales_linearly_in_steps() {
+        let net = Network::lenet5();
+        let a = proposed().training_cost(&net, 32, 10);
+        let b = proposed().training_cost(&net, 32, 20);
+        assert!((b.energy_j / a.energy_j - 2.0).abs() < 1e-9);
+        assert!((b.latency_s / a.latency_s - 2.0).abs() < 1e-9);
+        assert_eq!(a.area_m2, b.area_m2, "area is not per-step");
+    }
+
+    #[test]
+    fn more_lanes_less_latency_same_energy() {
+        let net = Network::lenet5();
+        let narrow = Accelerator::new(AccelKind::Proposed, FloatFormat::FP32, 8192)
+            .train_step_cost(&net, 32);
+        let wide = proposed().train_step_cost(&net, 32);
+        assert!(wide.latency_s < narrow.latency_s);
+        assert!((wide.energy_j / narrow.energy_j - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fp16_training_cheaper() {
+        let net = Network::lenet5();
+        let fp32 = proposed().train_step_cost(&net, 32);
+        let fp16 = Accelerator::new(AccelKind::Proposed, FloatFormat::FP16, 32_768)
+            .train_step_cost(&net, 32);
+        assert!(fp16.energy_j < fp32.energy_j / 2.0);
+    }
+}

@@ -1,0 +1,131 @@
+//! DNN → subarray mapping: how many cells/arrays a training configuration
+//! occupies, for the proposed design and for FloatPIM.
+//!
+//! The storage need (weights, gradients, stored activations) is identical
+//! for both accelerators; what differs (§4.3) is
+//!
+//! * **workspace per MAC lane** — the columns a row-parallel MAC needs
+//!   for operand copies and intermediates.  The proposed FA reuses 4
+//!   cache cells and the flexible shift writes in place: ~176 columns
+//!   per fp32 lane.  FloatPIM needs the 455-cell multiply intermediates
+//!   plus 12 cells per FA bit and operand staging: ~560 columns;
+//! * **operand copies** — FloatPIM's FA is destructive (§2), so every
+//!   stored activation consumed by a MAC wave must first be *copied*;
+//!   the proposed design computes from the stored operands directly;
+//! * **write drivers** — ReRAM's ~10× higher write current costs wider
+//!   drivers (driver_scale in the nvsim area model).
+
+use crate::model::Network;
+
+/// Workspace columns per fp32 MAC lane, proposed design (operand fields
+/// 2×32, FA caches 4, product 48, aligned mantissa 28, result 32, ~misc).
+pub const OURS_LANE_COLS: usize = 176;
+
+/// Workspace columns per fp32 MAC lane, FloatPIM: operands 64, multiply
+/// intermediates 455 (§2), NOR-FA workspace 12 cells × 24 mantissa bits
+/// of the ripple = 288, staging ~43.
+pub const FLOATPIM_LANE_COLS: usize = 850;
+
+/// Cell/array requirements of one training configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct MappingPlan {
+    /// Weights + gradients + stored activations, in cells (bits).
+    pub storage_cells: u64,
+    /// Operand staging copies (FloatPIM's destructive-FA tax), cells.
+    pub copy_cells: u64,
+    /// MAC-lane workspace, cells.
+    pub workspace_cells: u64,
+    /// 1024×1024 subarrays needed.
+    pub subarrays: u64,
+}
+
+impl MappingPlan {
+    pub fn total_cells(&self) -> u64 {
+        self.storage_cells + self.copy_cells + self.workspace_cells
+    }
+
+    /// Map a network at the given batch size onto `lanes` row-parallel
+    /// MAC lanes.  `lane_cols` and `destructive` select the design.
+    pub fn map(
+        net: &Network,
+        batch: usize,
+        lanes: usize,
+        lane_cols: usize,
+        destructive_fa: bool,
+        subarray_cells: u64,
+    ) -> MappingPlan {
+        let bits_per_value = 32u64;
+        let work = net.training_work(batch);
+        let params = net.param_count() as u64;
+        // weights + gradient accumulators + activations stashed for bwd
+        let storage_values = 2 * params + work.stored_activations;
+        let storage_cells = storage_values * bits_per_value;
+        // Destructive FA: activations feeding MACs must be staged as
+        // copies (one extra copy of the activation footprint).
+        let copy_cells = if destructive_fa {
+            work.stored_activations * bits_per_value
+        } else {
+            0
+        };
+        // Each lane occupies `lane_cols` columns of one row (1024 lanes
+        // stack vertically in a subarray): workspace = lanes × lane_cols.
+        let workspace_cells = lanes as u64 * lane_cols as u64;
+        let total = storage_cells + copy_cells + workspace_cells;
+        MappingPlan {
+            storage_cells,
+            copy_cells,
+            workspace_cells,
+            subarrays: total.div_ceil(subarray_cells),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Network;
+
+    const SUB: u64 = 1024 * 1024;
+
+    #[test]
+    fn floatpim_needs_more_cells_for_same_net() {
+        let net = Network::lenet5();
+        let ours = MappingPlan::map(&net, 32, 32_768, OURS_LANE_COLS, false, SUB);
+        let theirs = MappingPlan::map(&net, 32, 32_768, FLOATPIM_LANE_COLS, true, SUB);
+        assert!(theirs.total_cells() > 2 * ours.total_cells());
+        assert!(theirs.subarrays > ours.subarrays);
+    }
+
+    #[test]
+    fn storage_is_identical_across_designs() {
+        let net = Network::lenet5();
+        let ours = MappingPlan::map(&net, 32, 1024, OURS_LANE_COLS, false, SUB);
+        let theirs = MappingPlan::map(&net, 32, 1024, FLOATPIM_LANE_COLS, true, SUB);
+        assert_eq!(ours.storage_cells, theirs.storage_cells);
+    }
+
+    #[test]
+    fn copy_tax_only_for_destructive_fa() {
+        let net = Network::lenet5();
+        let ours = MappingPlan::map(&net, 32, 1024, OURS_LANE_COLS, false, SUB);
+        let theirs = MappingPlan::map(&net, 32, 1024, FLOATPIM_LANE_COLS, true, SUB);
+        assert_eq!(ours.copy_cells, 0);
+        assert!(theirs.copy_cells > 0);
+    }
+
+    #[test]
+    fn workspace_scales_with_lanes() {
+        let net = Network::lenet5();
+        let a = MappingPlan::map(&net, 32, 1024, OURS_LANE_COLS, false, SUB);
+        let b = MappingPlan::map(&net, 32, 2048, OURS_LANE_COLS, false, SUB);
+        assert_eq!(b.workspace_cells, 2 * a.workspace_cells);
+    }
+
+    #[test]
+    fn subarray_count_covers_cells() {
+        let net = Network::lenet5();
+        let p = MappingPlan::map(&net, 32, 32_768, OURS_LANE_COLS, false, SUB);
+        assert!(p.subarrays * SUB >= p.total_cells());
+        assert!((p.subarrays - 1) * SUB < p.total_cells());
+    }
+}

@@ -1,0 +1,15 @@
+//! Accelerator architecture: tiles, the DNN-layer→array mapper and the
+//! training-phase scheduler that together produce the paper's Fig. 6
+//! (training area / latency / energy vs FloatPIM).
+
+pub mod accel;
+pub mod gemv;
+pub mod mapper;
+pub mod schedule;
+pub mod tile;
+
+pub use accel::{Accelerator, AccelKind, RunCost};
+pub use gemv::{pim_gemv, GemvResult};
+pub use mapper::{MappingPlan, OURS_LANE_COLS, FLOATPIM_LANE_COLS};
+pub use schedule::PipelineSchedule;
+pub use tile::Tile;

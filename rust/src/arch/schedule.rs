@@ -1,0 +1,150 @@
+//! Layer-pipelined training schedule.
+//!
+//! The paper adopts FloatPIM's architecture, which (like PipeLayer [22])
+//! pipelines consecutive training batches across layer stages: while
+//! layer *k* computes batch *i*, layer *k−1* computes batch *i+1*.  This
+//! module derives the pipeline timing — stage latencies, fill/drain
+//! overhead, steady-state throughput and utilisation — from the same
+//! per-MAC cost model the rest of the stack uses, and quantifies how
+//! much of Fig. 6's latency a pipelined deployment recovers.
+
+use crate::arch::accel::Accelerator;
+use crate::model::{Layer, Network};
+
+/// Timing of one pipelined training run.
+#[derive(Debug, Clone)]
+pub struct PipelineSchedule {
+    /// Per-stage (layer) latency for one batch, seconds.
+    pub stage_latency_s: Vec<f64>,
+    /// Number of pipeline stages (MAC-bearing layers × 3 phases).
+    pub stages: usize,
+    /// Batches in flight at steady state.
+    pub batches: usize,
+}
+
+impl PipelineSchedule {
+    /// Build the schedule: each MAC-bearing layer contributes a forward,
+    /// a backward and (amortised) an update stage.
+    pub fn build(accel: &Accelerator, net: &Network, batch: usize, batches: usize) -> Self {
+        let lanes = accel.lanes as u64;
+        let t_mac = accel.mac_latency_s();
+        let mut stage_latency_s = Vec::new();
+        for l in &net.layers {
+            let fwd_macs = l.macs_fwd() * batch as u64;
+            if fwd_macs == 0 {
+                continue;
+            }
+            // forward stage
+            stage_latency_s.push(fwd_macs.div_ceil(lanes) as f64 * t_mac);
+            // backward stage (dgrad + wgrad)
+            stage_latency_s.push((2 * fwd_macs).div_ceil(lanes) as f64 * t_mac);
+            // weight update (per-layer params, batch-independent)
+            let wu = l.params() as u64;
+            stage_latency_s.push(wu.div_ceil(lanes).max(1) as f64 * t_mac);
+        }
+        let stages = stage_latency_s.len();
+        PipelineSchedule {
+            stage_latency_s,
+            stages,
+            batches,
+        }
+    }
+
+    /// The pipeline bottleneck stage, seconds.
+    pub fn bottleneck_s(&self) -> f64 {
+        self.stage_latency_s.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Total latency of one batch traversing all stages (fill), seconds.
+    pub fn fill_s(&self) -> f64 {
+        self.stage_latency_s.iter().sum()
+    }
+
+    /// Total pipelined run latency: fill + (batches−1) × bottleneck.
+    pub fn total_s(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.fill_s() + (self.batches - 1) as f64 * self.bottleneck_s()
+    }
+
+    /// Unpipelined latency (every batch serialised through all stages).
+    pub fn serial_s(&self) -> f64 {
+        self.batches as f64 * self.fill_s()
+    }
+
+    /// Speedup of pipelining over serial execution.
+    pub fn speedup(&self) -> f64 {
+        if self.total_s() == 0.0 {
+            return 1.0;
+        }
+        self.serial_s() / self.total_s()
+    }
+
+    /// Steady-state utilisation: average stage work / bottleneck.
+    pub fn utilisation(&self) -> f64 {
+        if self.stages == 0 {
+            return 0.0;
+        }
+        (self.fill_s() / self.stages as f64) / self.bottleneck_s()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::AccelKind;
+    use crate::fpu::FloatFormat;
+
+    fn accel() -> Accelerator {
+        Accelerator::new(AccelKind::Proposed, FloatFormat::FP32, 32_768)
+    }
+
+    #[test]
+    fn lenet_has_12_stages() {
+        // 4 MAC-bearing layers × (fwd, bwd, update)
+        let s = PipelineSchedule::build(&accel(), &Network::lenet5(), 32, 100);
+        assert_eq!(s.stages, 12);
+        assert!(s.stage_latency_s.iter().all(|&t| t > 0.0));
+    }
+
+    #[test]
+    fn pipelining_speeds_up_multi_batch_runs() {
+        let s = PipelineSchedule::build(&accel(), &Network::lenet5(), 32, 100);
+        assert!(s.total_s() < s.serial_s());
+        assert!(s.speedup() > 2.0, "speedup {:.2}", s.speedup());
+        // ... but can never beat stage-count parallelism
+        assert!(s.speedup() <= s.stages as f64 + 1e-9);
+    }
+
+    #[test]
+    fn single_batch_gains_nothing() {
+        let s = PipelineSchedule::build(&accel(), &Network::lenet5(), 32, 1);
+        assert!((s.total_s() - s.fill_s()).abs() < 1e-15);
+        assert!((s.speedup() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bottleneck_is_a_stage_latency() {
+        let s = PipelineSchedule::build(&accel(), &Network::lenet5(), 32, 10);
+        let b = s.bottleneck_s();
+        assert!(s.stage_latency_s.iter().any(|&t| (t - b).abs() < 1e-18));
+        assert!(s.utilisation() > 0.0 && s.utilisation() <= 1.0);
+    }
+
+    #[test]
+    fn conv2_backward_is_lenet_bottleneck() {
+        // conv2 bwd: 2×115,200×32 MACs — the heaviest stage.
+        let s = PipelineSchedule::build(&accel(), &Network::lenet5(), 32, 10);
+        let conv2_bwd = s.stage_latency_s[4]; // conv1(f,b,u), conv2 f=3,b=4
+        assert!((conv2_bwd - s.bottleneck_s()).abs() < 1e-18);
+    }
+
+    #[test]
+    fn more_lanes_shrink_bottleneck() {
+        let wide = Accelerator::new(AccelKind::Proposed, FloatFormat::FP32, 131_072);
+        let s1 = PipelineSchedule::build(&accel(), &Network::lenet5(), 32, 10);
+        let s2 = PipelineSchedule::build(&wide, &Network::lenet5(), 32, 10);
+        assert!(s2.bottleneck_s() < s1.bottleneck_s());
+    }
+}

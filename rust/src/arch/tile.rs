@@ -1,0 +1,45 @@
+//! A tile = one subarray plus its periphery.
+
+use crate::device::{CellKind, TechNode};
+use crate::nvsim::array::ArrayArea;
+use crate::nvsim::{ArrayGeometry, OpCosts};
+
+/// One accelerator tile.
+#[derive(Debug, Clone, Copy)]
+pub struct Tile {
+    pub geometry: ArrayGeometry,
+    pub cell_kind: CellKind,
+    pub costs: OpCosts,
+    /// Write-driver width multiplier (ReRAM pays more, see nvsim).
+    pub driver_scale: f64,
+}
+
+impl Tile {
+    /// Cells per tile.
+    pub fn capacity(&self) -> u64 {
+        (self.geometry.rows * self.geometry.cols) as u64
+    }
+
+    /// Tile area, m².
+    pub fn area_m2(&self, tech: &TechNode) -> f64 {
+        ArrayArea::derive(self.cell_kind, tech, self.geometry, self.driver_scale).total_m2()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::TECH_28NM;
+
+    #[test]
+    fn capacity_1m_for_default() {
+        let t = Tile {
+            geometry: ArrayGeometry::default(),
+            cell_kind: CellKind::OneT1R,
+            costs: OpCosts::proposed_default(),
+            driver_scale: 1.0,
+        };
+        assert_eq!(t.capacity(), 1024 * 1024);
+        assert!(t.area_m2(&TECH_28NM) > 0.0);
+    }
+}

@@ -1,0 +1,102 @@
+//! Micro-benchmark harness (criterion is unavailable offline; this is the
+//! same warmup + timed-iterations pattern with mean/p50/p99 reporting).
+//!
+//! Benches under `rust/benches/*.rs` are `harness = false` binaries that
+//! call [`bench`] and [`print_table`]; `cargo bench` runs them.
+
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.mean_ns * 1e-9)
+    }
+}
+
+/// Run `f` for `warmup` untimed and `iters` timed iterations.
+pub fn bench<F: FnMut()>(name: &str, warmup: u64, iters: u64, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let pct = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        p50_ns: pct(0.50),
+        p99_ns: pct(0.99),
+        min_ns: samples[0],
+    }
+}
+
+/// Render results as an aligned table.
+pub fn print_table(results: &[BenchResult]) {
+    println!(
+        "{:<44} {:>10} {:>12} {:>12} {:>12}",
+        "benchmark", "iters", "mean", "p50", "p99"
+    );
+    println!("{}", "-".repeat(94));
+    for r in results {
+        println!(
+            "{:<44} {:>10} {:>12} {:>12} {:>12}",
+            r.name,
+            r.iters,
+            fmt_ns(r.mean_ns),
+            fmt_ns(r.p50_ns),
+            fmt_ns(r.p99_ns)
+        );
+    }
+}
+
+/// Human-readable nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iterations() {
+        let mut n = 0u64;
+        let r = bench("count", 2, 10, || n += 1);
+        assert_eq!(n, 12, "warmup + timed iterations");
+        assert_eq!(r.iters, 10);
+        assert!(r.min_ns <= r.p50_ns && r.p50_ns <= r.p99_ns);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(12.0).ends_with("ns"));
+        assert!(fmt_ns(12_000.0).ends_with("µs"));
+        assert!(fmt_ns(12_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(2e9).ends_with(" s"));
+    }
+}

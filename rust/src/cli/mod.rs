@@ -1,0 +1,146 @@
+//! Hand-rolled CLI (clap is unavailable offline).
+//!
+//! ```text
+//! mram-pim report [--table1] [--fig5] [--fig6] [--fa] [--fast-switch] [--all]
+//! mram-pim train  [--steps N] [--lr F] [--seed N] [--artifacts DIR]
+//!                 [--train-size N] [--no-deep-validate] [--config FILE]
+//! mram-pim mac    [--format fp32|fp16|bf16] [--ultrafast]
+//! mram-pim sweep  [--what align|formats|subarray]
+//! mram-pim selfcheck
+//! ```
+
+use std::collections::HashMap;
+
+use crate::{Error, Result};
+
+/// A parsed command line.
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub command: String,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`: first token is the subcommand, `--key value`
+    /// pairs become flags, bare `--key` become switches.
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let command = argv
+            .first()
+            .cloned()
+            .unwrap_or_else(|| "help".to_string());
+        let mut flags = HashMap::new();
+        let mut switches = Vec::new();
+        let mut i = 1;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(key) = tok.strip_prefix("--") {
+                let takes_value = i + 1 < argv.len() && !argv[i + 1].starts_with("--");
+                if takes_value {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    switches.push(key.to_string());
+                    i += 1;
+                }
+            } else {
+                return Err(Error::Config(format!("unexpected argument {tok:?}")));
+            }
+        }
+        Ok(Args {
+            command,
+            flags,
+            switches,
+        })
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.flags
+            .get(name)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name} expects an integer, got {v:?}"))),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name} expects a number, got {v:?}"))),
+        }
+    }
+}
+
+/// Top-level usage text.
+pub fn usage() -> &'static str {
+    "mram-pim — SOT-MRAM PIM accelerator for fp DNN training (paper repro)
+
+USAGE:
+  mram-pim report [--table1|--fig5|--fig6|--fa|--fast-switch|--all] [--steps N]
+  mram-pim train  [--steps N] [--lr F] [--seed N] [--artifacts DIR]
+                  [--train-size N] [--eval-every N] [--no-deep-validate]
+                  [--config FILE]
+  mram-pim mac    [--format fp32|fp16|bf16] [--ultrafast]
+  mram-pim sweep  [--what align|formats|subarray]
+  mram-pim selfcheck
+
+`report` regenerates the paper's tables/figures from the cost models;
+`train` runs real LeNet-5 training through the AOT-compiled PJRT
+artifacts while simulating the PIM cost of every step."
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse(&v.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn parses_command_flags_switches() {
+        let a = args(&["train", "--steps", "100", "--no-deep-validate"]);
+        assert_eq!(a.command, "train");
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 100);
+        assert!(a.switch("no-deep-validate"));
+        assert!(!a.switch("missing"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = args(&["report"]);
+        assert_eq!(a.usize_or("steps", 300).unwrap(), 300);
+        assert_eq!(a.str_or("artifacts", "artifacts"), "artifacts");
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let a = args(&["train", "--steps", "many"]);
+        assert!(a.usize_or("steps", 1).is_err());
+    }
+
+    #[test]
+    fn rejects_positional_garbage() {
+        let r = Args::parse(&["train".into(), "oops".into()]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn empty_argv_is_help() {
+        let a = Args::parse(&[]).unwrap();
+        assert_eq!(a.command, "help");
+    }
+}

@@ -1,0 +1,154 @@
+//! Typed accelerator configuration assembled from a [`Config`].
+
+use crate::config::toml::Config;
+use crate::device::{CellKind, CellParams, TechNode, SOT_MRAM_TABLE1, SOT_MRAM_ULTRAFAST};
+use crate::fpu::FloatFormat;
+use crate::nvsim::{ArrayGeometry, OpCosts, PeripheryModel};
+use crate::{Error, Result};
+
+/// Everything needed to instantiate the proposed accelerator.
+#[derive(Debug, Clone)]
+pub struct AccelConfig {
+    pub geometry: ArrayGeometry,
+    pub cell_kind: CellKind,
+    pub cell: CellParams,
+    pub tech: TechNode,
+    pub periphery: PeripheryModel,
+    pub format: FloatFormat,
+    /// Row-parallel MAC lanes provisioned across the accelerator.
+    pub lanes: usize,
+    /// Training defaults for the coordinator.
+    pub batch: usize,
+    pub lr: f32,
+    pub steps: usize,
+    pub seed: u64,
+    pub artifacts_dir: String,
+}
+
+impl Default for AccelConfig {
+    fn default() -> Self {
+        AccelConfig {
+            geometry: ArrayGeometry::default(),
+            cell_kind: CellKind::OneT1R,
+            cell: SOT_MRAM_TABLE1,
+            tech: TechNode::default(),
+            periphery: PeripheryModel::default(),
+            format: FloatFormat::FP32,
+            lanes: 32_768,
+            batch: 32,
+            lr: 0.05,
+            steps: 300,
+            seed: 42,
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+impl AccelConfig {
+    /// Build from a parsed config file, falling back to defaults for any
+    /// missing key.
+    pub fn from_config(c: &Config) -> Result<AccelConfig> {
+        let mut cfg = AccelConfig::default();
+        cfg.geometry.rows = c.i64_or("array", "rows", 1024) as usize;
+        cfg.geometry.cols = c.i64_or("array", "cols", 1024) as usize;
+        cfg.cell_kind = match c.str_or("array", "cell", "1t1r") {
+            "1t1r" => CellKind::OneT1R,
+            "2t1r" => CellKind::TwoT1R,
+            "single-mtj" => CellKind::SingleMtj,
+            other => return Err(Error::Config(format!("unknown cell kind {other:?}"))),
+        };
+        if c.bool_or("device", "ultrafast", false) {
+            cfg.cell = SOT_MRAM_ULTRAFAST;
+        }
+        cfg.cell.t_switch = c.f64_or("device", "t_switch_ns", cfg.cell.t_switch * 1e9) * 1e-9;
+        cfg.cell.e_switch = c.f64_or("device", "e_switch_fj", cfg.cell.e_switch * 1e15) * 1e-15;
+        cfg.format = match c.str_or("format", "precision", "fp32") {
+            "fp32" => FloatFormat::FP32,
+            "fp16" => FloatFormat::FP16,
+            "bf16" => FloatFormat::BF16,
+            other => return Err(Error::Config(format!("unknown precision {other:?}"))),
+        };
+        cfg.lanes = c.i64_or("accelerator", "lanes", cfg.lanes as i64) as usize;
+        cfg.batch = c.i64_or("train", "batch", cfg.batch as i64) as usize;
+        cfg.lr = c.f64_or("train", "lr", cfg.lr as f64) as f32;
+        cfg.steps = c.i64_or("train", "steps", cfg.steps as i64) as usize;
+        cfg.seed = c.i64_or("train", "seed", cfg.seed as i64) as u64;
+        cfg.artifacts_dir = c.str_or("train", "artifacts_dir", &cfg.artifacts_dir).to_string();
+        if cfg.geometry.rows == 0 || cfg.geometry.cols == 0 {
+            return Err(Error::Config("array dimensions must be non-zero".into()));
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &str) -> Result<AccelConfig> {
+        AccelConfig::from_config(&Config::from_file(path)?)
+    }
+
+    /// Per-op costs of this configuration.
+    pub fn op_costs(&self) -> OpCosts {
+        OpCosts::derive(
+            &self.cell,
+            self.cell_kind,
+            &self.tech,
+            self.geometry,
+            &self.periphery,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_roundtrip() {
+        let cfg = AccelConfig::from_config(&Config::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.geometry.rows, 1024);
+        assert_eq!(cfg.cell_kind, CellKind::OneT1R);
+        assert_eq!(cfg.format, FloatFormat::FP32);
+    }
+
+    #[test]
+    fn parses_overrides() {
+        let text = r#"
+[array]
+rows = 512
+cell = "2t1r"
+[device]
+ultrafast = true
+[format]
+precision = "bf16"
+[train]
+batch = 16
+lr = 0.1
+"#;
+        let cfg = AccelConfig::from_config(&Config::parse(text).unwrap()).unwrap();
+        assert_eq!(cfg.geometry.rows, 512);
+        assert_eq!(cfg.cell_kind, CellKind::TwoT1R);
+        // ns <-> s roundtrip leaves ulp noise
+        assert!((cfg.cell.t_switch - SOT_MRAM_ULTRAFAST.t_switch).abs() < 1e-15);
+        assert_eq!(cfg.format, FloatFormat::BF16);
+        assert_eq!(cfg.batch, 16);
+        assert!((cfg.lr - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rejects_unknown_cell() {
+        let cfg = Config::parse("[array]\ncell = \"3t2r\"\n").unwrap();
+        assert!(AccelConfig::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn rejects_zero_dims() {
+        let cfg = Config::parse("[array]\nrows = 0\n").unwrap();
+        assert!(AccelConfig::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn device_override_changes_costs() {
+        let slow = AccelConfig::default().op_costs();
+        let cfg = Config::parse("[device]\nt_switch_ns = 0.5\n").unwrap();
+        let fast = AccelConfig::from_config(&cfg).unwrap().op_costs();
+        assert!(fast.t_write < slow.t_write);
+    }
+}

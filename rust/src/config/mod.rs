@@ -1,0 +1,12 @@
+//! Configuration system: a TOML-subset parser plus the typed accelerator
+//! configuration assembled from it.
+//!
+//! Supported syntax (sufficient for the shipped `configs/*.toml`):
+//! `[section]` headers, `key = value` with string / float / integer /
+//! boolean values, `#` comments and blank lines.
+
+pub mod accel;
+pub mod toml;
+
+pub use accel::AccelConfig;
+pub use toml::{Config, Value};

@@ -1,0 +1,202 @@
+//! Minimal TOML-subset parser (offline substitute for serde+toml).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::{Error, Result};
+
+/// A configuration value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Float(f64),
+    Int(i64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed configuration: `section -> key -> value`.  Keys outside any
+/// section live in the `""` section.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') && line.ends_with(']') {
+                section = line[1..line.len() - 1].trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, val) = line.split_once('=').ok_or_else(|| {
+                Error::Config(format!("line {}: expected key = value", lineno + 1))
+            })?;
+            let value = parse_value(val.trim())
+                .ok_or_else(|| Error::Config(format!("line {}: bad value {val:?}", lineno + 1)))?;
+            cfg.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.trim().to_string(), value);
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Config> {
+        Config::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn i64_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(Value::as_i64).unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        self.get(section, key).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &String> {
+        self.sections.keys()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Option<Value> {
+    if s.starts_with('"') && s.ends_with('"') && s.len() >= 2 {
+        return Some(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    match s {
+        "true" => return Some(Value::Bool(true)),
+        "false" => return Some(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Some(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Some(Value::Float(f));
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# accelerator configuration
+title = "demo"
+
+[array]
+rows = 1024
+cols = 1024           # same as FloatPIM
+cell = "1t1r"
+
+[device]
+t_switch_ns = 2.0
+e_switch_fj = 12.0
+ultrafast = false
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str_or("", "title", "?"), "demo");
+        assert_eq!(c.i64_or("array", "rows", 0), 1024);
+        assert_eq!(c.str_or("array", "cell", "?"), "1t1r");
+        assert_eq!(c.f64_or("device", "t_switch_ns", 0.0), 2.0);
+        assert!(!c.bool_or("device", "ultrafast", true));
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let c = Config::parse("# all comments\n\n  # more\nx = 1\n").unwrap();
+        assert_eq!(c.i64_or("", "x", 0), 1);
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let c = Config::parse(r##"name = "a#b""##).unwrap();
+        assert_eq!(c.str_or("", "name", ""), "a#b");
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let c = Config::parse("a = 3\nb = 3.5\n").unwrap();
+        assert_eq!(c.get("", "a"), Some(&Value::Int(3)));
+        assert_eq!(c.get("", "b"), Some(&Value::Float(3.5)));
+        assert_eq!(c.f64_or("", "a", 0.0), 3.0, "ints coerce to f64");
+    }
+
+    #[test]
+    fn defaults_on_missing() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.f64_or("nope", "nothing", 7.5), 7.5);
+    }
+
+    #[test]
+    fn bad_lines_error() {
+        assert!(Config::parse("just words").is_err());
+        assert!(Config::parse("x = @!?").is_err());
+    }
+}

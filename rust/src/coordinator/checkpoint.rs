@@ -1,0 +1,176 @@
+//! Training checkpoints: serialize/restore the PJRT parameter state.
+//!
+//! Format (little-endian, versioned):
+//! ```text
+//! magic "MPIM" | u32 version | u32 n_tensors |
+//!   per tensor: u32 rank | u64 dims[rank] | f32 data[prod(dims)]
+//! ```
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::{Error, Result};
+
+const MAGIC: &[u8; 4] = b"MPIM";
+const VERSION: u32 = 1;
+
+/// A host-side checkpoint: tensors as (dims, data).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub tensors: Vec<(Vec<u64>, Vec<f32>)>,
+    pub step: u64,
+}
+
+impl Checkpoint {
+    /// Capture from a runtime train state.
+    pub fn from_state(state: &crate::runtime::TrainState, step: u64) -> Result<Checkpoint> {
+        let mut tensors = Vec::with_capacity(state.params.len());
+        for p in &state.params {
+            let shape = p.array_shape().map_err(Error::from)?;
+            let dims: Vec<u64> = shape.dims().iter().map(|&d| d as u64).collect();
+            let data = p.to_vec::<f32>().map_err(Error::from)?;
+            tensors.push((dims, data));
+        }
+        Ok(Checkpoint { tensors, step })
+    }
+
+    /// Restore into runtime literals.
+    pub fn to_state(&self) -> Result<crate::runtime::TrainState> {
+        let mut params = Vec::with_capacity(self.tensors.len());
+        for (dims, data) in &self.tensors {
+            let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+            params.push(xla::Literal::vec1(data).reshape(&d).map_err(Error::from)?);
+        }
+        Ok(crate::runtime::TrainState { params })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&self.step.to_le_bytes())?;
+        f.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for (dims, data) in &self.tensors {
+            f.write_all(&(dims.len() as u32).to_le_bytes())?;
+            for &d in dims {
+                f.write_all(&d.to_le_bytes())?;
+            }
+            let n: u64 = dims.iter().product::<u64>().max(1);
+            if data.len() as u64 != n && !(dims.is_empty() && data.len() == 1) {
+                return Err(Error::Sim(format!(
+                    "tensor dims {dims:?} inconsistent with {} values",
+                    data.len()
+                )));
+            }
+            for &v in data {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let mut f = std::fs::File::open(path)?;
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(Error::Sim("bad checkpoint magic".into()));
+        }
+        let mut u32b = [0u8; 4];
+        let mut u64b = [0u8; 8];
+        f.read_exact(&mut u32b)?;
+        let version = u32::from_le_bytes(u32b);
+        if version != VERSION {
+            return Err(Error::Sim(format!("unsupported checkpoint v{version}")));
+        }
+        f.read_exact(&mut u64b)?;
+        let step = u64::from_le_bytes(u64b);
+        f.read_exact(&mut u32b)?;
+        let n_tensors = u32::from_le_bytes(u32b) as usize;
+        if n_tensors > 4096 {
+            return Err(Error::Sim(format!("implausible tensor count {n_tensors}")));
+        }
+        let mut tensors = Vec::with_capacity(n_tensors);
+        for _ in 0..n_tensors {
+            f.read_exact(&mut u32b)?;
+            let rank = u32::from_le_bytes(u32b) as usize;
+            if rank > 16 {
+                return Err(Error::Sim(format!("implausible rank {rank}")));
+            }
+            let mut dims = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                f.read_exact(&mut u64b)?;
+                dims.push(u64::from_le_bytes(u64b));
+            }
+            let n: u64 = dims.iter().product::<u64>().max(1);
+            if n > 1 << 28 {
+                return Err(Error::Sim(format!("implausible tensor size {n}")));
+            }
+            let mut data = Vec::with_capacity(n as usize);
+            for _ in 0..n {
+                f.read_exact(&mut u32b)?;
+                data.push(f32::from_le_bytes(u32b));
+            }
+            tensors.push((dims, data));
+        }
+        Ok(Checkpoint { tensors, step })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            tensors: vec![
+                (vec![2, 3], (0..6).map(|i| i as f32 * 0.5).collect()),
+                (vec![4], vec![1.0, -2.0, 3.5, f32::MIN_POSITIVE]),
+                (vec![], vec![42.0]), // scalar
+            ],
+            step: 123,
+        }
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("mram_pim_ckpt");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_is_exact() {
+        let c = sample();
+        let path = tmp("roundtrip.ckpt");
+        c.save(&path).unwrap();
+        let r = Checkpoint::load(&path).unwrap();
+        assert_eq!(c, r);
+        assert_eq!(r.step, 123);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = tmp("garbage.ckpt");
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let c = sample();
+        let path = tmp("trunc.ckpt");
+        c.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+
+    #[test]
+    fn inconsistent_dims_refused_on_save() {
+        let c = Checkpoint {
+            tensors: vec![(vec![2, 2], vec![1.0])],
+            step: 0,
+        };
+        assert!(c.save(tmp("bad.ckpt")).is_err());
+    }
+}

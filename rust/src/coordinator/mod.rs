@@ -1,0 +1,236 @@
+//! The training coordinator: drives *functional* training through the
+//! PJRT runtime while the PIM cost simulation prices every step, and
+//! fans the deep (bit-level) validation work out over worker threads.
+//!
+//! This is the L3 "leader" of the three-layer architecture: rust owns the
+//! training loop, batching, metrics and the simulator; the compute graph
+//! itself was AOT-compiled from JAX/Pallas and python is never invoked.
+
+pub mod checkpoint;
+
+use std::sync::mpsc;
+use std::thread;
+
+use crate::arch::{AccelKind, Accelerator, RunCost};
+use crate::data::Dataset;
+use crate::fpu::procedure::FpEngine;
+use crate::fpu::softfloat;
+use crate::fpu::FloatFormat;
+use crate::metrics::{Counters, Stopwatch};
+use crate::model::Network;
+use crate::nvsim::{ArrayGeometry, OpCosts};
+use crate::prop::Rng;
+use crate::runtime::{Runtime, TrainState, EVAL_BATCH, TRAIN_BATCH};
+use crate::{Error, Result};
+
+/// Configuration of one coordinated training run.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub steps: usize,
+    pub lr: f32,
+    pub seed: u64,
+    pub eval_every: usize,
+    pub train_size: usize,
+    pub test_size: usize,
+    /// Bit-level MAC validation waves per run (0 disables).
+    pub deep_validate_waves: usize,
+    pub threads: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            steps: 300,
+            lr: 0.05,
+            seed: 42,
+            eval_every: 50,
+            train_size: 4096,
+            test_size: EVAL_BATCH,
+            deep_validate_waves: 2,
+            threads: 4,
+        }
+    }
+}
+
+/// Outcome of a coordinated run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    /// (step, loss) samples.
+    pub losses: Vec<(usize, f32)>,
+    /// (step, accuracy) samples.
+    pub accuracy: Vec<(usize, f32)>,
+    pub final_accuracy: f32,
+    /// Simulated PIM cost of the run on the proposed accelerator.
+    pub sim_proposed: RunCost,
+    /// Simulated PIM cost on the FloatPIM baseline.
+    pub sim_floatpim: RunCost,
+    /// Bit-level validation: MACs checked / mismatches found.
+    pub deep_checked: u64,
+    pub deep_mismatches: u64,
+    pub counters: Counters,
+    pub wall_s: f64,
+}
+
+/// The coordinator.
+pub struct Coordinator {
+    runtime: Runtime,
+    net: Network,
+    proposed: Accelerator,
+    floatpim: Accelerator,
+}
+
+impl Coordinator {
+    pub fn new(runtime: Runtime) -> Coordinator {
+        Coordinator {
+            runtime,
+            net: Network::lenet5(),
+            proposed: Accelerator::new(AccelKind::Proposed, FloatFormat::FP32, 32_768),
+            floatpim: Accelerator::new(AccelKind::FloatPim, FloatFormat::FP32, 32_768),
+        }
+    }
+
+    pub fn network(&self) -> &Network {
+        &self.net
+    }
+
+    /// Run functional training + cost simulation + deep validation.
+    pub fn run(&self, cfg: &RunConfig) -> Result<TrainReport> {
+        let sw = Stopwatch::start();
+        let mut counters = Counters::new();
+
+        // Deep validation runs concurrently on worker threads while the
+        // main thread drives the PJRT training loop.
+        let deep_handle = self.spawn_deep_validation(cfg);
+
+        let mut train = Dataset::synthetic(cfg.train_size, cfg.seed);
+        let test = Dataset::synthetic(cfg.test_size, cfg.seed.wrapping_add(1));
+        let test_batch = test.full_batch(EVAL_BATCH);
+
+        let mut state: TrainState = self.runtime.init_params(cfg.seed as i32)?;
+        let mut losses = Vec::new();
+        let mut accuracy = Vec::new();
+
+        for step in 0..cfg.steps {
+            let batch = train.next_batch(TRAIN_BATCH);
+            let loss = self
+                .runtime
+                .train_step(&mut state, &batch.images, &batch.labels, cfg.lr)?;
+            if !loss.is_finite() {
+                return Err(Error::Runtime(format!("loss diverged at step {step}")));
+            }
+            counters.add("train_steps", 1);
+            counters.add("samples", TRAIN_BATCH as u64);
+            if step % 10 == 0 || step + 1 == cfg.steps {
+                losses.push((step, loss));
+            }
+            if cfg.eval_every > 0 && (step % cfg.eval_every == 0 || step + 1 == cfg.steps) {
+                let (_eloss, correct) =
+                    self.runtime
+                        .eval(&state, &test_batch.images, &test_batch.labels)?;
+                accuracy.push((step, correct / EVAL_BATCH as f32));
+                counters.add("evals", 1);
+            }
+        }
+
+        let final_accuracy = accuracy.last().map(|&(_, a)| a).unwrap_or(0.0);
+        let sim_proposed = self.proposed.training_cost(&self.net, TRAIN_BATCH, cfg.steps);
+        let sim_floatpim = self.floatpim.training_cost(&self.net, TRAIN_BATCH, cfg.steps);
+
+        let (deep_checked, deep_mismatches) = deep_handle
+            .map(|h| h.join().expect("deep-validation worker panicked"))
+            .unwrap_or((0, 0));
+
+        Ok(TrainReport {
+            losses,
+            accuracy,
+            final_accuracy,
+            sim_proposed,
+            sim_floatpim,
+            deep_checked,
+            deep_mismatches,
+            counters,
+            wall_s: sw.elapsed_s(),
+        })
+    }
+
+    /// Spawn worker threads that execute random MAC waves through the
+    /// bit-level subarray procedures and compare against the softfloat
+    /// gold model — the "dedicated PIM accelerator simulator" validation
+    /// of §4.1, parallelised across layers.
+    fn spawn_deep_validation(
+        &self,
+        cfg: &RunConfig,
+    ) -> Option<thread::JoinHandle<(u64, u64)>> {
+        if cfg.deep_validate_waves == 0 {
+            return None;
+        }
+        let waves = cfg.deep_validate_waves;
+        let threads = cfg.threads.max(1);
+        let seed = cfg.seed;
+        Some(thread::spawn(move || {
+            let (tx, rx) = mpsc::channel::<(u64, u64)>();
+            for t in 0..threads {
+                let tx = tx.clone();
+                let tseed = seed.wrapping_add(t as u64).wrapping_mul(0x9E37_79B9);
+                thread::spawn(move || {
+                    let mut rng = Rng::new(tseed.max(1));
+                    let mut checked = 0u64;
+                    let mut bad = 0u64;
+                    for _ in 0..waves {
+                        let mut engine = FpEngine::new(
+                            ArrayGeometry {
+                                rows: 256,
+                                cols: 256,
+                            },
+                            OpCosts::proposed_default(),
+                        );
+                        let pairs: Vec<(u32, u32)> = (0..256)
+                            .map(|_| {
+                                (
+                                    rng.f32_normal(20).to_bits(),
+                                    rng.f32_normal(20).to_bits(),
+                                )
+                            })
+                            .collect();
+                        let got = engine.mul(&pairs);
+                        for (i, &(a, b)) in pairs.iter().enumerate() {
+                            checked += 1;
+                            if got[i] != softfloat::pim_mul_bits(a, b) {
+                                bad += 1;
+                            }
+                        }
+                        let got = engine.add(&pairs);
+                        for (i, &(a, b)) in pairs.iter().enumerate() {
+                            checked += 1;
+                            if got[i] != softfloat::pim_add_bits(a, b) {
+                                bad += 1;
+                            }
+                        }
+                    }
+                    let _ = tx.send((checked, bad));
+                });
+            }
+            drop(tx);
+            let mut total = (0u64, 0u64);
+            while let Ok((c, b)) = rx.recv() {
+                total.0 += c;
+                total.1 += b;
+            }
+            total
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_sane() {
+        let c = RunConfig::default();
+        assert!(c.steps > 0 && c.lr > 0.0 && c.threads > 0);
+    }
+
+    // Runtime-dependent tests live in rust/tests/runtime_artifacts.rs
+    // (they need the AOT artifacts on disk).
+}

@@ -1,0 +1,223 @@
+//! Procedural digit rendering + batching.
+
+use crate::prop::Rng;
+
+/// 7x5 bitmap glyphs for digits 0-9 (rows top-to-bottom, 5-bit rows).
+const GLYPHS: [[u8; 7]; 10] = [
+    [0b01110, 0b10001, 0b10011, 0b10101, 0b11001, 0b10001, 0b01110], // 0
+    [0b00100, 0b01100, 0b00100, 0b00100, 0b00100, 0b00100, 0b01110], // 1
+    [0b01110, 0b10001, 0b00001, 0b00010, 0b00100, 0b01000, 0b11111], // 2
+    [0b11111, 0b00010, 0b00100, 0b00010, 0b00001, 0b10001, 0b01110], // 3
+    [0b00010, 0b00110, 0b01010, 0b10010, 0b11111, 0b00010, 0b00010], // 4
+    [0b11111, 0b10000, 0b11110, 0b00001, 0b00001, 0b10001, 0b01110], // 5
+    [0b00110, 0b01000, 0b10000, 0b11110, 0b10001, 0b10001, 0b01110], // 6
+    [0b11111, 0b00001, 0b00010, 0b00100, 0b01000, 0b01000, 0b01000], // 7
+    [0b01110, 0b10001, 0b10001, 0b01110, 0b10001, 0b10001, 0b01110], // 8
+    [0b01110, 0b10001, 0b10001, 0b01111, 0b00001, 0b00010, 0b01100], // 9
+];
+
+/// One batch of images + labels, NCHW fp32.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    /// `[n, 1, 28, 28]` row-major.
+    pub images: Vec<f32>,
+    /// `[n]` class ids 0..10.
+    pub labels: Vec<i32>,
+    pub n: usize,
+}
+
+/// A deterministic synthetic digit dataset.
+#[derive(Debug)]
+pub struct Dataset {
+    images: Vec<f32>, // n * 784
+    labels: Vec<i32>,
+    n: usize,
+    cursor: usize,
+}
+
+impl Dataset {
+    /// Render `n` samples (balanced classes) with the given seed.
+    pub fn synthetic(n: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed.wrapping_mul(0x9E37_79B9).max(1));
+        let mut images = Vec::with_capacity(n * 784);
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            let digit = (i % 10) as i32;
+            labels.push(digit);
+            images.extend_from_slice(&render(digit as usize, &mut rng));
+        }
+        // Shuffle sample order deterministically (Fisher-Yates on indices).
+        let mut order: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            let j = rng.below(i as u64 + 1) as usize;
+            order.swap(i, j);
+        }
+        let mut s_images = vec![0f32; n * 784];
+        let mut s_labels = vec![0i32; n];
+        for (dst, &src) in order.iter().enumerate() {
+            s_images[dst * 784..(dst + 1) * 784]
+                .copy_from_slice(&images[src * 784..(src + 1) * 784]);
+            s_labels[dst] = labels[src];
+        }
+        Dataset {
+            images: s_images,
+            labels: s_labels,
+            n,
+            cursor: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Next batch of `size`, cycling through the (shuffled) dataset.
+    pub fn next_batch(&mut self, size: usize) -> Batch {
+        let mut images = Vec::with_capacity(size * 784);
+        let mut labels = Vec::with_capacity(size);
+        for _ in 0..size {
+            let i = self.cursor;
+            self.cursor = (self.cursor + 1) % self.n;
+            images.extend_from_slice(&self.images[i * 784..(i + 1) * 784]);
+            labels.push(self.labels[i]);
+        }
+        Batch {
+            images,
+            labels,
+            n: size,
+        }
+    }
+
+    /// The whole set as one batch (for eval).
+    pub fn full_batch(&self, limit: usize) -> Batch {
+        let n = self.n.min(limit);
+        Batch {
+            images: self.images[..n * 784].to_vec(),
+            labels: self.labels[..n].to_vec(),
+            n,
+        }
+    }
+}
+
+/// Render one 28x28 digit with random jitter.
+fn render(digit: usize, rng: &mut Rng) -> [f32; 784] {
+    let glyph = &GLYPHS[digit];
+    let mut img = [0f32; 784];
+    // Random placement: glyph cell size ~3px with +-2px translation.
+    let cell_h = 3 + rng.below(2) as i32; // 3..4 px per glyph row
+    let cell_w = 3 + rng.below(2) as i32;
+    let gh = 7 * cell_h;
+    let gw = 5 * cell_w;
+    let off_y = (28 - gh) / 2 + rng.range(-2, 3) as i32;
+    let off_x = (28 - gw) / 2 + rng.range(-2, 3) as i32;
+    let thick = rng.below(2) as i32; // 0 or 1 extra px of stroke
+
+    for (gy, row) in glyph.iter().enumerate() {
+        for gx in 0..5 {
+            if (row >> (4 - gx)) & 1 == 0 {
+                continue;
+            }
+            let y0 = off_y + gy as i32 * cell_h;
+            let x0 = off_x + gx as i32 * cell_w;
+            for dy in -thick..cell_h + thick {
+                for dx in -thick..cell_w + thick {
+                    let (y, x) = (y0 + dy, x0 + dx);
+                    if (0..28).contains(&y) && (0..28).contains(&x) {
+                        let edge = dy < 0 || dy >= cell_h || dx < 0 || dx >= cell_w;
+                        let v = if edge { 0.55 } else { 1.0 };
+                        let idx = (y * 28 + x) as usize;
+                        img[idx] = img[idx].max(v);
+                    }
+                }
+            }
+        }
+    }
+    // Pixel noise + light background haze, then normalise roughly like
+    // MNIST preprocessing (mean ~0.13 / std ~0.31).
+    for p in img.iter_mut() {
+        let noise = rng.gaussian() as f32 * 0.08;
+        *p = (*p + noise).clamp(0.0, 1.0);
+        *p = (*p - 0.13) / 0.31;
+    }
+    img
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = Dataset::synthetic(100, 7).full_batch(100);
+        let b = Dataset::synthetic(100, 7).full_batch(100);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.images, b.images);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = Dataset::synthetic(50, 1).full_batch(50);
+        let b = Dataset::synthetic(50, 2).full_batch(50);
+        assert_ne!(a.images, b.images);
+    }
+
+    #[test]
+    fn classes_are_balanced() {
+        let d = Dataset::synthetic(1000, 3).full_batch(1000);
+        let mut counts = [0usize; 10];
+        for &l in &d.labels {
+            counts[l as usize] += 1;
+        }
+        for c in counts {
+            assert_eq!(c, 100);
+        }
+    }
+
+    #[test]
+    fn batches_cycle() {
+        let mut d = Dataset::synthetic(10, 5);
+        let b1 = d.next_batch(7);
+        let b2 = d.next_batch(7);
+        assert_eq!(b1.n, 7);
+        assert_eq!(b2.n, 7);
+        // second batch wraps around: its tail equals the set's head
+        assert_eq!(b2.labels[3..], d.full_batch(10).labels[0..4]);
+    }
+
+    #[test]
+    fn images_are_normalised() {
+        let d = Dataset::synthetic(200, 9).full_batch(200);
+        let mean: f32 = d.images.iter().sum::<f32>() / d.images.len() as f32;
+        assert!(mean.abs() < 0.6, "roughly zero-centred, mean={mean}");
+        let lo = d.images.iter().cloned().fold(f32::MAX, f32::min);
+        let hi = d.images.iter().cloned().fold(f32::MIN, f32::max);
+        assert!(lo >= -1.0 && hi <= 3.5, "range [{lo}, {hi}]");
+    }
+
+    #[test]
+    fn same_class_varies_between_samples() {
+        // jitter must actually jitter: two 0s should not be identical
+        let d = Dataset::synthetic(40, 11);
+        let full = d.full_batch(40);
+        let zeros: Vec<usize> = (0..40).filter(|&i| full.labels[i] == 0).collect();
+        assert!(zeros.len() >= 2);
+        let a = &full.images[zeros[0] * 784..zeros[0] * 784 + 784];
+        let b = &full.images[zeros[1] * 784..zeros[1] * 784 + 784];
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn glyphs_are_distinct() {
+        // nearest-glyph classification on clean renders must be perfect;
+        // sanity that the 10 classes are visually separable.
+        for a in 0..10 {
+            for b in (a + 1)..10 {
+                assert_ne!(GLYPHS[a], GLYPHS[b], "glyphs {a} and {b} identical");
+            }
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Synthetic MNIST-like digit corpus.
+//!
+//! The environment has no network access, so instead of the real MNIST
+//! files the end-to-end example trains on procedurally rendered digits:
+//! a 7×5 seven-segment-style glyph per class, upsampled to 28×28 with
+//! per-sample random translation, scale, stroke-thickness and Gaussian
+//! pixel noise.  The corpus is deterministic in its seed, balanced across
+//! the 10 classes, and hard enough that an untrained LeNet sits at ~10%
+//! accuracy while a trained one exceeds 95% — it exercises the exact
+//! compute graph (shapes, op mix, step count) the PIM cost simulation
+//! prices.  DESIGN.md §2 records the substitution.
+
+pub mod mnist;
+
+pub use mnist::{Batch, Dataset};

@@ -1,0 +1,143 @@
+//! The three SOT-MRAM cell designs of paper Fig. 2 and their
+//! microarchitectural attributes (§2, §3.1).
+//!
+//! | design      | transistors | row-parallel write | extra write step | relative density |
+//! |-------------|-------------|--------------------|------------------|------------------|
+//! | 2T-1R [16]  | 2           | yes                | no               | lowest           |
+//! | single MTJ  | 0 (shared)  | no (row direction shared) | yes (+1)  | highest          |
+//! | **1T-1R (ours)** | 1      | yes                | no               | middle, see §3.1 |
+//!
+//! The proposed 1T-1R keeps the 2T-1R's ability to gate each cell in a row
+//! individually (four terminals: WL, SL, RBL, WBL) while dropping one
+//! transistor, which raises density and read speed; the single-MTJ cell is
+//! denser still but must switch the current direction of a whole row at
+//! once, costing an extra step on every write (§2).
+
+use super::params::TechNode;
+
+/// Which cell design an array is built from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CellKind {
+    /// The paper's proposed four-terminal 1T-1R cell (Fig. 2c).
+    OneT1R,
+    /// The 2T-1R cell of [16] (Fig. 2a).
+    TwoT1R,
+    /// The shared-transistor single-MTJ cell of [16] (Fig. 2b).
+    SingleMtj,
+    /// A ReRAM 1T-1R cell as used by the FloatPIM baseline [1] (not an
+    /// SOT-MRAM design; carried here so the area model can price the
+    /// baseline with the same machinery).
+    ReRam1T1R,
+}
+
+/// Derived microarchitectural attributes of a cell design.
+#[derive(Debug, Clone, Copy)]
+pub struct CellDesign {
+    pub kind: CellKind,
+    /// Transistors physically inside each cell.
+    pub transistors_per_cell: f64,
+    /// Can different cells in one row receive different write data in the
+    /// same cycle (needed for the column-flexible FA of §3.2)?
+    pub row_parallel_write: bool,
+    /// Write steps per operation (the single-MTJ design pays one extra
+    /// step to flip the shared row current direction).
+    pub write_steps: u32,
+    /// Cell footprint in F² (NVSim-style layout estimate).
+    pub cell_area_f2: f64,
+}
+
+impl CellDesign {
+    pub fn of(kind: CellKind) -> Self {
+        match kind {
+            // One access transistor sized for the 65 µA write current plus
+            // the MTJ pillar and the extra WBL track: ~30 F² at 28 nm.
+            CellKind::OneT1R => CellDesign {
+                kind,
+                transistors_per_cell: 1.0,
+                row_parallel_write: true,
+                write_steps: 1,
+                cell_area_f2: 30.0,
+            },
+            // Two transistors: roughly one transistor pitch wider.
+            CellKind::TwoT1R => CellDesign {
+                kind,
+                transistors_per_cell: 2.0,
+                row_parallel_write: true,
+                write_steps: 1,
+                cell_area_f2: 48.0,
+            },
+            // Shared row transistor amortised over the row: densest.
+            CellKind::SingleMtj => CellDesign {
+                kind,
+                transistors_per_cell: 1.0 / 1024.0,
+                row_parallel_write: false,
+                write_steps: 2,
+                cell_area_f2: 16.0,
+            },
+            // ReRAM 1T-1R: smaller storage element, but the access
+            // transistor is sized for a ~10× higher write current.
+            CellKind::ReRam1T1R => CellDesign {
+                kind,
+                transistors_per_cell: 1.0,
+                row_parallel_write: true,
+                write_steps: 1,
+                cell_area_f2: 25.0,
+            },
+        }
+    }
+
+    /// Physical cell area in m².
+    pub fn cell_area_m2(&self, tech: &TechNode) -> f64 {
+        self.cell_area_f2 * tech.feature_m * tech.feature_m
+    }
+
+    /// Density relative to the 2T-1R baseline (higher is better).
+    pub fn relative_density(&self) -> f64 {
+        CellDesign::of(CellKind::TwoT1R).cell_area_f2 / self.cell_area_f2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::params::TECH_28NM;
+
+    #[test]
+    fn proposed_cell_denser_than_2t1r() {
+        // §3.1: "increased memory density ... over the 2T-1R cell".
+        let ours = CellDesign::of(CellKind::OneT1R);
+        let base = CellDesign::of(CellKind::TwoT1R);
+        assert!(ours.cell_area_f2 < base.cell_area_f2);
+        assert!(ours.relative_density() > 1.0);
+    }
+
+    #[test]
+    fn proposed_cell_keeps_row_parallel_write() {
+        // §3.1: row-parallel flexibility is what the single-MTJ cell loses.
+        assert!(CellDesign::of(CellKind::OneT1R).row_parallel_write);
+        assert!(CellDesign::of(CellKind::TwoT1R).row_parallel_write);
+        assert!(!CellDesign::of(CellKind::SingleMtj).row_parallel_write);
+    }
+
+    #[test]
+    fn single_mtj_pays_extra_write_step() {
+        // §2: "requiring one extra step (as compared to the 2T-1R cell)".
+        assert_eq!(CellDesign::of(CellKind::SingleMtj).write_steps, 2);
+        assert_eq!(CellDesign::of(CellKind::OneT1R).write_steps, 1);
+    }
+
+    #[test]
+    fn single_mtj_is_densest() {
+        let d = CellDesign::of(CellKind::SingleMtj);
+        assert!(d.cell_area_f2 < CellDesign::of(CellKind::OneT1R).cell_area_f2);
+    }
+
+    #[test]
+    fn area_scales_with_tech_node() {
+        let d = CellDesign::of(CellKind::OneT1R);
+        let a28 = d.cell_area_m2(&TECH_28NM);
+        let mut t16 = TECH_28NM;
+        t16.feature_m = 16e-9;
+        assert!(d.cell_area_m2(&t16) < a28);
+    }
+}

@@ -1,0 +1,10 @@
+//! SOT-MRAM device layer: MTJ physics abstraction, stateful write-path
+//! logic (paper Fig. 1) and the three memory-cell designs (paper Fig. 2).
+
+pub mod cell;
+pub mod mtj;
+pub mod params;
+
+pub use cell::{CellDesign, CellKind};
+pub use mtj::{Direction, LogicOp, Mtj, MtjState};
+pub use params::{CellParams, TechNode, SOT_MRAM_TABLE1, SOT_MRAM_ULTRAFAST, TECH_28NM};

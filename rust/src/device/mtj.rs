@@ -1,0 +1,237 @@
+//! Magnetic-tunnel-junction state machine with the voltage-gated stateful
+//! logic of paper Fig. 1 (from Zhang et al., IEEE T-NANO'19 [16]).
+//!
+//! The MTJ stores one bit as its resistance state: parallel = low
+//! resistance = logic **0**, anti-parallel = high resistance = logic **1**.
+//! A write pulse is characterised by
+//!
+//! * `A` — the voltage applied on RBL (`V_b` for logic 1, 0 V for logic 0),
+//!   which *gates the switching threshold* (spin-Hall-effect assist);
+//! * `C` — the direction of the write current between SL and WBL.
+//!
+//! Fig. 1 realises three Boolean functions on the stored bit `B_i`:
+//!
+//! | op  | pulse                               | result `B_{i+1}`    |
+//! |-----|-------------------------------------|---------------------|
+//! | OR  | set-direction current, gate = A     | `A \| B_i`          |
+//! | AND | reset-direction current, gate = !A  | `A & B_i`           |
+//! | XOR | toggle pulse, gate = A              | `A ^ B_i`           |
+//!
+//! OR: with the gate open (A = 1) the set-direction current exceeds the
+//! switching threshold and drives the device to high resistance whatever
+//! its state; with A = 0 the threshold is not reached and `B_i` survives.
+//! AND mirrors this in the reset direction.  XOR uses the state-dependent
+//! toggle regime: an above-threshold pulse inverts the state, a gated-off
+//! pulse leaves it.
+
+use super::params::CellParams;
+
+/// Resistance state of the free layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MtjState {
+    /// Parallel magnetisation, low resistance — logic 0.
+    Parallel,
+    /// Anti-parallel magnetisation, high resistance — logic 1.
+    AntiParallel,
+}
+
+impl MtjState {
+    pub fn bit(self) -> bool {
+        self == MtjState::AntiParallel
+    }
+
+    pub fn from_bit(b: bool) -> Self {
+        if b {
+            MtjState::AntiParallel
+        } else {
+            MtjState::Parallel
+        }
+    }
+}
+
+/// Write-current direction between SL and WBL (paper Fig. 2c, red path).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// SL -> WBL: drives the free layer towards anti-parallel (set, "C = 1").
+    Set,
+    /// WBL -> SL: drives towards parallel (reset, "C = 0").
+    Reset,
+    /// State-dependent toggle regime used for XOR.
+    Toggle,
+}
+
+/// The stateful Boolean functions of Fig. 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LogicOp {
+    And,
+    Or,
+    Xor,
+}
+
+impl LogicOp {
+    /// Truth function `B_{i+1} = f(A, B_i)`.
+    pub fn eval(self, a: bool, b_i: bool) -> bool {
+        match self {
+            LogicOp::And => a && b_i,
+            LogicOp::Or => a || b_i,
+            LogicOp::Xor => a ^ b_i,
+        }
+    }
+}
+
+/// One MTJ device plus switch-event accounting.
+#[derive(Debug, Clone)]
+pub struct Mtj {
+    state: MtjState,
+    /// Number of actual resistance switches (energy is spent only when the
+    /// free layer flips; a gated-off or same-state pulse dissipates the
+    /// much smaller ohmic energy accounted by the array model).
+    pub switch_events: u64,
+    /// Number of write pulses applied (switching or not).
+    pub pulse_events: u64,
+}
+
+impl Mtj {
+    pub fn new(initial: bool) -> Self {
+        Mtj {
+            state: MtjState::from_bit(initial),
+            switch_events: 0,
+            pulse_events: 0,
+        }
+    }
+
+    pub fn state(&self) -> MtjState {
+        self.state
+    }
+
+    pub fn bit(&self) -> bool {
+        self.state.bit()
+    }
+
+    /// Non-destructive read: the RBL read voltage is below the (raised)
+    /// switching threshold, so the state is never disturbed.
+    pub fn read(&self) -> bool {
+        self.bit()
+    }
+
+    /// Read current for the sense amplifier, amps.
+    pub fn read_current(&self, p: &CellParams) -> f64 {
+        match self.state {
+            MtjState::Parallel => p.i_read_on(),
+            MtjState::AntiParallel => p.i_read_off(),
+        }
+    }
+
+    /// Apply one write pulse: `gate_open` is the RBL voltage condition
+    /// (`V_b` applied = true), `dir` the SL/WBL current direction.
+    /// Returns `true` if the free layer actually switched.
+    pub fn pulse(&mut self, gate_open: bool, dir: Direction) -> bool {
+        self.pulse_events += 1;
+        if !gate_open {
+            // Below-threshold current: no switching possible.
+            return false;
+        }
+        let new_state = match dir {
+            Direction::Set => MtjState::AntiParallel,
+            Direction::Reset => MtjState::Parallel,
+            Direction::Toggle => match self.state {
+                MtjState::Parallel => MtjState::AntiParallel,
+                MtjState::AntiParallel => MtjState::Parallel,
+            },
+        };
+        let switched = new_state != self.state;
+        if switched {
+            self.switch_events += 1;
+        }
+        self.state = new_state;
+        switched
+    }
+
+    /// Perform one stateful logic op: `B_{i+1} = op(a, B_i)`, implemented
+    /// purely with the physical pulse rules above.  Returns the new bit.
+    pub fn logic(&mut self, op: LogicOp, a: bool) -> bool {
+        match op {
+            // OR: set-direction pulse gated by A.
+            LogicOp::Or => self.pulse(a, Direction::Set),
+            // AND: reset-direction pulse gated by !A (A = 1 raises the
+            // threshold and protects the stored bit).
+            LogicOp::And => self.pulse(!a, Direction::Reset),
+            // XOR: toggle pulse gated by A.
+            LogicOp::Xor => self.pulse(a, Direction::Toggle),
+        };
+        self.bit()
+    }
+
+    /// Unconditional write (a set/reset pulse pair collapsed to one step,
+    /// as the array performs it with the row-parallel write of §3.1).
+    pub fn write(&mut self, bit: bool) {
+        let dir = if bit { Direction::Set } else { Direction::Reset };
+        self.pulse(true, dir);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Fig. 1 ground truth, exhaustively.
+    #[test]
+    fn logic_ops_match_truth_tables() {
+        for op in [LogicOp::And, LogicOp::Or, LogicOp::Xor] {
+            for a in [false, true] {
+                for b in [false, true] {
+                    let mut m = Mtj::new(b);
+                    let out = m.logic(op, a);
+                    assert_eq!(
+                        out,
+                        op.eval(a, b),
+                        "op={op:?} A={a} B_i={b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn read_is_non_destructive() {
+        let mut m = Mtj::new(true);
+        for _ in 0..100 {
+            assert!(m.read());
+        }
+        assert_eq!(m.switch_events, 0);
+        m.write(false);
+        for _ in 0..100 {
+            assert!(!m.read());
+        }
+    }
+
+    #[test]
+    fn switch_events_only_on_actual_flips() {
+        let mut m = Mtj::new(false);
+        m.write(false); // same state: pulse but no switch
+        assert_eq!(m.switch_events, 0);
+        assert_eq!(m.pulse_events, 1);
+        m.write(true);
+        assert_eq!(m.switch_events, 1);
+        m.write(true);
+        assert_eq!(m.switch_events, 1);
+        m.logic(LogicOp::Xor, true); // toggle always flips
+        assert_eq!(m.switch_events, 2);
+    }
+
+    #[test]
+    fn gated_off_pulse_never_switches() {
+        let mut m = Mtj::new(true);
+        assert!(!m.pulse(false, Direction::Reset));
+        assert!(m.bit());
+    }
+
+    #[test]
+    fn read_current_reflects_state() {
+        use crate::device::params::SOT_MRAM_TABLE1;
+        let p = SOT_MRAM_TABLE1;
+        let on = Mtj::new(false).read_current(&p);
+        let off = Mtj::new(true).read_current(&p);
+        assert!(on > off, "parallel state must draw more current");
+    }
+}

@@ -1,0 +1,176 @@
+//! FloatPIM's floating-point cost model, assembled from its published
+//! procedure structure (§2 of our paper + [1]):
+//!
+//! * multiply: Nm partial products, each folded in with an (Nm+1)-bit
+//!   NOR-FA ripple (13 switches per FA), plus ~455 intermediate cell
+//!   writes per fp32 multiply at 100× NOR energy;
+//! * add: bit-by-bit exponent alignment — shifting the smaller mantissa
+//!   one position per cycle, for every possible shift amount processed
+//!   group-by-group — O(Nm²) switch steps — plus an Nm-bit NOR-FA ripple;
+//! * exponent arithmetic: Ne-bit NOR-FA ripples.
+
+use crate::floatpim::fa::FLOATPIM_FA_STEPS;
+use crate::floatpim::params::ReRamParams;
+use crate::fpu::cost::CostBreakdown;
+use crate::fpu::format::FloatFormat;
+
+/// Analytic cost model for the FloatPIM baseline.
+#[derive(Debug, Clone, Copy)]
+pub struct FloatPimCostModel {
+    pub params: ReRamParams,
+    pub fmt: FloatFormat,
+}
+
+impl FloatPimCostModel {
+    pub fn new(params: ReRamParams, fmt: FloatFormat) -> Self {
+        FloatPimCostModel { params, fmt }
+    }
+
+    pub fn fp32_default() -> Self {
+        FloatPimCostModel::new(ReRamParams::default(), FloatFormat::FP32)
+    }
+
+    /// Intermediate cells written per multiply: the §2 "455 cells at one
+    /// row for a 32-bit multiplication", scaled for other formats
+    /// (partial-product rows of width ~2Nm minus packing overhead).
+    pub fn mul_intermediate_cells(&self) -> f64 {
+        let nm = self.fmt.nm as f64;
+        // 455 at Nm=23 => ~0.86 · Nm · (Nm - 2/3Nm...) ≈ 0.86·Nm²; keep
+        // the exact §2 figure at fp32 and scale quadratically elsewhere.
+        455.0 * (nm * nm) / (23.0 * 23.0)
+    }
+
+    /// NOR switch steps of one multiply.
+    pub fn mul_switch_steps(&self) -> f64 {
+        let nm = self.fmt.nm as f64;
+        let ne = self.fmt.ne as f64;
+        // Nm partial-product folds, each an Nm-bit FA ripple, plus the
+        // exponent add and sign handling.
+        nm * nm * FLOATPIM_FA_STEPS as f64 + ne * FLOATPIM_FA_STEPS as f64 + 20.0
+    }
+
+    /// NOR switch steps of one add (the O(Nm²) alignment dominates).
+    pub fn add_switch_steps(&self) -> f64 {
+        let nm = self.fmt.nm as f64;
+        let ne = self.fmt.ne as f64;
+        // Bit-by-bit alignment: groups needing shift d pay d single-bit
+        // shift cycles (read+write collapsed into switch cycles in MAGIC);
+        // expected total over all groups = sum_{d=1..Nm} 2d = Nm(Nm+1).
+        let align = nm * (nm + 1.0);
+        let mant_fa = nm * FLOATPIM_FA_STEPS as f64;
+        let exp_fa = ne * FLOATPIM_FA_STEPS as f64;
+        align + mant_fa + exp_fa + 20.0
+    }
+
+    pub fn t_mul(&self) -> f64 {
+        self.mul_switch_steps() * self.params.t_cycle
+            + self.mul_intermediate_cells() / 455.0 * self.params.t_write * 30.0
+    }
+
+    pub fn e_mul(&self) -> f64 {
+        self.mul_switch_steps() * self.params.e_nor
+            + self.mul_intermediate_cells() * self.params.e_write
+    }
+
+    pub fn t_add(&self) -> f64 {
+        self.add_switch_steps() * self.params.t_cycle
+    }
+
+    pub fn e_add(&self) -> f64 {
+        // Alignment + FA switches, plus rewriting the aligned mantissa
+        // group by group (~2Nm cell writes).
+        self.add_switch_steps() * self.params.e_nor
+            + 2.0 * self.fmt.nm as f64 * self.params.e_write
+    }
+
+    pub fn t_mac(&self) -> f64 {
+        self.t_mul() + self.t_add()
+    }
+
+    pub fn e_mac(&self) -> f64 {
+        self.e_mul() + self.e_add()
+    }
+
+    /// Fig. 5-style breakdown: FloatPIM's steps are all cell switches
+    /// (write-class), intermediates are writes; reads only for its search.
+    pub fn t_mac_breakdown(&self) -> CostBreakdown {
+        CostBreakdown {
+            read: 0.0,
+            write: self.t_mac(),
+            search: 0.0,
+        }
+    }
+
+    pub fn e_mac_breakdown(&self) -> CostBreakdown {
+        let switch_e = (self.mul_switch_steps() + self.add_switch_steps())
+            * self.params.e_nor;
+        CostBreakdown {
+            read: 0.0,
+            write: self.e_mac() - switch_e,
+            search: switch_e,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::floatpim::params::FLOATPIM_PUBLISHED;
+    use crate::fpu::cost::FpCostModel;
+
+    #[test]
+    fn matches_published_anchors_within_10pct() {
+        // §4.1: the dedicated simulator is validated to <10% against the
+        // performance reported in [1].
+        let m = FloatPimCostModel::fp32_default();
+        let t_err =
+            (m.t_mac() - FLOATPIM_PUBLISHED.mac_latency_s).abs() / FLOATPIM_PUBLISHED.mac_latency_s;
+        let e_err =
+            (m.e_mac() - FLOATPIM_PUBLISHED.mac_energy_j).abs() / FLOATPIM_PUBLISHED.mac_energy_j;
+        assert!(t_err < 0.10, "latency error {:.1}%", t_err * 100.0);
+        assert!(e_err < 0.10, "energy error {:.1}%", e_err * 100.0);
+    }
+
+    #[test]
+    fn alignment_is_quadratic_in_nm() {
+        let f = |nm| {
+            FloatPimCostModel::new(ReRamParams::default(), FloatFormat { ne: 8, nm })
+                .add_switch_steps()
+        };
+        let dd1 = f(12) - 2.0 * f(11) + f(10);
+        let dd2 = f(40) - 2.0 * f(39) + f(38);
+        assert!((dd1 - dd2).abs() < 1e-9, "constant second difference");
+        assert!(dd1 > 0.0, "convex: O(Nm²)");
+    }
+
+    #[test]
+    fn fig5_latency_ratio_near_1_8x() {
+        let ours = FpCostModel::proposed_fp32();
+        let theirs = FloatPimCostModel::fp32_default();
+        let ratio = theirs.t_mac() / ours.t_mac();
+        assert!(
+            (1.5..=2.1).contains(&ratio),
+            "MAC latency ratio {ratio:.2} (paper: 1.8x)"
+        );
+    }
+
+    #[test]
+    fn fig5_energy_ratio_near_3_3x() {
+        let ours = FpCostModel::proposed_fp32();
+        let theirs = FloatPimCostModel::fp32_default();
+        let ratio = theirs.e_mac() / ours.e_mac();
+        assert!(
+            (2.9..=3.7).contains(&ratio),
+            "MAC energy ratio {ratio:.2} (paper: 3.3x)"
+        );
+    }
+
+    #[test]
+    fn intermediate_write_energy_dominates_their_mul() {
+        // The §2 motivation: "writing into a memory cell can cost 100x
+        // higher energy than that of a NOR operation".
+        let m = FloatPimCostModel::fp32_default();
+        let write_e = m.mul_intermediate_cells() * m.params.e_write;
+        assert!(write_e / m.e_mul() > 0.5);
+    }
+}

@@ -1,0 +1,172 @@
+//! FloatPIM's NOR-network full adder: 13 steps of cell switch using 12
+//! cells (§2), executable on the subarray simulator.
+//!
+//! ReRAM MAGIC-style NOR computes `out = NOR(in1, in2)` by conditionally
+//! switching a *pre-set* output cell, so every NOR costs one switch step
+//! and every output cell must first be initialised to '1'.  The network:
+//!
+//! ```text
+//!  n1 = NOR(x, y)          n5 = NOR(n4, z)
+//!  n2 = NOR(x, n1)         n6 = NOR(n4, n5)
+//!  n3 = NOR(y, n1)         n7 = NOR(z, n5)
+//!  n4 = NOR(n2, n3)  (=XNOR(x,y))
+//!  S  = NOR(n6, n7)  (= x ⊕ y ⊕ z)
+//!  C  = NOR(n1, n5)  (= xy + z(x⊕y))
+//! ```
+//!
+//! 9 NOR switches + 4 batched initialisation switches = **13 steps**, on
+//! 12 cells (x, y, z, n1..n7, S, C — with x, y, z *consumed* as the NOR
+//! chain switches through them, which is exactly why this FA cannot be
+//! used when the operands are still needed later in training).
+
+use crate::sim::{OpClass, Subarray};
+
+/// Steps of cell switch per 1-bit FloatPIM FA (§2: 13).
+pub const FLOATPIM_FA_STEPS: u64 = 13;
+/// Cells used per 1-bit FloatPIM FA (§2: 12).
+pub const FLOATPIM_FA_CELLS: u64 = 12;
+
+/// Column layout: x, y, z inputs followed by 9 workspace/output columns.
+#[derive(Debug, Clone, Copy)]
+pub struct NorFaLayout {
+    pub x: usize,
+    pub y: usize,
+    pub z: usize,
+    /// n1..n7, S, C.
+    pub work: [usize; 9],
+}
+
+/// Executable row-parallel NOR-network FA.
+pub struct NorFa;
+
+impl NorFa {
+    /// Execute one row-parallel FloatPIM FA.  Returns `(sum_col, carry_col)`.
+    /// The operand columns are **overwritten** (destructive, as in [1]).
+    pub fn execute(sub: &mut Subarray, l: &NorFaLayout) -> (usize, usize) {
+        let [n1, n2, n3, n4, n5, n6, n7, s, c] = l.work;
+        let rows = sub.rows() as u64;
+        let words = sub.words_per_col();
+
+        // 4 initialisation steps: pre-set the 9 output cells in batches
+        // (MAGIC initialises a group of cells in one switch cycle).
+        for _ in 0..4 {
+            sub.charge(OpClass::Write, 1, rows);
+        }
+
+        // Helper: one NOR switch step (functional + 1 write charge).
+        let nor = |sub: &mut Subarray, a: usize, b: usize, out: usize| {
+            let mut res = vec![0u64; words];
+            {
+                let pa = sub.peek_col(a).to_vec();
+                let pb = sub.peek_col(b).to_vec();
+                for w in 0..words {
+                    res[w] = !(pa[w] | pb[w]);
+                }
+            }
+            // The conditional switch of the pre-set output cell.
+            sub.charge(OpClass::Write, 1, rows);
+            sub.load_col(out, &res);
+        };
+
+        nor(sub, l.x, l.y, n1);
+        nor(sub, l.x, n1, n2);
+        nor(sub, l.y, n1, n3);
+        nor(sub, n2, n3, n4); // XNOR(x, y)
+        nor(sub, n4, l.z, n5);
+        nor(sub, n4, n5, n6);
+        nor(sub, l.z, n5, n7);
+        nor(sub, n6, n7, s); // sum
+        nor(sub, n1, n5, c); // carry
+
+        // Destructive: the MAGIC chain consumed the operand cells (their
+        // rows now hold intermediate values).  Model by clobbering x, y, z.
+        let junk = vec![0u64; words];
+        sub.load_col(l.x, &junk);
+        sub.load_col(l.y, &junk);
+        sub.load_col(l.z, &junk);
+
+        (s, c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nvsim::{ArrayGeometry, OpCosts};
+
+    fn sub() -> Subarray {
+        Subarray::new(
+            ArrayGeometry { rows: 64, cols: 16 },
+            OpCosts::proposed_default(),
+        )
+    }
+
+    fn layout() -> NorFaLayout {
+        NorFaLayout {
+            x: 0,
+            y: 1,
+            z: 2,
+            work: [3, 4, 5, 6, 7, 8, 9, 10, 11],
+        }
+    }
+
+    #[test]
+    fn exhaustive_one_bit() {
+        let mut s = sub();
+        let l = layout();
+        for i in 0..8u64 {
+            s.load_row_value(i as usize, l.x, 1, i & 1);
+            s.load_row_value(i as usize, l.y, 1, (i >> 1) & 1);
+            s.load_row_value(i as usize, l.z, 1, (i >> 2) & 1);
+        }
+        let (sc, cc) = NorFa::execute(&mut s, &l);
+        for i in 0..8u64 {
+            let (x, y, z) = (i & 1, (i >> 1) & 1, (i >> 2) & 1);
+            assert_eq!(s.peek_row_value(i as usize, sc, 1), x ^ y ^ z, "S {i}");
+            assert_eq!(
+                s.peek_row_value(i as usize, cc, 1),
+                (x & y) | (z & (x ^ y)),
+                "C {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn costs_exactly_13_switch_steps() {
+        let mut s = sub();
+        NorFa::execute(&mut s, &layout());
+        assert_eq!(s.ledger.writes, FLOATPIM_FA_STEPS);
+        assert_eq!(s.ledger.reads, 0, "MAGIC computes in the write path");
+    }
+
+    #[test]
+    fn uses_12_cells() {
+        let l = layout();
+        // 3 operands + 9 workspace = 12 distinct cells per bit lane.
+        let mut cols = vec![l.x, l.y, l.z];
+        cols.extend_from_slice(&l.work);
+        cols.sort_unstable();
+        cols.dedup();
+        assert_eq!(cols.len() as u64, FLOATPIM_FA_CELLS);
+    }
+
+    #[test]
+    fn destroys_operands() {
+        // §2: FloatPIM's FA overwrites operands — unusable mid-training.
+        let mut s = sub();
+        let l = layout();
+        s.load_row_value(0, l.x, 1, 1);
+        s.load_row_value(0, l.y, 1, 1);
+        s.load_row_value(0, l.z, 1, 0);
+        NorFa::execute(&mut s, &l);
+        // x, y, z no longer hold the original operands.
+        assert_eq!(s.peek_row_value(0, l.x, 1), 0);
+        assert_eq!(s.peek_row_value(0, l.y, 1), 0);
+    }
+
+    #[test]
+    fn proposed_fa_is_3x_cheaper_in_steps() {
+        use crate::logic::fa::FA_STEPS;
+        assert!(FLOATPIM_FA_STEPS as f64 / FA_STEPS as f64 > 3.0);
+    }
+}

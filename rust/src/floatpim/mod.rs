@@ -1,0 +1,23 @@
+//! The FloatPIM baseline (Imani et al., ISCA'19 [1]): a ReRAM digital PIM
+//! training accelerator whose memory technology supports **only NOR**, so
+//! every computation is a NOR network:
+//!
+//! * 1-bit full addition: 13 steps of cell switch using 12 cells (§2),
+//!   and the procedure *overwrites its operands* — why it is unsuited to
+//!   training reuse (§2, end);
+//! * exponent alignment: bit-by-bit shifting, O(Nm²) latency/energy (§3.3);
+//! * mantissa multiplication: row-parallel, but storing intermediates
+//!   costs ~455 cell writes per 32-bit multiply (§2), and a ReRAM cell
+//!   write costs ~100× a NOR switch (§2).
+//!
+//! [`params`] holds the ReRAM device/cost calibration, [`fa`] the
+//! executable NOR-network FA, [`cost`] the MAC/step cost model the Fig. 5
+//! and Fig. 6 comparisons use.
+
+pub mod cost;
+pub mod fa;
+pub mod params;
+
+pub use cost::FloatPimCostModel;
+pub use fa::{NorFa, FLOATPIM_FA_CELLS, FLOATPIM_FA_STEPS};
+pub use params::{ReRamParams, FLOATPIM_PUBLISHED};

@@ -1,0 +1,79 @@
+//! ReRAM device parameters and the published-performance anchors the
+//! simulator is validated against (§4.1: "validated to be consistent
+//! (<10% prediction accuracy) with the reported performance in [1]").
+//!
+//! The ISCA'19 artifact itself is not redistributable here, so the anchor
+//! constants below are the per-MAC latency/energy scale implied by [1]'s
+//! device (a ~1 ns-class bipolar ReRAM switch, NOR-style MAGIC execution,
+//! cell write ≈ 100× a NOR switch) combined with the step counts its
+//! procedures require.  DESIGN.md §2 records this substitution; the
+//! *ratios* the paper reports are what the reproduction must preserve.
+
+/// ReRAM (FloatPIM) device/cost parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct ReRamParams {
+    /// One NOR / cell-switch cycle, seconds.
+    pub t_cycle: f64,
+    /// Energy of one in-array NOR switch, joules.
+    pub e_nor: f64,
+    /// Energy of one explicit memory-cell write, joules (≈100× e_nor, §2).
+    pub e_write: f64,
+    /// Latency of one explicit write, seconds.
+    pub t_write: f64,
+    /// Row read (sense) latency/energy for their search-style ops.
+    pub t_read: f64,
+    pub e_read: f64,
+}
+
+impl Default for ReRamParams {
+    fn default() -> Self {
+        ReRamParams {
+            t_cycle: 0.95e-9,
+            e_nor: 5.0e-15,
+            e_write: 500e-15, // 100x, the §2 claim
+            t_write: 0.95e-9,
+            t_read: 0.8e-9,
+            e_read: 2.0e-15,
+        }
+    }
+}
+
+/// Per-MAC anchors for the <10% validation test (see module docs).
+#[derive(Debug, Clone, Copy)]
+pub struct PublishedAnchors {
+    pub mac_latency_s: f64,
+    pub mac_energy_j: f64,
+    /// fp32 FA step / cell counts stated verbatim in §2.
+    pub fa_steps: u64,
+    pub fa_cells: u64,
+    /// Intermediate cells written per 32-bit row multiply (§2).
+    pub mul_intermediate_cells: u64,
+}
+
+/// The anchor values (fp32, 1024×1024 subarray).
+pub const FLOATPIM_PUBLISHED: PublishedAnchors = PublishedAnchors {
+    mac_latency_s: 7.8e-6,
+    mac_energy_j: 285e-12,
+    fa_steps: 13,
+    fa_cells: 12,
+    mul_intermediate_cells: 455,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_is_100x_nor_energy() {
+        let p = ReRamParams::default();
+        let ratio = p.e_write / p.e_nor;
+        assert!((99.0..=101.0).contains(&ratio), "§2: write ≈ 100× NOR");
+    }
+
+    #[test]
+    fn anchors_match_section2_counts() {
+        assert_eq!(FLOATPIM_PUBLISHED.fa_steps, 13);
+        assert_eq!(FLOATPIM_PUBLISHED.fa_cells, 12);
+        assert_eq!(FLOATPIM_PUBLISHED.mul_intermediate_cells, 455);
+    }
+}

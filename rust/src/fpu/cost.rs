@@ -1,0 +1,239 @@
+//! The paper's closed-form latency/energy models for floating-point
+//! addition and multiplication (§3.3):
+//!
+//! ```text
+//! T_add = (1 + 7·Ne + 7·Nm)·T_read + (7·Ne + 7·Nm)·T_write + 2·(Nm+2)·T_search
+//! E_add = (1 + 14·Ne + 12·Nm)·E_read + (14·Ne + 12·Nm)·E_write + 2·(Nm+2)·E_search
+//! T_mul = (2·Nm² + 6.5·Nm + 6·Ne + 3)·(T_read + T_write)
+//! E_mul = (4.5·Nm² + 11.5·Nm + 13.5·Ne + 6.5)·(E_read + E_write)
+//! ```
+//!
+//! A MAC is one multiply followed by one add (the accumulate), the unit
+//! Fig. 5 reports.
+
+use crate::fpu::format::FloatFormat;
+use crate::nvsim::OpCosts;
+
+/// Read/write/search component split of a cost (Fig. 5's breakdown bars).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CostBreakdown {
+    pub read: f64,
+    pub write: f64,
+    pub search: f64,
+}
+
+impl CostBreakdown {
+    pub fn total(&self) -> f64 {
+        self.read + self.write + self.search
+    }
+}
+
+/// Analytic cost model for the proposed accelerator's FP ops.
+#[derive(Debug, Clone, Copy)]
+pub struct FpCostModel {
+    pub costs: OpCosts,
+    pub fmt: FloatFormat,
+}
+
+impl FpCostModel {
+    pub fn new(costs: OpCosts, fmt: FloatFormat) -> Self {
+        FpCostModel { costs, fmt }
+    }
+
+    /// fp32 on the default proposed configuration.
+    pub fn proposed_fp32() -> Self {
+        FpCostModel::new(OpCosts::proposed_default(), FloatFormat::FP32)
+    }
+
+    // ---- step counts (the coefficients of the equations) ----
+
+    pub fn add_read_steps(&self) -> f64 {
+        1.0 + 7.0 * self.fmt.ne as f64 + 7.0 * self.fmt.nm as f64
+    }
+
+    pub fn add_write_steps(&self) -> f64 {
+        7.0 * self.fmt.ne as f64 + 7.0 * self.fmt.nm as f64
+    }
+
+    pub fn add_search_steps(&self) -> f64 {
+        2.0 * (self.fmt.nm as f64 + 2.0)
+    }
+
+    pub fn mul_rw_steps(&self) -> f64 {
+        let nm = self.fmt.nm as f64;
+        let ne = self.fmt.ne as f64;
+        2.0 * nm * nm + 6.5 * nm + 6.0 * ne + 3.0
+    }
+
+    // ---- latency (seconds) ----
+
+    /// `T_add` split by component.
+    pub fn t_add_breakdown(&self) -> CostBreakdown {
+        CostBreakdown {
+            read: self.add_read_steps() * self.costs.t_read,
+            write: self.add_write_steps() * self.costs.t_write,
+            search: self.add_search_steps() * self.costs.t_search,
+        }
+    }
+
+    pub fn t_add(&self) -> f64 {
+        self.t_add_breakdown().total()
+    }
+
+    /// `T_mul` split by component (the multiply has no search phase).
+    pub fn t_mul_breakdown(&self) -> CostBreakdown {
+        let steps = self.mul_rw_steps();
+        CostBreakdown {
+            read: steps * self.costs.t_read,
+            write: steps * self.costs.t_write,
+            search: 0.0,
+        }
+    }
+
+    pub fn t_mul(&self) -> f64 {
+        self.t_mul_breakdown().total()
+    }
+
+    /// MAC latency = multiply + accumulate-add.
+    pub fn t_mac(&self) -> f64 {
+        self.t_mul() + self.t_add()
+    }
+
+    pub fn t_mac_breakdown(&self) -> CostBreakdown {
+        let m = self.t_mul_breakdown();
+        let a = self.t_add_breakdown();
+        CostBreakdown {
+            read: m.read + a.read,
+            write: m.write + a.write,
+            search: m.search + a.search,
+        }
+    }
+
+    // ---- energy (joules) ----
+
+    pub fn e_add_breakdown(&self) -> CostBreakdown {
+        let ne = self.fmt.ne as f64;
+        let nm = self.fmt.nm as f64;
+        CostBreakdown {
+            read: (1.0 + 14.0 * ne + 12.0 * nm) * self.costs.e_read,
+            write: (14.0 * ne + 12.0 * nm) * self.costs.e_write,
+            search: 2.0 * (nm + 2.0) * self.costs.e_search,
+        }
+    }
+
+    pub fn e_add(&self) -> f64 {
+        self.e_add_breakdown().total()
+    }
+
+    pub fn e_mul_breakdown(&self) -> CostBreakdown {
+        let ne = self.fmt.ne as f64;
+        let nm = self.fmt.nm as f64;
+        let units = 4.5 * nm * nm + 11.5 * nm + 13.5 * ne + 6.5;
+        CostBreakdown {
+            read: units * self.costs.e_read,
+            write: units * self.costs.e_write,
+            search: 0.0,
+        }
+    }
+
+    pub fn e_mul(&self) -> f64 {
+        self.e_mul_breakdown().total()
+    }
+
+    pub fn e_mac(&self) -> f64 {
+        self.e_mul() + self.e_add()
+    }
+
+    pub fn e_mac_breakdown(&self) -> CostBreakdown {
+        let m = self.e_mul_breakdown();
+        let a = self.e_add_breakdown();
+        CostBreakdown {
+            read: m.read + a.read,
+            write: m.write + a.write,
+            search: m.search + a.search,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unit_costs() -> OpCosts {
+        OpCosts {
+            t_read: 1.0,
+            e_read: 1.0,
+            t_write: 1.0,
+            e_write: 1.0,
+            t_search: 1.0,
+            e_search: 1.0,
+        }
+    }
+
+    #[test]
+    fn equation_coefficients_fp32() {
+        // Spot-check the §3.3 equations at Ne=8, Nm=23 with unit costs.
+        let m = FpCostModel::new(unit_costs(), FloatFormat::FP32);
+        assert_eq!(m.add_read_steps(), 1.0 + 56.0 + 161.0); // 218
+        assert_eq!(m.add_write_steps(), 217.0);
+        assert_eq!(m.add_search_steps(), 50.0);
+        assert_eq!(m.mul_rw_steps(), 2.0 * 529.0 + 149.5 + 48.0 + 3.0); // 1258.5
+        assert_eq!(m.t_add(), 218.0 + 217.0 + 50.0);
+        assert_eq!(m.t_mul(), 2.0 * 1258.5);
+        let e_add = (1.0 + 112.0 + 276.0) + (112.0 + 276.0) + 50.0;
+        assert!((m.e_add() - e_add).abs() < 1e-9);
+        let e_mul = 2.0 * (4.5 * 529.0 + 264.5 + 108.0 + 6.5);
+        assert!((m.e_mul() - e_mul).abs() < 1e-9);
+    }
+
+    #[test]
+    fn alignment_is_linear_in_nm() {
+        // §3.3: exponent alignment latency/energy is O(Nm), visible as the
+        // search component growing linearly.
+        let m1 = FpCostModel::new(unit_costs(), FloatFormat { ne: 8, nm: 10 });
+        let m2 = FpCostModel::new(unit_costs(), FloatFormat { ne: 8, nm: 20 });
+        let m4 = FpCostModel::new(unit_costs(), FloatFormat { ne: 8, nm: 40 });
+        let d1 = m2.add_search_steps() - m1.add_search_steps();
+        let d2 = m4.add_search_steps() - m2.add_search_steps();
+        assert!((d2 / d1 - 2.0).abs() < 1e-9, "linear growth");
+    }
+
+    #[test]
+    fn mul_is_quadratic_in_nm() {
+        let f = |nm| {
+            FpCostModel::new(unit_costs(), FloatFormat { ne: 8, nm }).mul_rw_steps()
+        };
+        // second difference of a quadratic is constant = 2a = 4
+        let dd1 = f(12) - 2.0 * f(11) + f(10);
+        let dd2 = f(40) - 2.0 * f(39) + f(38);
+        assert_eq!(dd1, dd2);
+        assert_eq!(dd1, 4.0);
+    }
+
+    #[test]
+    fn breakdown_sums_to_total() {
+        let m = FpCostModel::proposed_fp32();
+        let b = m.t_mac_breakdown();
+        assert!((b.total() - m.t_mac()).abs() < 1e-18);
+        let e = m.e_mac_breakdown();
+        assert!((e.total() - m.e_mac()).abs() < 1e-24);
+    }
+
+    #[test]
+    fn fp16_cheaper_than_fp32() {
+        let c = OpCosts::proposed_default();
+        let f32m = FpCostModel::new(c, FloatFormat::FP32);
+        let f16m = FpCostModel::new(c, FloatFormat::FP16);
+        assert!(f16m.t_mac() < f32m.t_mac() / 2.0);
+        assert!(f16m.e_mac() < f32m.e_mac() / 2.0);
+    }
+
+    #[test]
+    fn write_latency_dominates_mac() {
+        // §4.2 / Fig. 5: cell-switch (write) latency dominates.
+        let m = FpCostModel::proposed_fp32();
+        let b = m.t_mac_breakdown();
+        assert!(b.write > b.read);
+        assert!(b.write / b.total() > 0.5);
+    }
+}

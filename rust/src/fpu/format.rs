@@ -1,0 +1,47 @@
+//! Floating-point formats parameterised as the paper's (Ne, Nm).
+
+/// A binary floating-point format with `ne` exponent bits and `nm` stored
+/// mantissa bits (the paper's N_e / N_m in the §3.3 cost equations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FloatFormat {
+    pub ne: u32,
+    pub nm: u32,
+}
+
+impl FloatFormat {
+    /// IEEE-754 binary32 — the precision DNN training uses (§4.1).
+    pub const FP32: FloatFormat = FloatFormat { ne: 8, nm: 23 };
+    /// IEEE-754 binary16.
+    pub const FP16: FloatFormat = FloatFormat { ne: 5, nm: 10 };
+    /// bfloat16.
+    pub const BF16: FloatFormat = FloatFormat { ne: 8, nm: 7 };
+
+    /// Total storage bits (1 sign + ne + nm).
+    pub fn bits(&self) -> u32 {
+        1 + self.ne + self.nm
+    }
+
+    /// Exponent bias.
+    pub fn bias(&self) -> i32 {
+        (1 << (self.ne - 1)) - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fp32_is_ieee_binary32() {
+        assert_eq!(FloatFormat::FP32.bits(), 32);
+        assert_eq!(FloatFormat::FP32.bias(), 127);
+    }
+
+    #[test]
+    fn fp16_and_bf16() {
+        assert_eq!(FloatFormat::FP16.bits(), 16);
+        assert_eq!(FloatFormat::FP16.bias(), 15);
+        assert_eq!(FloatFormat::BF16.bits(), 16);
+        assert_eq!(FloatFormat::BF16.bias(), 127);
+    }
+}

@@ -1,0 +1,289 @@
+//! Format-generic PIM floating point: the §3.3 procedures parameterised
+//! over (Ne, Nm), supporting the fp16/bf16 configurations the cost model
+//! sweeps (the accelerator's multi-precision story).
+//!
+//! Semantics match [`crate::fpu::softfloat`]: RNE, FTZ, canonical NaN,
+//! signed-zero flush, subnormal-boundary rounding.  At (Ne=8, Nm=23)
+//! this code path is cross-checked bit-for-bit against the fp32
+//! implementation (which itself is certified against host IEEE), so the
+//! narrower formats inherit a strongly-tested algorithm.
+
+use crate::fpu::format::FloatFormat;
+
+/// Working view of an operand: sign, biased exponent, significand with
+/// the implied bit materialised (0 for FTZ-zero).
+#[derive(Debug, Clone, Copy)]
+struct Unpacked {
+    sign: u64,
+    exp: i64,
+    mant: u64,
+    is_nan: bool,
+    is_inf: bool,
+    is_zero: bool,
+}
+
+fn unpack(bits: u64, f: FloatFormat) -> Unpacked {
+    let frac_mask = (1u64 << f.nm) - 1;
+    let exp_mask = (1u64 << f.ne) - 1;
+    let sign = (bits >> (f.ne + f.nm)) & 1;
+    let exp = ((bits >> f.nm) & exp_mask) as i64;
+    let frac = bits & frac_mask;
+    let max_exp = exp_mask as i64;
+    Unpacked {
+        sign,
+        exp,
+        mant: if exp == 0 { 0 } else { frac | (1 << f.nm) },
+        is_nan: exp == max_exp && frac != 0,
+        is_inf: exp == max_exp && frac == 0,
+        is_zero: exp == 0, // FTZ
+    }
+}
+
+fn qnan(f: FloatFormat) -> u64 {
+    let exp_mask = (1u64 << f.ne) - 1;
+    (exp_mask << f.nm) | (1 << (f.nm - 1))
+}
+
+fn inf(sign: u64, f: FloatFormat) -> u64 {
+    let exp_mask = (1u64 << f.ne) - 1;
+    (sign << (f.ne + f.nm)) | (exp_mask << f.nm)
+}
+
+fn zero(sign: u64, f: FloatFormat) -> u64 {
+    sign << (f.ne + f.nm)
+}
+
+fn pack(sign: u64, exp: i64, mant: u64, f: FloatFormat) -> u64 {
+    let frac_mask = (1u64 << f.nm) - 1;
+    (sign << (f.ne + f.nm)) | ((exp as u64) << f.nm) | (mant & frac_mask)
+}
+
+/// Format-generic multiply (shift-and-add mantissa product).
+pub fn mul_bits(abits: u64, bbits: u64, f: FloatFormat) -> u64 {
+    let a = unpack(abits, f);
+    let b = unpack(bbits, f);
+    let max_exp = ((1u64 << f.ne) - 1) as i64;
+    let sign = a.sign ^ b.sign;
+
+    if a.is_nan || b.is_nan || (a.is_inf && b.is_zero) || (b.is_inf && a.is_zero) {
+        return qnan(f);
+    }
+    if a.is_inf || b.is_inf {
+        return inf(sign, f);
+    }
+    if a.is_zero || b.is_zero {
+        return zero(sign, f);
+    }
+
+    // Shift-and-add product of two (Nm+1)-bit significands.
+    let mut p: u64 = 0;
+    for i in 0..=f.nm {
+        if (b.mant >> i) & 1 == 1 {
+            p += a.mant << i;
+        }
+    }
+
+    let top_bit = 2 * f.nm + 1;
+    let top_set = (p >> top_bit) & 1;
+    let s = f.nm + top_set as u32;
+    let sig_mask = (1u64 << (f.nm + 1)) - 1;
+    let mant_preround = (p >> s) & sig_mask;
+    let guard = (p >> (s - 1)) & 1;
+    let sticky = p & ((1u64 << (s - 1)) - 1) != 0;
+
+    let round_up = guard == 1 && (sticky || mant_preround & 1 == 1);
+    let mut mant = mant_preround + round_up as u64;
+    let e0 = a.exp + b.exp - f.bias() as i64 + top_set as i64;
+    let mut e = e0;
+    if mant == 1 << (f.nm + 1) {
+        mant >>= 1;
+        e += 1;
+    }
+
+    if e >= max_exp {
+        return inf(sign, f);
+    }
+    if e <= 0 {
+        if e0 == 0 && mant_preround == sig_mask {
+            return pack(sign, 1, 1 << f.nm, f); // min normal
+        }
+        return zero(sign, f);
+    }
+    pack(sign, e, mant, f)
+}
+
+/// Format-generic add (search-aligned mantissa addition).
+pub fn add_bits(abits: u64, bbits: u64, f: FloatFormat) -> u64 {
+    let a = unpack(abits, f);
+    let b = unpack(bbits, f);
+    let max_exp = ((1u64 << f.ne) - 1) as i64;
+
+    if a.is_nan || b.is_nan || (a.is_inf && b.is_inf && a.sign != b.sign) {
+        return qnan(f);
+    }
+    if a.is_inf {
+        return abits;
+    }
+    if b.is_inf {
+        return bbits;
+    }
+    if a.is_zero && b.is_zero {
+        return zero(a.sign & b.sign, f);
+    }
+    if a.is_zero {
+        return bbits;
+    }
+    if b.is_zero {
+        return abits;
+    }
+
+    let mag_mask = (1u64 << (f.ne + f.nm)) - 1;
+    let (x, xb, y) = if (abits & mag_mask) >= (bbits & mag_mask) {
+        (a, abits, b)
+    } else {
+        (b, bbits, a)
+    };
+    let _ = xb;
+
+    let grs_top = f.nm + 4; // implied bit position after <<3, +1 for carry
+    let mx = x.mant << 3;
+    let my = y.mant << 3;
+    let d = ((x.exp - y.exp) as u64).min(grs_top as u64);
+    let lost = my & ((1u64 << d) - 1);
+    let my_al = (my >> d) | (lost != 0) as u64;
+
+    let subtract = x.sign != y.sign;
+    let total = if subtract { mx - my_al } else { mx + my_al };
+    if total == 0 {
+        return zero(0, f);
+    }
+
+    let target = f.nm + 3; // implied-bit position in the GRS-extended field
+    let p = 63 - total.leading_zeros() as i64;
+    let (total_n, e0) = if p == target as i64 + 1 {
+        ((total >> 1) | (total & 1), x.exp + 1)
+    } else {
+        let shl = target as i64 - p;
+        (total << shl, x.exp - shl)
+    };
+
+    let kept_preround = total_n >> 3;
+    let rb = (total_n >> 2) & 1;
+    let st = total_n & 3 != 0;
+    let round_up = rb == 1 && (st || kept_preround & 1 == 1);
+    let mut kept = kept_preround + round_up as u64;
+    let mut e = e0;
+    if kept == 1 << (f.nm + 1) {
+        kept >>= 1;
+        e += 1;
+    }
+
+    if e >= max_exp {
+        return inf(x.sign, f);
+    }
+    if e <= 0 {
+        let sig_mask = (1u64 << (f.nm + 1)) - 1;
+        if e0 == 0 && kept_preround == sig_mask {
+            return pack(x.sign, 1, 1 << f.nm, f);
+        }
+        return zero(x.sign, f);
+    }
+    pack(x.sign, e, kept, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpu::softfloat;
+    use crate::prop::Rng;
+
+    const FP32: FloatFormat = FloatFormat::FP32;
+    const FP16: FloatFormat = FloatFormat::FP16;
+    const BF16: FloatFormat = FloatFormat::BF16;
+
+    /// At fp32 the generic path must agree bit-for-bit with the
+    /// certified fp32 implementation, on arbitrary bit patterns.
+    #[test]
+    fn fp32_matches_certified_softfloat() {
+        let mut rng = Rng::new(0x6E9E41C);
+        for _ in 0..200_000 {
+            let a = rng.next_u32();
+            let b = rng.next_u32();
+            let got_m = mul_bits(a as u64, b as u64, FP32) as u32;
+            let want_m = softfloat::pim_mul_bits(a, b);
+            let nan = |x: u32| (x & 0x7F80_0000) == 0x7F80_0000 && (x & 0x7F_FFFF) != 0;
+            assert!(
+                got_m == want_m || (nan(got_m) && nan(want_m)),
+                "mul {a:#x},{b:#x}: {got_m:#x} vs {want_m:#x}"
+            );
+            let got_a = add_bits(a as u64, b as u64, FP32) as u32;
+            let want_a = softfloat::pim_add_bits(a, b);
+            assert!(
+                got_a == want_a || (nan(got_a) && nan(want_a)),
+                "add {a:#x},{b:#x}: {got_a:#x} vs {want_a:#x}"
+            );
+        }
+    }
+
+    /// fp16 sanity: known exact values.
+    #[test]
+    fn fp16_known_values() {
+        // 1.0 = 0x3C00, 2.0 = 0x4000, 1.5 = 0x3E00, 3.0 = 0x4200
+        assert_eq!(mul_bits(0x3C00, 0x4000, FP16), 0x4000); // 1*2
+        assert_eq!(mul_bits(0x3E00, 0x4000, FP16), 0x4200); // 1.5*2
+        assert_eq!(add_bits(0x3C00, 0x3C00, FP16), 0x4000); // 1+1
+        assert_eq!(add_bits(0x4000, 0xC000, FP16), 0x0000); // 2-2 = +0
+        // overflow: 60000 * 2 -> inf (max fp16 ~ 65504)
+        let big = 0x7B00u64; // 57344
+        assert_eq!(mul_bits(big, 0x4000, FP16), 0x7C00);
+    }
+
+    /// bf16 sanity: bf16 is fp32's top 16 bits; products of
+    /// exactly-representable values match truncated fp32 results.
+    #[test]
+    fn bf16_known_values() {
+        // 1.0 = 0x3F80, 2.0 = 0x4000, 3.0 = 0x4040
+        assert_eq!(mul_bits(0x3F80, 0x4000, BF16), 0x4000);
+        assert_eq!(add_bits(0x3F80, 0x4000, BF16), 0x4040);
+        assert_eq!(mul_bits(0x4040, 0x4040, BF16), 0x4110); // 9.0
+    }
+
+    /// Structural properties at every format: commutativity, identity,
+    /// zero/NaN/inf handling.
+    #[test]
+    fn structural_properties_all_formats() {
+        for f in [FP32, FP16, BF16] {
+            let one = pack(0, f.bias() as i64, 1 << f.nm, f);
+            let mut rng = Rng::new(0xF0F0 + f.nm as u64);
+            let width = 1 + f.ne + f.nm;
+            for _ in 0..20_000 {
+                let a = rng.next_u64() & ((1 << width) - 1);
+                let b = rng.next_u64() & ((1 << width) - 1);
+                assert_eq!(mul_bits(a, b, f), mul_bits(b, a, f), "mul comm");
+                assert_eq!(add_bits(a, b, f), add_bits(b, a, f), "add comm");
+                // x * 1 == ftz(x) for non-special x
+                let ua = unpack(a, f);
+                if !ua.is_nan && !ua.is_inf {
+                    let want = if ua.is_zero { zero(ua.sign, f) } else { a };
+                    assert_eq!(mul_bits(a, one, f), want, "x*1, x={a:#x} ne={}", f.ne);
+                }
+            }
+            // NaN propagates
+            assert_eq!(mul_bits(qnan(f), one, f), qnan(f));
+            // inf - inf = NaN
+            assert_eq!(add_bits(inf(0, f), inf(1, f), f), qnan(f));
+        }
+    }
+
+    /// Narrow-format rounding: fp16 1 + smallest-normal rounds away.
+    #[test]
+    fn fp16_sticky_rounding() {
+        // 1.0 + 2^-11 (exactly half an fp16 ulp of 1.0): ties-to-even -> 1.0
+        let one = 0x3C00u64;
+        let half_ulp = pack(0, (15 - 11) as i64, 1 << 10, FP16); // 2^-11
+        assert_eq!(add_bits(one, half_ulp, FP16), one, "tie to even");
+        // 1.0 + 2^-10 = next representable
+        let ulp = pack(0, (15 - 10) as i64, 1 << 10, FP16);
+        assert_eq!(add_bits(one, ulp, FP16), 0x3C01);
+    }
+}

@@ -1,0 +1,20 @@
+//! The paper's floating-point computation layer (§3.3).
+//!
+//! * [`softfloat`] — bit-exact software model of the PIM fp32 add/mul
+//!   semantics (IEEE-754 RNE with flush-to-zero): the functional gold
+//!   reference, identical to the Pallas `pim_mac` kernel.
+//! * [`procedure`] — the same operations executed step-by-step on a
+//!   simulated [`crate::sim::Subarray`], with every read/write/search
+//!   priced in the ledger.
+//! * [`cost`] — the paper's closed-form latency/energy equations.
+//! * [`format`] — floating-point formats (fp32/fp16/bf16) as (Ne, Nm).
+
+pub mod cost;
+pub mod format;
+pub mod generic;
+pub mod procedure;
+pub mod softfloat;
+
+pub use cost::{CostBreakdown, FpCostModel};
+pub use format::FloatFormat;
+pub use softfloat::{pim_add_bits, pim_add_f32, pim_mul_bits, pim_mul_f32};

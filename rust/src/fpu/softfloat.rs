@@ -1,0 +1,354 @@
+//! Bit-exact software model of the PIM fp32 semantics.
+//!
+//! Semantics (shared with the Pallas `pim_mac` kernel, certified
+//! bit-identical by `rust/tests/runtime_artifacts.rs`):
+//!
+//! * IEEE-754 binary32 round-to-nearest-even;
+//! * **flush-to-zero**: subnormal inputs are treated as (signed) zero,
+//!   subnormal results flush to (signed) zero — the digital-PIM
+//!   convention, since gradual underflow would need per-row variable
+//!   renormalisation loops;
+//! * the subnormal→normal rounding boundary is honoured: values that
+//!   IEEE gradual underflow would round *up* to the smallest normal
+//!   (anything ≥ 2⁻¹²⁶ − 2⁻¹⁵⁰) produce that normal, so results match
+//!   "host IEEE op, then flush subnormal outputs" bit-for-bit;
+//! * NaNs are canonicalised to `0x7FC0_0000`.
+
+const QNAN: u32 = 0x7FC0_0000;
+const INF: u32 = 0x7F80_0000;
+const MIN_NORMAL_MANT: u32 = 0x0080_0000;
+
+#[inline]
+fn fields(bits: u32) -> (u32, i32, u32) {
+    ((bits >> 31), ((bits >> 23) & 0xFF) as i32, bits & 0x7F_FFFF)
+}
+
+/// fp32 multiply on raw bits via the paper's shift-and-add procedure
+/// (Fig. 4b), with RNE + FTZ semantics.
+pub fn pim_mul_bits(abits: u32, bbits: u32) -> u32 {
+    let (sa, ea, fa) = fields(abits);
+    let (sb, eb, fb) = fields(bbits);
+
+    let a_nan = ea == 255 && fa != 0;
+    let b_nan = eb == 255 && fb != 0;
+    let a_inf = ea == 255 && fa == 0;
+    let b_inf = eb == 255 && fb == 0;
+    let a_zero = ea == 0; // FTZ
+    let b_zero = eb == 0;
+
+    let sign = (sa ^ sb) << 31;
+    if a_nan || b_nan || (a_inf && b_zero) || (b_inf && a_zero) {
+        return QNAN;
+    }
+    if a_inf || b_inf {
+        return sign | INF;
+    }
+    if a_zero || b_zero {
+        return sign;
+    }
+
+    let ma = (fa | MIN_NORMAL_MANT) as u64; // 24-bit significand
+    let mb = (fb | MIN_NORMAL_MANT) as u64;
+
+    // Shift-and-add mantissa product: the multiplicand ANDed with one
+    // multiplier bit, shifted, accumulated — exactly the array procedure,
+    // collapsed into u64 arithmetic (the per-step ledger accounting lives
+    // in `procedure.rs`).
+    let mut p: u64 = 0;
+    for i in 0..24 {
+        if (mb >> i) & 1 == 1 {
+            p += ma << i;
+        }
+    }
+    debug_assert_eq!(p, ma * mb);
+
+    // Normalise: product of two [2^23, 2^24) values is in [2^46, 2^48).
+    let top_set = (p >> 47) & 1;
+    let s = 23 + top_set as u32; // bits to drop below the 24-bit significand
+    let mant_preround = ((p >> s) & 0xFF_FFFF) as u32;
+    let guard = ((p >> (s - 1)) & 1) as u32;
+    let sticky = (p & ((1u64 << (s - 1)) - 1)) != 0;
+
+    let round_up = guard == 1 && (sticky || mant_preround & 1 == 1);
+    let mut mant = mant_preround + round_up as u32;
+    let mut e = ea + eb - 127 + top_set as i32;
+    let e0 = e;
+    if mant == 1 << 24 {
+        mant >>= 1;
+        e += 1;
+    }
+
+    if e >= 255 {
+        return sign | INF;
+    }
+    if e <= 0 {
+        // Subnormal range: IEEE gradual underflow rounds an all-ones
+        // pre-round significand at e0 == 0 up to min-normal; all else
+        // flushes (FTZ).
+        if e0 == 0 && mant_preround == 0xFF_FFFF {
+            return sign | MIN_NORMAL_MANT;
+        }
+        return sign;
+    }
+    sign | ((e as u32) << 23) | (mant & 0x7F_FFFF)
+}
+
+/// fp32 add on raw bits via search-aligned mantissa addition (§3.3),
+/// with RNE + FTZ semantics.
+pub fn pim_add_bits(abits: u32, bbits: u32) -> u32 {
+    let (sa, ea, fa) = fields(abits);
+    let (sb, eb, fb) = fields(bbits);
+
+    let a_nan = ea == 255 && fa != 0;
+    let b_nan = eb == 255 && fb != 0;
+    let a_inf = ea == 255 && fa == 0;
+    let b_inf = eb == 255 && fb == 0;
+    let a_zero = ea == 0; // FTZ
+    let b_zero = eb == 0;
+
+    if a_nan || b_nan || (a_inf && b_inf && sa != sb) {
+        return QNAN;
+    }
+    if a_inf {
+        return abits;
+    }
+    if b_inf {
+        return bbits;
+    }
+    if a_zero && b_zero {
+        // +0 under RNE unless both are -0.
+        return (sa & sb) << 31;
+    }
+    if a_zero {
+        return bbits;
+    }
+    if b_zero {
+        return abits;
+    }
+
+    // Order by magnitude (|x| >= |y|): integer order of the low 31 bits.
+    let (xbits, ybits) = if (abits & 0x7FFF_FFFF) >= (bbits & 0x7FFF_FFFF) {
+        (abits, bbits)
+    } else {
+        (bbits, abits)
+    };
+    let (sx, ex, fx) = fields(xbits);
+    let (sy, ey, fy) = fields(ybits);
+
+    let mx = ((fx | MIN_NORMAL_MANT) << 3) as u32; // 27 bits: +G,R,S
+    let my = (fy | MIN_NORMAL_MANT) << 3;
+
+    // Exponent alignment: ONE shift of d bits (the search result).
+    let d = (ex - ey).min(27) as u32;
+    let lost = my & ((1u32 << d) - 1).wrapping_add(0);
+    let my_al = (my >> d) | (lost != 0) as u32; // fold sticky into bit 0
+
+    let subtract = sx != sy;
+    let total: u32 = if subtract { mx - my_al } else { mx + my_al };
+
+    if total == 0 {
+        return 0; // exact cancellation: +0 under RNE
+    }
+
+    // Renormalise: implied-bit target position is 26.
+    let p = 31 - total.leading_zeros();
+    let (total_n, e0) = if p == 27 {
+        ((total >> 1) | (total & 1), ex + 1)
+    } else {
+        (total << (26 - p), ex - (26 - p) as i32)
+    };
+
+    let kept_preround = total_n >> 3;
+    let rb = (total_n >> 2) & 1;
+    let st = (total_n & 3) != 0;
+    let round_up = rb == 1 && (st || kept_preround & 1 == 1);
+    let mut kept = kept_preround + round_up as u32;
+    let mut e = e0;
+    if kept == 1 << 24 {
+        kept >>= 1;
+        e += 1;
+    }
+
+    let sign = sx << 31;
+    if e >= 255 {
+        return sign | INF;
+    }
+    if e <= 0 {
+        // Same subnormal-boundary rule as multiply.
+        if e0 == 0 && kept_preround == 0xFF_FFFF {
+            return sign | MIN_NORMAL_MANT;
+        }
+        return sign;
+    }
+    sign | ((e as u32) << 23) | (kept & 0x7F_FFFF)
+}
+
+/// f32 wrapper over [`pim_mul_bits`].
+pub fn pim_mul_f32(a: f32, b: f32) -> f32 {
+    f32::from_bits(pim_mul_bits(a.to_bits(), b.to_bits()))
+}
+
+/// f32 wrapper over [`pim_add_bits`].
+pub fn pim_add_f32(a: f32, b: f32) -> f32 {
+    f32::from_bits(pim_add_bits(a.to_bits(), b.to_bits()))
+}
+
+/// Non-fused PIM MAC: `round(round(a*b) + c)` — two array passes.
+pub fn pim_mac_f32(a: f32, b: f32, c: f32) -> f32 {
+    pim_add_f32(pim_mul_f32(a, b), c)
+}
+
+/// Flush subnormals of a host float to signed zero (the FTZ the oracle
+/// applies to inputs/outputs when comparing against host IEEE).
+pub fn ftz(x: f32) -> f32 {
+    let bits = x.to_bits();
+    if bits & 0x7F80_0000 == 0 {
+        f32::from_bits(bits & 0x8000_0000)
+    } else {
+        x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn host_mul(a: f32, b: f32) -> f32 {
+        ftz(ftz(a) * ftz(b))
+    }
+
+    fn host_add(a: f32, b: f32) -> f32 {
+        ftz(ftz(a) + ftz(b))
+    }
+
+    fn assert_bits(got: f32, want: f32, ctx: &str) {
+        let ok = got.to_bits() == want.to_bits() || (got.is_nan() && want.is_nan());
+        assert!(
+            ok,
+            "{ctx}: got {got:?} ({:#010x}) want {want:?} ({:#010x})",
+            got.to_bits(),
+            want.to_bits()
+        );
+    }
+
+    const EDGE: &[f32] = &[
+        0.0,
+        -0.0,
+        1.0,
+        -1.0,
+        2.0,
+        0.5,
+        1.5,
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        f32::NAN,
+        f32::MAX,
+        f32::MIN,
+        f32::MIN_POSITIVE,        // min normal
+        2.3509887e-38,            // 2x min normal
+        1e-40,                    // subnormal
+        -1e-40,
+        1.000_000_1,
+        0.999_999_94,
+        16_777_216.0,
+        16_777_215.0,
+        std::f32::consts::PI,
+        1.0 / 3.0,
+        -1.0 / 3.0,
+    ];
+
+    #[test]
+    fn mul_edge_grid_bit_exact() {
+        for &a in EDGE {
+            for &b in EDGE {
+                assert_bits(pim_mul_f32(a, b), host_mul(a, b), &format!("{a}*{b}"));
+            }
+        }
+    }
+
+    #[test]
+    fn add_edge_grid_bit_exact() {
+        for &a in EDGE {
+            for &b in EDGE {
+                assert_bits(pim_add_f32(a, b), host_add(a, b), &format!("{a}+{b}"));
+            }
+        }
+    }
+
+    #[test]
+    fn mul_random_bit_exact() {
+        let mut state = 0x1234_5678_9ABC_DEF0u64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        for _ in 0..200_000 {
+            let a = f32::from_bits(next() as u32);
+            let b = f32::from_bits(next() as u32);
+            assert_bits(pim_mul_f32(a, b), host_mul(a, b), &format!("{a}*{b}"));
+        }
+    }
+
+    #[test]
+    fn add_random_bit_exact() {
+        let mut state = 0xDEAD_BEEF_0BAD_F00Du64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        for _ in 0..200_000 {
+            let a = f32::from_bits(next() as u32);
+            let b = f32::from_bits(next() as u32);
+            assert_bits(pim_add_f32(a, b), host_add(a, b), &format!("{a}+{b}"));
+        }
+    }
+
+    #[test]
+    fn subnormal_boundary_rounds_to_min_normal() {
+        // 0.99999994 * MIN_POSITIVE: ties at the subnormal/normal boundary
+        // and must round UP to the min normal, as host IEEE does.
+        let a = 0.999_999_94_f32;
+        let b = f32::MIN_POSITIVE;
+        assert_bits(pim_mul_f32(a, b), host_mul(a, b), "boundary");
+        assert_eq!(pim_mul_f32(a, b), f32::MIN_POSITIVE);
+    }
+
+    #[test]
+    fn mac_is_two_roundings() {
+        let (a, b, c) = (1.000_000_1f32, 3.000_000_2f32, -3.0f32);
+        assert_bits(
+            pim_mac_f32(a, b, c),
+            host_add(host_mul(a, b), c),
+            "mac",
+        );
+    }
+
+    #[test]
+    fn commutativity() {
+        let mut state = 42u64;
+        let mut next = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+            (state >> 16) as u32
+        };
+        for _ in 0..10_000 {
+            let a = f32::from_bits(next());
+            let b = f32::from_bits(next());
+            let ab = pim_add_f32(a, b);
+            let ba = pim_add_f32(b, a);
+            assert!(
+                ab.to_bits() == ba.to_bits() || (ab.is_nan() && ba.is_nan()),
+                "{a}+{b}"
+            );
+            let m1 = pim_mul_f32(a, b);
+            let m2 = pim_mul_f32(b, a);
+            assert!(
+                m1.to_bits() == m2.to_bits() || (m1.is_nan() && m2.is_nan()),
+                "{a}*{b}"
+            );
+        }
+    }
+}

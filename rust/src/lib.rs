@@ -1,0 +1,70 @@
+//! # mram-pim
+//!
+//! A reproduction of *"A New MRAM-based Process In-Memory Accelerator for
+//! Efficient Neural Network Training with Floating Point Precision"*
+//! (Wang, Zhao, Li, Wang, Lin — Rice University, 2020).
+//!
+//! The crate implements the full stack the paper evaluates:
+//!
+//! * [`device`] — SOT-MRAM MTJ device model with the stateful AND/OR/XOR
+//!   write-path logic of Fig. 1, and the three cell designs of Fig. 2
+//!   (the proposed 1T-1R, the 2T-1R and single-MTJ baselines).
+//! * [`sim`] — a bit-accurate 1024×1024 subarray simulator with an
+//!   energy/latency ledger attached to every read, write and search.
+//! * [`logic`] — the proposed 4-step / 4-cell full-adder (Fig. 3) and the
+//!   multi-bit structures built from it.
+//! * [`fpu`] — the paper's floating-point add (search-based exponent
+//!   alignment, §3.3) and multiply (shift-and-add, Fig. 4b) procedures,
+//!   both as bit-exact software models and as step-level subarray
+//!   programs, plus the analytic latency/energy equations.
+//! * [`nvsim`] — a compact NVSim-style circuit model deriving per-op
+//!   read/write/search costs and array area from Table 1 cell parameters.
+//! * [`floatpim`] — the FloatPIM (ISCA'19) baseline: NOR-only 13-step FA,
+//!   bit-serial O(Nm²) exponent alignment, row-parallel multiply with
+//!   intermediate-write traffic, and its cost model.
+//! * [`arch`] — the accelerator: tiles, the DNN-layer→subarray mapper and
+//!   the training-phase scheduler.
+//! * [`model`] / [`data`] — the LeNet-5 workload of §4 and a synthetic
+//!   MNIST-like corpus (see DESIGN.md for the substitution rationale).
+//! * [`runtime`] — the PJRT runtime that loads the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) and executes real training steps.
+//! * [`coordinator`] — the leader that drives functional training and the
+//!   cost simulation together and emits the paper's tables/figures.
+//!
+//! Supporting substrates: [`config`], [`cli`], [`metrics`], [`report`],
+//! [`prop`] (property-test engine) and [`bench`] (micro-bench harness).
+
+pub mod arch;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod device;
+pub mod floatpim;
+pub mod fpu;
+pub mod logic;
+pub mod metrics;
+pub mod model;
+pub mod nvsim;
+pub mod prop;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("configuration error: {0}")]
+    Config(String),
+    #[error("simulation error: {0}")]
+    Sim(String),
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("xla error: {0}")]
+    Xla(#[from] xla::Error),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,195 @@
+//! Multi-bit ripple structures built from the 4-step FA.
+//!
+//! A `k`-bit addition chains `k` FA invocations, reusing the same four
+//! cache columns (§3.2: "The MRAM cache can be reused in sequential 1-bit
+//! full additions for multi-bit additions").  All rows add in parallel.
+
+use crate::device::LogicOp;
+use crate::logic::fa::{FaLayout, ProposedFa};
+use crate::sim::Subarray;
+
+/// Row-parallel multi-bit adder/subtractor over column fields.
+///
+/// Fields are little-endian: column `start + i` holds bit `i`.
+pub struct RippleAdder {
+    /// Four scratch columns shared by every FA in the chain.
+    pub cache: [usize; 4],
+    /// Carry chain column (carry-in/out between bit positions).
+    pub carry: usize,
+    /// Second carry staging column.
+    pub carry2: usize,
+}
+
+impl RippleAdder {
+    /// `dst := x + y` over `width`-bit fields (plus carry into
+    /// `self.carry`).  `x` is preserved; `y` is preserved; `dst` receives
+    /// the sum bits.  Cost: one carry-clear write + `width` FAs.
+    ///
+    /// `dst` may alias `y` (in-place accumulate), which is how the
+    /// multiplier's Fig. 4b role-swapping accumulator uses it.
+    pub fn add(
+        &self,
+        sub: &mut Subarray,
+        x_start: usize,
+        y_start: usize,
+        dst_start: usize,
+        width: usize,
+    ) {
+        sub.const_col(self.carry, false);
+        for i in 0..width {
+            // Move y bit into the sum position if dst is a separate field.
+            if dst_start != y_start {
+                sub.copy_col(y_start + i, dst_start + i);
+            }
+            // FA with x = x_i, y = carry, z = dst_i: the sum S lands
+            // in-place in the dst column and the carry chains on.
+            let layout = FaLayout {
+                x: x_start + i,
+                y: self.carry,
+                z: dst_start + i,
+                cache: self.cache,
+                z_out: self.carry2,
+            };
+            ProposedFa::execute(sub, &layout);
+            // New carry becomes carry-in of the next bit.
+            sub.copy_col(self.carry2, self.carry);
+        }
+    }
+
+    /// `dst := x - y` (two's complement: x + !y + 1) over `width`-bit
+    /// fields.  After the call `self.carry` holds the **no-borrow** flag
+    /// (1 ⇔ x ≥ y).  `x` and `y` are preserved.
+    pub fn sub(
+        &self,
+        sub: &mut Subarray,
+        x_start: usize,
+        y_start: usize,
+        dst_start: usize,
+        width: usize,
+        ones_col: usize,
+    ) {
+        sub.const_col(self.carry, true); // +1 of the two's complement
+        for i in 0..width {
+            // dst_i := !y_i  (XOR with the all-ones column)
+            sub.copy_col(y_start + i, dst_start + i);
+            sub.stateful(LogicOp::Xor, ones_col, dst_start + i);
+            let layout = FaLayout {
+                x: x_start + i,
+                y: self.carry,
+                z: dst_start + i,
+                cache: self.cache,
+                z_out: self.carry2,
+            };
+            ProposedFa::execute(sub, &layout);
+            sub.copy_col(self.carry2, self.carry);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nvsim::{ArrayGeometry, OpCosts};
+
+    const W: usize = 8;
+
+    fn setup() -> (Subarray, RippleAdder, usize, usize, usize, usize) {
+        let mut s = Subarray::new(
+            ArrayGeometry { rows: 64, cols: 64 },
+            OpCosts::proposed_default(),
+        );
+        let adder = RippleAdder {
+            cache: [40, 41, 42, 43],
+            carry: 44,
+            carry2: 45,
+        };
+        let ones = 46;
+        s.const_col(ones, true);
+        // fields: x at 0, y at 10, dst at 20
+        (s, adder, 0, 10, 20, ones)
+    }
+
+    #[test]
+    fn add_random_rows_in_parallel() {
+        let (mut s, adder, x, y, dst, _) = setup();
+        let cases: Vec<(u64, u64)> = (0..64)
+            .map(|i| ((i * 37 + 11) % 256, (i * 91 + 5) % 256))
+            .collect();
+        for (row, &(a, b)) in cases.iter().enumerate() {
+            s.load_row_value(row, x, W, a);
+            s.load_row_value(row, y, W, b);
+        }
+        adder.add(&mut s, x, y, dst, W);
+        for (row, &(a, b)) in cases.iter().enumerate() {
+            assert_eq!(
+                s.peek_row_value(row, dst, W),
+                (a + b) & 0xFF,
+                "row {row}: {a}+{b}"
+            );
+        }
+        // carry-out of the top bit
+        for (row, &(a, b)) in cases.iter().enumerate() {
+            assert_eq!(
+                s.peek_row_value(row, adder.carry, 1),
+                ((a + b) >> 8) & 1,
+                "carry row {row}"
+            );
+        }
+    }
+
+    #[test]
+    fn add_preserves_x_operand() {
+        let (mut s, adder, x, y, dst, _) = setup();
+        s.load_row_value(0, x, W, 0xA7);
+        s.load_row_value(0, y, W, 0x1C);
+        adder.add(&mut s, x, y, dst, W);
+        assert_eq!(s.peek_row_value(0, x, W), 0xA7);
+        assert_eq!(s.peek_row_value(0, y, W), 0x1C);
+    }
+
+    #[test]
+    fn in_place_accumulate() {
+        let (mut s, adder, x, y, _, _) = setup();
+        s.load_row_value(3, x, W, 40);
+        s.load_row_value(3, y, W, 2);
+        // dst aliases y: y += x three times
+        for _ in 0..3 {
+            adder.add(&mut s, x, y, y, W);
+        }
+        assert_eq!(s.peek_row_value(3, y, W), 122);
+    }
+
+    #[test]
+    fn sub_all_orderings() {
+        let (mut s, adder, x, y, dst, ones) = setup();
+        let cases: Vec<(u64, u64)> = vec![(200, 13), (13, 200), (77, 77), (255, 0), (0, 255)];
+        for (row, &(a, b)) in cases.iter().enumerate() {
+            s.load_row_value(row, x, W, a);
+            s.load_row_value(row, y, W, b);
+        }
+        adder.sub(&mut s, x, y, dst, W, ones);
+        for (row, &(a, b)) in cases.iter().enumerate() {
+            assert_eq!(
+                s.peek_row_value(row, dst, W),
+                a.wrapping_sub(b) & 0xFF,
+                "row {row}: {a}-{b}"
+            );
+            assert_eq!(
+                s.peek_row_value(row, adder.carry, 1),
+                (a >= b) as u64,
+                "no-borrow flag row {row}"
+            );
+        }
+    }
+
+    #[test]
+    fn k_bit_add_costs_k_fa_chains() {
+        let (mut s, adder, x, y, dst, _) = setup();
+        let before = s.ledger.clone();
+        adder.add(&mut s, x, y, dst, W);
+        let fa_reads = crate::logic::fa::FA_STEPS * W as u64;
+        // + per-bit y->dst copy (1r+1w) and carry propagation copy (1r+1w)
+        let delta_reads = s.ledger.reads - before.reads;
+        assert_eq!(delta_reads, fa_reads + 2 * W as u64);
+    }
+}

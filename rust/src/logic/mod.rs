@@ -1,0 +1,7 @@
+//! In-array logic structures built from the stateful cell operations.
+
+pub mod adder;
+pub mod fa;
+
+pub use adder::RippleAdder;
+pub use fa::{FaLayout, ProposedFa, FA_CELLS, FA_STEPS};

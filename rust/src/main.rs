@@ -1,0 +1,263 @@
+//! `mram-pim` — leader binary: report generation, coordinated training,
+//! MAC cost queries and design-space sweeps.
+
+use mram_pim::arch::{AccelKind, Accelerator};
+use mram_pim::cli::{usage, Args};
+use mram_pim::config::AccelConfig;
+use mram_pim::coordinator::{Coordinator, RunConfig};
+use mram_pim::floatpim::FloatPimCostModel;
+use mram_pim::fpu::{FloatFormat, FpCostModel};
+use mram_pim::metrics::fmt_si;
+use mram_pim::model::Network;
+use mram_pim::nvsim::OpCosts;
+use mram_pim::report;
+use mram_pim::runtime::Runtime;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", usage());
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> mram_pim::Result<()> {
+    match args.command.as_str() {
+        "report" => cmd_report(args),
+        "train" => cmd_train(args),
+        "mac" => cmd_mac(args),
+        "sweep" => cmd_sweep(args),
+        "selfcheck" => cmd_selfcheck(args),
+        _ => {
+            println!("{}", usage());
+            Ok(())
+        }
+    }
+}
+
+fn cmd_report(args: &Args) -> mram_pim::Result<()> {
+    let all = args.switch("all") || (!args.switch("table1") && !args.switch("fig5")
+        && !args.switch("fig6") && !args.switch("fa") && !args.switch("fast-switch"));
+    let steps = args.usize_or("steps", 300)?;
+    if all || args.switch("table1") {
+        println!("{}", report::table1());
+    }
+    if all || args.switch("fig5") {
+        println!("{}", report::fig5());
+    }
+    if all || args.switch("fast-switch") {
+        println!("{}", report::fast_switch());
+    }
+    if all || args.switch("fa") {
+        println!("{}", report::fa_table());
+    }
+    if all || args.switch("fig6") {
+        println!("{}", report::fig6(steps));
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> mram_pim::Result<()> {
+    let mut accel_cfg = AccelConfig::default();
+    let cfg_path = args.str_or("config", "");
+    if !cfg_path.is_empty() {
+        accel_cfg = AccelConfig::from_file(&cfg_path)?;
+    }
+    let artifacts = args.str_or("artifacts", &accel_cfg.artifacts_dir);
+    let cfg = RunConfig {
+        steps: args.usize_or("steps", accel_cfg.steps)?,
+        lr: args.f64_or("lr", accel_cfg.lr as f64)? as f32,
+        seed: args.usize_or("seed", accel_cfg.seed as usize)? as u64,
+        eval_every: args.usize_or("eval-every", 50)?,
+        train_size: args.usize_or("train-size", 4096)?,
+        test_size: 256,
+        deep_validate_waves: if args.switch("no-deep-validate") { 0 } else { 2 },
+        threads: args.usize_or("threads", 4)?,
+    };
+
+    println!("loading artifacts from {artifacts}/ ...");
+    let runtime = Runtime::load_dir(&artifacts)?;
+    println!("PJRT platform: {}", runtime.platform());
+    let coord = Coordinator::new(runtime);
+    println!(
+        "training {} ({} params) for {} steps @ lr {} ...",
+        coord.network().name,
+        coord.network().param_count(),
+        cfg.steps,
+        cfg.lr
+    );
+    let report = coord.run(&cfg)?;
+
+    println!("\nloss curve:");
+    for &(step, loss) in &report.losses {
+        println!("  step {step:>5}  loss {loss:.4}");
+    }
+    println!("\naccuracy:");
+    for &(step, acc) in &report.accuracy {
+        println!("  step {step:>5}  acc {:.2}%", acc * 100.0);
+    }
+    println!("\nsimulated PIM cost of this run:");
+    for (name, c) in [("proposed", &report.sim_proposed), ("FloatPIM", &report.sim_floatpim)] {
+        println!(
+            "  {name:<10} latency {} energy {} area {:.3} mm²",
+            fmt_si(c.latency_s, "s"),
+            fmt_si(c.energy_j, "J"),
+            c.area_mm2()
+        );
+    }
+    println!(
+        "  ratios (FloatPIM / proposed): latency {:.2}×, energy {:.2}×, area {:.2}×",
+        report.sim_floatpim.latency_s / report.sim_proposed.latency_s,
+        report.sim_floatpim.energy_j / report.sim_proposed.energy_j,
+        report.sim_floatpim.area_m2 / report.sim_proposed.area_m2,
+    );
+    if report.deep_checked > 0 {
+        println!(
+            "deep validation: {} bit-level MACs checked, {} mismatches",
+            report.deep_checked, report.deep_mismatches
+        );
+    }
+    println!(
+        "final accuracy: {:.2}%  (wall {:.1}s)",
+        report.final_accuracy * 100.0,
+        report.wall_s
+    );
+    Ok(())
+}
+
+fn cmd_mac(args: &Args) -> mram_pim::Result<()> {
+    let fmt = match args.str_or("format", "fp32").as_str() {
+        "fp32" => FloatFormat::FP32,
+        "fp16" => FloatFormat::FP16,
+        "bf16" => FloatFormat::BF16,
+        other => {
+            return Err(mram_pim::Error::Config(format!(
+                "unknown format {other:?}"
+            )))
+        }
+    };
+    let costs = if args.switch("ultrafast") {
+        OpCosts::proposed_ultrafast()
+    } else {
+        OpCosts::proposed_default()
+    };
+    let ours = FpCostModel::new(costs, fmt);
+    let theirs = FloatPimCostModel::new(Default::default(), fmt);
+    println!(
+        "fp MAC (Ne={}, Nm={}): proposed latency {} energy {}",
+        fmt.ne,
+        fmt.nm,
+        fmt_si(ours.t_mac(), "s"),
+        fmt_si(ours.e_mac(), "J")
+    );
+    println!(
+        "                       FloatPIM latency {} energy {}  ({:.2}× / {:.2}×)",
+        fmt_si(theirs.t_mac(), "s"),
+        fmt_si(theirs.e_mac(), "J"),
+        theirs.t_mac() / ours.t_mac(),
+        theirs.e_mac() / ours.e_mac()
+    );
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> mram_pim::Result<()> {
+    match args.str_or("what", "formats").as_str() {
+        "formats" => {
+            println!("precision sweep (proposed accelerator, per MAC):");
+            for (name, fmt) in [
+                ("fp32", FloatFormat::FP32),
+                ("fp16", FloatFormat::FP16),
+                ("bf16", FloatFormat::BF16),
+            ] {
+                let m = FpCostModel::new(OpCosts::proposed_default(), fmt);
+                println!(
+                    "  {name}: latency {} energy {}",
+                    fmt_si(m.t_mac(), "s"),
+                    fmt_si(m.e_mac(), "J")
+                );
+            }
+        }
+        "align" => {
+            println!("exponent-alignment scaling (search steps vs FloatPIM):");
+            for nm in [4u32, 8, 16, 23, 32, 52] {
+                let ours = FpCostModel::new(
+                    OpCosts::proposed_default(),
+                    FloatFormat { ne: 8, nm },
+                );
+                let theirs =
+                    FloatPimCostModel::new(Default::default(), FloatFormat { ne: 8, nm });
+                println!(
+                    "  Nm={nm:>2}: ours {:>6.0} search steps (O(Nm)) | FloatPIM {:>8.0} switch steps (O(Nm²))",
+                    ours.add_search_steps(),
+                    theirs.add_switch_steps()
+                );
+            }
+        }
+        "subarray" => {
+            let net = Network::lenet5();
+            println!("lane-provisioning sweep (LeNet-5 step @ batch 32):");
+            for lanes in [4096usize, 8192, 16_384, 32_768, 65_536] {
+                let a = Accelerator::new(AccelKind::Proposed, FloatFormat::FP32, lanes);
+                let c = a.train_step_cost(&net, 32);
+                println!(
+                    "  lanes {lanes:>6}: step latency {} energy {} area {:.3} mm²",
+                    fmt_si(c.latency_s, "s"),
+                    fmt_si(c.energy_j, "J"),
+                    c.area_mm2()
+                );
+            }
+        }
+        other => {
+            return Err(mram_pim::Error::Config(format!(
+                "unknown sweep {other:?} (align|formats|subarray)"
+            )))
+        }
+    }
+    Ok(())
+}
+
+fn cmd_selfcheck(args: &Args) -> mram_pim::Result<()> {
+    // Cheap invariants + (if artifacts exist) a PJRT round trip.
+    use mram_pim::fpu::softfloat;
+    let mut bad = 0;
+    for (a, b) in [(1.5f32, 2.25f32), (-3.0, 7.5), (1e20, -1e20)] {
+        if softfloat::pim_mul_f32(a, b) != softfloat::ftz(a * b) {
+            bad += 1;
+        }
+        if softfloat::pim_add_f32(a, b) != softfloat::ftz(a + b) {
+            bad += 1;
+        }
+    }
+    println!("softfloat spot-checks: {} mismatches", bad);
+    let artifacts = args.str_or("artifacts", "artifacts");
+    match Runtime::load_dir(&artifacts) {
+        Ok(rt) => {
+            let a = vec![1.5f32; 1024];
+            let b = vec![2.25f32; 1024];
+            let out = rt.pim_mul(&a, &b)?;
+            let ok = out.iter().all(|&v| v == 1.5 * 2.25);
+            println!(
+                "PJRT pim_mul artifact: {}",
+                if ok { "OK" } else { "MISMATCH" }
+            );
+        }
+        Err(e) => println!("PJRT artifacts not available ({e}); skipped"),
+    }
+    if bad == 0 {
+        println!("selfcheck OK");
+        Ok(())
+    } else {
+        Err(mram_pim::Error::Sim("selfcheck failed".into()))
+    }
+}

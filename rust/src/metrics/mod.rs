@@ -1,0 +1,118 @@
+//! Run-time metrics: named counters, stopwatches and SI formatting used
+//! by the coordinator and the report layer.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// A set of named monotonic counters.
+#[derive(Debug, Default, Clone)]
+pub struct Counters {
+    inner: BTreeMap<String, u64>,
+}
+
+impl Counters {
+    pub fn new() -> Self {
+        Counters::default()
+    }
+
+    pub fn add(&mut self, name: &str, v: u64) {
+        *self.inner.entry(name.to_string()).or_insert(0) += v;
+    }
+
+    pub fn get(&self, name: &str) -> u64 {
+        self.inner.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &u64)> {
+        self.inner.iter()
+    }
+}
+
+/// Wall-clock stopwatch for coarse phase timing.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Format a value with an SI prefix (e.g. `12.3 µ`, `4.56 G`).
+pub fn fmt_si(v: f64, unit: &str) -> String {
+    let (scaled, prefix) = si_scale(v);
+    format!("{scaled:.3} {prefix}{unit}")
+}
+
+/// Pick an SI prefix for a value.
+pub fn si_scale(v: f64) -> (f64, &'static str) {
+    let a = v.abs();
+    if a == 0.0 {
+        return (0.0, "");
+    }
+    const TABLE: &[(f64, &str)] = &[
+        (1e12, "T"),
+        (1e9, "G"),
+        (1e6, "M"),
+        (1e3, "k"),
+        (1.0, ""),
+        (1e-3, "m"),
+        (1e-6, "µ"),
+        (1e-9, "n"),
+        (1e-12, "p"),
+        (1e-15, "f"),
+    ];
+    for &(scale, prefix) in TABLE {
+        if a >= scale {
+            return (v / scale, prefix);
+        }
+    }
+    (v / 1e-15, "f")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let mut c = Counters::new();
+        c.add("macs", 10);
+        c.add("macs", 5);
+        c.add("steps", 1);
+        assert_eq!(c.get("macs"), 15);
+        assert_eq!(c.get("steps"), 1);
+        assert_eq!(c.get("missing"), 0);
+    }
+
+    #[test]
+    fn si_prefixes() {
+        assert_eq!(si_scale(2.5e-9).1, "n");
+        assert_eq!(si_scale(3.1e-6).1, "µ");
+        assert_eq!(si_scale(4.2e3).1, "k");
+        assert_eq!(si_scale(5e9).1, "G");
+        assert_eq!(si_scale(0.0).1, "");
+    }
+
+    #[test]
+    fn fmt_si_renders() {
+        assert_eq!(fmt_si(12.0e-12, "J"), "12.000 pJ");
+        assert_eq!(fmt_si(4.364e-6, "s"), "4.364 µs");
+    }
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let sw = Stopwatch::start();
+        let a = sw.elapsed_s();
+        let b = sw.elapsed_s();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,10 @@
+//! DNN workload descriptions: layer shapes, parameter counts and the
+//! MAC/add/data-movement work each training phase generates.
+//!
+//! The layer table of [`Network::lenet5`] mirrors `python/compile/model.py`
+//! exactly (the AOT artifact and the cost simulation must describe the
+//! same computation).
+
+pub mod lenet;
+
+pub use lenet::{Layer, Network, TrainingWork};

@@ -1,0 +1,256 @@
+//! Per-operation cost and area derivation for one memory subarray.
+
+use crate::device::{CellDesign, CellKind, CellParams, TechNode};
+
+/// Geometry of one subarray (the paper uses 1024×1024 throughout §4).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ArrayGeometry {
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl Default for ArrayGeometry {
+    fn default() -> Self {
+        ArrayGeometry { rows: 1024, cols: 1024 }
+    }
+}
+
+/// Peripheral circuit timing/energy constants.
+///
+/// `t_sense` follows the self-biased current sense amplifier of [14]
+/// (~0.4 ns at 28 nm); `t_decode`/`t_driver` are NVSim-class decoder and
+/// write-driver delays.  All four energy constants are per activated
+/// bit-line.
+#[derive(Debug, Clone, Copy)]
+pub struct PeripheryModel {
+    /// Row decoder delay, s.
+    pub t_decode: f64,
+    /// Current sense amplifier resolve time, s ([14]).
+    pub t_sense: f64,
+    /// Write driver turn-on time, s.
+    pub t_driver: f64,
+    /// Sense amplifier energy per sensed bit, J.
+    pub e_sense: f64,
+    /// Decoder energy per access, amortised per bit, J.
+    pub e_decode: f64,
+    /// Write driver energy per written bit (excluding cell switch), J.
+    pub e_driver: f64,
+}
+
+impl Default for PeripheryModel {
+    fn default() -> Self {
+        PeripheryModel {
+            t_decode: 0.25e-9,
+            t_sense: 0.40e-9,
+            t_driver: 0.28e-9,
+            e_sense: 0.9e-15,
+            e_decode: 0.3e-15,
+            e_driver: 2.2e-15,
+        }
+    }
+}
+
+/// Per-operation cost of one subarray access (per bit for read/write, per
+/// key-column access for search).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OpCosts {
+    pub t_read: f64,
+    pub e_read: f64,
+    pub t_write: f64,
+    pub e_write: f64,
+    pub t_search: f64,
+    pub e_search: f64,
+}
+
+impl OpCosts {
+    /// Derive the cost set for a SOT-MRAM array of the given cell design.
+    pub fn derive(
+        cell: &CellParams,
+        design: CellKind,
+        tech: &TechNode,
+        geom: ArrayGeometry,
+        periph: &PeripheryModel,
+    ) -> OpCosts {
+        let d = CellDesign::of(design);
+        // Bit-line geometry: rows × cell pitch.
+        let pitch = d.cell_area_f2.sqrt() * tech.feature_m;
+        let line_len = geom.rows as f64 * pitch;
+        let c_line = tech.wire_cap_per_m * line_len;
+        let r_line = tech.wire_res_per_m * line_len;
+        // Distributed-RC Elmore delay of the bit line.
+        let t_rc = 0.5 * r_line * c_line;
+
+        // READ: decode + line flight + sense.
+        let t_read = periph.t_decode + t_rc + periph.t_sense;
+        // Energy: precharge the line to |v_read|, cell current during
+        // sensing, SA + decode shares.
+        let e_precharge = c_line * cell.v_read * cell.v_read;
+        let e_cell = cell.v_read * cell.i_read_on() * periph.t_sense;
+        let e_read = e_precharge + e_cell + periph.e_sense + periph.e_decode;
+
+        // WRITE: driver + intrinsic switching; the single-MTJ design pays
+        // the extra row-direction step (§2).
+        let t_write = (periph.t_driver + cell.t_switch) * d.write_steps as f64;
+        let e_line = c_line * cell.v_b * cell.v_b;
+        let e_write =
+            (cell.e_switch + e_line + periph.e_driver) * d.write_steps as f64;
+
+        // SEARCH (Fig. 4a): one key column sensed across all rows in a
+        // single access; energy is a whole-column sense.
+        let t_search = periph.t_decode + t_rc + periph.t_sense;
+        let e_search = e_precharge + periph.e_sense + periph.e_decode;
+
+        OpCosts {
+            t_read,
+            e_read,
+            t_write,
+            e_write,
+            t_search,
+            e_search,
+        }
+    }
+
+    /// Cost set for the proposed accelerator: Table 1 cell, 1T-1R design,
+    /// 28 nm, 1024×1024.
+    pub fn proposed_default() -> OpCosts {
+        OpCosts::derive(
+            &crate::device::SOT_MRAM_TABLE1,
+            CellKind::OneT1R,
+            &TechNode::default(),
+            ArrayGeometry::default(),
+            &PeripheryModel::default(),
+        )
+    }
+
+    /// Proposed accelerator with the ultra-fast switching MTJ of [15]
+    /// (the §4.2 projection).
+    pub fn proposed_ultrafast() -> OpCosts {
+        OpCosts::derive(
+            &crate::device::SOT_MRAM_ULTRAFAST,
+            CellKind::OneT1R,
+            &TechNode::default(),
+            ArrayGeometry::default(),
+            &PeripheryModel::default(),
+        )
+    }
+}
+
+/// Area of one subarray + its periphery, m².
+#[derive(Debug, Clone, Copy)]
+pub struct ArrayArea {
+    pub cells_m2: f64,
+    pub periphery_m2: f64,
+}
+
+impl ArrayArea {
+    /// NVSim-style layout: cell matrix + decoder strip + SA strip + write
+    /// drivers.  `driver_scale` lets high-write-current technologies
+    /// (ReRAM) pay for wider drivers.
+    pub fn derive(
+        design: CellKind,
+        tech: &TechNode,
+        geom: ArrayGeometry,
+        driver_scale: f64,
+    ) -> ArrayArea {
+        let d = CellDesign::of(design);
+        let cells = geom.rows as f64 * geom.cols as f64 * d.cell_area_m2(tech);
+        // Periphery: decoders ~6%, sense amps ~12%, write drivers ~12%
+        // (×driver_scale), control ~4% of the cell matrix (NVSim-like
+        // fractions for a 1024×1024 macro).
+        let periphery = cells * (0.06 + 0.12 + 0.12 * driver_scale + 0.04);
+        ArrayArea {
+            cells_m2: cells,
+            periphery_m2: periphery,
+        }
+    }
+
+    pub fn total_m2(&self) -> f64 {
+        self.cells_m2 + self.periphery_m2
+    }
+
+    pub fn total_mm2(&self) -> f64 {
+        self.total_m2() * 1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{SOT_MRAM_TABLE1, SOT_MRAM_ULTRAFAST};
+
+    fn proposed() -> OpCosts {
+        OpCosts::proposed_default()
+    }
+
+    #[test]
+    fn write_dominated_by_cell_switch() {
+        // §4.2: "cell switch latency dominates a MAC's latency".
+        let c = proposed();
+        assert!(SOT_MRAM_TABLE1.t_switch / c.t_write > 0.7);
+    }
+
+    #[test]
+    fn read_faster_than_write() {
+        let c = proposed();
+        assert!(c.t_read < c.t_write / 2.0);
+    }
+
+    #[test]
+    fn write_energy_dominated_by_switch_energy() {
+        // Device switch is the single largest write-energy component
+        // (the bit-line charge at V_b comes second).
+        let c = proposed();
+        assert!(SOT_MRAM_TABLE1.e_switch / c.e_write > 0.4);
+        assert!(c.e_read < c.e_write);
+    }
+
+    #[test]
+    fn ultrafast_cuts_write_latency() {
+        let slow = proposed();
+        let fast = OpCosts::proposed_ultrafast();
+        assert!(fast.t_write < slow.t_write / 3.0);
+        assert_eq!(fast.t_read, slow.t_read);
+        assert!(SOT_MRAM_ULTRAFAST.t_switch < 0.4e-9);
+    }
+
+    #[test]
+    fn costs_positive_and_sane() {
+        let c = proposed();
+        for v in [c.t_read, c.t_write, c.t_search] {
+            assert!(v > 0.0 && v < 100e-9, "latency {v}");
+        }
+        for v in [c.e_read, c.e_write, c.e_search] {
+            assert!(v > 0.0 && v < 1e-12, "energy {v}");
+        }
+    }
+
+    #[test]
+    fn area_reasonable_for_1mb_macro() {
+        let a = ArrayArea::derive(
+            CellKind::OneT1R,
+            &TechNode::default(),
+            ArrayGeometry::default(),
+            1.0,
+        );
+        let mm2 = a.total_mm2();
+        // A 1 Mb macro at 28 nm should land in the 0.01..0.1 mm² decade.
+        assert!(mm2 > 0.005 && mm2 < 0.2, "area {mm2} mm²");
+    }
+
+    #[test]
+    fn bigger_driver_scale_costs_area() {
+        let small = ArrayArea::derive(
+            CellKind::OneT1R,
+            &TechNode::default(),
+            ArrayGeometry::default(),
+            1.0,
+        );
+        let big = ArrayArea::derive(
+            CellKind::OneT1R,
+            &TechNode::default(),
+            ArrayGeometry::default(),
+            4.0,
+        );
+        assert!(big.total_m2() > small.total_m2());
+    }
+}

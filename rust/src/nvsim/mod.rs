@@ -1,0 +1,23 @@
+//! Compact NVSim-style circuit model (§4.1).
+//!
+//! The paper feeds Table 1 cell parameters and the current sense amplifier
+//! of [14] into NVSim [2] to obtain per-bit read/write/search energy and
+//! latency plus array area.  NVSim itself is an analytical estimator; this
+//! module re-derives the same quantities from the same inputs:
+//!
+//! * **read**  — word-line decode + bit-line RC + current-sense time; the
+//!   energy is bit-line precharge + cell read current + sense amp.
+//! * **write** — driver turn-on + the cell's intrinsic switching time; the
+//!   energy is the device switching energy (Table 1) + line/driver
+//!   overhead at the write current.
+//! * **search** — the CAM-style row match of Fig. 4a: all rows of one
+//!   column are sensed against a key in one access.
+//!
+//! Absolute constants are calibrated against the FloatPIM-published per-op
+//! costs (see [`crate::floatpim::params`] and `rust/tests/validation.rs`);
+//! the figures of merit that must be *right* are the ratios the paper
+//! reports, which are dominated by step counts and the Table 1 values.
+
+pub mod array;
+
+pub use array::{ArrayArea, ArrayGeometry, OpCosts, PeripheryModel};

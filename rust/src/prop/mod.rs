@@ -1,0 +1,167 @@
+//! A small deterministic property-testing engine.
+//!
+//! The offline toolchain has no `proptest`/`quickcheck`, so this module
+//! provides the pieces the test suites need: a seedable xorshift
+//! generator, value generators (including adversarial fp32 patterns) and
+//! a runner that reports the failing seed + case for reproduction.
+
+/// Deterministic xorshift64* PRNG.
+#[derive(Debug, Clone)]
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng(seed.max(1))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, n)`.
+    pub fn below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n.max(1)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    pub fn range(&mut self, lo: i64, hi: i64) -> i64 {
+        lo + self.below((hi - lo) as u64) as i64
+    }
+
+    /// Uniform float in [0, 1).
+    pub fn unit_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Standard-normal-ish (sum of uniforms; adequate for data synthesis).
+    pub fn gaussian(&mut self) -> f64 {
+        let s: f64 = (0..6).map(|_| self.unit_f64()).sum();
+        (s - 3.0) * (2.0f64).sqrt()
+    }
+
+    /// Fully random fp32 bit pattern (any class: NaN, Inf, subnormal...).
+    pub fn f32_any(&mut self) -> f32 {
+        f32::from_bits(self.next_u32())
+    }
+
+    /// Random *finite normal* fp32 with exponent confined to
+    /// `[-scale, scale]` powers of two.
+    pub fn f32_normal(&mut self, scale: i64) -> f32 {
+        let mant = self.next_u32() & 0x7F_FFFF;
+        let exp = (127 + self.range(-scale, scale + 1)) as u32;
+        let sign = (self.next_u32() & 1) << 31;
+        f32::from_bits(sign | (exp << 23) | mant)
+    }
+
+    /// An adversarial fp32: edge patterns with high probability.
+    pub fn f32_adversarial(&mut self) -> f32 {
+        const EDGES: &[u32] = &[
+            0x0000_0000, // +0
+            0x8000_0000, // -0
+            0x3F80_0000, // 1
+            0x3F7F_FFFF, // 1 - ulp
+            0x3F80_0001, // 1 + ulp
+            0x0080_0000, // min normal
+            0x0080_0001,
+            0x007F_FFFF, // max subnormal
+            0x7F7F_FFFF, // max finite
+            0x7F80_0000, // inf
+            0x7FC0_0000, // nan
+            0x4B80_0000, // 2^24
+            0x4B7F_FFFF,
+        ];
+        if self.below(2) == 0 {
+            let e = EDGES[self.below(EDGES.len() as u64) as usize];
+            let s = (self.next_u32() & 1) << 31;
+            f32::from_bits(e ^ s)
+        } else {
+            self.f32_any()
+        }
+    }
+}
+
+/// Outcome of a property check on one case.
+pub type PropResult = Result<(), String>;
+
+/// Run `iters` random cases of a property.  On failure, panics with the
+/// seed, iteration and message so the case can be replayed exactly.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    iters: u64,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T) -> PropResult,
+) {
+    let mut rng = Rng::new(seed);
+    for i in 0..iters {
+        let case_seed = rng.next_u64();
+        let mut case_rng = Rng::new(case_seed);
+        let case = gen(&mut case_rng);
+        if let Err(msg) = prop(&case) {
+            panic!(
+                "property '{name}' failed at iter {i} (seed {seed}, case_seed \
+                 {case_seed:#x}):\n  case: {case:?}\n  {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_stays_in_range() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn f32_normal_is_normal() {
+        let mut r = Rng::new(9);
+        for _ in 0..10_000 {
+            let x = r.f32_normal(20);
+            assert!(x.is_finite());
+            assert!(x == 0.0 || x.abs() >= f32::MIN_POSITIVE);
+        }
+    }
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("u64-identity", 1, 100, |r| r.next_u64(), |_| Ok(()));
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn check_reports_failures() {
+        check("always-fails", 1, 10, |r| r.next_u64(), |_| Err("boom".into()));
+    }
+
+    #[test]
+    fn gaussian_has_zero_ish_mean() {
+        let mut r = Rng::new(3);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.gaussian()).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+    }
+}

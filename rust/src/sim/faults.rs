@@ -1,0 +1,154 @@
+//! Device-fault injection: stuck-at cells and read-disturb modelling for
+//! robustness studies (MRAM endurance is a §2 selling point; this module
+//! lets the simulator quantify what a defective array does to the
+//! paper's procedures).
+
+use crate::prop::Rng;
+use crate::sim::Subarray;
+
+/// A fault model applied to a subarray.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Cell permanently reads/holds 0.
+    StuckAtZero,
+    /// Cell permanently reads/holds 1.
+    StuckAtOne,
+}
+
+/// One injected fault site.
+#[derive(Debug, Clone, Copy)]
+pub struct Fault {
+    pub row: usize,
+    pub col: usize,
+    pub kind: FaultKind,
+}
+
+/// Deterministically sample `count` fault sites over an array.
+pub fn sample_faults(rows: usize, cols: usize, count: usize, seed: u64) -> Vec<Fault> {
+    let mut rng = Rng::new(seed.max(1));
+    (0..count)
+        .map(|_| Fault {
+            row: rng.below(rows as u64) as usize,
+            col: rng.below(cols as u64) as usize,
+            kind: if rng.below(2) == 0 {
+                FaultKind::StuckAtZero
+            } else {
+                FaultKind::StuckAtOne
+            },
+        })
+        .collect()
+}
+
+/// Re-assert the fault sites on a subarray (stuck cells override whatever
+/// the last operation wrote).  Call after each priced phase — physical
+/// stuck-at faults win every write.
+pub fn apply_faults(sub: &mut Subarray, faults: &[Fault]) {
+    for f in faults {
+        let bit = match f.kind {
+            FaultKind::StuckAtZero => 0u64,
+            FaultKind::StuckAtOne => 1u64,
+        };
+        sub.load_row_value(f.row, f.col, 1, bit);
+    }
+}
+
+/// Count how many of `n` row-parallel FP multiplies go wrong under a
+/// fault set (the detection metric a self-test would use).
+pub fn mul_error_rate(faults: &[Fault], n: usize, seed: u64) -> f64 {
+    use crate::fpu::procedure::FpEngine;
+    use crate::fpu::softfloat;
+    use crate::nvsim::{ArrayGeometry, OpCosts};
+
+    let mut rng = Rng::new(seed.max(1));
+    let pairs: Vec<(u32, u32)> = (0..n)
+        .map(|_| (rng.f32_normal(10).to_bits(), rng.f32_normal(10).to_bits()))
+        .collect();
+    let mut engine = FpEngine::new(
+        ArrayGeometry { rows: n.max(64), cols: 256 },
+        OpCosts::proposed_default(),
+    );
+    // Faults corrupt the loaded operands (the dominant effect: stored
+    // weights/activations sit in the array far longer than intermediates).
+    let got = {
+        let out = engine.mul(&pairs);
+        let mut out = out;
+        for f in faults {
+            // Model: a stuck cell in the operand region flips that bit of
+            // the stored result lane.
+            if f.row < n && f.col < 32 {
+                let bit = 1u32 << f.col;
+                out[f.row] = match f.kind {
+                    FaultKind::StuckAtZero => out[f.row] & !bit,
+                    FaultKind::StuckAtOne => out[f.row] | bit,
+                };
+            }
+        }
+        out
+    };
+    let bad = pairs
+        .iter()
+        .enumerate()
+        .filter(|(i, &(a, b))| got[*i] != softfloat::pim_mul_bits(a, b))
+        .count();
+    bad as f64 / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nvsim::{ArrayGeometry, OpCosts};
+
+    #[test]
+    fn faults_sample_deterministically() {
+        let a = sample_faults(1024, 1024, 32, 7);
+        let b = sample_faults(1024, 1024, 32, 7);
+        assert_eq!(a.len(), 32);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!((x.row, x.col, x.kind), (y.row, y.col, y.kind));
+        }
+    }
+
+    #[test]
+    fn stuck_cells_override_writes() {
+        let mut s = Subarray::new(
+            ArrayGeometry { rows: 64, cols: 8 },
+            OpCosts::proposed_default(),
+        );
+        let faults = vec![
+            Fault { row: 3, col: 2, kind: FaultKind::StuckAtOne },
+            Fault { row: 5, col: 2, kind: FaultKind::StuckAtZero },
+        ];
+        s.const_col(2, false);
+        apply_faults(&mut s, &faults);
+        assert_eq!(s.peek_row_value(3, 2, 1), 1, "stuck-at-1 wins over write 0");
+        s.const_col(2, true);
+        apply_faults(&mut s, &faults);
+        assert_eq!(s.peek_row_value(5, 2, 1), 0, "stuck-at-0 wins over write 1");
+    }
+
+    #[test]
+    fn zero_faults_zero_errors() {
+        assert_eq!(mul_error_rate(&[], 64, 1), 0.0);
+    }
+
+    #[test]
+    fn faults_in_result_lanes_cause_errors() {
+        // Stuck bits inside the first 64 lanes' result fields must
+        // corrupt at least one product (sign/mantissa bits flip).
+        let faults: Vec<Fault> = (0..16)
+            .map(|i| Fault { row: i * 4, col: (i * 3) % 24, kind: FaultKind::StuckAtOne })
+            .collect();
+        let rate = mul_error_rate(&faults, 64, 3);
+        assert!(rate > 0.0, "rate {rate}");
+        assert!(rate < 0.8, "rate {rate} (faults are localised)");
+    }
+
+    #[test]
+    fn error_rate_monotone_in_fault_count() {
+        let few: Vec<Fault> = sample_faults(64, 24, 4, 9);
+        let many: Vec<Fault> = sample_faults(64, 24, 40, 9);
+        let r_few = mul_error_rate(&few, 64, 5);
+        let r_many = mul_error_rate(&many, 64, 5);
+        assert!(r_many >= r_few, "{r_many} vs {r_few}");
+    }
+}

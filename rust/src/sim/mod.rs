@@ -1,0 +1,14 @@
+//! Bit-accurate subarray simulation with cost accounting.
+//!
+//! [`Ledger`] records every read / write / search / switch event priced by
+//! an [`crate::nvsim::OpCosts`]; [`Subarray`] is the functional model of
+//! one 1024×1024 SOT-MRAM array executing the column-parallel stateful
+//! logic the paper's procedures are built from.
+
+pub mod faults;
+pub mod ledger;
+pub mod subarray;
+
+pub use faults::{Fault, FaultKind};
+pub use ledger::{Ledger, OpClass};
+pub use subarray::{BitVecCol, Subarray};

@@ -1,0 +1,514 @@
+//! Functional, bit-accurate model of one SOT-MRAM subarray.
+//!
+//! State is kept as column bit-planes: `plane[col]` holds one bit for each
+//! of the `rows` rows, packed 64 rows per `u64` word, so every
+//! row-parallel column operation is a handful of word ops — the same
+//! parallelism the physical array gets from driving a whole column of
+//! cells in one cycle.
+//!
+//! Every operation that models an array access records itself in the
+//! [`Ledger`] at the prices of the configured [`OpCosts`]:
+//!
+//! * `read_col`  — sense one column across all rows (1 read step);
+//! * `write_col` — drive one column across all rows (1 write step);
+//! * `stateful`  — a Fig. 1 logic op: sense the source column, pulse the
+//!   destination (1 read + 1 write);
+//! * `search_eq` — the Fig. 4a CAM match of a multi-column key
+//!   (1 search step);
+//! * masked field copies — the flexible-shift primitive the proposed
+//!   1T-1R cell enables (§3.3): one read of the source field and one
+//!   row-masked write of the destination (1 read + 1 write), regardless
+//!   of the shift distance.
+//!
+//! `load_*` / `peek_*` are free: they model data already resident (or
+//! test scaffolding), not array accesses.
+
+use crate::device::LogicOp;
+use crate::nvsim::{ArrayGeometry, OpCosts};
+use crate::sim::{Ledger, OpClass};
+
+/// One column of row-bits, packed 64 per word.
+pub type BitVecCol = Vec<u64>;
+
+/// Bit-accurate subarray with an attached cost ledger.
+#[derive(Debug, Clone)]
+pub struct Subarray {
+    rows: usize,
+    cols: usize,
+    words: usize,
+    /// `planes[col * words + w]` = bits of rows `w*64..w*64+64` in column `col`.
+    planes: Vec<u64>,
+    costs: OpCosts,
+    pub ledger: Ledger,
+    /// Reusable snapshot buffer for field copies (perf: avoids an
+    /// allocation per masked shift — see EXPERIMENTS.md §Perf).
+    scratch: Vec<u64>,
+}
+
+impl Subarray {
+    pub fn new(geom: ArrayGeometry, costs: OpCosts) -> Self {
+        let words = geom.rows.div_ceil(64);
+        Subarray {
+            rows: geom.rows,
+            cols: geom.cols,
+            words,
+            planes: vec![0; geom.cols * words],
+            costs,
+            ledger: Ledger::new(),
+            scratch: Vec::new(),
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn words_per_col(&self) -> usize {
+        self.words
+    }
+
+    fn col(&self, c: usize) -> &[u64] {
+        debug_assert!(c < self.cols, "column {c} out of range");
+        &self.planes[c * self.words..(c + 1) * self.words]
+    }
+
+    fn col_mut(&mut self, c: usize) -> &mut [u64] {
+        debug_assert!(c < self.cols, "column {c} out of range");
+        &mut self.planes[c * self.words..(c + 1) * self.words]
+    }
+
+    /// Mask for the valid bits of the last word.
+    fn tail_mask(&self) -> u64 {
+        let rem = self.rows % 64;
+        if rem == 0 {
+            u64::MAX
+        } else {
+            (1u64 << rem) - 1
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // Free (non-array) accessors: initial data load & inspection.
+    // ---------------------------------------------------------------
+
+    /// Load a column without cost (models pre-resident data).
+    pub fn load_col(&mut self, c: usize, data: &[u64]) {
+        let words = self.words;
+        let tm = self.tail_mask();
+        let dst = self.col_mut(c);
+        for w in 0..words {
+            dst[w] = *data.get(w).unwrap_or(&0);
+        }
+        dst[words - 1] &= tm;
+    }
+
+    /// Inspect a column without cost.
+    pub fn peek_col(&self, c: usize) -> &[u64] {
+        self.col(c)
+    }
+
+    /// Load one row's bits into a column range without cost.
+    pub fn load_row_value(&mut self, row: usize, start_col: usize, width: usize, value: u64) {
+        debug_assert!(width <= 64);
+        let (w, b) = (row / 64, row % 64);
+        for i in 0..width {
+            let bit = (value >> i) & 1;
+            let col = self.col_mut(start_col + i);
+            if bit == 1 {
+                col[w] |= 1 << b;
+            } else {
+                col[w] &= !(1 << b);
+            }
+        }
+    }
+
+    /// Read one row's bits from a column range without cost (LSB = start_col).
+    pub fn peek_row_value(&self, row: usize, start_col: usize, width: usize) -> u64 {
+        debug_assert!(width <= 64);
+        let (w, b) = (row / 64, row % 64);
+        let mut v = 0u64;
+        for i in 0..width {
+            if (self.col(start_col + i)[w] >> b) & 1 == 1 {
+                v |= 1 << i;
+            }
+        }
+        v
+    }
+
+    // ---------------------------------------------------------------
+    // Priced array operations.
+    // ---------------------------------------------------------------
+
+    /// Sense one column across all rows: 1 read step.
+    pub fn read_col(&mut self, c: usize) -> BitVecCol {
+        let out = self.col(c).to_vec();
+        self.ledger
+            .record(&self.costs, OpClass::Read, self.rows as u64, 0);
+        out
+    }
+
+    /// Drive one column across all rows: 1 write step.
+    pub fn write_col(&mut self, c: usize, data: &[u64]) {
+        let words = self.words;
+        let tm = self.tail_mask();
+        let mut switched = 0u64;
+        {
+            let dst = self.col_mut(c);
+            for w in 0..words {
+                let new = if w == words - 1 {
+                    data.get(w).copied().unwrap_or(0) & tm
+                } else {
+                    data.get(w).copied().unwrap_or(0)
+                };
+                switched += (dst[w] ^ new).count_ones() as u64;
+                dst[w] = new;
+            }
+        }
+        self.ledger
+            .record(&self.costs, OpClass::Write, self.rows as u64, switched);
+    }
+
+    /// Copy column `src` into column `dst`: 1 read + 1 write.
+    pub fn copy_col(&mut self, src: usize, dst: usize) {
+        let data = self.read_col(src);
+        self.write_col(dst, &data);
+    }
+
+    /// Stateful Fig. 1 logic: `dst = op(src, dst)` across all rows, one
+    /// sensed column (read) and one pulsed column (write).
+    pub fn stateful(&mut self, op: LogicOp, src: usize, dst: usize) {
+        let a = self.read_col(src);
+        let words = self.words;
+        let mut out = vec![0u64; words];
+        {
+            let d = self.col(dst);
+            for w in 0..words {
+                out[w] = match op {
+                    LogicOp::And => a[w] & d[w],
+                    LogicOp::Or => a[w] | d[w],
+                    LogicOp::Xor => a[w] ^ d[w],
+                };
+            }
+        }
+        self.write_col(dst, &out);
+    }
+
+    /// Write a constant bit to every row of a column: 1 write step.
+    pub fn const_col(&mut self, c: usize, bit: bool) {
+        let v = if bit { u64::MAX } else { 0 };
+        let data = vec![v; self.words];
+        self.write_col(c, &data);
+    }
+
+    /// Fig. 4a CAM search: rows whose bits at `key_cols` equal `key`.
+    /// One search step; returns the row match mask.
+    pub fn search_eq(&mut self, key_cols: &[usize], key: u64) -> BitVecCol {
+        let words = self.words;
+        let mut mask = vec![u64::MAX; words];
+        for (i, &c) in key_cols.iter().enumerate() {
+            let want = (key >> i) & 1;
+            let plane = self.col(c);
+            for w in 0..words {
+                let m = if want == 1 { plane[w] } else { !plane[w] };
+                mask[w] &= m;
+            }
+        }
+        mask[words - 1] &= self.tail_mask();
+        self.ledger
+            .record(&self.costs, OpClass::Search, self.rows as u64, 0);
+        mask
+    }
+
+    /// The §3.3 flexible shift: for rows selected by `mask`, copy the
+    /// `width`-column field starting at `src_start` into the field at
+    /// `dst_start`, offset by `shift` columns towards the LSB (a right
+    /// shift of the stored value).  One read + one row-masked write,
+    /// independent of `shift` — this is exactly what the 1T-1R cell's
+    /// per-cell write gating buys over FloatPIM's bit-by-bit scheme.
+    pub fn masked_copy_shifted(
+        &mut self,
+        mask: &[u64],
+        src_start: usize,
+        width: usize,
+        dst_start: usize,
+        dst_width: usize,
+        shift: isize,
+    ) {
+        let words = self.words;
+        // The array performs the step whether or not any row matched, so
+        // the ledger is charged unconditionally — but the host simulator
+        // can skip the data movement for an empty match mask (a frequent
+        // case in the per-shift-amount alignment and normalisation loops).
+        let empty = mask.iter().all(|&m| m == 0);
+        self.ledger
+            .record(&self.costs, OpClass::Read, (self.rows * width) as u64, 0);
+        if empty {
+            self.ledger
+                .record(&self.costs, OpClass::Write, (self.rows * dst_width) as u64, 0);
+            return;
+        }
+
+        // Snapshot source field into the reusable scratch buffer (one
+        // row-parallel read of the field).
+        let mut src = std::mem::take(&mut self.scratch);
+        src.clear();
+        for i in 0..width {
+            src.extend_from_slice(self.col(src_start + i));
+        }
+
+        let mut switched = 0u64;
+        for o in 0..dst_width {
+            // dst bit o receives src bit (o + shift), or 0 if shifted out;
+            // negative shift moves the value towards the MSB (left shift).
+            let si = o as isize + shift;
+            let dst = self.col_mut(dst_start + o);
+            for w in 0..words {
+                let bit = if si >= 0 && (si as usize) < width {
+                    src[si as usize * words + w]
+                } else {
+                    0
+                };
+                let new = (dst[w] & !mask[w]) | (bit & mask[w]);
+                switched += (dst[w] ^ new).count_ones() as u64;
+                dst[w] = new;
+            }
+        }
+        self.scratch = src;
+        self.ledger.record(
+            &self.costs,
+            OpClass::Write,
+            (self.rows * dst_width) as u64,
+            switched,
+        );
+    }
+
+    /// Bulk (free) load: write `values[row]`'s low `width` bits into the
+    /// field at `start_col` for every row at once.  Column-major
+    /// transpose — much faster than per-row `load_row_value` loops
+    /// (EXPERIMENTS.md §Perf).
+    pub fn load_col_values(&mut self, start_col: usize, width: usize, values: &[u64]) {
+        debug_assert!(values.len() <= self.rows);
+        let words = self.words;
+        for i in 0..width {
+            let plane = self.col_mut(start_col + i);
+            for w in 0..words {
+                let mut word = 0u64;
+                let base = w * 64;
+                let top = (base + 64).min(values.len());
+                for (off, &v) in values[base.min(values.len())..top].iter().enumerate() {
+                    word |= ((v >> i) & 1) << off;
+                }
+                plane[w] = word;
+            }
+        }
+    }
+
+    /// Bulk (free) peek: gather each row's `width`-bit field value.
+    pub fn peek_col_values(&self, start_col: usize, width: usize, n: usize) -> Vec<u64> {
+        let words = self.words;
+        let mut out = vec![0u64; n];
+        for i in 0..width {
+            let plane = self.col(start_col + i);
+            for w in 0..words {
+                let base = w * 64;
+                if base >= n {
+                    break;
+                }
+                let mut word = plane[w];
+                while word != 0 {
+                    let off = word.trailing_zeros() as usize;
+                    let row = base + off;
+                    if row < n {
+                        out[row] |= 1 << i;
+                    }
+                    word &= word - 1;
+                }
+            }
+        }
+        out
+    }
+
+    /// Charge `steps` steps of class `op`, `bits_per_step` cells each,
+    /// without touching state.  Used by the FP procedures for phases whose
+    /// dataflow is computed functionally but whose array traffic follows a
+    /// documented micro-op count (see `fpu::procedure`).
+    pub fn charge(&mut self, op: OpClass, steps: u64, bits_per_step: u64) {
+        let costs = self.costs;
+        for _ in 0..steps {
+            self.ledger.record(&costs, op, bits_per_step, bits_per_step / 2);
+        }
+    }
+
+    /// Row-masked OR of the `width` columns at `src_start` into the single
+    /// column `dst` (used for sticky-bit collection): 1 read + 1 write.
+    pub fn masked_or_reduce(
+        &mut self,
+        mask: &[u64],
+        src_start: usize,
+        width: usize,
+        dst: usize,
+    ) {
+        let words = self.words;
+        // Charge unconditionally; skip host data movement on empty masks
+        // (see masked_copy_shifted).
+        if mask.iter().all(|&m| m == 0) {
+            self.ledger
+                .record(&self.costs, OpClass::Read, (self.rows * width) as u64, 0);
+            self.ledger
+                .record(&self.costs, OpClass::Write, self.rows as u64, 0);
+            return;
+        }
+        let mut acc = vec![0u64; words];
+        for i in 0..width {
+            let plane = self.col(src_start + i);
+            for w in 0..words {
+                acc[w] |= plane[w];
+            }
+        }
+        self.ledger
+            .record(&self.costs, OpClass::Read, (self.rows * width) as u64, 0);
+        let mut switched = 0u64;
+        let d = self.col_mut(dst);
+        for w in 0..words {
+            let new = (d[w] & !mask[w]) | ((d[w] | acc[w]) & mask[w]);
+            switched += (d[w] ^ new).count_ones() as u64;
+            d[w] = new;
+        }
+        self.ledger
+            .record(&self.costs, OpClass::Write, self.rows as u64, switched);
+    }
+
+    /// Direct access to the cost table (for procedures that charge
+    /// documented micro-op equivalents).
+    pub fn costs(&self) -> OpCosts {
+        self.costs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nvsim::ArrayGeometry;
+
+    fn small() -> Subarray {
+        Subarray::new(
+            ArrayGeometry { rows: 128, cols: 64 },
+            OpCosts::proposed_default(),
+        )
+    }
+
+    #[test]
+    fn load_peek_roundtrip() {
+        let mut s = small();
+        s.load_row_value(5, 3, 8, 0xA5);
+        assert_eq!(s.peek_row_value(5, 3, 8), 0xA5);
+        assert_eq!(s.peek_row_value(4, 3, 8), 0);
+        assert_eq!(s.ledger.steps(), 0, "loads are free");
+    }
+
+    #[test]
+    fn write_col_counts_switches() {
+        let mut s = small();
+        let data = vec![u64::MAX; s.words_per_col()];
+        s.write_col(0, &data);
+        assert_eq!(s.ledger.switches, 128);
+        s.write_col(0, &data); // idempotent: no new switches
+        assert_eq!(s.ledger.switches, 128);
+        assert_eq!(s.ledger.writes, 2);
+    }
+
+    #[test]
+    fn stateful_ops_match_truth_tables() {
+        for op in [LogicOp::And, LogicOp::Or, LogicOp::Xor] {
+            let mut s = small();
+            // src column: rows 0,1 = 0,1 ; dst column rows 0,1 fixed per case
+            for (a, b) in [(0u64, 0u64), (0, 1), (1, 0), (1, 1)] {
+                let row = (a * 2 + b) as usize;
+                s.load_row_value(row, 0, 1, a);
+                s.load_row_value(row, 1, 1, b);
+            }
+            s.stateful(op, 0, 1);
+            for (a, b) in [(0u64, 0), (0, 1), (1, 0), (1, 1)] {
+                let row = (a * 2 + b) as usize;
+                let want = op.eval(a == 1, b == 1) as u64;
+                assert_eq!(s.peek_row_value(row, 1, 1), want, "{op:?} {a}{b}");
+            }
+        }
+    }
+
+    #[test]
+    fn stateful_costs_one_read_one_write() {
+        let mut s = small();
+        s.stateful(LogicOp::Xor, 0, 1);
+        assert_eq!((s.ledger.reads, s.ledger.writes), (1, 1));
+    }
+
+    #[test]
+    fn search_matches_exact_keys() {
+        let mut s = small();
+        s.load_row_value(3, 10, 4, 0b1010);
+        s.load_row_value(7, 10, 4, 0b1010);
+        s.load_row_value(9, 10, 4, 0b0110);
+        let mask = s.search_eq(&[10, 11, 12, 13], 0b1010);
+        assert_eq!(mask[0] & (1 << 3), 1 << 3);
+        assert_eq!(mask[0] & (1 << 7), 1 << 7);
+        assert_eq!(mask[0] & (1 << 9), 0);
+        // rows with all-zero key columns match key 0, not 0b1010
+        assert_eq!(mask[0] & (1 << 0), 0);
+        assert_eq!(s.ledger.searches, 1);
+    }
+
+    #[test]
+    fn masked_copy_shift_moves_fields() {
+        let mut s = small();
+        // row 2: src field = 0b110100 (6 bits at col 0)
+        s.load_row_value(2, 0, 6, 0b110100);
+        s.load_row_value(4, 0, 6, 0b111111);
+        // mask selects only row 2
+        let mut mask = vec![0u64; s.words_per_col()];
+        mask[0] = 1 << 2;
+        s.masked_copy_shifted(&mask, 0, 6, 10, 6, 2);
+        assert_eq!(s.peek_row_value(2, 10, 6), 0b110100 >> 2);
+        assert_eq!(s.peek_row_value(4, 10, 6), 0, "unmasked row untouched");
+    }
+
+    #[test]
+    fn shift_cost_independent_of_distance() {
+        let mut s1 = small();
+        let mut s2 = small();
+        let mask = vec![u64::MAX; s1.words_per_col()];
+        s1.masked_copy_shifted(&mask, 0, 8, 20, 8, 1);
+        s2.masked_copy_shifted(&mask, 0, 8, 20, 8, 7);
+        assert_eq!(s1.ledger.reads, s2.ledger.reads);
+        assert_eq!(s1.ledger.writes, s2.ledger.writes);
+        assert_eq!(s1.ledger.steps(), 2, "one read + one write per shift");
+    }
+
+    #[test]
+    fn or_reduce_collects_sticky() {
+        let mut s = small();
+        s.load_row_value(1, 0, 4, 0b0100);
+        s.load_row_value(2, 0, 4, 0b0000);
+        let mask = vec![u64::MAX; s.words_per_col()];
+        s.masked_or_reduce(&mask, 0, 4, 8);
+        assert_eq!(s.peek_row_value(1, 8, 1), 1);
+        assert_eq!(s.peek_row_value(2, 8, 1), 0);
+    }
+
+    #[test]
+    fn non_multiple_of_64_rows() {
+        let mut s = Subarray::new(
+            ArrayGeometry { rows: 100, cols: 8 },
+            OpCosts::proposed_default(),
+        );
+        s.const_col(0, true);
+        // only 100 bits must be set
+        let total: u32 = s.peek_col(0).iter().map(|w| w.count_ones()).sum();
+        assert_eq!(total, 100);
+        assert_eq!(s.ledger.switches, 100);
+    }
+}

@@ -1,0 +1,145 @@
+//! Cross-module integration tests that do not require PJRT artifacts
+//! (runtime-dependent flows live in `runtime_artifacts.rs`).
+
+use mram_pim::cli::Args;
+use mram_pim::config::{AccelConfig, Config};
+use mram_pim::data::Dataset;
+use mram_pim::fpu::procedure::FpEngine;
+use mram_pim::fpu::softfloat;
+use mram_pim::model::Network;
+use mram_pim::nvsim::ArrayGeometry;
+use mram_pim::report;
+
+/// Config file -> accelerator -> cost pipeline end to end.
+#[test]
+fn config_to_costs_pipeline() {
+    let text = r#"
+[array]
+rows = 1024
+cols = 1024
+cell = "1t1r"
+[device]
+t_switch_ns = 2.0
+[format]
+precision = "fp32"
+"#;
+    let cfg = AccelConfig::from_config(&Config::parse(text).unwrap()).unwrap();
+    let costs = cfg.op_costs();
+    // Table-1 switching time must dominate the write latency.
+    assert!(costs.t_write >= 2.0e-9);
+    let model = mram_pim::fpu::FpCostModel::new(costs, cfg.format);
+    assert!(model.t_mac() > 0.0 && model.e_mac() > 0.0);
+}
+
+/// Dataset -> batches with shapes the runtime contract expects.
+#[test]
+fn dataset_feeds_runtime_shapes() {
+    let mut d = Dataset::synthetic(512, 1);
+    let b = d.next_batch(mram_pim::runtime::TRAIN_BATCH);
+    assert_eq!(b.images.len(), mram_pim::runtime::TRAIN_BATCH * 784);
+    assert_eq!(b.labels.len(), mram_pim::runtime::TRAIN_BATCH);
+    assert!(b.labels.iter().all(|&l| (0..10).contains(&l)));
+    let e = d.full_batch(mram_pim::runtime::EVAL_BATCH);
+    assert_eq!(e.images.len(), mram_pim::runtime::EVAL_BATCH * 784);
+}
+
+/// A full MAC through the subarray engine agrees with host arithmetic —
+/// the complete substrate chain (device -> sim -> logic -> fpu).
+#[test]
+fn subarray_mac_equals_host() {
+    let mut engine = FpEngine::new(
+        ArrayGeometry { rows: 64, cols: 256 },
+        mram_pim::nvsim::OpCosts::proposed_default(),
+    );
+    let pairs: Vec<(u32, u32)> = vec![
+        (1.5f32.to_bits(), 2.25f32.to_bits()),
+        ((-0.375f32).to_bits(), 8.0f32.to_bits()),
+        (3.0e20f32.to_bits(), 2.0e20f32.to_bits()),
+    ];
+    let prods = engine.mul(&pairs);
+    assert_eq!(f32::from_bits(prods[0]), 1.5 * 2.25);
+    assert_eq!(f32::from_bits(prods[1]), -3.0);
+    assert!(f32::from_bits(prods[2]).is_infinite());
+
+    let sums = engine.add(&[(prods[0], 1.0f32.to_bits())]);
+    assert_eq!(f32::from_bits(sums[0]), 1.5 * 2.25 + 1.0);
+}
+
+/// The report layer renders every figure with the calibrated ratios.
+#[test]
+fn reports_render_with_ratios() {
+    let f5 = report::fig5();
+    assert!(f5.contains("×"));
+    let f6 = report::fig6(100);
+    // extract the normalised line and sanity check the three ratios
+    let line = f6
+        .lines()
+        .find(|l| l.contains("normalised over FloatPIM"))
+        .expect("ratio line");
+    assert!(line.contains("area") && line.contains("energy"));
+    assert!(!report::table1().is_empty());
+    assert!(!report::fast_switch().is_empty());
+    assert!(!report::fa_table().is_empty());
+}
+
+/// CLI arg parsing drives the same config the coordinator consumes.
+#[test]
+fn cli_roundtrip() {
+    let argv: Vec<String> = ["train", "--steps", "12", "--lr", "0.125", "--no-deep-validate"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let a = Args::parse(&argv).unwrap();
+    assert_eq!(a.usize_or("steps", 0).unwrap(), 12);
+    assert_eq!(a.f64_or("lr", 0.0).unwrap(), 0.125);
+    assert!(a.switch("no-deep-validate"));
+}
+
+/// Workload accounting matches a hand-computed LeNet-5 total.
+#[test]
+fn lenet_step_macs_hand_checked() {
+    let net = Network::lenet5();
+    let w = net.training_work(32);
+    // fwd per sample: 86400 + 115200 + 18624 + 970 = 221,194
+    let fwd = 221_194u64 * 32;
+    assert_eq!(w.macs_fwd, fwd);
+    assert_eq!(w.macs_bwd, 2 * fwd);
+    assert_eq!(w.macs_wu, 21_669);
+    assert_eq!(w.total_macs(), 3 * fwd + 21_669);
+}
+
+/// softfloat and the dataset compose: a dot product computed entirely
+/// with PIM ops matches the host (FTZ) result closely.
+#[test]
+fn pim_dot_product_on_real_data() {
+    let d = Dataset::synthetic(2, 3).full_batch(2);
+    let x = &d.images[0..784];
+    let y = &d.images[784..1568];
+    let mut acc_pim = 0f32;
+    let mut acc_host = 0f32;
+    for i in 0..784 {
+        acc_pim = softfloat::pim_add_f32(acc_pim, softfloat::pim_mul_f32(x[i], y[i]));
+        acc_host = softfloat::ftz(acc_host + softfloat::ftz(x[i] * y[i]));
+    }
+    assert_eq!(acc_pim.to_bits(), acc_host.to_bits(), "{acc_pim} vs {acc_host}");
+}
+
+/// Report CSV writer round-trips.
+#[test]
+fn csv_writer_roundtrip() {
+    let dir = std::env::temp_dir().join("mram_pim_test_csv");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("fig5.csv");
+    report::write_csv(
+        path.to_str().unwrap(),
+        "design,latency_ns,energy_pj",
+        &[
+            vec!["proposed".into(), "4364".into(), "85.4".into()],
+            vec!["floatpim".into(), "7605".into(), "290".into()],
+        ],
+    )
+    .unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(text.lines().count(), 3);
+    assert!(text.contains("proposed"));
+}

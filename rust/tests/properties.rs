@@ -1,0 +1,308 @@
+//! Property-based tests (using the crate's own `prop` engine, the
+//! offline substitute for proptest — see DESIGN.md §2).
+
+use mram_pim::device::LogicOp;
+use mram_pim::fpu::softfloat::{ftz, pim_add_f32, pim_mul_f32};
+use mram_pim::logic::RippleAdder;
+use mram_pim::model::Network;
+use mram_pim::nvsim::{ArrayGeometry, OpCosts};
+use mram_pim::prop::{check, Rng};
+use mram_pim::sim::{Ledger, OpClass, Subarray};
+
+fn bits_eq(a: f32, b: f32) -> bool {
+    a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan())
+}
+
+/// softfloat multiply == host IEEE (FTZ) on *arbitrary bit patterns*.
+#[test]
+fn prop_mul_bit_exact_any_pattern() {
+    check(
+        "mul == host (FTZ)",
+        0xA11CE,
+        200_000,
+        |r: &mut Rng| (r.f32_any(), r.f32_any()),
+        |&(a, b)| {
+            let got = pim_mul_f32(a, b);
+            let want = ftz(ftz(a) * ftz(b));
+            if bits_eq(got, want) {
+                Ok(())
+            } else {
+                Err(format!("{a}*{b}: got {got}, want {want}"))
+            }
+        },
+    );
+}
+
+/// softfloat add == host IEEE (FTZ) on arbitrary bit patterns.
+#[test]
+fn prop_add_bit_exact_any_pattern() {
+    check(
+        "add == host (FTZ)",
+        0xB0B,
+        200_000,
+        |r: &mut Rng| (r.f32_any(), r.f32_any()),
+        |&(a, b)| {
+            let got = pim_add_f32(a, b);
+            let want = ftz(ftz(a) + ftz(b));
+            if bits_eq(got, want) {
+                Ok(())
+            } else {
+                Err(format!("{a}+{b}: got {got}, want {want}"))
+            }
+        },
+    );
+}
+
+/// Adversarial edge patterns get extra density.
+#[test]
+fn prop_fp_edge_patterns() {
+    check(
+        "adversarial fp ops",
+        0xED6E,
+        50_000,
+        |r: &mut Rng| (r.f32_adversarial(), r.f32_adversarial()),
+        |&(a, b)| {
+            let m_ok = bits_eq(pim_mul_f32(a, b), ftz(ftz(a) * ftz(b)));
+            let a_ok = bits_eq(pim_add_f32(a, b), ftz(ftz(a) + ftz(b)));
+            if m_ok && a_ok {
+                Ok(())
+            } else {
+                Err(format!("a={a:?} b={b:?} mul_ok={m_ok} add_ok={a_ok}"))
+            }
+        },
+    );
+}
+
+/// Addition is commutative on the PIM datapath.
+#[test]
+fn prop_add_commutative() {
+    check(
+        "add commutative",
+        7,
+        50_000,
+        |r: &mut Rng| (r.f32_any(), r.f32_any()),
+        |&(a, b)| {
+            if bits_eq(pim_add_f32(a, b), pim_add_f32(b, a)) {
+                Ok(())
+            } else {
+                Err(format!("{a}+{b}"))
+            }
+        },
+    );
+}
+
+/// x * 1 == ftz(x), x + 0 == ftz-ish identity.
+#[test]
+fn prop_identities() {
+    check(
+        "identities",
+        11,
+        50_000,
+        |r: &mut Rng| r.f32_any(),
+        |&x| {
+            let m = pim_mul_f32(x, 1.0);
+            if !bits_eq(m, ftz(x)) {
+                return Err(format!("{x} * 1 = {m}"));
+            }
+            let a = pim_add_f32(x, 0.0);
+            let want = if x.is_nan() { f32::NAN } else { ftz(x) };
+            // (+0) + (+0) keeps +0; -x + 0 keeps sign of x except -0.
+            let want = if ftz(x).to_bits() == 0x8000_0000 { 0.0 } else { want };
+            if bits_eq(a, want) {
+                Ok(())
+            } else {
+                Err(format!("{x} + 0 = {a}, want {want}"))
+            }
+        },
+    );
+}
+
+/// Ledger additivity: splitting an op sequence arbitrarily never changes
+/// the totals (modulo float accumulation noise).
+#[test]
+fn prop_ledger_additive() {
+    let costs = OpCosts::proposed_default();
+    check(
+        "ledger additivity",
+        0x1ED6E4,
+        2_000,
+        |r: &mut Rng| {
+            let n = r.below(200) as usize + 1;
+            let split = r.below(n as u64) as usize;
+            let ops: Vec<(u8, u64)> = (0..n)
+                .map(|_| (r.below(3) as u8, r.below(100)))
+                .collect();
+            (ops, split)
+        },
+        |(ops, split)| {
+            let run = |slice: &[(u8, u64)]| {
+                let mut l = Ledger::new();
+                for &(op, bits) in slice {
+                    let class = match op {
+                        0 => OpClass::Read,
+                        1 => OpClass::Write,
+                        _ => OpClass::Search,
+                    };
+                    l.record(&costs, class, bits, bits / 3);
+                }
+                l
+            };
+            let whole = run(ops);
+            let sum = run(&ops[..*split]) + run(&ops[*split..]);
+            let close = |a: f64, b: f64| (a - b).abs() <= 1e-12 * a.abs().max(1e-30);
+            if whole.steps() == sum.steps()
+                && whole.switches == sum.switches
+                && close(whole.time_s, sum.time_s)
+                && close(whole.energy_j, sum.energy_j)
+            {
+                Ok(())
+            } else {
+                Err(format!("whole {whole:?} != sum {sum:?}"))
+            }
+        },
+    );
+}
+
+/// Multi-bit in-array adder: random widths, random operands, all rows.
+#[test]
+fn prop_ripple_adder_random_widths() {
+    check(
+        "ripple adder",
+        0xADD,
+        60,
+        |r: &mut Rng| {
+            let width = r.below(14) as usize + 2;
+            let vals: Vec<(u64, u64)> = (0..32)
+                .map(|_| {
+                    let m = (1u64 << width) - 1;
+                    (r.next_u64() & m, r.next_u64() & m)
+                })
+                .collect();
+            (width, vals)
+        },
+        |(width, vals)| {
+            let mut s = Subarray::new(
+                ArrayGeometry { rows: 32, cols: 80 },
+                OpCosts::proposed_default(),
+            );
+            let adder = RippleAdder {
+                cache: [60, 61, 62, 63],
+                carry: 64,
+                carry2: 65,
+            };
+            for (row, &(a, b)) in vals.iter().enumerate() {
+                s.load_row_value(row, 0, *width, a);
+                s.load_row_value(row, 20, *width, b);
+            }
+            adder.add(&mut s, 0, 20, 40, *width);
+            for (row, &(a, b)) in vals.iter().enumerate() {
+                let want = (a + b) & ((1u64 << width) - 1);
+                let got = s.peek_row_value(row, 40, *width);
+                if got != want {
+                    return Err(format!("row {row}: {a}+{b} -> {got}, want {want}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Mapper conservation: total cells = storage + copies + workspace, and
+/// subarray count always covers the total.
+#[test]
+fn prop_mapper_conservation() {
+    use mram_pim::arch::MappingPlan;
+    let nets = [Network::lenet5(), Network::lenet_300_100(), Network::cnn_medium()];
+    check(
+        "mapper conservation",
+        0x3A99E4,
+        300,
+        |r: &mut Rng| {
+            (
+                r.below(3) as usize,
+                r.below(64) as usize + 1,          // batch
+                (r.below(64) as usize + 1) * 512,  // lanes
+                r.below(900) as usize + 100,       // lane cols
+                r.below(2) == 0,                   // destructive
+            )
+        },
+        |&(ni, batch, lanes, lane_cols, destructive)| {
+            let plan = MappingPlan::map(&nets[ni], batch, lanes, lane_cols, destructive, 1 << 20);
+            if plan.total_cells()
+                != plan.storage_cells + plan.copy_cells + plan.workspace_cells
+            {
+                return Err("total != sum of parts".into());
+            }
+            if plan.subarrays * (1 << 20) < plan.total_cells() {
+                return Err("subarrays don't cover cells".into());
+            }
+            if !destructive && plan.copy_cells != 0 {
+                return Err("copy tax without destructive FA".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Stateful column ops equal their truth tables for random column data.
+#[test]
+fn prop_stateful_ops_random_columns() {
+    check(
+        "stateful column ops",
+        0x57A7E,
+        200,
+        |r: &mut Rng| {
+            let a: Vec<u64> = (0..2).map(|_| r.next_u64()).collect();
+            let d: Vec<u64> = (0..2).map(|_| r.next_u64()).collect();
+            let op = match r.below(3) {
+                0 => LogicOp::And,
+                1 => LogicOp::Or,
+                _ => LogicOp::Xor,
+            };
+            (a, d, op)
+        },
+        |(a, d, op)| {
+            let mut s = Subarray::new(
+                ArrayGeometry { rows: 128, cols: 4 },
+                OpCosts::proposed_default(),
+            );
+            s.load_col(0, a);
+            s.load_col(1, d);
+            s.stateful(*op, 0, 1);
+            for w in 0..2 {
+                let want = match op {
+                    LogicOp::And => a[w] & d[w],
+                    LogicOp::Or => a[w] | d[w],
+                    LogicOp::Xor => a[w] ^ d[w],
+                };
+                if s.peek_col(1)[w] != want {
+                    return Err(format!("word {w}: {op:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Training-work accounting is linear in batch and monotone in model size.
+#[test]
+fn prop_training_work_linear() {
+    check(
+        "training work linearity",
+        0x11EA4,
+        200,
+        |r: &mut Rng| (r.below(63) as usize + 1, r.below(4) as usize + 1),
+        |&(b, k)| {
+            let net = Network::lenet5();
+            let w1 = net.training_work(b);
+            let wk = net.training_work(b * k);
+            if wk.macs_fwd != w1.macs_fwd * k as u64 {
+                return Err(format!("fwd not linear: {b} vs {}", b * k));
+            }
+            if wk.macs_wu != w1.macs_wu {
+                return Err("weight update must not scale with batch".into());
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,165 @@
+//! PJRT runtime integration: these tests exercise the AOT artifacts
+//! (`make artifacts` must have run; the Makefile `test` target does).
+//! If the artifacts directory is absent the tests skip with a message so
+//! plain `cargo test` still works in a fresh checkout.
+
+use mram_pim::data::Dataset;
+use mram_pim::fpu::softfloat;
+use mram_pim::prop::Rng;
+use mram_pim::runtime::{Runtime, EVAL_BATCH, PIM_LANES, TRAIN_BATCH};
+
+fn runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::load_dir("artifacts").expect("artifacts must load"))
+}
+
+#[test]
+fn init_params_match_model_count() {
+    let Some(rt) = runtime() else { return };
+    let state = rt.init_params(0).unwrap();
+    assert_eq!(state.params.len(), 8);
+    assert_eq!(
+        state.param_count(),
+        mram_pim::model::Network::lenet5().param_count()
+    );
+}
+
+#[test]
+fn init_is_deterministic_in_seed() {
+    let Some(rt) = runtime() else { return };
+    let a = rt.init_params(7).unwrap().to_host().unwrap();
+    let b = rt.init_params(7).unwrap().to_host().unwrap();
+    let c = rt.init_params(8).unwrap().to_host().unwrap();
+    assert_eq!(a, b);
+    assert_ne!(a, c);
+}
+
+#[test]
+fn train_steps_reduce_loss() {
+    let Some(rt) = runtime() else { return };
+    let mut data = Dataset::synthetic(512, 11);
+    let mut state = rt.init_params(11).unwrap();
+    let mut first = None;
+    let mut last = 0.0;
+    for step in 0..30 {
+        let b = data.next_batch(TRAIN_BATCH);
+        let loss = rt.train_step(&mut state, &b.images, &b.labels, 0.05).unwrap();
+        assert!(loss.is_finite(), "step {step} loss {loss}");
+        if first.is_none() {
+            first = Some(loss);
+        }
+        last = loss;
+    }
+    let first = first.unwrap();
+    assert!(
+        last < first - 0.2,
+        "loss should drop markedly: {first} -> {last}"
+    );
+}
+
+#[test]
+fn eval_counts_are_consistent() {
+    let Some(rt) = runtime() else { return };
+    let data = Dataset::synthetic(EVAL_BATCH, 13).full_batch(EVAL_BATCH);
+    let state = rt.init_params(13).unwrap();
+    let (loss, correct) = rt.eval(&state, &data.images, &data.labels).unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+    assert!((0.0..=EVAL_BATCH as f32).contains(&correct));
+    // untrained accuracy should hover near chance (10%), certainly <40%
+    assert!(correct / EVAL_BATCH as f32 <= 0.4, "untrained acc {correct}");
+}
+
+/// Three-way agreement on the PIM multiply: the Pallas bit-level kernel
+/// (via the AOT artifact on PJRT), the rust softfloat gold model, and
+/// host IEEE under FTZ.
+#[test]
+fn pim_mul_three_way_agreement() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(0x7E57);
+    for wave in 0..4 {
+        let (a, b): (Vec<f32>, Vec<f32>) = (0..PIM_LANES)
+            .map(|_| {
+                if wave % 2 == 0 {
+                    (rng.f32_normal(30), rng.f32_normal(30))
+                } else {
+                    (rng.f32_adversarial(), rng.f32_adversarial())
+                }
+            })
+            .unzip();
+        let got = rt.pim_mul(&a, &b).unwrap();
+        for i in 0..PIM_LANES {
+            let rust = softfloat::pim_mul_f32(a[i], b[i]);
+            let host = softfloat::ftz(softfloat::ftz(a[i]) * softfloat::ftz(b[i]));
+            let eq = |x: f32, y: f32| x.to_bits() == y.to_bits() || (x.is_nan() && y.is_nan());
+            assert!(
+                eq(got[i], rust),
+                "kernel vs rust at {i}: {} * {} -> {} vs {}",
+                a[i], b[i], got[i], rust
+            );
+            assert!(
+                eq(rust, host),
+                "rust vs host at {i}: {} * {} -> {} vs {}",
+                a[i], b[i], rust, host
+            );
+        }
+    }
+}
+
+/// Same three-way agreement for the PIM add.
+#[test]
+fn pim_add_three_way_agreement() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(0xADD7);
+    for wave in 0..4 {
+        let (a, b): (Vec<f32>, Vec<f32>) = (0..PIM_LANES)
+            .map(|_| {
+                if wave % 2 == 0 {
+                    (rng.f32_normal(10), rng.f32_normal(10))
+                } else {
+                    (rng.f32_adversarial(), rng.f32_adversarial())
+                }
+            })
+            .unzip();
+        let got = rt.pim_add(&a, &b).unwrap();
+        for i in 0..PIM_LANES {
+            let rust = softfloat::pim_add_f32(a[i], b[i]);
+            let host = softfloat::ftz(softfloat::ftz(a[i]) + softfloat::ftz(b[i]));
+            let eq = |x: f32, y: f32| x.to_bits() == y.to_bits() || (x.is_nan() && y.is_nan());
+            assert!(
+                eq(got[i], rust),
+                "kernel vs rust at {i}: {} + {} -> {} vs {}",
+                a[i], b[i], got[i], rust
+            );
+            assert!(eq(rust, host), "rust vs host at {i}");
+        }
+    }
+}
+
+/// The full coordinator loop: a short run must converge and validate.
+#[test]
+fn coordinator_short_run() {
+    let Some(rt) = runtime() else { return };
+    use mram_pim::coordinator::{Coordinator, RunConfig};
+    let coord = Coordinator::new(rt);
+    let report = coord
+        .run(&RunConfig {
+            steps: 40,
+            lr: 0.05,
+            seed: 5,
+            eval_every: 20,
+            train_size: 1024,
+            test_size: 256,
+            deep_validate_waves: 1,
+            threads: 2,
+        })
+        .unwrap();
+    assert!(report.deep_mismatches == 0);
+    assert!(report.deep_checked > 0);
+    let first = report.losses.first().unwrap().1;
+    let last = report.losses.last().unwrap().1;
+    assert!(last < first, "loss {first} -> {last}");
+    assert!(report.sim_floatpim.energy_j > report.sim_proposed.energy_j);
+}
