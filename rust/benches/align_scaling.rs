@@ -4,7 +4,7 @@
 //!
 //! Run: `cargo bench --bench align_scaling`
 
-use mram_pim::bench::{bench, print_table};
+use mram_pim::bench::{bench, emit};
 use mram_pim::floatpim::FloatPimCostModel;
 use mram_pim::fpu::procedure::FpEngine;
 use mram_pim::fpu::{FloatFormat, FpCostModel};
@@ -64,5 +64,5 @@ fn main() {
         );
         std::hint::black_box(e.add(&pairs));
     })];
-    print_table(&results);
+    emit("align_scaling", &results);
 }

@@ -4,7 +4,7 @@
 //!
 //! Run: `cargo bench --bench fa_steps`
 
-use mram_pim::bench::{bench, print_table};
+use mram_pim::bench::{bench, emit};
 use mram_pim::floatpim::fa::{NorFa, NorFaLayout};
 use mram_pim::logic::fa::{FaLayout, ProposedFa};
 use mram_pim::logic::RippleAdder;
@@ -77,5 +77,5 @@ fn main() {
         adder.add(&mut s, 0, 40, 80, 24);
         std::hint::black_box(s.ledger.steps());
     }));
-    print_table(&results);
+    emit("fa_steps", &results);
 }

@@ -4,10 +4,11 @@
 //!
 //! Run: `cargo bench --bench fig5_mac`
 
-use mram_pim::bench::{bench, print_table};
+use mram_pim::arch::GemmEngine;
+use mram_pim::bench::{bench, emit};
 use mram_pim::floatpim::FloatPimCostModel;
 use mram_pim::fpu::procedure::FpEngine;
-use mram_pim::fpu::FpCostModel;
+use mram_pim::fpu::{FloatFormat, FpCostModel};
 use mram_pim::nvsim::{ArrayGeometry, OpCosts};
 use mram_pim::report;
 
@@ -78,5 +79,20 @@ fn main() {
         );
         std::hint::black_box(e.add(&pairs));
     }));
-    print_table(&results);
+
+    // The functional hot path: MAC waves through the batched GEMM
+    // engine (cached cost model, softfloat fast path, 4 host threads).
+    let engine = GemmEngine::new(OpCosts::proposed_default(), FloatFormat::FP32, 32_768, 4);
+    let (out, inp, batch) = (64usize, 128usize, 32usize);
+    let w: Vec<f32> = (0..out * inp)
+        .map(|i| ((i % 17) as f32 - 8.0) * 0.37)
+        .collect();
+    let xb: Vec<f32> = (0..batch * inp)
+        .map(|i| ((i % 23) as f32 - 11.0) * 0.19)
+        .collect();
+    results.push(bench("gemm engine 64x128 batch 32 (threads 4)", 2, 50, || {
+        std::hint::black_box(engine.gemm(&w, &xb, None, out, inp, batch));
+    }));
+
+    emit("fig5_mac", &results);
 }

@@ -5,7 +5,7 @@
 //! Run: `cargo bench --bench fig6_training`
 
 use mram_pim::arch::{AccelKind, Accelerator};
-use mram_pim::bench::{bench, print_table};
+use mram_pim::bench::{bench, emit};
 use mram_pim::fpu::FloatFormat;
 use mram_pim::model::Network;
 use mram_pim::report;
@@ -78,5 +78,5 @@ fn main() {
         let a = Accelerator::new(AccelKind::FloatPim, FloatFormat::FP32, 32_768);
         std::hint::black_box(a.area_m2(&netc, 32));
     }));
-    print_table(&results);
+    emit("fig6_training", &results);
 }

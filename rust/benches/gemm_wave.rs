@@ -1,0 +1,129 @@
+//! Wave-parallel GEMM engine vs the seed scalar path — the acceptance
+//! bench for the batched-engine PR: at batch 32 with `threads = 4`, the
+//! engine must beat the seed's single-threaded per-call-model scalar
+//! GEMV loop by ≥5× mean latency, while `rust/tests/properties.rs`
+//! proves the results bit-unchanged.
+//!
+//! Run: `cargo bench --bench gemm_wave` (add `-- --json` for the
+//! machine-readable `BENCH_gemm_wave.json`; numbers land in
+//! EXPERIMENTS.md §Perf).
+
+use mram_pim::arch::GemmEngine;
+use mram_pim::bench::{bench, emit};
+use mram_pim::fpu::softfloat::{pim_add_f32, pim_mul_f32};
+use mram_pim::fpu::{FloatFormat, FpCostModel};
+use mram_pim::model::Layer;
+use mram_pim::nvsim::OpCosts;
+use mram_pim::prop::Rng;
+
+/// The seed's scalar `pim_gemv` hot path, frozen verbatim as the perf
+/// baseline: cost model rebuilt on every call, an ungrown output `Vec`,
+/// and one scalar two-rounding MAC chain per element on one thread.
+fn seed_scalar_gemv(w: &[f32], x: &[f32], out: usize, inp: usize) -> (Vec<f32>, f64, f64) {
+    let model = FpCostModel::new(OpCosts::proposed_default(), FloatFormat::FP32);
+    let mut y = Vec::new();
+    for o in 0..out {
+        let mut acc = 0.0f32;
+        for i in 0..inp {
+            acc = pim_add_f32(acc, pim_mul_f32(w[o * inp + i], x[i]));
+        }
+        y.push(acc);
+    }
+    (y, model.t_mac(), model.e_mac())
+}
+
+fn main() {
+    let (out, inp, batch) = (128usize, 256usize, 32usize);
+    let mut rng = Rng::new(0x6E44);
+    let w: Vec<f32> = (0..out * inp).map(|_| rng.f32_normal(4)).collect();
+    let xb: Vec<f32> = (0..batch * inp).map(|_| rng.f32_normal(4)).collect();
+
+    let mut results = Vec::new();
+
+    let r_seed = bench(
+        &format!("seed scalar gemv x{batch} ({out}x{inp})"),
+        1,
+        10,
+        || {
+            for b in 0..batch {
+                std::hint::black_box(seed_scalar_gemv(
+                    &w,
+                    &xb[b * inp..(b + 1) * inp],
+                    out,
+                    inp,
+                ));
+            }
+        },
+    );
+
+    let e1 = GemmEngine::new(OpCosts::proposed_default(), FloatFormat::FP32, 32_768, 1);
+    let e4 = GemmEngine::new(OpCosts::proposed_default(), FloatFormat::FP32, 32_768, 4);
+    let r1 = bench(
+        &format!("gemm engine {out}x{inp} batch {batch} (threads 1)"),
+        1,
+        10,
+        || {
+            std::hint::black_box(e1.gemm(&w, &xb, None, out, inp, batch));
+        },
+    );
+    let r4 = bench(
+        &format!("gemm engine {out}x{inp} batch {batch} (threads 4)"),
+        1,
+        10,
+        || {
+            std::hint::black_box(e4.gemm(&w, &xb, None, out, inp, batch));
+        },
+    );
+
+    // Conv2d through the same engine (LeNet conv2 shape, im2col lowering).
+    let conv = Layer::Conv2d {
+        in_ch: 6,
+        out_ch: 12,
+        kh: 5,
+        kw: 5,
+        in_h: 12,
+        in_w: 12,
+    };
+    let cw: Vec<f32> = (0..12 * 6 * 5 * 5).map(|_| rng.f32_normal(2)).collect();
+    let cb: Vec<f32> = (0..12).map(|_| rng.f32_normal(1)).collect();
+    let cx: Vec<f32> = (0..batch * 6 * 12 * 12).map(|_| rng.f32_normal(2)).collect();
+    let r_conv = bench(
+        &format!("conv2d im2col 6->12 5x5 batch {batch} (threads 4)"),
+        1,
+        10,
+        || {
+            std::hint::black_box(e4.conv2d(&conv, &cw, Some(&cb), &cx, batch));
+        },
+    );
+
+    let speedup_1t = r_seed.mean_ns / r1.mean_ns;
+    let speedup_4t = r_seed.mean_ns / r4.mean_ns;
+    let total_macs = (out * inp * batch) as f64;
+    println!(
+        "engine throughput: {:.1}M MACs/s (threads 4, host)",
+        r4.throughput(total_macs) / 1e6
+    );
+    println!(
+        "speedup over seed scalar path @ batch {batch}: {speedup_1t:.1}x (threads 1), \
+         {speedup_4t:.1}x (threads 4)  [acceptance: >=5x]"
+    );
+
+    results.push(r_seed);
+    results.push(r1);
+    results.push(r4);
+    results.push(r_conv);
+    emit("gemm_wave", &results);
+
+    // Acceptance gate: >=5x by default; overridable (e.g. a lower floor
+    // on noisy shared CI runners via GEMM_WAVE_MIN_SPEEDUP=3).
+    let min_speedup: f64 = std::env::var("GEMM_WAVE_MIN_SPEEDUP")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(5.0);
+    assert!(
+        speedup_4t >= min_speedup,
+        "acceptance: engine must be >={min_speedup}x the seed scalar path at \
+         batch 32 with threads = 4; measured {speedup_4t:.2}x"
+    );
+    println!("gemm_wave OK");
+}

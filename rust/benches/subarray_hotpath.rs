@@ -5,8 +5,10 @@
 //!
 //! Run: `cargo bench --bench subarray_hotpath`
 
-use mram_pim::bench::{bench, print_table, BenchResult};
+use mram_pim::arch::GemmEngine;
+use mram_pim::bench::{bench, emit, BenchResult};
 use mram_pim::device::LogicOp;
+use mram_pim::fpu::FloatFormat;
 use mram_pim::nvsim::{ArrayGeometry, OpCosts};
 use mram_pim::sim::Subarray;
 
@@ -64,5 +66,24 @@ fn main() {
     );
     results.push(r);
 
-    print_table(&results);
+    // Functional-path counterpart: the batched GEMM engine's host
+    // throughput (the §Perf headline next to the bit-level number).
+    let engine = GemmEngine::new(costs, FloatFormat::FP32, 32_768, 4);
+    let (out, inp, batch) = (128usize, 256usize, 32usize);
+    let w: Vec<f32> = (0..out * inp)
+        .map(|i| ((i % 13) as f32 - 6.0) * 0.31)
+        .collect();
+    let xb: Vec<f32> = (0..batch * inp)
+        .map(|i| ((i % 19) as f32 - 9.0) * 0.23)
+        .collect();
+    let rg = bench("gemm engine wave 128x256 batch 32 (4 threads)", 1, 20, || {
+        std::hint::black_box(engine.gemm(&w, &xb, None, out, inp, batch));
+    });
+    println!(
+        "gemm engine throughput: {:.1}M MACs/s (host, 4 threads)",
+        rg.throughput((out * inp * batch) as f64) / 1e6
+    );
+    results.push(rg);
+
+    emit("subarray_hotpath", &results);
 }

@@ -1,6 +1,7 @@
 //! The accelerator-level model: MAC costs + mapping + scheduling for one
 //! full training run.  This is what regenerates Fig. 6.
 
+use crate::arch::gemm::GemmEngine;
 use crate::arch::mapper::{MappingPlan, FLOATPIM_LANE_COLS, OURS_LANE_COLS};
 use crate::device::{CellKind, TechNode};
 use crate::floatpim::{FloatPimCostModel, ReRamParams};
@@ -85,6 +86,21 @@ impl Accelerator {
             ours: Some(FpCostModel::new(costs, format)),
             theirs: None,
         }
+    }
+
+    /// The cached analytic cost model of the proposed datapath (`None`
+    /// for the FloatPIM baseline, which is priced per-MAC only).  This
+    /// is the model GEMV/GEMM traffic prices from — constructed once
+    /// here, never per call.
+    pub fn fp_model(&self) -> Option<&FpCostModel> {
+        self.ours.as_ref()
+    }
+
+    /// A wave-parallel GEMM engine over this accelerator's lanes, priced
+    /// from the cached cost model.  `None` for the FloatPIM baseline.
+    pub fn gemm_engine(&self, threads: usize) -> Option<GemmEngine> {
+        self.ours
+            .map(|m| GemmEngine::from_model(m, self.lanes, threads))
     }
 
     // ---- MAC-level (Fig. 5) ----
@@ -317,6 +333,26 @@ mod tests {
         let wide = proposed().train_step_cost(&net, 32);
         assert!(wide.latency_s < narrow.latency_s);
         assert!((wide.energy_j / narrow.energy_j - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gemm_engine_prices_from_cached_model() {
+        let a = proposed();
+        let engine = a.gemm_engine(2).expect("proposed design has an engine");
+        let (out, inp, batch) = (8usize, 16usize, 4usize);
+        let w = vec![0.5f32; out * inp];
+        let x = vec![2.0f32; batch * inp];
+        let r = engine.gemm(&w, &x, None, out, inp, batch);
+        let macs = (out * inp * batch) as u64;
+        assert_eq!(r.macs, macs);
+        let model = a.fp_model().expect("cached model");
+        let waves = macs.div_ceil(a.lanes as u64);
+        assert_eq!(r.waves, waves);
+        assert!((r.latency_s - waves as f64 * model.t_mac()).abs() <= 1e-18);
+        assert!((r.energy_j - macs as f64 * model.e_mac()).abs() <= 1e-18);
+        // The baseline is priced per-MAC only: no functional engine.
+        assert!(floatpim().gemm_engine(1).is_none());
+        assert!(floatpim().fp_model().is_none());
     }
 
     #[test]

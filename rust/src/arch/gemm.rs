@@ -1,0 +1,622 @@
+//! Wave-parallel batched in-array GEMM: the single hot path for dense
+//! and convolutional functional traffic.
+//!
+//! The physical accelerator executes a matrix product as *waves*: up to
+//! `lanes` row-parallel MAC lanes fire per array step, so a `[batch,
+//! inp] × [out, inp]ᵀ` product is `ceil(batch·out·inp / lanes)` waves of
+//! identical latency.  The software model mirrors that shape: the
+//! `batch × out` independent dot products are tiled into contiguous row
+//! waves and fanned out across `std::thread::scope` workers, each of
+//! which runs the scalar PIM fp32 chain (two roundings per MAC, FTZ) so
+//! the result is bit-identical to what the array — and the seed's
+//! single-threaded `pim_gemv` — would produce.  Per-thread MAC ledgers
+//! are merged at the end and priced once from the engine's *cached*
+//! [`FpCostModel`] (`t_mac`/`e_mac` are hoisted out of the per-call
+//! path; the seed rebuilt the model on every GEMV call).
+//!
+//! [`GemmEngine::conv2d`] lowers `Layer::Conv2d` through im2col onto the
+//! same engine, and [`GemmEngine::forward`] runs a whole [`Network`]
+//! functionally — there is no scalar fallback for MAC-bearing layers.
+
+use std::thread;
+
+use crate::fpu::softfloat::{pim_add_f32, pim_mul_f32};
+use crate::fpu::{FloatFormat, FpCostModel};
+use crate::model::{Layer, Network};
+use crate::nvsim::OpCosts;
+use crate::prop::Rng;
+
+/// Result of a batched in-array GEMM: values + priced cost.
+#[derive(Debug, Clone)]
+pub struct GemmResult {
+    /// Row-major `[batch, out]` (for [`GemmEngine::conv2d`]:
+    /// `[batch, out_ch, oh, ow]`).
+    pub y: Vec<f32>,
+    pub macs: u64,
+    /// Row-parallel array waves the schedule needed.
+    pub waves: u64,
+    pub latency_s: f64,
+    pub energy_j: f64,
+}
+
+/// Aggregate cost of a functional forward pass through the engine.
+#[derive(Debug, Clone, Default)]
+pub struct ForwardResult {
+    /// Final activations, row-major `[batch, out_units]`.
+    pub y: Vec<f32>,
+    pub macs: u64,
+    pub waves: u64,
+    pub latency_s: f64,
+    pub energy_j: f64,
+    /// MAC-bearing layers that executed through the batched GEMM engine
+    /// (dense directly, conv via im2col) — never a scalar fallback.
+    pub gemm_layers: usize,
+}
+
+impl ForwardResult {
+    fn absorb(&mut self, r: &GemmResult) {
+        self.macs += r.macs;
+        self.waves += r.waves;
+        self.latency_s += r.latency_s;
+        self.energy_j += r.energy_j;
+    }
+}
+
+/// The wave-parallel batched GEMM engine.
+///
+/// Construct it once (per accelerator / per worker) and reuse it: the
+/// per-MAC prices are computed at construction, so the per-call path is
+/// pure arithmetic.
+#[derive(Debug, Clone)]
+pub struct GemmEngine {
+    model: FpCostModel,
+    /// Cached per-MAC prices (hoisted out of the per-call path).
+    t_mac: f64,
+    e_mac: f64,
+    /// Row-parallel MAC lanes the array provides per wave.
+    pub lanes: usize,
+    /// Host worker threads the waves fan out across.
+    pub threads: usize,
+}
+
+impl GemmEngine {
+    pub fn new(costs: OpCosts, fmt: FloatFormat, lanes: usize, threads: usize) -> Self {
+        GemmEngine::from_model(FpCostModel::new(costs, fmt), lanes, threads)
+    }
+
+    /// Build from an already-constructed (cached) cost model.
+    pub fn from_model(model: FpCostModel, lanes: usize, threads: usize) -> Self {
+        GemmEngine {
+            t_mac: model.t_mac(),
+            e_mac: model.e_mac(),
+            model,
+            lanes: lanes.max(1),
+            threads: threads.max(1),
+        }
+    }
+
+    /// The cached analytic cost model pricing this engine's traffic.
+    pub fn model(&self) -> &FpCostModel {
+        &self.model
+    }
+
+    /// `Y = X Wᵀ (+ b)`, entirely with PIM fp32 semantics.
+    ///
+    /// `w` is row-major `[out, inp]`, `x_batch` row-major `[batch, inp]`,
+    /// the result row-major `[batch, out]`.  Values are bit-identical to
+    /// the seed scalar chain regardless of `threads`; only wall-clock
+    /// changes.  Latency amortises over `lanes`, energy does not.
+    pub fn gemm(
+        &self,
+        w: &[f32],
+        x_batch: &[f32],
+        bias: Option<&[f32]>,
+        out: usize,
+        inp: usize,
+        batch: usize,
+    ) -> GemmResult {
+        assert_eq!(w.len(), out * inp, "weight shape");
+        assert_eq!(x_batch.len(), batch * inp, "input batch shape");
+        if let Some(b) = bias {
+            assert_eq!(b.len(), out, "bias shape");
+        }
+
+        let rows = batch * out; // independent dot products
+        let mut y = vec![0f32; rows];
+        let mut macs = 0u64;
+        let threads = self.threads.min(rows.max(1));
+        if threads <= 1 {
+            macs = gemm_rows(w, x_batch, bias, out, inp, 0, &mut y);
+        } else {
+            // Fan contiguous row waves out across scoped workers; each
+            // returns its local MAC ledger, merged after the join.
+            let chunk = rows.div_ceil(threads);
+            thread::scope(|s| {
+                let mut handles = Vec::with_capacity(threads);
+                for (t, slice) in y.chunks_mut(chunk).enumerate() {
+                    let start = t * chunk;
+                    handles.push(
+                        s.spawn(move || gemm_rows(w, x_batch, bias, out, inp, start, slice)),
+                    );
+                }
+                for h in handles {
+                    macs += h.join().expect("gemm worker panicked");
+                }
+            });
+        }
+
+        let waves = macs.div_ceil(self.lanes as u64);
+        GemmResult {
+            y,
+            macs,
+            waves,
+            latency_s: waves as f64 * self.t_mac,
+            energy_j: macs as f64 * self.e_mac,
+        }
+    }
+
+    /// `Layer::Conv2d` through the engine: im2col lowering, one batched
+    /// GEMM over all `batch × oh × ow` output pixels, result re-laid-out
+    /// as the conventional `[batch, out_ch, oh, ow]`.
+    pub fn conv2d(
+        &self,
+        layer: &Layer,
+        w: &[f32],
+        bias: Option<&[f32]>,
+        x_batch: &[f32],
+        batch: usize,
+    ) -> GemmResult {
+        let Layer::Conv2d {
+            in_ch,
+            out_ch,
+            kh,
+            kw,
+            in_h,
+            in_w,
+        } = *layer
+        else {
+            panic!("conv2d called on non-conv layer {layer:?}");
+        };
+        assert!(
+            (1..=in_h).contains(&kh) && (1..=in_w).contains(&kw),
+            "kernel {kh}x{kw} does not fit input {in_h}x{in_w}"
+        );
+        let (oh, ow) = (in_h - kh + 1, in_w - kw + 1);
+        let k = in_ch * kh * kw;
+        let ohw = oh * ow;
+        let plane = in_ch * in_h * in_w;
+        assert_eq!(x_batch.len(), batch * plane, "conv input shape");
+        assert_eq!(w.len(), out_ch * k, "conv weight shape");
+
+        // im2col: [batch * oh*ow, k] patch matrix.
+        let mut patches = vec![0f32; batch * ohw * k];
+        for b in 0..batch {
+            im2col_into(
+                &x_batch[b * plane..(b + 1) * plane],
+                in_ch,
+                in_h,
+                in_w,
+                kh,
+                kw,
+                &mut patches[b * ohw * k..(b + 1) * ohw * k],
+            );
+        }
+
+        let r = self.gemm(w, &patches, bias, out_ch, k, batch * ohw);
+
+        // [batch*ohw, out_ch] -> [batch, out_ch, oh, ow].
+        let mut y = vec![0f32; batch * out_ch * ohw];
+        for b in 0..batch {
+            for p in 0..ohw {
+                let src = (b * ohw + p) * out_ch;
+                for oc in 0..out_ch {
+                    y[(b * out_ch + oc) * ohw + p] = r.y[src + oc];
+                }
+            }
+        }
+        GemmResult {
+            y,
+            macs: r.macs,
+            waves: r.waves,
+            latency_s: r.latency_s,
+            energy_j: r.energy_j,
+        }
+    }
+
+    /// Functional forward pass of a whole network.  Conv2d and Dense run
+    /// through [`GemmEngine::gemm`] (conv via im2col); pooling and ReLU
+    /// are element-wise passes over the activations with PIM semantics.
+    pub fn forward(
+        &self,
+        net: &Network,
+        params: &NetworkParams,
+        x_batch: &[f32],
+        batch: usize,
+    ) -> ForwardResult {
+        assert_eq!(params.layers.len(), net.layers.len(), "params/net mismatch");
+        let (c0, h0, w0) = net.input;
+        assert_eq!(x_batch.len(), batch * c0 * h0 * w0, "input batch shape");
+
+        let mut act = x_batch.to_vec();
+        let mut res = ForwardResult::default();
+        for (layer, p) in net.layers.iter().zip(&params.layers) {
+            match *layer {
+                Layer::Conv2d { .. } => {
+                    let lp = p.as_ref().expect("conv layer params");
+                    let r = self.conv2d(layer, &lp.w, Some(&lp.b), &act, batch);
+                    res.absorb(&r);
+                    res.gemm_layers += 1;
+                    act = r.y;
+                }
+                Layer::Dense { inp, out } => {
+                    let lp = p.as_ref().expect("dense layer params");
+                    let r = self.gemm(&lp.w, &act, Some(&lp.b), out, inp, batch);
+                    res.absorb(&r);
+                    res.gemm_layers += 1;
+                    act = r.y;
+                }
+                Layer::AvgPool2 { ch, in_h, in_w } => {
+                    assert_eq!(act.len(), batch * ch * in_h * in_w);
+                    act = avg_pool2(&act, batch * ch, in_h, in_w);
+                    // 3 adds per pooled output ride along at ~1/20 MAC.
+                    let adds = (layer.out_units() * batch) as u64 * 3;
+                    res.energy_j += adds as f64 * self.e_mac / 20.0;
+                }
+                Layer::Relu { units } => {
+                    assert_eq!(act.len(), batch * units);
+                    for v in act.iter_mut() {
+                        // max(0, x); NaN and -0 normalise to +0.
+                        if v.is_nan() || *v <= 0.0 {
+                            *v = 0.0;
+                        }
+                    }
+                }
+            }
+        }
+        res.y = act;
+        res
+    }
+}
+
+/// Free-function entry point: one batched GEMM priced from a cached
+/// model.  `pim_gemv` is the batch-1 special case.
+#[allow(clippy::too_many_arguments)]
+pub fn pim_gemm(
+    w: &[f32],
+    x_batch: &[f32],
+    bias: Option<&[f32]>,
+    out: usize,
+    inp: usize,
+    batch: usize,
+    model: &FpCostModel,
+    lanes: usize,
+    threads: usize,
+) -> GemmResult {
+    GemmEngine::from_model(*model, lanes, threads).gemm(w, x_batch, bias, out, inp, batch)
+}
+
+/// Compute rows `start..start+y.len()` of the flattened `[batch, out]`
+/// output; returns the MAC count of this wave (the worker's ledger).
+fn gemm_rows(
+    w: &[f32],
+    x: &[f32],
+    bias: Option<&[f32]>,
+    out: usize,
+    inp: usize,
+    start: usize,
+    y: &mut [f32],
+) -> u64 {
+    for (j, slot) in y.iter_mut().enumerate() {
+        let r = start + j;
+        let (b, o) = (r / out, r % out);
+        let wrow = &w[o * inp..(o + 1) * inp];
+        let xrow = &x[b * inp..(b + 1) * inp];
+        let mut acc = bias.map(|bb| bb[o]).unwrap_or(0.0);
+        for i in 0..inp {
+            acc = pim_add_f32(acc, pim_mul_f32(wrow[i], xrow[i]));
+        }
+        *slot = acc;
+    }
+    (y.len() * inp) as u64
+}
+
+/// im2col for one `[in_ch, h, w]` sample (valid padding, stride 1):
+/// one row per output pixel, columns ordered `(channel, ky, kx)` to
+/// match the `[out_ch, in_ch, kh, kw]` weight flattening.
+pub fn im2col(input: &[f32], in_ch: usize, h: usize, w: usize, kh: usize, kw: usize) -> Vec<f32> {
+    assert!(
+        (1..=h).contains(&kh) && (1..=w).contains(&kw),
+        "kernel {kh}x{kw} does not fit input {h}x{w}"
+    );
+    let (oh, ow) = (h - kh + 1, w - kw + 1);
+    let mut out = vec![0f32; oh * ow * in_ch * kh * kw];
+    im2col_into(input, in_ch, h, w, kh, kw, &mut out);
+    out
+}
+
+fn im2col_into(
+    input: &[f32],
+    in_ch: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    out: &mut [f32],
+) {
+    let (oh, ow) = (h - kh + 1, w - kw + 1);
+    let k = in_ch * kh * kw;
+    debug_assert_eq!(out.len(), oh * ow * k);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let row = (oy * ow + ox) * k;
+            let mut i = row;
+            for c in 0..in_ch {
+                let plane = &input[c * h * w..(c + 1) * h * w];
+                for dy in 0..kh {
+                    let src = (oy + dy) * w + ox;
+                    out[i..i + kw].copy_from_slice(&plane[src..src + kw]);
+                    i += kw;
+                }
+            }
+        }
+    }
+}
+
+/// 2×2 average pooling (stride 2) over `planes` independent `[h, w]`
+/// planes, through the PIM datapath (3 adds + one ×0.25 per output).
+fn avg_pool2(x: &[f32], planes: usize, in_h: usize, in_w: usize) -> Vec<f32> {
+    let (oh, ow) = (in_h / 2, in_w / 2);
+    let mut y = vec![0f32; planes * oh * ow];
+    for p in 0..planes {
+        let src = &x[p * in_h * in_w..(p + 1) * in_h * in_w];
+        let dst = &mut y[p * oh * ow..(p + 1) * oh * ow];
+        for r in 0..oh {
+            for c in 0..ow {
+                let i = 2 * r * in_w + 2 * c;
+                let sum = pim_add_f32(
+                    pim_add_f32(src[i], src[i + 1]),
+                    pim_add_f32(src[i + in_w], src[i + in_w + 1]),
+                );
+                dst[r * ow + c] = pim_mul_f32(sum, 0.25);
+            }
+        }
+    }
+    y
+}
+
+/// Parameters of one MAC-bearing layer: row-major weights + bias.
+#[derive(Debug, Clone)]
+pub struct LayerParams {
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+impl LayerParams {
+    fn random(rng: &mut Rng, out: usize, fan_in: usize) -> LayerParams {
+        let scale = (1.0 / fan_in as f64).sqrt();
+        LayerParams {
+            w: (0..out * fan_in)
+                .map(|_| ((rng.unit_f64() * 2.0 - 1.0) * scale) as f32)
+                .collect(),
+            b: vec![0.0; out],
+        }
+    }
+}
+
+/// Per-layer parameters for the functional forward path (`None` for
+/// parameter-free layers), deterministic in the seed.
+#[derive(Debug, Clone)]
+pub struct NetworkParams {
+    pub layers: Vec<Option<LayerParams>>,
+}
+
+impl NetworkParams {
+    /// Fan-in-scaled uniform init, deterministic in `seed`.
+    pub fn init(net: &Network, seed: u64) -> NetworkParams {
+        let mut rng = Rng::new(seed);
+        let layers = net
+            .layers
+            .iter()
+            .map(|l| match *l {
+                Layer::Conv2d {
+                    in_ch,
+                    out_ch,
+                    kh,
+                    kw,
+                    ..
+                } => Some(LayerParams::random(&mut rng, out_ch, in_ch * kh * kw)),
+                Layer::Dense { inp, out } => Some(LayerParams::random(&mut rng, out, inp)),
+                _ => None,
+            })
+            .collect();
+        NetworkParams { layers }
+    }
+
+    /// Total parameter count (must match [`Network::param_count`]).
+    pub fn param_count(&self) -> usize {
+        self.layers
+            .iter()
+            .flatten()
+            .map(|p| p.w.len() + p.b.len())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpu::softfloat::ftz;
+
+    fn engine(threads: usize) -> GemmEngine {
+        GemmEngine::new(
+            OpCosts::proposed_default(),
+            FloatFormat::FP32,
+            1024,
+            threads,
+        )
+    }
+
+    fn host_chain(w: &[f32], x: &[f32], bias: Option<&[f32]>, o: usize, inp: usize) -> f32 {
+        let mut acc = bias.map(|b| b[o]).unwrap_or(0.0);
+        for i in 0..inp {
+            acc = ftz(acc + ftz(w[o * inp + i] * x[i]));
+        }
+        acc
+    }
+
+    fn rand_vec(rng: &mut Rng, n: usize, scale: i64) -> Vec<f32> {
+        (0..n).map(|_| rng.f32_normal(scale)).collect()
+    }
+
+    #[test]
+    fn gemm_matches_host_chain_bit_exactly() {
+        let mut rng = Rng::new(0x6E31);
+        let (out, inp, batch) = (9, 37, 5);
+        let w = rand_vec(&mut rng, out * inp, 3);
+        let x = rand_vec(&mut rng, batch * inp, 3);
+        let b = rand_vec(&mut rng, out, 2);
+        let got = engine(3).gemm(&w, &x, Some(&b), out, inp, batch);
+        assert_eq!(got.macs, (out * inp * batch) as u64);
+        for bi in 0..batch {
+            for o in 0..out {
+                let want = host_chain(&w, &x[bi * inp..(bi + 1) * inp], Some(&b), o, inp);
+                assert_eq!(
+                    got.y[bi * out + o].to_bits(),
+                    want.to_bits(),
+                    "batch {bi} row {o}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn thread_count_never_changes_bits() {
+        let mut rng = Rng::new(0x7412);
+        let (out, inp, batch) = (13, 29, 4);
+        let w = rand_vec(&mut rng, out * inp, 6);
+        let x = rand_vec(&mut rng, batch * inp, 6);
+        let base = engine(1).gemm(&w, &x, None, out, inp, batch);
+        for threads in [2, 3, 8, 64] {
+            let r = engine(threads).gemm(&w, &x, None, out, inp, batch);
+            assert_eq!(r.y.len(), base.y.len());
+            for (a, b) in r.y.iter().zip(&base.y) {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads={threads}");
+            }
+            assert_eq!(r.macs, base.macs);
+            assert_eq!(r.waves, base.waves);
+        }
+    }
+
+    #[test]
+    fn latency_amortises_over_lanes_energy_does_not() {
+        let mut rng = Rng::new(1);
+        let (out, inp, batch) = (16, 32, 8);
+        let w = rand_vec(&mut rng, out * inp, 2);
+        let x = rand_vec(&mut rng, batch * inp, 2);
+        let narrow = GemmEngine::new(OpCosts::proposed_default(), FloatFormat::FP32, 256, 2)
+            .gemm(&w, &x, None, out, inp, batch);
+        let wide = GemmEngine::new(OpCosts::proposed_default(), FloatFormat::FP32, 4096, 2)
+            .gemm(&w, &x, None, out, inp, batch);
+        assert!(wide.latency_s < narrow.latency_s);
+        assert_eq!(wide.energy_j, narrow.energy_j);
+        assert!(wide.waves < narrow.waves);
+    }
+
+    #[test]
+    fn conv2d_im2col_matches_direct_convolution() {
+        let layer = Layer::Conv2d {
+            in_ch: 2,
+            out_ch: 3,
+            kh: 3,
+            kw: 3,
+            in_h: 6,
+            in_w: 5,
+        };
+        let (in_ch, out_ch, kh, kw, in_h, in_w) = (2usize, 3usize, 3usize, 3usize, 6usize, 5usize);
+        let (oh, ow) = (in_h - kh + 1, in_w - kw + 1);
+        let k = in_ch * kh * kw;
+        let batch = 2;
+        let mut rng = Rng::new(0xC04);
+        let w = rand_vec(&mut rng, out_ch * k, 2);
+        let b = rand_vec(&mut rng, out_ch, 1);
+        let x = rand_vec(&mut rng, batch * in_ch * in_h * in_w, 2);
+
+        let got = engine(2).conv2d(&layer, &w, Some(&b), &x, batch);
+        assert_eq!(got.y.len(), batch * out_ch * oh * ow);
+        assert_eq!(got.macs, (batch * oh * ow * out_ch * k) as u64);
+
+        // Direct scalar convolution with the same (c, ky, kx) MAC order.
+        for bi in 0..batch {
+            let sample = &x[bi * in_ch * in_h * in_w..(bi + 1) * in_ch * in_h * in_w];
+            for oc in 0..out_ch {
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let mut acc = b[oc];
+                        for c in 0..in_ch {
+                            for dy in 0..kh {
+                                for dx in 0..kw {
+                                    let xv = sample[c * in_h * in_w + (oy + dy) * in_w + ox + dx];
+                                    let wv = w[oc * k + c * kh * kw + dy * kw + dx];
+                                    acc = ftz(acc + ftz(wv * xv));
+                                }
+                            }
+                        }
+                        let gi = (bi * out_ch + oc) * oh * ow + oy * ow + ox;
+                        assert_eq!(
+                            got.y[gi].to_bits(),
+                            acc.to_bits(),
+                            "b{bi} oc{oc} ({oy},{ox})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn im2col_shape_and_content() {
+        // 1 channel, 3x3 input, 2x2 kernel -> 4 patches of 4.
+        let input: Vec<f32> = (1..=9).map(|v| v as f32).collect();
+        let m = im2col(&input, 1, 3, 3, 2, 2);
+        assert_eq!(m.len(), 4 * 4);
+        assert_eq!(&m[0..4], &[1.0, 2.0, 4.0, 5.0]);
+        assert_eq!(&m[12..16], &[5.0, 6.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn forward_runs_lenet5_through_gemm_only() {
+        let net = Network::lenet5();
+        let params = NetworkParams::init(&net, 7);
+        assert_eq!(params.param_count(), net.param_count());
+        let batch = 3;
+        let mut rng = Rng::new(0xF00);
+        let x: Vec<f32> = (0..batch * 784).map(|_| rng.unit_f64() as f32).collect();
+        let r = engine(4).forward(&net, &params, &x, batch);
+        assert_eq!(r.y.len(), batch * 10);
+        assert!(r.y.iter().all(|v| v.is_finite()));
+        // All 4 MAC-bearing layers (2 conv + 2 dense) went through GEMM.
+        assert_eq!(r.gemm_layers, 4);
+        // MAC accounting matches the workload model's forward count.
+        let fwd_per_sample: u64 = net.layers.iter().map(|l| l.macs_fwd()).sum();
+        assert_eq!(r.macs, fwd_per_sample * batch as u64);
+        assert!(r.latency_s > 0.0 && r.energy_j > 0.0);
+    }
+
+    #[test]
+    fn gemv_is_the_batch_1_special_case() {
+        let mut rng = Rng::new(0xB1);
+        let (out, inp) = (11, 23);
+        let w = rand_vec(&mut rng, out * inp, 4);
+        let x = rand_vec(&mut rng, inp, 4);
+        let model = FpCostModel::proposed_fp32();
+        let g = pim_gemm(&w, &x, None, out, inp, 1, &model, 512, 2);
+        let v = crate::arch::pim_gemv(&w, &x, None, out, inp, &model, 512);
+        assert_eq!(g.y.len(), v.y.len());
+        for (a, b) in g.y.iter().zip(&v.y) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(g.macs, v.macs);
+        assert_eq!(g.latency_s, v.latency_s);
+        assert_eq!(g.energy_j, v.energy_j);
+    }
+}

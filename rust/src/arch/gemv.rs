@@ -1,12 +1,14 @@
-//! In-array matrix–vector product: how a dense layer actually executes
-//! on the PIM fabric.  Every multiply and every accumulate goes through
-//! the PIM fp32 datapath (two roundings per MAC, FTZ) — so the result is
-//! exactly what the physical array would produce — and the traffic is
-//! priced with the analytic cost model.
+//! In-array matrix–vector product: the batch-1 special case of the
+//! wave-parallel GEMM engine ([`crate::arch::gemm`]).
+//!
+//! Every multiply and every accumulate goes through the PIM fp32
+//! datapath (two roundings per MAC, FTZ) — so the result is exactly what
+//! the physical array would produce — and the traffic is priced from a
+//! *cached* [`FpCostModel`]: the seed rebuilt the model on every call,
+//! which dominated the cost of small GEMVs (see EXPERIMENTS.md §Perf).
 
-use crate::fpu::softfloat::{pim_add_f32, pim_mul_f32};
-use crate::fpu::{FloatFormat, FpCostModel};
-use crate::nvsim::OpCosts;
+use crate::arch::gemm::GemmEngine;
+use crate::fpu::FpCostModel;
 
 /// Result of an in-array GEMV: values + priced cost.
 #[derive(Debug, Clone)]
@@ -20,34 +22,23 @@ pub struct GemvResult {
 /// `y = W x + b` computed entirely with PIM fp32 semantics.
 ///
 /// `w` is row-major `[out, inp]`.  `lanes` is the row-parallelism the
-/// array provides: latency amortises over it, energy does not.
+/// array provides: latency amortises over it, energy does not.  Takes
+/// the caller's cached cost model; output is pre-sized by the engine.
 pub fn pim_gemv(
     w: &[f32],
     x: &[f32],
     b: Option<&[f32]>,
     out: usize,
     inp: usize,
-    costs: OpCosts,
+    model: &FpCostModel,
     lanes: usize,
 ) -> GemvResult {
-    assert_eq!(w.len(), out * inp);
-    assert_eq!(x.len(), inp);
-    let model = FpCostModel::new(costs, FloatFormat::FP32);
-    let mut y = Vec::with_capacity(out);
-    for o in 0..out {
-        let mut acc = b.map(|b| b[o]).unwrap_or(0.0);
-        for i in 0..inp {
-            acc = pim_add_f32(acc, pim_mul_f32(w[o * inp + i], x[i]));
-        }
-        y.push(acc);
-    }
-    let macs = (out * inp) as u64;
-    let waves = macs.div_ceil(lanes as u64);
+    let r = GemmEngine::from_model(*model, lanes, 1).gemm(w, x, b, out, inp, 1);
     GemvResult {
-        y,
-        macs,
-        latency_s: waves as f64 * model.t_mac(),
-        energy_j: macs as f64 * model.e_mac(),
+        y: r.y,
+        macs: r.macs,
+        latency_s: r.latency_s,
+        energy_j: r.energy_j,
     }
 }
 
@@ -76,7 +67,8 @@ mod tests {
         let w: Vec<f32> = (0..out * inp).map(|_| rng.f32_normal(3)).collect();
         let x: Vec<f32> = (0..inp).map(|_| rng.f32_normal(3)).collect();
         let b: Vec<f32> = (0..out).map(|_| rng.f32_normal(3)).collect();
-        let got = pim_gemv(&w, &x, Some(&b), out, inp, OpCosts::proposed_default(), 1024);
+        let model = FpCostModel::proposed_fp32();
+        let got = pim_gemv(&w, &x, Some(&b), out, inp, &model, 1024);
         let want = host_gemv(&w, &x, Some(&b), out, inp);
         for (g, w_) in got.y.iter().zip(&want) {
             assert_eq!(g.to_bits(), w_.to_bits());
@@ -92,7 +84,8 @@ mod tests {
         let (out, inp) = (8, 192);
         let w: Vec<f32> = (0..out * inp).map(|_| rng.f32_normal(2)).collect();
         let x: Vec<f32> = (0..inp).map(|_| rng.f32_normal(2)).collect();
-        let got = pim_gemv(&w, &x, None, out, inp, OpCosts::proposed_default(), 1024);
+        let model = FpCostModel::proposed_fp32();
+        let got = pim_gemv(&w, &x, None, out, inp, &model, 1024);
         for o in 0..out {
             let exact: f64 = (0..inp)
                 .map(|i| w[o * inp + i] as f64 * x[i] as f64)
@@ -109,8 +102,9 @@ mod tests {
         let (out, inp) = (32, 64);
         let w: Vec<f32> = (0..out * inp).map(|_| rng.f32_normal(2)).collect();
         let x: Vec<f32> = (0..inp).map(|_| rng.f32_normal(2)).collect();
-        let narrow = pim_gemv(&w, &x, None, out, inp, OpCosts::proposed_default(), 256);
-        let wide = pim_gemv(&w, &x, None, out, inp, OpCosts::proposed_default(), 2048);
+        let model = FpCostModel::proposed_fp32();
+        let narrow = pim_gemv(&w, &x, None, out, inp, &model, 256);
+        let wide = pim_gemv(&w, &x, None, out, inp, &model, 2048);
         assert!(wide.latency_s < narrow.latency_s);
         assert_eq!(wide.energy_j, narrow.energy_j);
     }

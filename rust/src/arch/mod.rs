@@ -1,14 +1,17 @@
-//! Accelerator architecture: tiles, the DNN-layer→array mapper and the
+//! Accelerator architecture: tiles, the DNN-layer→array mapper, the
 //! training-phase scheduler that together produce the paper's Fig. 6
-//! (training area / latency / energy vs FloatPIM).
+//! (training area / latency / energy vs FloatPIM), and the wave-parallel
+//! batched GEMM engine every functional dense/conv workload runs through.
 
 pub mod accel;
+pub mod gemm;
 pub mod gemv;
 pub mod mapper;
 pub mod schedule;
 pub mod tile;
 
 pub use accel::{Accelerator, AccelKind, RunCost};
+pub use gemm::{im2col, pim_gemm, ForwardResult, GemmEngine, GemmResult, LayerParams, NetworkParams};
 pub use gemv::{pim_gemv, GemvResult};
 pub use mapper::{MappingPlan, OURS_LANE_COLS, FLOATPIM_LANE_COLS};
 pub use schedule::PipelineSchedule;

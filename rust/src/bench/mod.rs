@@ -2,7 +2,11 @@
 //! same warmup + timed-iterations pattern with mean/p50/p99 reporting).
 //!
 //! Benches under `rust/benches/*.rs` are `harness = false` binaries that
-//! call [`bench`] and [`print_table`]; `cargo bench` runs them.
+//! call [`bench`] and [`emit`]; `cargo bench` runs them.  Passing
+//! `--json` on the bench command line (e.g. `cargo bench --bench
+//! gemm_wave -- --json`) additionally writes a `BENCH_<name>.json`
+//! machine-readable result file, so the perf trajectory in
+//! EXPERIMENTS.md §Perf can be regenerated and diffed across PRs.
 
 use std::time::Instant;
 
@@ -66,6 +70,55 @@ pub fn print_table(results: &[BenchResult]) {
     }
 }
 
+/// Serialize results as a JSON array (hand-rolled: no serde offline).
+pub fn to_json(results: &[BenchResult]) -> String {
+    let mut s = String::from("[\n");
+    for (i, r) in results.iter().enumerate() {
+        let name: String = r
+            .name
+            .chars()
+            .flat_map(|c| match c {
+                '"' | '\\' => vec!['\\', c],
+                c if (c as u32) < 0x20 => " ".chars().collect(),
+                c => vec![c],
+            })
+            .collect();
+        s.push_str(&format!(
+            "  {{\"name\": \"{name}\", \"iters\": {}, \"mean_ns\": {:.1}, \
+             \"p50_ns\": {:.1}, \"p99_ns\": {:.1}, \"min_ns\": {:.1}}}{}\n",
+            r.iters,
+            r.mean_ns,
+            r.p50_ns,
+            r.p99_ns,
+            r.min_ns,
+            if i + 1 < results.len() { "," } else { "" }
+        ));
+    }
+    s.push(']');
+    s.push('\n');
+    s
+}
+
+/// Write `BENCH_<name>.json` in the working directory.
+pub fn write_json(name: &str, results: &[BenchResult]) -> std::io::Result<std::path::PathBuf> {
+    let path = std::path::PathBuf::from(format!("BENCH_{name}.json"));
+    std::fs::write(&path, to_json(results))?;
+    Ok(path)
+}
+
+/// Report results: always the human table; additionally the
+/// `BENCH_<name>.json` sidecar when `--json` was passed on the command
+/// line.  Every bench main calls this once at exit.
+pub fn emit(name: &str, results: &[BenchResult]) {
+    print_table(results);
+    if std::env::args().any(|a| a == "--json") {
+        match write_json(name, results) {
+            Ok(p) => println!("wrote {}", p.display()),
+            Err(e) => eprintln!("bench: failed to write json for {name}: {e}"),
+        }
+    }
+}
+
 /// Human-readable nanoseconds.
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
@@ -90,6 +143,46 @@ mod tests {
         assert_eq!(n, 12, "warmup + timed iterations");
         assert_eq!(r.iters, 10);
         assert!(r.min_ns <= r.p50_ns && r.p50_ns <= r.p99_ns);
+    }
+
+    #[test]
+    fn json_is_well_formed_and_escaped() {
+        let results = vec![
+            BenchResult {
+                name: "alpha \"quoted\" \\ back".into(),
+                iters: 3,
+                mean_ns: 1234.5,
+                p50_ns: 1200.0,
+                p99_ns: 1500.0,
+                min_ns: 1100.0,
+            },
+            BenchResult {
+                name: "beta".into(),
+                iters: 10,
+                mean_ns: 10.0,
+                p50_ns: 10.0,
+                p99_ns: 10.0,
+                min_ns: 10.0,
+            },
+        ];
+        let j = to_json(&results);
+        assert!(j.starts_with("[\n") && j.trim_end().ends_with(']'));
+        assert!(j.contains("\\\"quoted\\\""));
+        assert!(j.contains("\\\\ back"));
+        assert!(j.contains("\"iters\": 3"));
+        assert!(j.contains("\"mean_ns\": 1234.5"));
+        // exactly one separating comma between the two records
+        assert_eq!(j.matches("},\n").count(), 1);
+    }
+
+    #[test]
+    fn write_json_creates_sidecar() {
+        let r = bench("sidecar", 0, 3, || {});
+        let path = write_json("unit_test_tmp", &[r]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(path.file_name().unwrap(), "BENCH_unit_test_tmp.json");
+        assert!(text.contains("\"name\": \"sidecar\""));
     }
 
     #[test]

@@ -9,6 +9,7 @@
 use std::io::{Read, Write};
 use std::path::Path;
 
+use crate::runtime::{HostTensor, TrainState};
 use crate::{Error, Result};
 
 const MAGIC: &[u8; 4] = b"MPIM";
@@ -22,26 +23,29 @@ pub struct Checkpoint {
 }
 
 impl Checkpoint {
-    /// Capture from a runtime train state.
-    pub fn from_state(state: &crate::runtime::TrainState, step: u64) -> Result<Checkpoint> {
-        let mut tensors = Vec::with_capacity(state.params.len());
-        for p in &state.params {
-            let shape = p.array_shape().map_err(Error::from)?;
-            let dims: Vec<u64> = shape.dims().iter().map(|&d| d as u64).collect();
-            let data = p.to_vec::<f32>().map_err(Error::from)?;
-            tensors.push((dims, data));
-        }
+    /// Capture from a runtime train state (works against the real PJRT
+    /// runtime and the offline stub alike — both speak [`HostTensor`]).
+    pub fn from_state(state: &TrainState, step: u64) -> Result<Checkpoint> {
+        let tensors = state
+            .to_host_shaped()?
+            .into_iter()
+            .map(|t| (t.dims, t.data))
+            .collect();
         Ok(Checkpoint { tensors, step })
     }
 
-    /// Restore into runtime literals.
-    pub fn to_state(&self) -> Result<crate::runtime::TrainState> {
-        let mut params = Vec::with_capacity(self.tensors.len());
-        for (dims, data) in &self.tensors {
-            let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
-            params.push(xla::Literal::vec1(data).reshape(&d).map_err(Error::from)?);
-        }
-        Ok(crate::runtime::TrainState { params })
+    /// Restore into a runtime train state (one copy of the data: the
+    /// `HostTensor`s built here are moved into the state).
+    pub fn to_state(&self) -> Result<TrainState> {
+        let tensors: Vec<HostTensor> = self
+            .tensors
+            .iter()
+            .map(|(dims, data)| HostTensor {
+                dims: dims.clone(),
+                data: data.clone(),
+            })
+            .collect();
+        TrainState::from_host(tensors)
     }
 
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
@@ -146,6 +150,15 @@ mod tests {
         let r = Checkpoint::load(&path).unwrap();
         assert_eq!(c, r);
         assert_eq!(r.step, 123);
+    }
+
+    #[test]
+    fn state_roundtrip_through_checkpoint() {
+        let c = sample();
+        let state = c.to_state().unwrap();
+        assert_eq!(state.param_count(), 6 + 4 + 1);
+        let back = Checkpoint::from_state(&state, c.step).unwrap();
+        assert_eq!(back, c);
     }
 
     #[test]

@@ -11,6 +11,7 @@ pub mod checkpoint;
 use std::sync::mpsc;
 use std::thread;
 
+use crate::arch::gemm::GemmEngine;
 use crate::arch::{AccelKind, Accelerator, RunCost};
 use crate::data::Dataset;
 use crate::fpu::procedure::FpEngine;
@@ -154,9 +155,13 @@ impl Coordinator {
     }
 
     /// Spawn worker threads that execute random MAC waves through the
-    /// bit-level subarray procedures and compare against the softfloat
-    /// gold model — the "dedicated PIM accelerator simulator" validation
-    /// of §4.1, parallelised across layers.
+    /// bit-level subarray procedures *and* random batched GEMMs through
+    /// the wave-parallel engine, comparing both against the softfloat /
+    /// host-FTZ gold chain — the "dedicated PIM accelerator simulator"
+    /// validation of §4.1, parallelised across workers.  Each worker
+    /// constructs its engine once (the cached-cost-model discipline) and
+    /// runs it single-threaded: the fan-out across workers *is* the wave
+    /// parallelism.
     fn spawn_deep_validation(
         &self,
         cfg: &RunConfig,
@@ -168,57 +173,95 @@ impl Coordinator {
         let threads = cfg.threads.max(1);
         let seed = cfg.seed;
         Some(thread::spawn(move || {
-            let (tx, rx) = mpsc::channel::<(u64, u64)>();
-            for t in 0..threads {
-                let tx = tx.clone();
-                let tseed = seed.wrapping_add(t as u64).wrapping_mul(0x9E37_79B9);
-                thread::spawn(move || {
-                    let mut rng = Rng::new(tseed.max(1));
-                    let mut checked = 0u64;
-                    let mut bad = 0u64;
-                    for _ in 0..waves {
-                        let mut engine = FpEngine::new(
-                            ArrayGeometry {
-                                rows: 256,
-                                cols: 256,
-                            },
-                            OpCosts::proposed_default(),
-                        );
-                        let pairs: Vec<(u32, u32)> = (0..256)
-                            .map(|_| {
-                                (
-                                    rng.f32_normal(20).to_bits(),
-                                    rng.f32_normal(20).to_bits(),
-                                )
-                            })
-                            .collect();
-                        let got = engine.mul(&pairs);
-                        for (i, &(a, b)) in pairs.iter().enumerate() {
-                            checked += 1;
-                            if got[i] != softfloat::pim_mul_bits(a, b) {
-                                bad += 1;
-                            }
-                        }
-                        let got = engine.add(&pairs);
-                        for (i, &(a, b)) in pairs.iter().enumerate() {
-                            checked += 1;
-                            if got[i] != softfloat::pim_add_bits(a, b) {
-                                bad += 1;
-                            }
-                        }
-                    }
-                    let _ = tx.send((checked, bad));
-                });
-            }
-            drop(tx);
-            let mut total = (0u64, 0u64);
-            while let Ok((c, b)) = rx.recv() {
-                total.0 += c;
-                total.1 += b;
-            }
-            total
+            deep_validation_waves(waves, threads, seed)
         }))
     }
+}
+
+/// Run `waves` deep-validation waves on each of `threads` workers and
+/// return (MACs checked, mismatches).  Every worker executes
+///
+/// * a bit-level subarray mul/add wave, checked against the softfloat
+///   gold model, and
+/// * a batched GEMM through the wave-parallel engine, checked against
+///   the host FTZ chain —
+///
+/// with its engine constructed once per worker (cached cost model); the
+/// fan-out across workers is the wave parallelism.
+pub fn deep_validation_waves(waves: usize, threads: usize, seed: u64) -> (u64, u64) {
+    let (tx, rx) = mpsc::channel::<(u64, u64)>();
+    for t in 0..threads.max(1) {
+        let tx = tx.clone();
+        let tseed = seed.wrapping_add(t as u64).wrapping_mul(0x9E37_79B9);
+        thread::spawn(move || {
+            let mut rng = Rng::new(tseed.max(1));
+            let mut checked = 0u64;
+            let mut bad = 0u64;
+            let gemm = GemmEngine::new(OpCosts::proposed_default(), FloatFormat::FP32, 1024, 1);
+            for _ in 0..waves {
+                // (a) bit-level subarray mul/add wave vs softfloat.
+                let mut engine = FpEngine::new(
+                    ArrayGeometry {
+                        rows: 256,
+                        cols: 256,
+                    },
+                    OpCosts::proposed_default(),
+                );
+                let pairs: Vec<(u32, u32)> = (0..256)
+                    .map(|_| {
+                        (
+                            rng.f32_normal(20).to_bits(),
+                            rng.f32_normal(20).to_bits(),
+                        )
+                    })
+                    .collect();
+                let got = engine.mul(&pairs);
+                for (i, &(a, b)) in pairs.iter().enumerate() {
+                    checked += 1;
+                    if got[i] != softfloat::pim_mul_bits(a, b) {
+                        bad += 1;
+                    }
+                }
+                let got = engine.add(&pairs);
+                for (i, &(a, b)) in pairs.iter().enumerate() {
+                    checked += 1;
+                    if got[i] != softfloat::pim_add_bits(a, b) {
+                        bad += 1;
+                    }
+                }
+                // (b) batched GEMM wave through the engine vs the host
+                // FTZ chain.
+                let out = 4 + rng.below(8) as usize;
+                let inp = 8 + rng.below(24) as usize;
+                let batch = 1 + rng.below(4) as usize;
+                let w: Vec<f32> = (0..out * inp).map(|_| rng.f32_normal(4)).collect();
+                let xs: Vec<f32> = (0..batch * inp).map(|_| rng.f32_normal(4)).collect();
+                let got = gemm.gemm(&w, &xs, None, out, inp, batch);
+                for b in 0..batch {
+                    for o in 0..out {
+                        checked += 1;
+                        let mut acc = 0f32;
+                        for i in 0..inp {
+                            acc = softfloat::ftz(
+                                acc + softfloat::ftz(w[o * inp + i] * xs[b * inp + i]),
+                            );
+                        }
+                        if got.y[b * out + o].to_bits() != acc.to_bits() {
+                            bad += 1;
+                        }
+                    }
+                }
+            }
+            let _ = tx.send((checked, bad));
+        });
+    }
+    drop(tx);
+    let mut total = (0u64, 0u64);
+    while let Ok((c, b)) = rx.recv() {
+        total.0 += c;
+        total.1 += b;
+    }
+    total
 }
 
 #[cfg(test)]
@@ -229,6 +272,14 @@ mod tests {
     fn default_config_sane() {
         let c = RunConfig::default();
         assert!(c.steps > 0 && c.lr > 0.0 && c.threads > 0);
+    }
+
+    #[test]
+    fn deep_validation_is_clean_and_counts() {
+        let (checked, bad) = deep_validation_waves(1, 2, 42);
+        // Two workers × (256 muls + 256 adds + one small GEMM).
+        assert!(checked > 2 * 512, "checked {checked}");
+        assert_eq!(bad, 0, "bit-level / engine mismatches");
     }
 
     // Runtime-dependent tests live in rust/tests/runtime_artifacts.rs

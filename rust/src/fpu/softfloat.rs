@@ -13,6 +13,14 @@
 //!   (anything ≥ 2⁻¹²⁶ − 2⁻¹⁵⁰) produce that normal, so results match
 //!   "host IEEE op, then flush subnormal outputs" bit-for-bit;
 //! * NaNs are canonicalised to `0x7FC0_0000`.
+//!
+//! This is the GEMM engine's hot path, so both operations take a
+//! branch-reduced fast route when neither operand is special (exponent
+//! in `1..=254`, i.e. finite and normal): one range check per operand,
+//! then straight-line normalise/round code.  The multiply's mantissa
+//! product is a single host `u64` multiply — the seed's 24-iteration
+//! shift-and-add scan computed exactly `ma * mb`, and the retained
+//! reference implementation in the test module pins bit-identity.
 
 const QNAN: u32 = 0x7FC0_0000;
 const INF: u32 = 0x7F80_0000;
@@ -23,12 +31,26 @@ fn fields(bits: u32) -> (u32, i32, u32) {
     ((bits >> 31), ((bits >> 23) & 0xFF) as i32, bits & 0x7F_FFFF)
 }
 
+/// True when an exponent field marks a special operand: 0 (zero under
+/// FTZ, subnormals included) or 255 (Inf/NaN).  `e - 1 < 254` as an
+/// unsigned compare folds both ends into one branch.
+#[inline]
+fn is_special(e: i32) -> bool {
+    (e.wrapping_sub(1) as u32) >= 254
+}
+
 /// fp32 multiply on raw bits via the paper's shift-and-add procedure
 /// (Fig. 4b), with RNE + FTZ semantics.
 pub fn pim_mul_bits(abits: u32, bbits: u32) -> u32 {
     let (sa, ea, fa) = fields(abits);
     let (sb, eb, fb) = fields(bbits);
+    let sign = (sa ^ sb) << 31;
 
+    if !is_special(ea) && !is_special(eb) {
+        return mul_core(sign, ea, fa, eb, fb);
+    }
+
+    // Special operands (NaN / Inf / FTZ zero), same precedence as IEEE.
     let a_nan = ea == 255 && fa != 0;
     let b_nan = eb == 255 && fb != 0;
     let a_inf = ea == 255 && fa == 0;
@@ -36,31 +58,28 @@ pub fn pim_mul_bits(abits: u32, bbits: u32) -> u32 {
     let a_zero = ea == 0; // FTZ
     let b_zero = eb == 0;
 
-    let sign = (sa ^ sb) << 31;
     if a_nan || b_nan || (a_inf && b_zero) || (b_inf && a_zero) {
         return QNAN;
     }
     if a_inf || b_inf {
         return sign | INF;
     }
-    if a_zero || b_zero {
-        return sign;
-    }
+    // Remaining special combinations all involve a (flushed) zero.
+    sign
+}
 
+/// Normal×normal multiply core: mantissa product, normalise, RNE round,
+/// overflow to Inf, underflow through the FTZ boundary rule.
+#[inline]
+fn mul_core(sign: u32, ea: i32, fa: u32, eb: i32, fb: u32) -> u32 {
     let ma = (fa | MIN_NORMAL_MANT) as u64; // 24-bit significand
     let mb = (fb | MIN_NORMAL_MANT) as u64;
 
-    // Shift-and-add mantissa product: the multiplicand ANDed with one
-    // multiplier bit, shifted, accumulated — exactly the array procedure,
-    // collapsed into u64 arithmetic (the per-step ledger accounting lives
-    // in `procedure.rs`).
-    let mut p: u64 = 0;
-    for i in 0..24 {
-        if (mb >> i) & 1 == 1 {
-            p += ma << i;
-        }
-    }
-    debug_assert_eq!(p, ma * mb);
+    // The array executes this as Fig. 4b's shift-and-add scan (the
+    // per-step ledger accounting lives in `procedure.rs`); collapsed
+    // here into one host multiply — bit-identical, see
+    // `tests::fast_path_matches_seed_reference`.
+    let p = ma * mb;
 
     // Normalise: product of two [2^23, 2^24) values is in [2^46, 2^48).
     let top_set = (p >> 47) & 1;
@@ -96,9 +115,16 @@ pub fn pim_mul_bits(abits: u32, bbits: u32) -> u32 {
 /// fp32 add on raw bits via search-aligned mantissa addition (§3.3),
 /// with RNE + FTZ semantics.
 pub fn pim_add_bits(abits: u32, bbits: u32) -> u32 {
-    let (sa, ea, fa) = fields(abits);
-    let (sb, eb, fb) = fields(bbits);
+    let ea = ((abits >> 23) & 0xFF) as i32;
+    let eb = ((bbits >> 23) & 0xFF) as i32;
 
+    if !is_special(ea) && !is_special(eb) {
+        return add_core(abits, bbits);
+    }
+
+    // Special operands (NaN / Inf / FTZ zero), same precedence as IEEE.
+    let (sa, _, fa) = fields(abits);
+    let (sb, _, fb) = fields(bbits);
     let a_nan = ea == 255 && fa != 0;
     let b_nan = eb == 255 && fb != 0;
     let a_inf = ea == 255 && fa == 0;
@@ -122,10 +148,14 @@ pub fn pim_add_bits(abits: u32, bbits: u32) -> u32 {
     if a_zero {
         return bbits;
     }
-    if b_zero {
-        return abits;
-    }
+    // Remaining special combination: b is a (flushed) zero, a is normal.
+    abits
+}
 
+/// Normal+normal add core: magnitude-order, one aligned add/sub with
+/// sticky folding, renormalise via `leading_zeros`, RNE round.
+#[inline]
+fn add_core(abits: u32, bbits: u32) -> u32 {
     // Order by magnitude (|x| >= |y|): integer order of the low 31 bits.
     let (xbits, ybits) = if (abits & 0x7FFF_FFFF) >= (bbits & 0x7FFF_FFFF) {
         (abits, bbits)
@@ -135,12 +165,12 @@ pub fn pim_add_bits(abits: u32, bbits: u32) -> u32 {
     let (sx, ex, fx) = fields(xbits);
     let (sy, ey, fy) = fields(ybits);
 
-    let mx = ((fx | MIN_NORMAL_MANT) << 3) as u32; // 27 bits: +G,R,S
+    let mx = (fx | MIN_NORMAL_MANT) << 3; // 27 bits: +G,R,S
     let my = (fy | MIN_NORMAL_MANT) << 3;
 
     // Exponent alignment: ONE shift of d bits (the search result).
     let d = (ex - ey).min(27) as u32;
-    let lost = my & ((1u32 << d) - 1).wrapping_add(0);
+    let lost = my & ((1u32 << d) - 1);
     let my_al = (my >> d) | (lost != 0) as u32; // fold sticky into bit 0
 
     let subtract = sx != sy;
@@ -213,6 +243,155 @@ pub fn ftz(x: f32) -> f32 {
 mod tests {
     use super::*;
 
+    /// The seed implementations, retained verbatim as the bit-identity
+    /// reference for the branch-reduced fast path above.
+    mod reference {
+        use super::super::{fields, INF, MIN_NORMAL_MANT, QNAN};
+
+        pub fn pim_mul_bits(abits: u32, bbits: u32) -> u32 {
+            let (sa, ea, fa) = fields(abits);
+            let (sb, eb, fb) = fields(bbits);
+
+            let a_nan = ea == 255 && fa != 0;
+            let b_nan = eb == 255 && fb != 0;
+            let a_inf = ea == 255 && fa == 0;
+            let b_inf = eb == 255 && fb == 0;
+            let a_zero = ea == 0;
+            let b_zero = eb == 0;
+
+            let sign = (sa ^ sb) << 31;
+            if a_nan || b_nan || (a_inf && b_zero) || (b_inf && a_zero) {
+                return QNAN;
+            }
+            if a_inf || b_inf {
+                return sign | INF;
+            }
+            if a_zero || b_zero {
+                return sign;
+            }
+
+            let ma = (fa | MIN_NORMAL_MANT) as u64;
+            let mb = (fb | MIN_NORMAL_MANT) as u64;
+
+            // The seed's shift-and-add mantissa product, bit by bit.
+            let mut p: u64 = 0;
+            for i in 0..24 {
+                if (mb >> i) & 1 == 1 {
+                    p += ma << i;
+                }
+            }
+
+            let top_set = (p >> 47) & 1;
+            let s = 23 + top_set as u32;
+            let mant_preround = ((p >> s) & 0xFF_FFFF) as u32;
+            let guard = ((p >> (s - 1)) & 1) as u32;
+            let sticky = (p & ((1u64 << (s - 1)) - 1)) != 0;
+
+            let round_up = guard == 1 && (sticky || mant_preround & 1 == 1);
+            let mut mant = mant_preround + round_up as u32;
+            let mut e = ea + eb - 127 + top_set as i32;
+            let e0 = e;
+            if mant == 1 << 24 {
+                mant >>= 1;
+                e += 1;
+            }
+
+            if e >= 255 {
+                return sign | INF;
+            }
+            if e <= 0 {
+                if e0 == 0 && mant_preround == 0xFF_FFFF {
+                    return sign | MIN_NORMAL_MANT;
+                }
+                return sign;
+            }
+            sign | ((e as u32) << 23) | (mant & 0x7F_FFFF)
+        }
+
+        pub fn pim_add_bits(abits: u32, bbits: u32) -> u32 {
+            let (sa, ea, fa) = fields(abits);
+            let (sb, eb, fb) = fields(bbits);
+
+            let a_nan = ea == 255 && fa != 0;
+            let b_nan = eb == 255 && fb != 0;
+            let a_inf = ea == 255 && fa == 0;
+            let b_inf = eb == 255 && fb == 0;
+            let a_zero = ea == 0;
+            let b_zero = eb == 0;
+
+            if a_nan || b_nan || (a_inf && b_inf && sa != sb) {
+                return QNAN;
+            }
+            if a_inf {
+                return abits;
+            }
+            if b_inf {
+                return bbits;
+            }
+            if a_zero && b_zero {
+                return (sa & sb) << 31;
+            }
+            if a_zero {
+                return bbits;
+            }
+            if b_zero {
+                return abits;
+            }
+
+            let (xbits, ybits) = if (abits & 0x7FFF_FFFF) >= (bbits & 0x7FFF_FFFF) {
+                (abits, bbits)
+            } else {
+                (bbits, abits)
+            };
+            let (sx, ex, fx) = fields(xbits);
+            let (sy, ey, fy) = fields(ybits);
+
+            let mx = (fx | MIN_NORMAL_MANT) << 3;
+            let my = (fy | MIN_NORMAL_MANT) << 3;
+
+            let d = (ex - ey).min(27) as u32;
+            let lost = my & ((1u32 << d) - 1);
+            let my_al = (my >> d) | (lost != 0) as u32;
+
+            let subtract = sx != sy;
+            let total: u32 = if subtract { mx - my_al } else { mx + my_al };
+
+            if total == 0 {
+                return 0;
+            }
+
+            let p = 31 - total.leading_zeros();
+            let (total_n, e0) = if p == 27 {
+                ((total >> 1) | (total & 1), ex + 1)
+            } else {
+                (total << (26 - p), ex - (26 - p) as i32)
+            };
+
+            let kept_preround = total_n >> 3;
+            let rb = (total_n >> 2) & 1;
+            let st = (total_n & 3) != 0;
+            let round_up = rb == 1 && (st || kept_preround & 1 == 1);
+            let mut kept = kept_preround + round_up as u32;
+            let mut e = e0;
+            if kept == 1 << 24 {
+                kept >>= 1;
+                e += 1;
+            }
+
+            let sign = sx << 31;
+            if e >= 255 {
+                return sign | INF;
+            }
+            if e <= 0 {
+                if e0 == 0 && kept_preround == 0xFF_FFFF {
+                    return sign | MIN_NORMAL_MANT;
+                }
+                return sign;
+            }
+            sign | ((e as u32) << 23) | (kept & 0x7F_FFFF)
+        }
+    }
+
     fn host_mul(a: f32, b: f32) -> f32 {
         ftz(ftz(a) * ftz(b))
     }
@@ -256,6 +435,70 @@ mod tests {
         1.0 / 3.0,
         -1.0 / 3.0,
     ];
+
+    /// Every combination of exponent class boundary × mantissa edge ×
+    /// sign — 56 values, 3136 ordered pairs per op.  This is the grid
+    /// that exercises each branch of the fast/special split.
+    fn edge_bit_patterns() -> Vec<u32> {
+        let exps: [u32; 7] = [0, 1, 2, 127, 253, 254, 255];
+        let mants: [u32; 4] = [0, 1, 0x40_0000, 0x7F_FFFF];
+        let mut v = Vec::with_capacity(exps.len() * mants.len() * 2);
+        for &e in &exps {
+            for &m in &mants {
+                for s in [0u32, 1] {
+                    v.push((s << 31) | (e << 23) | m);
+                }
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn fast_path_matches_seed_reference() {
+        // Exhaustive edge grid: the optimised path must be bit-identical
+        // to the seed implementation on every pattern pair (including
+        // NaN payloads, which both canonicalise the same way).
+        let grid = edge_bit_patterns();
+        for &a in &grid {
+            for &b in &grid {
+                assert_eq!(
+                    pim_mul_bits(a, b),
+                    reference::pim_mul_bits(a, b),
+                    "mul {a:#010x} * {b:#010x}"
+                );
+                assert_eq!(
+                    pim_add_bits(a, b),
+                    reference::pim_add_bits(a, b),
+                    "add {a:#010x} + {b:#010x}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fast_path_matches_seed_reference_random() {
+        let mut state = 0x5EED_F00D_CAFE_D00Du64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        for _ in 0..500_000 {
+            let a = next() as u32;
+            let b = next() as u32;
+            assert_eq!(
+                pim_mul_bits(a, b),
+                reference::pim_mul_bits(a, b),
+                "mul {a:#010x} * {b:#010x}"
+            );
+            assert_eq!(
+                pim_add_bits(a, b),
+                reference::pim_add_bits(a, b),
+                "add {a:#010x} + {b:#010x}"
+            );
+        }
+    }
 
     #[test]
     fn mul_edge_grid_bit_exact() {

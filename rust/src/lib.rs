@@ -22,12 +22,16 @@
 //! * [`floatpim`] — the FloatPIM (ISCA'19) baseline: NOR-only 13-step FA,
 //!   bit-serial O(Nm²) exponent alignment, row-parallel multiply with
 //!   intermediate-write traffic, and its cost model.
-//! * [`arch`] — the accelerator: tiles, the DNN-layer→subarray mapper and
-//!   the training-phase scheduler.
+//! * [`arch`] — the accelerator: tiles, the DNN-layer→subarray mapper,
+//!   the training-phase scheduler, and the wave-parallel batched GEMM
+//!   engine ([`arch::gemm`]) that dense/conv functional traffic executes
+//!   through.
 //! * [`model`] / [`data`] — the LeNet-5 workload of §4 and a synthetic
 //!   MNIST-like corpus (see DESIGN.md for the substitution rationale).
 //! * [`runtime`] — the PJRT runtime that loads the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) and executes real training steps.
+//!   Compiled behind the optional `pjrt` feature; the default (offline)
+//!   build substitutes a typed stub with the same API.
 //! * [`coordinator`] — the leader that drives functional training and the
 //!   cost simulation together and emits the paper's tables/figures.
 //!
@@ -53,18 +57,53 @@ pub mod runtime;
 pub mod sim;
 
 /// Crate-wide error type.
-#[derive(Debug, thiserror::Error)]
+///
+/// Hand-implemented (no `thiserror`): the offline toolchain builds with
+/// an empty dependency graph.  The `Xla` variant only exists when the
+/// `pjrt` feature compiles the real runtime.
+#[derive(Debug)]
 pub enum Error {
-    #[error("configuration error: {0}")]
     Config(String),
-    #[error("simulation error: {0}")]
     Sim(String),
-    #[error("runtime error: {0}")]
     Runtime(String),
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("xla error: {0}")]
-    Xla(#[from] xla::Error),
+    Io(std::io::Error),
+    #[cfg(feature = "pjrt")]
+    Xla(xla::Error),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "configuration error: {m}"),
+            Error::Sim(m) => write!(f, "simulation error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            #[cfg(feature = "pjrt")]
+            Error::Xla(e) => write!(f, "xla error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Error {
+        Error::Xla(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, Error>;

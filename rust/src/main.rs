@@ -87,7 +87,14 @@ fn cmd_train(args: &Args) -> mram_pim::Result<()> {
     };
 
     println!("loading artifacts from {artifacts}/ ...");
-    let runtime = Runtime::load_dir(&artifacts)?;
+    let runtime = match Runtime::load_dir(&artifacts) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("PJRT unavailable ({e});");
+            println!("running the functional PIM forward path instead (GEMM engine).");
+            return cmd_train_functional(&cfg);
+        }
+    };
     println!("PJRT platform: {}", runtime.platform());
     let coord = Coordinator::new(runtime);
     println!(
@@ -133,6 +140,36 @@ fn cmd_train(args: &Args) -> mram_pim::Result<()> {
         report.final_accuracy * 100.0,
         report.wall_s
     );
+    Ok(())
+}
+
+/// Functional fallback for `train` when no PJRT runtime is available:
+/// forward LeNet-5 batches through the wave-parallel GEMM engine
+/// (conv via im2col, dense directly) and report the priced traffic.
+fn cmd_train_functional(cfg: &RunConfig) -> mram_pim::Result<()> {
+    use mram_pim::arch::NetworkParams;
+    use mram_pim::data::Dataset;
+
+    let net = Network::lenet5();
+    let accel = Accelerator::new(AccelKind::Proposed, FloatFormat::FP32, 32_768);
+    let engine = accel
+        .gemm_engine(cfg.threads)
+        .expect("proposed accel has an engine");
+    let params = NetworkParams::init(&net, cfg.seed);
+    let batch = 32;
+    let data = Dataset::synthetic(batch, cfg.seed).full_batch(batch);
+    let r = engine.forward(&net, &params, &data.images, batch);
+    assert_eq!(r.gemm_layers, 4, "all MAC-bearing layers must use the engine");
+    println!(
+        "functional forward (batch {batch}, {} threads): {} MACs in {} waves",
+        cfg.threads, r.macs, r.waves
+    );
+    println!(
+        "simulated cost: latency {} energy {}",
+        fmt_si(r.latency_s, "s"),
+        fmt_si(r.energy_j, "J")
+    );
+    println!("(enable the `pjrt` feature and run `make artifacts` for full training)");
     Ok(())
 }
 

@@ -1,0 +1,198 @@
+//! The real PJRT runtime (requires the `pjrt` feature + `xla` bindings):
+//! load the AOT-compiled HLO-text artifacts and execute them on the CPU
+//! client.  Python never runs here — `make artifacts` produced the
+//! `.hlo.txt` files once at build time.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use super::{HostTensor, EVAL, INIT, NUM_PARAMS, PIM_ADD, PIM_LANES, PIM_MUL, TRAIN_STEP};
+use crate::runtime::{EVAL_BATCH, TRAIN_BATCH};
+use crate::{Error, Result};
+
+/// A loaded PJRT runtime with compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    execs: HashMap<String, xla::PjRtLoadedExecutable>,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Load and compile every artifact present in `dir`.
+    pub fn load_dir(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let client = xla::PjRtClient::cpu()?;
+        let mut execs = HashMap::new();
+        for name in [TRAIN_STEP, EVAL, INIT, PIM_MUL, PIM_ADD] {
+            let path = dir.join(format!("{name}.hlo.txt"));
+            if !path.exists() {
+                continue;
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str()
+                    .ok_or_else(|| Error::Runtime(format!("bad path {path:?}")))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            execs.insert(name.to_string(), client.compile(&comp)?);
+        }
+        if execs.is_empty() {
+            return Err(Error::Runtime(format!(
+                "no artifacts found in {dir:?}; run `make artifacts`"
+            )));
+        }
+        Ok(Runtime { client, execs, dir })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.execs.contains_key(name)
+    }
+
+    fn exec(&self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        self.execs
+            .get(name)
+            .ok_or_else(|| Error::Runtime(format!("artifact {name:?} not loaded")))
+    }
+
+    fn run(&self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.exec(name)?;
+        let result = exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+
+    /// Initialise model parameters from the AOT init graph.
+    pub fn init_params(&self, seed: i32) -> Result<TrainState> {
+        let out = self.run(INIT, &[xla::Literal::scalar(seed)])?;
+        if out.len() != NUM_PARAMS {
+            return Err(Error::Runtime(format!(
+                "init returned {} values, want {NUM_PARAMS}",
+                out.len()
+            )));
+        }
+        Ok(TrainState { params: out })
+    }
+
+    /// One SGD step.  Returns the loss.
+    pub fn train_step(
+        &self,
+        state: &mut TrainState,
+        images: &[f32],
+        labels: &[i32],
+        lr: f32,
+    ) -> Result<f32> {
+        debug_assert_eq!(images.len(), TRAIN_BATCH * 784);
+        debug_assert_eq!(labels.len(), TRAIN_BATCH);
+        let x = xla::Literal::vec1(images)
+            .reshape(&[TRAIN_BATCH as i64, 1, 28, 28])?;
+        let y = xla::Literal::vec1(labels);
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(NUM_PARAMS + 3);
+        for p in &state.params {
+            args.push(clone_literal(p)?);
+        }
+        args.push(x);
+        args.push(y);
+        args.push(xla::Literal::scalar(lr));
+        let mut out = self.run(TRAIN_STEP, &args)?;
+        let loss = out
+            .pop()
+            .ok_or_else(|| Error::Runtime("train_step returned nothing".into()))?
+            .get_first_element::<f32>()?;
+        state.params = out;
+        Ok(loss)
+    }
+
+    /// Evaluate a batch: returns (mean loss, #correct).
+    pub fn eval(&self, state: &TrainState, images: &[f32], labels: &[i32]) -> Result<(f32, f32)> {
+        debug_assert_eq!(images.len(), EVAL_BATCH * 784);
+        debug_assert_eq!(labels.len(), EVAL_BATCH);
+        let x = xla::Literal::vec1(images).reshape(&[EVAL_BATCH as i64, 1, 28, 28])?;
+        let y = xla::Literal::vec1(labels);
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(NUM_PARAMS + 2);
+        for p in &state.params {
+            args.push(clone_literal(p)?);
+        }
+        args.push(x);
+        args.push(y);
+        let out = self.run(EVAL, &args)?;
+        let loss = out[0].get_first_element::<f32>()?;
+        let correct = out[1].get_first_element::<f32>()?;
+        Ok((loss, correct))
+    }
+
+    /// Run the bit-level PIM multiply kernel artifact over 1024 lanes.
+    pub fn pim_mul(&self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        self.pim_binary(PIM_MUL, a, b)
+    }
+
+    /// Run the bit-level PIM add kernel artifact over 1024 lanes.
+    pub fn pim_add(&self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        self.pim_binary(PIM_ADD, a, b)
+    }
+
+    fn pim_binary(&self, name: &str, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        debug_assert_eq!(a.len(), PIM_LANES);
+        debug_assert_eq!(b.len(), PIM_LANES);
+        let out = self.run(
+            name,
+            &[xla::Literal::vec1(a), xla::Literal::vec1(b)],
+        )?;
+        Ok(out[0].to_vec::<f32>()?)
+    }
+}
+
+/// Model parameters held as device literals between steps.
+pub struct TrainState {
+    pub params: Vec<xla::Literal>,
+}
+
+impl TrainState {
+    /// Total parameter count (for sanity checks).
+    pub fn param_count(&self) -> usize {
+        self.params.iter().map(|p| p.element_count()).sum()
+    }
+
+    /// Flatten all parameters to host floats (for checkpoints/inspection).
+    pub fn to_host(&self) -> Result<Vec<Vec<f32>>> {
+        self.params
+            .iter()
+            .map(|p| p.to_vec::<f32>().map_err(Error::from))
+            .collect()
+    }
+
+    /// All parameters as shaped host tensors (the checkpoint interchange).
+    pub fn to_host_shaped(&self) -> Result<Vec<HostTensor>> {
+        let mut out = Vec::with_capacity(self.params.len());
+        for p in &self.params {
+            let shape = p.array_shape()?;
+            let dims: Vec<u64> = shape.dims().iter().map(|&d| d as u64).collect();
+            let data = p.to_vec::<f32>()?;
+            out.push(HostTensor { dims, data });
+        }
+        Ok(out)
+    }
+
+    /// Rebuild device literals from shaped host tensors.
+    pub fn from_host(tensors: Vec<HostTensor>) -> Result<TrainState> {
+        let mut params = Vec::with_capacity(tensors.len());
+        for t in &tensors {
+            let d: Vec<i64> = t.dims.iter().map(|&x| x as i64).collect();
+            params.push(xla::Literal::vec1(&t.data).reshape(&d)?);
+        }
+        Ok(TrainState { params })
+    }
+}
+
+/// The xla crate's `Literal` has no `Clone`; round-trip through raw data.
+fn clone_literal(l: &xla::Literal) -> Result<xla::Literal> {
+    let shape = l.array_shape()?;
+    let data = l.to_vec::<f32>()?;
+    let dims: Vec<i64> = shape.dims().to_vec();
+    Ok(xla::Literal::vec1(&data).reshape(&dims)?)
+}

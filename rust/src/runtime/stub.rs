@@ -1,0 +1,136 @@
+//! Typed stub runtime for builds without the `pjrt` feature.
+//!
+//! Presents the exact `Runtime`/`TrainState` API of the real PJRT
+//! implementation so the coordinator, CLI and examples compile and link
+//! offline.  `load_dir` always errors (there is no XLA client to load
+//! artifacts into), which callers already treat as "artifacts absent":
+//! tests skip, the CLI and the end-to-end example fall back to the
+//! functional PIM path through the GEMM engine.
+
+use std::path::Path;
+
+use super::HostTensor;
+use crate::{Error, Result};
+
+fn unavailable() -> Error {
+    Error::Runtime(
+        "PJRT runtime unavailable: built without the `pjrt` cargo feature \
+         (the offline image has no xla bindings)"
+            .into(),
+    )
+}
+
+/// Stub runtime.  Not constructible: `load_dir` always errors, so no
+/// instance can exist and the other methods are unreachable by design.
+pub struct Runtime {
+    _private: (),
+}
+
+impl Runtime {
+    /// Always errors in the stub build (there is no PJRT client).
+    pub fn load_dir(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let _ = dir.as_ref();
+        Err(unavailable())
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        Path::new(".")
+    }
+
+    pub fn has(&self, _name: &str) -> bool {
+        false
+    }
+
+    pub fn init_params(&self, _seed: i32) -> Result<TrainState> {
+        Err(unavailable())
+    }
+
+    pub fn train_step(
+        &self,
+        _state: &mut TrainState,
+        _images: &[f32],
+        _labels: &[i32],
+        _lr: f32,
+    ) -> Result<f32> {
+        Err(unavailable())
+    }
+
+    pub fn eval(
+        &self,
+        _state: &TrainState,
+        _images: &[f32],
+        _labels: &[i32],
+    ) -> Result<(f32, f32)> {
+        Err(unavailable())
+    }
+
+    pub fn pim_mul(&self, _a: &[f32], _b: &[f32]) -> Result<Vec<f32>> {
+        Err(unavailable())
+    }
+
+    pub fn pim_add(&self, _a: &[f32], _b: &[f32]) -> Result<Vec<f32>> {
+        Err(unavailable())
+    }
+}
+
+/// Host-side train state: parameters as shaped host tensors.  The
+/// checkpoint layer round-trips through this without ever needing XLA.
+pub struct TrainState {
+    pub params: Vec<HostTensor>,
+}
+
+impl TrainState {
+    /// Total parameter count (for sanity checks).
+    pub fn param_count(&self) -> usize {
+        self.params.iter().map(|p| p.data.len()).sum()
+    }
+
+    /// Flatten all parameters to host floats (for checkpoints/inspection).
+    pub fn to_host(&self) -> Result<Vec<Vec<f32>>> {
+        Ok(self.params.iter().map(|p| p.data.clone()).collect())
+    }
+
+    /// All parameters as shaped host tensors (the checkpoint interchange).
+    pub fn to_host_shaped(&self) -> Result<Vec<HostTensor>> {
+        Ok(self.params.clone())
+    }
+
+    /// Rebuild a state from shaped host tensors.
+    pub fn from_host(tensors: Vec<HostTensor>) -> Result<TrainState> {
+        Ok(TrainState { params: tensors })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_dir_reports_missing_feature() {
+        let err = Runtime::load_dir("artifacts").err().expect("stub must err");
+        let msg = err.to_string();
+        assert!(msg.contains("pjrt"), "unhelpful stub error: {msg}");
+    }
+
+    #[test]
+    fn train_state_roundtrips_host_tensors() {
+        let t = vec![
+            HostTensor {
+                dims: vec![2, 2],
+                data: vec![1.0, 2.0, 3.0, 4.0],
+            },
+            HostTensor {
+                dims: vec![3],
+                data: vec![-1.0, 0.5, 9.0],
+            },
+        ];
+        let s = TrainState::from_host(t.clone()).unwrap();
+        assert_eq!(s.param_count(), 7);
+        assert_eq!(s.to_host_shaped().unwrap(), t);
+        assert_eq!(s.to_host().unwrap()[1], vec![-1.0, 0.5, 9.0]);
+    }
+}

@@ -1,8 +1,10 @@
 //! Property-based tests (using the crate's own `prop` engine, the
 //! offline substitute for proptest — see DESIGN.md §2).
 
+use mram_pim::arch::{pim_gemm, pim_gemv};
 use mram_pim::device::LogicOp;
 use mram_pim::fpu::softfloat::{ftz, pim_add_f32, pim_mul_f32};
+use mram_pim::fpu::{pim_add_bits, pim_mul_bits, FpCostModel};
 use mram_pim::logic::RippleAdder;
 use mram_pim::model::Network;
 use mram_pim::nvsim::{ArrayGeometry, OpCosts};
@@ -71,6 +73,95 @@ fn prop_fp_edge_patterns() {
             }
         },
     );
+}
+
+/// The batched wave-parallel GEMM, the batch-1 GEMV and the host FTZ
+/// chain agree to the bit for random shapes, batches and thread counts.
+#[test]
+fn prop_gemm_equals_gemv_equals_host_chain() {
+    let model = FpCostModel::proposed_fp32();
+    check(
+        "pim_gemm == pim_gemv == host chain",
+        0x6E77,
+        40,
+        |r: &mut Rng| {
+            let out = r.below(8) as usize + 1;
+            let inp = r.below(48) as usize + 1;
+            let batch = r.below(5) as usize + 1;
+            let threads = r.below(4) as usize + 1;
+            let w: Vec<f32> = (0..out * inp).map(|_| r.f32_normal(6)).collect();
+            let x: Vec<f32> = (0..batch * inp).map(|_| r.f32_normal(6)).collect();
+            let b: Vec<f32> = (0..out).map(|_| r.f32_normal(2)).collect();
+            (out, inp, batch, threads, w, x, b)
+        },
+        |(out, inp, batch, threads, w, x, b)| {
+            let g = pim_gemm(w, x, Some(b.as_slice()), *out, *inp, *batch, &model, 1024, *threads);
+            if g.macs != (out * inp * batch) as u64 {
+                return Err(format!("mac count {}", g.macs));
+            }
+            for bi in 0..*batch {
+                let xrow = &x[bi * inp..(bi + 1) * inp];
+                let v = pim_gemv(w, xrow, Some(b.as_slice()), *out, *inp, &model, 1024);
+                for o in 0..*out {
+                    let mut acc = b[o];
+                    for i in 0..*inp {
+                        acc = ftz(acc + ftz(w[o * inp + i] * xrow[i]));
+                    }
+                    let got = g.y[bi * out + o];
+                    if got.to_bits() != acc.to_bits() {
+                        return Err(format!(
+                            "gemm vs host at batch {bi} row {o}: {got} vs {acc}"
+                        ));
+                    }
+                    if v.y[o].to_bits() != acc.to_bits() {
+                        return Err(format!("gemv vs host at row {o}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Fast-path edge cases of the branch-reduced softfloat ops: subnormal
+/// inputs flush, NaN/Inf propagate, opposite-sign cancellation is exact,
+/// the subnormal/normal rounding boundary rounds up.
+#[test]
+fn fastpath_edge_cases_bit_exact() {
+    let cases: &[(u32, u32)] = &[
+        (0x0000_0001, 0x3F80_0000), // min subnormal, 1.0       -> FTZ
+        (0x007F_FFFF, 0x007F_FFFF), // max subnormal, both      -> FTZ
+        (0x0080_0000, 0x3F00_0000), // min normal * 0.5         -> flush
+        (0x0080_0000, 0x8080_0000), // min normal + -min normal -> +0
+        (0x3F80_0000, 0xBF80_0000), // 1 + -1                   -> +0
+        (0x3F80_0001, 0xBF80_0000), // 1+ulp + -1: deep cancel
+        (0x7F80_0000, 0x0000_0000), // inf * 0                  -> NaN
+        (0x7F80_0000, 0xFF80_0000), // inf + -inf               -> NaN
+        (0x7FC0_0000, 0x3F80_0000), // NaN propagates
+        (0x7FFF_FFFF, 0x0000_0001), // NaN payload, subnormal
+        (0x3F7F_FFFF, 0x0080_0000), // 0.99999994 * min normal: boundary
+        (0x7F7F_FFFF, 0x7F7F_FFFF), // max finite: overflow -> inf
+        (0x7F7F_FFFF, 0xFF7F_FFFF), // max finite cancellation
+        (0x0080_0001, 0x8080_0000), // min-normal ulp cancellation
+    ];
+    for &(a, b) in cases {
+        for (x, y) in [(a, b), (b, a)] {
+            let fa = f32::from_bits(x);
+            let fb = f32::from_bits(y);
+            let m = f32::from_bits(pim_mul_bits(x, y));
+            let want_m = ftz(ftz(fa) * ftz(fb));
+            assert!(
+                m.to_bits() == want_m.to_bits() || (m.is_nan() && want_m.is_nan()),
+                "mul {x:#010x} * {y:#010x}: {m} vs {want_m}"
+            );
+            let s = f32::from_bits(pim_add_bits(x, y));
+            let want_s = ftz(ftz(fa) + ftz(fb));
+            assert!(
+                s.to_bits() == want_s.to_bits() || (s.is_nan() && want_s.is_nan()),
+                "add {x:#010x} + {y:#010x}: {s} vs {want_s}"
+            );
+        }
+    }
 }
 
 /// Addition is commutative on the PIM datapath.

@@ -9,6 +9,10 @@ use mram_pim::prop::Rng;
 use mram_pim::runtime::{Runtime, EVAL_BATCH, PIM_LANES, TRAIN_BATCH};
 
 fn runtime() -> Option<Runtime> {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("SKIP: built without the `pjrt` feature (stub runtime)");
+        return None;
+    }
     if !std::path::Path::new("artifacts/manifest.txt").exists() {
         eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
         return None;
