@@ -1,0 +1,103 @@
+//! Functional train-step bench: LeNet-5 fwd+bwd+update through the
+//! wave-parallel train engine, plus the forward-only pass for the
+//! fwd:bwd:update split that EXPERIMENTS.md compares against Fig. 6's
+//! phase ratios.
+//!
+//! Run: `cargo bench --bench train_step` (add `-- --json` for the
+//! machine-readable `BENCH_train_step.json`; CI uploads the sidecar).
+
+use mram_pim::arch::{NetworkParams, TrainEngine};
+use mram_pim::bench::{bench, emit};
+use mram_pim::data::Dataset;
+use mram_pim::fpu::FpCostModel;
+use mram_pim::model::Network;
+use mram_pim::prop::Rng;
+
+fn main() {
+    let net = Network::lenet5();
+    let batch = 32usize;
+    let mut rng = Rng::new(0x7EA1);
+    let data = Dataset::synthetic(batch, 0x7EA1).full_batch(batch);
+    let labels: Vec<i32> = data.labels.clone();
+    // Jitter the images slightly per engine so no engine sees frozen
+    // activations the branch predictor could memorise.
+    let images: Vec<f32> = data
+        .images
+        .iter()
+        .map(|&v| v + rng.f32_normal(1) * 1e-6)
+        .collect();
+
+    let work = net.training_work(batch);
+    let mut results = Vec::new();
+
+    let e1 = TrainEngine::new(FpCostModel::proposed_fp32(), 32_768, 1);
+    let e4 = TrainEngine::new(FpCostModel::proposed_fp32(), 32_768, 4);
+
+    // Forward-only (inference) pass for the phase split.
+    let params = NetworkParams::init(&net, 7);
+    let r_fwd = bench(
+        &format!("lenet5 forward batch {batch} (threads 4)"),
+        1,
+        8,
+        || {
+            std::hint::black_box(e4.gemm().forward(&net, &params, &images, batch));
+        },
+    );
+
+    // Full train step, threads 1 and 4.  Each iteration trains from a
+    // fresh init so the work is identical across iterations.
+    let r1 = bench(
+        &format!("lenet5 train step batch {batch} (threads 1)"),
+        1,
+        6,
+        || {
+            let mut p = NetworkParams::init(&net, 7);
+            let r = e1
+                .train_step(&net, &mut p, &images, &labels, batch, 0.05)
+                .expect("train step");
+            std::hint::black_box(r.loss);
+        },
+    );
+    let r4 = bench(
+        &format!("lenet5 train step batch {batch} (threads 4)"),
+        1,
+        6,
+        || {
+            let mut p = NetworkParams::init(&net, 7);
+            let r = e4
+                .train_step(&net, &mut p, &images, &labels, batch, 0.05)
+                .expect("train step");
+            std::hint::black_box(r.loss);
+        },
+    );
+
+    // One verified step for the ledger numbers the table quotes.
+    let mut p = NetworkParams::init(&net, 7);
+    let step = e4
+        .train_step(&net, &mut p, &images, &labels, batch, 0.05)
+        .expect("train step");
+    assert_eq!(step.total_macs(), work.total_macs(), "ledger drifted");
+    assert_eq!(step.macs_bwd, 2 * step.macs_fwd);
+
+    let macs = work.total_macs() as f64;
+    println!(
+        "host throughput: {:.1}M train MACs/s (threads 4); fwd:bwd:update MAC split = 1 : {:.2} : {:.4}",
+        r4.throughput(macs) / 1e6,
+        step.macs_bwd as f64 / step.macs_fwd as f64,
+        step.macs_wu as f64 / step.macs_fwd as f64,
+    );
+    println!(
+        "simulated per-step cost: {} waves, latency {:.3e} s, energy {:.3e} J",
+        step.waves, step.latency_s, step.energy_j
+    );
+    println!(
+        "train step vs forward-only (threads 4): {:.2}x host wall (MAC model predicts ~3x + host bwd overheads)",
+        r4.mean_ns / r_fwd.mean_ns
+    );
+
+    results.push(r_fwd);
+    results.push(r1);
+    results.push(r4);
+    emit("train_step", &results);
+    println!("train_step OK");
+}

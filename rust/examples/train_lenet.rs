@@ -1,33 +1,32 @@
 //! END-TO-END DRIVER (DESIGN.md experiment E9).
 //!
-//! With the `pjrt` feature + AOT artifacts: trains the paper's LeNet-5
-//! (fp32, 21,669 params) on the synthetic MNIST corpus through the
-//! AOT-compiled JAX/Pallas artifacts executed by the PJRT runtime —
-//! python is not invoked — while the coordinator simultaneously (a)
-//! prices every training step on the proposed PIM accelerator and the
-//! FloatPIM baseline and (b) cross-checks bit-level subarray MACs and
-//! batched GEMM waves against the softfloat gold model on worker threads.
+//! Trains the paper's LeNet-5 (fp32, 21,669 params) on the synthetic
+//! MNIST corpus while the coordinator simultaneously (a) prices every
+//! training step on the proposed PIM accelerator and the FloatPIM
+//! baseline and (b) cross-checks bit-level subarray MACs, batched GEMM
+//! waves and full functional train steps against the softfloat gold
+//! model on worker threads.
 //!
-//! Without PJRT (the default offline build), the driver falls back to
-//! the *functional PIM path*: the full LeNet-5 forward pass executes
-//! through the wave-parallel batched GEMM engine — `Conv2d` via im2col,
-//! `Dense` directly; no scalar fallback for MAC-bearing layers — and the
-//! run is priced from the cached cost model.
+//! The default offline build runs *functional PIM training*: every
+//! forward, backward and SGD-update MAC executes through the
+//! wave-parallel train engine (`Conv2d` via im2col, `Dense` directly,
+//! backprop lowered onto the same batched GEMM primitive), and the
+//! merged ledger is cross-checked against the analytic
+//! `training_work`/`train_step_cost` models.  With the `pjrt` feature +
+//! AOT artifacts the same loop executes on XLA instead — python is
+//! never invoked.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example train_lenet
+//! cargo run --release --example train_lenet            # functional PIM
+//! make artifacts && cargo run --release --features pjrt --example train_lenet
 //! ```
 //!
-//! The PJRT run recorded in EXPERIMENTS.md uses the defaults below
-//! (400 steps, batch 32, lr 0.05) and reaches >95% test accuracy.
+//! The functional run uses the defaults below (400 steps, batch 32,
+//! lr 0.05) and the loss must at least halve over the run.
 
-use mram_pim::arch::{AccelKind, Accelerator, NetworkParams};
 use mram_pim::coordinator::{Coordinator, RunConfig};
-use mram_pim::data::Dataset;
-use mram_pim::fpu::FloatFormat;
-use mram_pim::metrics::{fmt_si, Stopwatch};
-use mram_pim::model::Network;
-use mram_pim::runtime::Runtime;
+use mram_pim::metrics::fmt_si;
+use mram_pim::runtime::{Runtime, FUNCTIONAL_LANES, TRAIN_BATCH};
 
 fn main() -> mram_pim::Result<()> {
     let artifacts =
@@ -38,20 +37,13 @@ fn main() -> mram_pim::Result<()> {
         .unwrap_or(400);
 
     println!("== E2E: LeNet-5 fp32 training on synthetic MNIST ==");
-    match Runtime::load_dir(&artifacts) {
-        Ok(runtime) => run_pjrt(runtime, steps),
-        Err(e) => {
-            println!("PJRT unavailable ({e});");
-            println!("falling back to the functional PIM path (wave-parallel GEMM engine).\n");
-            run_functional()
-        }
-    }
+    let mut runtime = Runtime::load_dir(&artifacts)?;
+    runtime.set_threads(4);
+    println!("runtime backend: {}", runtime.platform());
+    run_training(runtime, steps)
 }
 
-/// Full coordinated PJRT training run (requires the `pjrt` feature and
-/// `make artifacts`).
-fn run_pjrt(runtime: Runtime, steps: usize) -> mram_pim::Result<()> {
-    println!("PJRT platform: {}", runtime.platform());
+fn run_training(runtime: Runtime, steps: usize) -> mram_pim::Result<()> {
     let coord = Coordinator::new(runtime);
     let net = coord.network();
     println!(
@@ -105,6 +97,24 @@ fn run_pjrt(runtime: Runtime, steps: usize) -> mram_pim::Result<()> {
         "\ndeep validation: {} bit-level PIM MACs checked on {} threads, {} mismatches",
         report.deep_checked, cfg.threads, report.deep_mismatches
     );
+
+    if let Some(f) = &report.functional {
+        let per = f.steps.max(1);
+        println!(
+            "functional PIM ledger: {} MACs/step (fwd {} / bwd {} / update {}) in {} waves/step",
+            f.total_macs() / per,
+            f.macs_fwd / per,
+            f.macs_bwd / per,
+            f.macs_wu / per,
+            f.waves / per,
+        );
+        assert!(
+            f.matches_analytic(coord.network(), TRAIN_BATCH, FUNCTIONAL_LANES as u64),
+            "functional ledger drifted from training_work: {f:?}"
+        );
+        println!("  (matches model::training_work exactly)");
+    }
+
     println!(
         "final test accuracy: {:.2}%  | wall time {:.1}s",
         report.final_accuracy * 100.0,
@@ -119,69 +129,5 @@ fn run_pjrt(runtime: Runtime, steps: usize) -> mram_pim::Result<()> {
         "loss did not drop: {first_loss} -> {last_loss}"
     );
     println!("\ntrain_lenet OK");
-    Ok(())
-}
-
-/// Functional PIM path: LeNet-5 inference batches through the batched
-/// GEMM engine — every MAC-bearing layer runs as waves of `pim_gemm`
-/// (conv lowered via im2col), priced from the cached cost model.
-fn run_functional() -> mram_pim::Result<()> {
-    let net = Network::lenet5();
-    let accel = Accelerator::new(AccelKind::Proposed, FloatFormat::FP32, 32_768);
-    let engine = accel.gemm_engine(4).expect("proposed accel has an engine");
-    let params = NetworkParams::init(&net, 42);
-    assert_eq!(params.param_count(), net.param_count());
-    println!(
-        "model: {} ({} params; paper quotes 21,690)",
-        net.name,
-        net.param_count()
-    );
-
-    let batch = 32;
-    let data = Dataset::synthetic(batch, 42).full_batch(batch);
-    let sw = Stopwatch::start();
-    let r = engine.forward(&net, &params, &data.images, batch);
-    let wall = sw.elapsed_s();
-
-    assert_eq!(r.y.len(), batch * 10);
-    assert!(r.y.iter().all(|v| v.is_finite()), "non-finite logits");
-    // 2 conv (via im2col) + 2 dense — all four through pim_gemm waves.
-    assert_eq!(r.gemm_layers, 4, "a MAC-bearing layer fell off the engine");
-    let fwd_macs: u64 = net.layers.iter().map(|l| l.macs_fwd()).sum::<u64>() * batch as u64;
-    assert_eq!(r.macs, fwd_macs, "forward MAC accounting");
-
-    println!("forward batch {batch} through the GEMM engine (4 threads):");
-    println!(
-        "  {} MACs in {} waves -> simulated latency {}, energy {}",
-        r.macs,
-        r.waves,
-        fmt_si(r.latency_s, "s"),
-        fmt_si(r.energy_j, "J"),
-    );
-    println!(
-        "  host wall {:.1} ms  ({:.1}M simulated MACs/s)",
-        wall * 1e3,
-        r.macs as f64 / wall / 1e6
-    );
-    let preds: Vec<usize> = (0..batch)
-        .map(|b| {
-            let row = &r.y[b * 10..(b + 1) * 10];
-            (0..10)
-                .max_by(|&i, &j| row[i].partial_cmp(&row[j]).unwrap())
-                .unwrap()
-        })
-        .collect();
-    let correct = preds
-        .iter()
-        .zip(&data.labels)
-        .filter(|(&p, &l)| p == l as usize)
-        .count();
-    println!(
-        "  untrained accuracy {correct}/{batch} (~chance, as expected without training)"
-    );
-    println!(
-        "\n(build with `--features pjrt` + `make artifacts` for the full training run)"
-    );
-    println!("\ntrain_lenet OK (functional PIM path)");
     Ok(())
 }

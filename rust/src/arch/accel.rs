@@ -3,6 +3,7 @@
 
 use crate::arch::gemm::GemmEngine;
 use crate::arch::mapper::{MappingPlan, FLOATPIM_LANE_COLS, OURS_LANE_COLS};
+use crate::arch::train::TrainEngine;
 use crate::device::{CellKind, TechNode};
 use crate::floatpim::{FloatPimCostModel, ReRamParams};
 use crate::fpu::{CostBreakdown, FloatFormat, FpCostModel};
@@ -101,6 +102,14 @@ impl Accelerator {
     pub fn gemm_engine(&self, threads: usize) -> Option<GemmEngine> {
         self.ours
             .map(|m| GemmEngine::from_model(m, self.lanes, threads))
+    }
+
+    /// A functional training engine (fwd + bwd + SGD update) over this
+    /// accelerator's lanes, priced from the cached cost model.  `None`
+    /// for the FloatPIM baseline (priced per-MAC only).
+    pub fn train_engine(&self, threads: usize) -> Option<TrainEngine> {
+        self.ours
+            .map(|m| TrainEngine::new(m, self.lanes, threads))
     }
 
     // ---- MAC-level (Fig. 5) ----
@@ -353,6 +362,15 @@ mod tests {
         // The baseline is priced per-MAC only: no functional engine.
         assert!(floatpim().gemm_engine(1).is_none());
         assert!(floatpim().fp_model().is_none());
+    }
+
+    #[test]
+    fn train_engine_shares_lanes_and_gating() {
+        let a = proposed();
+        let engine = a.train_engine(2).expect("proposed design trains");
+        assert_eq!(engine.gemm().lanes, a.lanes);
+        // The baseline is priced per-MAC only: no functional training.
+        assert!(floatpim().train_engine(1).is_none());
     }
 
     #[test]

@@ -54,11 +54,39 @@ pub struct ForwardResult {
 }
 
 impl ForwardResult {
-    fn absorb(&mut self, r: &GemmResult) {
-        self.macs += r.macs;
-        self.waves += r.waves;
-        self.latency_s += r.latency_s;
-        self.energy_j += r.energy_j;
+    fn absorb(&mut self, a: &LayerApply) {
+        self.macs += a.macs;
+        self.waves += a.waves;
+        self.latency_s += a.latency_s;
+        self.energy_j += a.energy_j;
+        self.gemm_layers += a.gemm as usize;
+    }
+}
+
+/// One layer applied functionally: output activations + the priced
+/// traffic (zero MACs for the MAC-free layers).  Both the inference
+/// [`GemmEngine::forward`] and the training tape build on this single
+/// dispatch, so the two paths cannot drift.
+pub(crate) struct LayerApply {
+    pub y: Vec<f32>,
+    pub macs: u64,
+    pub waves: u64,
+    pub latency_s: f64,
+    pub energy_j: f64,
+    /// Whether the layer executed through the batched GEMM engine.
+    pub gemm: bool,
+}
+
+impl From<GemmResult> for LayerApply {
+    fn from(r: GemmResult) -> LayerApply {
+        LayerApply {
+            y: r.y,
+            macs: r.macs,
+            waves: r.waves,
+            latency_s: r.latency_s,
+            energy_j: r.energy_j,
+            gemm: true,
+        }
     }
 }
 
@@ -223,9 +251,59 @@ impl GemmEngine {
         }
     }
 
-    /// Functional forward pass of a whole network.  Conv2d and Dense run
-    /// through [`GemmEngine::gemm`] (conv via im2col); pooling and ReLU
-    /// are element-wise passes over the activations with PIM semantics.
+    /// Apply one layer functionally: Conv2d and Dense run through
+    /// [`GemmEngine::gemm`] (conv via im2col); pooling and ReLU are
+    /// element-wise passes over the activations with PIM semantics.
+    /// The single layer dispatch shared by [`GemmEngine::forward`] and
+    /// the training tape.
+    pub(crate) fn apply_layer(
+        &self,
+        layer: &Layer,
+        p: Option<&LayerParams>,
+        act: &[f32],
+        batch: usize,
+    ) -> LayerApply {
+        match *layer {
+            Layer::Conv2d { .. } => {
+                let lp = p.expect("conv layer params");
+                self.conv2d(layer, &lp.w, Some(&lp.b), act, batch).into()
+            }
+            Layer::Dense { inp, out } => {
+                let lp = p.expect("dense layer params");
+                self.gemm(&lp.w, act, Some(&lp.b), out, inp, batch).into()
+            }
+            Layer::AvgPool2 { ch, in_h, in_w } => {
+                assert_eq!(act.len(), batch * ch * in_h * in_w);
+                let y = avg_pool2(act, batch * ch, in_h, in_w);
+                // 3 adds per pooled output ride along at ~1/20 MAC.
+                let adds = (layer.out_units() * batch) as u64 * 3;
+                LayerApply {
+                    y,
+                    macs: 0,
+                    waves: 0,
+                    latency_s: 0.0,
+                    energy_j: adds as f64 * self.e_mac / 20.0,
+                    gemm: false,
+                }
+            }
+            Layer::Relu { units } => {
+                assert_eq!(act.len(), batch * units);
+                let mut y = act.to_vec();
+                relu_inplace(&mut y);
+                LayerApply {
+                    y,
+                    macs: 0,
+                    waves: 0,
+                    latency_s: 0.0,
+                    energy_j: 0.0,
+                    gemm: false,
+                }
+            }
+        }
+    }
+
+    /// Functional forward pass of a whole network, one
+    /// [`GemmEngine::apply_layer`] per layer.
     pub fn forward(
         &self,
         net: &Network,
@@ -240,38 +318,9 @@ impl GemmEngine {
         let mut act = x_batch.to_vec();
         let mut res = ForwardResult::default();
         for (layer, p) in net.layers.iter().zip(&params.layers) {
-            match *layer {
-                Layer::Conv2d { .. } => {
-                    let lp = p.as_ref().expect("conv layer params");
-                    let r = self.conv2d(layer, &lp.w, Some(&lp.b), &act, batch);
-                    res.absorb(&r);
-                    res.gemm_layers += 1;
-                    act = r.y;
-                }
-                Layer::Dense { inp, out } => {
-                    let lp = p.as_ref().expect("dense layer params");
-                    let r = self.gemm(&lp.w, &act, Some(&lp.b), out, inp, batch);
-                    res.absorb(&r);
-                    res.gemm_layers += 1;
-                    act = r.y;
-                }
-                Layer::AvgPool2 { ch, in_h, in_w } => {
-                    assert_eq!(act.len(), batch * ch * in_h * in_w);
-                    act = avg_pool2(&act, batch * ch, in_h, in_w);
-                    // 3 adds per pooled output ride along at ~1/20 MAC.
-                    let adds = (layer.out_units() * batch) as u64 * 3;
-                    res.energy_j += adds as f64 * self.e_mac / 20.0;
-                }
-                Layer::Relu { units } => {
-                    assert_eq!(act.len(), batch * units);
-                    for v in act.iter_mut() {
-                        // max(0, x); NaN and -0 normalise to +0.
-                        if v.is_nan() || *v <= 0.0 {
-                            *v = 0.0;
-                        }
-                    }
-                }
-            }
+            let a = self.apply_layer(layer, p.as_ref(), &act, batch);
+            res.absorb(&a);
+            act = a.y;
         }
         res.y = act;
         res
@@ -362,9 +411,19 @@ fn im2col_into(
     }
 }
 
+/// In-place ReLU with PIM semantics: `max(0, x)`; NaN and -0 normalise
+/// to +0 (shared by the forward engine and the training tape).
+pub(crate) fn relu_inplace(act: &mut [f32]) {
+    for v in act.iter_mut() {
+        if v.is_nan() || *v <= 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
 /// 2×2 average pooling (stride 2) over `planes` independent `[h, w]`
 /// planes, through the PIM datapath (3 adds + one ×0.25 per output).
-fn avg_pool2(x: &[f32], planes: usize, in_h: usize, in_w: usize) -> Vec<f32> {
+pub(crate) fn avg_pool2(x: &[f32], planes: usize, in_h: usize, in_w: usize) -> Vec<f32> {
     let (oh, ow) = (in_h / 2, in_w / 2);
     let mut y = vec![0f32; planes * oh * ow];
     for p in 0..planes {

@@ -1,7 +1,8 @@
 //! Accelerator architecture: tiles, the DNN-layer→array mapper, the
 //! training-phase scheduler that together produce the paper's Fig. 6
-//! (training area / latency / energy vs FloatPIM), and the wave-parallel
-//! batched GEMM engine every functional dense/conv workload runs through.
+//! (training area / latency / energy vs FloatPIM), the wave-parallel
+//! batched GEMM engine every functional dense/conv workload runs
+//! through, and the training engine that lowers backprop + SGD onto it.
 
 pub mod accel;
 pub mod gemm;
@@ -9,6 +10,7 @@ pub mod gemv;
 pub mod mapper;
 pub mod schedule;
 pub mod tile;
+pub mod train;
 
 pub use accel::{Accelerator, AccelKind, RunCost};
 pub use gemm::{im2col, pim_gemm, ForwardResult, GemmEngine, GemmResult, LayerParams, NetworkParams};
@@ -16,3 +18,4 @@ pub use gemv::{pim_gemv, GemvResult};
 pub use mapper::{MappingPlan, OURS_LANE_COLS, FLOATPIM_LANE_COLS};
 pub use schedule::PipelineSchedule;
 pub use tile::Tile;
+pub use train::{softmax_xent, TrainEngine, TrainStepResult, TrainTotals};

@@ -1,0 +1,798 @@
+//! Wave-parallel functional *training*: forward, backward and SGD
+//! update, every MAC on the PIM softfloat chain, priced from the cached
+//! cost model — the paper's headline claim (§4.3) executed, not just
+//! accounted.
+//!
+//! The backward pass lowers onto the same batched GEMM primitive the
+//! forward pass uses ([`GemmEngine::gemm`]):
+//!
+//! * `Dense`:  `dX = δ·W` and `dW = δᵀ·X` — two GEMMs over transposed
+//!   operands (transposition is pure data movement: the arrays address
+//!   operands by row/column wiring, so it prices no MACs);
+//! * `Conv2d`: `dW = δᵀ·patches` over the rebuilt im2col patch matrix,
+//!   and `dX = col2im(δ·W)` with in-array accumulation;
+//! * `AvgPool2`: one ×0.25 broadcast per pooled cell;
+//! * `Relu`: a mask from the taped forward activations;
+//! * the softmax–cross-entropy loss head runs on the host digital unit
+//!   (exp/log have no in-array procedure in the paper; the PIM arrays
+//!   execute the MAC-bearing layers).
+//!
+//! The SGD update `w := w − lr·g` is one in-array multiply + subtract
+//! per parameter ([`pim_mul_f32`] then [`pim_sub_f32`]), counted as one
+//! update MAC — exactly `training_work`'s `macs_wu`.
+//!
+//! **Ledger parity.**  One [`TrainStepResult`] reports loss, gradients
+//! and latency/energy/waves for fwd+bwd+update, and its MAC/wave totals
+//! are *defined* to equal [`crate::model::Network::training_work`] and
+//! [`crate::arch::Accelerator::train_step_cost`]: `macs_bwd` is exactly
+//! `2 × macs_fwd` (dgrad + wgrad reuse the forward contraction size),
+//! waves are `total_macs.div_ceil(lanes)`, and the energy formula
+//! mirrors `train_step_cost` term for term (MACs + 32-bit activation
+//! stash writes + forward ride-along adds at 1/20 MAC).  Backward
+//! ride-along element-wise work (bias-gradient sums, col2im
+//! accumulations, pool scaling) is tallied in `adds_bwd` for visibility
+//! but left unpriced, mirroring the analytic model's forward-only add
+//! accounting.  `rust/tests/training.rs` pins functional and analytic
+//! models together for LeNet-5 across batch sizes.
+
+use crate::arch::gemm::{GemmEngine, LayerParams, NetworkParams};
+use crate::fpu::softfloat::{pim_add_f32, pim_mul_f32, pim_sub_f32};
+use crate::fpu::FpCostModel;
+use crate::model::{Layer, Network};
+use crate::{Error, Result};
+
+/// Ledger of one functional training step (fwd + bwd + update).
+#[derive(Debug, Clone)]
+pub struct TrainStepResult {
+    /// Mean softmax–cross-entropy loss of the batch.
+    pub loss: f32,
+    pub macs_fwd: u64,
+    /// Backward MACs (dgrad + wgrad); exactly `2 × macs_fwd`.
+    pub macs_bwd: u64,
+    /// Update MACs: one per parameter (`lr·g` multiply + subtract).
+    pub macs_wu: u64,
+    /// Forward ride-along adds (bias/pool), priced at 1/20 MAC.
+    pub adds: u64,
+    /// Backward ride-along element-wise ops (bias-grad sums, col2im
+    /// accumulation, pool scaling) — counted, not priced, mirroring
+    /// `training_work`'s forward-only add accounting.
+    pub adds_bwd: u64,
+    /// Activation values stashed for the backward pass.
+    pub stored_activations: u64,
+    /// Row-parallel MAC waves: `total_macs.div_ceil(lanes)`.
+    pub waves: u64,
+    pub latency_s: f64,
+    pub energy_j: f64,
+    /// Per-layer gradients (`None` for parameter-free layers), in the
+    /// same `LayerParams` shape as the weights they update.
+    pub grads: Vec<Option<LayerParams>>,
+}
+
+impl TrainStepResult {
+    pub fn total_macs(&self) -> u64 {
+        self.macs_fwd + self.macs_bwd + self.macs_wu
+    }
+}
+
+/// Running totals over many train steps (the merged ledger the runtime
+/// and coordinator report).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TrainTotals {
+    pub steps: u64,
+    pub macs_fwd: u64,
+    pub macs_bwd: u64,
+    pub macs_wu: u64,
+    pub adds: u64,
+    pub adds_bwd: u64,
+    pub stored_activations: u64,
+    pub waves: u64,
+    pub latency_s: f64,
+    pub energy_j: f64,
+}
+
+impl TrainTotals {
+    pub fn absorb(&mut self, r: &TrainStepResult) {
+        self.steps += 1;
+        self.macs_fwd += r.macs_fwd;
+        self.macs_bwd += r.macs_bwd;
+        self.macs_wu += r.macs_wu;
+        self.adds += r.adds;
+        self.adds_bwd += r.adds_bwd;
+        self.stored_activations += r.stored_activations;
+        self.waves += r.waves;
+        self.latency_s += r.latency_s;
+        self.energy_j += r.energy_j;
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.macs_fwd + self.macs_bwd + self.macs_wu
+    }
+
+    /// True when this merged ledger equals the analytic
+    /// `training_work` model for `steps` train steps of `net` at
+    /// `batch` on `lanes` lanes — the single definition of the
+    /// "functional and analytic models never drift" invariant the CLI,
+    /// example and tests all check.
+    pub fn matches_analytic(&self, net: &Network, batch: usize, lanes: u64) -> bool {
+        let work = net.training_work(batch);
+        self.total_macs() == work.total_macs() * self.steps
+            && self.waves == work.mac_waves(lanes) * self.steps
+    }
+}
+
+/// Softmax cross-entropy on the host digital unit: returns the mean
+/// loss and `δ = (softmax(logits) − onehot(labels)) / batch`, the
+/// gradient seeding the backward GEMM chain.  Host f32 throughout —
+/// exp/log have no in-array procedure — and deterministic, so train
+/// steps stay bit-identical across thread counts.
+///
+/// Panics if a label is outside `0..classes` (the engine entry points
+/// validate labels and return `Err` before reaching here).
+pub fn softmax_xent(
+    logits: &[f32],
+    labels: &[i32],
+    batch: usize,
+    classes: usize,
+) -> (f32, Vec<f32>) {
+    assert_eq!(logits.len(), batch * classes, "logits shape");
+    assert_eq!(labels.len(), batch, "labels shape");
+    let mut delta = vec![0f32; batch * classes];
+    let mut loss_acc = 0f64;
+    let inv_batch = 1.0 / batch as f32;
+    for b in 0..batch {
+        let row = &logits[b * classes..(b + 1) * classes];
+        let d = &mut delta[b * classes..(b + 1) * classes];
+        let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0f32;
+        for (slot, &v) in d.iter_mut().zip(row) {
+            let e = (v - m).exp();
+            *slot = e;
+            denom += e;
+        }
+        let y = labels[b] as usize;
+        assert!(
+            y < classes,
+            "label {} out of range for {classes} classes",
+            labels[b]
+        );
+        let p_label = d[y] / denom;
+        for (j, slot) in d.iter_mut().enumerate() {
+            let p = *slot / denom;
+            *slot = (p - if j == y { 1.0 } else { 0.0 }) * inv_batch;
+        }
+        loss_acc -= (f64::from(p_label.max(f32::MIN_POSITIVE))).ln();
+    }
+    ((loss_acc / batch as f64) as f32, delta)
+}
+
+/// `[rows, cols]` row-major → `[cols, rows]`.  Pure data movement: the
+/// arrays address GEMM operands by row/column wiring, so transposition
+/// prices no MACs.
+fn transpose(m: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    debug_assert_eq!(m.len(), rows * cols);
+    let mut t = vec![0f32; m.len()];
+    for r in 0..rows {
+        for (c, &v) in m[r * cols..(r + 1) * cols].iter().enumerate() {
+            t[c * rows + r] = v;
+        }
+    }
+    t
+}
+
+/// im2col for one `[in_ch, h, w]` sample written directly in the
+/// *transposed* `[k, rows]` layout of the wgrad GEMM's weight operand:
+/// column `col0 + (oy·ow + ox)` of `pt` is the im2col row of output
+/// pixel `(oy, ox)`, with the usual `(channel, ky, kx)` ordering along
+/// `k`.  Equivalent to `transpose(im2col_into(..))` without the second
+/// full-matrix materialisation.
+#[allow(clippy::too_many_arguments)]
+fn im2col_transposed_into(
+    input: &[f32],
+    in_ch: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    rows: usize,
+    col0: usize,
+    pt: &mut [f32],
+) {
+    let (oh, ow) = (h - kh + 1, w - kw + 1);
+    debug_assert_eq!(pt.len(), in_ch * kh * kw * rows);
+    debug_assert!(col0 + oh * ow <= rows);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let r = col0 + oy * ow + ox;
+            let mut kk = 0usize;
+            for c in 0..in_ch {
+                for dy in 0..kh {
+                    let src = c * h * w + (oy + dy) * w + ox;
+                    for (di, &v) in input[src..src + kw].iter().enumerate() {
+                        pt[(kk + di) * rows + r] = v;
+                    }
+                    kk += kw;
+                }
+            }
+        }
+    }
+}
+
+/// Scatter-accumulate one sample's `[oh·ow, k]` patch gradients back to
+/// the `[in_ch, h, w]` input gradient (the inverse of `im2col_into`,
+/// with in-array adds).  Returns the add count.
+fn col2im_accumulate(
+    dpatches: &[f32],
+    in_ch: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    dx: &mut [f32],
+) -> u64 {
+    let (oh, ow) = (h - kh + 1, w - kw + 1);
+    let k = in_ch * kh * kw;
+    debug_assert_eq!(dpatches.len(), oh * ow * k);
+    debug_assert_eq!(dx.len(), in_ch * h * w);
+    let mut i = 0usize;
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for c in 0..in_ch {
+                for dy in 0..kh {
+                    let base = c * h * w + (oy + dy) * w + ox;
+                    for (di, slot) in dx[base..base + kw].iter_mut().enumerate() {
+                        *slot = pim_add_f32(*slot, dpatches[i + di]);
+                    }
+                    i += kw;
+                }
+            }
+        }
+    }
+    i as u64
+}
+
+/// Forward tape: `acts[l]` is the input to layer `l`; the last entry is
+/// the logits.
+struct Tape {
+    acts: Vec<Vec<f32>>,
+    macs: u64,
+}
+
+/// The functional training engine: taped forward, GEMM-lowered
+/// backward, in-array SGD update — all priced from the engine's cached
+/// cost model.  Construct once and reuse; results are bit-identical
+/// regardless of `threads`.
+#[derive(Debug, Clone)]
+pub struct TrainEngine {
+    gemm: GemmEngine,
+    /// Per-bit write energy for the backward activation stash.
+    e_write: f64,
+}
+
+impl TrainEngine {
+    pub fn new(model: FpCostModel, lanes: usize, threads: usize) -> Self {
+        TrainEngine {
+            e_write: model.costs.e_write,
+            gemm: GemmEngine::from_model(model, lanes, threads),
+        }
+    }
+
+    /// The underlying batched GEMM engine (shared with inference).
+    pub fn gemm(&self) -> &GemmEngine {
+        &self.gemm
+    }
+
+    fn classes(net: &Network) -> usize {
+        net.layers.last().map(Layer::out_units).unwrap_or(0)
+    }
+
+    fn validate(
+        &self,
+        net: &Network,
+        params: &NetworkParams,
+        images: &[f32],
+        labels: &[i32],
+        batch: usize,
+    ) -> Result<usize> {
+        if batch == 0 || labels.len() != batch {
+            return Err(Error::Sim(format!(
+                "bad batch: {} labels for batch {batch}",
+                labels.len()
+            )));
+        }
+        let (c0, h0, w0) = net.input;
+        if images.len() != batch * c0 * h0 * w0 {
+            return Err(Error::Sim(format!(
+                "input shape: {} values for batch {batch} of {c0}x{h0}x{w0}",
+                images.len()
+            )));
+        }
+        if params.layers.len() != net.layers.len() {
+            return Err(Error::Sim("params/net layer count mismatch".into()));
+        }
+        let classes = TrainEngine::classes(net);
+        if classes == 0 {
+            return Err(Error::Sim("network has no output layer".into()));
+        }
+        if let Some(&bad) = labels.iter().find(|&&l| l < 0 || l as usize >= classes) {
+            return Err(Error::Sim(format!(
+                "label {bad} out of range for {classes} classes"
+            )));
+        }
+        Ok(classes)
+    }
+
+    /// Forward pass keeping every layer input (the backward stash).
+    /// Runs the same [`GemmEngine::apply_layer`] dispatch as the
+    /// inference `forward`, so training and evaluation can never
+    /// disagree on layer semantics.
+    fn forward_taped(
+        &self,
+        net: &Network,
+        params: &NetworkParams,
+        x: &[f32],
+        batch: usize,
+    ) -> Tape {
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(net.layers.len() + 1);
+        acts.push(x.to_vec());
+        let mut macs = 0u64;
+        for (layer, p) in net.layers.iter().zip(&params.layers) {
+            let cur = acts.last().expect("tape is never empty");
+            let a = self.gemm.apply_layer(layer, p.as_ref(), cur, batch);
+            macs += a.macs;
+            acts.push(a.y);
+        }
+        Tape { acts, macs }
+    }
+
+    /// Loss of a forward pass (no tape, no update) — the oracle the
+    /// finite-difference gradient tests perturb.  Panics (asserts) on
+    /// malformed shapes or labels; the `Result`-returning entry points
+    /// are [`TrainEngine::train_step`] and [`TrainEngine::evaluate`].
+    pub fn loss(
+        &self,
+        net: &Network,
+        params: &NetworkParams,
+        images: &[f32],
+        labels: &[i32],
+        batch: usize,
+    ) -> f32 {
+        let classes = TrainEngine::classes(net);
+        let r = self.gemm.forward(net, params, images, batch);
+        softmax_xent(&r.y, labels, batch, classes).0
+    }
+
+    /// Evaluate a batch: (mean loss, #correct by argmax).
+    pub fn evaluate(
+        &self,
+        net: &Network,
+        params: &NetworkParams,
+        images: &[f32],
+        labels: &[i32],
+        batch: usize,
+    ) -> Result<(f32, usize)> {
+        let classes = self.validate(net, params, images, labels, batch)?;
+        let r = self.gemm.forward(net, params, images, batch);
+        let (loss, _) = softmax_xent(&r.y, labels, batch, classes);
+        let mut correct = 0usize;
+        for (b, &label) in labels.iter().enumerate() {
+            let row = &r.y[b * classes..(b + 1) * classes];
+            let best = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            if best == label as usize {
+                correct += 1;
+            }
+        }
+        Ok((loss, correct))
+    }
+
+    /// One functional SGD step: forward (taped), softmax–cross-entropy,
+    /// backward through every layer, `w := w − lr·g` — all on the PIM
+    /// datapath — returning the full priced ledger + gradients.
+    pub fn train_step(
+        &self,
+        net: &Network,
+        params: &mut NetworkParams,
+        images: &[f32],
+        labels: &[i32],
+        batch: usize,
+        lr: f32,
+    ) -> Result<TrainStepResult> {
+        let classes = self.validate(net, params, images, labels, batch)?;
+
+        // ---- forward, keeping the activation stash ----
+        let tape = self.forward_taped(net, params, images, batch);
+        let macs_fwd = tape.macs;
+        let mut adds = 0u64;
+        let mut stored = 0u64;
+        for layer in &net.layers {
+            adds += layer.adds_fwd() * batch as u64;
+            stored += layer.out_units() as u64 * batch as u64;
+        }
+
+        // ---- loss head (host digital unit) ----
+        let logits = tape.acts.last().expect("tape holds the logits");
+        let (loss, mut delta) = softmax_xent(logits, labels, batch, classes);
+        if !loss.is_finite() {
+            return Err(Error::Sim(format!("loss diverged: {loss}")));
+        }
+
+        // ---- backward: δ flows in reverse, each MAC-bearing layer
+        //      issuing its dgrad + wgrad GEMMs ----
+        let mut macs_bwd = 0u64;
+        let mut adds_bwd = 0u64;
+        let mut grads: Vec<Option<LayerParams>> = vec![None; net.layers.len()];
+        for (l, layer) in net.layers.iter().enumerate().rev() {
+            let x_in = &tape.acts[l];
+            match *layer {
+                Layer::Dense { inp, out } => {
+                    // dW = δᵀ·X: one GEMM over transposed operands.
+                    let xt = transpose(x_in, batch, inp);
+                    let dt = transpose(&delta, batch, out);
+                    let gw = self.gemm.gemm(&xt, &dt, None, inp, batch, out);
+                    macs_bwd += gw.macs;
+                    // db = column sums of δ (ride-along adds).
+                    let mut gb = vec![0f32; out];
+                    for b in 0..batch {
+                        for (slot, &d) in gb.iter_mut().zip(&delta[b * out..(b + 1) * out]) {
+                            *slot = pim_add_f32(*slot, d);
+                        }
+                    }
+                    adds_bwd += (batch * out) as u64;
+                    // dX = δ·W: GEMM against the transposed weights.
+                    let lp = params.layers[l].as_ref().expect("dense layer params");
+                    let wt = transpose(&lp.w, out, inp);
+                    let gx = self.gemm.gemm(&wt, &delta, None, inp, out, batch);
+                    macs_bwd += gx.macs;
+                    grads[l] = Some(LayerParams { w: gw.y, b: gb });
+                    delta = gx.y;
+                }
+                Layer::Conv2d {
+                    in_ch,
+                    out_ch,
+                    kh,
+                    kw,
+                    in_h,
+                    in_w,
+                } => {
+                    let (oh, ow) = (in_h - kh + 1, in_w - kw + 1);
+                    let k = in_ch * kh * kw;
+                    let ohw = oh * ow;
+                    let rows = batch * ohw;
+                    let plane = in_ch * in_h * in_w;
+                    // δ back to the GEMM row layout [batch·oh·ow, out_ch].
+                    let mut dmat = vec![0f32; rows * out_ch];
+                    for b in 0..batch {
+                        for oc in 0..out_ch {
+                            let src = &delta[(b * out_ch + oc) * ohw..(b * out_ch + oc + 1) * ohw];
+                            for (p, &d) in src.iter().enumerate() {
+                                dmat[(b * ohw + p) * out_ch + oc] = d;
+                            }
+                        }
+                    }
+                    // Rebuild the forward im2col patch matrix directly
+                    // in the transposed [k, rows] layout the wgrad GEMM
+                    // consumes (skips materialising the [rows, k]
+                    // matrix only to copy it again).
+                    let mut pt = vec![0f32; k * rows];
+                    for b in 0..batch {
+                        im2col_transposed_into(
+                            &x_in[b * plane..(b + 1) * plane],
+                            in_ch,
+                            in_h,
+                            in_w,
+                            kh,
+                            kw,
+                            rows,
+                            b * ohw,
+                            &mut pt,
+                        );
+                    }
+                    // dW = δᵀ·patches.
+                    let dt = transpose(&dmat, rows, out_ch);
+                    let gw = self.gemm.gemm(&pt, &dt, None, k, rows, out_ch);
+                    macs_bwd += gw.macs;
+                    // db over every batch·pixel position.
+                    let mut gb = vec![0f32; out_ch];
+                    for r in 0..rows {
+                        for (slot, &d) in gb.iter_mut().zip(&dmat[r * out_ch..(r + 1) * out_ch]) {
+                            *slot = pim_add_f32(*slot, d);
+                        }
+                    }
+                    adds_bwd += (rows * out_ch) as u64;
+                    // dX = col2im(δ·W).
+                    let lp = params.layers[l].as_ref().expect("conv layer params");
+                    let wt = transpose(&lp.w, out_ch, k);
+                    let gp = self.gemm.gemm(&wt, &dmat, None, k, out_ch, rows);
+                    macs_bwd += gp.macs;
+                    let mut dx = vec![0f32; batch * plane];
+                    for b in 0..batch {
+                        adds_bwd += col2im_accumulate(
+                            &gp.y[b * ohw * k..(b + 1) * ohw * k],
+                            in_ch,
+                            in_h,
+                            in_w,
+                            kh,
+                            kw,
+                            &mut dx[b * plane..(b + 1) * plane],
+                        );
+                    }
+                    grads[l] = Some(LayerParams { w: gw.y, b: gb });
+                    delta = dx;
+                }
+                Layer::AvgPool2 { ch, in_h, in_w } => {
+                    let (oh, ow) = (in_h / 2, in_w / 2);
+                    let planes = batch * ch;
+                    debug_assert_eq!(delta.len(), planes * oh * ow);
+                    let mut dx = vec![0f32; planes * in_h * in_w];
+                    for p in 0..planes {
+                        let src = &delta[p * oh * ow..(p + 1) * oh * ow];
+                        let dst = &mut dx[p * in_h * in_w..(p + 1) * in_h * in_w];
+                        for r in 0..oh {
+                            for c in 0..ow {
+                                let g = pim_mul_f32(src[r * ow + c], 0.25);
+                                let i = 2 * r * in_w + 2 * c;
+                                dst[i] = g;
+                                dst[i + 1] = g;
+                                dst[i + in_w] = g;
+                                dst[i + in_w + 1] = g;
+                            }
+                        }
+                    }
+                    adds_bwd += (planes * oh * ow) as u64;
+                    delta = dx;
+                }
+                Layer::Relu { units } => {
+                    // Mask from the taped output: y > 0 ⟺ x > 0 (NaN
+                    // inputs were normalised to +0 on the way forward).
+                    let y_out = &tape.acts[l + 1];
+                    debug_assert_eq!(delta.len(), batch * units);
+                    for (d, &y) in delta.iter_mut().zip(y_out) {
+                        if y <= 0.0 {
+                            *d = 0.0;
+                        }
+                    }
+                }
+            }
+        }
+
+        // ---- SGD update: w := w − lr·g, one in-array MAC/param ----
+        let mut macs_wu = 0u64;
+        for (p, g) in params.layers.iter_mut().zip(&grads) {
+            let (Some(p), Some(g)) = (p.as_mut(), g.as_ref()) else {
+                continue;
+            };
+            for (w, &gw) in p.w.iter_mut().zip(&g.w) {
+                *w = pim_sub_f32(*w, pim_mul_f32(lr, gw));
+            }
+            for (b, &gb) in p.b.iter_mut().zip(&g.b) {
+                *b = pim_sub_f32(*b, pim_mul_f32(lr, gb));
+            }
+            macs_wu += (g.w.len() + g.b.len()) as u64;
+        }
+
+        // ---- price the step exactly as `Accelerator::train_step_cost`
+        //      does: the functional and analytic models never drift ----
+        let total_macs = macs_fwd + macs_bwd + macs_wu;
+        let waves = total_macs.div_ceil(self.gemm.lanes as u64);
+        let latency_s = waves as f64 * self.gemm.model().t_mac();
+        let e_mac = self.gemm.model().e_mac();
+        let stash_writes = stored * 32;
+        let mut energy_j = total_macs as f64 * e_mac;
+        energy_j += stash_writes as f64 * self.e_write;
+        energy_j += adds as f64 * e_mac / 20.0;
+
+        Ok(TrainStepResult {
+            loss,
+            macs_fwd,
+            macs_bwd,
+            macs_wu,
+            adds,
+            adds_bwd,
+            stored_activations: stored,
+            waves,
+            latency_s,
+            energy_j,
+            grads,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpu::softfloat::ftz;
+    use crate::fpu::FloatFormat;
+    use crate::nvsim::OpCosts;
+    use crate::prop::Rng;
+
+    fn engine(threads: usize) -> TrainEngine {
+        TrainEngine::new(
+            FpCostModel::new(OpCosts::proposed_default(), FloatFormat::FP32),
+            1024,
+            threads,
+        )
+    }
+
+    fn dense_net(inp: usize, out: usize) -> Network {
+        Network {
+            name: "test-dense",
+            input: (1, 1, inp),
+            layers: vec![Layer::Dense { inp, out }],
+        }
+    }
+
+    #[test]
+    fn softmax_delta_sums_to_zero_rows() {
+        let logits = vec![0.3f32, -1.2, 2.0, 0.0, 0.5, -0.5];
+        let (loss, delta) = softmax_xent(&logits, &[2, 0], 2, 3);
+        assert!(loss.is_finite() && loss > 0.0);
+        for b in 0..2 {
+            let s: f32 = delta[b * 3..(b + 1) * 3].iter().sum();
+            assert!(s.abs() < 1e-6, "row {b} sums to {s}");
+        }
+        // The label entry is negative (p − 1 < 0).
+        assert!(delta[2] < 0.0 && delta[3] < 0.0);
+    }
+
+    #[test]
+    fn dense_grad_matches_host_chain() {
+        let (inp, out, batch) = (7usize, 5usize, 3usize);
+        let net = dense_net(inp, out);
+        let mut rng = Rng::new(0xD00D);
+        let mut params = NetworkParams::init(&net, 9);
+        let x: Vec<f32> = (0..batch * inp).map(|_| rng.f32_normal(2)).collect();
+        let labels: Vec<i32> = (0..batch).map(|_| rng.below(out as u64) as i32).collect();
+
+        let eng = engine(2);
+        let fwd = eng.gemm.forward(&net, &params, &x, batch);
+        let (_, delta) = softmax_xent(&fwd.y, &labels, batch, out);
+
+        let before = params.clone();
+        let r = eng
+            .train_step(&net, &mut params, &x, &labels, batch, 0.0)
+            .unwrap();
+        let g = r.grads[0].as_ref().expect("dense grads");
+
+        // dW[o, i] via the host FTZ chain over the batch (the same
+        // accumulation order the backward GEMM schedules).
+        for o in 0..out {
+            for i in 0..inp {
+                let mut acc = 0f32;
+                for b in 0..batch {
+                    acc = ftz(acc + ftz(x[b * inp + i] * delta[b * out + o]));
+                }
+                assert_eq!(
+                    g.w[o * inp + i].to_bits(),
+                    acc.to_bits(),
+                    "dW[{o},{i}]"
+                );
+            }
+        }
+        // lr = 0 leaves the weights bit-identical.
+        let after = &params.layers[0].as_ref().unwrap().w;
+        for (a, b) in after.iter().zip(&before.layers[0].as_ref().unwrap().w) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn sgd_update_is_the_pim_mul_sub_chain() {
+        let net = dense_net(4, 3);
+        let mut params = NetworkParams::init(&net, 5);
+        let before = params.clone();
+        let mut rng = Rng::new(0x51D);
+        let x: Vec<f32> = (0..8).map(|_| rng.f32_normal(1)).collect();
+        let labels = vec![1, 2];
+        let lr = 0.25f32;
+        let r = engine(1)
+            .train_step(&net, &mut params, &x, &labels, 2, lr)
+            .unwrap();
+        let g = r.grads[0].as_ref().unwrap();
+        let (old, new) = (
+            before.layers[0].as_ref().unwrap(),
+            params.layers[0].as_ref().unwrap(),
+        );
+        for i in 0..old.w.len() {
+            let want = pim_sub_f32(old.w[i], pim_mul_f32(lr, g.w[i]));
+            assert_eq!(new.w[i].to_bits(), want.to_bits(), "w[{i}]");
+        }
+        for i in 0..old.b.len() {
+            let want = pim_sub_f32(old.b[i], pim_mul_f32(lr, g.b[i]));
+            assert_eq!(new.b[i].to_bits(), want.to_bits(), "b[{i}]");
+        }
+    }
+
+    #[test]
+    fn ledger_matches_training_work_on_small_conv_net() {
+        let net = Network {
+            name: "test-conv",
+            input: (1, 6, 6),
+            layers: vec![
+                Layer::Conv2d {
+                    in_ch: 1,
+                    out_ch: 2,
+                    kh: 3,
+                    kw: 3,
+                    in_h: 6,
+                    in_w: 6,
+                },
+                Layer::Relu { units: 2 * 4 * 4 },
+                Layer::AvgPool2 {
+                    ch: 2,
+                    in_h: 4,
+                    in_w: 4,
+                },
+                Layer::Dense { inp: 8, out: 4 },
+            ],
+        };
+        let batch = 3;
+        let mut rng = Rng::new(0xC0C0);
+        let mut params = NetworkParams::init(&net, 11);
+        let x: Vec<f32> = (0..batch * 36).map(|_| rng.f32_normal(1)).collect();
+        let labels: Vec<i32> = (0..batch).map(|_| rng.below(4) as i32).collect();
+        let eng = engine(3);
+        let r = eng
+            .train_step(&net, &mut params, &x, &labels, batch, 0.05)
+            .unwrap();
+        let work = net.training_work(batch);
+        assert_eq!(r.macs_fwd, work.macs_fwd);
+        assert_eq!(r.macs_bwd, work.macs_bwd);
+        assert_eq!(r.macs_bwd, 2 * r.macs_fwd);
+        assert_eq!(r.macs_wu, work.macs_wu);
+        assert_eq!(r.adds, work.adds);
+        assert_eq!(r.stored_activations, work.stored_activations);
+        assert_eq!(r.waves, work.mac_waves(eng.gemm().lanes as u64));
+        assert!(r.adds_bwd > 0, "backward ride-alongs are tallied");
+        assert!(r.latency_s > 0.0 && r.energy_j > 0.0);
+    }
+
+    #[test]
+    fn bad_labels_and_shapes_error() {
+        let net = dense_net(4, 3);
+        let mut params = NetworkParams::init(&net, 1);
+        let eng = engine(1);
+        let x = vec![0.5f32; 8];
+        assert!(eng.train_step(&net, &mut params, &x, &[0, 3], 2, 0.1).is_err());
+        assert!(eng.train_step(&net, &mut params, &x, &[0, -1], 2, 0.1).is_err());
+        assert!(eng.train_step(&net, &mut params, &x[..7], &[0, 1], 2, 0.1).is_err());
+        assert!(eng.train_step(&net, &mut params, &x, &[0], 2, 0.1).is_err());
+    }
+
+    #[test]
+    fn totals_absorb_steps() {
+        let net = dense_net(4, 3);
+        let mut params = NetworkParams::init(&net, 2);
+        let eng = engine(1);
+        let x = vec![0.25f32; 8];
+        let labels = vec![0, 2];
+        let mut totals = TrainTotals::default();
+        for _ in 0..3 {
+            let r = eng
+                .train_step(&net, &mut params, &x, &labels, 2, 0.1)
+                .unwrap();
+            totals.absorb(&r);
+        }
+        assert_eq!(totals.steps, 3);
+        let work = net.training_work(2);
+        assert_eq!(totals.total_macs(), 3 * work.total_macs());
+        assert_eq!(totals.macs_wu, 3 * work.macs_wu);
+    }
+
+    #[test]
+    fn evaluate_counts_correct_and_loss() {
+        let net = dense_net(6, 4);
+        let params = NetworkParams::init(&net, 3);
+        let eng = engine(2);
+        let mut rng = Rng::new(7);
+        let batch = 5;
+        let x: Vec<f32> = (0..batch * 6).map(|_| rng.f32_normal(1)).collect();
+        let labels: Vec<i32> = (0..batch).map(|_| rng.below(4) as i32).collect();
+        let (loss, correct) = eng.evaluate(&net, &params, &x, &labels, batch).unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        assert!(correct <= batch);
+    }
+}

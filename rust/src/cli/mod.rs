@@ -98,8 +98,11 @@ USAGE:
   mram-pim selfcheck
 
 `report` regenerates the paper's tables/figures from the cost models;
-`train` runs real LeNet-5 training through the AOT-compiled PJRT
-artifacts while simulating the PIM cost of every step."
+`train` runs real LeNet-5 SGD training *functionally on the modeled PIM
+datapath* — forward, backward and weight update through the
+wave-parallel train engine, priced per step — with no PJRT or artifacts
+required.  (Built with `--features pjrt` + `make artifacts`, the same
+command executes the AOT-compiled XLA graphs instead.)"
 }
 
 #[cfg(test)]

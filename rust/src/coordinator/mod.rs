@@ -1,24 +1,27 @@
 //! The training coordinator: drives *functional* training through the
-//! PJRT runtime while the PIM cost simulation prices every step, and
-//! fans the deep (bit-level) validation work out over worker threads.
+//! runtime — the offline functional PIM backend by default, PJRT with
+//! the `pjrt` feature — while the PIM cost simulation prices every
+//! step, and fans the deep (bit-level) validation work out over worker
+//! threads.
 //!
 //! This is the L3 "leader" of the three-layer architecture: rust owns the
-//! training loop, batching, metrics and the simulator; the compute graph
-//! itself was AOT-compiled from JAX/Pallas and python is never invoked.
+//! training loop, batching, metrics and the simulator; python is never
+//! invoked (the PJRT compute graph was AOT-compiled from JAX/Pallas).
 
 pub mod checkpoint;
 
 use std::sync::mpsc;
 use std::thread;
 
-use crate::arch::gemm::GemmEngine;
+use crate::arch::gemm::{GemmEngine, NetworkParams};
+use crate::arch::train::{TrainEngine, TrainTotals};
 use crate::arch::{AccelKind, Accelerator, RunCost};
 use crate::data::Dataset;
 use crate::fpu::procedure::FpEngine;
 use crate::fpu::softfloat;
-use crate::fpu::FloatFormat;
+use crate::fpu::{FloatFormat, FpCostModel};
 use crate::metrics::{Counters, Stopwatch};
-use crate::model::Network;
+use crate::model::{Layer, Network};
 use crate::nvsim::{ArrayGeometry, OpCosts};
 use crate::prop::Rng;
 use crate::runtime::{Runtime, TrainState, EVAL_BATCH, TRAIN_BATCH};
@@ -68,6 +71,10 @@ pub struct TrainReport {
     /// Bit-level validation: MACs checked / mismatches found.
     pub deep_checked: u64,
     pub deep_mismatches: u64,
+    /// Merged functional train ledger (the runtime's accumulated
+    /// `TrainStepResult`s).  `Some` on the functional PIM backend,
+    /// `None` on PJRT (XLA hides the wave schedule).
+    pub functional: Option<TrainTotals>,
     pub counters: Counters,
     pub wall_s: f64,
 }
@@ -128,7 +135,7 @@ impl Coordinator {
                 let (_eloss, correct) =
                     self.runtime
                         .eval(&state, &test_batch.images, &test_batch.labels)?;
-                accuracy.push((step, correct / EVAL_BATCH as f32));
+                accuracy.push((step, correct / test_batch.n.max(1) as f32));
                 counters.add("evals", 1);
             }
         }
@@ -149,6 +156,7 @@ impl Coordinator {
             sim_floatpim,
             deep_checked,
             deep_mismatches,
+            functional: self.runtime.functional_totals(),
             counters,
             wall_s: sw.elapsed_s(),
         })
@@ -182,12 +190,15 @@ impl Coordinator {
 /// return (MACs checked, mismatches).  Every worker executes
 ///
 /// * a bit-level subarray mul/add wave, checked against the softfloat
-///   gold model, and
+///   gold model,
 /// * a batched GEMM through the wave-parallel engine, checked against
-///   the host FTZ chain —
+///   the host FTZ chain, and
+/// * a full functional train step (fwd + bwd + SGD update) on a small
+///   MLP, whose priced ledger must agree exactly with the analytic
+///   `training_work` model —
 ///
-/// with its engine constructed once per worker (cached cost model); the
-/// fan-out across workers is the wave parallelism.
+/// with its engines constructed once per worker (cached cost model);
+/// the fan-out across workers is the wave parallelism.
 pub fn deep_validation_waves(waves: usize, threads: usize, seed: u64) -> (u64, u64) {
     let (tx, rx) = mpsc::channel::<(u64, u64)>();
     for t in 0..threads.max(1) {
@@ -198,6 +209,16 @@ pub fn deep_validation_waves(waves: usize, threads: usize, seed: u64) -> (u64, u
             let mut checked = 0u64;
             let mut bad = 0u64;
             let gemm = GemmEngine::new(OpCosts::proposed_default(), FloatFormat::FP32, 1024, 1);
+            let train = TrainEngine::new(FpCostModel::proposed_fp32(), 1024, 1);
+            let tiny = Network {
+                name: "deep-validate-mlp",
+                input: (1, 4, 3),
+                layers: vec![
+                    Layer::Dense { inp: 12, out: 9 },
+                    Layer::Relu { units: 9 },
+                    Layer::Dense { inp: 9, out: 5 },
+                ],
+            };
             for _ in 0..waves {
                 // (a) bit-level subarray mul/add wave vs softfloat.
                 let mut engine = FpEngine::new(
@@ -249,6 +270,37 @@ pub fn deep_validation_waves(waves: usize, threads: usize, seed: u64) -> (u64, u
                         if got.y[b * out + o].to_bits() != acc.to_bits() {
                             bad += 1;
                         }
+                    }
+                }
+                // (c) a full functional train step on a small MLP: the
+                // priced ledger must agree exactly with the analytic
+                // workload model, and the loss must stay finite.
+                let batch = 2usize;
+                let x: Vec<f32> = (0..batch * 12).map(|_| rng.f32_normal(2)).collect();
+                let labels: Vec<i32> =
+                    (0..batch).map(|_| rng.below(5) as i32).collect();
+                let mut params = NetworkParams::init(&tiny, rng.next_u64());
+                match train.train_step(&tiny, &mut params, &x, &labels, batch, 0.05) {
+                    Ok(r) => {
+                        let work = tiny.training_work(batch);
+                        for ok in [
+                            r.loss.is_finite(),
+                            r.macs_fwd == work.macs_fwd,
+                            r.macs_bwd == work.macs_bwd,
+                            r.macs_wu == work.macs_wu,
+                            r.adds == work.adds,
+                            r.stored_activations == work.stored_activations,
+                            r.waves == work.mac_waves(1024),
+                        ] {
+                            checked += 1;
+                            if !ok {
+                                bad += 1;
+                            }
+                        }
+                    }
+                    Err(_) => {
+                        checked += 1;
+                        bad += 1;
                     }
                 }
             }

@@ -228,6 +228,13 @@ pub fn pim_mac_f32(a: f32, b: f32, c: f32) -> f32 {
     pim_add_f32(pim_mul_f32(a, b), c)
 }
 
+/// PIM subtract: negation is a free sign-bit flip in the array (the
+/// sign column inverts on read), so `a - b` is one add pass.  The SGD
+/// update `w := w - lr·g` runs through this.
+pub fn pim_sub_f32(a: f32, b: f32) -> f32 {
+    f32::from_bits(pim_add_bits(a.to_bits(), b.to_bits() ^ 0x8000_0000))
+}
+
 /// Flush subnormals of a host float to signed zero (the FTZ the oracle
 /// applies to inputs/outputs when comparing against host IEEE).
 pub fn ftz(x: f32) -> f32 {
@@ -242,6 +249,27 @@ pub fn ftz(x: f32) -> f32 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn sub_is_add_of_negation() {
+        let cases = [
+            (3.5f32, 1.25f32),
+            (1.0, 1.0),
+            (-2.0, 7.5),
+            (0.0, -0.0),
+            (1e-38, 1e-38),
+            (f32::INFINITY, f32::INFINITY),
+        ];
+        for (a, b) in cases {
+            let got = pim_sub_f32(a, b);
+            let want = pim_add_f32(a, -b);
+            assert!(
+                got.to_bits() == want.to_bits() || (got.is_nan() && want.is_nan()),
+                "{a} - {b}: {got} vs {want}"
+            );
+        }
+        assert_eq!(pim_sub_f32(3.5, 1.25), 2.25);
+    }
 
     /// The seed implementations, retained verbatim as the bit-identity
     /// reference for the branch-reduced fast path above.

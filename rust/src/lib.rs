@@ -23,15 +23,17 @@
 //!   bit-serial O(Nm²) exponent alignment, row-parallel multiply with
 //!   intermediate-write traffic, and its cost model.
 //! * [`arch`] — the accelerator: tiles, the DNN-layer→subarray mapper,
-//!   the training-phase scheduler, and the wave-parallel batched GEMM
+//!   the training-phase scheduler, the wave-parallel batched GEMM
 //!   engine ([`arch::gemm`]) that dense/conv functional traffic executes
-//!   through.
+//!   through, and the training engine ([`arch::train`]) that lowers
+//!   backprop + SGD onto the same waves.
 //! * [`model`] / [`data`] — the LeNet-5 workload of §4 and a synthetic
 //!   MNIST-like corpus (see DESIGN.md for the substitution rationale).
-//! * [`runtime`] — the PJRT runtime that loads the AOT-compiled JAX/Pallas
-//!   artifacts (`artifacts/*.hlo.txt`) and executes real training steps.
-//!   Compiled behind the optional `pjrt` feature; the default (offline)
-//!   build substitutes a typed stub with the same API.
+//! * [`runtime`] — the training runtime.  The default (offline) build is
+//!   the *functional PIM runtime*: real LeNet-5 training through the
+//!   train engine, no artifacts needed.  The optional `pjrt` feature
+//!   compiles the PJRT/XLA backend instead (AOT artifacts from
+//!   `artifacts/*.hlo.txt`), offline-typechecked against `rust/xla-stub`.
 //! * [`coordinator`] — the leader that drives functional training and the
 //!   cost simulation together and emits the paper's tables/figures.
 //!

@@ -11,7 +11,7 @@ use mram_pim::metrics::fmt_si;
 use mram_pim::model::Network;
 use mram_pim::nvsim::OpCosts;
 use mram_pim::report;
-use mram_pim::runtime::Runtime;
+use mram_pim::runtime::{Runtime, FUNCTIONAL_LANES, TRAIN_BATCH};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -86,16 +86,13 @@ fn cmd_train(args: &Args) -> mram_pim::Result<()> {
         threads: args.usize_or("threads", 4)?,
     };
 
-    println!("loading artifacts from {artifacts}/ ...");
-    let runtime = match Runtime::load_dir(&artifacts) {
-        Ok(rt) => rt,
-        Err(e) => {
-            println!("PJRT unavailable ({e});");
-            println!("running the functional PIM forward path instead (GEMM engine).");
-            return cmd_train_functional(&cfg);
-        }
-    };
-    println!("PJRT platform: {}", runtime.platform());
+    // The default offline build loads the functional PIM runtime (real
+    // training through the wave-parallel train engine, no artifacts
+    // needed); with `--features pjrt` + `make artifacts` this loads the
+    // AOT/XLA backend instead.
+    let mut runtime = Runtime::load_dir(&artifacts)?;
+    runtime.set_threads(cfg.threads);
+    println!("runtime backend: {}", runtime.platform());
     let coord = Coordinator::new(runtime);
     println!(
         "training {} ({} params) for {} steps @ lr {} ...",
@@ -135,6 +132,9 @@ fn cmd_train(args: &Args) -> mram_pim::Result<()> {
             report.deep_checked, report.deep_mismatches
         );
     }
+    if let Some(f) = &report.functional {
+        report_functional_ledger(f, coord.network())?;
+    }
     println!(
         "final accuracy: {:.2}%  (wall {:.1}s)",
         report.final_accuracy * 100.0,
@@ -143,33 +143,44 @@ fn cmd_train(args: &Args) -> mram_pim::Result<()> {
     Ok(())
 }
 
-/// Functional fallback for `train` when no PJRT runtime is available:
-/// forward LeNet-5 batches through the wave-parallel GEMM engine
-/// (conv via im2col, dense directly) and report the priced traffic.
-fn cmd_train_functional(cfg: &RunConfig) -> mram_pim::Result<()> {
-    use mram_pim::arch::NetworkParams;
-    use mram_pim::data::Dataset;
-
-    let net = Network::lenet5();
-    let accel = Accelerator::new(AccelKind::Proposed, FloatFormat::FP32, 32_768);
-    let engine = accel
-        .gemm_engine(cfg.threads)
-        .expect("proposed accel has an engine");
-    let params = NetworkParams::init(&net, cfg.seed);
-    let batch = 32;
-    let data = Dataset::synthetic(batch, cfg.seed).full_batch(batch);
-    let r = engine.forward(&net, &params, &data.images, batch);
-    assert_eq!(r.gemm_layers, 4, "all MAC-bearing layers must use the engine");
+/// Print the merged functional train ledger and cross-check it against
+/// the analytic workload/cost models — the functional engine and
+/// `training_work`/`train_step_cost` must never drift.
+fn report_functional_ledger(
+    f: &mram_pim::arch::TrainTotals,
+    net: &Network,
+) -> mram_pim::Result<()> {
+    let steps = f.steps.max(1);
+    println!("\nfunctional PIM ledger ({} train steps through the train engine):", f.steps);
     println!(
-        "functional forward (batch {batch}, {} threads): {} MACs in {} waves",
-        cfg.threads, r.macs, r.waves
+        "  per step: {} MACs (fwd {} / bwd {} / update {}) in {} waves",
+        f.total_macs() / steps,
+        f.macs_fwd / steps,
+        f.macs_bwd / steps,
+        f.macs_wu / steps,
+        f.waves / steps,
     );
     println!(
-        "simulated cost: latency {} energy {}",
-        fmt_si(r.latency_s, "s"),
-        fmt_si(r.energy_j, "J")
+        "  simulated: latency {} energy {}",
+        fmt_si(f.latency_s, "s"),
+        fmt_si(f.energy_j, "J")
     );
-    println!("(enable the `pjrt` feature and run `make artifacts` for full training)");
+    // `train_step_cost` prices exactly `training_work`'s MAC total, so
+    // one shared predicate covers both analytic models.
+    let accel = Accelerator::new(AccelKind::Proposed, FloatFormat::FP32, FUNCTIONAL_LANES);
+    let cost = accel.train_step_cost(net, TRAIN_BATCH);
+    debug_assert_eq!(cost.macs, net.training_work(TRAIN_BATCH).total_macs());
+    if !f.matches_analytic(net, TRAIN_BATCH, FUNCTIONAL_LANES as u64) {
+        return Err(mram_pim::Error::Sim(format!(
+            "functional ledger drifted from the analytic model: \
+             {} MACs / {} waves, want {} / {}",
+            f.total_macs(),
+            f.waves,
+            cost.macs * f.steps,
+            net.training_work(TRAIN_BATCH).mac_waves(FUNCTIONAL_LANES as u64) * f.steps,
+        )));
+    }
+    println!("  matches model::training_work and accel::train_step_cost exactly");
     Ok(())
 }
 
@@ -285,11 +296,12 @@ fn cmd_selfcheck(args: &Args) -> mram_pim::Result<()> {
             let out = rt.pim_mul(&a, &b)?;
             let ok = out.iter().all(|&v| v == 1.5 * 2.25);
             println!(
-                "PJRT pim_mul artifact: {}",
+                "runtime pim_mul ({}): {}",
+                rt.platform(),
                 if ok { "OK" } else { "MISMATCH" }
             );
         }
-        Err(e) => println!("PJRT artifacts not available ({e}); skipped"),
+        Err(e) => println!("runtime not available ({e}); skipped"),
     }
     if bad == 0 {
         println!("selfcheck OK");

@@ -1,12 +1,16 @@
-//! PJRT runtime facade.
+//! Training runtime facade.
 //!
-//! The real implementation ([`pjrt`], behind the `pjrt` cargo feature)
+//! The PJRT implementation ([`pjrt`], behind the `pjrt` cargo feature)
 //! loads the AOT-compiled HLO-text artifacts and executes them on the
-//! XLA CPU client.  The default (offline) build compiles the typed stub
-//! in [`stub`] instead: the same `Runtime`/`TrainState` API, with
-//! `Runtime::load_dir` reporting that the feature is disabled.  Every
-//! caller — coordinator, CLI, examples — compiles identically against
-//! either implementation.
+//! XLA CPU client.  The default (offline) build compiles the
+//! *functional PIM runtime* in [`stub`] instead: the same
+//! `Runtime`/`TrainState` API, but every train step runs forward +
+//! backward + SGD update through the wave-parallel
+//! [`crate::arch::TrainEngine`] — real training with no artifacts, no
+//! XLA and no network access.  Every caller — coordinator, CLI,
+//! examples — compiles identically against either implementation, and
+//! `--features pjrt` always builds offline against the typecheck stub
+//! in `rust/xla-stub`.
 //!
 //! Interchange with the real runtime is HLO *text*
 //! (`HloModuleProto::from_text_file`), not a serialized proto: jax ≥ 0.5
@@ -25,6 +29,11 @@ pub const TRAIN_BATCH: usize = 32;
 pub const EVAL_BATCH: usize = 256;
 pub const PIM_LANES: usize = 1024;
 pub const NUM_PARAMS: usize = 8;
+
+/// Row-parallel MAC lanes the functional runtime provisions — the same
+/// figure the accelerator model uses for Fig. 6, so the functional
+/// ledger and `Accelerator::train_step_cost` price identical waves.
+pub const FUNCTIONAL_LANES: usize = 32_768;
 
 /// A host-side tensor: shape + row-major data.  The checkpoint layer and
 /// both runtime implementations exchange parameters in this form, so no

@@ -145,6 +145,17 @@ impl Runtime {
         )?;
         Ok(out[0].to_vec::<f32>()?)
     }
+
+    /// The PJRT backend executes on XLA, which does not expose the PIM
+    /// wave schedule — no functional ledger (API parity with the
+    /// offline functional runtime).
+    pub fn functional_totals(&self) -> Option<crate::arch::TrainTotals> {
+        None
+    }
+
+    /// Host thread provisioning belongs to XLA on this backend —
+    /// accepted for API parity with the functional runtime, ignored.
+    pub fn set_threads(&mut self, _threads: usize) {}
 }
 
 /// Model parameters held as device literals between steps.

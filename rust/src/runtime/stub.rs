@@ -1,79 +1,216 @@
-//! Typed stub runtime for builds without the `pjrt` feature.
+//! Functional PIM runtime for builds without the `pjrt` feature.
 //!
-//! Presents the exact `Runtime`/`TrainState` API of the real PJRT
-//! implementation so the coordinator, CLI and examples compile and link
-//! offline.  `load_dir` always errors (there is no XLA client to load
-//! artifacts into), which callers already treat as "artifacts absent":
-//! tests skip, the CLI and the end-to-end example fall back to the
-//! functional PIM path through the GEMM engine.
+//! Presents the exact `Runtime`/`TrainState` API of the PJRT
+//! implementation, but executes *real* training offline: every train
+//! step runs forward + backward + SGD update through the wave-parallel
+//! [`TrainEngine`] (each MAC on the PIM softfloat chain, priced from
+//! the cached cost model).  `load_dir` therefore always succeeds — the
+//! "artifacts" are the in-crate network description — and the
+//! coordinator, CLI and examples train LeNet-5 end to end with no XLA,
+//! no artifacts and no network access.  The per-step ledgers accumulate
+//! into [`TrainTotals`], exposed via [`Runtime::functional_totals`] so
+//! callers can cross-check the functional traffic against the analytic
+//! `training_work`/`train_step_cost` models.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
 
-use super::HostTensor;
+use super::{HostTensor, FUNCTIONAL_LANES};
+use crate::arch::gemm::{LayerParams, NetworkParams};
+use crate::arch::train::{TrainEngine, TrainTotals};
+use crate::fpu::softfloat::{pim_add_f32, pim_mul_f32};
+use crate::fpu::FpCostModel;
+use crate::model::{Layer, Network};
 use crate::{Error, Result};
 
-fn unavailable() -> Error {
-    Error::Runtime(
-        "PJRT runtime unavailable: built without the `pjrt` cargo feature \
-         (the offline image has no xla bindings)"
-            .into(),
-    )
+/// Lay a parameter set out as shaped host tensors, `(w, b)` per
+/// MAC-bearing layer in network order (8 tensors for LeNet-5 — the
+/// `NUM_PARAMS` contract of the AOT artifacts).
+fn params_to_state(net: &Network, params: &NetworkParams) -> TrainState {
+    let mut tensors = Vec::new();
+    for (layer, p) in net.layers.iter().zip(&params.layers) {
+        let Some(p) = p else { continue };
+        let (wdims, bdims) = match *layer {
+            Layer::Conv2d {
+                in_ch,
+                out_ch,
+                kh,
+                kw,
+                ..
+            } => (
+                vec![out_ch as u64, in_ch as u64, kh as u64, kw as u64],
+                vec![out_ch as u64],
+            ),
+            Layer::Dense { inp, out } => (vec![out as u64, inp as u64], vec![out as u64]),
+            _ => unreachable!("parameter-free layer holds params"),
+        };
+        tensors.push(HostTensor {
+            dims: wdims,
+            data: p.w.clone(),
+        });
+        tensors.push(HostTensor {
+            dims: bdims,
+            data: p.b.clone(),
+        });
+    }
+    TrainState { params: tensors }
 }
 
-/// Stub runtime.  Not constructible: `load_dir` always errors, so no
-/// instance can exist and the other methods are unreachable by design.
+/// Rebuild engine-shaped parameters from the `(w, b)`-per-layer tensor
+/// list (the inverse of [`params_to_state`]; shape-checked).
+fn state_to_params(net: &Network, state: &TrainState) -> Result<NetworkParams> {
+    let mut it = state.params.iter();
+    let mut layers = Vec::with_capacity(net.layers.len());
+    for layer in &net.layers {
+        if layer.params() == 0 {
+            layers.push(None);
+            continue;
+        }
+        let (Some(w), Some(b)) = (it.next(), it.next()) else {
+            return Err(Error::Runtime(format!(
+                "train state is missing tensors for layer {layer:?}"
+            )));
+        };
+        let want_w = layer.params() - layer_bias_len(layer);
+        let want_b = layer_bias_len(layer);
+        if w.data.len() != want_w || b.data.len() != want_b {
+            return Err(Error::Runtime(format!(
+                "train state tensor shapes {}x{} do not match layer {layer:?}",
+                w.data.len(),
+                b.data.len()
+            )));
+        }
+        layers.push(Some(LayerParams {
+            w: w.data.clone(),
+            b: b.data.clone(),
+        }));
+    }
+    if it.next().is_some() {
+        return Err(Error::Runtime("train state has surplus tensors".into()));
+    }
+    Ok(NetworkParams { layers })
+}
+
+fn layer_bias_len(layer: &Layer) -> usize {
+    match *layer {
+        Layer::Conv2d { out_ch, .. } => out_ch,
+        Layer::Dense { out, .. } => out,
+        _ => 0,
+    }
+}
+
+/// Functional PIM runtime: trains LeNet-5 through the wave-parallel
+/// train engine.  API-identical to the PJRT runtime.
 pub struct Runtime {
-    _private: (),
+    dir: PathBuf,
+    net: Network,
+    engine: TrainEngine,
+    totals: Mutex<TrainTotals>,
 }
 
 impl Runtime {
-    /// Always errors in the stub build (there is no PJRT client).
+    /// Always succeeds: the functional backend needs no artifacts (the
+    /// directory is only remembered for reporting parity).
     pub fn load_dir(dir: impl AsRef<Path>) -> Result<Runtime> {
-        let _ = dir.as_ref();
-        Err(unavailable())
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(8);
+        Ok(Runtime {
+            dir: dir.as_ref().to_path_buf(),
+            net: Network::lenet5(),
+            engine: TrainEngine::new(FpCostModel::proposed_fp32(), FUNCTIONAL_LANES, threads),
+            totals: Mutex::new(TrainTotals::default()),
+        })
+    }
+
+    /// Re-provision the engine's host worker threads (the CLI
+    /// `--threads` flag).  Results are bit-identical for any value;
+    /// only host wall-clock changes.
+    pub fn set_threads(&mut self, threads: usize) {
+        let model = *self.engine.gemm().model();
+        self.engine = TrainEngine::new(model, FUNCTIONAL_LANES, threads.max(1));
     }
 
     pub fn platform(&self) -> String {
-        "stub".to_string()
+        "functional-pim".to_string()
     }
 
     pub fn artifacts_dir(&self) -> &Path {
-        Path::new(".")
+        &self.dir
     }
 
+    /// No AOT artifacts exist in the functional backend.
     pub fn has(&self, _name: &str) -> bool {
         false
     }
 
-    pub fn init_params(&self, _seed: i32) -> Result<TrainState> {
-        Err(unavailable())
+    /// Deterministic fan-in-scaled init (mirrors the AOT init graph's
+    /// role; same seed → bit-identical parameters).
+    pub fn init_params(&self, seed: i32) -> Result<TrainState> {
+        let params = NetworkParams::init(&self.net, seed as u64);
+        Ok(params_to_state(&self.net, &params))
     }
 
+    /// One functional SGD step through the PIM train engine.  Returns
+    /// the loss; the priced ledger accumulates into
+    /// [`Runtime::functional_totals`].
     pub fn train_step(
         &self,
-        _state: &mut TrainState,
-        _images: &[f32],
-        _labels: &[i32],
-        _lr: f32,
+        state: &mut TrainState,
+        images: &[f32],
+        labels: &[i32],
+        lr: f32,
     ) -> Result<f32> {
-        Err(unavailable())
+        let batch = labels.len();
+        let mut params = state_to_params(&self.net, state)?;
+        let r = self
+            .engine
+            .train_step(&self.net, &mut params, images, labels, batch, lr)?;
+        *state = params_to_state(&self.net, &params);
+        self.totals
+            .lock()
+            .expect("totals lock poisoned")
+            .absorb(&r);
+        Ok(r.loss)
     }
 
+    /// Evaluate a batch: (mean loss, #correct as f32 — PJRT parity).
     pub fn eval(
         &self,
-        _state: &TrainState,
-        _images: &[f32],
-        _labels: &[i32],
+        state: &TrainState,
+        images: &[f32],
+        labels: &[i32],
     ) -> Result<(f32, f32)> {
-        Err(unavailable())
+        let params = state_to_params(&self.net, state)?;
+        let (loss, correct) =
+            self.engine
+                .evaluate(&self.net, &params, images, labels, labels.len())?;
+        Ok((loss, correct as f32))
     }
 
-    pub fn pim_mul(&self, _a: &[f32], _b: &[f32]) -> Result<Vec<f32>> {
-        Err(unavailable())
+    /// Element-wise PIM multiply (softfloat gold chain — what the AOT
+    /// `pim_fp32_mul` kernel computes).
+    pub fn pim_mul(&self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        if a.len() != b.len() {
+            return Err(Error::Runtime("pim_mul length mismatch".into()));
+        }
+        Ok(a.iter().zip(b).map(|(&x, &y)| pim_mul_f32(x, y)).collect())
     }
 
-    pub fn pim_add(&self, _a: &[f32], _b: &[f32]) -> Result<Vec<f32>> {
-        Err(unavailable())
+    /// Element-wise PIM add.
+    pub fn pim_add(&self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        if a.len() != b.len() {
+            return Err(Error::Runtime("pim_add length mismatch".into()));
+        }
+        Ok(a.iter().zip(b).map(|(&x, &y)| pim_add_f32(x, y)).collect())
+    }
+
+    /// Merged ledger of every train step this runtime executed.  `None`
+    /// on the PJRT backend (XLA does not expose the PIM wave schedule);
+    /// always `Some` here.
+    pub fn functional_totals(&self) -> Option<TrainTotals> {
+        Some(*self.totals.lock().expect("totals lock poisoned"))
     }
 }
 
@@ -108,16 +245,76 @@ impl TrainState {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::Dataset;
+    use crate::runtime::NUM_PARAMS;
 
     #[test]
-    fn load_dir_reports_missing_feature() {
-        let err = Runtime::load_dir("artifacts").err().expect("stub must err");
-        let msg = err.to_string();
-        assert!(msg.contains("pjrt"), "unhelpful stub error: {msg}");
+    fn load_dir_always_succeeds_functionally() {
+        let rt = Runtime::load_dir("no-such-dir").expect("functional backend");
+        assert_eq!(rt.platform(), "functional-pim");
+        assert!(!rt.has("lenet_train_step"));
+        assert_eq!(rt.artifacts_dir(), Path::new("no-such-dir"));
     }
 
     #[test]
-    fn train_state_roundtrips_host_tensors() {
+    fn init_params_match_model_and_are_seeded() {
+        let rt = Runtime::load_dir("artifacts").unwrap();
+        let a = rt.init_params(7).unwrap();
+        assert_eq!(a.params.len(), NUM_PARAMS);
+        assert_eq!(a.param_count(), Network::lenet5().param_count());
+        let b = rt.init_params(7).unwrap().to_host().unwrap();
+        let c = rt.init_params(8).unwrap().to_host().unwrap();
+        assert_eq!(a.to_host().unwrap(), b);
+        assert_ne!(b, c);
+    }
+
+    #[test]
+    fn train_steps_run_and_ledger_accumulates() {
+        let mut rt = Runtime::load_dir("artifacts").unwrap();
+        rt.set_threads(2);
+        let mut data = Dataset::synthetic(32, 3);
+        let mut state = rt.init_params(3).unwrap();
+        let before = state.to_host().unwrap();
+        for _ in 0..2 {
+            let b = data.next_batch(4);
+            let loss = rt.train_step(&mut state, &b.images, &b.labels, 0.05).unwrap();
+            assert!(loss.is_finite() && loss > 0.0);
+        }
+        assert_ne!(before, state.to_host().unwrap(), "weights must move");
+        let totals = rt.functional_totals().expect("functional ledger");
+        assert_eq!(totals.steps, 2);
+        let work = Network::lenet5().training_work(4);
+        assert_eq!(totals.total_macs(), 2 * work.total_macs());
+        assert_eq!(totals.waves, 2 * work.mac_waves(FUNCTIONAL_LANES as u64));
+        assert!(totals.matches_analytic(&Network::lenet5(), 4, FUNCTIONAL_LANES as u64));
+    }
+
+    #[test]
+    fn eval_reports_loss_and_correct() {
+        let rt = Runtime::load_dir("artifacts").unwrap();
+        let data = Dataset::synthetic(16, 5).full_batch(16);
+        let state = rt.init_params(5).unwrap();
+        let (loss, correct) = rt.eval(&state, &data.images, &data.labels).unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        assert!((0.0..=16.0).contains(&correct));
+    }
+
+    #[test]
+    fn pim_elementwise_ops_run_the_softfloat_chain() {
+        let rt = Runtime::load_dir("artifacts").unwrap();
+        let a = vec![1.5f32, -3.0, 1e20];
+        let b = vec![2.25f32, 7.5, 1e20];
+        let m = rt.pim_mul(&a, &b).unwrap();
+        let s = rt.pim_add(&a, &b).unwrap();
+        for i in 0..a.len() {
+            assert_eq!(m[i].to_bits(), pim_mul_f32(a[i], b[i]).to_bits());
+            assert_eq!(s[i].to_bits(), pim_add_f32(a[i], b[i]).to_bits());
+        }
+        assert!(rt.pim_mul(&a, &b[..2]).is_err());
+    }
+
+    #[test]
+    fn state_roundtrips_host_tensors() {
         let t = vec![
             HostTensor {
                 dims: vec![2, 2],
@@ -132,5 +329,20 @@ mod tests {
         assert_eq!(s.param_count(), 7);
         assert_eq!(s.to_host_shaped().unwrap(), t);
         assert_eq!(s.to_host().unwrap()[1], vec![-1.0, 0.5, 9.0]);
+    }
+
+    #[test]
+    fn malformed_states_are_rejected() {
+        let rt = Runtime::load_dir("artifacts").unwrap();
+        let mut state = rt.init_params(1).unwrap();
+        state.params.pop();
+        let imgs = vec![0f32; 784];
+        assert!(rt.train_step(&mut state, &imgs, &[1], 0.05).is_err());
+        let mut state = rt.init_params(1).unwrap();
+        state.params.push(HostTensor {
+            dims: vec![1],
+            data: vec![0.0],
+        });
+        assert!(rt.eval(&state, &imgs, &[1]).is_err());
     }
 }

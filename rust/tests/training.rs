@@ -1,0 +1,388 @@
+//! Training-engine test harness (ISSUE 2 satellites): finite-difference
+//! gradient checks for every layer kind, the GEMM-transpose backward
+//! identity, functional-vs-analytic cost invariants, thread-count
+//! determinism and the loss-decrease smoke test.  Everything runs in
+//! tier-1 `cargo test -q` — no MNIST files, no PJRT, no network.
+
+use mram_pim::arch::{
+    softmax_xent, AccelKind, Accelerator, GemmEngine, NetworkParams, TrainEngine, TrainTotals,
+};
+use mram_pim::data::Dataset;
+use mram_pim::fpu::softfloat::ftz;
+use mram_pim::fpu::{FloatFormat, FpCostModel};
+use mram_pim::model::{Layer, Network};
+use mram_pim::nvsim::OpCosts;
+use mram_pim::prop::{check, Rng};
+use mram_pim::runtime::FUNCTIONAL_LANES;
+
+fn engine(threads: usize) -> TrainEngine {
+    TrainEngine::new(FpCostModel::proposed_fp32(), 1024, threads)
+}
+
+/// Finite-difference check: for sampled weights and biases of every
+/// parameterised layer, the backprop gradient must match the central
+/// difference of the (f32, FTZ) PIM loss.  Tolerances are f32-scale:
+/// the loss is computed in single precision through two-rounding MAC
+/// chains, so ~1e-4 of FD noise rides on every estimate.
+fn finite_diff_check(net: &Network, seed: u64, batch: usize, samples: usize) {
+    const EPS: f32 = 1e-3;
+    const TOL_REL: f64 = 0.08;
+    const TOL_ABS: f64 = 0.015;
+
+    let classes = net.layers.last().expect("non-empty net").out_units();
+    let (c, h, w) = net.input;
+    let mut rng = Rng::new(seed);
+    let x: Vec<f32> = (0..batch * c * h * w).map(|_| rng.f32_normal(1)).collect();
+    let labels: Vec<i32> = (0..batch)
+        .map(|_| rng.below(classes as u64) as i32)
+        .collect();
+
+    let eng = engine(2);
+    let frozen = NetworkParams::init(net, seed ^ 0xF00D);
+    let mut params = frozen.clone();
+    let r = eng
+        .train_step(net, &mut params, &x, &labels, batch, 0.0)
+        .expect("train step");
+
+    let fd_of = |l: usize, bias: bool, i: usize, analytic: f64| {
+        let mut plus = frozen.clone();
+        let mut minus = frozen.clone();
+        {
+            let (p, m) = (
+                plus.layers[l].as_mut().unwrap(),
+                minus.layers[l].as_mut().unwrap(),
+            );
+            if bias {
+                p.b[i] += EPS;
+                m.b[i] -= EPS;
+            } else {
+                p.w[i] += EPS;
+                m.w[i] -= EPS;
+            }
+        }
+        let lp = f64::from(eng.loss(net, &plus, &x, &labels, batch));
+        let lm = f64::from(eng.loss(net, &minus, &x, &labels, batch));
+        let fd = (lp - lm) / (2.0 * f64::from(EPS));
+        let err = (analytic - fd).abs();
+        let tol = TOL_ABS + TOL_REL * analytic.abs().max(fd.abs());
+        assert!(
+            err <= tol,
+            "{} layer {l} {}[{i}]: analytic {analytic} vs fd {fd} (err {err} > tol {tol})",
+            net.name,
+            if bias { "b" } else { "w" },
+        );
+    };
+
+    for (l, g) in r.grads.iter().enumerate() {
+        let Some(g) = g else { continue };
+        for _ in 0..samples {
+            let i = rng.below(g.w.len() as u64) as usize;
+            fd_of(l, false, i, f64::from(g.w[i]));
+        }
+        let i = rng.below(g.b.len() as u64) as usize;
+        fd_of(l, true, i, f64::from(g.b[i]));
+    }
+}
+
+#[test]
+fn grad_check_dense() {
+    let net = Network {
+        name: "fd-dense",
+        input: (1, 2, 3),
+        layers: vec![Layer::Dense { inp: 6, out: 5 }],
+    };
+    finite_diff_check(&net, 0xD1, 4, 6);
+}
+
+#[test]
+fn grad_check_relu_stack() {
+    let net = Network {
+        name: "fd-relu",
+        input: (1, 2, 3),
+        layers: vec![
+            Layer::Dense { inp: 6, out: 8 },
+            Layer::Relu { units: 8 },
+            Layer::Dense { inp: 8, out: 4 },
+        ],
+    };
+    finite_diff_check(&net, 0x4E1, 4, 6);
+}
+
+#[test]
+fn grad_check_conv2d() {
+    let net = Network {
+        name: "fd-conv",
+        input: (1, 5, 5),
+        layers: vec![Layer::Conv2d {
+            in_ch: 1,
+            out_ch: 2,
+            kh: 3,
+            kw: 3,
+            in_h: 5,
+            in_w: 5,
+        }],
+    };
+    // 2×3×3 = 18 output classes over the conv map.
+    finite_diff_check(&net, 0xC2, 3, 6);
+}
+
+#[test]
+fn grad_check_avgpool_pipeline() {
+    let net = Network {
+        name: "fd-pool",
+        input: (1, 6, 6),
+        layers: vec![
+            Layer::Conv2d {
+                in_ch: 1,
+                out_ch: 2,
+                kh: 3,
+                kw: 3,
+                in_h: 6,
+                in_w: 6,
+            },
+            Layer::Relu { units: 2 * 4 * 4 },
+            Layer::AvgPool2 {
+                ch: 2,
+                in_h: 4,
+                in_w: 4,
+            },
+            Layer::Dense { inp: 8, out: 4 },
+        ],
+    };
+    finite_diff_check(&net, 0xA9, 3, 5);
+}
+
+/// The loss head itself: `softmax_xent`'s δ must be the derivative of
+/// its loss with respect to every logit.
+#[test]
+fn grad_check_loss_head() {
+    let (batch, classes) = (3usize, 5usize);
+    let mut rng = Rng::new(0x10_55);
+    let logits: Vec<f32> = (0..batch * classes).map(|_| rng.f32_normal(1)).collect();
+    let labels: Vec<i32> = (0..batch).map(|_| rng.below(classes as u64) as i32).collect();
+    let (_, delta) = softmax_xent(&logits, &labels, batch, classes);
+    let eps = 1e-3f32;
+    for i in 0..logits.len() {
+        let mut plus = logits.clone();
+        let mut minus = logits.clone();
+        plus[i] += eps;
+        minus[i] -= eps;
+        let lp = f64::from(softmax_xent(&plus, &labels, batch, classes).0);
+        let lm = f64::from(softmax_xent(&minus, &labels, batch, classes).0);
+        let fd = (lp - lm) / (2.0 * f64::from(eps));
+        let err = (f64::from(delta[i]) - fd).abs();
+        assert!(err <= 2e-3, "dL/dlogit[{i}]: {} vs fd {fd}", delta[i]);
+    }
+}
+
+/// The backward lowering identity: `dX = gemm(δ, Wᵀ-layout)` through
+/// the wave-parallel engine equals the per-element backward chain
+/// `Σ_o ftz(δ[b,o]·W[o,i])` bit for bit, for random shapes, batches and
+/// thread counts.
+#[test]
+fn prop_backward_gemm_transpose_identity() {
+    check(
+        "gemm(δ, Wᵀ) == per-element backward chain",
+        0xBAC4,
+        30,
+        |r: &mut Rng| {
+            let out = r.below(6) as usize + 1;
+            let inp = r.below(10) as usize + 1;
+            let batch = r.below(4) as usize + 1;
+            let threads = r.below(4) as usize + 1;
+            let w: Vec<f32> = (0..out * inp).map(|_| r.f32_normal(3)).collect();
+            let delta: Vec<f32> = (0..batch * out).map(|_| r.f32_normal(3)).collect();
+            (out, inp, batch, threads, w, delta)
+        },
+        |(out, inp, batch, threads, w, delta)| {
+            let mut wt = vec![0f32; inp * out];
+            for o in 0..*out {
+                for i in 0..*inp {
+                    wt[i * out + o] = w[o * inp + i];
+                }
+            }
+            let eng = GemmEngine::new(
+                OpCosts::proposed_default(),
+                FloatFormat::FP32,
+                512,
+                *threads,
+            );
+            let g = eng.gemm(&wt, delta, None, *inp, *out, *batch);
+            if g.macs != (inp * out * batch) as u64 {
+                return Err(format!("backward mac count {}", g.macs));
+            }
+            for b in 0..*batch {
+                for i in 0..*inp {
+                    let mut acc = 0f32;
+                    for o in 0..*out {
+                        acc = ftz(acc + ftz(w[o * inp + i] * delta[b * out + o]));
+                    }
+                    if g.y[b * inp + i].to_bits() != acc.to_bits() {
+                        return Err(format!(
+                            "dX[{b},{i}]: {} vs chain {acc}",
+                            g.y[b * inp + i]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Cost invariant (the acceptance gate): the functional ledger of a
+/// LeNet-5 train step equals `model::training_work` and
+/// `accel::train_step_cost` for batch ∈ {1, 8, 32} — MAC and wave
+/// totals exactly, latency/energy to f64 round-off.
+#[test]
+fn cost_ledger_matches_analytic_models_lenet5() {
+    let net = Network::lenet5();
+    let accel = Accelerator::new(AccelKind::Proposed, FloatFormat::FP32, FUNCTIONAL_LANES);
+    let eng = accel.train_engine(4).expect("proposed accel trains");
+    let close = |a: f64, b: f64| (a - b).abs() <= 1e-12 * a.abs().max(b.abs());
+    for batch in [1usize, 8, 32] {
+        let mut rng = Rng::new(batch as u64 + 0x99);
+        let mut params = NetworkParams::init(&net, 21);
+        let x: Vec<f32> = (0..batch * 784).map(|_| rng.unit_f64() as f32).collect();
+        let labels: Vec<i32> = (0..batch).map(|_| rng.below(10) as i32).collect();
+        let r = eng
+            .train_step(&net, &mut params, &x, &labels, batch, 0.05)
+            .expect("train step");
+        let work = net.training_work(batch);
+        let cost = accel.train_step_cost(&net, batch);
+        assert_eq!(r.macs_fwd, work.macs_fwd, "batch {batch} fwd MACs");
+        assert_eq!(r.macs_bwd, work.macs_bwd, "batch {batch} bwd MACs");
+        assert_eq!(r.macs_bwd, 2 * r.macs_fwd, "bwd = 2x fwd");
+        assert_eq!(r.macs_wu, work.macs_wu, "batch {batch} update MACs");
+        assert_eq!(r.adds, work.adds, "batch {batch} fwd adds");
+        assert_eq!(
+            r.stored_activations, work.stored_activations,
+            "batch {batch} stash"
+        );
+        assert_eq!(r.total_macs(), cost.macs, "batch {batch} total MACs");
+        assert_eq!(
+            r.waves,
+            work.mac_waves(FUNCTIONAL_LANES as u64),
+            "batch {batch} waves"
+        );
+        assert!(
+            close(r.latency_s, cost.latency_s),
+            "batch {batch} latency {} vs {}",
+            r.latency_s,
+            cost.latency_s
+        );
+        assert!(
+            close(r.energy_j, cost.energy_j),
+            "batch {batch} energy {} vs {}",
+            r.energy_j,
+            cost.energy_j
+        );
+    }
+}
+
+/// Determinism: three SGD steps with `threads = 1` and `threads = 4`
+/// produce bit-identical weights and equal merged ledgers.
+#[test]
+fn train_steps_bit_identical_across_thread_counts() {
+    let net = Network {
+        name: "det-conv",
+        input: (1, 6, 6),
+        layers: vec![
+            Layer::Conv2d {
+                in_ch: 1,
+                out_ch: 2,
+                kh: 3,
+                kw: 3,
+                in_h: 6,
+                in_w: 6,
+            },
+            Layer::Relu { units: 2 * 4 * 4 },
+            Layer::AvgPool2 {
+                ch: 2,
+                in_h: 4,
+                in_w: 4,
+            },
+            Layer::Dense { inp: 8, out: 4 },
+        ],
+    };
+    let batch = 4;
+    let mut rng = Rng::new(0xDE7);
+    let batches: Vec<(Vec<f32>, Vec<i32>)> = (0..3)
+        .map(|_| {
+            (
+                (0..batch * 36).map(|_| rng.f32_normal(1)).collect(),
+                (0..batch).map(|_| rng.below(4) as i32).collect(),
+            )
+        })
+        .collect();
+
+    let run = |threads: usize| {
+        let eng = engine(threads);
+        let mut params = NetworkParams::init(&net, 0x5EED);
+        let mut totals = TrainTotals::default();
+        for (x, labels) in &batches {
+            let r = eng
+                .train_step(&net, &mut params, x, labels, batch, 0.1)
+                .expect("train step");
+            totals.absorb(&r);
+        }
+        (params, totals)
+    };
+
+    let (p1, t1) = run(1);
+    let (p4, t4) = run(4);
+    assert_eq!(t1, t4, "merged ledgers must be identical");
+    for (l, (a, b)) in p1.layers.iter().zip(&p4.layers).enumerate() {
+        let (Some(a), Some(b)) = (a, b) else { continue };
+        for (i, (x, y)) in a.w.iter().zip(&b.w).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "layer {l} w[{i}]");
+        }
+        for (i, (x, y)) in a.b.iter().zip(&b.b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "layer {l} b[{i}]");
+        }
+    }
+}
+
+/// Smoke test: 20 functional SGD steps on the synthetic digit corpus
+/// strictly decrease the smoothed (5-step mean) loss.  The 20 steps are
+/// full-batch gradient descent on one fixed 32-sample batch, so the
+/// descent is steady and the smoothed-decrease assertion has a wide
+/// margin (minibatch loss bounces step to step as batch difficulty
+/// varies).  Tier-1: no MNIST files, no PJRT.
+#[test]
+fn loss_decreases_over_20_sgd_steps() {
+    let net = Network {
+        name: "smoke-mlp",
+        input: (1, 28, 28),
+        layers: vec![
+            Layer::Dense { inp: 784, out: 16 },
+            Layer::Relu { units: 16 },
+            Layer::Dense { inp: 16, out: 10 },
+        ],
+    };
+    let eng = TrainEngine::new(FpCostModel::proposed_fp32(), 32_768, 4);
+    let mut data = Dataset::synthetic(160, 13);
+    let mut params = NetworkParams::init(&net, 77);
+    let batch = 32;
+    let fixed = data.next_batch(batch);
+    let mut losses = Vec::new();
+    for step in 0..20 {
+        let r = eng
+            .train_step(&net, &mut params, &fixed.images, &fixed.labels, batch, 0.1)
+            .expect("train step");
+        assert!(r.loss.is_finite(), "step {step} loss {}", r.loss);
+        losses.push(r.loss);
+    }
+    let mean = |s: &[f32]| s.iter().sum::<f32>() / s.len() as f32;
+    let smoothed: Vec<f32> = losses.chunks(5).map(mean).collect();
+    for (i, w) in smoothed.windows(2).enumerate() {
+        assert!(
+            w[1] < w[0],
+            "smoothed loss not strictly decreasing at chunk {i}: {smoothed:?} (raw {losses:?})"
+        );
+    }
+    assert!(
+        smoothed[smoothed.len() - 1] < smoothed[0] * 0.9,
+        "loss barely moved: {smoothed:?}"
+    );
+}

@@ -1,0 +1,187 @@
+//! Offline typecheck stub for the `xla-rs` bindings.
+//!
+//! The real crate wraps `xla_extension` (PJRT).  This stub mirrors the
+//! slice of its API that `mram_pim::runtime::pjrt` uses — same type
+//! names, same signatures — so the `pjrt` feature always *compiles* in
+//! the offline image and the optional backend cannot rot.  Every entry
+//! point that would touch XLA returns [`Error::Unavailable`]; nothing
+//! here ever executes a computation.
+
+/// Error type mirroring `xla::Error` as far as callers consume it
+/// (`Display` + `std::error::Error` + `From` into the host crate).
+#[derive(Debug)]
+pub enum Error {
+    /// The stub build: no XLA runtime is linked.
+    Unavailable,
+    /// Free-form error (kept for API parity).
+    Msg(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Unavailable => write!(
+                f,
+                "xla stub: built against rust/xla-stub (no XLA runtime); \
+                 point the `xla` dependency at the real xla-rs bindings"
+            ),
+            Error::Msg(m) => write!(f, "xla error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error::Unavailable)
+}
+
+/// Host scalar types a [`Literal`] can hold.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u8 {}
+
+/// Array shape (dims only; element type is erased in the stub).
+#[derive(Debug, Clone, Default)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Host literal.  Constructible (so call sites typecheck) but inert:
+/// accessors error, since no computation can ever produce real data in
+/// the stub build.
+#[derive(Debug, Default)]
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn scalar<T: NativeType>(_v: T) -> Literal {
+        Literal::default()
+    }
+
+    pub fn vec1<T: NativeType>(_v: &[T]) -> Literal {
+        Literal::default()
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable()
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable()
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        unavailable()
+    }
+
+    pub fn element_count(&self) -> usize {
+        0
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module proto.
+#[derive(Debug, Default)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+/// An XLA computation built from a proto.
+#[derive(Debug, Default)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation::default()
+    }
+}
+
+/// Device buffer returned by an execution.
+#[derive(Debug, Default)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+/// Compiled + loaded executable.
+#[derive(Debug, Default)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// PJRT client.  `cpu()` is the only constructor the runtime uses, and
+/// it reports the stub immediately.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "xla-stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn everything_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let l = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(l.to_vec::<f32>().is_err());
+        assert!(l.reshape(&[2]).is_err());
+        assert_eq!(l.element_count(), 0);
+        let msg = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(msg.contains("xla-stub"), "unhelpful stub error: {msg}");
+    }
+}
