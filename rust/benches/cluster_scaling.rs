@@ -1,0 +1,86 @@
+//! Cluster shard-scaling acceptance bench: LeNet-5 train steps at
+//! batch 32 across shards ∈ {1, 2, 4, 8} modeled PIM chips.
+//!
+//! For every shard count it (a) runs one verified functional cluster
+//! step and asserts its decomposed ledger equals the analytic
+//! `cluster_step_cost` **exactly**, (b) benches the host wall-clock of
+//! the step, and (c) records the *simulated* step latency.  The
+//! acceptance gate — asserted in-binary, deterministic because it is on
+//! simulated latency, not host wall — is that shards=4 cuts step
+//! latency below 0.6× shards=1.
+//!
+//! Run: `cargo bench --bench cluster_scaling` (add `-- --json` for the
+//! machine-readable `BENCH_cluster_scaling.json`; CI uploads the
+//! sidecar and EXPERIMENTS.md §PR 3 tracks the numbers).
+
+use mram_pim::arch::NetworkParams;
+use mram_pim::bench::{bench, emit};
+use mram_pim::cluster::{cluster_step_cost, ClusterConfig, ClusterEngine};
+use mram_pim::data::Dataset;
+use mram_pim::fpu::FpCostModel;
+use mram_pim::model::Network;
+use mram_pim::runtime::FUNCTIONAL_LANES;
+
+fn main() {
+    let net = Network::lenet5();
+    let batch = 32usize;
+    let data = Dataset::synthetic(batch, 0xC1).full_batch(batch);
+    let model = FpCostModel::proposed_fp32();
+
+    let mut results = Vec::new();
+    let mut sim = Vec::new();
+    for shards in [1usize, 2, 4, 8] {
+        let eng = ClusterEngine::new(model, FUNCTIONAL_LANES, ClusterConfig::new(shards, 1));
+
+        // One verified step: the functional cluster ledger must equal
+        // the analytic cluster_step_cost exactly (same constructor, so
+        // equal integer counts imply bit-equal f64 terms).
+        let mut p = NetworkParams::init(&net, 7);
+        let r = eng
+            .train_step(&net, &mut p, &data.images, &data.labels, batch, 0.05)
+            .expect("cluster step");
+        let cost =
+            cluster_step_cost(&net, batch, shards, FUNCTIONAL_LANES, &model).expect("cost");
+        assert_eq!(
+            r.cost, cost,
+            "functional cluster ledger drifted from cluster_step_cost at {shards} shards"
+        );
+        assert_eq!(r.waves, cost.total_waves());
+        assert_eq!(r.total_macs(), net.training_work(batch).total_macs());
+        println!(
+            "shards {shards}: {} waves, sim latency {:.4e} s, energy {:.4e} J, \
+             gradient merge {:.2}% of latency",
+            r.waves,
+            r.latency_s,
+            r.energy_j,
+            cost.reduce_overhead_frac() * 100.0
+        );
+        sim.push((shards, r.latency_s));
+
+        results.push(bench(
+            &format!("lenet5 cluster step batch {batch} shards {shards}"),
+            1,
+            4,
+            || {
+                let mut p = NetworkParams::init(&net, 7);
+                let r = eng
+                    .train_step(&net, &mut p, &data.images, &data.labels, batch, 0.05)
+                    .expect("cluster step");
+                std::hint::black_box(r.loss);
+            },
+        ));
+    }
+
+    emit("cluster_scaling", &results);
+
+    // Acceptance gate (deterministic: simulated array latency).
+    let l1 = sim.iter().find(|&&(s, _)| s == 1).expect("shards=1").1;
+    let l4 = sim.iter().find(|&&(s, _)| s == 4).expect("shards=4").1;
+    let ratio = l4 / l1;
+    assert!(
+        ratio < 0.6,
+        "acceptance: shards=4 step latency must be < 0.6x shards=1; got {ratio:.3}x"
+    );
+    println!("shards=4 / shards=1 simulated step latency: {ratio:.3}x  [acceptance: <0.6x]");
+    println!("cluster_scaling OK");
+}

@@ -18,13 +18,20 @@
 //!
 //! ```bash
 //! cargo run --release --example train_lenet            # functional PIM
+//! cargo run --release --example train_lenet artifacts 400 4   # 4-chip cluster
 //! make artifacts && cargo run --release --features pjrt --example train_lenet
 //! ```
 //!
 //! The functional run uses the defaults below (400 steps, batch 32,
-//! lr 0.05) and the loss must at least halve over the run.
+//! lr 0.05) and the loss must at least halve over the run.  A third
+//! argument shards every batch data-parallel across that many modeled
+//! PIM chips (priced gradient all-reduce; bit-identical merged result
+//! across all shard counts ≥ 2, and shards=1 is the single-chip
+//! engine verbatim).
 
+use mram_pim::cluster::verify_cluster_totals;
 use mram_pim::coordinator::{Coordinator, RunConfig};
+use mram_pim::fpu::FpCostModel;
 use mram_pim::metrics::fmt_si;
 use mram_pim::runtime::{Runtime, FUNCTIONAL_LANES, TRAIN_BATCH};
 
@@ -35,15 +42,28 @@ fn main() -> mram_pim::Result<()> {
         .nth(2)
         .and_then(|s| s.parse().ok())
         .unwrap_or(400);
+    let shards: usize = std::env::args()
+        .nth(3)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1)
+        .clamp(1, TRAIN_BATCH);
 
     println!("== E2E: LeNet-5 fp32 training on synthetic MNIST ==");
     let mut runtime = Runtime::load_dir(&artifacts)?;
     runtime.set_threads(4);
+    runtime.set_shards(shards);
+    // The PJRT backend is single-device and ignores the knob — drive
+    // the run (and its ledger cross-check) off what the runtime
+    // actually provisioned.
+    let shards = runtime.shards();
     println!("runtime backend: {}", runtime.platform());
-    run_training(runtime, steps)
+    if shards > 1 {
+        println!("cluster: {shards} modeled PIM chips (data-parallel sharding)");
+    }
+    run_training(runtime, steps, shards)
 }
 
-fn run_training(runtime: Runtime, steps: usize) -> mram_pim::Result<()> {
+fn run_training(runtime: Runtime, steps: usize, shards: usize) -> mram_pim::Result<()> {
     let coord = Coordinator::new(runtime);
     let net = coord.network();
     println!(
@@ -61,6 +81,7 @@ fn run_training(runtime: Runtime, steps: usize) -> mram_pim::Result<()> {
         test_size: 256,
         deep_validate_waves: 2,
         threads: 4,
+        shards,
     };
     let report = coord.run(&cfg)?;
 
@@ -108,11 +129,27 @@ fn run_training(runtime: Runtime, steps: usize) -> mram_pim::Result<()> {
             f.macs_wu / per,
             f.waves / per,
         );
-        assert!(
-            f.matches_analytic(coord.network(), TRAIN_BATCH, FUNCTIONAL_LANES as u64),
-            "functional ledger drifted from training_work: {f:?}"
-        );
-        println!("  (matches model::training_work exactly)");
+        if shards > 1 {
+            let cost = verify_cluster_totals(
+                f,
+                coord.network(),
+                TRAIN_BATCH,
+                shards,
+                FUNCTIONAL_LANES,
+                &FpCostModel::proposed_fp32(),
+            )?;
+            println!(
+                "  (matches cluster::cluster_step_cost exactly; gradient merge \
+                 is {:.2}% of step latency)",
+                cost.reduce_overhead_frac() * 100.0
+            );
+        } else {
+            assert!(
+                f.matches_analytic(coord.network(), TRAIN_BATCH, FUNCTIONAL_LANES as u64),
+                "functional ledger drifted from training_work: {f:?}"
+            );
+            println!("  (matches model::training_work exactly)");
+        }
     }
 
     println!(

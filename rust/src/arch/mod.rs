@@ -18,4 +18,6 @@ pub use gemv::{pim_gemv, GemvResult};
 pub use mapper::{MappingPlan, OURS_LANE_COLS, FLOATPIM_LANE_COLS};
 pub use schedule::PipelineSchedule;
 pub use tile::Tile;
-pub use train::{softmax_xent, TrainEngine, TrainStepResult, TrainTotals};
+pub use train::{
+    softmax_xent, softmax_xent_terms, SampleGrad, TrainEngine, TrainStepResult, TrainTotals,
+};

@@ -50,9 +50,64 @@ impl PipelineSchedule {
         }
     }
 
+    /// Sharded variant: each MAC-bearing layer's fwd/bwd stage shrinks
+    /// to the most-loaded chip's chunk (`ceil(batch / shards)`), and a
+    /// gradient all-reduce stage (`ceil(log2 shards)` tree levels of
+    /// `ceil(params / lanes)` row-parallel add-waves at the paper's
+    /// search-based `T_add`) slots between backward and update.
+    /// `shards == 1` is exactly [`PipelineSchedule::build`] — no reduce
+    /// stages, same stage vector, the seed invariant.
+    pub fn build_sharded(
+        accel: &Accelerator,
+        net: &Network,
+        batch: usize,
+        batches: usize,
+        shards: usize,
+    ) -> Self {
+        if shards <= 1 {
+            return PipelineSchedule::build(accel, net, batch, batches);
+        }
+        let chunk = batch.div_ceil(shards);
+        let lanes = accel.lanes as u64;
+        let t_mac = accel.mac_latency_s();
+        // The reduce runs the paper's in-array add; the FloatPIM
+        // baseline has no standalone add model and prices it as a MAC
+        // (conservative).
+        let t_add = accel.fp_model().map(|m| m.t_add()).unwrap_or(t_mac);
+        let levels = crate::cluster::cost::tree_levels(shards);
+        let mut stage_latency_s = Vec::new();
+        for l in &net.layers {
+            let fwd_macs = l.macs_fwd() * chunk as u64;
+            if fwd_macs == 0 {
+                continue;
+            }
+            stage_latency_s.push(fwd_macs.div_ceil(lanes) as f64 * t_mac);
+            stage_latency_s.push((2 * fwd_macs).div_ceil(lanes) as f64 * t_mac);
+            let wu = l.params() as u64;
+            // gradient all-reduce for this layer's parameters
+            stage_latency_s.push((levels * wu.div_ceil(lanes)).max(1) as f64 * t_add);
+            // weight update (per-layer params, batch-independent)
+            stage_latency_s.push(wu.div_ceil(lanes).max(1) as f64 * t_mac);
+        }
+        let stages = stage_latency_s.len();
+        PipelineSchedule {
+            stage_latency_s,
+            stages,
+            batches,
+        }
+    }
+
     /// The pipeline bottleneck stage, seconds.
     pub fn bottleneck_s(&self) -> f64 {
         self.stage_latency_s.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Fill + drain overhead beyond pure steady-state throughput:
+    /// `total − batches·bottleneck = fill − bottleneck`.  Bounded by
+    /// `(stages − 1) · bottleneck`, with equality exactly when every
+    /// stage equals the bottleneck (a uniform pipeline).
+    pub fn overhead_s(&self) -> f64 {
+        self.fill_s() - self.bottleneck_s()
     }
 
     /// Total latency of one batch traversing all stages (fill), seconds.
@@ -146,5 +201,72 @@ mod tests {
         let s1 = PipelineSchedule::build(&accel(), &Network::lenet5(), 32, 10);
         let s2 = PipelineSchedule::build(&wide, &Network::lenet5(), 32, 10);
         assert!(s2.bottleneck_s() < s1.bottleneck_s());
+    }
+
+    #[test]
+    fn sharded_one_is_build_exactly() {
+        let net = Network::lenet5();
+        let a = accel();
+        let plain = PipelineSchedule::build(&a, &net, 32, 10);
+        let sharded = PipelineSchedule::build_sharded(&a, &net, 32, 10, 1);
+        assert_eq!(sharded.stages, plain.stages);
+        for (x, y) in sharded.stage_latency_s.iter().zip(&plain.stage_latency_s) {
+            assert_eq!(x, y, "shards=1 must not perturb the schedule");
+        }
+    }
+
+    #[test]
+    fn sharded_adds_reduce_stages_and_shrinks_bottleneck() {
+        let net = Network::lenet5();
+        let a = accel();
+        let plain = PipelineSchedule::build(&a, &net, 32, 10);
+        let sharded = PipelineSchedule::build_sharded(&a, &net, 32, 10, 4);
+        // 4 MAC layers × (fwd, bwd, reduce, update)
+        assert_eq!(sharded.stages, 16);
+        assert!(sharded.stage_latency_s.iter().all(|&t| t > 0.0));
+        assert!(sharded.bottleneck_s() < plain.bottleneck_s());
+        assert!(sharded.total_s() < plain.total_s());
+    }
+
+    /// Invariants at shards ∈ {1, 4}: the steady-state per-batch latency
+    /// is the bottleneck, which is at least every stage latency;
+    /// utilisation ∈ (0, 1]; fill+drain overhead ≤ (stages−1)·bottleneck.
+    #[test]
+    fn pipeline_invariants_hold_sharded_and_not() {
+        let net = Network::lenet5();
+        let a = accel();
+        for shards in [1usize, 4] {
+            let s = PipelineSchedule::build_sharded(&a, &net, 32, 10, shards);
+            let b = s.bottleneck_s();
+            // steady-state latency == bottleneck ≥ max stage
+            let steady = s.total_s() - {
+                let mut prev = s.clone();
+                prev.batches -= 1;
+                prev.total_s()
+            };
+            assert!((steady - b).abs() <= 1e-12 * b, "shards {shards}");
+            for &t in &s.stage_latency_s {
+                assert!(b >= t, "shards {shards}: bottleneck below a stage");
+            }
+            let u = s.utilisation();
+            assert!(u > 0.0 && u <= 1.0 + 1e-12, "shards {shards}: util {u}");
+            assert!(
+                s.overhead_s() <= (s.stages as f64 - 1.0) * b + 1e-18,
+                "shards {shards}: fill+drain overhead exceeds (stages−1)·bottleneck"
+            );
+        }
+    }
+
+    #[test]
+    fn uniform_pipeline_overhead_is_exactly_stages_minus_one_bottlenecks() {
+        let s = PipelineSchedule {
+            stage_latency_s: vec![2.5e-6; 7],
+            stages: 7,
+            batches: 10,
+        };
+        assert!((s.overhead_s() - 6.0 * 2.5e-6).abs() < 1e-18);
+        assert!((s.utilisation() - 1.0).abs() < 1e-12);
+        // fill + (batches−1)·bottleneck accounting closes
+        assert!((s.total_s() - (7.0 + 9.0) * 2.5e-6).abs() < 1e-18);
     }
 }

@@ -21,6 +21,13 @@
 //! per parameter ([`pim_mul_f32`] then [`pim_sub_f32`]), counted as one
 //! update MAC — exactly `training_work`'s `macs_wu`.
 //!
+//! The backward lowering and the update are factored out
+//! ([`TrainEngine::backward`], [`TrainEngine::apply_sgd`]) so the
+//! data-parallel cluster ([`crate::cluster`]) reuses them:
+//! [`TrainEngine::micrograd`] evaluates one sample's gradient at
+//! global-batch scaling — the canonical element of the cluster's
+//! order-preserving gradient all-reduce.
+//!
 //! **Ledger parity.**  One [`TrainStepResult`] reports loss, gradients
 //! and latency/energy/waves for fwd+bwd+update, and its MAC/wave totals
 //! are *defined* to equal [`crate::model::Network::training_work`] and
@@ -134,20 +141,49 @@ pub fn softmax_xent(
     batch: usize,
     classes: usize,
 ) -> (f32, Vec<f32>) {
+    let (terms, delta) = softmax_xent_terms(logits, labels, batch, classes, batch);
+    // Fold the per-sample terms in sample order.  IEEE `a − b` is
+    // exactly `a + (−b)`, so this is bit-identical to the historical
+    // `loss_acc -= ln(p)` accumulation.
+    let mut acc = 0f64;
+    for t in &terms {
+        acc += *t;
+    }
+    ((acc / batch as f64) as f32, delta)
+}
+
+/// Per-sample form of [`softmax_xent`]: the *unreduced* `−ln p` loss
+/// terms (f64, one per sample) and `δ = (softmax − onehot) / denom`.
+///
+/// `denom` is the gradient-averaging denominator.  A single chip passes
+/// `denom == batch`; a data-parallel cluster shard passes the *global*
+/// batch while `batch` is its local chunk, so the merged gradient
+/// averages over the full batch no matter how it was split.  Both the
+/// δ rows and the loss terms are pure per-sample functions, which is
+/// what makes the cluster's merged result independent of the shard
+/// count.
+pub fn softmax_xent_terms(
+    logits: &[f32],
+    labels: &[i32],
+    batch: usize,
+    classes: usize,
+    denom: usize,
+) -> (Vec<f64>, Vec<f32>) {
     assert_eq!(logits.len(), batch * classes, "logits shape");
     assert_eq!(labels.len(), batch, "labels shape");
+    assert!(denom > 0, "zero loss denominator");
     let mut delta = vec![0f32; batch * classes];
-    let mut loss_acc = 0f64;
-    let inv_batch = 1.0 / batch as f32;
+    let mut terms = Vec::with_capacity(batch);
+    let inv = 1.0 / denom as f32;
     for b in 0..batch {
         let row = &logits[b * classes..(b + 1) * classes];
         let d = &mut delta[b * classes..(b + 1) * classes];
         let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-        let mut denom = 0f32;
+        let mut denom_e = 0f32;
         for (slot, &v) in d.iter_mut().zip(row) {
             let e = (v - m).exp();
             *slot = e;
-            denom += e;
+            denom_e += e;
         }
         let y = labels[b] as usize;
         assert!(
@@ -155,14 +191,14 @@ pub fn softmax_xent(
             "label {} out of range for {classes} classes",
             labels[b]
         );
-        let p_label = d[y] / denom;
+        let p_label = d[y] / denom_e;
         for (j, slot) in d.iter_mut().enumerate() {
-            let p = *slot / denom;
-            *slot = (p - if j == y { 1.0 } else { 0.0 }) * inv_batch;
+            let p = *slot / denom_e;
+            *slot = (p - if j == y { 1.0 } else { 0.0 }) * inv;
         }
-        loss_acc -= (f64::from(p_label.max(f32::MIN_POSITIVE))).ln();
+        terms.push(-(f64::from(p_label.max(f32::MIN_POSITIVE))).ln());
     }
-    ((loss_acc / batch as f64) as f32, delta)
+    (terms, delta)
 }
 
 /// `[rows, cols]` row-major → `[cols, rows]`.  Pure data movement: the
@@ -257,6 +293,35 @@ struct Tape {
     macs: u64,
 }
 
+/// Backward-pass output: per-layer gradients plus the backward ledger
+/// counts (shared by the batched `train_step` path and the per-sample
+/// [`TrainEngine::micrograd`] path, so the two lowerings cannot drift).
+pub(crate) struct BackwardOut {
+    pub grads: Vec<Option<LayerParams>>,
+    pub macs_bwd: u64,
+    pub adds_bwd: u64,
+}
+
+/// One sample's gradient contribution to a data-parallel cluster step:
+/// the per-layer gradient of that sample's loss term (δ scaled by the
+/// *global* batch via `denom`), the unreduced loss term, and the ledger
+/// counts the owning chip accrues computing it.
+#[derive(Debug, Clone)]
+pub struct SampleGrad {
+    /// Per-layer gradients in `LayerParams` shape (`None` for
+    /// parameter-free layers) — one element of the cluster's
+    /// order-preserving gradient all-reduce.
+    pub grads: Vec<Option<LayerParams>>,
+    /// Unreduced `−ln p` loss term (f64); the cluster folds these in
+    /// global sample order and divides by the global batch.
+    pub loss_term: f64,
+    pub macs_fwd: u64,
+    pub macs_bwd: u64,
+    pub adds: u64,
+    pub adds_bwd: u64,
+    pub stored_activations: u64,
+}
+
 /// The functional training engine: taped forward, GEMM-lowered
 /// backward, in-array SGD update — all priced from the engine's cached
 /// cost model.  Construct once and reuse; results are bit-identical
@@ -285,7 +350,21 @@ impl TrainEngine {
         net.layers.last().map(Layer::out_units).unwrap_or(0)
     }
 
-    fn validate(
+    /// Per-sample forward ride-along work: (bias/pool adds, activation
+    /// values stashed for backward).  `train_step` scales these by the
+    /// batch; `micrograd` uses them directly — one definition, so the
+    /// batched and per-sample ledgers cannot drift.
+    fn fwd_ride_along(net: &Network) -> (u64, u64) {
+        let mut adds = 0u64;
+        let mut stored = 0u64;
+        for layer in &net.layers {
+            adds += layer.adds_fwd();
+            stored += layer.out_units() as u64;
+        }
+        (adds, stored)
+    }
+
+    pub(crate) fn validate(
         &self,
         net: &Network,
         params: &NetworkParams,
@@ -406,27 +485,133 @@ impl TrainEngine {
         // ---- forward, keeping the activation stash ----
         let tape = self.forward_taped(net, params, images, batch);
         let macs_fwd = tape.macs;
-        let mut adds = 0u64;
-        let mut stored = 0u64;
-        for layer in &net.layers {
-            adds += layer.adds_fwd() * batch as u64;
-            stored += layer.out_units() as u64 * batch as u64;
-        }
+        let (adds_per_sample, stored_per_sample) = TrainEngine::fwd_ride_along(net);
+        let adds = adds_per_sample * batch as u64;
+        let stored = stored_per_sample * batch as u64;
 
         // ---- loss head (host digital unit) ----
         let logits = tape.acts.last().expect("tape holds the logits");
-        let (loss, mut delta) = softmax_xent(logits, labels, batch, classes);
+        let (loss, delta) = softmax_xent(logits, labels, batch, classes);
         if !loss.is_finite() {
             return Err(Error::Sim(format!("loss diverged: {loss}")));
         }
 
         // ---- backward: δ flows in reverse, each MAC-bearing layer
         //      issuing its dgrad + wgrad GEMMs ----
+        let bwd = self.backward(net, params, &tape.acts, delta, batch);
+        let macs_bwd = bwd.macs_bwd;
+        let adds_bwd = bwd.adds_bwd;
+        let grads = bwd.grads;
+
+        // ---- SGD update: w := w − lr·g, one in-array MAC/param ----
+        let macs_wu = self.apply_sgd(params, &grads, lr);
+
+        // ---- price the step exactly as `Accelerator::train_step_cost`
+        //      does: the functional and analytic models never drift ----
+        let total_macs = macs_fwd + macs_bwd + macs_wu;
+        let waves = total_macs.div_ceil(self.gemm.lanes as u64);
+        let latency_s = waves as f64 * self.gemm.model().t_mac();
+        let e_mac = self.gemm.model().e_mac();
+        let stash_writes = stored * 32;
+        let mut energy_j = total_macs as f64 * e_mac;
+        energy_j += stash_writes as f64 * self.e_write;
+        energy_j += adds as f64 * e_mac / 20.0;
+
+        Ok(TrainStepResult {
+            loss,
+            macs_fwd,
+            macs_bwd,
+            macs_wu,
+            adds,
+            adds_bwd,
+            stored_activations: stored,
+            waves,
+            latency_s,
+            energy_j,
+            grads,
+        })
+    }
+
+    /// Gradient of one sample at global-batch scaling `denom` — the
+    /// canonical microgradient of the cluster's order-preserving
+    /// gradient all-reduce.  Runs the same taped forward and the same
+    /// extracted backward as [`TrainEngine::train_step`], at batch 1,
+    /// so every per-sample bit matches what the batched engine computes
+    /// for that sample's row.
+    pub fn micrograd(
+        &self,
+        net: &Network,
+        params: &NetworkParams,
+        image: &[f32],
+        label: i32,
+        denom: usize,
+    ) -> Result<SampleGrad> {
+        let labels = [label];
+        let classes = self.validate(net, params, image, &labels, 1)?;
+        if denom == 0 {
+            return Err(Error::Sim("zero gradient denominator".into()));
+        }
+        let tape = self.forward_taped(net, params, image, 1);
+        let (adds, stored) = TrainEngine::fwd_ride_along(net);
+        let logits = tape.acts.last().expect("tape holds the logits");
+        let (terms, delta) = softmax_xent_terms(logits, &labels, 1, classes, denom);
+        let bwd = self.backward(net, params, &tape.acts, delta, 1);
+        Ok(SampleGrad {
+            grads: bwd.grads,
+            loss_term: terms[0],
+            macs_fwd: tape.macs,
+            macs_bwd: bwd.macs_bwd,
+            adds,
+            adds_bwd: bwd.adds_bwd,
+            stored_activations: stored,
+        })
+    }
+
+    /// In-array SGD update `w := w − lr·g` — one multiply + subtract
+    /// per parameter ([`pim_mul_f32`] then [`pim_sub_f32`]) — returning
+    /// the update-MAC count (`training_work`'s `macs_wu`).  The cluster
+    /// engine applies this once on the merged gradient: the exact chain
+    /// a single chip runs.
+    pub fn apply_sgd(
+        &self,
+        params: &mut NetworkParams,
+        grads: &[Option<LayerParams>],
+        lr: f32,
+    ) -> u64 {
+        let mut macs_wu = 0u64;
+        for (p, g) in params.layers.iter_mut().zip(grads) {
+            let (Some(p), Some(g)) = (p.as_mut(), g.as_ref()) else {
+                continue;
+            };
+            for (w, &gw) in p.w.iter_mut().zip(&g.w) {
+                *w = pim_sub_f32(*w, pim_mul_f32(lr, gw));
+            }
+            for (b, &gb) in p.b.iter_mut().zip(&g.b) {
+                *b = pim_sub_f32(*b, pim_mul_f32(lr, gb));
+            }
+            macs_wu += (g.w.len() + g.b.len()) as u64;
+        }
+        macs_wu
+    }
+
+    /// The backward pass: δ flows in reverse through the taped
+    /// activations (`acts[l]` is the input to layer `l`), each
+    /// MAC-bearing layer issuing its dgrad + wgrad GEMMs.  Extracted
+    /// verbatim from the PR 2 `train_step` body so the batched path and
+    /// the per-sample micrograd path share one lowering.
+    pub(crate) fn backward(
+        &self,
+        net: &Network,
+        params: &NetworkParams,
+        acts: &[Vec<f32>],
+        mut delta: Vec<f32>,
+        batch: usize,
+    ) -> BackwardOut {
         let mut macs_bwd = 0u64;
         let mut adds_bwd = 0u64;
         let mut grads: Vec<Option<LayerParams>> = vec![None; net.layers.len()];
         for (l, layer) in net.layers.iter().enumerate().rev() {
-            let x_in = &tape.acts[l];
+            let x_in = &acts[l];
             match *layer {
                 Layer::Dense { inp, out } => {
                     // dW = δᵀ·X: one GEMM over transposed operands.
@@ -548,7 +733,7 @@ impl TrainEngine {
                 Layer::Relu { units } => {
                     // Mask from the taped output: y > 0 ⟺ x > 0 (NaN
                     // inputs were normalised to +0 on the way forward).
-                    let y_out = &tape.acts[l + 1];
+                    let y_out = &acts[l + 1];
                     debug_assert_eq!(delta.len(), batch * units);
                     for (d, &y) in delta.iter_mut().zip(y_out) {
                         if y <= 0.0 {
@@ -559,45 +744,11 @@ impl TrainEngine {
             }
         }
 
-        // ---- SGD update: w := w − lr·g, one in-array MAC/param ----
-        let mut macs_wu = 0u64;
-        for (p, g) in params.layers.iter_mut().zip(&grads) {
-            let (Some(p), Some(g)) = (p.as_mut(), g.as_ref()) else {
-                continue;
-            };
-            for (w, &gw) in p.w.iter_mut().zip(&g.w) {
-                *w = pim_sub_f32(*w, pim_mul_f32(lr, gw));
-            }
-            for (b, &gb) in p.b.iter_mut().zip(&g.b) {
-                *b = pim_sub_f32(*b, pim_mul_f32(lr, gb));
-            }
-            macs_wu += (g.w.len() + g.b.len()) as u64;
-        }
-
-        // ---- price the step exactly as `Accelerator::train_step_cost`
-        //      does: the functional and analytic models never drift ----
-        let total_macs = macs_fwd + macs_bwd + macs_wu;
-        let waves = total_macs.div_ceil(self.gemm.lanes as u64);
-        let latency_s = waves as f64 * self.gemm.model().t_mac();
-        let e_mac = self.gemm.model().e_mac();
-        let stash_writes = stored * 32;
-        let mut energy_j = total_macs as f64 * e_mac;
-        energy_j += stash_writes as f64 * self.e_write;
-        energy_j += adds as f64 * e_mac / 20.0;
-
-        Ok(TrainStepResult {
-            loss,
-            macs_fwd,
-            macs_bwd,
-            macs_wu,
-            adds,
-            adds_bwd,
-            stored_activations: stored,
-            waves,
-            latency_s,
-            energy_j,
+        BackwardOut {
             grads,
-        })
+            macs_bwd,
+            adds_bwd,
+        }
     }
 }
 

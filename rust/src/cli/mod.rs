@@ -3,9 +3,10 @@
 //! ```text
 //! mram-pim report [--table1] [--fig5] [--fig6] [--fa] [--fast-switch] [--all]
 //! mram-pim train  [--steps N] [--lr F] [--seed N] [--artifacts DIR]
-//!                 [--train-size N] [--no-deep-validate] [--config FILE]
+//!                 [--train-size N] [--threads N] [--shards N]
+//!                 [--no-deep-validate] [--config FILE]
 //! mram-pim mac    [--format fp32|fp16|bf16] [--ultrafast]
-//! mram-pim sweep  [--what align|formats|subarray]
+//! mram-pim sweep  [--what align|formats|subarray|shards]
 //! mram-pim selfcheck
 //! ```
 
@@ -91,18 +92,22 @@ pub fn usage() -> &'static str {
 USAGE:
   mram-pim report [--table1|--fig5|--fig6|--fa|--fast-switch|--all] [--steps N]
   mram-pim train  [--steps N] [--lr F] [--seed N] [--artifacts DIR]
-                  [--train-size N] [--eval-every N] [--no-deep-validate]
-                  [--config FILE]
+                  [--train-size N] [--eval-every N] [--threads N]
+                  [--shards N] [--no-deep-validate] [--config FILE]
   mram-pim mac    [--format fp32|fp16|bf16] [--ultrafast]
-  mram-pim sweep  [--what align|formats|subarray]
+  mram-pim sweep  [--what align|formats|subarray|shards]
   mram-pim selfcheck
 
 `report` regenerates the paper's tables/figures from the cost models;
 `train` runs real LeNet-5 SGD training *functionally on the modeled PIM
 datapath* — forward, backward and weight update through the
 wave-parallel train engine, priced per step — with no PJRT or artifacts
-required.  (Built with `--features pjrt` + `make artifacts`, the same
-command executes the AOT-compiled XLA graphs instead.)"
+required.  `--shards N` splits every batch data-parallel across N
+modeled PIM chips with a priced in-array gradient all-reduce; the
+merged result is bit-identical across all shard counts >= 2 (and
+`--shards 1` is the single-chip engine, bit for bit).  (Built with
+`--features pjrt` + `make artifacts`, the same command executes the
+AOT-compiled XLA graphs instead.)"
 }
 
 #[cfg(test)]

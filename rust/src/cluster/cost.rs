@@ -1,0 +1,414 @@
+//! The cluster step cost model: one constructor
+//! ([`ClusterCost::from_counts`]) prices the physical schedule from
+//! integer work counts, and both the analytic entry point
+//! ([`cluster_step_cost`], fed from `model::training_work` formulas)
+//! and the functional `ClusterEngine` ledger (fed from counted MACs)
+//! go through it — so "functional matches analytic exactly" reduces to
+//! the integer counts agreeing, which the tests pin.
+//!
+//! Modeled schedule for `S > 1` chips:
+//!
+//! 1. **compute** — every chip runs fwd + bwd on its chunk in parallel;
+//!    latency is the most-loaded chip's MAC waves, energy is the sum of
+//!    all chips' (MACs + activation-stash writes + ride-along adds),
+//!    mirroring `Accelerator::train_step_cost` term for term.
+//! 2. **interconnect** — the reduce tree moves `S − 1` gradient
+//!    messages up and broadcasts the updated weights back down
+//!    (`S − 1` more): every transferred value is written once into the
+//!    destination arrays (`e_write` per bit), `2·ceil(log2 S)` hops on
+//!    the critical path.
+//! 3. **reduce** — partials merge pairwise over `ceil(log2 S)` tree
+//!    levels; each merge is `params` row-parallel in-array adds priced
+//!    at the paper's search-based `T_add`/`E_add` — the add procedure
+//!    §3.3 makes O(Nm) is exactly what a gradient all-reduce exercises.
+//! 4. **update** — the root chip applies `w := w − lr·g` (one MAC per
+//!    parameter) before the broadcast.
+//!
+//! `S == 1` degenerates to `Accelerator::train_step_cost` exactly: one
+//! wave pool over fwd + bwd + update, nothing moved, nothing reduced —
+//! the seed invariant that a 1-chip cluster *is* the PR 2 engine.
+
+use crate::arch::train::TrainTotals;
+use crate::cluster::plan::ShardPlan;
+use crate::fpu::FpCostModel;
+use crate::model::Network;
+use crate::Result;
+
+/// Integer work counts of one cluster step (the inputs of the priced
+/// schedule).  `shard_macs` is fwd + bwd only; the update is carried in
+/// `params`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ClusterCounts {
+    pub batch: usize,
+    /// Per-chip fwd + bwd MACs, shard order.
+    pub shard_macs: Vec<u64>,
+    /// Per-chip forward ride-along adds (bias/pool).
+    pub shard_adds: Vec<u64>,
+    /// Per-chip activation values stashed for the backward pass.
+    pub shard_stash: Vec<u64>,
+    /// Trainable parameters (update MACs; also the reduce/broadcast
+    /// message size in values).
+    pub params: u64,
+}
+
+impl ClusterCounts {
+    /// Counts from the analytic workload model, per [`ShardPlan`] chunk.
+    pub fn analytic(net: &Network, plan: &ShardPlan) -> ClusterCounts {
+        let fwd_per_sample: u64 = net.layers.iter().map(|l| l.macs_fwd()).sum();
+        let adds_per_sample: u64 = net.layers.iter().map(|l| l.adds_fwd()).sum();
+        let stash_per_sample: u64 =
+            net.layers.iter().map(|l| l.out_units() as u64).sum();
+        let sizes = plan.chunk_sizes();
+        ClusterCounts {
+            batch: plan.batch(),
+            shard_macs: sizes.iter().map(|&b| 3 * fwd_per_sample * b as u64).collect(),
+            shard_adds: sizes.iter().map(|&b| adds_per_sample * b as u64).collect(),
+            shard_stash: sizes.iter().map(|&b| stash_per_sample * b as u64).collect(),
+            params: net.param_count() as u64,
+        }
+    }
+}
+
+/// The priced, decomposed ledger of one cluster training step.  Every
+/// total is *defined* as the sum of its component terms — the
+/// decomposition tests assert nothing is unaccounted.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterCost {
+    pub shards: usize,
+    pub batch: usize,
+    // -- per-shard compute --
+    /// Per-chip MACs (for `shards == 1` this includes the fused update).
+    pub shard_macs: Vec<u64>,
+    pub shard_waves: Vec<u64>,
+    /// Most-loaded chip's waves × `t_mac` (chips run in parallel).
+    pub compute_latency_s: f64,
+    /// Sum over chips: MACs + 32-bit stash writes + ride-along adds.
+    pub compute_energy_j: f64,
+    // -- interconnect --
+    /// Gradient messages up the tree + weight broadcasts back down.
+    pub link_transfers: u64,
+    pub link_bits: u64,
+    pub link_latency_s: f64,
+    pub link_energy_j: f64,
+    // -- gradient reduce --
+    /// In-array `pim_add`s merging the partials: `(S − 1) · params`.
+    pub reduce_adds: u64,
+    /// `ceil(log2 S)` levels × `ceil(params / lanes)` row-parallel waves.
+    pub reduce_waves: u64,
+    pub reduce_latency_s: f64,
+    pub reduce_energy_j: f64,
+    // -- weight update (root chip; zero when fused into compute) --
+    pub update_macs: u64,
+    pub update_waves: u64,
+    pub update_latency_s: f64,
+    pub update_energy_j: f64,
+}
+
+/// `ceil(log2 s)` for `s ≥ 1` (0 for a single chip).
+pub(crate) fn tree_levels(s: usize) -> u64 {
+    if s <= 1 {
+        0
+    } else {
+        u64::from(usize::BITS - (s - 1).leading_zeros())
+    }
+}
+
+impl ClusterCost {
+    /// Price the physical schedule from integer work counts.  The ONLY
+    /// constructor — the functional engine and the analytic model both
+    /// call it, so equal counts imply bit-equal f64 ledgers.
+    pub fn from_counts(counts: &ClusterCounts, lanes: usize, model: &FpCostModel) -> ClusterCost {
+        let lanes_u = lanes.max(1) as u64;
+        let t_mac = model.t_mac();
+        let e_mac = model.e_mac();
+        let p = counts.params;
+        let s = counts.shard_macs.len();
+
+        // One chip's compute energy — MACs + 32-bit activation-stash
+        // writes + ride-along adds at 1/20 MAC, mirroring
+        // `Accelerator::train_step_cost` term for term (single
+        // definition for the 1-chip and N-chip branches).
+        let chip_energy = |macs: u64, stash: u64, adds: u64| -> f64 {
+            let stash_writes = stash * 32;
+            let mut e = macs as f64 * e_mac;
+            e += stash_writes as f64 * model.costs.e_write;
+            e += adds as f64 * e_mac / 20.0;
+            e
+        };
+
+        if s <= 1 {
+            // Single chip: exactly `Accelerator::train_step_cost` — the
+            // update shares the one wave pool, nothing moves off-chip.
+            let macs = counts.shard_macs.first().copied().unwrap_or(0) + p;
+            let adds = counts.shard_adds.first().copied().unwrap_or(0);
+            let stash = counts.shard_stash.first().copied().unwrap_or(0);
+            let waves = macs.div_ceil(lanes_u);
+            let energy = chip_energy(macs, stash, adds);
+            return ClusterCost {
+                shards: 1,
+                batch: counts.batch,
+                shard_macs: vec![macs],
+                shard_waves: vec![waves],
+                compute_latency_s: waves as f64 * t_mac,
+                compute_energy_j: energy,
+                link_transfers: 0,
+                link_bits: 0,
+                link_latency_s: 0.0,
+                link_energy_j: 0.0,
+                reduce_adds: 0,
+                reduce_waves: 0,
+                reduce_latency_s: 0.0,
+                reduce_energy_j: 0.0,
+                update_macs: 0,
+                update_waves: 0,
+                update_latency_s: 0.0,
+                update_energy_j: 0.0,
+            };
+        }
+
+        // -- compute: chips in parallel --
+        let shard_waves: Vec<u64> = counts
+            .shard_macs
+            .iter()
+            .map(|m| m.div_ceil(lanes_u))
+            .collect();
+        let max_waves = shard_waves.iter().copied().max().unwrap_or(0);
+        let mut compute_energy_j = 0f64;
+        for ((&macs, &stash), &adds) in counts
+            .shard_macs
+            .iter()
+            .zip(&counts.shard_stash)
+            .zip(&counts.shard_adds)
+        {
+            compute_energy_j += chip_energy(macs, stash, adds);
+        }
+
+        // -- reduce tree --
+        let levels = tree_levels(s);
+        let reduce_adds = (s as u64 - 1) * p;
+        let reduce_waves = levels * p.div_ceil(lanes_u);
+        let t_add = model.t_add();
+        let e_add = model.e_add();
+
+        // -- interconnect --
+        let link_transfers = 2 * (s as u64 - 1);
+        let link_bits = link_transfers * p * 32;
+        let hop_waves = (p * 32).div_ceil(lanes_u);
+        let link_latency_s = (2 * levels * hop_waves) as f64 * model.costs.t_write;
+        let link_energy_j = link_bits as f64 * model.costs.e_write;
+
+        // -- update at the root --
+        let update_waves = p.div_ceil(lanes_u);
+
+        ClusterCost {
+            shards: s,
+            batch: counts.batch,
+            shard_macs: counts.shard_macs.clone(),
+            shard_waves,
+            compute_latency_s: max_waves as f64 * t_mac,
+            compute_energy_j,
+            link_transfers,
+            link_bits,
+            link_latency_s,
+            link_energy_j,
+            reduce_adds,
+            reduce_waves,
+            reduce_latency_s: reduce_waves as f64 * t_add,
+            reduce_energy_j: reduce_adds as f64 * e_add,
+            update_macs: p,
+            update_waves,
+            update_latency_s: update_waves as f64 * t_mac,
+            update_energy_j: p as f64 * e_mac,
+        }
+    }
+
+    /// Total MACs (all chips + update) — shard-count invariant, equal to
+    /// `training_work(batch).total_macs()`.
+    pub fn total_macs(&self) -> u64 {
+        self.shard_macs.iter().sum::<u64>() + self.update_macs
+    }
+
+    /// Total array wave *events* across the cluster (compute on every
+    /// chip + reduce + update).  Unlike latency, this sums over chips.
+    pub fn total_waves(&self) -> u64 {
+        self.shard_waves.iter().sum::<u64>() + self.reduce_waves + self.update_waves
+    }
+
+    /// Step latency: parallel compute + interconnect + reduce + update.
+    pub fn latency_s(&self) -> f64 {
+        self.compute_latency_s + self.link_latency_s + self.reduce_latency_s + self.update_latency_s
+    }
+
+    /// Step energy: all component terms.
+    pub fn energy_j(&self) -> f64 {
+        self.compute_energy_j + self.link_energy_j + self.reduce_energy_j + self.update_energy_j
+    }
+
+    /// Fraction of step latency spent merging gradients (interconnect +
+    /// reduce) — the scale-out overhead the shard sweep tracks.
+    pub fn reduce_overhead_frac(&self) -> f64 {
+        let total = self.latency_s();
+        if total == 0.0 {
+            return 0.0;
+        }
+        (self.link_latency_s + self.reduce_latency_s) / total
+    }
+
+    /// Does a merged functional ledger of `totals.steps` cluster steps
+    /// match this per-step cost exactly (MACs and waves)?  The sharded
+    /// counterpart of `TrainTotals::matches_analytic`.
+    pub fn matches_totals(&self, totals: &TrainTotals) -> bool {
+        totals.total_macs() == self.total_macs() * totals.steps
+            && totals.waves == self.total_waves() * totals.steps
+    }
+}
+
+/// Analytic cost of one cluster training step of `net` at `batch` split
+/// over `shards` chips of `lanes` lanes — the sharded counterpart of
+/// `Accelerator::train_step_cost`, cross-checked against the functional
+/// `ClusterEngine` ledger by the test suite.
+pub fn cluster_step_cost(
+    net: &Network,
+    batch: usize,
+    shards: usize,
+    lanes: usize,
+    model: &FpCostModel,
+) -> Result<ClusterCost> {
+    let plan = ShardPlan::split(batch, shards)?;
+    Ok(ClusterCost::from_counts(
+        &ClusterCounts::analytic(net, &plan),
+        lanes,
+        model,
+    ))
+}
+
+/// Cross-check a merged functional run ledger against the analytic
+/// cluster model — the sharded counterpart of
+/// `TrainTotals::matches_analytic`, shared by the CLI and the
+/// end-to-end example.  Errors on drift; returns the per-step cost for
+/// reporting (e.g. [`ClusterCost::reduce_overhead_frac`]).
+pub fn verify_cluster_totals(
+    totals: &TrainTotals,
+    net: &Network,
+    batch: usize,
+    shards: usize,
+    lanes: usize,
+    model: &FpCostModel,
+) -> Result<ClusterCost> {
+    let cost = cluster_step_cost(net, batch, shards, lanes, model)?;
+    if !cost.matches_totals(totals) {
+        return Err(crate::Error::Sim(format!(
+            "cluster ledger drifted from cluster_step_cost: \
+             {} MACs / {} waves, want {} / {}",
+            totals.total_macs(),
+            totals.waves,
+            cost.total_macs() * totals.steps,
+            cost.total_waves() * totals.steps,
+        )));
+    }
+    Ok(cost)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{AccelKind, Accelerator};
+    use crate::fpu::FloatFormat;
+
+    const LANES: usize = 32_768;
+
+    fn model() -> FpCostModel {
+        FpCostModel::proposed_fp32()
+    }
+
+    #[test]
+    fn tree_levels_are_ceil_log2() {
+        for (s, l) in [(1, 0u64), (2, 1), (3, 2), (4, 2), (5, 3), (8, 3), (9, 4)] {
+            assert_eq!(tree_levels(s), l, "shards {s}");
+        }
+    }
+
+    #[test]
+    fn single_chip_is_train_step_cost_exactly() {
+        let net = Network::lenet5();
+        let batch = 32;
+        let cost = cluster_step_cost(&net, batch, 1, LANES, &model()).unwrap();
+        let accel = Accelerator::new(AccelKind::Proposed, FloatFormat::FP32, LANES);
+        let step = accel.train_step_cost(&net, batch);
+        let work = net.training_work(batch);
+        assert_eq!(cost.total_macs(), work.total_macs());
+        assert_eq!(cost.total_waves(), work.mac_waves(LANES as u64));
+        assert_eq!(cost.latency_s(), step.latency_s);
+        assert_eq!(cost.energy_j(), step.energy_j);
+        assert_eq!(cost.reduce_adds + cost.link_bits + cost.update_macs, 0);
+    }
+
+    #[test]
+    fn totals_decompose_with_nothing_unaccounted() {
+        let net = Network::lenet5();
+        for shards in [1usize, 2, 4, 8] {
+            let c = cluster_step_cost(&net, 32, shards, LANES, &model()).unwrap();
+            let lat = c.compute_latency_s
+                + c.link_latency_s
+                + c.reduce_latency_s
+                + c.update_latency_s;
+            let en = c.compute_energy_j
+                + c.link_energy_j
+                + c.reduce_energy_j
+                + c.update_energy_j;
+            assert_eq!(c.latency_s(), lat, "shards {shards} latency terms");
+            assert_eq!(c.energy_j(), en, "shards {shards} energy terms");
+            let waves: u64 =
+                c.shard_waves.iter().sum::<u64>() + c.reduce_waves + c.update_waves;
+            assert_eq!(c.total_waves(), waves, "shards {shards} wave terms");
+            // MAC total is shard-count invariant.
+            assert_eq!(
+                c.total_macs(),
+                net.training_work(32).total_macs(),
+                "shards {shards} MACs"
+            );
+        }
+    }
+
+    #[test]
+    fn latency_shrinks_superlinearly_enough() {
+        let net = Network::lenet5();
+        let m = model();
+        let l1 = cluster_step_cost(&net, 32, 1, LANES, &m).unwrap().latency_s();
+        let l2 = cluster_step_cost(&net, 32, 2, LANES, &m).unwrap().latency_s();
+        let l4 = cluster_step_cost(&net, 32, 4, LANES, &m).unwrap().latency_s();
+        let l8 = cluster_step_cost(&net, 32, 8, LANES, &m).unwrap().latency_s();
+        assert!(l8 < l4 && l4 < l2 && l2 < l1, "{l1} {l2} {l4} {l8}");
+        // The PR acceptance figure, deterministically.
+        assert!(l4 < 0.6 * l1, "shards=4 must cut step latency below 0.6x: {}", l4 / l1);
+    }
+
+    #[test]
+    fn reduce_energy_uses_the_papers_add_and_grows_with_shards() {
+        let net = Network::lenet5();
+        let m = model();
+        let c2 = cluster_step_cost(&net, 32, 2, LANES, &m).unwrap();
+        let c8 = cluster_step_cost(&net, 32, 8, LANES, &m).unwrap();
+        let p = net.param_count() as u64;
+        assert_eq!(c2.reduce_adds, p);
+        assert_eq!(c8.reduce_adds, 7 * p);
+        assert_eq!(c2.reduce_energy_j, p as f64 * m.e_add());
+        assert!(c8.reduce_overhead_frac() > c2.reduce_overhead_frac());
+        assert!(c8.reduce_overhead_frac() < 0.5, "reduce must not dominate");
+    }
+
+    #[test]
+    fn link_traffic_counts_up_and_down_tree() {
+        let net = Network::lenet5();
+        let c = cluster_step_cost(&net, 32, 4, LANES, &model()).unwrap();
+        let p = net.param_count() as u64;
+        assert_eq!(c.link_transfers, 6); // 3 up + 3 down
+        assert_eq!(c.link_bits, 6 * p * 32);
+    }
+
+    #[test]
+    fn oversharded_batch_errors() {
+        let net = Network::lenet5();
+        assert!(cluster_step_cost(&net, 4, 8, LANES, &model()).is_err());
+    }
+}

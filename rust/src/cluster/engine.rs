@@ -1,0 +1,409 @@
+//! The data-parallel cluster engine: N modeled PIM chips, one scoped
+//! host thread per chip, each running the shared [`TrainEngine`]
+//! lowering on its contiguous batch chunk (reusing the chip's intra-chip
+//! wave parallelism), merged by the order-preserving gradient all-reduce
+//! and one global in-array SGD update.
+//!
+//! **Bit-reproducibility contract.**
+//!
+//! * `shards == 1` *delegates* to [`TrainEngine::train_step`] — the seed
+//!   invariant: a 1-chip cluster is the PR 2 engine, bit for bit,
+//!   ledger for ledger.
+//! * `shards ≥ 2`: every chip evaluates *per-sample microgradients*
+//!   ([`TrainEngine::micrograd`], δ scaled by the global batch), and
+//!   [`reduce_grads`] folds them in **global sample order** — so the
+//!   merged gradient, loss and updated weights are identical for every
+//!   shard count ≥ 2 and every thread count.  For networks whose wgrad
+//!   contractions are purely per-sample outer products (dense MLPs) the
+//!   fold *is* the batched GEMM accumulation chain, so the result also
+//!   equals the single-chip engine exactly; conv wgrads chain over
+//!   output pixels inside each sample first, which fixes the canonical
+//!   (shard-invariant) order at sample granularity rather than the
+//!   single-chip pixel-interleaved order.  `rust/tests/cluster.rs` pins
+//!   both facts.
+//!
+//! The ledger is priced by [`ClusterCost::from_counts`] from the
+//! *counted* per-chip work, which the tests hold exactly equal to the
+//! analytic [`cluster_step_cost`](crate::cluster::cluster_step_cost).
+
+use std::thread;
+
+use crate::arch::gemm::NetworkParams;
+use crate::arch::train::{SampleGrad, TrainEngine, TrainStepResult, TrainTotals};
+use crate::cluster::cost::{ClusterCost, ClusterCounts};
+use crate::cluster::plan::{ClusterConfig, ShardPlan};
+use crate::cluster::reduce::{reduce_grads, GradSet};
+use crate::fpu::FpCostModel;
+use crate::model::Network;
+use crate::{Error, Result};
+
+/// Ledger + outputs of one cluster training step.  The scalar fields
+/// mirror [`TrainStepResult`] so run totals accumulate identically;
+/// `cost` carries the full per-shard / interconnect / reduce / update
+/// decomposition.
+#[derive(Debug, Clone)]
+pub struct ClusterStepResult {
+    /// Mean softmax–cross-entropy loss over the *global* batch.
+    pub loss: f32,
+    pub macs_fwd: u64,
+    pub macs_bwd: u64,
+    pub macs_wu: u64,
+    pub adds: u64,
+    pub adds_bwd: u64,
+    pub stored_activations: u64,
+    /// Host-side `pim_add` applications of the canonical merge fold
+    /// (counted, not priced — the priced reduce is `cost.reduce_adds`,
+    /// the physical tree over shard partials).
+    pub merge_adds: u64,
+    /// Total array wave events (`cost.total_waves()`).
+    pub waves: u64,
+    /// Cluster step latency (`cost.latency_s()`).
+    pub latency_s: f64,
+    /// Cluster step energy (`cost.energy_j()`).
+    pub energy_j: f64,
+    /// The decomposed priced schedule.
+    pub cost: ClusterCost,
+    /// Merged per-layer gradients (the all-reduce output).
+    pub grads: GradSet,
+}
+
+impl ClusterStepResult {
+    pub fn total_macs(&self) -> u64 {
+        self.macs_fwd + self.macs_bwd + self.macs_wu
+    }
+
+    /// Accumulate into a run-level [`TrainTotals`] ledger (the cluster
+    /// counterpart of `TrainTotals::absorb`).
+    pub fn absorb_into(&self, totals: &mut TrainTotals) {
+        totals.steps += 1;
+        totals.macs_fwd += self.macs_fwd;
+        totals.macs_bwd += self.macs_bwd;
+        totals.macs_wu += self.macs_wu;
+        totals.adds += self.adds;
+        totals.adds_bwd += self.adds_bwd;
+        totals.stored_activations += self.stored_activations;
+        totals.waves += self.waves;
+        totals.latency_s += self.latency_s;
+        totals.energy_j += self.energy_j;
+    }
+
+    /// Wrap a single-chip [`TrainStepResult`] (the `shards == 1`
+    /// delegation): scalar ledger copied bit for bit, cost rebuilt from
+    /// the same counts (and therefore equal — `debug_assert`ed).
+    fn from_single(r: TrainStepResult, batch: usize, lanes: usize, model: &FpCostModel) -> Self {
+        let counts = ClusterCounts {
+            batch,
+            shard_macs: vec![r.macs_fwd + r.macs_bwd],
+            shard_adds: vec![r.adds],
+            shard_stash: vec![r.stored_activations],
+            params: r.macs_wu,
+        };
+        let cost = ClusterCost::from_counts(&counts, lanes, model);
+        debug_assert_eq!(cost.total_waves(), r.waves);
+        ClusterStepResult {
+            loss: r.loss,
+            macs_fwd: r.macs_fwd,
+            macs_bwd: r.macs_bwd,
+            macs_wu: r.macs_wu,
+            adds: r.adds,
+            adds_bwd: r.adds_bwd,
+            stored_activations: r.stored_activations,
+            merge_adds: 0,
+            waves: r.waves,
+            latency_s: r.latency_s,
+            energy_j: r.energy_j,
+            cost,
+            grads: r.grads,
+        }
+    }
+}
+
+/// Per-shard worker output: the chunk's microgradients in local sample
+/// order (global order = shard order × local order, since chunks are
+/// contiguous and ordered).
+struct ShardOut {
+    samples: Vec<SampleGrad>,
+}
+
+/// The sharded data-parallel training engine.
+#[derive(Debug, Clone)]
+pub struct ClusterEngine {
+    engine: TrainEngine,
+    cfg: ClusterConfig,
+    lanes: usize,
+}
+
+impl ClusterEngine {
+    /// A cluster of `cfg.shards` chips, each with `lanes` row-parallel
+    /// MAC lanes priced from `model`, each fanning its host work over
+    /// `cfg.threads_per_shard` worker threads.
+    pub fn new(model: FpCostModel, lanes: usize, cfg: ClusterConfig) -> ClusterEngine {
+        ClusterEngine {
+            engine: TrainEngine::new(model, lanes, cfg.threads_per_shard),
+            cfg,
+            lanes: lanes.max(1),
+        }
+    }
+
+    pub fn config(&self) -> &ClusterConfig {
+        &self.cfg
+    }
+
+    pub fn shards(&self) -> usize {
+        self.cfg.shards
+    }
+
+    /// The per-chip training engine (every chip is identical).
+    pub fn train_engine(&self) -> &TrainEngine {
+        &self.engine
+    }
+
+    /// One data-parallel SGD step: shard the batch, run every chip's
+    /// fwd + bwd concurrently, all-reduce the gradients in canonical
+    /// order, apply one global in-array update — returning the full
+    /// decomposed ledger + merged gradients.
+    pub fn train_step(
+        &self,
+        net: &Network,
+        params: &mut NetworkParams,
+        images: &[f32],
+        labels: &[i32],
+        batch: usize,
+        lr: f32,
+    ) -> Result<ClusterStepResult> {
+        if self.cfg.shards <= 1 {
+            let r = self
+                .engine
+                .train_step(net, params, images, labels, batch, lr)?;
+            return Ok(ClusterStepResult::from_single(
+                r,
+                batch,
+                self.lanes,
+                self.engine.gemm().model(),
+            ));
+        }
+
+        self.engine.validate(net, params, images, labels, batch)?;
+        let plan = ShardPlan::split(batch, self.cfg.shards)?;
+        let (c0, h0, w0) = net.input;
+        let in_units = c0 * h0 * w0;
+
+        // ---- fan out: one scoped thread per chip ----
+        let engine = &self.engine;
+        let frozen: &NetworkParams = params;
+        let shard_results: Vec<Result<ShardOut>> = thread::scope(|s| {
+            let mut handles = Vec::with_capacity(plan.shards());
+            for &(lo, hi) in plan.chunks() {
+                handles.push(s.spawn(move || -> Result<ShardOut> {
+                    let mut samples = Vec::with_capacity(hi - lo);
+                    for b in lo..hi {
+                        samples.push(engine.micrograd(
+                            net,
+                            frozen,
+                            &images[b * in_units..(b + 1) * in_units],
+                            labels[b],
+                            batch,
+                        )?);
+                    }
+                    Ok(ShardOut { samples })
+                }));
+            }
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("shard worker panicked"))
+                .collect()
+        });
+        let outs: Vec<ShardOut> = shard_results.into_iter().collect::<Result<_>>()?;
+
+        // ---- per-shard ledger counts (fwd + bwd) ----
+        let mut shard_macs = Vec::with_capacity(outs.len());
+        let mut shard_adds = Vec::with_capacity(outs.len());
+        let mut shard_stash = Vec::with_capacity(outs.len());
+        let (mut macs_fwd, mut macs_bwd) = (0u64, 0u64);
+        let (mut adds, mut adds_bwd, mut stored) = (0u64, 0u64, 0u64);
+        for out in &outs {
+            let (mut m, mut a, mut st) = (0u64, 0u64, 0u64);
+            for sg in &out.samples {
+                m += sg.macs_fwd + sg.macs_bwd;
+                a += sg.adds;
+                st += sg.stored_activations;
+                macs_fwd += sg.macs_fwd;
+                macs_bwd += sg.macs_bwd;
+                adds += sg.adds;
+                adds_bwd += sg.adds_bwd;
+                stored += sg.stored_activations;
+            }
+            shard_macs.push(m);
+            shard_adds.push(a);
+            shard_stash.push(st);
+        }
+
+        // ---- canonical merge: global sample order ----
+        let mut terms = Vec::with_capacity(batch);
+        let mut sample_grads: Vec<GradSet> = Vec::with_capacity(batch);
+        for out in outs {
+            for sg in out.samples {
+                terms.push(sg.loss_term);
+                sample_grads.push(sg.grads);
+            }
+        }
+        let mut acc = 0f64;
+        for t in &terms {
+            acc += *t;
+        }
+        let loss = (acc / batch as f64) as f32;
+        if !loss.is_finite() {
+            return Err(Error::Sim(format!("cluster loss diverged: {loss}")));
+        }
+        let (merged, merge_adds) = reduce_grads(&sample_grads)?;
+
+        // ---- one global in-array SGD update ----
+        let macs_wu = self.engine.apply_sgd(params, &merged, lr);
+
+        // ---- price the counted schedule (same constructor as the
+        //      analytic cluster_step_cost: equal counts ⇒ equal ledger) --
+        let counts = ClusterCounts {
+            batch,
+            shard_macs,
+            shard_adds,
+            shard_stash,
+            params: macs_wu,
+        };
+        let cost = ClusterCost::from_counts(&counts, self.lanes, self.engine.gemm().model());
+
+        Ok(ClusterStepResult {
+            loss,
+            macs_fwd,
+            macs_bwd,
+            macs_wu,
+            adds,
+            adds_bwd,
+            stored_activations: stored,
+            merge_adds,
+            waves: cost.total_waves(),
+            latency_s: cost.latency_s(),
+            energy_j: cost.energy_j(),
+            cost,
+            grads: merged,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Layer;
+    use crate::prop::Rng;
+
+    fn mlp() -> Network {
+        Network {
+            name: "cluster-mlp",
+            input: (1, 3, 4),
+            layers: vec![
+                Layer::Dense { inp: 12, out: 9 },
+                Layer::Relu { units: 9 },
+                Layer::Dense { inp: 9, out: 5 },
+            ],
+        }
+    }
+
+    fn cluster(shards: usize) -> ClusterEngine {
+        ClusterEngine::new(
+            FpCostModel::proposed_fp32(),
+            1024,
+            ClusterConfig::new(shards, 2),
+        )
+    }
+
+    fn batch_data(net: &Network, batch: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
+        let (c, h, w) = net.input;
+        let classes = net.layers.last().unwrap().out_units();
+        let mut rng = Rng::new(seed);
+        (
+            (0..batch * c * h * w).map(|_| rng.f32_normal(1)).collect(),
+            (0..batch).map(|_| rng.below(classes as u64) as i32).collect(),
+        )
+    }
+
+    #[test]
+    fn shards_1_delegates_to_train_engine() {
+        let net = mlp();
+        let (x, labels) = batch_data(&net, 6, 0xC1);
+        let eng = cluster(1);
+        let mut p_cluster = NetworkParams::init(&net, 3);
+        let mut p_engine = p_cluster.clone();
+        let rc = eng
+            .train_step(&net, &mut p_cluster, &x, &labels, 6, 0.1)
+            .unwrap();
+        let re = eng
+            .train_engine()
+            .train_step(&net, &mut p_engine, &x, &labels, 6, 0.1)
+            .unwrap();
+        assert_eq!(rc.loss.to_bits(), re.loss.to_bits());
+        assert_eq!(rc.waves, re.waves);
+        assert_eq!(rc.latency_s, re.latency_s);
+        assert_eq!(rc.energy_j, re.energy_j);
+        assert_eq!(rc.total_macs(), re.total_macs());
+        for (a, b) in p_cluster.layers.iter().flatten().zip(p_engine.layers.iter().flatten()) {
+            for (x, y) in a.w.iter().zip(&b.w) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn mlp_sharding_is_bit_invariant_and_matches_engine() {
+        let net = mlp();
+        let batch = 6;
+        let (x, labels) = batch_data(&net, batch, 0x7E5);
+        let mut reference: Option<Vec<u32>> = None;
+        for shards in [1usize, 2, 3, 6] {
+            let eng = cluster(shards);
+            let mut p = NetworkParams::init(&net, 11);
+            let r = eng.train_step(&net, &mut p, &x, &labels, batch, 0.1).unwrap();
+            assert!(r.loss.is_finite());
+            let bits: Vec<u32> = p
+                .layers
+                .iter()
+                .flatten()
+                .flat_map(|lp| lp.w.iter().chain(&lp.b).map(|v| v.to_bits()))
+                .collect();
+            match &reference {
+                None => reference = Some(bits),
+                Some(want) => assert_eq!(&bits, want, "shards {shards} diverged"),
+            }
+        }
+    }
+
+    #[test]
+    fn error_paths_surface() {
+        let net = mlp();
+        let (x, labels) = batch_data(&net, 4, 1);
+        // more shards than samples
+        let eng = cluster(8);
+        let mut p = NetworkParams::init(&net, 2);
+        assert!(eng.train_step(&net, &mut p, &x, &labels, 4, 0.1).is_err());
+        // bad labels propagate out of the shard workers
+        let eng = cluster(2);
+        assert!(eng
+            .train_step(&net, &mut p, &x, &[0, 1, 9, 0], 4, 0.1)
+            .is_err());
+        // bad shapes rejected up front
+        assert!(eng
+            .train_step(&net, &mut p, &x[..x.len() - 1], &labels, 4, 0.1)
+            .is_err());
+    }
+
+    #[test]
+    fn merge_adds_counts_the_canonical_fold() {
+        let net = mlp();
+        let batch = 4;
+        let (x, labels) = batch_data(&net, batch, 0xF0);
+        let mut p = NetworkParams::init(&net, 5);
+        let r = cluster(2).train_step(&net, &mut p, &x, &labels, batch, 0.1).unwrap();
+        // batch folds × every parameter element
+        assert_eq!(r.merge_adds, batch as u64 * net.param_count() as u64);
+        assert_eq!(r.macs_wu, net.param_count() as u64);
+        assert_eq!(r.cost.shards, 2);
+    }
+}

@@ -1,0 +1,28 @@
+//! Sharded multi-chip PIM cluster: data-parallel training across N
+//! modeled SOT-MRAM chips with a priced, order-preserving gradient
+//! all-reduce.
+//!
+//! The paper evaluates a single chip; this module scales the functional
+//! training loop out the way the digital in-array fp datapath uniquely
+//! permits: **bit-reproducibly**.  Each chip runs the shared
+//! [`crate::arch::TrainEngine`] lowering on a contiguous chunk of the
+//! batch ([`ShardPlan`]), gradients merge through an order-preserving
+//! `pim_add` chain ([`reduce_grads`]), and one in-array SGD update
+//! finishes the step.  The ledger decomposes exactly into per-shard
+//! compute + interconnect + reduce + update terms ([`ClusterCost`]),
+//! cross-checked against the analytic [`cluster_step_cost`] the same
+//! way `TrainEngine`'s ledger is pinned to `training_work`.
+//!
+//! Layering: [`plan`] (topology + batch split), [`reduce`] (the value
+//! semantics of the merge), [`cost`] (the priced schedule), [`engine`]
+//! (the scoped-thread execution engine gluing them to `TrainEngine`).
+
+pub mod cost;
+pub mod engine;
+pub mod plan;
+pub mod reduce;
+
+pub use cost::{cluster_step_cost, verify_cluster_totals, ClusterCost, ClusterCounts};
+pub use engine::{ClusterEngine, ClusterStepResult};
+pub use plan::{ClusterConfig, ShardPlan};
+pub use reduce::{reduce_grads, GradSet};

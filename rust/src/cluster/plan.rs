@@ -1,0 +1,134 @@
+//! Cluster topology and batch-sharding plan.
+
+use crate::{Error, Result};
+
+/// Configuration of a modeled multi-chip PIM cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ClusterConfig {
+    /// Modeled PIM chips the training batch is split across.
+    pub shards: usize,
+    /// Host worker threads each chip's intra-chip wave parallelism fans
+    /// out over (the per-shard `TrainEngine` `threads` knob).
+    pub threads_per_shard: usize,
+}
+
+impl ClusterConfig {
+    pub fn new(shards: usize, threads_per_shard: usize) -> ClusterConfig {
+        ClusterConfig {
+            shards: shards.max(1),
+            threads_per_shard: threads_per_shard.max(1),
+        }
+    }
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig::new(1, 1)
+    }
+}
+
+/// How one training batch is split across the chips: contiguous sample
+/// ranges, in global sample order.  Contiguity + ordering matter: the
+/// gradient all-reduce walks the chunks in this order, which is what
+/// keeps the merged result independent of the shard count.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    batch: usize,
+    chunks: Vec<(usize, usize)>,
+}
+
+impl ShardPlan {
+    /// Split `batch` samples across `shards` chips as evenly as
+    /// possible (the first `batch % shards` chips take one extra
+    /// sample).  Every chip must receive at least one sample.
+    pub fn split(batch: usize, shards: usize) -> Result<ShardPlan> {
+        if shards == 0 {
+            return Err(Error::Sim("cluster needs at least one shard".into()));
+        }
+        if batch == 0 {
+            return Err(Error::Sim("cannot shard an empty batch".into()));
+        }
+        if shards > batch {
+            return Err(Error::Sim(format!(
+                "{shards} shards cannot each take a sample of a batch of {batch}"
+            )));
+        }
+        let base = batch / shards;
+        let rem = batch % shards;
+        let mut chunks = Vec::with_capacity(shards);
+        let mut start = 0usize;
+        for k in 0..shards {
+            let len = base + usize::from(k < rem);
+            chunks.push((start, start + len));
+            start += len;
+        }
+        debug_assert_eq!(start, batch);
+        Ok(ShardPlan { batch, chunks })
+    }
+
+    /// `[start, end)` sample ranges, one per chip, in global order.
+    pub fn chunks(&self) -> &[(usize, usize)] {
+        &self.chunks
+    }
+
+    pub fn shards(&self) -> usize {
+        self.chunks.len()
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Samples on the most loaded chip — the compute critical path.
+    pub fn max_chunk(&self) -> usize {
+        self.chunks.iter().map(|&(lo, hi)| hi - lo).max().unwrap_or(0)
+    }
+
+    /// Per-chip chunk sizes, in shard order.
+    pub fn chunk_sizes(&self) -> Vec<usize> {
+        self.chunks.iter().map(|&(lo, hi)| hi - lo).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn even_split_is_exact() {
+        let p = ShardPlan::split(32, 4).unwrap();
+        assert_eq!(p.shards(), 4);
+        assert_eq!(p.chunks(), &[(0, 8), (8, 16), (16, 24), (24, 32)]);
+        assert_eq!(p.max_chunk(), 8);
+        assert_eq!(p.batch(), 32);
+    }
+
+    #[test]
+    fn uneven_split_front_loads_remainder() {
+        let p = ShardPlan::split(10, 3).unwrap();
+        assert_eq!(p.chunk_sizes(), vec![4, 3, 3]);
+        // Contiguous cover of [0, batch) in order.
+        let mut expect = 0;
+        for &(lo, hi) in p.chunks() {
+            assert_eq!(lo, expect);
+            assert!(hi > lo);
+            expect = hi;
+        }
+        assert_eq!(expect, 10);
+    }
+
+    #[test]
+    fn degenerate_splits_error() {
+        assert!(ShardPlan::split(8, 0).is_err());
+        assert!(ShardPlan::split(0, 1).is_err());
+        assert!(ShardPlan::split(4, 5).is_err());
+        assert!(ShardPlan::split(4, 4).is_ok());
+    }
+
+    #[test]
+    fn config_clamps_to_one() {
+        let c = ClusterConfig::new(0, 0);
+        assert_eq!((c.shards, c.threads_per_shard), (1, 1));
+        assert_eq!(ClusterConfig::default(), ClusterConfig::new(1, 1));
+    }
+}

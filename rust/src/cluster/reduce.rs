@@ -1,0 +1,161 @@
+//! The gradient all-reduce, lowered onto the in-array fp datapath.
+//!
+//! Digital in-array floating point is what makes cluster-scale
+//! data-parallel training *bit-reproducible*: unlike analog PIM there
+//! is no per-chip drift to calibrate away, so the only source of
+//! nondeterminism left is the **merge order** of the gradient partials
+//! (FTZ fp32 addition is not associative).  This module therefore fixes
+//! the order: [`reduce_grads`] folds its inputs with [`pim_add_f32`] in
+//! the exact order given, starting from +0 — a left-leaning reduce
+//! tree, the only tree shape whose bits reproduce the sequential
+//! accumulation chain a single chip would run.  The cluster engine
+//! feeds it per-sample microgradients in global sample order, which is
+//! why the merged gradient is identical for every shard count (and, for
+//! dense layers, identical to the single-chip batched GEMM chain — the
+//! wgrad GEMM's contraction *is* this chain).
+//!
+//! Pricing is separate: [`crate::cluster::ClusterCost`] charges the
+//! physical schedule (one partial per chip, tree-merged in
+//! `ceil(log2 S)` levels of row-parallel add waves at the paper's
+//! `T_add`/`E_add`), while this function defines the *values*.
+
+use crate::arch::gemm::LayerParams;
+use crate::fpu::softfloat::pim_add_f32;
+use crate::{Error, Result};
+
+/// One gradient contribution: per-layer `LayerParams`-shaped tensors,
+/// `None` for parameter-free layers (the same shape
+/// `TrainStepResult::grads` uses).
+pub type GradSet = Vec<Option<LayerParams>>;
+
+/// Order-preserving chain all-reduce: `merged[e] = fold(pim_add_f32)`
+/// over `parts` in the order given, starting from +0, element for
+/// element.  Returns the merged gradient and the number of `pim_add`
+/// applications performed.
+///
+/// Errors if `parts` is empty or the sets disagree in shape.
+pub fn reduce_grads(parts: &[GradSet]) -> Result<(GradSet, u64)> {
+    let Some(first) = parts.first() else {
+        return Err(Error::Sim("all-reduce of zero gradient sets".into()));
+    };
+    let mut merged: GradSet = first
+        .iter()
+        .map(|g| {
+            g.as_ref().map(|g| LayerParams {
+                w: vec![0f32; g.w.len()],
+                b: vec![0f32; g.b.len()],
+            })
+        })
+        .collect();
+    let mut adds = 0u64;
+    for part in parts {
+        if part.len() != merged.len() {
+            return Err(Error::Sim(format!(
+                "all-reduce layer count mismatch: {} vs {}",
+                part.len(),
+                merged.len()
+            )));
+        }
+        for (m, g) in merged.iter_mut().zip(part) {
+            match (m.as_mut(), g.as_ref()) {
+                (Some(m), Some(g)) => {
+                    if m.w.len() != g.w.len() || m.b.len() != g.b.len() {
+                        return Err(Error::Sim(
+                            "all-reduce gradient shape mismatch".into(),
+                        ));
+                    }
+                    for (slot, &v) in m.w.iter_mut().zip(&g.w) {
+                        *slot = pim_add_f32(*slot, v);
+                    }
+                    for (slot, &v) in m.b.iter_mut().zip(&g.b) {
+                        *slot = pim_add_f32(*slot, v);
+                    }
+                    adds += (g.w.len() + g.b.len()) as u64;
+                }
+                (None, None) => {}
+                _ => {
+                    return Err(Error::Sim(
+                        "all-reduce parameter-layer mismatch".into(),
+                    ))
+                }
+            }
+        }
+    }
+    Ok((merged, adds))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::Rng;
+
+    fn set(rng: &mut Rng, shapes: &[Option<(usize, usize)>]) -> GradSet {
+        shapes
+            .iter()
+            .map(|s| {
+                s.map(|(w, b)| LayerParams {
+                    w: (0..w).map(|_| rng.f32_normal(6)).collect(),
+                    b: (0..b).map(|_| rng.f32_normal(6)).collect(),
+                })
+            })
+            .collect()
+    }
+
+    #[test]
+    fn reduce_is_the_elementwise_chain() {
+        let shapes = [Some((5, 2)), None, Some((3, 3))];
+        let mut rng = Rng::new(0xA11);
+        let parts: Vec<GradSet> = (0..5).map(|_| set(&mut rng, &shapes)).collect();
+        let (merged, adds) = reduce_grads(&parts).unwrap();
+        assert_eq!(adds, 5 * (5 + 2 + 3 + 3));
+        for (l, m) in merged.iter().enumerate() {
+            let Some(m) = m else {
+                assert!(parts[0][l].is_none());
+                continue;
+            };
+            for (i, v) in m.w.iter().enumerate() {
+                let mut acc = 0f32;
+                for p in &parts {
+                    acc = pim_add_f32(acc, p[l].as_ref().unwrap().w[i]);
+                }
+                assert_eq!(v.to_bits(), acc.to_bits(), "layer {l} w[{i}]");
+            }
+            for (i, v) in m.b.iter().enumerate() {
+                let mut acc = 0f32;
+                for p in &parts {
+                    acc = pim_add_f32(acc, p[l].as_ref().unwrap().b[i]);
+                }
+                assert_eq!(v.to_bits(), acc.to_bits(), "layer {l} b[{i}]");
+            }
+        }
+    }
+
+    #[test]
+    fn single_part_reduces_to_itself_modulo_zero_fold() {
+        // One part: merged[e] = pim_add(0, g[e]) — identity for every
+        // normal value (the +0 start only matters for −0 terms).
+        let mut rng = Rng::new(7);
+        let parts = vec![set(&mut rng, &[Some((4, 1))])];
+        let (merged, _) = reduce_grads(&parts).unwrap();
+        let (m, g) = (
+            merged[0].as_ref().unwrap(),
+            parts[0][0].as_ref().unwrap(),
+        );
+        for (a, b) in m.w.iter().zip(&g.w) {
+            assert_eq!(a.to_bits(), pim_add_f32(0.0, *b).to_bits());
+        }
+    }
+
+    #[test]
+    fn mismatched_shapes_error() {
+        let mut rng = Rng::new(9);
+        assert!(reduce_grads(&[]).is_err());
+        let a = set(&mut rng, &[Some((4, 2))]);
+        let b = set(&mut rng, &[Some((3, 2))]);
+        assert!(reduce_grads(&[a.clone(), b]).is_err());
+        let c = set(&mut rng, &[None]);
+        assert!(reduce_grads(&[a.clone(), c]).is_err());
+        let d = set(&mut rng, &[Some((4, 2)), None]);
+        assert!(reduce_grads(&[a, d]).is_err());
+    }
+}

@@ -39,6 +39,12 @@ pub struct RunConfig {
     /// Bit-level MAC validation waves per run (0 disables).
     pub deep_validate_waves: usize,
     pub threads: usize,
+    /// Modeled PIM chips each train step is data-parallel-sharded
+    /// across (1 = the single-chip engine).  The caller provisions the
+    /// runtime (`Runtime::set_shards`) before handing it to the
+    /// coordinator; the config records the knob so reports and ledger
+    /// cross-checks know which analytic model applies.
+    pub shards: usize,
 }
 
 impl Default for RunConfig {
@@ -52,6 +58,7 @@ impl Default for RunConfig {
             test_size: EVAL_BATCH,
             deep_validate_waves: 2,
             threads: 4,
+            shards: 1,
         }
     }
 }
@@ -324,6 +331,7 @@ mod tests {
     fn default_config_sane() {
         let c = RunConfig::default();
         assert!(c.steps > 0 && c.lr > 0.0 && c.threads > 0);
+        assert_eq!(c.shards, 1, "single-chip by default");
     }
 
     #[test]

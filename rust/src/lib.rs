@@ -27,6 +27,10 @@
 //!   engine ([`arch::gemm`]) that dense/conv functional traffic executes
 //!   through, and the training engine ([`arch::train`]) that lowers
 //!   backprop + SGD onto the same waves.
+//! * [`cluster`] — the sharded multi-chip cluster: data-parallel
+//!   training across N modeled chips with a priced, order-preserving
+//!   gradient all-reduce and a `cluster_step_cost` analytic cross-check
+//!   (bit-identical merged results for every shard count).
 //! * [`model`] / [`data`] — the LeNet-5 workload of §4 and a synthetic
 //!   MNIST-like corpus (see DESIGN.md for the substitution rationale).
 //! * [`runtime`] — the training runtime.  The default (offline) build is
@@ -43,6 +47,7 @@
 pub mod arch;
 pub mod bench;
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod data;

@@ -1,8 +1,9 @@
 //! `mram-pim` — leader binary: report generation, coordinated training,
 //! MAC cost queries and design-space sweeps.
 
-use mram_pim::arch::{AccelKind, Accelerator};
+use mram_pim::arch::{AccelKind, Accelerator, PipelineSchedule};
 use mram_pim::cli::{usage, Args};
+use mram_pim::cluster::{cluster_step_cost, verify_cluster_totals};
 use mram_pim::config::AccelConfig;
 use mram_pim::coordinator::{Coordinator, RunConfig};
 use mram_pim::floatpim::FloatPimCostModel;
@@ -84,7 +85,14 @@ fn cmd_train(args: &Args) -> mram_pim::Result<()> {
         test_size: 256,
         deep_validate_waves: if args.switch("no-deep-validate") { 0 } else { 2 },
         threads: args.usize_or("threads", 4)?,
+        shards: args.usize_or("shards", 1)?.max(1),
     };
+    if cfg.shards > TRAIN_BATCH {
+        return Err(mram_pim::Error::Config(format!(
+            "--shards {} exceeds the train batch of {TRAIN_BATCH}",
+            cfg.shards
+        )));
+    }
 
     // The default offline build loads the functional PIM runtime (real
     // training through the wave-parallel train engine, no artifacts
@@ -92,7 +100,23 @@ fn cmd_train(args: &Args) -> mram_pim::Result<()> {
     // AOT/XLA backend instead.
     let mut runtime = Runtime::load_dir(&artifacts)?;
     runtime.set_threads(cfg.threads);
+    runtime.set_shards(cfg.shards);
+    // The PJRT backend is single-device and ignores the knob — report
+    // (and cross-check) what the runtime actually provisioned.
+    let shards = runtime.shards();
     println!("runtime backend: {}", runtime.platform());
+    if shards > 1 {
+        println!(
+            "cluster: {shards} modeled PIM chips, data-parallel batch sharding \
+             with priced gradient all-reduce"
+        );
+    } else if cfg.shards > 1 {
+        println!(
+            "note: --shards {} ignored — the {} backend is single-device",
+            cfg.shards,
+            runtime.platform()
+        );
+    }
     let coord = Coordinator::new(runtime);
     println!(
         "training {} ({} params) for {} steps @ lr {} ...",
@@ -133,7 +157,7 @@ fn cmd_train(args: &Args) -> mram_pim::Result<()> {
         );
     }
     if let Some(f) = &report.functional {
-        report_functional_ledger(f, coord.network())?;
+        report_functional_ledger(f, coord.network(), shards)?;
     }
     println!(
         "final accuracy: {:.2}%  (wall {:.1}s)",
@@ -144,11 +168,13 @@ fn cmd_train(args: &Args) -> mram_pim::Result<()> {
 }
 
 /// Print the merged functional train ledger and cross-check it against
-/// the analytic workload/cost models — the functional engine and
-/// `training_work`/`train_step_cost` must never drift.
+/// the analytic models — `training_work`/`train_step_cost` for the
+/// single-chip engine, `cluster::cluster_step_cost` for a sharded run.
+/// The functional and analytic paths must never drift.
 fn report_functional_ledger(
     f: &mram_pim::arch::TrainTotals,
     net: &Network,
+    shards: usize,
 ) -> mram_pim::Result<()> {
     let steps = f.steps.max(1);
     println!("\nfunctional PIM ledger ({} train steps through the train engine):", f.steps);
@@ -165,6 +191,22 @@ fn report_functional_ledger(
         fmt_si(f.latency_s, "s"),
         fmt_si(f.energy_j, "J")
     );
+    if shards > 1 {
+        let cost = verify_cluster_totals(
+            f,
+            net,
+            TRAIN_BATCH,
+            shards,
+            FUNCTIONAL_LANES,
+            &FpCostModel::proposed_fp32(),
+        )?;
+        println!(
+            "  matches cluster::cluster_step_cost exactly ({shards} shards; \
+             gradient merge is {:.2}% of step latency)",
+            cost.reduce_overhead_frac() * 100.0
+        );
+        return Ok(());
+    }
     // `train_step_cost` prices exactly `training_work`'s MAC total, so
     // one shared predicate covers both analytic models.
     let accel = Accelerator::new(AccelKind::Proposed, FloatFormat::FP32, FUNCTIONAL_LANES);
@@ -266,9 +308,31 @@ fn cmd_sweep(args: &Args) -> mram_pim::Result<()> {
                 );
             }
         }
+        "shards" => {
+            // Cluster scale-out: per-step cost of the data-parallel
+            // schedule and the sharded layer pipeline, side by side.
+            let net = Network::lenet5();
+            let accel =
+                Accelerator::new(AccelKind::Proposed, FloatFormat::FP32, FUNCTIONAL_LANES);
+            let model = FpCostModel::proposed_fp32();
+            println!("shard-scaling sweep (LeNet-5 @ batch 32, {FUNCTIONAL_LANES} lanes):");
+            for shards in [1usize, 2, 4, 8] {
+                let c = cluster_step_cost(&net, TRAIN_BATCH, shards, FUNCTIONAL_LANES, &model)?;
+                let pipe = PipelineSchedule::build_sharded(&accel, &net, TRAIN_BATCH, 100, shards);
+                println!(
+                    "  shards {shards}: step latency {} energy {} (merge {:>5.2}% of step) | \
+                     pipelined bottleneck {} speedup {:.2}x",
+                    fmt_si(c.latency_s(), "s"),
+                    fmt_si(c.energy_j(), "J"),
+                    c.reduce_overhead_frac() * 100.0,
+                    fmt_si(pipe.bottleneck_s(), "s"),
+                    pipe.speedup(),
+                );
+            }
+        }
         other => {
             return Err(mram_pim::Error::Config(format!(
-                "unknown sweep {other:?} (align|formats|subarray)"
+                "unknown sweep {other:?} (align|formats|subarray|shards)"
             )))
         }
     }

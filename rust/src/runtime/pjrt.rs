@@ -156,6 +156,16 @@ impl Runtime {
     /// Host thread provisioning belongs to XLA on this backend —
     /// accepted for API parity with the functional runtime, ignored.
     pub fn set_threads(&mut self, _threads: usize) {}
+
+    /// Batch sharding is a functional-runtime concept (the modeled
+    /// multi-chip cluster); the XLA graph is single-device — accepted
+    /// for API parity, ignored.
+    pub fn set_shards(&mut self, _shards: usize) {}
+
+    /// Always 1: the XLA backend executes single-device.
+    pub fn shards(&self) -> usize {
+        1
+    }
 }
 
 /// Model parameters held as device literals between steps.

@@ -18,6 +18,7 @@ use std::sync::Mutex;
 use super::{HostTensor, FUNCTIONAL_LANES};
 use crate::arch::gemm::{LayerParams, NetworkParams};
 use crate::arch::train::{TrainEngine, TrainTotals};
+use crate::cluster::{ClusterConfig, ClusterEngine};
 use crate::fpu::softfloat::{pim_add_f32, pim_mul_f32};
 use crate::fpu::FpCostModel;
 use crate::model::{Layer, Network};
@@ -100,11 +101,15 @@ fn layer_bias_len(layer: &Layer) -> usize {
 }
 
 /// Functional PIM runtime: trains LeNet-5 through the wave-parallel
-/// train engine.  API-identical to the PJRT runtime.
+/// train engine — or, with `set_shards(N > 1)`, through the
+/// data-parallel [`ClusterEngine`] across `N` modeled chips.
+/// API-identical to the PJRT runtime.
 pub struct Runtime {
     dir: PathBuf,
     net: Network,
     engine: TrainEngine,
+    threads: usize,
+    shards: usize,
     totals: Mutex<TrainTotals>,
 }
 
@@ -120,6 +125,8 @@ impl Runtime {
             dir: dir.as_ref().to_path_buf(),
             net: Network::lenet5(),
             engine: TrainEngine::new(FpCostModel::proposed_fp32(), FUNCTIONAL_LANES, threads),
+            threads,
+            shards: 1,
             totals: Mutex::new(TrainTotals::default()),
         })
     }
@@ -129,7 +136,38 @@ impl Runtime {
     /// only host wall-clock changes.
     pub fn set_threads(&mut self, threads: usize) {
         let model = *self.engine.gemm().model();
-        self.engine = TrainEngine::new(model, FUNCTIONAL_LANES, threads.max(1));
+        self.threads = threads.max(1);
+        self.engine = TrainEngine::new(model, FUNCTIONAL_LANES, self.threads);
+    }
+
+    /// Shard every train step across `shards` modeled PIM chips (the
+    /// CLI `--shards` flag).  `1` is the single-chip engine, bit for
+    /// bit; `N > 1` runs the data-parallel cluster with its priced
+    /// gradient all-reduce, whose merged result is identical for every
+    /// shard count ≥ 2.  Host execution uses one scoped thread per chip
+    /// (the cluster's structure), each fanning over
+    /// `max(1, threads / shards)` intra-chip workers — so a shard count
+    /// above `--threads` oversubscribes the host by design; results are
+    /// unaffected either way.
+    pub fn set_shards(&mut self, shards: usize) {
+        self.shards = shards.max(1);
+    }
+
+    /// Modeled chips each train step is sharded across.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// The cluster engine the current `shards`/`threads` provisioning
+    /// implies (built on demand — construction is a few f64 copies).
+    fn cluster(&self) -> ClusterEngine {
+        let model = *self.engine.gemm().model();
+        let threads_per_shard = (self.threads / self.shards).max(1);
+        ClusterEngine::new(
+            model,
+            FUNCTIONAL_LANES,
+            ClusterConfig::new(self.shards, threads_per_shard),
+        )
     }
 
     pub fn platform(&self) -> String {
@@ -164,15 +202,24 @@ impl Runtime {
     ) -> Result<f32> {
         let batch = labels.len();
         let mut params = state_to_params(&self.net, state)?;
-        let r = self
-            .engine
-            .train_step(&self.net, &mut params, images, labels, batch, lr)?;
+        let loss = if self.shards > 1 {
+            let r = self
+                .cluster()
+                .train_step(&self.net, &mut params, images, labels, batch, lr)?;
+            r.absorb_into(&mut self.totals.lock().expect("totals lock poisoned"));
+            r.loss
+        } else {
+            let r = self
+                .engine
+                .train_step(&self.net, &mut params, images, labels, batch, lr)?;
+            self.totals
+                .lock()
+                .expect("totals lock poisoned")
+                .absorb(&r);
+            r.loss
+        };
         *state = params_to_state(&self.net, &params);
-        self.totals
-            .lock()
-            .expect("totals lock poisoned")
-            .absorb(&r);
-        Ok(r.loss)
+        Ok(loss)
     }
 
     /// Evaluate a batch: (mean loss, #correct as f32 — PJRT parity).
@@ -287,6 +334,39 @@ mod tests {
         assert_eq!(totals.total_macs(), 2 * work.total_macs());
         assert_eq!(totals.waves, 2 * work.mac_waves(FUNCTIONAL_LANES as u64));
         assert!(totals.matches_analytic(&Network::lenet5(), 4, FUNCTIONAL_LANES as u64));
+    }
+
+    #[test]
+    fn sharded_train_steps_run_and_ledger_matches_cluster_cost() {
+        use crate::cluster::cluster_step_cost;
+        let mut rt = Runtime::load_dir("artifacts").unwrap();
+        rt.set_threads(4);
+        rt.set_shards(4);
+        assert_eq!(rt.shards(), 4);
+        let mut data = Dataset::synthetic(32, 9);
+        let mut state = rt.init_params(9).unwrap();
+        let batch = 8;
+        for _ in 0..2 {
+            let b = data.next_batch(batch);
+            let loss = rt.train_step(&mut state, &b.images, &b.labels, 0.05).unwrap();
+            assert!(loss.is_finite() && loss > 0.0);
+        }
+        let totals = rt.functional_totals().expect("functional ledger");
+        assert_eq!(totals.steps, 2);
+        let cost = cluster_step_cost(
+            &Network::lenet5(),
+            batch,
+            4,
+            FUNCTIONAL_LANES,
+            &FpCostModel::proposed_fp32(),
+        )
+        .unwrap();
+        assert!(cost.matches_totals(&totals), "{totals:?} vs {cost:?}");
+        // The sharded run does the same MAC work as a single chip...
+        let work = Network::lenet5().training_work(batch);
+        assert_eq!(totals.total_macs(), 2 * work.total_macs());
+        // ...but not the same wave schedule (per-chip ceils + reduce).
+        assert!(!totals.matches_analytic(&Network::lenet5(), batch, FUNCTIONAL_LANES as u64));
     }
 
     #[test]

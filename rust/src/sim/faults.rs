@@ -24,7 +24,14 @@ pub struct Fault {
 }
 
 /// Deterministically sample `count` fault sites over an array.
+///
+/// A zero-sized array (or a zero count) has no sites to sample and
+/// returns an empty set — without the guard, `rng.below(0)` would clamp
+/// to `below(1)` and fabricate out-of-bounds faults at `(0, 0)`.
 pub fn sample_faults(rows: usize, cols: usize, count: usize, seed: u64) -> Vec<Fault> {
+    if rows == 0 || cols == 0 || count == 0 {
+        return Vec::new();
+    }
     let mut rng = Rng::new(seed.max(1));
     (0..count)
         .map(|_| Fault {
@@ -105,6 +112,29 @@ mod tests {
         assert_eq!(a.len(), 32);
         for (x, y) in a.iter().zip(&b) {
             assert_eq!((x.row, x.col, x.kind), (y.row, y.col, y.kind));
+        }
+        // Different seeds draw different site sets.
+        let c = sample_faults(1024, 1024, 32, 8);
+        assert!(
+            a.iter().zip(&c).any(|(x, y)| (x.row, x.col) != (y.row, y.col)),
+            "seed must matter"
+        );
+    }
+
+    #[test]
+    fn zero_sized_arrays_sample_no_faults() {
+        assert!(sample_faults(0, 1024, 8, 1).is_empty());
+        assert!(sample_faults(1024, 0, 8, 1).is_empty());
+        assert!(sample_faults(0, 0, 8, 1).is_empty());
+        assert!(sample_faults(1024, 1024, 0, 1).is_empty());
+    }
+
+    #[test]
+    fn sampled_sites_stay_in_bounds() {
+        for seed in 1..6u64 {
+            for f in sample_faults(17, 5, 64, seed) {
+                assert!(f.row < 17 && f.col < 5, "({}, {})", f.row, f.col);
+            }
         }
     }
 

@@ -1,0 +1,379 @@
+//! Cross-shard determinism suite (ISSUE 3): the sharded multi-chip
+//! cluster must be bit-reproducible — shards=1 is the PR 2 `TrainEngine`
+//! path exactly (anti-drift), shard counts ≥ 2 are bit-identical to
+//! each other (and, for dense MLPs, to the single chip too), the priced
+//! tree all-reduce equals the host `pim_add` chain element for element,
+//! the cluster ledger decomposes into per-shard + interconnect + reduce
+//! + update terms with nothing unaccounted, and a checkpoint round trip
+//! resumes bit-identically.  Everything runs in tier-1 `cargo test -q`.
+
+use mram_pim::arch::{LayerParams, NetworkParams, TrainEngine, TrainTotals};
+use mram_pim::cluster::{
+    cluster_step_cost, reduce_grads, ClusterConfig, ClusterEngine, GradSet, ShardPlan,
+};
+use mram_pim::coordinator::checkpoint::Checkpoint;
+use mram_pim::data::Dataset;
+use mram_pim::fpu::softfloat::pim_add_f32;
+use mram_pim::fpu::FpCostModel;
+use mram_pim::model::{Layer, Network};
+use mram_pim::prop::{check, Rng};
+use mram_pim::runtime::Runtime;
+
+const LANES: usize = 1024;
+
+fn mlp() -> Network {
+    Network {
+        name: "cluster-test-mlp",
+        input: (1, 4, 4),
+        layers: vec![
+            Layer::Dense { inp: 16, out: 12 },
+            Layer::Relu { units: 12 },
+            Layer::Dense { inp: 12, out: 6 },
+        ],
+    }
+}
+
+fn convnet() -> Network {
+    Network {
+        name: "cluster-test-conv",
+        input: (1, 6, 6),
+        layers: vec![
+            Layer::Conv2d {
+                in_ch: 1,
+                out_ch: 2,
+                kh: 3,
+                kw: 3,
+                in_h: 6,
+                in_w: 6,
+            },
+            Layer::Relu { units: 2 * 4 * 4 },
+            Layer::AvgPool2 {
+                ch: 2,
+                in_h: 4,
+                in_w: 4,
+            },
+            Layer::Dense { inp: 8, out: 4 },
+        ],
+    }
+}
+
+fn step_batches(net: &Network, batch: usize, steps: usize, seed: u64) -> Vec<(Vec<f32>, Vec<i32>)> {
+    let (c, h, w) = net.input;
+    let classes = net.layers.last().unwrap().out_units();
+    let mut rng = Rng::new(seed);
+    (0..steps)
+        .map(|_| {
+            (
+                (0..batch * c * h * w).map(|_| rng.f32_normal(1)).collect(),
+                (0..batch).map(|_| rng.below(classes as u64) as i32).collect(),
+            )
+        })
+        .collect()
+}
+
+fn param_bits(p: &NetworkParams) -> Vec<u32> {
+    p.layers
+        .iter()
+        .flatten()
+        .flat_map(|lp| lp.w.iter().chain(&lp.b).map(|v| v.to_bits()))
+        .collect()
+}
+
+/// Run `steps` cluster SGD steps; returns (weights, per-step losses,
+/// merged totals).
+fn run_cluster(
+    net: &Network,
+    shards: usize,
+    threads: usize,
+    batches: &[(Vec<f32>, Vec<i32>)],
+    batch: usize,
+    seed: u64,
+) -> (NetworkParams, Vec<u32>, TrainTotals) {
+    let eng = ClusterEngine::new(
+        FpCostModel::proposed_fp32(),
+        LANES,
+        ClusterConfig::new(shards, threads),
+    );
+    let mut params = NetworkParams::init(net, seed);
+    let mut totals = TrainTotals::default();
+    let mut losses = Vec::new();
+    for (x, labels) in batches {
+        let r = eng
+            .train_step(net, &mut params, x, labels, batch, 0.1)
+            .expect("cluster step");
+        losses.push(r.loss.to_bits());
+        r.absorb_into(&mut totals);
+    }
+    (params, losses, totals)
+}
+
+/// The single-chip reference: the PR 2 `TrainEngine` path.
+fn run_engine(
+    net: &Network,
+    threads: usize,
+    batches: &[(Vec<f32>, Vec<i32>)],
+    batch: usize,
+    seed: u64,
+) -> (NetworkParams, Vec<u32>, TrainTotals) {
+    let eng = TrainEngine::new(FpCostModel::proposed_fp32(), LANES, threads);
+    let mut params = NetworkParams::init(net, seed);
+    let mut totals = TrainTotals::default();
+    let mut losses = Vec::new();
+    for (x, labels) in batches {
+        let r = eng
+            .train_step(net, &mut params, x, labels, batch, 0.1)
+            .expect("train step");
+        losses.push(r.loss.to_bits());
+        totals.absorb(&r);
+    }
+    (params, losses, totals)
+}
+
+/// Anti-drift regression: the shards=1 cluster path over 3 SGD steps is
+/// the `TrainEngine` path exactly — weights, losses and the merged
+/// ledger, bit for bit — on both a dense MLP and a conv net.
+#[test]
+fn shards_1_matches_train_engine_exactly() {
+    for net in [mlp(), convnet()] {
+        let batch = 8;
+        let batches = step_batches(&net, batch, 3, 0xAB5E);
+        let (pc, lc, tc) = run_cluster(&net, 1, 2, &batches, batch, 0x5EED);
+        let (pe, le, te) = run_engine(&net, 2, &batches, batch, 0x5EED);
+        assert_eq!(lc, le, "{}: losses drifted", net.name);
+        assert_eq!(tc, te, "{}: merged ledgers drifted", net.name);
+        assert_eq!(param_bits(&pc), param_bits(&pe), "{}: weights drifted", net.name);
+    }
+}
+
+/// Cross-shard determinism on a dense MLP: shards ∈ {1, 2, 4} over
+/// 3 SGD steps produce bit-identical weights, losses, and MAC-identical
+/// merged ledgers — and all of them equal the `TrainEngine` path (a
+/// dense wgrad contraction *is* the per-sample fold).
+#[test]
+fn mlp_shards_1_2_4_bit_identical() {
+    let net = mlp();
+    let batch = 8;
+    let batches = step_batches(&net, batch, 3, 0x0D15);
+    let (pe, le, _) = run_engine(&net, 3, &batches, batch, 0xF1A7);
+    let want = param_bits(&pe);
+    for shards in [1usize, 2, 4] {
+        let (p, l, t) = run_cluster(&net, shards, 2, &batches, batch, 0xF1A7);
+        assert_eq!(l, le, "shards {shards}: losses drifted");
+        assert_eq!(param_bits(&p), want, "shards {shards}: weights drifted");
+        // MAC totals are shard-count invariant (waves are not: per-chip
+        // wave ceils + reduce waves depend on the split).
+        let work = net.training_work(batch);
+        assert_eq!(t.total_macs(), 3 * work.total_macs(), "shards {shards}");
+        assert_eq!(t.macs_wu, 3 * work.macs_wu, "shards {shards}");
+    }
+}
+
+/// Cross-shard determinism with conv layers: every shard count ≥ 2
+/// produces bit-identical weights and losses (the canonical per-sample
+/// merge order), equal MAC totals, and thread count never matters.
+#[test]
+fn conv_shards_2_4_8_bit_identical() {
+    let net = convnet();
+    let batch = 8;
+    let batches = step_batches(&net, batch, 3, 0xC0DE);
+    let mut reference: Option<(Vec<u32>, Vec<u32>)> = None;
+    for (shards, threads) in [(2usize, 1usize), (2, 4), (4, 2), (8, 1)] {
+        let (p, l, t) = run_cluster(&net, shards, threads, &batches, batch, 0xBEEF);
+        let bits = param_bits(&p);
+        match &reference {
+            None => reference = Some((bits, l)),
+            Some((wb, wl)) => {
+                assert_eq!(&bits, wb, "shards {shards} threads {threads}: weights");
+                assert_eq!(&l, wl, "shards {shards} threads {threads}: losses");
+            }
+        }
+        assert_eq!(t.total_macs(), 3 * net.training_work(batch).total_macs());
+    }
+}
+
+/// Same seed, same run — cluster steps are deterministic end to end.
+#[test]
+fn cluster_runs_are_repeatable() {
+    let net = convnet();
+    let batch = 6;
+    let batches = step_batches(&net, batch, 2, 7);
+    let a = run_cluster(&net, 3, 2, &batches, batch, 1);
+    let b = run_cluster(&net, 3, 2, &batches, batch, 1);
+    assert_eq!(param_bits(&a.0), param_bits(&b.0));
+    assert_eq!(a.1, b.1);
+    assert_eq!(a.2, b.2);
+}
+
+/// All-reduce property (the reduce spec): for random shard-gradient
+/// sets, the priced reduce equals the host-side `pim_add` chain element
+/// for element, with the add count accounted.
+#[test]
+fn prop_allreduce_equals_host_chain() {
+    check(
+        "tree-reduce of K shard gradients == host pim_add chain",
+        0xA11D,
+        40,
+        |r: &mut Rng| {
+            let k = 1 + r.below(6) as usize;
+            let w_len = 1 + r.below(12) as usize;
+            let b_len = 1 + r.below(4) as usize;
+            let parts: Vec<GradSet> = (0..k)
+                .map(|_| {
+                    vec![
+                        Some(LayerParams {
+                            w: (0..w_len).map(|_| r.f32_adversarial()).collect(),
+                            b: (0..b_len).map(|_| r.f32_normal(8)).collect(),
+                        }),
+                        None,
+                    ]
+                })
+                .collect();
+            (k, w_len, b_len, parts)
+        },
+        |(k, w_len, b_len, parts)| {
+            let (merged, adds) = reduce_grads(parts).map_err(|e| e.to_string())?;
+            if adds != (*k * (*w_len + *b_len)) as u64 {
+                return Err(format!("add count {adds}"));
+            }
+            let m = merged[0].as_ref().expect("layer 0 has params");
+            for i in 0..*w_len {
+                let mut acc = 0f32;
+                for p in parts {
+                    acc = pim_add_f32(acc, p[0].as_ref().unwrap().w[i]);
+                }
+                if m.w[i].to_bits() != acc.to_bits() {
+                    return Err(format!("w[{i}]: {} vs chain {acc}", m.w[i]));
+                }
+            }
+            for i in 0..*b_len {
+                let mut acc = 0f32;
+                for p in parts {
+                    acc = pim_add_f32(acc, p[0].as_ref().unwrap().b[i]);
+                }
+                if m.b[i].to_bits() != acc.to_bits() {
+                    return Err(format!("b[{i}]: {} vs chain {acc}", m.b[i]));
+                }
+            }
+            if merged[1].is_some() {
+                return Err("parameter-free layer grew params".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Ledger test: the functional cluster ledger equals the analytic
+/// `cluster_step_cost` exactly at shards ∈ {1, 2, 4}, and the analytic
+/// totals decompose into per-shard compute + interconnect + reduce +
+/// update with nothing unaccounted.
+#[test]
+fn cluster_ledger_decomposes_and_matches_analytic() {
+    let net = convnet();
+    let batch = 8;
+    let model = FpCostModel::proposed_fp32();
+    let batches = step_batches(&net, batch, 1, 0x1ED6);
+    for shards in [1usize, 2, 4] {
+        let eng = ClusterEngine::new(model, LANES, ClusterConfig::new(shards, 2));
+        let mut params = NetworkParams::init(&net, 3);
+        let (x, labels) = &batches[0];
+        let r = eng
+            .train_step(&net, &mut params, x, labels, batch, 0.05)
+            .expect("cluster step");
+        let cost = cluster_step_cost(&net, batch, shards, LANES, &model).unwrap();
+        assert_eq!(r.cost, cost, "shards {shards}: functional vs analytic");
+        // scalar ledger consistency
+        assert_eq!(r.waves, cost.total_waves(), "shards {shards}");
+        assert_eq!(r.total_macs(), cost.total_macs(), "shards {shards}");
+        assert_eq!(r.latency_s, cost.latency_s(), "shards {shards}");
+        assert_eq!(r.energy_j, cost.energy_j(), "shards {shards}");
+        // decomposition: totals are the sum of their terms, exactly
+        assert_eq!(
+            cost.latency_s(),
+            cost.compute_latency_s
+                + cost.link_latency_s
+                + cost.reduce_latency_s
+                + cost.update_latency_s,
+            "shards {shards}: latency terms unaccounted"
+        );
+        assert_eq!(
+            cost.energy_j(),
+            cost.compute_energy_j
+                + cost.link_energy_j
+                + cost.reduce_energy_j
+                + cost.update_energy_j,
+            "shards {shards}: energy terms unaccounted"
+        );
+        assert_eq!(
+            cost.total_waves(),
+            cost.shard_waves.iter().sum::<u64>() + cost.reduce_waves + cost.update_waves,
+            "shards {shards}: wave terms unaccounted"
+        );
+        // the functional MAC split feeds the same counts the analytic
+        // model derives from training_work
+        let work = net.training_work(batch);
+        assert_eq!(r.macs_fwd, work.macs_fwd, "shards {shards}");
+        assert_eq!(r.macs_bwd, work.macs_bwd, "shards {shards}");
+        assert_eq!(r.macs_wu, work.macs_wu, "shards {shards}");
+        if shards == 1 {
+            assert_eq!(cost.reduce_adds, 0);
+            assert_eq!(cost.link_bits, 0);
+        } else {
+            assert_eq!(cost.reduce_adds, (shards as u64 - 1) * work.macs_wu);
+            assert!(cost.reduce_energy_j > 0.0 && cost.link_energy_j > 0.0);
+        }
+    }
+}
+
+#[test]
+fn shard_plan_respects_batch_bounds() {
+    assert!(ShardPlan::split(32, 8).is_ok());
+    assert!(ShardPlan::split(4, 8).is_err());
+    assert!(ShardPlan::split(8, 0).is_err());
+    let plan = ShardPlan::split(7, 3).unwrap();
+    assert_eq!(plan.chunk_sizes(), vec![3, 2, 2]);
+    assert_eq!(plan.max_chunk(), 3);
+}
+
+/// Checkpoint round trip (coordinator/checkpoint): save → load →
+/// resume one step is bit-identical to an uninterrupted 2-step run.
+#[test]
+fn checkpoint_resume_is_bit_identical() {
+    let rt = Runtime::load_dir("artifacts").expect("functional runtime");
+    let mut data = Dataset::synthetic(64, 0x5A11);
+    let b0 = data.next_batch(8);
+    let b1 = data.next_batch(8);
+
+    // Uninterrupted: init → step(b0) → step(b1).
+    let mut straight = rt.init_params(21).unwrap();
+    rt.train_step(&mut straight, &b0.images, &b0.labels, 0.05).unwrap();
+    rt.train_step(&mut straight, &b1.images, &b1.labels, 0.05).unwrap();
+
+    // Interrupted: init → step(b0) → save → load → step(b1).
+    let mut resumed = rt.init_params(21).unwrap();
+    rt.train_step(&mut resumed, &b0.images, &b0.labels, 0.05).unwrap();
+    let dir = std::env::temp_dir().join("mram_pim_cluster_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("resume.ckpt");
+    Checkpoint::from_state(&resumed, 1).unwrap().save(&path).unwrap();
+    let restored = Checkpoint::load(&path).unwrap();
+    assert_eq!(restored.step, 1);
+    let mut resumed = restored.to_state().unwrap();
+    rt.train_step(&mut resumed, &b1.images, &b1.labels, 0.05).unwrap();
+    let _ = std::fs::remove_file(&path);
+
+    let a = straight.to_host().unwrap();
+    let b = resumed.to_host().unwrap();
+    assert_eq!(a.len(), b.len());
+    for (t, (ta, tb)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(ta.len(), tb.len(), "tensor {t}");
+        for (i, (x, y)) in ta.iter().zip(tb).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "tensor {t} [{i}]");
+        }
+    }
+
+    // And evaluation agrees bit for bit on the resumed state.
+    let (la, ca) = rt.eval(&straight, &b0.images, &b0.labels).unwrap();
+    let (lb, cb) = rt.eval(&resumed, &b0.images, &b0.labels).unwrap();
+    assert_eq!(la.to_bits(), lb.to_bits());
+    assert_eq!(ca, cb);
+}

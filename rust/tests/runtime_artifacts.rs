@@ -158,6 +158,7 @@ fn coordinator_short_run() {
             test_size: 256,
             deep_validate_waves: 1,
             threads: 2,
+            shards: 1,
         })
         .unwrap();
     assert!(report.deep_mismatches == 0);
