@@ -1,0 +1,197 @@
+"""Validation harness for the PR 4 zero-operand MAC fast path.
+
+Ports the bit-exact PIM softfloat reference (rust/src/fpu/softfloat.rs,
+seed reference implementations) to Python and exhaustively checks the
+host-side shortcut
+
+    mac(acc, w, x) == pim_add(acc, pim_mul(w, x))
+
+with the skip rule: when either operand is FTZ-zero-class (exponent
+field 0) and neither operand is Inf/NaN, the product is a signed zero;
+adding a signed zero to a normal-or-infinite acc is the identity, so the
+whole MAC can be skipped.  Run: python3 python/tests/validate_mac_skip.py
+"""
+
+QNAN = 0x7FC00000
+INF = 0x7F800000
+MIN_NORMAL_MANT = 0x00800000
+M32 = 0xFFFFFFFF
+
+
+def fields(bits):
+    return (bits >> 31) & 1, (bits >> 23) & 0xFF, bits & 0x7FFFFF
+
+
+def pim_mul_bits(abits, bbits):
+    sa, ea, fa = fields(abits)
+    sb, eb, fb = fields(bbits)
+    a_nan = ea == 255 and fa != 0
+    b_nan = eb == 255 and fb != 0
+    a_inf = ea == 255 and fa == 0
+    b_inf = eb == 255 and fb == 0
+    a_zero = ea == 0
+    b_zero = eb == 0
+    sign = ((sa ^ sb) << 31) & M32
+    if a_nan or b_nan or (a_inf and b_zero) or (b_inf and a_zero):
+        return QNAN
+    if a_inf or b_inf:
+        return sign | INF
+    if a_zero or b_zero:
+        return sign
+
+    ma = fa | MIN_NORMAL_MANT
+    mb = fb | MIN_NORMAL_MANT
+    p = ma * mb
+    top_set = (p >> 47) & 1
+    s = 23 + top_set
+    mant_preround = (p >> s) & 0xFFFFFF
+    guard = (p >> (s - 1)) & 1
+    sticky = (p & ((1 << (s - 1)) - 1)) != 0
+    round_up = guard == 1 and (sticky or (mant_preround & 1) == 1)
+    mant = mant_preround + (1 if round_up else 0)
+    e = ea + eb - 127 + top_set
+    e0 = e
+    if mant == 1 << 24:
+        mant >>= 1
+        e += 1
+    if e >= 255:
+        return sign | INF
+    if e <= 0:
+        if e0 == 0 and mant_preround == 0xFFFFFF:
+            return sign | MIN_NORMAL_MANT
+        return sign
+    return sign | (e << 23) | (mant & 0x7FFFFF)
+
+
+def pim_add_bits(abits, bbits):
+    sa, ea, fa = fields(abits)
+    sb, eb, fb = fields(bbits)
+    a_nan = ea == 255 and fa != 0
+    b_nan = eb == 255 and fb != 0
+    a_inf = ea == 255 and fa == 0
+    b_inf = eb == 255 and fb == 0
+    a_zero = ea == 0
+    b_zero = eb == 0
+    if a_nan or b_nan or (a_inf and b_inf and sa != sb):
+        return QNAN
+    if a_inf:
+        return abits
+    if b_inf:
+        return bbits
+    if a_zero and b_zero:
+        return ((sa & sb) << 31) & M32
+    if a_zero:
+        return bbits
+    if b_zero:
+        return abits
+
+    if (abits & 0x7FFFFFFF) >= (bbits & 0x7FFFFFFF):
+        xbits, ybits = abits, bbits
+    else:
+        xbits, ybits = bbits, abits
+    sx, ex, fx = fields(xbits)
+    _, ey, fy = fields(ybits)
+    mx = (fx | MIN_NORMAL_MANT) << 3
+    my = (fy | MIN_NORMAL_MANT) << 3
+    d = min(ex - ey, 27)
+    lost = my & ((1 << d) - 1)
+    my_al = (my >> d) | (1 if lost != 0 else 0)
+    subtract = sx != (ybits >> 31) & 1
+    total = (mx - my_al) if subtract else (mx + my_al)
+    if total == 0:
+        return 0
+    p = total.bit_length() - 1
+    if p == 27:
+        total_n, e0 = (total >> 1) | (total & 1), ex + 1
+    else:
+        total_n, e0 = total << (26 - p), ex - (26 - p)
+    kept_preround = total_n >> 3
+    rb = (total_n >> 2) & 1
+    st = (total_n & 3) != 0
+    round_up = rb == 1 and (st or (kept_preround & 1) == 1)
+    kept = kept_preround + (1 if round_up else 0)
+    e = e0
+    if kept == 1 << 24:
+        kept >>= 1
+        e += 1
+    sign = (sx << 31) & M32
+    if e >= 255:
+        return sign | INF
+    if e <= 0:
+        if e0 == 0 and kept_preround == 0xFFFFFF:
+            return sign | MIN_NORMAL_MANT
+        return sign
+    return sign | (e << 23) | (kept & 0x7FFFFF)
+
+
+def mac_reference(acc, w, x):
+    return pim_add_bits(acc, pim_mul_bits(w, x))
+
+
+def mac_fast(acc, w, x):
+    """The Rust pim_mac_acc_bits shortcut, mirrored exactly."""
+    EXP = 0x7F800000
+    we = w & EXP
+    xe = x & EXP
+    if (we == 0 or xe == 0) and we != EXP and xe != EXP:
+        # product is a signed zero
+        if (acc & EXP) != 0 and (acc & 0x7FFFFFFF) <= INF:
+            return acc  # normal or +-Inf acc: identity
+        return pim_add_bits(acc, (w ^ x) & 0x80000000)
+    return pim_add_bits(acc, pim_mul_bits(w, x))
+
+
+def edge_bit_patterns():
+    exps = [0, 1, 2, 127, 253, 254, 255]
+    mants = [0, 1, 0x400000, 0x7FFFFF]
+    out = []
+    for e in exps:
+        for m in mants:
+            for s in (0, 1):
+                out.append(((s << 31) | (e << 23) | m) & M32)
+    return out
+
+
+def main():
+    grid = edge_bit_patterns()
+    n = 0
+    for acc in grid:
+        for w in grid:
+            for x in grid:
+                got = mac_fast(acc, w, x)
+                want = mac_reference(acc, w, x)
+                assert got == want, (
+                    f"mismatch acc={acc:#010x} w={w:#010x} x={x:#010x}: "
+                    f"fast={got:#010x} ref={want:#010x}"
+                )
+                n += 1
+    print(f"edge-grid triples OK: {n}")
+
+    state = 0x5EEDF00DCAFED00D
+    skipped = 0
+    for i in range(300_000):
+        state ^= (state << 13) & 0xFFFFFFFFFFFFFFFF
+        state ^= state >> 7
+        state ^= (state << 17) & 0xFFFFFFFFFFFFFFFF
+        acc = state & M32
+        state ^= (state << 13) & 0xFFFFFFFFFFFFFFFF
+        state ^= state >> 7
+        state ^= (state << 17) & 0xFFFFFFFFFFFFFFFF
+        w = state & M32
+        # make zero-class x common: force exponent field to 0 on half
+        x = (state >> 32) & M32
+        if i % 2 == 0:
+            x &= 0x807FFFFF
+        got = mac_fast(acc, w, x)
+        want = mac_reference(acc, w, x)
+        assert got == want, (
+            f"random mismatch acc={acc:#010x} w={w:#010x} x={x:#010x}"
+        )
+        if (x & 0x7F800000) == 0:
+            skipped += 1
+    print(f"random triples OK (zero-class x in {skipped})")
+    print("mac skip rule is bit-identical")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,17 +1,45 @@
-//! Functional train-step bench: LeNet-5 fwd+bwd+update through the
-//! wave-parallel train engine, plus the forward-only pass for the
-//! fwd:bwd:update split that EXPERIMENTS.md compares against Fig. 6's
-//! phase ratios.
+//! Functional train-step bench + the PR 4 steady-state acceptance gate.
+//!
+//! Benches LeNet-5 fwd+bwd+update through the wave-parallel train
+//! engine in both execution modes:
+//!
+//! * **pooled** — persistent worker pool, scratch-arena recycling,
+//!   zero-operand MAC shortcut (the steady-state engine), and
+//! * **scoped** — the frozen PR 3 baseline (fresh `thread::scope`
+//!   workers per GEMM, fresh allocations per buffer, plain MAC chain),
+//!
+//! and asserts in-binary that the pooled engine beats the scoped
+//! baseline by ≥1.5× mean wall-clock at batch 32 / threads 4
+//! (`TRAIN_STEP_MIN_SPEEDUP` overrides the floor for noisy runners),
+//! that a steady-state pooled step performs **zero heap allocations**
+//! (counting global allocator; `TRAIN_STEP_ALLOC_TOLERANCE` overrides),
+//! and **zero thread spawns** (the pool's launch counter).
+//!
+//! Also reports the forward-only pass for the fwd:bwd:update split that
+//! EXPERIMENTS.md compares against Fig. 6's phase ratios.
 //!
 //! Run: `cargo bench --bench train_step` (add `-- --json` for the
-//! machine-readable `BENCH_train_step.json`; CI uploads the sidecar).
+//! machine-readable `BENCH_train_step.json`; CI uploads the sidecar and
+//! `tools/check_bench_regression.py` diffs it against the committed
+//! baseline).
 
-use mram_pim::arch::{NetworkParams, TrainEngine};
-use mram_pim::bench::{bench, emit};
+use mram_pim::arch::pool::worker_launches;
+use mram_pim::arch::{ExecMode, NetworkParams, TrainEngine};
+use mram_pim::bench::{bench, emit, heap_allocations, CountingAllocator};
 use mram_pim::data::Dataset;
 use mram_pim::fpu::FpCostModel;
 use mram_pim::model::Network;
 use mram_pim::prop::Rng;
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+fn env_f64(name: &str, default: f64) -> f64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
 
 fn main() {
     let net = Network::lenet5();
@@ -19,8 +47,11 @@ fn main() {
     let mut rng = Rng::new(0x7EA1);
     let data = Dataset::synthetic(batch, 0x7EA1).full_batch(batch);
     let labels: Vec<i32> = data.labels.clone();
-    // Jitter the images slightly per engine so no engine sees frozen
-    // activations the branch predictor could memorise.
+    // Jitter the images slightly per run so no engine sees frozen
+    // activations the branch predictor could memorise.  (This also
+    // de-sparsifies the input pixels, which makes the measurement
+    // *conservative* for the zero-operand MAC shortcut: only genuine
+    // ReLU/mask zeros inside the network still skip.)
     let images: Vec<f32> = data
         .images
         .iter()
@@ -30,58 +61,107 @@ fn main() {
     let work = net.training_work(batch);
     let mut results = Vec::new();
 
-    let e1 = TrainEngine::new(FpCostModel::proposed_fp32(), 32_768, 1);
-    let e4 = TrainEngine::new(FpCostModel::proposed_fp32(), 32_768, 4);
+    let pooled1 = TrainEngine::new(FpCostModel::proposed_fp32(), 32_768, 1);
+    let pooled4 = TrainEngine::new(FpCostModel::proposed_fp32(), 32_768, 4);
+    let scoped4 = TrainEngine::new_mode(
+        FpCostModel::proposed_fp32(),
+        32_768,
+        4,
+        ExecMode::Scoped,
+    );
 
     // Forward-only (inference) pass for the phase split.
     let params = NetworkParams::init(&net, 7);
     let r_fwd = bench(
-        &format!("lenet5 forward batch {batch} (threads 4)"),
+        &format!("lenet5 forward batch {batch} (threads 4, pooled)"),
         1,
         8,
         || {
-            std::hint::black_box(e4.gemm().forward(&net, &params, &images, batch));
+            let r = pooled4.gemm().forward(&net, &params, &images, batch);
+            std::hint::black_box(r.macs);
+            pooled4.gemm().recycle_buf(r.y);
         },
     );
 
-    // Full train step, threads 1 and 4.  Each iteration trains from a
-    // fresh init so the work is identical across iterations.
+    // Full train step: pooled threads 1 / 4, scoped threads 4 (the PR 3
+    // baseline).  Each iteration trains from a fresh init so the work
+    // is identical across iterations; the pooled loops recycle results
+    // (the steady-state contract), the scoped loop drops them (PR 3
+    // had nothing to recycle into).
     let r1 = bench(
-        &format!("lenet5 train step batch {batch} (threads 1)"),
+        &format!("lenet5 train step batch {batch} (threads 1, pooled)"),
         1,
         6,
         || {
             let mut p = NetworkParams::init(&net, 7);
-            let r = e1
+            let r = pooled1
                 .train_step(&net, &mut p, &images, &labels, batch, 0.05)
                 .expect("train step");
             std::hint::black_box(r.loss);
+            pooled1.recycle(r);
         },
     );
+    let spawns_before_pooled = worker_launches();
     let r4 = bench(
-        &format!("lenet5 train step batch {batch} (threads 4)"),
+        &format!("lenet5 train step batch {batch} (threads 4, pooled)"),
         1,
         6,
         || {
             let mut p = NetworkParams::init(&net, 7);
-            let r = e4
+            let r = pooled4
+                .train_step(&net, &mut p, &images, &labels, batch, 0.05)
+                .expect("train step");
+            std::hint::black_box(r.loss);
+            pooled4.recycle(r);
+        },
+    );
+    let pooled_spawns = worker_launches() - spawns_before_pooled;
+    let spawns_before_scoped = worker_launches();
+    let rs = bench(
+        &format!("lenet5 train step batch {batch} (threads 4, scoped PR3 baseline)"),
+        1,
+        6,
+        || {
+            let mut p = NetworkParams::init(&net, 7);
+            let r = scoped4
                 .train_step(&net, &mut p, &images, &labels, batch, 0.05)
                 .expect("train step");
             std::hint::black_box(r.loss);
         },
     );
+    let scoped_spawns = (worker_launches() - spawns_before_scoped) as f64 / 7.0; // warmup + 6 iters
+
+    // ---- steady-state allocation + spawn audit (pooled engine) ----
+    let mut p = NetworkParams::init(&net, 7);
+    for _ in 0..2 {
+        let r = pooled4
+            .train_step(&net, &mut p, &images, &labels, batch, 0.05)
+            .expect("warm step");
+        pooled4.recycle(r);
+    }
+    let spawns0 = worker_launches();
+    let allocs0 = heap_allocations();
+    let r = pooled4
+        .train_step(&net, &mut p, &images, &labels, batch, 0.05)
+        .expect("steady step");
+    let loss_steady = r.loss;
+    pooled4.recycle(r);
+    let steady_allocs = heap_allocations() - allocs0;
+    let steady_spawns = worker_launches() - spawns0;
+    std::hint::black_box(loss_steady);
 
     // One verified step for the ledger numbers the table quotes.
     let mut p = NetworkParams::init(&net, 7);
-    let step = e4
+    let step = pooled4
         .train_step(&net, &mut p, &images, &labels, batch, 0.05)
         .expect("train step");
     assert_eq!(step.total_macs(), work.total_macs(), "ledger drifted");
     assert_eq!(step.macs_bwd, 2 * step.macs_fwd);
 
     let macs = work.total_macs() as f64;
+    let speedup = rs.mean_ns / r4.mean_ns;
     println!(
-        "host throughput: {:.1}M train MACs/s (threads 4); fwd:bwd:update MAC split = 1 : {:.2} : {:.4}",
+        "host throughput: {:.1}M train MACs/s (threads 4, pooled); fwd:bwd:update MAC split = 1 : {:.2} : {:.4}",
         r4.throughput(macs) / 1e6,
         step.macs_bwd as f64 / step.macs_fwd as f64,
         step.macs_wu as f64 / step.macs_fwd as f64,
@@ -94,10 +174,36 @@ fn main() {
         "train step vs forward-only (threads 4): {:.2}x host wall (MAC model predicts ~3x + host bwd overheads)",
         r4.mean_ns / r_fwd.mean_ns
     );
+    println!(
+        "steady-state audit: {steady_allocs} heap allocations, {steady_spawns} thread spawns per pooled step \
+         (timed pooled loop spawned {pooled_spawns}); scoped baseline spawns {scoped_spawns:.0} threads/step"
+    );
+    println!(
+        "pooled vs scoped PR3 baseline @ batch {batch} threads 4: {speedup:.2}x  [acceptance: >=1.5x]"
+    );
 
     results.push(r_fwd);
     results.push(r1);
     results.push(r4);
+    results.push(rs);
     emit("train_step", &results);
+
+    // ---- acceptance gates ----
+    let min_speedup = env_f64("TRAIN_STEP_MIN_SPEEDUP", 1.5);
+    assert!(
+        speedup >= min_speedup,
+        "acceptance: pooled steady-state engine must be >={min_speedup}x the scoped PR3 \
+         baseline at batch 32 with threads = 4; measured {speedup:.2}x"
+    );
+    let alloc_tolerance = env_f64("TRAIN_STEP_ALLOC_TOLERANCE", 0.0) as u64;
+    assert!(
+        steady_allocs <= alloc_tolerance,
+        "acceptance: steady-state pooled train step must not touch the heap \
+         (measured {steady_allocs} allocations, tolerance {alloc_tolerance})"
+    );
+    assert_eq!(
+        steady_spawns, 0,
+        "acceptance: steady-state pooled train step must not spawn threads"
+    );
     println!("train_step OK");
 }

@@ -6,31 +6,62 @@
 //! inp] × [out, inp]ᵀ` product is `ceil(batch·out·inp / lanes)` waves of
 //! identical latency.  The software model mirrors that shape: the
 //! `batch × out` independent dot products are tiled into contiguous row
-//! waves and fanned out across `std::thread::scope` workers, each of
-//! which runs the scalar PIM fp32 chain (two roundings per MAC, FTZ) so
-//! the result is bit-identical to what the array — and the seed's
-//! single-threaded `pim_gemv` — would produce.  Per-thread MAC ledgers
-//! are merged at the end and priced once from the engine's *cached*
-//! [`FpCostModel`] (`t_mac`/`e_mac` are hoisted out of the per-call
-//! path; the seed rebuilt the model on every GEMV call).
+//! waves and fanned out across host worker threads, each of which runs
+//! the scalar PIM fp32 chain (two roundings per MAC, FTZ) so the result
+//! is bit-identical to what the array — and the seed's single-threaded
+//! `pim_gemv` — would produce.
+//!
+//! Two execution modes share the numerics (one row-wave partition, one
+//! accumulation order — `rust/tests/pool_arena.rs` pins them bit-equal):
+//!
+//! * [`ExecMode::Pooled`] (default): waves dispatch to a *persistent*
+//!   [`WorkerPool`] (zero thread spawns per call), output and scratch
+//!   buffers recycle through the engine's [`Arena`] (zero steady-state
+//!   heap allocations), and the dot-product chain takes the
+//!   zero-operand shortcut ([`pim_mac_acc_bits`]) that FTZ semantics
+//!   license — the PR 4 steady-state engine.
+//! * [`ExecMode::Scoped`]: the frozen PR 3 baseline — fresh
+//!   `thread::scope` workers per call, fresh allocations per buffer,
+//!   the plain two-call MAC chain — kept as the measured floor for the
+//!   `train_step` acceptance bench.
 //!
 //! [`GemmEngine::conv2d`] lowers `Layer::Conv2d` through im2col onto the
 //! same engine, and [`GemmEngine::forward`] runs a whole [`Network`]
 //! functionally — there is no scalar fallback for MAC-bearing layers.
+//! Per-MAC prices come from the engine's *cached* [`FpCostModel`]
+//! (`t_mac`/`e_mac` hoisted out of the per-call path).
 
+use std::sync::Arc;
 use std::thread;
 
-use crate::fpu::softfloat::{pim_add_f32, pim_mul_f32};
+use crate::arch::pool::{note_worker_launches, SendPtr, WorkerPool};
+use crate::arch::scratch::Arena;
+use crate::fpu::softfloat::{pim_add_f32, pim_mac_acc_bits, pim_mul_f32};
 use crate::fpu::{FloatFormat, FpCostModel};
 use crate::model::{Layer, Network};
 use crate::nvsim::OpCosts;
 use crate::prop::Rng;
 
+/// How the engine executes host-side work (values are identical in
+/// both; only wall-clock and allocator traffic differ).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecMode {
+    /// Persistent worker pool + scratch-arena recycling + zero-operand
+    /// MAC shortcut (the steady-state engine).
+    #[default]
+    Pooled,
+    /// Frozen PR 3 behaviour: per-call `thread::scope` spawns, fresh
+    /// allocations, plain MAC chain — the acceptance-bench baseline.
+    Scoped,
+}
+
 /// Result of a batched in-array GEMM: values + priced cost.
 #[derive(Debug, Clone)]
 pub struct GemmResult {
     /// Row-major `[batch, out]` (for [`GemmEngine::conv2d`]:
-    /// `[batch, out_ch, oh, ow]`).
+    /// `[batch, out_ch, oh, ow]`).  Owned by the caller; hand it back
+    /// via [`GemmEngine::recycle_buf`] to keep the steady state
+    /// allocation-free.
     pub y: Vec<f32>,
     pub macs: u64,
     /// Row-parallel array waves the schedule needed.
@@ -90,11 +121,32 @@ impl From<GemmResult> for LayerApply {
     }
 }
 
+/// A layer's input activations: borrowed when the caller retains the
+/// buffer (the tape's stash, the step's input batch), owned when the
+/// caller donates it — donated buffers either become the output
+/// in place (ReLU) or return to the arena, which is what makes the
+/// forward pass a two-buffer ping-pong instead of a clone chain.
+pub(crate) enum ActIn<'a> {
+    Borrowed(&'a [f32]),
+    Owned(Vec<f32>),
+}
+
+impl ActIn<'_> {
+    fn as_slice(&self) -> &[f32] {
+        match self {
+            ActIn::Borrowed(s) => s,
+            ActIn::Owned(v) => v,
+        }
+    }
+}
+
 /// The wave-parallel batched GEMM engine.
 ///
 /// Construct it once (per accelerator / per worker) and reuse it: the
-/// per-MAC prices are computed at construction, so the per-call path is
-/// pure arithmetic.
+/// per-MAC prices are computed at construction, the worker pool spawns
+/// its persistent threads at construction, and the scratch arena warms
+/// up over the first call with each shape — the steady-state per-call
+/// path is pure arithmetic.
 #[derive(Debug, Clone)]
 pub struct GemmEngine {
     model: FpCostModel,
@@ -105,6 +157,15 @@ pub struct GemmEngine {
     pub lanes: usize,
     /// Host worker threads the waves fan out across.
     pub threads: usize,
+    mode: ExecMode,
+    /// Persistent workers (`threads − 1` of them; empty when
+    /// `threads <= 1` or in scoped mode).  Clones share the pool —
+    /// concurrent use stays correct (jobs serialise); give each truly
+    /// concurrent user its own engine for parallel dispatch.
+    pool: Arc<WorkerPool>,
+    /// Recycled scratch buffers (shared by clones; pass-through in
+    /// scoped mode).
+    arena: Arc<Arena>,
 }
 
 impl GemmEngine {
@@ -112,14 +173,36 @@ impl GemmEngine {
         GemmEngine::from_model(FpCostModel::new(costs, fmt), lanes, threads)
     }
 
-    /// Build from an already-constructed (cached) cost model.
+    /// Build from an already-constructed (cached) cost model, in the
+    /// default pooled mode.
     pub fn from_model(model: FpCostModel, lanes: usize, threads: usize) -> Self {
+        GemmEngine::from_model_mode(model, lanes, threads, ExecMode::Pooled)
+    }
+
+    /// Build in an explicit execution mode ([`ExecMode::Scoped`] is the
+    /// frozen PR 3 baseline used by the acceptance bench and the
+    /// pooled-vs-scoped bit-identity tests).
+    pub fn from_model_mode(
+        model: FpCostModel,
+        lanes: usize,
+        threads: usize,
+        mode: ExecMode,
+    ) -> Self {
+        let threads = threads.max(1);
+        let pooled = mode == ExecMode::Pooled;
         GemmEngine {
             t_mac: model.t_mac(),
             e_mac: model.e_mac(),
             model,
             lanes: lanes.max(1),
-            threads: threads.max(1),
+            threads,
+            mode,
+            pool: Arc::new(WorkerPool::new(if pooled { threads } else { 1 })),
+            arena: Arc::new(if pooled {
+                Arena::pooled()
+            } else {
+                Arena::disabled()
+            }),
         }
     }
 
@@ -128,12 +211,35 @@ impl GemmEngine {
         &self.model
     }
 
+    /// The execution mode this engine runs in.
+    pub fn mode(&self) -> ExecMode {
+        self.mode
+    }
+
+    /// The engine's scratch arena (shared with the train engine).
+    pub(crate) fn arena(&self) -> &Arena {
+        &self.arena
+    }
+
+    /// Return a buffer previously handed out in a [`GemmResult`] /
+    /// [`ForwardResult`] to the scratch arena, keeping the steady
+    /// state allocation-free.  Dropping the buffer instead is always
+    /// correct — it just re-allocates next step.
+    pub fn recycle_buf(&self, v: Vec<f32>) {
+        self.arena.give(v);
+    }
+
     /// `Y = X Wᵀ (+ b)`, entirely with PIM fp32 semantics.
     ///
     /// `w` is row-major `[out, inp]`, `x_batch` row-major `[batch, inp]`,
     /// the result row-major `[batch, out]`.  Values are bit-identical to
-    /// the seed scalar chain regardless of `threads`; only wall-clock
-    /// changes.  Latency amortises over `lanes`, energy does not.
+    /// the seed scalar chain regardless of `threads` and mode; only
+    /// wall-clock changes.  Latency amortises over `lanes`, energy does
+    /// not.
+    ///
+    /// A degenerate product (`batch == 0` or `out == 0`) returns an
+    /// empty result with a zero ledger without touching the thread
+    /// pool or allocator (mirroring `sim/faults.rs`' zero-size guard).
     pub fn gemm(
         &self,
         w: &[f32],
@@ -150,27 +256,68 @@ impl GemmEngine {
         }
 
         let rows = batch * out; // independent dot products
-        let mut y = vec![0f32; rows];
-        let mut macs = 0u64;
-        let threads = self.threads.min(rows.max(1));
+        if rows == 0 {
+            // Zero-size guard: no rows means no waves, no MACs, no
+            // worker dispatch — an explicit empty result instead of a
+            // silent 1-thread pass over an empty slice.
+            return GemmResult {
+                y: Vec::new(),
+                macs: 0,
+                waves: 0,
+                latency_s: 0.0,
+                energy_j: 0.0,
+            };
+        }
+
+        let mut y = self.arena.take(rows);
+        let threads = self.threads.min(rows);
+        let macs;
         if threads <= 1 {
-            macs = gemm_rows(w, x_batch, bias, out, inp, 0, &mut y);
+            macs = match self.mode {
+                ExecMode::Pooled => gemm_rows_fast(w, x_batch, bias, out, inp, 0, &mut y),
+                ExecMode::Scoped => gemm_rows(w, x_batch, bias, out, inp, 0, &mut y),
+            };
         } else {
-            // Fan contiguous row waves out across scoped workers; each
-            // returns its local MAC ledger, merged after the join.
             let chunk = rows.div_ceil(threads);
-            thread::scope(|s| {
-                let mut handles = Vec::with_capacity(threads);
-                for (t, slice) in y.chunks_mut(chunk).enumerate() {
-                    let start = t * chunk;
-                    handles.push(
-                        s.spawn(move || gemm_rows(w, x_batch, bias, out, inp, start, slice)),
-                    );
+            match self.mode {
+                ExecMode::Pooled => {
+                    // One task per contiguous row wave (the same chunks
+                    // the scoped `chunks_mut` split produced), executed
+                    // on the persistent pool; each task owns a disjoint
+                    // row range of `y`.
+                    let tasks = rows.div_ceil(chunk);
+                    let yptr = SendPtr(y.as_mut_ptr());
+                    self.pool.run(tasks, |t| {
+                        let start = t * chunk;
+                        let len = chunk.min(rows - start);
+                        let slice =
+                            unsafe { std::slice::from_raw_parts_mut(yptr.at(start), len) };
+                        gemm_rows_fast(w, x_batch, bias, out, inp, start, slice);
+                    });
+                    // Each task's ledger is its row count × `inp`; the
+                    // deterministic sum over disjoint chunks.
+                    macs = (rows * inp) as u64;
                 }
-                for h in handles {
-                    macs += h.join().expect("gemm worker panicked");
+                ExecMode::Scoped => {
+                    // Frozen PR 3 fan-out: fresh scoped workers per
+                    // call, local ledgers merged after the join.
+                    let mut scoped_macs = 0u64;
+                    thread::scope(|s| {
+                        let mut handles = Vec::with_capacity(threads);
+                        for (t, slice) in y.chunks_mut(chunk).enumerate() {
+                            let start = t * chunk;
+                            handles.push(
+                                s.spawn(move || gemm_rows(w, x_batch, bias, out, inp, start, slice)),
+                            );
+                        }
+                        note_worker_launches(handles.len() as u64);
+                        for h in handles {
+                            scoped_macs += h.join().expect("gemm worker panicked");
+                        }
+                    });
+                    macs = scoped_macs;
                 }
-            });
+            }
         }
 
         let waves = macs.div_ceil(self.lanes as u64);
@@ -185,7 +332,8 @@ impl GemmEngine {
 
     /// `Layer::Conv2d` through the engine: im2col lowering, one batched
     /// GEMM over all `batch × oh × ow` output pixels, result re-laid-out
-    /// as the conventional `[batch, out_ch, oh, ow]`.
+    /// as the conventional `[batch, out_ch, oh, ow]`.  The patch matrix
+    /// and the GEMM-layout intermediate recycle through the arena.
     pub fn conv2d(
         &self,
         layer: &Layer,
@@ -217,7 +365,7 @@ impl GemmEngine {
         assert_eq!(w.len(), out_ch * k, "conv weight shape");
 
         // im2col: [batch * oh*ow, k] patch matrix.
-        let mut patches = vec![0f32; batch * ohw * k];
+        let mut patches = self.arena.take(batch * ohw * k);
         for b in 0..batch {
             im2col_into(
                 &x_batch[b * plane..(b + 1) * plane],
@@ -231,9 +379,10 @@ impl GemmEngine {
         }
 
         let r = self.gemm(w, &patches, bias, out_ch, k, batch * ohw);
+        self.arena.give(patches);
 
         // [batch*ohw, out_ch] -> [batch, out_ch, oh, ow].
-        let mut y = vec![0f32; batch * out_ch * ohw];
+        let mut y = self.arena.take(batch * out_ch * ohw);
         for b in 0..batch {
             for p in 0..ohw {
                 let src = (b * ohw + p) * out_ch;
@@ -242,6 +391,7 @@ impl GemmEngine {
                 }
             }
         }
+        self.arena.give(r.y);
         GemmResult {
             y,
             macs: r.macs,
@@ -256,25 +406,44 @@ impl GemmEngine {
     /// element-wise passes over the activations with PIM semantics.
     /// The single layer dispatch shared by [`GemmEngine::forward`] and
     /// the training tape.
+    ///
+    /// MAC-free ReLU runs **in place** on a donated (`ActIn::Owned`)
+    /// buffer — no copy at all; a borrowed input costs one copy into an
+    /// arena buffer.  Donated inputs of the other layers return to the
+    /// arena once consumed.
     pub(crate) fn apply_layer(
         &self,
         layer: &Layer,
         p: Option<&LayerParams>,
-        act: &[f32],
+        act: ActIn<'_>,
         batch: usize,
     ) -> LayerApply {
         match *layer {
             Layer::Conv2d { .. } => {
                 let lp = p.expect("conv layer params");
-                self.conv2d(layer, &lp.w, Some(&lp.b), act, batch).into()
+                let r = self.conv2d(layer, &lp.w, Some(&lp.b), act.as_slice(), batch);
+                if let ActIn::Owned(v) = act {
+                    self.arena.give(v);
+                }
+                r.into()
             }
             Layer::Dense { inp, out } => {
                 let lp = p.expect("dense layer params");
-                self.gemm(&lp.w, act, Some(&lp.b), out, inp, batch).into()
+                let r = self.gemm(&lp.w, act.as_slice(), Some(&lp.b), out, inp, batch);
+                if let ActIn::Owned(v) = act {
+                    self.arena.give(v);
+                }
+                r.into()
             }
             Layer::AvgPool2 { ch, in_h, in_w } => {
-                assert_eq!(act.len(), batch * ch * in_h * in_w);
-                let y = avg_pool2(act, batch * ch, in_h, in_w);
+                let x = act.as_slice();
+                assert_eq!(x.len(), batch * ch * in_h * in_w);
+                let planes = batch * ch;
+                let mut y = self.arena.take(planes * (in_h / 2) * (in_w / 2));
+                avg_pool2_into(x, planes, in_h, in_w, &mut y);
+                if let ActIn::Owned(v) = act {
+                    self.arena.give(v);
+                }
                 // 3 adds per pooled output ride along at ~1/20 MAC.
                 let adds = (layer.out_units() * batch) as u64 * 3;
                 LayerApply {
@@ -287,8 +456,17 @@ impl GemmEngine {
                 }
             }
             Layer::Relu { units } => {
-                assert_eq!(act.len(), batch * units);
-                let mut y = act.to_vec();
+                assert_eq!(act.as_slice().len(), batch * units);
+                let mut y = match act {
+                    // In place: the donated activations become the
+                    // output with zero copies.
+                    ActIn::Owned(v) => v,
+                    ActIn::Borrowed(s) => {
+                        let mut v = self.arena.take(s.len());
+                        v.copy_from_slice(s);
+                        v
+                    }
+                };
                 relu_inplace(&mut y);
                 LayerApply {
                     y,
@@ -303,7 +481,10 @@ impl GemmEngine {
     }
 
     /// Functional forward pass of a whole network, one
-    /// [`GemmEngine::apply_layer`] per layer.
+    /// [`GemmEngine::apply_layer`] per layer.  Activations ping-pong
+    /// through arena buffers (the input batch itself is only read, never
+    /// cloned); the returned `y` can go back via
+    /// [`GemmEngine::recycle_buf`].
     pub fn forward(
         &self,
         net: &Network,
@@ -315,20 +496,29 @@ impl GemmEngine {
         let (c0, h0, w0) = net.input;
         assert_eq!(x_batch.len(), batch * c0 * h0 * w0, "input batch shape");
 
-        let mut act = x_batch.to_vec();
+        let mut cur: Option<Vec<f32>> = None;
         let mut res = ForwardResult::default();
         for (layer, p) in net.layers.iter().zip(&params.layers) {
-            let a = self.apply_layer(layer, p.as_ref(), &act, batch);
+            let act = match cur.take() {
+                Some(v) => ActIn::Owned(v),
+                None => ActIn::Borrowed(x_batch),
+            };
+            let a = self.apply_layer(layer, p.as_ref(), act, batch);
             res.absorb(&a);
-            act = a.y;
+            cur = Some(a.y);
         }
-        res.y = act;
+        res.y = match cur {
+            Some(v) => v,
+            // Zero-layer network: the "activations" are the input.
+            None => x_batch.to_vec(),
+        };
         res
     }
 }
 
 /// Free-function entry point: one batched GEMM priced from a cached
-/// model.  `pim_gemv` is the batch-1 special case.
+/// model.  One-shot by design (builds a scoped engine per call — no
+/// persistent pool to keep); `pim_gemv` is the batch-1 special case.
 #[allow(clippy::too_many_arguments)]
 pub fn pim_gemm(
     w: &[f32],
@@ -341,11 +531,13 @@ pub fn pim_gemm(
     lanes: usize,
     threads: usize,
 ) -> GemmResult {
-    GemmEngine::from_model(*model, lanes, threads).gemm(w, x_batch, bias, out, inp, batch)
+    GemmEngine::from_model_mode(*model, lanes, threads, ExecMode::Scoped)
+        .gemm(w, x_batch, bias, out, inp, batch)
 }
 
 /// Compute rows `start..start+y.len()` of the flattened `[batch, out]`
 /// output; returns the MAC count of this wave (the worker's ledger).
+/// The frozen PR 3 chain (plain two-call MAC) — the scoped baseline.
 fn gemm_rows(
     w: &[f32],
     x: &[f32],
@@ -365,6 +557,33 @@ fn gemm_rows(
             acc = pim_add_f32(acc, pim_mul_f32(wrow[i], xrow[i]));
         }
         *slot = acc;
+    }
+    (y.len() * inp) as u64
+}
+
+/// [`gemm_rows`] with the zero-operand MAC shortcut
+/// ([`pim_mac_acc_bits`]) — bit-identical values (pinned by the
+/// softfloat triple-grid test and the pooled-vs-scoped suite), large
+/// host-side savings on ReLU-sparse training traffic.
+fn gemm_rows_fast(
+    w: &[f32],
+    x: &[f32],
+    bias: Option<&[f32]>,
+    out: usize,
+    inp: usize,
+    start: usize,
+    y: &mut [f32],
+) -> u64 {
+    for (j, slot) in y.iter_mut().enumerate() {
+        let r = start + j;
+        let (b, o) = (r / out, r % out);
+        let wrow = &w[o * inp..(o + 1) * inp];
+        let xrow = &x[b * inp..(b + 1) * inp];
+        let mut acc = bias.map(|bb| bb[o].to_bits()).unwrap_or(0);
+        for (&wv, &xv) in wrow.iter().zip(xrow) {
+            acc = pim_mac_acc_bits(acc, wv.to_bits(), xv.to_bits());
+        }
+        *slot = f32::from_bits(acc);
     }
     (y.len() * inp) as u64
 }
@@ -422,10 +641,11 @@ pub(crate) fn relu_inplace(act: &mut [f32]) {
 }
 
 /// 2×2 average pooling (stride 2) over `planes` independent `[h, w]`
-/// planes, through the PIM datapath (3 adds + one ×0.25 per output).
-pub(crate) fn avg_pool2(x: &[f32], planes: usize, in_h: usize, in_w: usize) -> Vec<f32> {
+/// planes, through the PIM datapath (3 adds + one ×0.25 per output),
+/// written into a zeroed `y` of `planes * (in_h/2) * (in_w/2)`.
+pub(crate) fn avg_pool2_into(x: &[f32], planes: usize, in_h: usize, in_w: usize, y: &mut [f32]) {
     let (oh, ow) = (in_h / 2, in_w / 2);
-    let mut y = vec![0f32; planes * oh * ow];
+    debug_assert_eq!(y.len(), planes * oh * ow);
     for p in 0..planes {
         let src = &x[p * in_h * in_w..(p + 1) * in_h * in_w];
         let dst = &mut y[p * oh * ow..(p + 1) * oh * ow];
@@ -440,7 +660,6 @@ pub(crate) fn avg_pool2(x: &[f32], planes: usize, in_h: usize, in_w: usize) -> V
             }
         }
     }
-    y
 }
 
 /// Parameters of one MAC-bearing layer: row-major weights + bias.
@@ -515,6 +734,15 @@ mod tests {
         )
     }
 
+    fn scoped_engine(threads: usize) -> GemmEngine {
+        GemmEngine::from_model_mode(
+            FpCostModel::new(OpCosts::proposed_default(), FloatFormat::FP32),
+            1024,
+            threads,
+            ExecMode::Scoped,
+        )
+    }
+
     fn host_chain(w: &[f32], x: &[f32], bias: Option<&[f32]>, o: usize, inp: usize) -> f32 {
         let mut acc = bias.map(|b| b[o]).unwrap_or(0.0);
         for i in 0..inp {
@@ -549,20 +777,96 @@ mod tests {
     }
 
     #[test]
-    fn thread_count_never_changes_bits() {
+    fn thread_count_and_mode_never_change_bits() {
         let mut rng = Rng::new(0x7412);
         let (out, inp, batch) = (13, 29, 4);
         let w = rand_vec(&mut rng, out * inp, 6);
         let x = rand_vec(&mut rng, batch * inp, 6);
         let base = engine(1).gemm(&w, &x, None, out, inp, batch);
         for threads in [2, 3, 8, 64] {
-            let r = engine(threads).gemm(&w, &x, None, out, inp, batch);
-            assert_eq!(r.y.len(), base.y.len());
-            for (a, b) in r.y.iter().zip(&base.y) {
-                assert_eq!(a.to_bits(), b.to_bits(), "threads={threads}");
+            for eng in [engine(threads), scoped_engine(threads)] {
+                let r = eng.gemm(&w, &x, None, out, inp, batch);
+                assert_eq!(r.y.len(), base.y.len());
+                for (a, b) in r.y.iter().zip(&base.y) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "threads={threads} {:?}", eng.mode());
+                }
+                assert_eq!(r.macs, base.macs);
+                assert_eq!(r.waves, base.waves);
             }
-            assert_eq!(r.macs, base.macs);
-            assert_eq!(r.waves, base.waves);
+        }
+    }
+
+    #[test]
+    fn sparse_inputs_stay_bit_identical_across_modes() {
+        // ReLU-like traffic: many exact zeros (the fast path's skip
+        // case), some subnormals (FTZ zero-class), some negatives.
+        let mut rng = Rng::new(0x2E80);
+        let (out, inp, batch) = (7, 53, 6);
+        let mut w = rand_vec(&mut rng, out * inp, 4);
+        let mut x = rand_vec(&mut rng, batch * inp, 4);
+        for (i, v) in x.iter_mut().enumerate() {
+            if i % 2 == 0 {
+                *v = 0.0;
+            } else if i % 7 == 0 {
+                *v = -0.0;
+            } else if i % 11 == 0 {
+                *v = 1e-40; // subnormal: zero-class under FTZ
+            }
+        }
+        for (i, v) in w.iter_mut().enumerate() {
+            if i % 3 == 0 {
+                *v = 0.0;
+            }
+        }
+        let pooled = engine(4).gemm(&w, &x, None, out, inp, batch);
+        let scoped = scoped_engine(4).gemm(&w, &x, None, out, inp, batch);
+        for (a, b) in pooled.y.iter().zip(&scoped.y) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // and against the host FTZ chain
+        for bi in 0..batch {
+            for o in 0..out {
+                let want = host_chain(&w, &x[bi * inp..(bi + 1) * inp], None, o, inp);
+                assert_eq!(pooled.y[bi * out + o].to_bits(), want.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn zero_size_gemm_returns_zero_ledger() {
+        let eng = engine(4);
+        // batch == 0
+        let r = eng.gemm(&[1.0, 2.0], &[], None, 1, 2, 0);
+        assert!(r.y.is_empty());
+        assert_eq!((r.macs, r.waves), (0, 0));
+        assert_eq!(r.latency_s, 0.0);
+        assert_eq!(r.energy_j, 0.0);
+        // out == 0
+        let r = eng.gemm(&[], &[1.0, 2.0, 3.0], None, 0, 3, 1);
+        assert!(r.y.is_empty());
+        assert_eq!((r.macs, r.waves), (0, 0));
+        // scoped mode takes the same guard
+        let r = scoped_engine(2).gemm(&[], &[], None, 0, 5, 0);
+        assert!(r.y.is_empty());
+        assert_eq!((r.macs, r.waves), (0, 0));
+    }
+
+    #[test]
+    fn gemm_engine_reuses_buffers_across_calls() {
+        let mut rng = Rng::new(0xA3A);
+        let (out, inp, batch) = (6, 17, 3);
+        let w = rand_vec(&mut rng, out * inp, 3);
+        let x = rand_vec(&mut rng, batch * inp, 3);
+        let eng = engine(2);
+        let r1 = eng.gemm(&w, &x, None, out, inp, batch);
+        let first = r1.y.clone();
+        let p1 = r1.y.as_ptr();
+        eng.recycle_buf(r1.y);
+        let r2 = eng.gemm(&w, &x, None, out, inp, batch);
+        // same allocation came back, same bits in it
+        assert_eq!(r2.y.as_ptr(), p1);
+        for (a, b) in r2.y.iter().zip(&first) {
+            assert_eq!(a.to_bits(), b.to_bits());
         }
     }
 
@@ -659,6 +963,51 @@ mod tests {
         let fwd_per_sample: u64 = net.layers.iter().map(|l| l.macs_fwd()).sum();
         assert_eq!(r.macs, fwd_per_sample * batch as u64);
         assert!(r.latency_s > 0.0 && r.energy_j > 0.0);
+    }
+
+    #[test]
+    fn forward_is_mode_invariant_on_lenet5() {
+        let net = Network::lenet5();
+        let params = NetworkParams::init(&net, 21);
+        let batch = 2;
+        let mut rng = Rng::new(0xBEE);
+        let x: Vec<f32> = (0..batch * 784)
+            .map(|_| rng.f32_normal(1).max(0.0)) // some exact zeros
+            .collect();
+        let a = engine(4).forward(&net, &params, &x, batch);
+        let b = scoped_engine(1).forward(&net, &params, &x, batch);
+        assert_eq!(a.y.len(), b.y.len());
+        for (p, q) in a.y.iter().zip(&b.y) {
+            assert_eq!(p.to_bits(), q.to_bits());
+        }
+        assert_eq!(a.macs, b.macs);
+        assert_eq!(a.waves, b.waves);
+        assert_eq!(a.gemm_layers, b.gemm_layers);
+    }
+
+    #[test]
+    fn relu_first_network_borrows_then_copies() {
+        // A network whose very first layer is MAC-free ReLU exercises
+        // the Borrowed→copy path of the in-place dispatch.
+        let net = Network {
+            name: "relu-first",
+            input: (1, 1, 6),
+            layers: vec![
+                Layer::Relu { units: 6 },
+                Layer::Dense { inp: 6, out: 3 },
+            ],
+        };
+        let params = NetworkParams::init(&net, 3);
+        let x = vec![-1.0f32, 2.0, -0.0, 0.5, f32::NAN, -3.0];
+        let r = engine(2).forward(&net, &params, &x, 1);
+        assert_eq!(r.y.len(), 3);
+        assert!(r.y.iter().all(|v| v.is_finite()));
+        // the input batch itself is untouched
+        assert!(x[4].is_nan());
+        let s = scoped_engine(1).forward(&net, &params, &x, 1);
+        for (a, b) in r.y.iter().zip(&s.y) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

@@ -8,12 +8,18 @@ pub mod accel;
 pub mod gemm;
 pub mod gemv;
 pub mod mapper;
+pub mod pool;
 pub mod schedule;
+pub mod scratch;
 pub mod tile;
 pub mod train;
 
 pub use accel::{Accelerator, AccelKind, RunCost};
-pub use gemm::{im2col, pim_gemm, ForwardResult, GemmEngine, GemmResult, LayerParams, NetworkParams};
+pub use gemm::{
+    im2col, pim_gemm, ExecMode, ForwardResult, GemmEngine, GemmResult, LayerParams, NetworkParams,
+};
+pub use pool::{worker_launches, WorkerPool};
+pub use scratch::Arena;
 pub use gemv::{pim_gemv, GemvResult};
 pub use mapper::{MappingPlan, OURS_LANE_COLS, FLOATPIM_LANE_COLS};
 pub use schedule::PipelineSchedule;

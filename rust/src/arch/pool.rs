@@ -1,0 +1,368 @@
+//! Persistent host worker pool for the wave-parallel engines.
+//!
+//! PR 1–3 fanned every batched GEMM (and every cluster step) out over
+//! fresh `std::thread::scope` workers: correct, but the steady-state
+//! training loop paid thread creation + teardown on *every* GEMM call
+//! (48 spawns per LeNet-5 train step at `threads = 4`).  The modeled
+//! hardware amortises its setup across an entire epoch; the host model
+//! should too.  [`WorkerPool`] spawns its workers once, parks them on a
+//! condvar, and dispatches *jobs* — a borrowed `Fn(usize)` closure plus
+//! a task count — with the caller thread participating as the Nth
+//! worker, so a pool built for `threads` host threads spawns exactly
+//! `threads − 1` OS threads over its whole lifetime.
+//!
+//! **Determinism.**  The pool does not decide the work partition — the
+//! caller does (the GEMM engine derives the same contiguous row-wave
+//! chunks the scoped path's `chunks_mut` produced, and passes one task
+//! per chunk).  Tasks are claimed from an atomic counter, so *which*
+//! thread executes a chunk is scheduling-dependent, but every chunk is
+//! executed exactly once over a caller-chosen disjoint range — values
+//! are bit-identical to the scoped path by construction
+//! (`rust/tests/pool_arena.rs` pins pooled ≡ scoped across thread
+//! counts).
+//!
+//! **Safety.**  `run` erases the closure's lifetime to hand it to the
+//! long-lived workers; soundness rests on `run` never returning (and
+//! never unwinding) before every worker has finished the job — the
+//! completion wait happens in a drop guard, so even a panicking task
+//! cannot leave a worker holding a dangling closure pointer.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Cumulative count of OS worker threads launched by the engines — the
+/// pool's persistent workers *and* the scoped baseline's per-call scope
+/// spawns both count, so the train-step bench can report "thread
+/// launches per step" for either mode.
+static WORKER_LAUNCHES: AtomicU64 = AtomicU64::new(0);
+
+/// Total engine worker-thread launches so far (see [`WORKER_LAUNCHES`]).
+pub fn worker_launches() -> u64 {
+    WORKER_LAUNCHES.load(Ordering::Relaxed)
+}
+
+/// Record `n` worker-thread launches (used by the scoped baseline's
+/// per-call `thread::scope` fan-out; the pool records its own).
+pub fn note_worker_launches(n: u64) {
+    WORKER_LAUNCHES.fetch_add(n, Ordering::Relaxed);
+}
+
+/// The current job: a lifetime-erased `Fn(usize)` and its task count.
+#[derive(Clone, Copy)]
+struct Job {
+    f: *const (dyn Fn(usize) + Sync + 'static),
+    tasks: usize,
+}
+
+// The raw closure pointer crosses threads only between `run`'s publish
+// and its completion wait, during which the closure is alive and
+// `Sync`; the pointer itself is inert data.
+unsafe impl Send for Job {}
+
+struct State {
+    /// Monotonic job id; a worker sleeps until it changes.
+    epoch: u64,
+    job: Option<Job>,
+    /// Workers still inside the current job (for the completion wait).
+    busy: usize,
+    /// A task panicked (re-raised on the calling thread).
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Signals workers: new job or shutdown.
+    work: Condvar,
+    /// Signals the caller: all workers left the job.
+    done: Condvar,
+    /// Next unclaimed task index of the current job.
+    next: AtomicUsize,
+}
+
+/// A fixed-size pool of persistent worker threads (see module docs).
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    /// Serialises concurrent `run` calls (one job at a time; callers
+    /// queue on this lock — engine clones sharing a pool stay correct,
+    /// they just don't overlap).
+    run_lock: Mutex<()>,
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool")
+            .field("workers", &self.workers.len())
+            .finish()
+    }
+}
+
+impl WorkerPool {
+    /// A pool for `threads` host threads: spawns `threads − 1`
+    /// persistent workers (the calling thread is the Nth executor).
+    /// `threads <= 1` spawns nothing and `run` executes inline.
+    pub fn new(threads: usize) -> WorkerPool {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                epoch: 0,
+                job: None,
+                busy: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            next: AtomicUsize::new(0),
+        });
+        let n = threads.saturating_sub(1);
+        let mut workers = Vec::with_capacity(n);
+        for _ in 0..n {
+            let sh = Arc::clone(&shared);
+            workers.push(std::thread::spawn(move || worker_loop(&sh)));
+        }
+        WORKER_LAUNCHES.fetch_add(n as u64, Ordering::Relaxed);
+        WorkerPool {
+            shared,
+            workers,
+            run_lock: Mutex::new(()),
+        }
+    }
+
+    /// Persistent worker threads this pool owns (`threads − 1`).
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Execute `f(0), f(1), …, f(tasks − 1)`, each exactly once, across
+    /// the pool's workers and the calling thread; returns when all
+    /// tasks completed.  Tasks must be independent (they run
+    /// concurrently in arbitrary order).  Panics if a task panicked.
+    ///
+    /// No allocation, no thread spawn: the closure is passed to the
+    /// parked workers by reference.
+    pub fn run<F: Fn(usize) + Sync>(&self, tasks: usize, f: F) {
+        if tasks == 0 {
+            return;
+        }
+        if self.workers.is_empty() || tasks == 1 {
+            for t in 0..tasks {
+                f(t);
+            }
+            return;
+        }
+        // A panicking task unwinds through `run` while this guard is
+        // held, poisoning the lock; the pool itself stays consistent
+        // (FinishGuard drained the job), so recover instead of
+        // bricking every later `run` on the shared pool.
+        let _serial = self
+            .run_lock
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+
+        // Erase the closure's lifetime for the worker threads.  Sound
+        // because `FinishGuard` below blocks (even on unwind) until
+        // every worker has left the job.
+        let obj: &(dyn Fn(usize) + Sync) = &f;
+        let obj: &'static (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(obj)
+        };
+        {
+            let mut st = self.shared.state.lock().expect("pool state poisoned");
+            self.shared.next.store(0, Ordering::Relaxed);
+            st.job = Some(Job { f: obj, tasks });
+            st.epoch += 1;
+            st.busy = self.workers.len();
+            st.panicked = false;
+            self.shared.work.notify_all();
+        }
+
+        struct FinishGuard<'a>(&'a Shared);
+        impl Drop for FinishGuard<'_> {
+            fn drop(&mut self) {
+                let mut st = self.0.state.lock().expect("pool state poisoned");
+                while st.busy > 0 {
+                    st = self.0.done.wait(st).expect("pool state poisoned");
+                }
+                st.job = None;
+            }
+        }
+        let guard = FinishGuard(&self.shared);
+
+        // The caller is the Nth executor.
+        loop {
+            let t = self.shared.next.fetch_add(1, Ordering::Relaxed);
+            if t >= tasks {
+                break;
+            }
+            f(t);
+        }
+        drop(guard);
+        let panicked = self
+            .shared
+            .state
+            .lock()
+            .expect("pool state poisoned")
+            .panicked;
+        assert!(!panicked, "pool worker task panicked");
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().expect("pool state poisoned");
+            st.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(sh: &Shared) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = sh.state.lock().expect("pool state poisoned");
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                match st.job {
+                    Some(job) if st.epoch != seen => {
+                        seen = st.epoch;
+                        break job;
+                    }
+                    _ => st = sh.work.wait(st).expect("pool state poisoned"),
+                }
+            }
+        };
+        // `job.f` is alive until every worker reports done (see
+        // `FinishGuard` in `run`).
+        let f = unsafe { &*job.f };
+        let mut panicked = false;
+        loop {
+            let t = sh.next.fetch_add(1, Ordering::Relaxed);
+            if t >= job.tasks {
+                break;
+            }
+            if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(t))).is_err() {
+                panicked = true;
+            }
+        }
+        let mut st = sh.state.lock().expect("pool state poisoned");
+        if panicked {
+            st.panicked = true;
+        }
+        st.busy -= 1;
+        if st.busy == 0 {
+            sh.done.notify_all();
+        }
+    }
+}
+
+/// A raw mutable pointer that may cross threads; the user guarantees
+/// disjoint access (the GEMM engine hands each task a disjoint row
+/// range of one output buffer).
+///
+/// Access goes through [`SendPtr::at`] so closures capture the whole
+/// wrapper (which is `Sync`) rather than disjointly capturing the raw
+/// pointer field (which is not).
+pub(crate) struct SendPtr<T>(pub *mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    /// The wrapped pointer offset by `i` elements.
+    ///
+    /// # Safety
+    /// Same contract as `pointer::add`: the offset must stay within
+    /// the originally allocated object.
+    pub unsafe fn at(&self, i: usize) -> *mut T {
+        self.0.add(i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn runs_every_task_exactly_once() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.workers(), 3);
+        let hits: Vec<AtomicU32> = (0..97).map(|_| AtomicU32::new(0)).collect();
+        for _ in 0..50 {
+            pool.run(hits.len(), |t| {
+                hits[t].fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        for (t, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 50, "task {t}");
+        }
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline_in_order() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.workers(), 0);
+        let order = Mutex::new(Vec::new());
+        pool.run(5, |t| order.lock().unwrap().push(t));
+        assert_eq!(*order.lock().unwrap(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn zero_tasks_is_a_no_op() {
+        let pool = WorkerPool::new(3);
+        pool.run(0, |_| panic!("must not run"));
+    }
+
+    #[test]
+    fn disjoint_writes_land() {
+        let pool = WorkerPool::new(4);
+        let mut y = vec![0u64; 1000];
+        let ptr = SendPtr(y.as_mut_ptr());
+        pool.run(10, |t| {
+            let chunk = unsafe { std::slice::from_raw_parts_mut(ptr.at(t * 100), 100) };
+            for (i, slot) in chunk.iter_mut().enumerate() {
+                *slot = (t * 100 + i) as u64;
+            }
+        });
+        for (i, &v) in y.iter().enumerate() {
+            assert_eq!(v, i as u64);
+        }
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(3);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(16, |t| {
+                if t == 7 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err());
+        // the pool is still usable after a task panic
+        let hits: Vec<AtomicU32> = (0..8).map(|_| AtomicU32::new(0)).collect();
+        pool.run(8, |t| {
+            hits[t].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn launch_counter_tracks_spawns() {
+        let before = worker_launches();
+        let pool = WorkerPool::new(5);
+        assert_eq!(pool.workers(), 4);
+        assert!(worker_launches() >= before + 4);
+        note_worker_launches(2);
+        assert!(worker_launches() >= before + 6);
+    }
+}

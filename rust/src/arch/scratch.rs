@@ -1,0 +1,186 @@
+//! Reusable scratch buffers for the steady-state training loop.
+//!
+//! Every intermediate the engines need — im2col patch matrices,
+//! transposed GEMM operands, ping-pong activation buffers, the backward
+//! tape, delta chains, gradient accumulators — recurs with identical
+//! shapes on every train step.  PR 1–3 allocated (and page faulted)
+//! each of them freshly per step; [`Arena`] recycles them instead: a
+//! size-keyed free list of `Vec<f32>` buffers, so after one warm-up
+//! step the hot loop touches the heap allocator *zero* times
+//! (`rust/tests/zero_alloc.rs` asserts this with a counting global
+//! allocator).
+//!
+//! **Bit-safety.**  Recycled buffers are re-zeroed on `take`, so every
+//! consumer sees exactly the `vec![0f32; n]` contents the allocating
+//! path produced — accumulating consumers (col2im, bias-gradient sums)
+//! and partially-written consumers (odd-sized pooling planes) are
+//! bit-identical by construction.  The memset is a deliberate trade:
+//! it is a small, sequential cost next to the softfloat MAC chain, and
+//! it spares every call site (fully-overwriting or not) from per-site
+//! zeroing reasoning; the allocation and page-fault costs are the ones
+//! the arena eliminates.  `rust/tests/pool_arena.rs`
+//! additionally pins warm-engine runs against fresh-engine runs across
+//! *different* network shapes sharing one arena (no stale-scratch
+//! leakage is possible: a buffer is keyed by exact length and zeroed).
+//!
+//! The arena is deliberately dumb: no high-water marks, no trimming.
+//! Steady-state training uses a fixed working set, and alternating
+//! workloads (LeNet-5 / MLP on one engine) are bounded by the union of
+//! their shape sets.
+//!
+//! [`TrainScratch`] carries the non-`f32` per-step state the train
+//! engine reuses: the tape's buffer-of-buffers, the host `f64` loss
+//! terms, and a free list for the per-layer gradient-set spine that
+//! `train_step` returns and [`crate::arch::TrainEngine::recycle`]
+//! returns to the pool.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Size-keyed recycler for `f32` scratch buffers (see module docs).
+#[derive(Debug)]
+pub struct Arena {
+    /// `false` replicates the PR 3 baseline: `take` allocates fresh,
+    /// `give` drops — the scoped execution mode's allocator behaviour.
+    enabled: bool,
+    pools: Mutex<HashMap<usize, Vec<Vec<f32>>>>,
+}
+
+impl Arena {
+    /// A recycling arena (the pooled execution mode).
+    pub fn pooled() -> Arena {
+        Arena {
+            enabled: true,
+            pools: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// A pass-through arena: every `take` allocates, every `give`
+    /// frees — the frozen PR 3 allocation behaviour the scoped
+    /// baseline (and the train-step bench) measures against.
+    pub fn disabled() -> Arena {
+        Arena {
+            enabled: false,
+            pools: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Whether this arena recycles (pooled mode) or passes through.
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// A zeroed buffer of exactly `len` elements — recycled when one of
+    /// this size is free, freshly allocated otherwise.  Bit-equivalent
+    /// to `vec![0f32; len]` in either case.
+    pub fn take(&self, len: usize) -> Vec<f32> {
+        if len == 0 {
+            return Vec::new();
+        }
+        if self.enabled {
+            let recycled = self
+                .pools
+                .lock()
+                .expect("arena lock poisoned")
+                .get_mut(&len)
+                .and_then(Vec::pop);
+            if let Some(mut v) = recycled {
+                debug_assert_eq!(v.len(), len);
+                v.fill(0.0);
+                return v;
+            }
+        }
+        vec![0f32; len]
+    }
+
+    /// Return a buffer to the free list (dropped when the arena is
+    /// disabled or the buffer is empty).  Buffers are keyed by length,
+    /// so only return buffers whose length you have not changed.
+    pub fn give(&self, v: Vec<f32>) {
+        if !self.enabled || v.is_empty() {
+            return;
+        }
+        self.pools
+            .lock()
+            .expect("arena lock poisoned")
+            .entry(v.len())
+            .or_default()
+            .push(v);
+    }
+
+    /// Free buffers currently parked in the arena (for tests/metrics).
+    pub fn free_buffers(&self) -> usize {
+        self.pools
+            .lock()
+            .expect("arena lock poisoned")
+            .values()
+            .map(Vec::len)
+            .sum()
+    }
+}
+
+/// Per-engine reusable train-step state (behind the engine's scratch
+/// mutex; one train step holds it end to end).
+#[derive(Debug, Default)]
+pub(crate) struct TrainScratch {
+    /// The backward tape's spine: `acts[l]` is the input to layer `l`
+    /// (slot 0 is a sentinel — the step input stays borrowed).  Inner
+    /// buffers come from the arena and drain back to it each step; the
+    /// spine keeps its capacity.
+    pub tape: Vec<Vec<f32>>,
+    /// Host `f64` per-sample loss terms (the softmax head's output).
+    pub terms: Vec<f64>,
+    /// Free list for the per-layer gradient-set spine handed out in
+    /// `TrainStepResult::grads` and returned via `recycle`.
+    pub grad_spines: Vec<Vec<Option<crate::arch::gemm::LayerParams>>>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_zeroed_and_recycles() {
+        let a = Arena::pooled();
+        let mut v = a.take(8);
+        assert_eq!(v, vec![0f32; 8]);
+        v.iter_mut().for_each(|s| *s = 7.0);
+        let p = v.as_ptr();
+        a.give(v);
+        assert_eq!(a.free_buffers(), 1);
+        let w = a.take(8);
+        // same allocation, contents re-zeroed
+        assert_eq!(w.as_ptr(), p);
+        assert_eq!(w, vec![0f32; 8]);
+        assert_eq!(a.free_buffers(), 0);
+    }
+
+    #[test]
+    fn sizes_do_not_cross() {
+        let a = Arena::pooled();
+        a.give(vec![1f32; 4]);
+        a.give(vec![2f32; 6]);
+        assert_eq!(a.take(5), vec![0f32; 5]); // miss: fresh
+        assert_eq!(a.take(6).len(), 6);
+        assert_eq!(a.take(4).len(), 4);
+        assert_eq!(a.free_buffers(), 0);
+    }
+
+    #[test]
+    fn disabled_arena_passes_through() {
+        let a = Arena::disabled();
+        assert!(!a.is_enabled());
+        let v = a.take(3);
+        assert_eq!(v, vec![0f32; 3]);
+        a.give(v);
+        assert_eq!(a.free_buffers(), 0);
+    }
+
+    #[test]
+    fn zero_len_take_never_allocates_or_parks() {
+        let a = Arena::pooled();
+        assert!(a.take(0).is_empty());
+        a.give(Vec::new());
+        assert_eq!(a.free_buffers(), 0);
+    }
+}

@@ -21,6 +21,24 @@
 //! per parameter ([`pim_mul_f32`] then [`pim_sub_f32`]), counted as one
 //! update MAC — exactly `training_work`'s `macs_wu`.
 //!
+//! **Steady-state execution (PR 4).**  The engine owns a persistent
+//! scratch state: the backward tape's spine, the host loss-term buffer
+//! and a free list for the gradient-set spine live in a per-engine
+//! [`TrainScratch`]; every `f32` intermediate (tape activations,
+//! transposed operands, patch matrices, deltas, gradient tensors)
+//! recycles through the GEMM engine's [`Arena`].  ReLU runs **in
+//! place** on the tape (its input slot is provably never re-read: the
+//! preceding layer's backward consumes its *own* input, not its
+//! output), so the tape holds exactly the buffers backward needs.
+//! After one warm-up step — and provided the caller returns each
+//! result's gradients via [`TrainEngine::recycle`] — a train step
+//! performs **zero heap allocations and zero thread spawns**
+//! (`rust/tests/zero_alloc.rs` asserts the former with a counting
+//! global allocator, the bench reports the latter).  The frozen
+//! [`ExecMode::Scoped`] baseline keeps the PR 3 behaviour for the
+//! acceptance bench; both modes are bit-identical
+//! (`rust/tests/pool_arena.rs`).
+//!
 //! The backward lowering and the update are factored out
 //! ([`TrainEngine::backward`], [`TrainEngine::apply_sgd`]) so the
 //! data-parallel cluster ([`crate::cluster`]) reuses them:
@@ -42,7 +60,10 @@
 //! accounting.  `rust/tests/training.rs` pins functional and analytic
 //! models together for LeNet-5 across batch sizes.
 
-use crate::arch::gemm::{GemmEngine, LayerParams, NetworkParams};
+use std::sync::Mutex;
+
+use crate::arch::gemm::{ActIn, ExecMode, GemmEngine, LayerParams, NetworkParams};
+use crate::arch::scratch::TrainScratch;
 use crate::fpu::softfloat::{pim_add_f32, pim_mul_f32, pim_sub_f32};
 use crate::fpu::FpCostModel;
 use crate::model::{Layer, Network};
@@ -71,7 +92,9 @@ pub struct TrainStepResult {
     pub latency_s: f64,
     pub energy_j: f64,
     /// Per-layer gradients (`None` for parameter-free layers), in the
-    /// same `LayerParams` shape as the weights they update.
+    /// same `LayerParams` shape as the weights they update.  Hand the
+    /// consumed result back via [`TrainEngine::recycle`] to keep the
+    /// steady state allocation-free.
     pub grads: Vec<Option<LayerParams>>,
 }
 
@@ -169,11 +192,29 @@ pub fn softmax_xent_terms(
     classes: usize,
     denom: usize,
 ) -> (Vec<f64>, Vec<f32>) {
+    let mut terms = Vec::with_capacity(batch);
+    let mut delta = vec![0f32; batch * classes];
+    softmax_xent_terms_into(logits, labels, batch, classes, denom, &mut terms, &mut delta);
+    (terms, delta)
+}
+
+/// Allocation-free core of [`softmax_xent_terms`]: `terms` is cleared
+/// and refilled (one `f64` per sample), `delta` must be a zeroed or
+/// overwritable `[batch * classes]` buffer (every element is written).
+fn softmax_xent_terms_into(
+    logits: &[f32],
+    labels: &[i32],
+    batch: usize,
+    classes: usize,
+    denom: usize,
+    terms: &mut Vec<f64>,
+    delta: &mut [f32],
+) {
     assert_eq!(logits.len(), batch * classes, "logits shape");
     assert_eq!(labels.len(), batch, "labels shape");
+    assert_eq!(delta.len(), batch * classes, "delta shape");
     assert!(denom > 0, "zero loss denominator");
-    let mut delta = vec![0f32; batch * classes];
-    let mut terms = Vec::with_capacity(batch);
+    terms.clear();
     let inv = 1.0 / denom as f32;
     for b in 0..batch {
         let row = &logits[b * classes..(b + 1) * classes];
@@ -198,21 +239,20 @@ pub fn softmax_xent_terms(
         }
         terms.push(-(f64::from(p_label.max(f32::MIN_POSITIVE))).ln());
     }
-    (terms, delta)
 }
 
-/// `[rows, cols]` row-major → `[cols, rows]`.  Pure data movement: the
-/// arrays address GEMM operands by row/column wiring, so transposition
-/// prices no MACs.
-fn transpose(m: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+/// `[rows, cols]` row-major → `[cols, rows]` into a caller-provided
+/// buffer (every element written).  Pure data movement: the arrays
+/// address GEMM operands by row/column wiring, so transposition prices
+/// no MACs.
+fn transpose_into(m: &[f32], rows: usize, cols: usize, t: &mut [f32]) {
     debug_assert_eq!(m.len(), rows * cols);
-    let mut t = vec![0f32; m.len()];
+    debug_assert_eq!(t.len(), rows * cols);
     for r in 0..rows {
         for (c, &v) in m[r * cols..(r + 1) * cols].iter().enumerate() {
             t[c * rows + r] = v;
         }
     }
-    t
 }
 
 /// im2col for one `[in_ch, h, w]` sample written directly in the
@@ -286,11 +326,15 @@ fn col2im_accumulate(
     i as u64
 }
 
-/// Forward tape: `acts[l]` is the input to layer `l`; the last entry is
-/// the logits.
-struct Tape {
-    acts: Vec<Vec<f32>>,
-    macs: u64,
+/// The tape's view of layer `i`'s *output* activations: slot `i + 1`,
+/// or the nearest later slot when in-place ReLU chains moved the
+/// buffer forward (consecutive ReLUs are idempotent, so any later
+/// alias holds the same mask).
+fn taped_output(acts: &[Vec<f32>], mut i: usize) -> &[f32] {
+    while i + 1 < acts.len() && acts[i].is_empty() {
+        i += 1;
+    }
+    &acts[i]
 }
 
 /// Backward-pass output: per-layer gradients plus the backward ledger
@@ -324,26 +368,74 @@ pub struct SampleGrad {
 
 /// The functional training engine: taped forward, GEMM-lowered
 /// backward, in-array SGD update — all priced from the engine's cached
-/// cost model.  Construct once and reuse; results are bit-identical
-/// regardless of `threads`.
-#[derive(Debug, Clone)]
+/// cost model.  Construct once and reuse (the worker pool and scratch
+/// arenas warm up once); results are bit-identical regardless of
+/// `threads` and execution mode.
+#[derive(Debug)]
 pub struct TrainEngine {
     gemm: GemmEngine,
     /// Per-bit write energy for the backward activation stash.
     e_write: f64,
+    /// Reusable per-step state (tape spine, loss terms, grad spines).
+    scratch: Mutex<TrainScratch>,
+}
+
+impl Clone for TrainEngine {
+    /// Clones share the GEMM engine's pool/arena but get fresh step
+    /// scratch (scratch is held for a whole step; sharing it would
+    /// serialise independent users for no benefit).
+    fn clone(&self) -> TrainEngine {
+        TrainEngine {
+            gemm: self.gemm.clone(),
+            e_write: self.e_write,
+            scratch: Mutex::new(TrainScratch::default()),
+        }
+    }
 }
 
 impl TrainEngine {
     pub fn new(model: FpCostModel, lanes: usize, threads: usize) -> Self {
+        TrainEngine::new_mode(model, lanes, threads, ExecMode::Pooled)
+    }
+
+    /// Build in an explicit execution mode ([`ExecMode::Scoped`] is the
+    /// frozen PR 3 baseline for the acceptance bench and the
+    /// bit-identity suite).
+    pub fn new_mode(model: FpCostModel, lanes: usize, threads: usize, mode: ExecMode) -> Self {
         TrainEngine {
             e_write: model.costs.e_write,
-            gemm: GemmEngine::from_model(model, lanes, threads),
+            gemm: GemmEngine::from_model_mode(model, lanes, threads, mode),
+            scratch: Mutex::new(TrainScratch::default()),
         }
     }
 
     /// The underlying batched GEMM engine (shared with inference).
     pub fn gemm(&self) -> &GemmEngine {
         &self.gemm
+    }
+
+    /// Return a consumed step result's buffers to the engine's scratch
+    /// arena.  Optional — dropping the result is always correct — but
+    /// required for the zero-allocation steady state.
+    pub fn recycle(&self, r: TrainStepResult) {
+        self.recycle_grads(r.grads);
+    }
+
+    /// Return a gradient set (from [`TrainStepResult::grads`] or a
+    /// [`SampleGrad`]) to the scratch arena.
+    pub fn recycle_grads(&self, mut grads: Vec<Option<LayerParams>>) {
+        let arena = self.gemm.arena();
+        for g in grads.drain(..) {
+            if let Some(lp) = g {
+                arena.give(lp.w);
+                arena.give(lp.b);
+            }
+        }
+        self.scratch
+            .lock()
+            .expect("train scratch poisoned")
+            .grad_spines
+            .push(grads);
     }
 
     fn classes(net: &Network) -> usize {
@@ -400,27 +492,46 @@ impl TrainEngine {
         Ok(classes)
     }
 
-    /// Forward pass keeping every layer input (the backward stash).
-    /// Runs the same [`GemmEngine::apply_layer`] dispatch as the
-    /// inference `forward`, so training and evaluation can never
-    /// disagree on layer semantics.
+    /// Forward pass keeping every buffer the backward pass will read
+    /// (the stash): `acts[l]` is the input to layer `l`, with slot 0 an
+    /// empty sentinel (the step input stays borrowed) and ReLU running
+    /// in place — its input slot is drained into its output slot, which
+    /// is sound because no backward arm reads a ReLU's input (each
+    /// MAC-bearing layer's backward consumes its *own* input, and the
+    /// ReLU mask reads the taped *output*).  Runs the same
+    /// [`GemmEngine::apply_layer`] dispatch as the inference `forward`,
+    /// so training and evaluation can never disagree on layer
+    /// semantics.  Returns the forward MAC count.
     fn forward_taped(
         &self,
         net: &Network,
         params: &NetworkParams,
         x: &[f32],
         batch: usize,
-    ) -> Tape {
-        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(net.layers.len() + 1);
-        acts.push(x.to_vec());
+        acts: &mut Vec<Vec<f32>>,
+    ) -> u64 {
+        debug_assert!(acts.is_empty(), "tape must start drained");
+        acts.push(Vec::new()); // slot 0: the borrowed step input
         let mut macs = 0u64;
-        for (layer, p) in net.layers.iter().zip(&params.layers) {
-            let cur = acts.last().expect("tape is never empty");
-            let a = self.gemm.apply_layer(layer, p.as_ref(), cur, batch);
+        for (l, (layer, p)) in net.layers.iter().zip(&params.layers).enumerate() {
+            let act = match *layer {
+                Layer::Relu { .. } if l > 0 => ActIn::Owned(std::mem::take(&mut acts[l])),
+                _ if l == 0 => ActIn::Borrowed(x),
+                _ => ActIn::Borrowed(&acts[l]),
+            };
+            let a = self.gemm.apply_layer(layer, p.as_ref(), act, batch);
             macs += a.macs;
             acts.push(a.y);
         }
-        Tape { acts, macs }
+        macs
+    }
+
+    /// Drain a tape back into the scratch arena.
+    fn drain_tape(&self, acts: &mut Vec<Vec<f32>>) {
+        let arena = self.gemm.arena();
+        for buf in acts.drain(..) {
+            arena.give(buf);
+        }
     }
 
     /// Loss of a forward pass (no tape, no update) — the oracle the
@@ -437,7 +548,9 @@ impl TrainEngine {
     ) -> f32 {
         let classes = TrainEngine::classes(net);
         let r = self.gemm.forward(net, params, images, batch);
-        softmax_xent(&r.y, labels, batch, classes).0
+        let loss = softmax_xent(&r.y, labels, batch, classes).0;
+        self.gemm.recycle_buf(r.y);
+        loss
     }
 
     /// Evaluate a batch: (mean loss, #correct by argmax).
@@ -465,6 +578,7 @@ impl TrainEngine {
                 correct += 1;
             }
         }
+        self.gemm.recycle_buf(r.y);
         Ok((loss, correct))
     }
 
@@ -481,27 +595,43 @@ impl TrainEngine {
         lr: f32,
     ) -> Result<TrainStepResult> {
         let classes = self.validate(net, params, images, labels, batch)?;
+        let arena = self.gemm.arena();
+        let mut scratch = self.scratch.lock().expect("train scratch poisoned");
+        let TrainScratch {
+            tape,
+            terms,
+            grad_spines,
+        } = &mut *scratch;
 
         // ---- forward, keeping the activation stash ----
-        let tape = self.forward_taped(net, params, images, batch);
-        let macs_fwd = tape.macs;
+        let macs_fwd = self.forward_taped(net, params, images, batch, tape);
         let (adds_per_sample, stored_per_sample) = TrainEngine::fwd_ride_along(net);
         let adds = adds_per_sample * batch as u64;
         let stored = stored_per_sample * batch as u64;
 
         // ---- loss head (host digital unit) ----
-        let logits = tape.acts.last().expect("tape holds the logits");
-        let (loss, delta) = softmax_xent(logits, labels, batch, classes);
+        let logits = tape.last().expect("tape holds the logits");
+        let mut delta = arena.take(batch * classes);
+        softmax_xent_terms_into(logits, labels, batch, classes, batch, terms, &mut delta);
+        let mut acc = 0f64;
+        for t in terms.iter() {
+            acc += *t;
+        }
+        let loss = (acc / batch as f64) as f32;
         if !loss.is_finite() {
+            arena.give(delta);
+            self.drain_tape(tape);
             return Err(Error::Sim(format!("loss diverged: {loss}")));
         }
 
         // ---- backward: δ flows in reverse, each MAC-bearing layer
         //      issuing its dgrad + wgrad GEMMs ----
-        let bwd = self.backward(net, params, &tape.acts, delta, batch);
+        let spine = grad_spines.pop().unwrap_or_default();
+        let bwd = self.backward(net, params, images, tape, delta, batch, spine);
         let macs_bwd = bwd.macs_bwd;
         let adds_bwd = bwd.adds_bwd;
         let grads = bwd.grads;
+        self.drain_tape(tape);
 
         // ---- SGD update: w := w − lr·g, one in-array MAC/param ----
         let macs_wu = self.apply_sgd(params, &grads, lr);
@@ -537,7 +667,9 @@ impl TrainEngine {
     /// gradient all-reduce.  Runs the same taped forward and the same
     /// extracted backward as [`TrainEngine::train_step`], at batch 1,
     /// so every per-sample bit matches what the batched engine computes
-    /// for that sample's row.
+    /// for that sample's row.  Return the gradients via
+    /// [`TrainEngine::recycle_grads`] for an allocation-free steady
+    /// state.
     pub fn micrograd(
         &self,
         net: &Network,
@@ -551,15 +683,27 @@ impl TrainEngine {
         if denom == 0 {
             return Err(Error::Sim("zero gradient denominator".into()));
         }
-        let tape = self.forward_taped(net, params, image, 1);
+        let arena = self.gemm.arena();
+        let mut scratch = self.scratch.lock().expect("train scratch poisoned");
+        let TrainScratch {
+            tape,
+            terms,
+            grad_spines,
+        } = &mut *scratch;
+
+        let macs_fwd = self.forward_taped(net, params, image, 1, tape);
         let (adds, stored) = TrainEngine::fwd_ride_along(net);
-        let logits = tape.acts.last().expect("tape holds the logits");
-        let (terms, delta) = softmax_xent_terms(logits, &labels, 1, classes, denom);
-        let bwd = self.backward(net, params, &tape.acts, delta, 1);
+        let logits = tape.last().expect("tape holds the logits");
+        let mut delta = arena.take(classes);
+        softmax_xent_terms_into(logits, &labels, 1, classes, denom, terms, &mut delta);
+        let loss_term = terms[0];
+        let spine = grad_spines.pop().unwrap_or_default();
+        let bwd = self.backward(net, params, image, tape, delta, 1, spine);
+        self.drain_tape(tape);
         Ok(SampleGrad {
             grads: bwd.grads,
-            loss_term: terms[0],
-            macs_fwd: tape.macs,
+            loss_term,
+            macs_fwd,
             macs_bwd: bwd.macs_bwd,
             adds,
             adds_bwd: bwd.adds_bwd,
@@ -595,32 +739,45 @@ impl TrainEngine {
     }
 
     /// The backward pass: δ flows in reverse through the taped
-    /// activations (`acts[l]` is the input to layer `l`), each
-    /// MAC-bearing layer issuing its dgrad + wgrad GEMMs.  Extracted
-    /// verbatim from the PR 2 `train_step` body so the batched path and
-    /// the per-sample micrograd path share one lowering.
+    /// activations (`acts[l]` is the input to layer `l`; `x` is the
+    /// step input backing slot 0), each MAC-bearing layer issuing its
+    /// dgrad + wgrad GEMMs.  `spine` is a (possibly recycled) vector to
+    /// hold the per-layer gradients.  Every intermediate recycles
+    /// through the arena; `delta` is consumed.  The lowering is shared
+    /// by the batched `train_step` path and the per-sample
+    /// [`TrainEngine::micrograd`] path, so the two cannot drift.
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn backward(
         &self,
         net: &Network,
         params: &NetworkParams,
+        x: &[f32],
         acts: &[Vec<f32>],
         mut delta: Vec<f32>,
         batch: usize,
+        mut spine: Vec<Option<LayerParams>>,
     ) -> BackwardOut {
+        let arena = self.gemm.arena();
         let mut macs_bwd = 0u64;
         let mut adds_bwd = 0u64;
-        let mut grads: Vec<Option<LayerParams>> = vec![None; net.layers.len()];
+        spine.clear();
+        spine.resize_with(net.layers.len(), || None);
+        let mut grads = spine;
         for (l, layer) in net.layers.iter().enumerate().rev() {
-            let x_in = &acts[l];
+            let x_in: &[f32] = if l == 0 { x } else { &acts[l] };
             match *layer {
                 Layer::Dense { inp, out } => {
                     // dW = δᵀ·X: one GEMM over transposed operands.
-                    let xt = transpose(x_in, batch, inp);
-                    let dt = transpose(&delta, batch, out);
+                    let mut xt = arena.take(batch * inp);
+                    transpose_into(x_in, batch, inp, &mut xt);
+                    let mut dt = arena.take(batch * out);
+                    transpose_into(&delta, batch, out, &mut dt);
                     let gw = self.gemm.gemm(&xt, &dt, None, inp, batch, out);
+                    arena.give(xt);
+                    arena.give(dt);
                     macs_bwd += gw.macs;
                     // db = column sums of δ (ride-along adds).
-                    let mut gb = vec![0f32; out];
+                    let mut gb = arena.take(out);
                     for b in 0..batch {
                         for (slot, &d) in gb.iter_mut().zip(&delta[b * out..(b + 1) * out]) {
                             *slot = pim_add_f32(*slot, d);
@@ -629,11 +786,13 @@ impl TrainEngine {
                     adds_bwd += (batch * out) as u64;
                     // dX = δ·W: GEMM against the transposed weights.
                     let lp = params.layers[l].as_ref().expect("dense layer params");
-                    let wt = transpose(&lp.w, out, inp);
+                    let mut wt = arena.take(out * inp);
+                    transpose_into(&lp.w, out, inp, &mut wt);
                     let gx = self.gemm.gemm(&wt, &delta, None, inp, out, batch);
+                    arena.give(wt);
                     macs_bwd += gx.macs;
                     grads[l] = Some(LayerParams { w: gw.y, b: gb });
-                    delta = gx.y;
+                    arena.give(std::mem::replace(&mut delta, gx.y));
                 }
                 Layer::Conv2d {
                     in_ch,
@@ -649,7 +808,7 @@ impl TrainEngine {
                     let rows = batch * ohw;
                     let plane = in_ch * in_h * in_w;
                     // δ back to the GEMM row layout [batch·oh·ow, out_ch].
-                    let mut dmat = vec![0f32; rows * out_ch];
+                    let mut dmat = arena.take(rows * out_ch);
                     for b in 0..batch {
                         for oc in 0..out_ch {
                             let src = &delta[(b * out_ch + oc) * ohw..(b * out_ch + oc + 1) * ohw];
@@ -662,7 +821,7 @@ impl TrainEngine {
                     // in the transposed [k, rows] layout the wgrad GEMM
                     // consumes (skips materialising the [rows, k]
                     // matrix only to copy it again).
-                    let mut pt = vec![0f32; k * rows];
+                    let mut pt = arena.take(k * rows);
                     for b in 0..batch {
                         im2col_transposed_into(
                             &x_in[b * plane..(b + 1) * plane],
@@ -677,11 +836,14 @@ impl TrainEngine {
                         );
                     }
                     // dW = δᵀ·patches.
-                    let dt = transpose(&dmat, rows, out_ch);
+                    let mut dt = arena.take(rows * out_ch);
+                    transpose_into(&dmat, rows, out_ch, &mut dt);
                     let gw = self.gemm.gemm(&pt, &dt, None, k, rows, out_ch);
+                    arena.give(pt);
+                    arena.give(dt);
                     macs_bwd += gw.macs;
                     // db over every batch·pixel position.
-                    let mut gb = vec![0f32; out_ch];
+                    let mut gb = arena.take(out_ch);
                     for r in 0..rows {
                         for (slot, &d) in gb.iter_mut().zip(&dmat[r * out_ch..(r + 1) * out_ch]) {
                             *slot = pim_add_f32(*slot, d);
@@ -690,10 +852,13 @@ impl TrainEngine {
                     adds_bwd += (rows * out_ch) as u64;
                     // dX = col2im(δ·W).
                     let lp = params.layers[l].as_ref().expect("conv layer params");
-                    let wt = transpose(&lp.w, out_ch, k);
+                    let mut wt = arena.take(out_ch * k);
+                    transpose_into(&lp.w, out_ch, k, &mut wt);
                     let gp = self.gemm.gemm(&wt, &dmat, None, k, out_ch, rows);
+                    arena.give(wt);
+                    arena.give(dmat);
                     macs_bwd += gp.macs;
-                    let mut dx = vec![0f32; batch * plane];
+                    let mut dx = arena.take(batch * plane);
                     for b in 0..batch {
                         adds_bwd += col2im_accumulate(
                             &gp.y[b * ohw * k..(b + 1) * ohw * k],
@@ -705,14 +870,15 @@ impl TrainEngine {
                             &mut dx[b * plane..(b + 1) * plane],
                         );
                     }
+                    arena.give(gp.y);
                     grads[l] = Some(LayerParams { w: gw.y, b: gb });
-                    delta = dx;
+                    arena.give(std::mem::replace(&mut delta, dx));
                 }
                 Layer::AvgPool2 { ch, in_h, in_w } => {
                     let (oh, ow) = (in_h / 2, in_w / 2);
                     let planes = batch * ch;
                     debug_assert_eq!(delta.len(), planes * oh * ow);
-                    let mut dx = vec![0f32; planes * in_h * in_w];
+                    let mut dx = arena.take(planes * in_h * in_w);
                     for p in 0..planes {
                         let src = &delta[p * oh * ow..(p + 1) * oh * ow];
                         let dst = &mut dx[p * in_h * in_w..(p + 1) * in_h * in_w];
@@ -728,12 +894,14 @@ impl TrainEngine {
                         }
                     }
                     adds_bwd += (planes * oh * ow) as u64;
-                    delta = dx;
+                    arena.give(std::mem::replace(&mut delta, dx));
                 }
                 Layer::Relu { units } => {
                     // Mask from the taped output: y > 0 ⟺ x > 0 (NaN
                     // inputs were normalised to +0 on the way forward).
-                    let y_out = &acts[l + 1];
+                    // The output may have been moved forward by later
+                    // in-place ReLUs; `taped_output` follows the alias.
+                    let y_out = taped_output(acts, l + 1);
                     debug_assert_eq!(delta.len(), batch * units);
                     for (d, &y) in delta.iter_mut().zip(y_out) {
                         if y <= 0.0 {
@@ -743,6 +911,7 @@ impl TrainEngine {
                 }
             }
         }
+        arena.give(delta);
 
         BackwardOut {
             grads,
@@ -926,11 +1095,37 @@ mod tests {
                 .train_step(&net, &mut params, &x, &labels, 2, 0.1)
                 .unwrap();
             totals.absorb(&r);
+            eng.recycle(r);
         }
         assert_eq!(totals.steps, 3);
         let work = net.training_work(2);
         assert_eq!(totals.total_macs(), 3 * work.total_macs());
         assert_eq!(totals.macs_wu, 3 * work.macs_wu);
+    }
+
+    #[test]
+    fn recycle_does_not_change_results() {
+        // Two engines, same sequence of steps; one recycles between
+        // steps, one drops.  Bits must match throughout.
+        let net = dense_net(6, 4);
+        let mut rng = Rng::new(0xEC0);
+        let batch = 3;
+        let x: Vec<f32> = (0..batch * 6).map(|_| rng.f32_normal(2)).collect();
+        let labels: Vec<i32> = (0..batch).map(|_| rng.below(4) as i32).collect();
+        let (ea, eb) = (engine(2), engine(2));
+        let mut pa = NetworkParams::init(&net, 4);
+        let mut pb = pa.clone();
+        for step in 0..3 {
+            let ra = ea.train_step(&net, &mut pa, &x, &labels, batch, 0.1).unwrap();
+            let rb = eb.train_step(&net, &mut pb, &x, &labels, batch, 0.1).unwrap();
+            assert_eq!(ra.loss.to_bits(), rb.loss.to_bits(), "step {step}");
+            for (ga, gb) in ra.grads.iter().flatten().zip(rb.grads.iter().flatten()) {
+                for (a, b) in ga.w.iter().zip(&gb.w) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            ea.recycle(ra); // rb is dropped
+        }
     }
 
     #[test]
@@ -945,5 +1140,19 @@ mod tests {
         let (loss, correct) = eng.evaluate(&net, &params, &x, &labels, batch).unwrap();
         assert!(loss.is_finite() && loss > 0.0);
         assert!(correct <= batch);
+    }
+
+    #[test]
+    fn taped_output_follows_relu_aliases() {
+        let acts = vec![
+            Vec::new(),
+            vec![1.0f32],
+            Vec::new(),
+            Vec::new(),
+            vec![2.0f32],
+        ];
+        assert_eq!(taped_output(&acts, 1), &[1.0]);
+        assert_eq!(taped_output(&acts, 2), &[2.0]); // walks 2 → 3 → 4
+        assert_eq!(taped_output(&acts, 4), &[2.0]);
     }
 }

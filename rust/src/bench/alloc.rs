@@ -1,0 +1,71 @@
+//! Debug counting allocator: a [`System`]-backed `GlobalAlloc` that
+//! counts every allocator touch, so benches and tests can *assert* the
+//! zero-allocation steady state instead of asserting it in prose.
+//!
+//! The type only counts when installed, so the library itself stays on
+//! the default allocator; a bench or integration-test binary opts in
+//! with:
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: mram_pim::bench::CountingAllocator =
+//!     mram_pim::bench::CountingAllocator;
+//! ```
+//!
+//! and then brackets the measured region with [`heap_allocations`]
+//! (`rust/tests/zero_alloc.rs`, `rust/benches/train_step.rs`).
+//! Counters are global atomics (relaxed): they observe *all* threads,
+//! which is exactly what the zero-steady-state claim needs — a worker
+//! thread allocating would be a bug the main-thread counter must see.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+static DEALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+static BYTES_ALLOCATED: AtomicU64 = AtomicU64::new(0);
+
+/// Allocation events (alloc + alloc_zeroed + realloc) since process
+/// start, across all threads.  Zero unless [`CountingAllocator`] is
+/// installed as the global allocator.
+pub fn heap_allocations() -> u64 {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}
+
+/// Deallocation events since process start, across all threads.
+pub fn heap_deallocations() -> u64 {
+    DEALLOCATIONS.load(Ordering::Relaxed)
+}
+
+/// Total bytes requested from the allocator since process start.
+pub fn heap_bytes_allocated() -> u64 {
+    BYTES_ALLOCATED.load(Ordering::Relaxed)
+}
+
+/// The counting allocator (see module docs).
+pub struct CountingAllocator;
+
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        BYTES_ALLOCATED.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        BYTES_ALLOCATED.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        DEALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        BYTES_ALLOCATED.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}

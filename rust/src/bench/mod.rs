@@ -10,6 +10,9 @@
 
 use std::time::Instant;
 
+pub mod alloc;
+pub use alloc::{heap_allocations, heap_bytes_allocated, heap_deallocations, CountingAllocator};
+
 /// Result of one benchmark case.
 #[derive(Debug, Clone)]
 pub struct BenchResult {

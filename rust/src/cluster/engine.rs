@@ -1,8 +1,11 @@
-//! The data-parallel cluster engine: N modeled PIM chips, one scoped
-//! host thread per chip, each running the shared [`TrainEngine`]
-//! lowering on its contiguous batch chunk (reusing the chip's intra-chip
-//! wave parallelism), merged by the order-preserving gradient all-reduce
-//! and one global in-array SGD update.
+//! The data-parallel cluster engine: N modeled PIM chips, each a
+//! *persistent* [`TrainEngine`] (own worker pool, own scratch arena)
+//! driven from a persistent chip-level [`WorkerPool`] — zero thread
+//! spawns per steady-state cluster step — merged by the
+//! order-preserving gradient all-reduce and one global in-array SGD
+//! update.  The frozen [`ExecMode::Scoped`] baseline keeps the PR 3
+//! shape (fresh `thread::scope` chip threads per step, allocating
+//! engines) for the acceptance bench.
 //!
 //! **Bit-reproducibility contract.**
 //!
@@ -13,22 +16,24 @@
 //!   ([`TrainEngine::micrograd`], δ scaled by the global batch), and
 //!   [`reduce_grads`] folds them in **global sample order** — so the
 //!   merged gradient, loss and updated weights are identical for every
-//!   shard count ≥ 2 and every thread count.  For networks whose wgrad
-//!   contractions are purely per-sample outer products (dense MLPs) the
-//!   fold *is* the batched GEMM accumulation chain, so the result also
-//!   equals the single-chip engine exactly; conv wgrads chain over
-//!   output pixels inside each sample first, which fixes the canonical
-//!   (shard-invariant) order at sample granularity rather than the
-//!   single-chip pixel-interleaved order.  `rust/tests/cluster.rs` pins
-//!   both facts.
+//!   shard count ≥ 2, every thread count and every execution mode.
+//!   For networks whose wgrad contractions are purely per-sample outer
+//!   products (dense MLPs) the fold *is* the batched GEMM accumulation
+//!   chain, so the result also equals the single-chip engine exactly;
+//!   conv wgrads chain over output pixels inside each sample first,
+//!   which fixes the canonical (shard-invariant) order at sample
+//!   granularity rather than the single-chip pixel-interleaved order.
+//!   `rust/tests/cluster.rs` pins both facts.
 //!
 //! The ledger is priced by [`ClusterCost::from_counts`] from the
 //! *counted* per-chip work, which the tests hold exactly equal to the
 //! analytic [`cluster_step_cost`](crate::cluster::cluster_step_cost).
 
+use std::sync::Mutex;
 use std::thread;
 
-use crate::arch::gemm::NetworkParams;
+use crate::arch::gemm::{ExecMode, NetworkParams};
+use crate::arch::pool::{note_worker_launches, WorkerPool};
 use crate::arch::train::{SampleGrad, TrainEngine, TrainStepResult, TrainTotals};
 use crate::cluster::cost::{ClusterCost, ClusterCounts};
 use crate::cluster::plan::{ClusterConfig, ShardPlan};
@@ -126,11 +131,28 @@ struct ShardOut {
 }
 
 /// The sharded data-parallel training engine.
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct ClusterEngine {
+    /// The single-chip engine: the `shards == 1` delegation path and
+    /// the global SGD update (every chip is provisioned identically).
     engine: TrainEngine,
+    /// One persistent engine per modeled chip (`shards ≥ 2`), each with
+    /// its own worker pool and scratch arena — chips never contend.
+    shard_engines: Vec<TrainEngine>,
+    /// Persistent chip-dispatch pool (`shards − 1` workers; the caller
+    /// is the Nth chip driver).  Unused in scoped mode.
+    chips: WorkerPool,
+    mode: ExecMode,
     cfg: ClusterConfig,
     lanes: usize,
+}
+
+impl Clone for ClusterEngine {
+    /// Rebuilds an identical cluster (fresh pools/arenas; numerics are
+    /// construction-independent).
+    fn clone(&self) -> Self {
+        ClusterEngine::new_mode(*self.engine.gemm().model(), self.lanes, self.cfg, self.mode)
+    }
 }
 
 impl ClusterEngine {
@@ -138,8 +160,35 @@ impl ClusterEngine {
     /// MAC lanes priced from `model`, each fanning its host work over
     /// `cfg.threads_per_shard` worker threads.
     pub fn new(model: FpCostModel, lanes: usize, cfg: ClusterConfig) -> ClusterEngine {
+        ClusterEngine::new_mode(model, lanes, cfg, ExecMode::Pooled)
+    }
+
+    /// Build in an explicit execution mode ([`ExecMode::Scoped`] is the
+    /// frozen PR 3 baseline: per-step chip threads, allocating
+    /// engines).
+    pub fn new_mode(
+        model: FpCostModel,
+        lanes: usize,
+        cfg: ClusterConfig,
+        mode: ExecMode,
+    ) -> ClusterEngine {
+        let shard_engines = if cfg.shards > 1 {
+            (0..cfg.shards)
+                .map(|_| TrainEngine::new_mode(model, lanes, cfg.threads_per_shard, mode))
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let chips = WorkerPool::new(if mode == ExecMode::Pooled && cfg.shards > 1 {
+            cfg.shards
+        } else {
+            1
+        });
         ClusterEngine {
-            engine: TrainEngine::new(model, lanes, cfg.threads_per_shard),
+            engine: TrainEngine::new_mode(model, lanes, cfg.threads_per_shard, mode),
+            shard_engines,
+            chips,
+            mode,
             cfg,
             lanes: lanes.max(1),
         }
@@ -153,9 +202,23 @@ impl ClusterEngine {
         self.cfg.shards
     }
 
+    /// The execution mode the cluster's engines run in.
+    pub fn mode(&self) -> ExecMode {
+        self.mode
+    }
+
     /// The per-chip training engine (every chip is identical).
     pub fn train_engine(&self) -> &TrainEngine {
         &self.engine
+    }
+
+    /// Return a consumed cluster step result.  The merged gradient set
+    /// is host-allocated by the all-reduce, so it is simply dropped;
+    /// this hook exists for API symmetry with
+    /// [`TrainEngine::recycle`] (per-sample microgradients are already
+    /// recycled into their shard engines internally).
+    pub fn recycle(&self, r: ClusterStepResult) {
+        drop(r);
     }
 
     /// One data-parallel SGD step: shard the batch, run every chip's
@@ -185,34 +248,63 @@ impl ClusterEngine {
 
         self.engine.validate(net, params, images, labels, batch)?;
         let plan = ShardPlan::split(batch, self.cfg.shards)?;
+        let chunks = plan.chunks();
         let (c0, h0, w0) = net.input;
         let in_units = c0 * h0 * w0;
 
-        // ---- fan out: one scoped thread per chip ----
-        let engine = &self.engine;
+        // ---- fan out: one persistent chip engine per shard ----
         let frozen: &NetworkParams = params;
-        let shard_results: Vec<Result<ShardOut>> = thread::scope(|s| {
-            let mut handles = Vec::with_capacity(plan.shards());
-            for &(lo, hi) in plan.chunks() {
-                handles.push(s.spawn(move || -> Result<ShardOut> {
-                    let mut samples = Vec::with_capacity(hi - lo);
-                    for b in lo..hi {
-                        samples.push(engine.micrograd(
-                            net,
-                            frozen,
-                            &images[b * in_units..(b + 1) * in_units],
-                            labels[b],
-                            batch,
-                        )?);
-                    }
-                    Ok(ShardOut { samples })
-                }));
+        let run_shard = |t: usize, engine: &TrainEngine| -> Result<ShardOut> {
+            let (lo, hi) = chunks[t];
+            let mut samples = Vec::with_capacity(hi - lo);
+            for b in lo..hi {
+                samples.push(engine.micrograd(
+                    net,
+                    frozen,
+                    &images[b * in_units..(b + 1) * in_units],
+                    labels[b],
+                    batch,
+                )?);
             }
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("shard worker panicked"))
-                .collect()
-        });
+            Ok(ShardOut { samples })
+        };
+        let shard_results: Vec<Result<ShardOut>> = match self.mode {
+            ExecMode::Pooled => {
+                // Persistent chip pool: zero spawns per step; each task
+                // drives its own shard engine, results land in per-chip
+                // slots.
+                let slots: Vec<Mutex<Option<Result<ShardOut>>>> =
+                    chunks.iter().map(|_| Mutex::new(None)).collect();
+                self.chips.run(chunks.len(), |t| {
+                    let r = run_shard(t, &self.shard_engines[t]);
+                    *slots[t].lock().expect("shard slot poisoned") = Some(r);
+                });
+                slots
+                    .into_iter()
+                    .map(|m| {
+                        m.into_inner()
+                            .expect("shard slot poisoned")
+                            .expect("shard task ran")
+                    })
+                    .collect()
+            }
+            ExecMode::Scoped => {
+                // Frozen PR 3 fan-out: fresh scoped chip threads each
+                // step.
+                let run_shard = &run_shard;
+                thread::scope(|s| {
+                    let mut handles = Vec::with_capacity(chunks.len());
+                    for (t, engine) in self.shard_engines.iter().enumerate() {
+                        handles.push(s.spawn(move || run_shard(t, engine)));
+                    }
+                    note_worker_launches(handles.len() as u64);
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().expect("shard worker panicked"))
+                        .collect()
+                })
+            }
+        };
         let outs: Vec<ShardOut> = shard_results.into_iter().collect::<Result<_>>()?;
 
         // ---- per-shard ledger counts (fwd + bwd) ----
@@ -256,6 +348,17 @@ impl ClusterEngine {
             return Err(Error::Sim(format!("cluster loss diverged: {loss}")));
         }
         let (merged, merge_adds) = reduce_grads(&sample_grads)?;
+
+        // Microgradient buffers came from the shard engines' arenas;
+        // hand each sample's set back to the chip that computed it so
+        // the next step's takes hit the free lists.
+        let mut give_back = sample_grads.into_iter();
+        for (t, &(lo, hi)) in chunks.iter().enumerate() {
+            for _ in lo..hi {
+                let gs = give_back.next().expect("sample count matches plan");
+                self.shard_engines[t].recycle_grads(gs);
+            }
+        }
 
         // ---- one global in-array SGD update ----
         let macs_wu = self.engine.apply_sgd(params, &merged, lr);
@@ -371,6 +474,36 @@ mod tests {
             match &reference {
                 None => reference = Some(bits),
                 Some(want) => assert_eq!(&bits, want, "shards {shards} diverged"),
+            }
+        }
+    }
+
+    #[test]
+    fn warm_cluster_reuses_state_bit_identically() {
+        // Three steps on one warm cluster ≡ three one-step fresh
+        // clusters chained on the evolving parameters (arena/pool reuse
+        // cannot leak between steps).
+        let net = mlp();
+        let batch = 8;
+        let (x, labels) = batch_data(&net, batch, 0xA77);
+        let warm = cluster(4);
+        let mut p_warm = NetworkParams::init(&net, 13);
+        let mut p_fresh = p_warm.clone();
+        for step in 0..3 {
+            let rw = warm
+                .train_step(&net, &mut p_warm, &x, &labels, batch, 0.1)
+                .unwrap();
+            let fresh = cluster(4);
+            let rf = fresh
+                .train_step(&net, &mut p_fresh, &x, &labels, batch, 0.1)
+                .unwrap();
+            assert_eq!(rw.loss.to_bits(), rf.loss.to_bits(), "step {step}");
+            assert_eq!(rw.waves, rf.waves);
+            warm.recycle(rw);
+            for (a, b) in p_warm.layers.iter().flatten().zip(p_fresh.layers.iter().flatten()) {
+                for (u, v) in a.w.iter().zip(&b.w) {
+                    assert_eq!(u.to_bits(), v.to_bits(), "step {step}");
+                }
             }
         }
     }

@@ -17,4 +17,6 @@ pub mod softfloat;
 
 pub use cost::{CostBreakdown, FpCostModel};
 pub use format::FloatFormat;
-pub use softfloat::{pim_add_bits, pim_add_f32, pim_mul_bits, pim_mul_f32, pim_sub_f32};
+pub use softfloat::{
+    pim_add_bits, pim_add_f32, pim_mac_acc_bits, pim_mul_bits, pim_mul_f32, pim_sub_f32,
+};

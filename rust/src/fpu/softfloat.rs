@@ -228,6 +228,40 @@ pub fn pim_mac_f32(a: f32, b: f32, c: f32) -> f32 {
     pim_add_f32(pim_mul_f32(a, b), c)
 }
 
+/// One accumulation step of the GEMM dot-product chain on raw bits:
+/// `pim_add(acc, pim_mul(w, x))`, with a host-side shortcut for
+/// zero-class operands.
+///
+/// Under FTZ a zero-class operand (exponent field 0 — true zeros *and*
+/// subnormals) makes the product a signed zero unless the other operand
+/// is Inf/NaN, and adding a signed zero to a normal or infinite `acc`
+/// is the identity — so the whole MAC collapses to two exponent-field
+/// compares.  ReLU activations and ReLU-masked deltas make zero `x`
+/// (and, in the wgrad GEMMs, zero `w`) extremely common in training
+/// traffic, which is what makes this the dominant host-side win of the
+/// steady-state engine.  **Model accounting is unaffected**: the array
+/// still executes (and the ledger still prices) every scheduled MAC;
+/// only host wall-clock is skipped.
+///
+/// Bit-identity with the two-call chain is pinned exhaustively by
+/// `tests::mac_acc_matches_chain_on_triple_grid` (175,616 edge-pattern
+/// triples) and mirrored by `python/tests/validate_mac_skip.py`.
+#[inline(always)]
+pub fn pim_mac_acc_bits(acc: u32, w: u32, x: u32) -> u32 {
+    const EXP: u32 = 0x7F80_0000;
+    let (we, xe) = (w & EXP, x & EXP);
+    if (we == 0 || xe == 0) && we != EXP && xe != EXP {
+        // Product is a signed zero.  Identity for normal/±Inf acc;
+        // zero-class or NaN acc still folds through the real adder
+        // (sign-of-zero and canonicalisation rules).
+        if acc & EXP != 0 && acc & 0x7FFF_FFFF <= INF {
+            return acc;
+        }
+        return pim_add_bits(acc, (w ^ x) & 0x8000_0000);
+    }
+    pim_add_bits(acc, pim_mul_bits(w, x))
+}
+
 /// PIM subtract: negation is a free sign-bit flip in the array (the
 /// sign column inverts on read), so `a - b` is one add pass.  The SGD
 /// update `w := w - lr·g` runs through this.
@@ -524,6 +558,51 @@ mod tests {
                 pim_add_bits(a, b),
                 reference::pim_add_bits(a, b),
                 "add {a:#010x} + {b:#010x}"
+            );
+        }
+    }
+
+    #[test]
+    fn mac_acc_matches_chain_on_triple_grid() {
+        // Exhaustive: every (acc, w, x) triple over the edge-pattern
+        // grid — the shortcut must be bit-identical to the two-call
+        // chain, including NaN canonicalisation and sign-of-zero.
+        let grid = edge_bit_patterns();
+        for &acc in &grid {
+            for &w in &grid {
+                for &x in &grid {
+                    assert_eq!(
+                        pim_mac_acc_bits(acc, w, x),
+                        pim_add_bits(acc, pim_mul_bits(w, x)),
+                        "acc={acc:#010x} w={w:#010x} x={x:#010x}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mac_acc_matches_chain_random_with_forced_zeros() {
+        let mut state = 0x5EED_F00D_CAFE_D00Du64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        for i in 0..300_000u32 {
+            let acc = next() as u32;
+            let r = next();
+            let w = r as u32;
+            let mut x = (r >> 32) as u32;
+            if i % 2 == 0 {
+                // force the zero-class-x fast path on half the samples
+                x &= 0x807F_FFFF;
+            }
+            assert_eq!(
+                pim_mac_acc_bits(acc, w, x),
+                pim_add_bits(acc, pim_mul_bits(w, x)),
+                "acc={acc:#010x} w={w:#010x} x={x:#010x}"
             );
         }
     }

@@ -100,6 +100,52 @@ fn layer_bias_len(layer: &Layer) -> usize {
     }
 }
 
+/// Copy a tensor-list state into an already-shaped parameter cache
+/// (shape-checked like [`state_to_params`], zero allocations).  The
+/// cache must have been built for the same network.
+fn copy_state_into(net: &Network, state: &TrainState, params: &mut NetworkParams) -> Result<()> {
+    let mut it = state.params.iter();
+    for (layer, slot) in net.layers.iter().zip(params.layers.iter_mut()) {
+        if layer.params() == 0 {
+            continue;
+        }
+        let (Some(w), Some(b)) = (it.next(), it.next()) else {
+            return Err(Error::Runtime(format!(
+                "train state is missing tensors for layer {layer:?}"
+            )));
+        };
+        let want_w = layer.params() - layer_bias_len(layer);
+        let want_b = layer_bias_len(layer);
+        if w.data.len() != want_w || b.data.len() != want_b {
+            return Err(Error::Runtime(format!(
+                "train state tensor shapes {}x{} do not match layer {layer:?}",
+                w.data.len(),
+                b.data.len()
+            )));
+        }
+        let lp = slot.as_mut().expect("cache shaped for this network");
+        lp.w.copy_from_slice(&w.data);
+        lp.b.copy_from_slice(&b.data);
+    }
+    if it.next().is_some() {
+        return Err(Error::Runtime("train state has surplus tensors".into()));
+    }
+    Ok(())
+}
+
+/// Copy engine parameters back into the state's tensors in place (the
+/// allocation-free inverse of [`copy_state_into`]; shapes were
+/// validated on the way in).
+fn params_to_state_into(params: &NetworkParams, state: &mut TrainState) {
+    let mut it = state.params.iter_mut();
+    for p in params.layers.iter().flatten() {
+        let w = it.next().expect("state shape validated");
+        w.data.copy_from_slice(&p.w);
+        let b = it.next().expect("state shape validated");
+        b.data.copy_from_slice(&p.b);
+    }
+}
+
 /// Functional PIM runtime: trains LeNet-5 through the wave-parallel
 /// train engine — or, with `set_shards(N > 1)`, through the
 /// data-parallel [`ClusterEngine`] across `N` modeled chips.
@@ -111,6 +157,15 @@ pub struct Runtime {
     threads: usize,
     shards: usize,
     totals: Mutex<TrainTotals>,
+    /// Persistent cluster engine for `shards > 1` (built lazily on the
+    /// first sharded step, kept warm across steps — its chip pools and
+    /// arenas amortise exactly like the single-chip engine's).
+    /// Invalidated by `set_threads`/`set_shards`.
+    cluster: Mutex<Option<ClusterEngine>>,
+    /// Engine-shaped parameter cache: train steps copy the tensor-list
+    /// state in and out of this instead of rebuilding `NetworkParams`
+    /// (two allocations per tensor per step in PR 3; zero now).
+    cached: Mutex<Option<NetworkParams>>,
 }
 
 impl Runtime {
@@ -128,6 +183,8 @@ impl Runtime {
             threads,
             shards: 1,
             totals: Mutex::new(TrainTotals::default()),
+            cluster: Mutex::new(None),
+            cached: Mutex::new(None),
         })
     }
 
@@ -138,19 +195,20 @@ impl Runtime {
         let model = *self.engine.gemm().model();
         self.threads = threads.max(1);
         self.engine = TrainEngine::new(model, FUNCTIONAL_LANES, self.threads);
+        *self.cluster.get_mut().expect("cluster lock poisoned") = None;
     }
 
     /// Shard every train step across `shards` modeled PIM chips (the
     /// CLI `--shards` flag).  `1` is the single-chip engine, bit for
     /// bit; `N > 1` runs the data-parallel cluster with its priced
     /// gradient all-reduce, whose merged result is identical for every
-    /// shard count ≥ 2.  Host execution uses one scoped thread per chip
-    /// (the cluster's structure), each fanning over
-    /// `max(1, threads / shards)` intra-chip workers — so a shard count
-    /// above `--threads` oversubscribes the host by design; results are
-    /// unaffected either way.
+    /// shard count ≥ 2.  Host execution uses one persistent engine per
+    /// chip, each fanning over `max(1, threads / shards)` intra-chip
+    /// workers — so a shard count above `--threads` oversubscribes the
+    /// host by design; results are unaffected either way.
     pub fn set_shards(&mut self, shards: usize) {
         self.shards = shards.max(1);
+        *self.cluster.get_mut().expect("cluster lock poisoned") = None;
     }
 
     /// Modeled chips each train step is sharded across.
@@ -158,9 +216,9 @@ impl Runtime {
         self.shards
     }
 
-    /// The cluster engine the current `shards`/`threads` provisioning
-    /// implies (built on demand — construction is a few f64 copies).
-    fn cluster(&self) -> ClusterEngine {
+    /// Build the cluster engine the current `shards`/`threads`
+    /// provisioning implies (cached in `self.cluster` by the caller).
+    fn build_cluster(&self) -> ClusterEngine {
         let model = *self.engine.gemm().model();
         let threads_per_shard = (self.threads / self.shards).max(1);
         ClusterEngine::new(
@@ -201,24 +259,35 @@ impl Runtime {
         lr: f32,
     ) -> Result<f32> {
         let batch = labels.len();
-        let mut params = state_to_params(&self.net, state)?;
+        // Engine-shaped parameters: copy the state into the persistent
+        // cache (built on the first step) instead of re-allocating.
+        let mut cache = self.cached.lock().expect("param cache poisoned");
+        match cache.as_mut() {
+            Some(p) => copy_state_into(&self.net, state, p)?,
+            None => *cache = Some(state_to_params(&self.net, state)?),
+        }
+        let params = cache.as_mut().expect("cache just filled");
         let loss = if self.shards > 1 {
-            let r = self
-                .cluster()
-                .train_step(&self.net, &mut params, images, labels, batch, lr)?;
+            let mut cl = self.cluster.lock().expect("cluster lock poisoned");
+            let cl = cl.get_or_insert_with(|| self.build_cluster());
+            let r = cl.train_step(&self.net, params, images, labels, batch, lr)?;
             r.absorb_into(&mut self.totals.lock().expect("totals lock poisoned"));
-            r.loss
+            let loss = r.loss;
+            cl.recycle(r);
+            loss
         } else {
             let r = self
                 .engine
-                .train_step(&self.net, &mut params, images, labels, batch, lr)?;
+                .train_step(&self.net, params, images, labels, batch, lr)?;
             self.totals
                 .lock()
                 .expect("totals lock poisoned")
                 .absorb(&r);
-            r.loss
+            let loss = r.loss;
+            self.engine.recycle(r);
+            loss
         };
-        *state = params_to_state(&self.net, &params);
+        params_to_state_into(params, state);
         Ok(loss)
     }
 

@@ -1,0 +1,258 @@
+//! PR 4 steady-state engine invariants:
+//!
+//! 1. **Arena reuse safety** — a warm engine alternating between two
+//!    different-shaped networks (LeNet-5 and a small MLP) produces
+//!    bit-identical results to fresh engines: recycled scratch cannot
+//!    leak state between steps or shapes.
+//! 2. **Pooled ≡ scoped** — the persistent-pool engine and the frozen
+//!    PR 3 `thread::scope` baseline are bit-identical across thread
+//!    counts {1, 2, 4, 8}, and the pooled cluster matches the scoped
+//!    cluster across shard counts {1, 2, 4}.
+
+use mram_pim::arch::{ExecMode, NetworkParams, TrainEngine, TrainStepResult};
+use mram_pim::cluster::{ClusterConfig, ClusterEngine};
+use mram_pim::fpu::FpCostModel;
+use mram_pim::model::{Layer, Network};
+use mram_pim::prop::Rng;
+
+const LANES: usize = 4096;
+
+fn mlp() -> Network {
+    Network {
+        name: "pa-mlp",
+        input: (1, 4, 5),
+        layers: vec![
+            Layer::Dense { inp: 20, out: 13 },
+            Layer::Relu { units: 13 },
+            Layer::Dense { inp: 13, out: 6 },
+        ],
+    }
+}
+
+fn conv_net() -> Network {
+    Network {
+        name: "pa-conv",
+        input: (1, 8, 8),
+        layers: vec![
+            Layer::Conv2d {
+                in_ch: 1,
+                out_ch: 3,
+                kh: 3,
+                kw: 3,
+                in_h: 8,
+                in_w: 8,
+            },
+            Layer::Relu { units: 3 * 6 * 6 },
+            Layer::AvgPool2 {
+                ch: 3,
+                in_h: 6,
+                in_w: 6,
+            },
+            Layer::Dense { inp: 27, out: 5 },
+        ],
+    }
+}
+
+fn batch_data(net: &Network, batch: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
+    let (c, h, w) = net.input;
+    let classes = net.layers.last().unwrap().out_units();
+    let mut rng = Rng::new(seed);
+    (
+        (0..batch * c * h * w)
+            .map(|_| rng.f32_normal(1).max(0.0)) // ReLU-like sparsity
+            .collect(),
+        (0..batch)
+            .map(|_| rng.below(classes as u64) as i32)
+            .collect(),
+    )
+}
+
+fn param_bits(p: &NetworkParams) -> Vec<u32> {
+    p.layers
+        .iter()
+        .flatten()
+        .flat_map(|lp| lp.w.iter().chain(&lp.b).map(|v| v.to_bits()))
+        .collect()
+}
+
+fn assert_steps_equal(a: &TrainStepResult, b: &TrainStepResult, ctx: &str) {
+    assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "{ctx}: loss");
+    assert_eq!(a.total_macs(), b.total_macs(), "{ctx}: macs");
+    assert_eq!(a.waves, b.waves, "{ctx}: waves");
+    assert_eq!(a.adds_bwd, b.adds_bwd, "{ctx}: adds_bwd");
+    assert_eq!(a.latency_s, b.latency_s, "{ctx}: latency");
+    assert_eq!(a.energy_j, b.energy_j, "{ctx}: energy");
+    assert_eq!(a.grads.len(), b.grads.len(), "{ctx}: grad layers");
+    for (l, (ga, gb)) in a.grads.iter().zip(&b.grads).enumerate() {
+        match (ga, gb) {
+            (None, None) => {}
+            (Some(ga), Some(gb)) => {
+                for (x, y) in ga.w.iter().zip(&gb.w) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: layer {l} dW");
+                }
+                for (x, y) in ga.b.iter().zip(&gb.b) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: layer {l} db");
+                }
+            }
+            _ => panic!("{ctx}: grad presence mismatch at layer {l}"),
+        }
+    }
+}
+
+/// Satellite 3a: one warm engine alternating LeNet-5 and MLP steps is
+/// bit-identical to fresh engines per step — no stale-scratch leakage
+/// across steps *or* shapes.
+#[test]
+fn warm_engine_alternating_shapes_matches_fresh_engines() {
+    let lenet = Network::lenet5();
+    let mlp = mlp();
+    let (xl, ll) = batch_data(&lenet, 2, 0x11A);
+    let (xm, lm) = batch_data(&mlp, 4, 0x11B);
+
+    let warm = TrainEngine::new(FpCostModel::proposed_fp32(), LANES, 4);
+    let mut warm_lenet = NetworkParams::init(&lenet, 7);
+    let mut warm_mlp = NetworkParams::init(&mlp, 8);
+    let mut fresh_lenet = warm_lenet.clone();
+    let mut fresh_mlp = warm_mlp.clone();
+
+    for round in 0..2 {
+        // LeNet-5 step on the warm (shared-arena) engine…
+        let rw = warm
+            .train_step(&lenet, &mut warm_lenet, &xl, &ll, 2, 0.05)
+            .unwrap();
+        // …vs a brand-new engine continuing the same parameter history.
+        let fresh = TrainEngine::new(FpCostModel::proposed_fp32(), LANES, 4);
+        let rf = fresh
+            .train_step(&lenet, &mut fresh_lenet, &xl, &ll, 2, 0.05)
+            .unwrap();
+        assert_steps_equal(&rw, &rf, &format!("lenet round {round}"));
+        warm.recycle(rw);
+        assert_eq!(
+            param_bits(&warm_lenet),
+            param_bits(&fresh_lenet),
+            "lenet params round {round}"
+        );
+
+        // MLP step interleaved on the same warm engine.
+        let rw = warm
+            .train_step(&mlp, &mut warm_mlp, &xm, &lm, 4, 0.1)
+            .unwrap();
+        let fresh = TrainEngine::new(FpCostModel::proposed_fp32(), LANES, 4);
+        let rf = fresh
+            .train_step(&mlp, &mut fresh_mlp, &xm, &lm, 4, 0.1)
+            .unwrap();
+        assert_steps_equal(&rw, &rf, &format!("mlp round {round}"));
+        warm.recycle(rw);
+        assert_eq!(
+            param_bits(&warm_mlp),
+            param_bits(&fresh_mlp),
+            "mlp params round {round}"
+        );
+    }
+}
+
+/// Satellite 3b: pooled ≡ scoped across thread counts on a conv+dense
+/// net — same losses, same gradients, same updated parameters, same
+/// priced ledger.
+#[test]
+fn pooled_matches_scoped_across_thread_counts() {
+    let net = conv_net();
+    let batch = 5;
+    let (x, labels) = batch_data(&net, batch, 0x9C2);
+
+    // Reference: scoped (PR 3) at 1 thread.
+    let reference = TrainEngine::new_mode(FpCostModel::proposed_fp32(), LANES, 1, ExecMode::Scoped);
+    let mut p_ref = NetworkParams::init(&net, 3);
+    let r_ref = reference
+        .train_step(&net, &mut p_ref, &x, &labels, batch, 0.1)
+        .unwrap();
+    let bits_ref = param_bits(&p_ref);
+
+    for threads in [1usize, 2, 4, 8] {
+        for mode in [ExecMode::Pooled, ExecMode::Scoped] {
+            let eng = TrainEngine::new_mode(FpCostModel::proposed_fp32(), LANES, threads, mode);
+            let mut p = NetworkParams::init(&net, 3);
+            let r = eng
+                .train_step(&net, &mut p, &x, &labels, batch, 0.1)
+                .unwrap();
+            assert_steps_equal(&r, &r_ref, &format!("threads {threads} {mode:?}"));
+            assert_eq!(
+                param_bits(&p),
+                bits_ref,
+                "threads {threads} {mode:?}: updated params"
+            );
+            eng.recycle(r);
+        }
+    }
+}
+
+/// Satellite 3b (cluster): the pooled cluster (persistent chip engines
+/// + chip pool) matches the scoped cluster baseline bit for bit across
+/// shard counts, and shard counts ≥ 2 agree with each other.
+#[test]
+fn pooled_cluster_matches_scoped_across_shards() {
+    let net = mlp();
+    let batch = 8;
+    let (x, labels) = batch_data(&net, batch, 0xC1A);
+
+    let mut multi_shard_bits: Option<Vec<u32>> = None;
+    for shards in [1usize, 2, 4] {
+        let mut mode_bits: Option<Vec<u32>> = None;
+        for mode in [ExecMode::Pooled, ExecMode::Scoped] {
+            let eng = ClusterEngine::new_mode(
+                FpCostModel::proposed_fp32(),
+                LANES,
+                ClusterConfig::new(shards, 2),
+                mode,
+            );
+            let mut p = NetworkParams::init(&net, 17);
+            let r = eng
+                .train_step(&net, &mut p, &x, &labels, batch, 0.1)
+                .unwrap();
+            assert!(r.loss.is_finite());
+            let bits = param_bits(&p);
+            match &mode_bits {
+                None => mode_bits = Some(bits),
+                Some(want) => {
+                    assert_eq!(&bits, want, "shards {shards}: pooled vs scoped diverged")
+                }
+            }
+            eng.recycle(r);
+        }
+        if shards >= 2 {
+            match &multi_shard_bits {
+                None => multi_shard_bits = mode_bits,
+                Some(want) => assert_eq!(
+                    mode_bits.as_ref(),
+                    Some(want),
+                    "shards {shards} diverged from other multi-shard counts"
+                ),
+            }
+        }
+    }
+}
+
+/// A second consecutive step on a warm pooled engine reuses recycled
+/// buffers and still matches the scoped baseline (regression guard for
+/// take/give pairing bugs that only show on the *second* step).
+#[test]
+fn second_step_on_warm_engine_matches_scoped() {
+    let net = conv_net();
+    let batch = 4;
+    let (x, labels) = batch_data(&net, batch, 0x5EC);
+    let pooled = TrainEngine::new(FpCostModel::proposed_fp32(), LANES, 4);
+    let scoped = TrainEngine::new_mode(FpCostModel::proposed_fp32(), LANES, 2, ExecMode::Scoped);
+    let mut pp = NetworkParams::init(&net, 6);
+    let mut ps = pp.clone();
+    for step in 0..3 {
+        let rp = pooled
+            .train_step(&net, &mut pp, &x, &labels, batch, 0.08)
+            .unwrap();
+        let rs = scoped
+            .train_step(&net, &mut ps, &x, &labels, batch, 0.08)
+            .unwrap();
+        assert_steps_equal(&rp, &rs, &format!("step {step}"));
+        pooled.recycle(rp);
+        assert_eq!(param_bits(&pp), param_bits(&ps), "step {step} params");
+    }
+}

@@ -1,0 +1,139 @@
+//! Steady-state allocation audit: after one warm-up step (and with
+//! results recycled), a pooled train step must perform **zero** heap
+//! allocations — the PR 4 contract.  Measured with the counting global
+//! allocator over *all* threads, so a stray allocation on a pool
+//! worker fails too.
+//!
+//! Everything lives in one `#[test]` so no concurrently-running test
+//! can pollute the global counters.
+
+use mram_pim::arch::{ExecMode, NetworkParams, TrainEngine};
+use mram_pim::bench::{heap_allocations, CountingAllocator};
+use mram_pim::data::Dataset;
+use mram_pim::fpu::FpCostModel;
+use mram_pim::model::{Layer, Network};
+use mram_pim::prop::Rng;
+use mram_pim::runtime::{Runtime, FUNCTIONAL_LANES};
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+fn small_conv_net() -> Network {
+    Network {
+        name: "alloc-conv",
+        input: (1, 6, 6),
+        layers: vec![
+            Layer::Conv2d {
+                in_ch: 1,
+                out_ch: 2,
+                kh: 3,
+                kw: 3,
+                in_h: 6,
+                in_w: 6,
+            },
+            Layer::Relu { units: 2 * 4 * 4 },
+            Layer::AvgPool2 {
+                ch: 2,
+                in_h: 4,
+                in_w: 4,
+            },
+            Layer::Dense { inp: 8, out: 4 },
+            Layer::Relu { units: 4 },
+            Layer::Dense { inp: 4, out: 4 },
+        ],
+    }
+}
+
+fn batch_data(net: &Network, batch: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
+    let (c, h, w) = net.input;
+    let classes = net.layers.last().unwrap().out_units();
+    let mut rng = Rng::new(seed);
+    (
+        (0..batch * c * h * w)
+            .map(|_| rng.f32_normal(1).max(0.0)) // exact zeros included
+            .collect(),
+        (0..batch)
+            .map(|_| rng.below(classes as u64) as i32)
+            .collect(),
+    )
+}
+
+/// Warm `steps` train steps (recycling), then return the allocation
+/// count of one more step + recycle.
+fn steady_step_allocs(
+    eng: &TrainEngine,
+    net: &Network,
+    params: &mut NetworkParams,
+    x: &[f32],
+    labels: &[i32],
+    batch: usize,
+    steps: usize,
+) -> u64 {
+    for _ in 0..steps {
+        let r = eng
+            .train_step(net, params, x, labels, batch, 0.05)
+            .expect("warm step");
+        eng.recycle(r);
+    }
+    let before = heap_allocations();
+    let r = eng
+        .train_step(net, params, x, labels, batch, 0.05)
+        .expect("steady step");
+    eng.recycle(r);
+    heap_allocations() - before
+}
+
+#[test]
+fn steady_state_train_step_does_not_touch_the_heap() {
+    let net = small_conv_net();
+    let batch = 3;
+    let (x, labels) = batch_data(&net, batch, 0xA110C);
+
+    // ---- pooled engine, threads 1 and 4: zero allocations ----
+    for threads in [1usize, 4] {
+        let eng = TrainEngine::new(FpCostModel::proposed_fp32(), 1024, threads);
+        let mut params = NetworkParams::init(&net, 9);
+        let allocs = steady_step_allocs(&eng, &net, &mut params, &x, &labels, batch, 2);
+        assert_eq!(
+            allocs, 0,
+            "pooled steady-state step allocated (threads {threads})"
+        );
+    }
+
+    // ---- sanity: the counter works — the scoped PR 3 baseline
+    //      allocates every buffer fresh ----
+    let scoped = TrainEngine::new_mode(FpCostModel::proposed_fp32(), 1024, 2, ExecMode::Scoped);
+    let mut params = NetworkParams::init(&net, 9);
+    let allocs = steady_step_allocs(&scoped, &net, &mut params, &x, &labels, batch, 2);
+    assert!(
+        allocs > 10,
+        "counting allocator should see the scoped baseline's per-step allocations, saw {allocs}"
+    );
+
+    // ---- the functional runtime's single-chip step loop is also
+    //      allocation-free once warm (params cache + in-place state
+    //      copy-back) ----
+    let mut rt = Runtime::load_dir("artifacts").expect("functional backend");
+    rt.set_threads(2);
+    let mut data = Dataset::synthetic(8, 3);
+    let b = data.next_batch(4);
+    let mut state = rt.init_params(3).expect("init");
+    for _ in 0..2 {
+        rt.train_step(&mut state, &b.images, &b.labels, 0.05)
+            .expect("warm runtime step");
+    }
+    let before = heap_allocations();
+    let loss = rt
+        .train_step(&mut state, &b.images, &b.labels, 0.05)
+        .expect("steady runtime step");
+    let rt_allocs = heap_allocations() - before;
+    assert!(loss.is_finite());
+    assert_eq!(rt_allocs, 0, "runtime steady-state step allocated");
+    let totals = rt.functional_totals().expect("ledger");
+    assert_eq!(totals.steps, 3);
+    assert!(totals.matches_analytic(
+        &Network::lenet5(),
+        4,
+        FUNCTIONAL_LANES as u64
+    ));
+}

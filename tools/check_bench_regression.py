@@ -1,0 +1,114 @@
+#!/usr/bin/env python3
+"""Compare freshly-emitted bench JSON against the committed baseline.
+
+The benches write ``BENCH_<name>.json`` into the working directory when
+run with ``-- --json`` — overwriting the committed baselines — so this
+script reads the *committed* version via ``git show HEAD:<file>`` and
+compares it to the file on disk (the fresh run).
+
+Gate: the ``train_step`` pooled entry must not regress more than
+``--max-regress-pct`` (default 10, env ``BENCH_REGRESSION_PCT``)
+versus the committed baseline's ``mean_ns``.  All other shared entries
+are reported but informational.
+
+Baselines are hardware-dependent: after intentional perf changes (or on
+new hardware) re-run the benches with ``-- --json`` and commit the
+refreshed ``BENCH_*.json`` files (they are the new baseline).  Set
+``BENCH_REGRESSION_SKIP=1`` to bypass the gate entirely.
+
+Usage:
+    python3 tools/check_bench_regression.py [--max-regress-pct N]
+"""
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+BENCHES = [
+    "BENCH_train_step.json",
+    "BENCH_gemm_wave.json",
+    "BENCH_cluster_scaling.json",
+]
+
+# The gated entry: the steady-state pooled train step.
+GATE_FILE = "BENCH_train_step.json"
+GATE_NAME = "lenet5 train step batch 32 (threads 4, pooled)"
+
+
+def load_committed(path):
+    try:
+        out = subprocess.run(
+            ["git", "show", f"HEAD:{path}"],
+            capture_output=True,
+            text=True,
+            check=True,
+        ).stdout
+    except (subprocess.CalledProcessError, FileNotFoundError):
+        return None
+    return json.loads(out)
+
+
+def load_fresh(path):
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def by_name(entries):
+    return {e["name"]: e for e in entries or []}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--max-regress-pct",
+        type=float,
+        default=float(os.environ.get("BENCH_REGRESSION_PCT", "10")),
+        help="fail when the gated entry is this much slower than baseline",
+    )
+    args = ap.parse_args()
+
+    if os.environ.get("BENCH_REGRESSION_SKIP") == "1":
+        print("BENCH_REGRESSION_SKIP=1: skipping bench regression gate")
+        return 0
+
+    failures = []
+    for path in BENCHES:
+        base = by_name(load_committed(path))
+        fresh = by_name(load_fresh(path))
+        if not base:
+            print(f"{path}: no committed baseline (skipping)")
+            continue
+        if not fresh:
+            print(f"{path}: bench output missing (did the bench run with -- --json?)")
+            failures.append(f"{path} missing fresh output")
+            continue
+        for name in sorted(base.keys() & fresh.keys()):
+            b, f = base[name]["mean_ns"], fresh[name]["mean_ns"]
+            delta = (f - b) / b * 100.0 if b else 0.0
+            gated = path == GATE_FILE and name == GATE_NAME
+            tag = "GATE" if gated else "info"
+            print(f"[{tag}] {name}: baseline {b/1e6:.2f} ms, fresh {f/1e6:.2f} ms ({delta:+.1f}%)")
+            if gated and delta > args.max_regress_pct:
+                failures.append(
+                    f"{name}: {delta:+.1f}% vs baseline (limit +{args.max_regress_pct}%)"
+                )
+        if path == GATE_FILE and GATE_NAME not in base:
+            failures.append(f"{path}: committed baseline lacks gated entry '{GATE_NAME}'")
+        if path == GATE_FILE and fresh and GATE_NAME not in fresh:
+            failures.append(f"{path}: fresh run lacks gated entry '{GATE_NAME}'")
+
+    if failures:
+        print("\nbench regression gate FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("\nbench regression gate OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
