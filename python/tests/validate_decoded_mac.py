@@ -1,0 +1,243 @@
+"""Validation harness for the PR 5 pre-decoded-operand MAC.
+
+Ports the bit-exact PIM softfloat reference (rust/src/fpu/softfloat.rs)
+to Python and exhaustively checks the decoded-operand MAC
+
+    pim_mac_acc_dec(acc, pim_decode(w), x)
+        == pim_mac_acc_bits(acc, w, x)
+        == pim_add(acc, pim_mul(w, x))
+
+where `pim_decode` packs one operand's sign / exponent field /
+significand-with-implicit-bit into a single word so the GEMM kernels
+can split the weight operand once per panel instead of once per MAC.
+The packing must be lossless (`pim_encode` is the exact inverse) and
+the decoded MAC must keep the FTZ zero-operand shortcut and the shared
+normalise/round core bit for bit.
+
+Run: python3 python/tests/validate_decoded_mac.py
+(Repo convention: the authoring container has no Rust toolchain, so the
+numerics are pre-validated here; the Rust test
+`fpu::softfloat::tests::mac_dec_matches_chain_on_triple_grid` re-checks
+the same grids on every `cargo test`.)
+"""
+
+QNAN = 0x7FC00000
+INF = 0x7F800000
+EXP = 0x7F800000
+MIN_NORMAL_MANT = 0x00800000
+M32 = 0xFFFFFFFF
+
+
+def fields(bits):
+    return (bits >> 31) & 1, (bits >> 23) & 0xFF, bits & 0x7FFFFF
+
+
+def mul_core_sig(sign, ea, ma, eb, mb):
+    """Shared normalise/round core on 24-bit significands (mirrors the
+    Rust mul_core_sig exactly)."""
+    p = ma * mb
+    top_set = (p >> 47) & 1
+    s = 23 + top_set
+    mant_preround = (p >> s) & 0xFFFFFF
+    guard = (p >> (s - 1)) & 1
+    sticky = (p & ((1 << (s - 1)) - 1)) != 0
+    round_up = guard == 1 and (sticky or (mant_preround & 1) == 1)
+    mant = mant_preround + (1 if round_up else 0)
+    e = ea + eb - 127 + top_set
+    e0 = e
+    if mant == 1 << 24:
+        mant >>= 1
+        e += 1
+    if e >= 255:
+        return sign | INF
+    if e <= 0:
+        if e0 == 0 and mant_preround == 0xFFFFFF:
+            return sign | MIN_NORMAL_MANT
+        return sign
+    return sign | (e << 23) | (mant & 0x7FFFFF)
+
+
+def pim_mul_bits(abits, bbits):
+    sa, ea, fa = fields(abits)
+    sb, eb, fb = fields(bbits)
+    a_nan = ea == 255 and fa != 0
+    b_nan = eb == 255 and fb != 0
+    a_inf = ea == 255 and fa == 0
+    b_inf = eb == 255 and fb == 0
+    a_zero = ea == 0
+    b_zero = eb == 0
+    sign = ((sa ^ sb) << 31) & M32
+    if a_nan or b_nan or (a_inf and b_zero) or (b_inf and a_zero):
+        return QNAN
+    if a_inf or b_inf:
+        return sign | INF
+    if a_zero or b_zero:
+        return sign
+    return mul_core_sig(sign, ea, fa | MIN_NORMAL_MANT, eb, fb | MIN_NORMAL_MANT)
+
+
+def pim_add_bits(abits, bbits):
+    sa, ea, fa = fields(abits)
+    sb, eb, fb = fields(bbits)
+    a_nan = ea == 255 and fa != 0
+    b_nan = eb == 255 and fb != 0
+    a_inf = ea == 255 and fa == 0
+    b_inf = eb == 255 and fb == 0
+    a_zero = ea == 0
+    b_zero = eb == 0
+    if a_nan or b_nan or (a_inf and b_inf and sa != sb):
+        return QNAN
+    if a_inf:
+        return abits
+    if b_inf:
+        return bbits
+    if a_zero and b_zero:
+        return ((sa & sb) << 31) & M32
+    if a_zero:
+        return bbits
+    if b_zero:
+        return abits
+
+    if (abits & 0x7FFFFFFF) >= (bbits & 0x7FFFFFFF):
+        xbits, ybits = abits, bbits
+    else:
+        xbits, ybits = bbits, abits
+    sx, ex, fx = fields(xbits)
+    _, ey, fy = fields(ybits)
+    mx = (fx | MIN_NORMAL_MANT) << 3
+    my = (fy | MIN_NORMAL_MANT) << 3
+    d = min(ex - ey, 27)
+    lost = my & ((1 << d) - 1)
+    my_al = (my >> d) | (1 if lost != 0 else 0)
+    subtract = sx != (ybits >> 31) & 1
+    total = (mx - my_al) if subtract else (mx + my_al)
+    if total == 0:
+        return 0
+    p = total.bit_length() - 1
+    if p == 27:
+        total_n, e0 = (total >> 1) | (total & 1), ex + 1
+    else:
+        total_n, e0 = total << (26 - p), ex - (26 - p)
+    kept_preround = total_n >> 3
+    rb = (total_n >> 2) & 1
+    st = (total_n & 3) != 0
+    round_up = rb == 1 and (st or (kept_preround & 1) == 1)
+    kept = kept_preround + (1 if round_up else 0)
+    e = e0
+    if kept == 1 << 24:
+        kept >>= 1
+        e += 1
+    sign = (sx << 31) & M32
+    if e >= 255:
+        return sign | INF
+    if e <= 0:
+        if e0 == 0 and kept_preround == 0xFFFFFF:
+            return sign | MIN_NORMAL_MANT
+        return sign
+    return sign | (e << 23) | (kept & 0x7FFFFF)
+
+
+def pim_mac_acc_bits(acc, w, x):
+    """The PR 4 raw-bits shortcut MAC (reference for the decoded one)."""
+    we = w & EXP
+    xe = x & EXP
+    if (we == 0 or xe == 0) and we != EXP and xe != EXP:
+        if (acc & EXP) != 0 and (acc & 0x7FFFFFFF) <= INF:
+            return acc
+        return pim_add_bits(acc, (w ^ x) & 0x80000000)
+    return pim_add_bits(acc, pim_mul_bits(w, x))
+
+
+def pim_decode(bits):
+    """Mirror of the Rust pim_decode: significand (implicit bit attached
+    for normals) in [23:0], exponent field in [31:24], sign in [32]."""
+    e = (bits >> 23) & 0xFF
+    f = bits & 0x7FFFFF
+    mant = (f | MIN_NORMAL_MANT) if 1 <= e <= 254 else f
+    return mant | (e << 24) | (((bits >> 31) & 1) << 32)
+
+
+def pim_encode(dec):
+    return ((((dec >> 32) & 1) << 31) | (((dec >> 24) & 0xFF) << 23) | (dec & 0x7FFFFF)) & M32
+
+
+def pim_mac_acc_dec(acc, wdec, x):
+    """Mirror of the Rust pim_mac_acc_dec, branch for branch."""
+    we = (wdec >> 24) & 0xFF
+    xe = x & EXP
+    if (we == 0 or xe == 0) and we != 255 and xe != EXP:
+        if (acc & EXP) != 0 and (acc & 0x7FFFFFFF) <= INF:
+            return acc
+        wsign = ((wdec >> 32) & 1) << 31
+        return pim_add_bits(acc, (wsign ^ x) & 0x80000000)
+    xef = (x >> 23) & 0xFF
+    if 1 <= we <= 254 and 1 <= xef <= 254:
+        sign = ((((wdec >> 32) & 1) ^ ((x >> 31) & 1)) << 31) & M32
+        prod = mul_core_sig(sign, we, wdec & 0xFFFFFF, xef, (x & 0x7FFFFF) | MIN_NORMAL_MANT)
+        return pim_add_bits(acc, prod)
+    return pim_add_bits(acc, pim_mul_bits(pim_encode(wdec), x))
+
+
+def edge_bit_patterns():
+    exps = [0, 1, 2, 127, 253, 254, 255]
+    mants = [0, 1, 0x400000, 0x7FFFFF]
+    out = []
+    for e in exps:
+        for m in mants:
+            for s in (0, 1):
+                out.append(((s << 31) | (e << 23) | m) & M32)
+    return out
+
+
+def main():
+    grid = edge_bit_patterns()
+
+    # decode/encode is a lossless pair on every pattern class
+    for b in grid:
+        assert pim_encode(pim_decode(b)) == b, f"roundtrip {b:#010x}"
+
+    n = 0
+    for acc in grid:
+        for w in grid:
+            wdec = pim_decode(w)
+            for x in grid:
+                got = pim_mac_acc_dec(acc, wdec, x)
+                want = pim_mac_acc_bits(acc, w, x)
+                chain = pim_add_bits(acc, pim_mul_bits(w, x))
+                assert got == want == chain, (
+                    f"mismatch acc={acc:#010x} w={w:#010x} x={x:#010x}: "
+                    f"dec={got:#010x} fast={want:#010x} chain={chain:#010x}"
+                )
+                n += 1
+    print(f"edge-grid triples OK: {n}")
+
+    state = 0xDECAF00DCAFED00D
+    zero_w = zero_x = 0
+    for i in range(300_000):
+        state ^= (state << 13) & 0xFFFFFFFFFFFFFFFF
+        state ^= state >> 7
+        state ^= (state << 17) & 0xFFFFFFFFFFFFFFFF
+        acc = state & M32
+        state ^= (state << 13) & 0xFFFFFFFFFFFFFFFF
+        state ^= state >> 7
+        state ^= (state << 17) & 0xFFFFFFFFFFFFFFFF
+        w = state & M32
+        x = (state >> 32) & M32
+        if i % 2 == 0:
+            x &= 0x807FFFFF  # force zero-class x on half the samples
+        if i % 3 == 0:
+            w &= 0x807FFFFF  # and zero-class w (the decoded side) on a third
+        assert pim_encode(pim_decode(w)) == w
+        got = pim_mac_acc_dec(acc, pim_decode(w), x)
+        want = pim_mac_acc_bits(acc, w, x)
+        assert got == want, f"random mismatch acc={acc:#010x} w={w:#010x} x={x:#010x}"
+        if (w & EXP) == 0:
+            zero_w += 1
+        if (x & EXP) == 0:
+            zero_x += 1
+    print(f"random triples OK (zero-class w in {zero_w}, x in {zero_x})")
+    print("decoded-operand MAC is bit-identical")
+
+
+if __name__ == "__main__":
+    main()

@@ -75,6 +75,29 @@ fn main() {
         },
     );
 
+    // The backward layouts on the same operands (PR 5): dgrad reads W
+    // by k-rows (NN), wgrad reads both operands by k-rows (TN) — the
+    // transpose-free kernels the training engine now lowers onto.
+    let delta: Vec<f32> = (0..batch * out).map(|_| rng.f32_normal(2)).collect();
+    let r_nn = bench(
+        &format!("gemm nn dgrad {inp}x{out} batch {batch} (threads 4)"),
+        1,
+        10,
+        || {
+            // dX = δ·W: [batch, out] × [out, inp]
+            std::hint::black_box(e4.gemm_nn(&delta, &w, batch, out, inp));
+        },
+    );
+    let r_tn = bench(
+        &format!("gemm tn wgrad {out}x{inp} batch {batch} (threads 4)"),
+        1,
+        10,
+        || {
+            // dW = δᵀ·X: [batch, out]ᵀ × [batch, inp]
+            std::hint::black_box(e4.gemm_tn(&delta, &xb, out, batch, inp));
+        },
+    );
+
     // Conv2d through the same engine (LeNet conv2 shape, im2col lowering).
     let conv = Layer::Conv2d {
         in_ch: 6,
@@ -111,6 +134,8 @@ fn main() {
     results.push(r_seed);
     results.push(r1);
     results.push(r4);
+    results.push(r_nn);
+    results.push(r_tn);
     results.push(r_conv);
     emit("gemm_wave", &results);
 

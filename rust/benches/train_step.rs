@@ -1,22 +1,34 @@
-//! Functional train-step bench + the PR 4 steady-state acceptance gate.
+//! Functional train-step bench + the PR 5 blocked-kernel acceptance
+//! gate.
 //!
 //! Benches LeNet-5 fwd+bwd+update through the wave-parallel train
-//! engine in both execution modes:
+//! engine in three execution modes:
 //!
-//! * **pooled** — persistent worker pool, scratch-arena recycling,
-//!   zero-operand MAC shortcut (the steady-state engine), and
-//! * **scoped** — the frozen PR 3 baseline (fresh `thread::scope`
-//!   workers per GEMM, fresh allocations per buffer, plain MAC chain),
+//! * **pooled** — the PR 5 steady-state engine: blocked layout-aware
+//!   kernels (NT/NN/TN), pre-decoded weight panels, transpose-free
+//!   backward, persistent worker pool, scratch-arena recycling;
+//! * **flat** — the frozen PR 4 steady-state floor (`ExecMode::Flat`):
+//!   same pool and arena, but the flat per-MAC-decode row loop and the
+//!   transpose-based backward lowering;
+//! * **scoped** — the frozen PR 3 *execution shape* (fresh
+//!   `thread::scope` workers per GEMM, fresh allocations), reported for
+//!   the long-term trajectory.  Note: since the PR 5 inner-loop dedupe
+//!   it shares the flat shortcut-chain loop with the Flat floor, so its
+//!   wall-clock is a touch faster than the PR 3 engine literally
+//!   shipped — the spawn/alloc behaviour is what this mode freezes.
 //!
-//! and asserts in-binary that the pooled engine beats the scoped
-//! baseline by ≥1.5× mean wall-clock at batch 32 / threads 4
-//! (`TRAIN_STEP_MIN_SPEEDUP` overrides the floor for noisy runners),
-//! that a steady-state pooled step performs **zero heap allocations**
-//! (counting global allocator; `TRAIN_STEP_ALLOC_TOLERANCE` overrides),
-//! and **zero thread spawns** (the pool's launch counter).
+//! In-binary gates: the blocked pooled engine must beat the flat PR 4
+//! floor by **≥1.3× mean wall-clock** at batch 32 / threads 4
+//! (`TRAIN_STEP_MIN_SPEEDUP` overrides the floor for noisy runners; CI
+//! uses a relaxed value), a steady-state step in *either* pooled mode
+//! must perform **zero heap allocations** (counting global allocator;
+//! `TRAIN_STEP_ALLOC_TOLERANCE` overrides) and **zero thread spawns**
+//! (the pool's launch counter), the pooled and flat engines must
+//! produce bit-identical losses and updated weights, and the ledger
+//! must equal the analytic `training_work` exactly.
 //!
 //! Also reports the forward-only pass for the fwd:bwd:update split that
-//! EXPERIMENTS.md compares against Fig. 6's phase ratios.
+//! EXPERIMENTS.md compares against Fig. 6.
 //!
 //! Run: `cargo bench --bench train_step` (add `-- --json` for the
 //! machine-readable `BENCH_train_step.json`; CI uploads the sidecar and
@@ -41,6 +53,36 @@ fn env_f64(name: &str, default: f64) -> f64 {
         .unwrap_or(default)
 }
 
+/// Warm the engine, then measure allocations + spawns of one steady
+/// step; returns (allocs, spawns, loss).
+fn steady_audit(
+    eng: &TrainEngine,
+    net: &Network,
+    images: &[f32],
+    labels: &[i32],
+    batch: usize,
+) -> (u64, u64, f32) {
+    let mut p = NetworkParams::init(net, 7);
+    for _ in 0..2 {
+        let r = eng
+            .train_step(net, &mut p, images, labels, batch, 0.05)
+            .expect("warm step");
+        eng.recycle(r);
+    }
+    let spawns0 = worker_launches();
+    let allocs0 = heap_allocations();
+    let r = eng
+        .train_step(net, &mut p, images, labels, batch, 0.05)
+        .expect("steady step");
+    let loss = r.loss;
+    eng.recycle(r);
+    (
+        heap_allocations() - allocs0,
+        worker_launches() - spawns0,
+        loss,
+    )
+}
+
 fn main() {
     let net = Network::lenet5();
     let batch = 32usize;
@@ -63,6 +105,7 @@ fn main() {
 
     let pooled1 = TrainEngine::new(FpCostModel::proposed_fp32(), 32_768, 1);
     let pooled4 = TrainEngine::new(FpCostModel::proposed_fp32(), 32_768, 4);
+    let flat4 = TrainEngine::new_mode(FpCostModel::proposed_fp32(), 32_768, 4, ExecMode::Flat);
     let scoped4 = TrainEngine::new_mode(
         FpCostModel::proposed_fp32(),
         32_768,
@@ -83,11 +126,10 @@ fn main() {
         },
     );
 
-    // Full train step: pooled threads 1 / 4, scoped threads 4 (the PR 3
-    // baseline).  Each iteration trains from a fresh init so the work
-    // is identical across iterations; the pooled loops recycle results
-    // (the steady-state contract), the scoped loop drops them (PR 3
-    // had nothing to recycle into).
+    // Full train step per mode.  Each iteration trains from a fresh
+    // init so the work is identical across iterations; the pool/arena
+    // loops recycle results (the steady-state contract), the scoped
+    // loop drops them (PR 3 had nothing to recycle into).
     let r1 = bench(
         &format!("lenet5 train step batch {batch} (threads 1, pooled)"),
         1,
@@ -101,7 +143,6 @@ fn main() {
             pooled1.recycle(r);
         },
     );
-    let spawns_before_pooled = worker_launches();
     let r4 = bench(
         &format!("lenet5 train step batch {batch} (threads 4, pooled)"),
         1,
@@ -115,7 +156,19 @@ fn main() {
             pooled4.recycle(r);
         },
     );
-    let pooled_spawns = worker_launches() - spawns_before_pooled;
+    let rf = bench(
+        &format!("lenet5 train step batch {batch} (threads 4, flat PR4 baseline)"),
+        1,
+        6,
+        || {
+            let mut p = NetworkParams::init(&net, 7);
+            let r = flat4
+                .train_step(&net, &mut p, &images, &labels, batch, 0.05)
+                .expect("train step");
+            std::hint::black_box(r.loss);
+            flat4.recycle(r);
+        },
+    );
     let spawns_before_scoped = worker_launches();
     let rs = bench(
         &format!("lenet5 train step batch {batch} (threads 4, scoped PR3 baseline)"),
@@ -131,35 +184,43 @@ fn main() {
     );
     let scoped_spawns = (worker_launches() - spawns_before_scoped) as f64 / 7.0; // warmup + 6 iters
 
-    // ---- steady-state allocation + spawn audit (pooled engine) ----
-    let mut p = NetworkParams::init(&net, 7);
-    for _ in 0..2 {
-        let r = pooled4
-            .train_step(&net, &mut p, &images, &labels, batch, 0.05)
-            .expect("warm step");
-        pooled4.recycle(r);
-    }
-    let spawns0 = worker_launches();
-    let allocs0 = heap_allocations();
-    let r = pooled4
-        .train_step(&net, &mut p, &images, &labels, batch, 0.05)
-        .expect("steady step");
-    let loss_steady = r.loss;
-    pooled4.recycle(r);
-    let steady_allocs = heap_allocations() - allocs0;
-    let steady_spawns = worker_launches() - spawns0;
-    std::hint::black_box(loss_steady);
+    // ---- steady-state allocation + spawn audit: the blocked engine
+    //      and the flat floor must both be clean, so the speedup below
+    //      is a kernel comparison, not an allocator artifact ----
+    let (pooled_allocs, pooled_spawns, loss_pooled) =
+        steady_audit(&pooled4, &net, &images, &labels, batch);
+    let (flat_allocs, flat_spawns, loss_flat) =
+        steady_audit(&flat4, &net, &images, &labels, batch);
+    assert_eq!(
+        loss_pooled.to_bits(),
+        loss_flat.to_bits(),
+        "blocked kernels drifted from the PR 4 floor"
+    );
 
-    // One verified step for the ledger numbers the table quotes.
-    let mut p = NetworkParams::init(&net, 7);
+    // One verified step per mode: bit-identical losses and updated
+    // weights, ledger equal to the analytic model.
+    let mut p_pooled = NetworkParams::init(&net, 7);
     let step = pooled4
-        .train_step(&net, &mut p, &images, &labels, batch, 0.05)
+        .train_step(&net, &mut p_pooled, &images, &labels, batch, 0.05)
         .expect("train step");
     assert_eq!(step.total_macs(), work.total_macs(), "ledger drifted");
     assert_eq!(step.macs_bwd, 2 * step.macs_fwd);
+    let mut p_flat = NetworkParams::init(&net, 7);
+    let step_flat = flat4
+        .train_step(&net, &mut p_flat, &images, &labels, batch, 0.05)
+        .expect("train step");
+    assert_eq!(step.loss.to_bits(), step_flat.loss.to_bits());
+    assert_eq!(step.waves, step_flat.waves);
+    for (a, b) in p_pooled.layers.iter().flatten().zip(p_flat.layers.iter().flatten()) {
+        for (x, y) in a.w.iter().zip(&b.w) {
+            assert!(x.to_bits() == y.to_bits(), "updated weights diverged");
+        }
+    }
+    flat4.recycle(step_flat);
 
     let macs = work.total_macs() as f64;
-    let speedup = rs.mean_ns / r4.mean_ns;
+    let speedup = rf.mean_ns / r4.mean_ns;
+    let speedup_scoped = rs.mean_ns / r4.mean_ns;
     println!(
         "host throughput: {:.1}M train MACs/s (threads 4, pooled); fwd:bwd:update MAC split = 1 : {:.2} : {:.4}",
         r4.throughput(macs) / 1e6,
@@ -175,35 +236,43 @@ fn main() {
         r4.mean_ns / r_fwd.mean_ns
     );
     println!(
-        "steady-state audit: {steady_allocs} heap allocations, {steady_spawns} thread spawns per pooled step \
-         (timed pooled loop spawned {pooled_spawns}); scoped baseline spawns {scoped_spawns:.0} threads/step"
+        "steady-state audit: pooled {pooled_allocs} allocs / {pooled_spawns} spawns, \
+         flat floor {flat_allocs} allocs / {flat_spawns} spawns per step; \
+         scoped baseline spawns {scoped_spawns:.0} threads/step"
     );
     println!(
-        "pooled vs scoped PR3 baseline @ batch {batch} threads 4: {speedup:.2}x  [acceptance: >=1.5x]"
+        "blocked kernels vs flat PR4 floor @ batch {batch} threads 4: {speedup:.2}x  \
+         [acceptance: >=1.3x]; vs scoped PR3 baseline: {speedup_scoped:.2}x"
     );
 
     results.push(r_fwd);
     results.push(r1);
     results.push(r4);
+    results.push(rf);
     results.push(rs);
     emit("train_step", &results);
 
     // ---- acceptance gates ----
-    let min_speedup = env_f64("TRAIN_STEP_MIN_SPEEDUP", 1.5);
+    let min_speedup = env_f64("TRAIN_STEP_MIN_SPEEDUP", 1.3);
     assert!(
         speedup >= min_speedup,
-        "acceptance: pooled steady-state engine must be >={min_speedup}x the scoped PR3 \
-         baseline at batch 32 with threads = 4; measured {speedup:.2}x"
+        "acceptance: blocked-kernel pooled engine must be >={min_speedup}x the flat PR4 \
+         pooled floor at batch 32 with threads = 4; measured {speedup:.2}x"
     );
     let alloc_tolerance = env_f64("TRAIN_STEP_ALLOC_TOLERANCE", 0.0) as u64;
-    assert!(
-        steady_allocs <= alloc_tolerance,
-        "acceptance: steady-state pooled train step must not touch the heap \
-         (measured {steady_allocs} allocations, tolerance {alloc_tolerance})"
-    );
-    assert_eq!(
-        steady_spawns, 0,
-        "acceptance: steady-state pooled train step must not spawn threads"
-    );
+    for (who, allocs, spawns) in [
+        ("pooled", pooled_allocs, pooled_spawns),
+        ("flat floor", flat_allocs, flat_spawns),
+    ] {
+        assert!(
+            allocs <= alloc_tolerance,
+            "acceptance: steady-state {who} train step must not touch the heap \
+             (measured {allocs} allocations, tolerance {alloc_tolerance})"
+        );
+        assert_eq!(
+            spawns, 0,
+            "acceptance: steady-state {who} train step must not spawn threads"
+        );
+    }
     println!("train_step OK");
 }

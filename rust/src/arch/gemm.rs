@@ -11,19 +11,56 @@
 //! is bit-identical to what the array — and the seed's single-threaded
 //! `pim_gemv` — would produce.
 //!
-//! Two execution modes share the numerics (one row-wave partition, one
-//! accumulation order — `rust/tests/pool_arena.rs` pins them bit-equal):
+//! **The layout-aware kernel family (PR 5).**  Training needs exactly
+//! three operand layouts, and the kernels compute each one directly on
+//! the row-major buffers the engine already holds — no operand is ever
+//! materialised transposed:
 //!
-//! * [`ExecMode::Pooled`] (default): waves dispatch to a *persistent*
-//!   [`WorkerPool`] (zero thread spawns per call), output and scratch
-//!   buffers recycle through the engine's [`Arena`] (zero steady-state
-//!   heap allocations), and the dot-product chain takes the
-//!   zero-operand shortcut ([`pim_mac_acc_bits`]) that FTZ semantics
-//!   license — the PR 4 steady-state engine.
-//! * [`ExecMode::Scoped`]: the frozen PR 3 baseline — fresh
-//!   `thread::scope` workers per call, fresh allocations per buffer,
-//!   the plain two-call MAC chain — kept as the measured floor for the
-//!   `train_step` acceptance bench.
+//! * [`GemmEngine::gemm_nt`] — `C = A·Bᵀ (+ bias)`, `A [m,k]`,
+//!   `B [n,k]`: the forward layout (`Y = X·Wᵀ`); both operands are
+//!   k-contiguous dot products.  [`GemmEngine::gemm`] is this kernel
+//!   under the engine's historical `(w, x_batch)` naming.
+//! * [`GemmEngine::gemm_nn`] — `C = A·B`, `A [m,k]`, `B [k,n]`: the
+//!   dgrad layout (`dX = δ·W`), an axpy sweep that reads the weight
+//!   operand `B` by k-rows instead of transposing it.
+//! * [`GemmEngine::gemm_tn`] — `C = Aᵀ·B`, `A [k,m]`, `B [k,n]`: the
+//!   wgrad layout (`dW = δᵀ·X`), a rank-1-update sweep that reads both
+//!   operands by k-rows instead of transposing either.
+//!
+//! All three share one blocked implementation shape: the output is
+//! split into disjoint per-task rectangles (rows or columns, whichever
+//! dimension is wider), the contraction runs in **K-panels** so the
+//! stationary operand slice stays cache-resident across the sweep, and
+//! the `nt` micro-kernel accumulates an `NR`-wide register tile of
+//! output columns per x-element load.  The *weight* operand of `nt` /
+//! `nn` is **pre-decoded once per call** ([`pim_decode`]) into a
+//! sign/exponent/significand panel recycled through the [`Arena`], so
+//! its field split and implicit-bit attach are amortised over every
+//! batch row and wave instead of re-done per MAC
+//! ([`pim_mac_acc_dec`]); `tn` hoists the same decode per δ-element,
+//! amortised over its column sweep.  Every output element keeps the
+//! exact k-ascending accumulation chain of the seed scalar path, so
+//! values are bit-identical to PR 1–4 for every layout, thread count
+//! and mode (`rust/tests/kernels.rs` pins the family against
+//! explicit-transpose references).
+//!
+//! Three execution modes share the numerics (one accumulation order —
+//! `rust/tests/pool_arena.rs` pins them bit-equal):
+//!
+//! * [`ExecMode::Pooled`] (default): the blocked kernel family above on
+//!   the *persistent* [`WorkerPool`] (zero thread spawns per call) with
+//!   [`Arena`]-recycled buffers (zero steady-state heap allocations) —
+//!   the PR 5 steady-state engine.
+//! * [`ExecMode::Flat`]: the frozen PR 4 steady-state engine — same
+//!   pool and arena, but the unblocked flat row loop
+//!   ([`gemm_rows_flat`]) with per-MAC operand decode, and the
+//!   transpose-based backward lowering — kept as the measured floor for
+//!   the `train_step` acceptance bench.
+//! * [`ExecMode::Scoped`]: the frozen PR 3 execution shape — fresh
+//!   `thread::scope` workers per call, fresh allocations per buffer —
+//!   sharing [`gemm_rows_flat`] with `Flat` (the old duplicate
+//!   plain-chain inner loop is gone; the shortcut chain is proven
+//!   bit-identical, so one flat loop serves both baselines).
 //!
 //! [`GemmEngine::conv2d`] lowers `Layer::Conv2d` through im2col onto the
 //! same engine, and [`GemmEngine::forward`] runs a whole [`Network`]
@@ -36,22 +73,31 @@ use std::thread;
 
 use crate::arch::pool::{note_worker_launches, SendPtr, WorkerPool};
 use crate::arch::scratch::Arena;
-use crate::fpu::softfloat::{pim_add_f32, pim_mac_acc_bits, pim_mul_f32};
+use crate::fpu::softfloat::{
+    pim_add_f32, pim_decode, pim_mac_acc_bits, pim_mac_acc_dec, pim_mul_f32,
+};
 use crate::fpu::{FloatFormat, FpCostModel};
 use crate::model::{Layer, Network};
 use crate::nvsim::OpCosts;
 use crate::prop::Rng;
 
 /// How the engine executes host-side work (values are identical in
-/// both; only wall-clock and allocator traffic differ).
+/// all modes; only wall-clock and allocator traffic differ).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum ExecMode {
-    /// Persistent worker pool + scratch-arena recycling + zero-operand
-    /// MAC shortcut (the steady-state engine).
+    /// Blocked layout-aware kernels + pre-decoded weight panels +
+    /// transpose-free backward, on the persistent worker pool with
+    /// scratch-arena recycling (the PR 5 steady-state engine).
     #[default]
     Pooled,
-    /// Frozen PR 3 behaviour: per-call `thread::scope` spawns, fresh
-    /// allocations, plain MAC chain — the acceptance-bench baseline.
+    /// Frozen PR 4 steady state: the same pool and arena, but the flat
+    /// (unblocked, per-MAC-decode) row loop and the transpose-based
+    /// backward lowering — the measured floor of the `train_step`
+    /// acceptance gate.
+    Flat,
+    /// Frozen PR 3 execution shape: per-call `thread::scope` spawns and
+    /// fresh allocations (flat kernels, transpose-based backward) — the
+    /// spawn/alloc baseline the audits count against.
     Scoped,
 }
 
@@ -179,9 +225,10 @@ impl GemmEngine {
         GemmEngine::from_model_mode(model, lanes, threads, ExecMode::Pooled)
     }
 
-    /// Build in an explicit execution mode ([`ExecMode::Scoped`] is the
-    /// frozen PR 3 baseline used by the acceptance bench and the
-    /// pooled-vs-scoped bit-identity tests).
+    /// Build in an explicit execution mode ([`ExecMode::Flat`] is the
+    /// frozen PR 4 floor the acceptance bench measures against,
+    /// [`ExecMode::Scoped`] the frozen PR 3 spawn/alloc baseline; the
+    /// three-mode bit-identity suite lives in `rust/tests/pool_arena.rs`).
     pub fn from_model_mode(
         model: FpCostModel,
         lanes: usize,
@@ -189,7 +236,9 @@ impl GemmEngine {
         mode: ExecMode,
     ) -> Self {
         let threads = threads.max(1);
-        let pooled = mode == ExecMode::Pooled;
+        // Pooled and Flat both run on the persistent-pool + arena
+        // infrastructure; only Scoped spawns and allocates per call.
+        let pooled = mode != ExecMode::Scoped;
         GemmEngine {
             t_mac: model.t_mac(),
             e_mac: model.e_mac(),
@@ -219,6 +268,13 @@ impl GemmEngine {
     /// The engine's scratch arena (shared with the train engine).
     pub(crate) fn arena(&self) -> &Arena {
         &self.arena
+    }
+
+    /// Free scratch buffers (f32 + decoded-panel u64) currently parked
+    /// in the engine's arena — test/metrics visibility into the warm
+    /// working set.
+    pub fn arena_free_buffers(&self) -> usize {
+        self.arena.free_buffers()
     }
 
     /// Return a buffer previously handed out in a [`GemmResult`] /
@@ -269,18 +325,24 @@ impl GemmEngine {
             };
         }
 
+        if self.mode == ExecMode::Pooled {
+            // The blocked NT kernel with the pre-decoded weight panel.
+            return self.gemm_nt(x_batch, w, bias, batch, inp, out);
+        }
+
+        // Frozen baselines: the flat (unblocked) row loop.  Flat keeps
+        // the PR 4 dispatch (persistent pool over contiguous row-wave
+        // chunks); Scoped keeps the PR 3 per-call `thread::scope`
+        // fan-out with fresh allocations.
         let mut y = self.arena.take(rows);
         let threads = self.threads.min(rows);
         let macs;
         if threads <= 1 {
-            macs = match self.mode {
-                ExecMode::Pooled => gemm_rows_fast(w, x_batch, bias, out, inp, 0, &mut y),
-                ExecMode::Scoped => gemm_rows(w, x_batch, bias, out, inp, 0, &mut y),
-            };
+            macs = gemm_rows_flat(w, x_batch, bias, out, inp, 0, &mut y);
         } else {
             let chunk = rows.div_ceil(threads);
             match self.mode {
-                ExecMode::Pooled => {
+                ExecMode::Flat => {
                     // One task per contiguous row wave (the same chunks
                     // the scoped `chunks_mut` split produced), executed
                     // on the persistent pool; each task owns a disjoint
@@ -292,7 +354,7 @@ impl GemmEngine {
                         let len = chunk.min(rows - start);
                         let slice =
                             unsafe { std::slice::from_raw_parts_mut(yptr.at(start), len) };
-                        gemm_rows_fast(w, x_batch, bias, out, inp, start, slice);
+                        gemm_rows_flat(w, x_batch, bias, out, inp, start, slice);
                     });
                     // Each task's ledger is its row count × `inp`; the
                     // deterministic sum over disjoint chunks.
@@ -306,9 +368,9 @@ impl GemmEngine {
                         let mut handles = Vec::with_capacity(threads);
                         for (t, slice) in y.chunks_mut(chunk).enumerate() {
                             let start = t * chunk;
-                            handles.push(
-                                s.spawn(move || gemm_rows(w, x_batch, bias, out, inp, start, slice)),
-                            );
+                            handles.push(s.spawn(move || {
+                                gemm_rows_flat(w, x_batch, bias, out, inp, start, slice)
+                            }));
                         }
                         note_worker_launches(handles.len() as u64);
                         for h in handles {
@@ -317,9 +379,17 @@ impl GemmEngine {
                     });
                     macs = scoped_macs;
                 }
+                ExecMode::Pooled => unreachable!("pooled mode took the blocked path"),
             }
         }
 
+        self.priced(y, macs)
+    }
+
+    /// Price a finished kernel run: waves amortise MACs over `lanes`,
+    /// latency follows waves, energy follows MACs — identical across
+    /// layouts and modes (the single ledger rule since PR 1).
+    fn priced(&self, y: Vec<f32>, macs: u64) -> GemmResult {
         let waves = macs.div_ceil(self.lanes as u64);
         GemmResult {
             y,
@@ -328,6 +398,160 @@ impl GemmEngine {
             latency_s: waves as f64 * self.t_mac,
             energy_j: macs as f64 * self.e_mac,
         }
+    }
+
+    /// Run `tasks` independent output-rectangle tasks under the
+    /// engine's execution mode: persistent pool (pooled/flat) or fresh
+    /// scoped workers (the frozen spawning baseline).
+    fn dispatch_tasks(&self, tasks: usize, f: impl Fn(usize) + Sync) {
+        match self.mode {
+            ExecMode::Pooled | ExecMode::Flat => self.pool.run(tasks, f),
+            ExecMode::Scoped => {
+                if tasks <= 1 {
+                    for t in 0..tasks {
+                        f(t);
+                    }
+                    return;
+                }
+                thread::scope(|s| {
+                    let mut handles = Vec::with_capacity(tasks);
+                    for t in 0..tasks {
+                        let f = &f;
+                        handles.push(s.spawn(move || f(t)));
+                    }
+                    note_worker_launches(handles.len() as u64);
+                    for h in handles {
+                        h.join().expect("gemm worker panicked");
+                    }
+                });
+            }
+        }
+    }
+
+    /// `C = A·Bᵀ (+ bias per B-row)` — the **forward layout**.
+    ///
+    /// `a` is row-major `[m, k]` (the activations), `b` row-major
+    /// `[n, k]` (the weights, accessed transposed — i.e. exactly the
+    /// `[out, inp]` storage the engine has always held), the result
+    /// row-major `[m, n]`.  [`GemmEngine::gemm`] is this kernel under
+    /// the historical `(w, x_batch, out, inp, batch)` naming; both
+    /// entry points are bit-identical to the seed scalar chain.
+    ///
+    /// The weight operand is pre-decoded once into an arena panel and
+    /// reused across every output row and wave of the call.
+    pub fn gemm_nt(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        bias: Option<&[f32]>,
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> GemmResult {
+        assert_eq!(a.len(), m * k, "nt A shape");
+        assert_eq!(b.len(), n * k, "nt B shape");
+        if let Some(bb) = bias {
+            assert_eq!(bb.len(), n, "nt bias shape");
+        }
+        if m * n == 0 {
+            return GemmResult {
+                y: Vec::new(),
+                macs: 0,
+                waves: 0,
+                latency_s: 0.0,
+                energy_j: 0.0,
+            };
+        }
+        if self.mode != ExecMode::Pooled {
+            // The frozen baselines keep their flat path (and its
+            // flattened row-wave partition) for this layout.
+            return self.gemm(b, a, bias, n, k, m);
+        }
+
+        let mut y = self.arena.take(m * n);
+        // Decode the weight operand once per call; the panel recycles
+        // through the arena and is fully overwritten here.
+        let mut bdec = self.arena.take_u64(n * k);
+        for (d, &v) in bdec.iter_mut().zip(b) {
+            *d = pim_decode(v.to_bits());
+        }
+        let tasks = self.threads.min(m.max(n)).max(1);
+        let yp = SendPtr(y.as_mut_ptr());
+        self.dispatch_tasks(tasks, |t| {
+            let (r0, r1, j0, j1) = task_rect(m, n, t, tasks);
+            nt_rect(a, &bdec, k, n, bias, r0, r1, j0, j1, &yp);
+        });
+        self.arena.give_u64(bdec);
+        self.priced(y, (m * n * k) as u64)
+    }
+
+    /// `C = A·B` — the **dgrad layout** (`dX = δ·W`).
+    ///
+    /// `a` is row-major `[m, k]` (the deltas), `b` row-major `[k, n]`
+    /// (the weights, read by k-rows — the natural `[out, inp]` storage,
+    /// never transposed), the result row-major `[m, n]`.  Each output
+    /// element accumulates in ascending-k order, so the result is
+    /// bit-identical to transposing `b` and running the NT kernel
+    /// (`rust/tests/kernels.rs`).  The weight operand is pre-decoded
+    /// once per call.
+    pub fn gemm_nn(&self, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> GemmResult {
+        assert_eq!(a.len(), m * k, "nn A shape");
+        assert_eq!(b.len(), k * n, "nn B shape");
+        if m * n == 0 {
+            return GemmResult {
+                y: Vec::new(),
+                macs: 0,
+                waves: 0,
+                latency_s: 0.0,
+                energy_j: 0.0,
+            };
+        }
+        let mut y = self.arena.take(m * n);
+        let mut bdec = self.arena.take_u64(k * n);
+        for (d, &v) in bdec.iter_mut().zip(b) {
+            *d = pim_decode(v.to_bits());
+        }
+        let tasks = self.threads.min(m.max(n)).max(1);
+        let yp = SendPtr(y.as_mut_ptr());
+        self.dispatch_tasks(tasks, |t| {
+            let (r0, r1, j0, j1) = task_rect(m, n, t, tasks);
+            nn_rect(a, &bdec, k, n, r0, r1, j0, j1, &yp);
+        });
+        self.arena.give_u64(bdec);
+        self.priced(y, (m * n * k) as u64)
+    }
+
+    /// `C = Aᵀ·B` — the **wgrad layout** (`dW = δᵀ·X`).
+    ///
+    /// `a` is row-major `[k, m]` (the deltas, accessed transposed) and
+    /// `b` row-major `[k, n]` (the activations / im2col patches) — both
+    /// read by k-rows as rank-1 updates, so *neither* operand is ever
+    /// materialised transposed.  The result is row-major `[m, n]`, each
+    /// element accumulating in ascending-k order — bit-identical to
+    /// transposing both operands and running the NT kernel.  The
+    /// δ-element decode is hoisted per (k, m) pair and amortised over
+    /// the column sweep (both operands are fresh per step, so a
+    /// per-call panel would not out-amortise the hoist).
+    pub fn gemm_tn(&self, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> GemmResult {
+        assert_eq!(a.len(), k * m, "tn A shape");
+        assert_eq!(b.len(), k * n, "tn B shape");
+        if m * n == 0 {
+            return GemmResult {
+                y: Vec::new(),
+                macs: 0,
+                waves: 0,
+                latency_s: 0.0,
+                energy_j: 0.0,
+            };
+        }
+        let mut y = self.arena.take(m * n);
+        let tasks = self.threads.min(m.max(n)).max(1);
+        let yp = SendPtr(y.as_mut_ptr());
+        self.dispatch_tasks(tasks, |t| {
+            let (r0, r1, j0, j1) = task_rect(m, n, t, tasks);
+            tn_rect(a, b, k, m, n, r0, r1, j0, j1, &yp);
+        });
+        self.priced(y, (m * n * k) as u64)
     }
 
     /// `Layer::Conv2d` through the engine: im2col lowering, one batched
@@ -535,37 +759,32 @@ pub fn pim_gemm(
         .gemm(w, x_batch, bias, out, inp, batch)
 }
 
+// ---------------------------------------------------------------------
+// The kernel family.  Exactly one inner-loop implementation per layout:
+// `nt_rect` / `nn_rect` / `tn_rect` are the blocked kernels every mode's
+// `gemm_nn`/`gemm_tn` calls and the pooled `gemm`/`gemm_nt` runs, and
+// `gemm_rows_flat` is the single frozen flat loop both measured floors
+// (Flat = PR 4, Scoped = PR 3 execution shape) share — the old
+// plain-chain duplicate (`gemm_rows`) is gone, its shortcut twin having
+// been proven bit-identical on the exhaustive triple grid.
+// ---------------------------------------------------------------------
+
+/// K-panel length: the contraction runs in slices of this many
+/// elements so the stationary operand slice (the decoded weight panel
+/// in `nt`/`nn`) stays cache-resident across the task's sweep.  Partial
+/// accumulators park in the output buffer between panels as exact f32
+/// bits, so panelling never perturbs the accumulation chain.
+const KC: usize = 256;
+
+/// Register-tile width of the `nt` micro-kernel: output columns
+/// accumulated simultaneously per x-element load.
+const NR: usize = 4;
+
 /// Compute rows `start..start+y.len()` of the flattened `[batch, out]`
 /// output; returns the MAC count of this wave (the worker's ledger).
-/// The frozen PR 3 chain (plain two-call MAC) — the scoped baseline.
-fn gemm_rows(
-    w: &[f32],
-    x: &[f32],
-    bias: Option<&[f32]>,
-    out: usize,
-    inp: usize,
-    start: usize,
-    y: &mut [f32],
-) -> u64 {
-    for (j, slot) in y.iter_mut().enumerate() {
-        let r = start + j;
-        let (b, o) = (r / out, r % out);
-        let wrow = &w[o * inp..(o + 1) * inp];
-        let xrow = &x[b * inp..(b + 1) * inp];
-        let mut acc = bias.map(|bb| bb[o]).unwrap_or(0.0);
-        for i in 0..inp {
-            acc = pim_add_f32(acc, pim_mul_f32(wrow[i], xrow[i]));
-        }
-        *slot = acc;
-    }
-    (y.len() * inp) as u64
-}
-
-/// [`gemm_rows`] with the zero-operand MAC shortcut
-/// ([`pim_mac_acc_bits`]) — bit-identical values (pinned by the
-/// softfloat triple-grid test and the pooled-vs-scoped suite), large
-/// host-side savings on ReLU-sparse training traffic.
-fn gemm_rows_fast(
+/// The frozen flat inner loop (per-MAC operand decode, zero-operand
+/// shortcut) shared by the Flat (PR 4) and Scoped (PR 3) baselines.
+fn gemm_rows_flat(
     w: &[f32],
     x: &[f32],
     bias: Option<&[f32]>,
@@ -588,6 +807,187 @@ fn gemm_rows_fast(
     (y.len() * inp) as u64
 }
 
+/// The disjoint output rectangle task `t` of `tasks` owns in a `[m, n]`
+/// result: contiguous rows when the row dimension is at least as wide,
+/// contiguous columns otherwise (so a batch-1 GEMV still fans out).
+/// Pure arithmetic — no allocation on the dispatch path.
+fn task_rect(m: usize, n: usize, t: usize, tasks: usize) -> (usize, usize, usize, usize) {
+    if m >= n {
+        let chunk = m.div_ceil(tasks);
+        let r0 = (t * chunk).min(m);
+        (r0, (r0 + chunk).min(m), 0, n)
+    } else {
+        let chunk = n.div_ceil(tasks);
+        let j0 = (t * chunk).min(n);
+        (0, m, j0, (j0 + chunk).min(n))
+    }
+}
+
+/// Borrow the task's disjoint span `[row*n + j0, row*n + j1)` of the
+/// shared output.  Sound because `task_rect` rectangles are disjoint
+/// and each span is created by exactly one task.
+#[inline(always)]
+#[allow(clippy::mut_from_ref)]
+unsafe fn rect_row<'a>(
+    yp: &SendPtr<f32>,
+    n: usize,
+    row: usize,
+    j0: usize,
+    j1: usize,
+) -> &'a mut [f32] {
+    std::slice::from_raw_parts_mut(yp.at(row * n + j0), j1 - j0)
+}
+
+/// Blocked NT kernel over one output rectangle: `y[r, j] = bias[j] (or
+/// +0), then ⊕= a[r, kk]·b[j, kk]` for `kk` ascending — the exact seed
+/// chain.  `bdec` is the pre-decoded `[n, k]` weight operand.  K-panels
+/// keep the decoded panel slice of this rectangle's columns resident
+/// across all of its rows; within a panel an `NR`-wide register tile of
+/// column accumulators shares each x-element load.
+#[allow(clippy::too_many_arguments)]
+fn nt_rect(
+    a: &[f32],
+    bdec: &[u64],
+    k: usize,
+    n: usize,
+    bias: Option<&[f32]>,
+    r0: usize,
+    r1: usize,
+    j0: usize,
+    j1: usize,
+    yp: &SendPtr<f32>,
+) {
+    let jw = j1 - j0;
+    if jw == 0 || r1 <= r0 {
+        return;
+    }
+    // Seed the accumulators: the chain starts at bias (or +0), exactly
+    // the flat kernel's `acc = bias.unwrap_or(0)`.
+    for r in r0..r1 {
+        let yrow = unsafe { rect_row(yp, n, r, j0, j1) };
+        match bias {
+            Some(bb) => yrow.copy_from_slice(&bb[j0..j1]),
+            None => yrow.fill(0.0),
+        }
+    }
+    let mut kp = 0;
+    while kp < k {
+        let kend = (kp + KC).min(k);
+        for r in r0..r1 {
+            let xrow = &a[r * k + kp..r * k + kend];
+            let yrow = unsafe { rect_row(yp, n, r, j0, j1) };
+            let mut j = 0;
+            while j + NR <= jw {
+                let mut acc = [0u32; NR];
+                for (t, slot) in acc.iter_mut().enumerate() {
+                    *slot = yrow[j + t].to_bits();
+                }
+                for (kk, &xv) in xrow.iter().enumerate() {
+                    let x = xv.to_bits();
+                    for (t, slot) in acc.iter_mut().enumerate() {
+                        *slot = pim_mac_acc_dec(*slot, bdec[(j0 + j + t) * k + kp + kk], x);
+                    }
+                }
+                for (t, &slot) in acc.iter().enumerate() {
+                    yrow[j + t] = f32::from_bits(slot);
+                }
+                j += NR;
+            }
+            while j < jw {
+                let mut acc = yrow[j].to_bits();
+                let brow = &bdec[(j0 + j) * k + kp..(j0 + j) * k + kend];
+                for (&w, &xv) in brow.iter().zip(xrow) {
+                    acc = pim_mac_acc_dec(acc, w, xv.to_bits());
+                }
+                yrow[j] = f32::from_bits(acc);
+                j += 1;
+            }
+        }
+        kp = kend;
+    }
+}
+
+/// Blocked NN kernel over one output rectangle: `y[r, j] = Σ_kk
+/// a[r, kk]·b[kk, j]`, `kk` ascending — an axpy sweep that reads the
+/// (pre-decoded) weight operand by k-rows, so the dgrad GEMM needs no
+/// transposed weight copy.  K-panels keep the `[KC, n]` decoded slice
+/// resident across the rectangle's rows.
+#[allow(clippy::too_many_arguments)]
+fn nn_rect(
+    a: &[f32],
+    bdec: &[u64],
+    k: usize,
+    n: usize,
+    r0: usize,
+    r1: usize,
+    j0: usize,
+    j1: usize,
+    yp: &SendPtr<f32>,
+) {
+    let jw = j1 - j0;
+    if jw == 0 || r1 <= r0 {
+        return;
+    }
+    for r in r0..r1 {
+        unsafe { rect_row(yp, n, r, j0, j1) }.fill(0.0);
+    }
+    let mut kp = 0;
+    while kp < k {
+        let kend = (kp + KC).min(k);
+        for r in r0..r1 {
+            let arow = &a[r * k..(r + 1) * k];
+            let yrow = unsafe { rect_row(yp, n, r, j0, j1) };
+            for kk in kp..kend {
+                let av = arow[kk].to_bits();
+                let brow = &bdec[kk * n + j0..kk * n + j1];
+                for (slot, &w) in yrow.iter_mut().zip(brow) {
+                    *slot = f32::from_bits(pim_mac_acc_dec(slot.to_bits(), w, av));
+                }
+            }
+        }
+        kp = kend;
+    }
+}
+
+/// TN kernel over one output rectangle: `y[r, j] = Σ_kk
+/// a[kk, r]·b[kk, j]`, `kk` ascending — rank-1 updates that read both
+/// operands by k-rows, so the wgrad GEMM transposes *neither* operand.
+/// The δ-element decode is hoisted per `(kk, r)` and amortised over the
+/// column sweep; the output rectangle itself is the stationary operand,
+/// so no K-panel split is needed (it is resident by construction).
+#[allow(clippy::too_many_arguments)]
+fn tn_rect(
+    a: &[f32],
+    b: &[f32],
+    k: usize,
+    m: usize,
+    n: usize,
+    r0: usize,
+    r1: usize,
+    j0: usize,
+    j1: usize,
+    yp: &SendPtr<f32>,
+) {
+    let jw = j1 - j0;
+    if jw == 0 || r1 <= r0 {
+        return;
+    }
+    for r in r0..r1 {
+        unsafe { rect_row(yp, n, r, j0, j1) }.fill(0.0);
+    }
+    for kk in 0..k {
+        let arow = &a[kk * m..(kk + 1) * m];
+        let brow = &b[kk * n + j0..kk * n + j1];
+        for r in r0..r1 {
+            let ad = pim_decode(arow[r].to_bits());
+            let yrow = unsafe { rect_row(yp, n, r, j0, j1) };
+            for (slot, &xv) in yrow.iter_mut().zip(brow) {
+                *slot = f32::from_bits(pim_mac_acc_dec(slot.to_bits(), ad, xv.to_bits()));
+            }
+        }
+    }
+}
+
 /// im2col for one `[in_ch, h, w]` sample (valid padding, stride 1):
 /// one row per output pixel, columns ordered `(channel, ky, kx)` to
 /// match the `[out_ch, in_ch, kh, kw]` weight flattening.
@@ -602,7 +1002,7 @@ pub fn im2col(input: &[f32], in_ch: usize, h: usize, w: usize, kh: usize, kw: us
     out
 }
 
-fn im2col_into(
+pub(crate) fn im2col_into(
     input: &[f32],
     in_ch: usize,
     h: usize,
@@ -734,13 +1134,21 @@ mod tests {
         )
     }
 
-    fn scoped_engine(threads: usize) -> GemmEngine {
+    fn mode_engine(threads: usize, mode: ExecMode) -> GemmEngine {
         GemmEngine::from_model_mode(
             FpCostModel::new(OpCosts::proposed_default(), FloatFormat::FP32),
             1024,
             threads,
-            ExecMode::Scoped,
+            mode,
         )
+    }
+
+    fn scoped_engine(threads: usize) -> GemmEngine {
+        mode_engine(threads, ExecMode::Scoped)
+    }
+
+    fn flat_engine(threads: usize) -> GemmEngine {
+        mode_engine(threads, ExecMode::Flat)
     }
 
     fn host_chain(w: &[f32], x: &[f32], bias: Option<&[f32]>, o: usize, inp: usize) -> f32 {
@@ -784,7 +1192,7 @@ mod tests {
         let x = rand_vec(&mut rng, batch * inp, 6);
         let base = engine(1).gemm(&w, &x, None, out, inp, batch);
         for threads in [2, 3, 8, 64] {
-            for eng in [engine(threads), scoped_engine(threads)] {
+            for eng in [engine(threads), flat_engine(threads), scoped_engine(threads)] {
                 let r = eng.gemm(&w, &x, None, out, inp, batch);
                 assert_eq!(r.y.len(), base.y.len());
                 for (a, b) in r.y.iter().zip(&base.y) {
@@ -819,9 +1227,11 @@ mod tests {
             }
         }
         let pooled = engine(4).gemm(&w, &x, None, out, inp, batch);
+        let flat = flat_engine(4).gemm(&w, &x, None, out, inp, batch);
         let scoped = scoped_engine(4).gemm(&w, &x, None, out, inp, batch);
-        for (a, b) in pooled.y.iter().zip(&scoped.y) {
+        for ((a, b), c) in pooled.y.iter().zip(&scoped.y).zip(&flat.y) {
             assert_eq!(a.to_bits(), b.to_bits());
+            assert_eq!(a.to_bits(), c.to_bits());
         }
         // and against the host FTZ chain
         for bi in 0..batch {
@@ -845,10 +1255,129 @@ mod tests {
         let r = eng.gemm(&[], &[1.0, 2.0, 3.0], None, 0, 3, 1);
         assert!(r.y.is_empty());
         assert_eq!((r.macs, r.waves), (0, 0));
-        // scoped mode takes the same guard
+        // the frozen baselines take the same guard
         let r = scoped_engine(2).gemm(&[], &[], None, 0, 5, 0);
         assert!(r.y.is_empty());
         assert_eq!((r.macs, r.waves), (0, 0));
+        let r = flat_engine(2).gemm(&[], &[], None, 0, 5, 0);
+        assert!(r.y.is_empty());
+        assert_eq!((r.macs, r.waves), (0, 0));
+        // and the new layouts
+        let eng = engine(4);
+        let r = eng.gemm_nn(&[], &[1.0, 2.0], 0, 1, 2);
+        assert!(r.y.is_empty());
+        assert_eq!((r.macs, r.waves), (0, 0));
+        let r = eng.gemm_tn(&[1.0, 2.0], &[], 2, 1, 0);
+        assert!(r.y.is_empty());
+        assert_eq!((r.macs, r.waves), (0, 0));
+    }
+
+    #[test]
+    fn zero_k_contraction_yields_seed_values_and_zero_ledger() {
+        // k == 0: no MACs ever fire, the output is the chain seed —
+        // bias for NT, +0 for NN/TN — with a zero ledger, in all modes.
+        let bias = [1.5f32, -2.25, 0.5];
+        for eng in [engine(3), flat_engine(3), scoped_engine(2)] {
+            let r = eng.gemm(&[], &[], Some(&bias), 3, 0, 2);
+            assert_eq!(r.y.len(), 6);
+            for b in 0..2 {
+                for (o, &bb) in bias.iter().enumerate() {
+                    assert_eq!(r.y[b * 3 + o].to_bits(), bb.to_bits());
+                }
+            }
+            assert_eq!((r.macs, r.waves), (0, 0));
+            assert_eq!(r.latency_s, 0.0);
+            assert_eq!(r.energy_j, 0.0);
+        }
+        let eng = engine(2);
+        let r = eng.gemm_nn(&[], &[], 2, 0, 3);
+        assert_eq!(r.y, vec![0f32; 6]);
+        assert_eq!((r.macs, r.waves), (0, 0));
+        let r = eng.gemm_tn(&[], &[], 2, 0, 3);
+        assert_eq!(r.y, vec![0f32; 6]);
+        assert_eq!((r.macs, r.waves), (0, 0));
+    }
+
+    fn transpose(m: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+        let mut t = vec![0f32; m.len()];
+        for r in 0..rows {
+            for c in 0..cols {
+                t[c * rows + r] = m[r * cols + c];
+            }
+        }
+        t
+    }
+
+    #[test]
+    fn nn_kernel_equals_explicit_transpose_then_nt() {
+        let mut rng = Rng::new(0x0909);
+        // spans full NR tiles, a remainder column, and a KC-crossing k
+        for (m, k, n) in [(5usize, 300usize, 9usize), (3, 7, 1), (1, 12, 6)] {
+            let a = rand_vec(&mut rng, m * k, 3);
+            let b = rand_vec(&mut rng, k * n, 3);
+            let direct = engine(3).gemm_nn(&a, &b, m, k, n);
+            // reference: transpose B to [n, k] and run the NT path
+            let bt = transpose(&b, k, n);
+            let want = engine(1).gemm(&bt, &a, None, n, k, m);
+            assert_eq!(direct.macs, want.macs);
+            assert_eq!(direct.waves, want.waves);
+            for (i, (g, w)) in direct.y.iter().zip(&want.y).enumerate() {
+                assert_eq!(g.to_bits(), w.to_bits(), "({m},{k},{n}) elem {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn tn_kernel_equals_explicit_transposes_then_nt() {
+        let mut rng = Rng::new(0x0B0B);
+        for (m, k, n) in [(6usize, 280usize, 10usize), (1, 9, 5), (4, 3, 1)] {
+            let a = rand_vec(&mut rng, k * m, 3);
+            let b = rand_vec(&mut rng, k * n, 3);
+            let direct = engine(4).gemm_tn(&a, &b, m, k, n);
+            // reference: transpose both operands and run the NT path
+            let at = transpose(&a, k, m); // [m, k]
+            let bt = transpose(&b, k, n); // [n, k]
+            let want = engine(1).gemm(&bt, &at, None, n, k, m);
+            assert_eq!(direct.macs, want.macs);
+            for (i, (g, w)) in direct.y.iter().zip(&want.y).enumerate() {
+                assert_eq!(g.to_bits(), w.to_bits(), "({m},{k},{n}) elem {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_nt_alias_matches_gemm_in_every_mode() {
+        let mut rng = Rng::new(0xA1A);
+        let (m, k, n) = (4usize, 19usize, 7usize);
+        let a = rand_vec(&mut rng, m * k, 3);
+        let b = rand_vec(&mut rng, n * k, 3);
+        let bias = rand_vec(&mut rng, n, 1);
+        for eng in [engine(3), flat_engine(3), scoped_engine(3)] {
+            let via_alias = eng.gemm_nt(&a, &b, Some(&bias), m, k, n);
+            let via_gemm = eng.gemm(&b, &a, Some(&bias), n, k, m);
+            assert_eq!(via_alias.macs, via_gemm.macs);
+            for (p, q) in via_alias.y.iter().zip(&via_gemm.y) {
+                assert_eq!(p.to_bits(), q.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn task_rect_tiles_are_disjoint_and_cover() {
+        let cases = [(7usize, 3usize, 4usize), (3, 7, 4), (1, 13, 8), (13, 1, 8), (4, 4, 16)];
+        for (m, n, tasks) in cases {
+            let mut hit = vec![0u32; m * n];
+            for t in 0..tasks {
+                let (r0, r1, j0, j1) = task_rect(m, n, t, tasks);
+                assert!(r1 <= m && j1 <= n);
+                for r in r0..r1 {
+                    for j in j0..j1 {
+                        hit[r * n + j] += 1;
+                    }
+                }
+            }
+            assert!(hit.iter().all(|&h| h == 1), "({m},{n}) x {tasks}: {hit:?}");
+        }
     }
 
     #[test]

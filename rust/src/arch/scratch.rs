@@ -23,6 +23,14 @@
 //! *different* network shapes sharing one arena (no stale-scratch
 //! leakage is possible: a buffer is keyed by exact length and zeroed).
 //!
+//! A second size-keyed pool recycles the `u64` *decoded-operand
+//! panels* the blocked GEMM kernels build per call
+//! ([`Arena::take_u64`]).  Those buffers are **not** re-zeroed: their
+//! only consumers are the panel decoders, which overwrite every element
+//! before any kernel reads one, so the memset would be pure hot-path
+//! waste — the contract is documented on `take_u64` and callers must
+//! not rely on the contents.
+//!
 //! The arena is deliberately dumb: no high-water marks, no trimming.
 //! Steady-state training uses a fixed working set, and alternating
 //! workloads (LeNet-5 / MLP on one engine) are bounded by the union of
@@ -44,6 +52,9 @@ pub struct Arena {
     /// `give` drops — the scoped execution mode's allocator behaviour.
     enabled: bool,
     pools: Mutex<HashMap<usize, Vec<Vec<f32>>>>,
+    /// Free list for the `u64` decoded-operand panels the blocked GEMM
+    /// kernels build per call ([`crate::fpu::softfloat::pim_decode`]).
+    pools_u64: Mutex<HashMap<usize, Vec<Vec<u64>>>>,
 }
 
 impl Arena {
@@ -52,6 +63,7 @@ impl Arena {
         Arena {
             enabled: true,
             pools: Mutex::new(HashMap::new()),
+            pools_u64: Mutex::new(HashMap::new()),
         }
     }
 
@@ -62,6 +74,7 @@ impl Arena {
         Arena {
             enabled: false,
             pools: Mutex::new(HashMap::new()),
+            pools_u64: Mutex::new(HashMap::new()),
         }
     }
 
@@ -108,14 +121,63 @@ impl Arena {
             .push(v);
     }
 
-    /// Free buffers currently parked in the arena (for tests/metrics).
+    /// A `u64` buffer of exactly `len` elements for the decoded-operand
+    /// panels.  **Contents are unspecified** (recycled buffers keep
+    /// their stale bits): unlike [`Arena::take`], these buffers exist
+    /// only for fully-overwriting consumers — the kernel decoders write
+    /// every element before any read — so the re-zeroing pass would be
+    /// pure waste on the hot path.
+    pub fn take_u64(&self, len: usize) -> Vec<u64> {
+        if len == 0 {
+            return Vec::new();
+        }
+        if self.enabled {
+            let recycled = self
+                .pools_u64
+                .lock()
+                .expect("arena lock poisoned")
+                .get_mut(&len)
+                .and_then(Vec::pop);
+            if let Some(v) = recycled {
+                debug_assert_eq!(v.len(), len);
+                return v;
+            }
+        }
+        vec![0u64; len]
+    }
+
+    /// Return a decoded-operand buffer to the free list (dropped when
+    /// the arena is disabled or the buffer is empty).
+    pub fn give_u64(&self, v: Vec<u64>) {
+        if !self.enabled || v.is_empty() {
+            return;
+        }
+        self.pools_u64
+            .lock()
+            .expect("arena lock poisoned")
+            .entry(v.len())
+            .or_default()
+            .push(v);
+    }
+
+    /// Free buffers currently parked in the arena (for tests/metrics),
+    /// counting both the `f32` and the decoded-panel `u64` pools.
     pub fn free_buffers(&self) -> usize {
-        self.pools
+        let f32s: usize = self
+            .pools
             .lock()
             .expect("arena lock poisoned")
             .values()
             .map(Vec::len)
-            .sum()
+            .sum();
+        let u64s: usize = self
+            .pools_u64
+            .lock()
+            .expect("arena lock poisoned")
+            .values()
+            .map(Vec::len)
+            .sum();
+        f32s + u64s
     }
 }
 
@@ -181,6 +243,41 @@ mod tests {
         let a = Arena::pooled();
         assert!(a.take(0).is_empty());
         a.give(Vec::new());
+        assert!(a.take_u64(0).is_empty());
+        a.give_u64(Vec::new());
+        assert_eq!(a.free_buffers(), 0);
+    }
+
+    #[test]
+    fn u64_pool_recycles_without_rezeroing() {
+        let a = Arena::pooled();
+        let mut v = a.take_u64(6);
+        assert_eq!(v, vec![0u64; 6]); // fresh allocation is zeroed
+        v.iter_mut().for_each(|s| *s = 0xDEAD);
+        let p = v.as_ptr();
+        a.give_u64(v);
+        assert_eq!(a.free_buffers(), 1);
+        let w = a.take_u64(6);
+        // same allocation, stale contents deliberately kept (the
+        // decoders overwrite every element)
+        assert_eq!(w.as_ptr(), p);
+        assert_eq!(w, vec![0xDEADu64; 6]);
+        assert_eq!(a.free_buffers(), 0);
+        // sizes never cross between the two pools
+        a.give(vec![1f32; 6]);
+        a.give_u64(w);
+        assert_eq!(a.free_buffers(), 2);
+        assert_eq!(a.take(6).len(), 6);
+        assert_eq!(a.take_u64(6).len(), 6);
+        assert_eq!(a.free_buffers(), 0);
+    }
+
+    #[test]
+    fn disabled_arena_u64_passes_through() {
+        let a = Arena::disabled();
+        let v = a.take_u64(4);
+        assert_eq!(v, vec![0u64; 4]);
+        a.give_u64(v);
         assert_eq!(a.free_buffers(), 0);
     }
 }

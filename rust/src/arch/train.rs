@@ -3,40 +3,50 @@
 //! cost model — the paper's headline claim (§4.3) executed, not just
 //! accounted.
 //!
-//! The backward pass lowers onto the same batched GEMM primitive the
-//! forward pass uses ([`GemmEngine::gemm`]):
+//! The backward pass lowers onto the layout-aware GEMM kernel family
+//! ([`GemmEngine::gemm_nn`] / [`GemmEngine::gemm_tn`]), **directly on
+//! the row-major buffers the tape already holds** (PR 5):
 //!
-//! * `Dense`:  `dX = δ·W` and `dW = δᵀ·X` — two GEMMs over transposed
-//!   operands (transposition is pure data movement: the arrays address
-//!   operands by row/column wiring, so it prices no MACs);
-//! * `Conv2d`: `dW = δᵀ·patches` over the rebuilt im2col patch matrix,
-//!   and `dX = col2im(δ·W)` with in-array accumulation;
+//! * `Dense`:  `dX = δ·W` is the NN layout (weights read by k-rows) and
+//!   `dW = δᵀ·X` the TN layout (both operands read by k-rows) — no
+//!   operand is ever materialised transposed;
+//! * `Conv2d`: `dW = δᵀ·patches` (TN) over the rebuilt *forward-layout*
+//!   im2col patch matrix, and `dX = col2im(δ·W)` (NN) with in-array
+//!   accumulation;
 //! * `AvgPool2`: one ×0.25 broadcast per pooled cell;
 //! * `Relu`: a mask from the taped forward activations;
 //! * the softmax–cross-entropy loss head runs on the host digital unit
 //!   (exp/log have no in-array procedure in the paper; the PIM arrays
 //!   execute the MAC-bearing layers).
 //!
+//! The frozen baselines ([`ExecMode::Flat`] = PR 4, [`ExecMode::Scoped`]
+//! = PR 3) keep the historical transpose-based lowering (`transpose_into`
+//! / `im2col_transposed_into` scratch copies feeding the NT kernel) as
+//! the measured floor of the acceptance bench — `rust/tests/pool_arena.rs`
+//! pins the two lowerings bit-identical, which works because in-array
+//! transposition is pure data movement (the arrays address operands by
+//! row/column wiring): both lowerings schedule the *same* MAC chains in
+//! the same order, so values and ledgers cannot differ.
+//!
 //! The SGD update `w := w − lr·g` is one in-array multiply + subtract
 //! per parameter ([`pim_mul_f32`] then [`pim_sub_f32`]), counted as one
 //! update MAC — exactly `training_work`'s `macs_wu`.
 //!
-//! **Steady-state execution (PR 4).**  The engine owns a persistent
+//! **Steady-state execution (PR 4/5).**  The engine owns a persistent
 //! scratch state: the backward tape's spine, the host loss-term buffer
 //! and a free list for the gradient-set spine live in a per-engine
-//! [`TrainScratch`]; every `f32` intermediate (tape activations,
-//! transposed operands, patch matrices, deltas, gradient tensors)
-//! recycles through the GEMM engine's [`Arena`].  ReLU runs **in
-//! place** on the tape (its input slot is provably never re-read: the
-//! preceding layer's backward consumes its *own* input, not its
-//! output), so the tape holds exactly the buffers backward needs.
-//! After one warm-up step — and provided the caller returns each
-//! result's gradients via [`TrainEngine::recycle`] — a train step
-//! performs **zero heap allocations and zero thread spawns**
-//! (`rust/tests/zero_alloc.rs` asserts the former with a counting
-//! global allocator, the bench reports the latter).  The frozen
-//! [`ExecMode::Scoped`] baseline keeps the PR 3 behaviour for the
-//! acceptance bench; both modes are bit-identical
+//! [`TrainScratch`]; every `f32` intermediate (tape activations, patch
+//! matrices, deltas, gradient tensors) and the kernels' `u64`
+//! decoded-weight panels recycle through the GEMM engine's [`Arena`].
+//! ReLU runs **in place** on the tape (its input slot is provably
+//! never re-read: the preceding layer's backward consumes its *own*
+//! input, not its output), so the tape holds exactly the buffers
+//! backward needs.  After one warm-up step — and provided the caller
+//! returns each result's gradients via [`TrainEngine::recycle`] — a
+//! train step performs **zero heap allocations and zero thread
+//! spawns** (`rust/tests/zero_alloc.rs` asserts the former with a
+//! counting global allocator, the bench reports the latter).  All
+//! three execution modes are bit-identical
 //! (`rust/tests/pool_arena.rs`).
 //!
 //! The backward lowering and the update are factored out
@@ -62,7 +72,7 @@
 
 use std::sync::Mutex;
 
-use crate::arch::gemm::{ActIn, ExecMode, GemmEngine, LayerParams, NetworkParams};
+use crate::arch::gemm::{im2col_into, ActIn, ExecMode, GemmEngine, LayerParams, NetworkParams};
 use crate::arch::scratch::TrainScratch;
 use crate::fpu::softfloat::{pim_add_f32, pim_mul_f32, pim_sub_f32};
 use crate::fpu::FpCostModel;
@@ -245,6 +255,11 @@ fn softmax_xent_terms_into(
 /// buffer (every element written).  Pure data movement: the arrays
 /// address GEMM operands by row/column wiring, so transposition prices
 /// no MACs.
+///
+/// **Frozen-baseline only** (PR 5): the default pooled lowering computes
+/// every backward GEMM transpose-free through the NN/TN kernels; this
+/// copy survives solely inside the [`ExecMode::Flat`]/[`ExecMode::Scoped`]
+/// floor the acceptance bench measures against.
 fn transpose_into(m: &[f32], rows: usize, cols: usize, t: &mut [f32]) {
     debug_assert_eq!(m.len(), rows * cols);
     debug_assert_eq!(t.len(), rows * cols);
@@ -256,7 +271,12 @@ fn transpose_into(m: &[f32], rows: usize, cols: usize, t: &mut [f32]) {
 }
 
 /// im2col for one `[in_ch, h, w]` sample written directly in the
-/// *transposed* `[k, rows]` layout of the wgrad GEMM's weight operand:
+/// *transposed* `[k, rows]` layout of the legacy wgrad GEMM's weight
+/// operand.  **Frozen-baseline only** (PR 5): the pooled lowering feeds
+/// the forward-layout patch matrix straight to the TN kernel; see
+/// [`transpose_into`].
+///
+/// Layout:
 /// column `col0 + (oy·ow + ox)` of `pt` is the im2col row of output
 /// pixel `(oy, ox)`, with the usual `(channel, ky, kx)` ordering along
 /// `k`.  Equivalent to `transpose(im2col_into(..))` without the second
@@ -398,8 +418,9 @@ impl TrainEngine {
         TrainEngine::new_mode(model, lanes, threads, ExecMode::Pooled)
     }
 
-    /// Build in an explicit execution mode ([`ExecMode::Scoped`] is the
-    /// frozen PR 3 baseline for the acceptance bench and the
+    /// Build in an explicit execution mode ([`ExecMode::Flat`] is the
+    /// frozen PR 4 floor the acceptance bench measures against,
+    /// [`ExecMode::Scoped`] the frozen PR 3 spawn/alloc baseline of the
     /// bit-identity suite).
     pub fn new_mode(model: FpCostModel, lanes: usize, threads: usize, mode: ExecMode) -> Self {
         TrainEngine {
@@ -758,6 +779,12 @@ impl TrainEngine {
         mut spine: Vec<Option<LayerParams>>,
     ) -> BackwardOut {
         let arena = self.gemm.arena();
+        // The default pooled engine lowers every backward GEMM directly
+        // onto the row-major tape buffers (NN/TN kernels); the frozen
+        // Flat/Scoped floors keep the historical transpose-then-NT
+        // lowering.  Both schedule identical MAC chains — the
+        // bit-identity suite holds them equal.
+        let direct = self.gemm.mode() == ExecMode::Pooled;
         let mut macs_bwd = 0u64;
         let mut adds_bwd = 0u64;
         spine.clear();
@@ -767,14 +794,22 @@ impl TrainEngine {
             let x_in: &[f32] = if l == 0 { x } else { &acts[l] };
             match *layer {
                 Layer::Dense { inp, out } => {
-                    // dW = δᵀ·X: one GEMM over transposed operands.
-                    let mut xt = arena.take(batch * inp);
-                    transpose_into(x_in, batch, inp, &mut xt);
-                    let mut dt = arena.take(batch * out);
-                    transpose_into(&delta, batch, out, &mut dt);
-                    let gw = self.gemm.gemm(&xt, &dt, None, inp, batch, out);
-                    arena.give(xt);
-                    arena.give(dt);
+                    // dW = δᵀ·X.
+                    let gw = if direct {
+                        // TN layout: δ [batch, out] and X [batch, inp]
+                        // consumed row-major as-is.
+                        self.gemm.gemm_tn(&delta, x_in, out, batch, inp)
+                    } else {
+                        // Frozen floor: transpose both operands, NT.
+                        let mut xt = arena.take(batch * inp);
+                        transpose_into(x_in, batch, inp, &mut xt);
+                        let mut dt = arena.take(batch * out);
+                        transpose_into(&delta, batch, out, &mut dt);
+                        let gw = self.gemm.gemm(&xt, &dt, None, inp, batch, out);
+                        arena.give(xt);
+                        arena.give(dt);
+                        gw
+                    };
                     macs_bwd += gw.macs;
                     // db = column sums of δ (ride-along adds).
                     let mut gb = arena.take(out);
@@ -784,12 +819,18 @@ impl TrainEngine {
                         }
                     }
                     adds_bwd += (batch * out) as u64;
-                    // dX = δ·W: GEMM against the transposed weights.
+                    // dX = δ·W.
                     let lp = params.layers[l].as_ref().expect("dense layer params");
-                    let mut wt = arena.take(out * inp);
-                    transpose_into(&lp.w, out, inp, &mut wt);
-                    let gx = self.gemm.gemm(&wt, &delta, None, inp, out, batch);
-                    arena.give(wt);
+                    let gx = if direct {
+                        // NN layout: W [out, inp] read by k-rows.
+                        self.gemm.gemm_nn(&delta, &lp.w, batch, out, inp)
+                    } else {
+                        let mut wt = arena.take(out * inp);
+                        transpose_into(&lp.w, out, inp, &mut wt);
+                        let gx = self.gemm.gemm(&wt, &delta, None, inp, out, batch);
+                        arena.give(wt);
+                        gx
+                    };
                     macs_bwd += gx.macs;
                     grads[l] = Some(LayerParams { w: gw.y, b: gb });
                     arena.give(std::mem::replace(&mut delta, gx.y));
@@ -817,30 +858,52 @@ impl TrainEngine {
                             }
                         }
                     }
-                    // Rebuild the forward im2col patch matrix directly
-                    // in the transposed [k, rows] layout the wgrad GEMM
-                    // consumes (skips materialising the [rows, k]
-                    // matrix only to copy it again).
-                    let mut pt = arena.take(k * rows);
-                    for b in 0..batch {
-                        im2col_transposed_into(
-                            &x_in[b * plane..(b + 1) * plane],
-                            in_ch,
-                            in_h,
-                            in_w,
-                            kh,
-                            kw,
-                            rows,
-                            b * ohw,
-                            &mut pt,
-                        );
-                    }
                     // dW = δᵀ·patches.
-                    let mut dt = arena.take(rows * out_ch);
-                    transpose_into(&dmat, rows, out_ch, &mut dt);
-                    let gw = self.gemm.gemm(&pt, &dt, None, k, rows, out_ch);
-                    arena.give(pt);
-                    arena.give(dt);
+                    let gw = if direct {
+                        // Rebuild the forward-layout [rows, k] im2col
+                        // patch matrix and consume it (and δ) row-major
+                        // through the TN kernel — no transposed copy of
+                        // either operand.
+                        let mut patches = arena.take(rows * k);
+                        for b in 0..batch {
+                            im2col_into(
+                                &x_in[b * plane..(b + 1) * plane],
+                                in_ch,
+                                in_h,
+                                in_w,
+                                kh,
+                                kw,
+                                &mut patches[b * ohw * k..(b + 1) * ohw * k],
+                            );
+                        }
+                        let gw = self.gemm.gemm_tn(&dmat, &patches, out_ch, rows, k);
+                        arena.give(patches);
+                        gw
+                    } else {
+                        // Frozen floor: rebuild the patches directly in
+                        // the transposed [k, rows] layout, transpose δ,
+                        // and run the NT kernel.
+                        let mut pt = arena.take(k * rows);
+                        for b in 0..batch {
+                            im2col_transposed_into(
+                                &x_in[b * plane..(b + 1) * plane],
+                                in_ch,
+                                in_h,
+                                in_w,
+                                kh,
+                                kw,
+                                rows,
+                                b * ohw,
+                                &mut pt,
+                            );
+                        }
+                        let mut dt = arena.take(rows * out_ch);
+                        transpose_into(&dmat, rows, out_ch, &mut dt);
+                        let gw = self.gemm.gemm(&pt, &dt, None, k, rows, out_ch);
+                        arena.give(pt);
+                        arena.give(dt);
+                        gw
+                    };
                     macs_bwd += gw.macs;
                     // db over every batch·pixel position.
                     let mut gb = arena.take(out_ch);
@@ -852,10 +915,16 @@ impl TrainEngine {
                     adds_bwd += (rows * out_ch) as u64;
                     // dX = col2im(δ·W).
                     let lp = params.layers[l].as_ref().expect("conv layer params");
-                    let mut wt = arena.take(out_ch * k);
-                    transpose_into(&lp.w, out_ch, k, &mut wt);
-                    let gp = self.gemm.gemm(&wt, &dmat, None, k, out_ch, rows);
-                    arena.give(wt);
+                    let gp = if direct {
+                        // NN layout: W [out_ch, k] read by k-rows.
+                        self.gemm.gemm_nn(&dmat, &lp.w, rows, out_ch, k)
+                    } else {
+                        let mut wt = arena.take(out_ch * k);
+                        transpose_into(&lp.w, out_ch, k, &mut wt);
+                        let gp = self.gemm.gemm(&wt, &dmat, None, k, out_ch, rows);
+                        arena.give(wt);
+                        gp
+                    };
                     arena.give(dmat);
                     macs_bwd += gp.macs;
                     let mut dx = arena.take(batch * plane);

@@ -179,7 +179,9 @@ impl ClusterEngine {
         } else {
             Vec::new()
         };
-        let chips = WorkerPool::new(if mode == ExecMode::Pooled && cfg.shards > 1 {
+        // Pooled and Flat (the frozen PR 4 floor) both dispatch chips
+        // from the persistent pool; only Scoped spawns per step.
+        let chips = WorkerPool::new(if mode != ExecMode::Scoped && cfg.shards > 1 {
             cfg.shards
         } else {
             1
@@ -269,7 +271,7 @@ impl ClusterEngine {
             Ok(ShardOut { samples })
         };
         let shard_results: Vec<Result<ShardOut>> = match self.mode {
-            ExecMode::Pooled => {
+            ExecMode::Pooled | ExecMode::Flat => {
                 // Persistent chip pool: zero spawns per step; each task
                 // drives its own shard engine, results land in per-chip
                 // slots.

@@ -72,9 +72,21 @@ pub fn pim_mul_bits(abits: u32, bbits: u32) -> u32 {
 /// overflow to Inf, underflow through the FTZ boundary rule.
 #[inline]
 fn mul_core(sign: u32, ea: i32, fa: u32, eb: i32, fb: u32) -> u32 {
-    let ma = (fa | MIN_NORMAL_MANT) as u64; // 24-bit significand
-    let mb = (fb | MIN_NORMAL_MANT) as u64;
+    mul_core_sig(
+        sign,
+        ea,
+        (fa | MIN_NORMAL_MANT) as u64, // 24-bit significand
+        eb,
+        (fb | MIN_NORMAL_MANT) as u64,
+    )
+}
 
+/// [`mul_core`] on already-assembled 24-bit significands — the single
+/// normalise/round implementation shared by the raw-bits path and the
+/// pre-decoded-operand path ([`pim_mac_acc_dec`]), so the two cannot
+/// drift.
+#[inline]
+fn mul_core_sig(sign: u32, ea: i32, ma: u64, eb: i32, mb: u64) -> u32 {
     // The array executes this as Fig. 4b's shift-and-add scan (the
     // per-step ledger accounting lives in `procedure.rs`); collapsed
     // here into one host multiply — bit-identical, see
@@ -260,6 +272,86 @@ pub fn pim_mac_acc_bits(acc: u32, w: u32, x: u32) -> u32 {
         return pim_add_bits(acc, (w ^ x) & 0x8000_0000);
     }
     pim_add_bits(acc, pim_mul_bits(w, x))
+}
+
+/// Pre-decode one fp32 operand for repeated MAC use.
+///
+/// The GEMM kernels read the *weight* operand of a product many times
+/// (once per batch row / output column), and every [`pim_mul_bits`]
+/// call re-splits it into sign/exponent/significand and re-attaches the
+/// implicit bit.  `pim_decode` does that split **once**, packing the
+/// fields the multiply core actually consumes:
+///
+/// * bits `[23:0]` — the 24-bit significand with the implicit bit
+///   already attached for normals (the raw fraction for zero-class and
+///   Inf/NaN operands, so the encoding stays lossless);
+/// * bits `[31:24]` — the biased exponent field, untouched;
+/// * bit `[32]` — the sign.
+///
+/// [`pim_encode`] is the exact inverse; [`pim_mac_acc_dec`] consumes
+/// the packed form.  Decoding is host bookkeeping only — the modeled
+/// array reads operands from its rows either way, and the ledger is
+/// unaffected.
+#[inline(always)]
+pub fn pim_decode(bits: u32) -> u64 {
+    let e = (bits >> 23) & 0xFF;
+    let f = bits & 0x7F_FFFF;
+    // `e - 1 < 254` (unsigned) ⇔ finite and normal.
+    let mant = if e.wrapping_sub(1) < 254 {
+        f | MIN_NORMAL_MANT
+    } else {
+        f
+    };
+    mant as u64 | ((e as u64) << 24) | (((bits >> 31) as u64) << 32)
+}
+
+/// Exact inverse of [`pim_decode`]: reassemble the original fp32 bit
+/// pattern (the slow paths of [`pim_mac_acc_dec`] use it to fall back
+/// onto the raw-bits chain).
+#[inline(always)]
+pub fn pim_encode(dec: u64) -> u32 {
+    (((dec >> 32) as u32) << 31) | ((((dec >> 24) & 0xFF) as u32) << 23) | (dec as u32 & 0x7F_FFFF)
+}
+
+/// [`pim_mac_acc_bits`] with a pre-decoded ([`pim_decode`]) weight
+/// operand: `pim_add(acc, pim_mul(w, x))` where `w`'s field split and
+/// implicit-bit attach were hoisted out of the loop.
+///
+/// Bit-identical to the raw chain for every `(acc, w, x)` triple —
+/// pinned exhaustively by `tests::mac_dec_matches_chain_on_triple_grid`
+/// (175,616 edge-pattern triples) and mirrored by
+/// `python/tests/validate_decoded_mac.py`.  The FTZ zero-operand
+/// shortcut is preserved (same two-compare collapse as
+/// [`pim_mac_acc_bits`]); the normal×normal route feeds the packed
+/// significand straight into the shared [`mul_core_sig`] rounding core.
+#[inline(always)]
+pub fn pim_mac_acc_dec(acc: u32, wdec: u64, x: u32) -> u32 {
+    const EXP: u32 = 0x7F80_0000;
+    let we = ((wdec >> 24) & 0xFF) as u32; // w exponent field (0..=255)
+    let xe = x & EXP;
+    if (we == 0 || xe == 0) && we != 255 && xe != EXP {
+        // Product is a signed zero (see `pim_mac_acc_bits`).
+        if acc & EXP != 0 && acc & 0x7FFF_FFFF <= INF {
+            return acc;
+        }
+        let wsign = ((wdec >> 32) as u32) << 31;
+        return pim_add_bits(acc, (wsign ^ x) & 0x8000_0000);
+    }
+    let xef = ((x >> 23) & 0xFF) as i32;
+    if we.wrapping_sub(1) < 254 && !is_special(xef) {
+        // normal × normal: w's significand/exponent come pre-split.
+        let sign = ((((wdec >> 32) as u32) ^ (x >> 31)) & 1) << 31;
+        let prod = mul_core_sig(
+            sign,
+            we as i32,
+            wdec & 0xFF_FFFF,
+            xef,
+            ((x & 0x7F_FFFF) | MIN_NORMAL_MANT) as u64,
+        );
+        return pim_add_bits(acc, prod);
+    }
+    // Inf/NaN involved: reassemble and take the full special-case chain.
+    pim_add_bits(acc, pim_mul_bits(pim_encode(wdec), x))
 }
 
 /// PIM subtract: negation is a free sign-bit flip in the array (the
@@ -602,6 +694,82 @@ mod tests {
             assert_eq!(
                 pim_mac_acc_bits(acc, w, x),
                 pim_add_bits(acc, pim_mul_bits(w, x)),
+                "acc={acc:#010x} w={w:#010x} x={x:#010x}"
+            );
+        }
+    }
+
+    #[test]
+    fn decode_encode_roundtrips_every_pattern_class() {
+        for &b in &edge_bit_patterns() {
+            assert_eq!(pim_encode(pim_decode(b)), b, "{b:#010x}");
+        }
+        let mut state = 0x0DEC_0DEC_0DEC_0DECu64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        for _ in 0..200_000 {
+            let b = next() as u32;
+            assert_eq!(pim_encode(pim_decode(b)), b, "{b:#010x}");
+            // normals carry the implicit bit in the packed significand
+            let e = (b >> 23) & 0xFF;
+            if (1..=254).contains(&e) {
+                assert_eq!(
+                    pim_decode(b) & 0xFF_FFFF,
+                    ((b & 0x7F_FFFF) | MIN_NORMAL_MANT) as u64
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mac_dec_matches_chain_on_triple_grid() {
+        // Exhaustive: every (acc, w, x) triple over the edge-pattern
+        // grid — the decoded-operand MAC must be bit-identical to the
+        // raw-bits shortcut MAC (and therefore to the two-call chain).
+        let grid = edge_bit_patterns();
+        for &acc in &grid {
+            for &w in &grid {
+                let wdec = pim_decode(w);
+                for &x in &grid {
+                    assert_eq!(
+                        pim_mac_acc_dec(acc, wdec, x),
+                        pim_mac_acc_bits(acc, w, x),
+                        "acc={acc:#010x} w={w:#010x} x={x:#010x}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mac_dec_matches_chain_random_with_forced_zeros() {
+        let mut state = 0xDECA_F00D_CAFE_D00Du64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        for i in 0..300_000u32 {
+            let acc = next() as u32;
+            let r = next();
+            let mut w = r as u32;
+            let mut x = (r >> 32) as u32;
+            if i % 2 == 0 {
+                // force the zero-class-x fast path on half the samples
+                x &= 0x807F_FFFF;
+            }
+            if i % 3 == 0 {
+                // and zero-class w on a third (the decoded side)
+                w &= 0x807F_FFFF;
+            }
+            assert_eq!(
+                pim_mac_acc_dec(acc, pim_decode(w), x),
+                pim_mac_acc_bits(acc, w, x),
                 "acc={acc:#010x} w={w:#010x} x={x:#010x}"
             );
         }

@@ -4,7 +4,11 @@
 //! implementation, but executes *real* training offline: every train
 //! step runs forward + backward + SGD update through the wave-parallel
 //! [`TrainEngine`] (each MAC on the PIM softfloat chain, priced from
-//! the cached cost model).  `load_dir` therefore always succeeds — the
+//! the cached cost model).  The engine runs in the default
+//! `ExecMode::Pooled` steady state, so runtime training traffic rides
+//! the PR 5 blocked layout-aware kernels (pre-decoded weight panels,
+//! transpose-free backward) with zero per-step heap allocations or
+//! thread spawns.  `load_dir` therefore always succeeds — the
 //! "artifacts" are the in-crate network description — and the
 //! coordinator, CLI and examples train LeNet-5 end to end with no XLA,
 //! no artifacts and no network access.  The per-step ledgers accumulate

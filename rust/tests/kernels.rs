@@ -1,0 +1,198 @@
+//! PR 5 layout-aware kernel family invariants.
+//!
+//! The blocked NT/NN/TN kernels must be **bit-identical** to the
+//! explicit-transpose-then-NT lowering they replace, for every shape
+//! class the training engine can emit: empty results (`m == 0`,
+//! `n == 0`), empty contractions (`k == 0`), single columns, sizes that
+//! are not multiples of the register tile (`NR = 4`) and contractions
+//! that cross the K-panel boundary (`KC = 256`) — across thread counts
+//! and execution modes.  The NT reference itself has been pinned to the
+//! seed scalar host chain since PR 1 (`rust/tests/properties.rs`), so
+//! equality here chains all three layouts back to the seed semantics.
+
+use mram_pim::arch::{ExecMode, GemmEngine};
+use mram_pim::fpu::{FloatFormat, FpCostModel};
+use mram_pim::nvsim::OpCosts;
+use mram_pim::prop::Rng;
+
+const LANES: usize = 2048;
+
+fn engine(threads: usize, mode: ExecMode) -> GemmEngine {
+    GemmEngine::from_model_mode(
+        FpCostModel::new(OpCosts::proposed_default(), FloatFormat::FP32),
+        LANES,
+        threads,
+        mode,
+    )
+}
+
+fn transpose(m: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut t = vec![0f32; m.len()];
+    for r in 0..rows {
+        for c in 0..cols {
+            t[c * rows + r] = m[r * cols + c];
+        }
+    }
+    t
+}
+
+/// ReLU-sparse random vector: exact zeros, negatives, a few subnormals
+/// (FTZ zero-class) — the operand mix training traffic produces.
+fn sparse_vec(rng: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len)
+        .map(|i| {
+            let v = rng.f32_normal(3);
+            match i % 5 {
+                0 => 0.0,
+                3 if i % 10 == 3 => 1e-41, // subnormal: zero-class under FTZ
+                _ => v,
+            }
+        })
+        .collect()
+}
+
+/// The shape grid every property below sweeps: degenerate, tiny,
+/// tile-remainder and panel-crossing cases.
+const SHAPES: &[(usize, usize, usize)] = &[
+    (0, 7, 5),   // rows == 0
+    (4, 7, 0),   // cols == 0
+    (3, 0, 4),   // k == 0
+    (1, 1, 1),
+    (5, 9, 1),   // cols == 1
+    (1, 17, 6),  // single row (column-split dispatch)
+    (6, 13, 7),  // NR remainder columns
+    (8, 300, 5), // k crosses the KC = 256 panel boundary
+    (3, 260, 9), // panel boundary + NR remainder
+    (32, 24, 10),
+];
+
+#[test]
+fn nn_equals_explicit_transpose_then_nt_across_modes_and_threads() {
+    let mut rng = Rng::new(0x55E1);
+    for &(m, k, n) in SHAPES {
+        let a = sparse_vec(&mut rng, m * k);
+        let b = sparse_vec(&mut rng, k * n);
+        // Reference: transpose B into the NT weight layout and run the
+        // frozen scoped NT path single-threaded.
+        let bt = transpose(&b, k, n);
+        let want = engine(1, ExecMode::Scoped).gemm(&bt, &a, None, n, k, m);
+        for threads in [1usize, 3, 8] {
+            for mode in [ExecMode::Pooled, ExecMode::Flat, ExecMode::Scoped] {
+                let got = engine(threads, mode).gemm_nn(&a, &b, m, k, n);
+                assert_eq!(got.macs, want.macs, "({m},{k},{n}) t{threads} {mode:?}");
+                assert_eq!(got.waves, want.waves, "({m},{k},{n}) t{threads} {mode:?}");
+                assert_eq!(got.y.len(), want.y.len());
+                for (i, (g, w)) in got.y.iter().zip(&want.y).enumerate() {
+                    assert_eq!(
+                        g.to_bits(),
+                        w.to_bits(),
+                        "nn ({m},{k},{n}) t{threads} {mode:?} elem {i}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn tn_equals_explicit_transposes_then_nt_across_modes_and_threads() {
+    let mut rng = Rng::new(0x55E2);
+    for &(m, k, n) in SHAPES {
+        let a = sparse_vec(&mut rng, k * m);
+        let b = sparse_vec(&mut rng, k * n);
+        let at = transpose(&a, k, m); // [m, k]
+        let bt = transpose(&b, k, n); // [n, k]
+        let want = engine(1, ExecMode::Scoped).gemm(&bt, &at, None, n, k, m);
+        for threads in [1usize, 3, 8] {
+            for mode in [ExecMode::Pooled, ExecMode::Flat, ExecMode::Scoped] {
+                let got = engine(threads, mode).gemm_tn(&a, &b, m, k, n);
+                assert_eq!(got.macs, want.macs, "({m},{k},{n}) t{threads} {mode:?}");
+                for (i, (g, w)) in got.y.iter().zip(&want.y).enumerate() {
+                    assert_eq!(
+                        g.to_bits(),
+                        w.to_bits(),
+                        "tn ({m},{k},{n}) t{threads} {mode:?} elem {i}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn blocked_nt_equals_flat_nt_across_threads_with_bias() {
+    // The pooled blocked NT kernel (decoded panel + register tile +
+    // K-panels) against the frozen flat loop, bias seeded, on shapes
+    // hitting every edge of the tiling.
+    let mut rng = Rng::new(0x55E3);
+    for &(m, k, n) in SHAPES {
+        let x = sparse_vec(&mut rng, m * k);
+        let w = sparse_vec(&mut rng, n * k);
+        let bias = sparse_vec(&mut rng, n);
+        let want = engine(1, ExecMode::Flat).gemm(&w, &x, Some(&bias), n, k, m);
+        for threads in [1usize, 2, 5, 8] {
+            let got = engine(threads, ExecMode::Pooled).gemm(&w, &x, Some(&bias), n, k, m);
+            assert_eq!(got.macs, want.macs);
+            assert_eq!(got.waves, want.waves);
+            for (i, (g, ww)) in got.y.iter().zip(&want.y).enumerate() {
+                assert_eq!(g.to_bits(), ww.to_bits(), "nt ({m},{k},{n}) t{threads} elem {i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn random_shape_sweep_chains_all_layouts_to_one_reference() {
+    // 40 random shapes: NN and TN against the transpose+NT reference,
+    // all evaluated pooled at 4 threads (the steady-state engine).
+    let mut rng = Rng::new(0x55E4);
+    let pooled = engine(4, ExecMode::Pooled);
+    let reference = engine(1, ExecMode::Scoped);
+    for round in 0..40 {
+        let m = (rng.below(12) + 1) as usize;
+        let k = (rng.below(40) + 1) as usize;
+        let n = (rng.below(12) + 1) as usize;
+        let a_nn = sparse_vec(&mut rng, m * k);
+        let b_nn = sparse_vec(&mut rng, k * n);
+        let bt = transpose(&b_nn, k, n);
+        let want_nn = reference.gemm(&bt, &a_nn, None, n, k, m);
+        let got_nn = pooled.gemm_nn(&a_nn, &b_nn, m, k, n);
+        for (g, w) in got_nn.y.iter().zip(&want_nn.y) {
+            assert_eq!(g.to_bits(), w.to_bits(), "nn round {round} ({m},{k},{n})");
+        }
+
+        let a_tn = sparse_vec(&mut rng, k * m);
+        let at = transpose(&a_tn, k, m);
+        let want_tn = reference.gemm(&bt, &at, None, n, k, m);
+        let got_tn = pooled.gemm_tn(&a_tn, &b_nn, m, k, n);
+        for (g, w) in got_tn.y.iter().zip(&want_tn.y) {
+            assert_eq!(g.to_bits(), w.to_bits(), "tn round {round} ({m},{k},{n})");
+        }
+    }
+}
+
+#[test]
+fn decoded_panels_recycle_through_the_arena() {
+    // Two identical pooled NN calls: the second must reuse both the
+    // output buffer and the decoded panel (no growth in parked buffers
+    // beyond the warm set), and produce the same bits.
+    let mut rng = Rng::new(0x55E5);
+    let (m, k, n) = (6usize, 33usize, 9usize);
+    let a = sparse_vec(&mut rng, m * k);
+    let b = sparse_vec(&mut rng, k * n);
+    let eng = engine(2, ExecMode::Pooled);
+    let r1 = eng.gemm_nn(&a, &b, m, k, n);
+    let first = r1.y.clone();
+    eng.recycle_buf(r1.y);
+    let parked = eng.arena_free_buffers();
+    let r2 = eng.gemm_nn(&a, &b, m, k, n);
+    for (g, w) in r2.y.iter().zip(&first) {
+        assert_eq!(g.to_bits(), w.to_bits());
+    }
+    eng.recycle_buf(r2.y);
+    assert_eq!(
+        eng.arena_free_buffers(),
+        parked,
+        "second identical call must not grow the arena working set"
+    );
+}

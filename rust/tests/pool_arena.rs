@@ -1,13 +1,19 @@
-//! PR 4 steady-state engine invariants:
+//! PR 4/5 steady-state engine invariants:
 //!
 //! 1. **Arena reuse safety** — a warm engine alternating between two
 //!    different-shaped networks (LeNet-5 and a small MLP) produces
 //!    bit-identical results to fresh engines: recycled scratch cannot
 //!    leak state between steps or shapes.
-//! 2. **Pooled ≡ scoped** — the persistent-pool engine and the frozen
-//!    PR 3 `thread::scope` baseline are bit-identical across thread
-//!    counts {1, 2, 4, 8}, and the pooled cluster matches the scoped
-//!    cluster across shard counts {1, 2, 4}.
+//! 2. **Pooled ≡ flat ≡ scoped** — the blocked-kernel engine
+//!    (transpose-free backward, pre-decoded weight panels), the frozen
+//!    PR 4 flat floor (`ExecMode::Flat`: flat kernels + transpose-based
+//!    backward on the pool/arena) and the frozen PR 3 `thread::scope`
+//!    baseline are bit-identical across thread counts {1, 2, 4, 8},
+//!    and the pooled cluster matches both baselines across shard
+//!    counts {1, 2, 4}.  Since the two backward *lowerings* differ
+//!    (direct NN/TN kernels vs explicit transposes into the NT kernel),
+//!    this suite is also the end-to-end proof that the PR 5 kernels
+//!    schedule exactly the seed MAC chains.
 
 use mram_pim::arch::{ExecMode, NetworkParams, TrainEngine, TrainStepResult};
 use mram_pim::cluster::{ClusterConfig, ClusterEngine};
@@ -169,7 +175,7 @@ fn pooled_matches_scoped_across_thread_counts() {
     let bits_ref = param_bits(&p_ref);
 
     for threads in [1usize, 2, 4, 8] {
-        for mode in [ExecMode::Pooled, ExecMode::Scoped] {
+        for mode in [ExecMode::Pooled, ExecMode::Flat, ExecMode::Scoped] {
             let eng = TrainEngine::new_mode(FpCostModel::proposed_fp32(), LANES, threads, mode);
             let mut p = NetworkParams::init(&net, 3);
             let r = eng
@@ -198,7 +204,7 @@ fn pooled_cluster_matches_scoped_across_shards() {
     let mut multi_shard_bits: Option<Vec<u32>> = None;
     for shards in [1usize, 2, 4] {
         let mut mode_bits: Option<Vec<u32>> = None;
-        for mode in [ExecMode::Pooled, ExecMode::Scoped] {
+        for mode in [ExecMode::Pooled, ExecMode::Flat, ExecMode::Scoped] {
             let eng = ClusterEngine::new_mode(
                 FpCostModel::proposed_fp32(),
                 LANES,
@@ -214,7 +220,7 @@ fn pooled_cluster_matches_scoped_across_shards() {
             match &mode_bits {
                 None => mode_bits = Some(bits),
                 Some(want) => {
-                    assert_eq!(&bits, want, "shards {shards}: pooled vs scoped diverged")
+                    assert_eq!(&bits, want, "shards {shards}: {mode:?} diverged across modes")
                 }
             }
             eng.recycle(r);

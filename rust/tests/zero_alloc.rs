@@ -89,7 +89,8 @@ fn steady_state_train_step_does_not_touch_the_heap() {
     let batch = 3;
     let (x, labels) = batch_data(&net, batch, 0xA110C);
 
-    // ---- pooled engine, threads 1 and 4: zero allocations ----
+    // ---- pooled engine (blocked kernels + decoded panels), threads 1
+    //      and 4: zero allocations ----
     for threads in [1usize, 4] {
         let eng = TrainEngine::new(FpCostModel::proposed_fp32(), 1024, threads);
         let mut params = NetworkParams::init(&net, 9);
@@ -97,6 +98,20 @@ fn steady_state_train_step_does_not_touch_the_heap() {
         assert_eq!(
             allocs, 0,
             "pooled steady-state step allocated (threads {threads})"
+        );
+    }
+
+    // ---- the frozen PR 4 floor (ExecMode::Flat) must stay
+    //      allocation-free too, so the train_step acceptance gate
+    //      measures kernel improvements, not allocator regressions ----
+    for threads in [1usize, 4] {
+        let eng =
+            TrainEngine::new_mode(FpCostModel::proposed_fp32(), 1024, threads, ExecMode::Flat);
+        let mut params = NetworkParams::init(&net, 9);
+        let allocs = steady_step_allocs(&eng, &net, &mut params, &x, &labels, batch, 2);
+        assert_eq!(
+            allocs, 0,
+            "flat-floor steady-state step allocated (threads {threads})"
         );
     }
 

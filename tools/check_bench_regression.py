@@ -6,10 +6,15 @@ run with ``-- --json`` — overwriting the committed baselines — so this
 script reads the *committed* version via ``git show HEAD:<file>`` and
 compares it to the file on disk (the fresh run).
 
-Gate: the ``train_step`` pooled entry must not regress more than
-``--max-regress-pct`` (default 10, env ``BENCH_REGRESSION_PCT``)
-versus the committed baseline's ``mean_ns``.  All other shared entries
-are reported but informational.
+Gate: one headline entry per bench file — the pooled ``train_step``,
+the threads-4 ``gemm_wave`` engine, and the shards-4 ``cluster_scaling``
+step — must not regress more than ``--max-regress-pct`` (default 10,
+env ``BENCH_REGRESSION_PCT``) versus the committed baseline's
+``mean_ns``.  All other shared entries are reported but informational.
+(``cluster_scaling`` gates shards=4, not shards=2: the shards=2 point
+is dominated by the per-sample micrograd lowering's fixed costs at only
+2-way chip parallelism — see EXPERIMENTS.md §PR 5 — and is reported
+informationally.)
 
 Baselines are hardware-dependent: after intentional perf changes (or on
 new hardware) re-run the benches with ``-- --json`` and commit the
@@ -32,9 +37,12 @@ BENCHES = [
     "BENCH_cluster_scaling.json",
 ]
 
-# The gated entry: the steady-state pooled train step.
-GATE_FILE = "BENCH_train_step.json"
-GATE_NAME = "lenet5 train step batch 32 (threads 4, pooled)"
+# The gated headline entry of each bench file.
+GATES = {
+    "BENCH_train_step.json": "lenet5 train step batch 32 (threads 4, pooled)",
+    "BENCH_gemm_wave.json": "gemm engine 128x256 batch 32 (threads 4)",
+    "BENCH_cluster_scaling.json": "lenet5 cluster step batch 32 shards 4",
+}
 
 
 def load_committed(path):
@@ -86,20 +94,22 @@ def main():
             print(f"{path}: bench output missing (did the bench run with -- --json?)")
             failures.append(f"{path} missing fresh output")
             continue
+        gate_name = GATES.get(path)
         for name in sorted(base.keys() & fresh.keys()):
             b, f = base[name]["mean_ns"], fresh[name]["mean_ns"]
             delta = (f - b) / b * 100.0 if b else 0.0
-            gated = path == GATE_FILE and name == GATE_NAME
+            gated = name == gate_name
             tag = "GATE" if gated else "info"
             print(f"[{tag}] {name}: baseline {b/1e6:.2f} ms, fresh {f/1e6:.2f} ms ({delta:+.1f}%)")
             if gated and delta > args.max_regress_pct:
                 failures.append(
                     f"{name}: {delta:+.1f}% vs baseline (limit +{args.max_regress_pct}%)"
                 )
-        if path == GATE_FILE and GATE_NAME not in base:
-            failures.append(f"{path}: committed baseline lacks gated entry '{GATE_NAME}'")
-        if path == GATE_FILE and fresh and GATE_NAME not in fresh:
-            failures.append(f"{path}: fresh run lacks gated entry '{GATE_NAME}'")
+        if gate_name is not None:
+            if gate_name not in base:
+                failures.append(f"{path}: committed baseline lacks gated entry '{gate_name}'")
+            if fresh and gate_name not in fresh:
+                failures.append(f"{path}: fresh run lacks gated entry '{gate_name}'")
 
     if failures:
         print("\nbench regression gate FAILED:")
