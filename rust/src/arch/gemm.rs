@@ -80,6 +80,7 @@ use crate::fpu::{FloatFormat, FpCostModel};
 use crate::model::{Layer, Network};
 use crate::nvsim::OpCosts;
 use crate::prop::Rng;
+use crate::sim::faults::FaultHook;
 
 /// How the engine executes host-side work (values are identical in
 /// all modes; only wall-clock and allocator traffic differ).
@@ -212,6 +213,10 @@ pub struct GemmEngine {
     /// Recycled scratch buffers (shared by clones; pass-through in
     /// scoped mode).
     arena: Arc<Arena>,
+    /// Per-chip fault hook: when armed, every GEMM runs the ABFT
+    /// checksum guard (and the hook's fault map corrupts writebacks).
+    /// `None` (the default) is the PR 5 fast path — no fault code runs.
+    faults: Option<Arc<FaultHook>>,
 }
 
 impl GemmEngine {
@@ -252,7 +257,19 @@ impl GemmEngine {
             } else {
                 Arena::disabled()
             }),
+            faults: None,
         }
+    }
+
+    /// Arm (or disarm) the per-chip fault hook.  Clones made after this
+    /// call share the hook (and its GEMM epoch counter).
+    pub fn set_fault_hook(&mut self, hook: Option<Arc<FaultHook>>) {
+        self.faults = hook;
+    }
+
+    /// The armed fault hook, if any.
+    pub fn fault_hook(&self) -> Option<&Arc<FaultHook>> {
+        self.faults.as_ref()
     }
 
     /// The cached analytic cost model pricing this engine's traffic.
@@ -383,7 +400,80 @@ impl GemmEngine {
             }
         }
 
+        self.abft_guard(&mut y, batch, out, inp, &|r, row| {
+            gemm_rows_flat(w, x_batch, bias, out, inp, r * out, row);
+        });
         self.priced(y, macs)
+    }
+
+    /// ABFT checksum guard over one finished `[m, n]` GEMM (k MACs per
+    /// element).  No-op unless a fault hook is armed.  When armed:
+    ///
+    /// 1. Reference row checksums (exact wrapping sums of the fp32 bit
+    ///    patterns — the redundant checksum lane the MAC waves would
+    ///    accumulate alongside the outputs) are taken from the computed
+    ///    values into arena scratch.
+    /// 2. The hook's fault map corrupts the writeback (stuck lanes +
+    ///    seeded transients, first attempt only).
+    /// 3. A verify pass re-sums every row; a mismatched row is
+    ///    recomputed from re-read (re-decoded) operands up to the retry
+    ///    budget — retries re-issue through spare lanes, so recovery is
+    ///    deterministic.  Rows still mismatched count as `unrecovered`
+    ///    (the train step refuses to apply such a gradient).
+    ///
+    /// The epoch counter advances once per guarded GEMM and the fault
+    /// draws depend only on (chip, epoch, element), so injection — and
+    /// therefore recovery — replays bit-identically across `ExecMode`s
+    /// and thread counts.  Checksum and retry work is reported through
+    /// the hook and priced by the callers as extra MAC waves; the clean
+    /// ledger (`macs`/`waves`) is untouched.
+    fn abft_guard(
+        &self,
+        y: &mut [f32],
+        m: usize,
+        n: usize,
+        k: usize,
+        recompute: &dyn Fn(usize, &mut [f32]),
+    ) {
+        let Some(hook) = self.faults.as_deref() else {
+            return;
+        };
+        debug_assert_eq!(y.len(), m * n);
+        let epoch = hook.bump_epoch();
+        let mut sums = self.arena.take_u64(m);
+        for (r, s) in sums.iter_mut().enumerate() {
+            *s = row_checksum(&y[r * n..(r + 1) * n]);
+        }
+        hook.inject(y, m, n, epoch);
+        let budget = hook.retries();
+        let mut checksum_adds = 2 * (m * n) as u64; // reference + verify
+        let mut detected = 0u64;
+        let mut retried = 0u64;
+        let mut retry_macs = 0u64;
+        let mut unrecovered = 0u64;
+        for (r, &want) in sums.iter().enumerate() {
+            let row = &mut y[r * n..(r + 1) * n];
+            if row_checksum(row) == want {
+                continue;
+            }
+            detected += 1;
+            let mut ok = false;
+            for _ in 0..budget {
+                recompute(r, row);
+                retried += 1;
+                retry_macs += (n * k) as u64;
+                checksum_adds += n as u64; // re-verify the retried row
+                if row_checksum(row) == want {
+                    ok = true;
+                    break;
+                }
+            }
+            if !ok {
+                unrecovered += 1;
+            }
+        }
+        self.arena.give_u64(sums);
+        hook.note_abft(checksum_adds, detected, retried, retry_macs, unrecovered);
     }
 
     /// Price a finished kernel run: waves amortise MACs over `lanes`,
@@ -481,6 +571,18 @@ impl GemmEngine {
             let (r0, r1, j0, j1) = task_rect(m, n, t, tasks);
             nt_rect(a, &bdec, k, n, bias, r0, r1, j0, j1, &yp);
         });
+        // Retry chain: ascending-k from freshly re-decoded weights —
+        // bit-identical to the blocked panel kernel's per-element chain.
+        self.abft_guard(&mut y, m, n, k, &|r, row| {
+            let arow = &a[r * k..(r + 1) * k];
+            for (j, slot) in row.iter_mut().enumerate() {
+                let mut acc = bias.map(|bb| bb[j].to_bits()).unwrap_or(0);
+                for (kk, &xv) in arow.iter().enumerate() {
+                    acc = pim_mac_acc_dec(acc, pim_decode(b[j * k + kk].to_bits()), xv.to_bits());
+                }
+                *slot = f32::from_bits(acc);
+            }
+        });
         self.arena.give_u64(bdec);
         self.priced(y, (m * n * k) as u64)
     }
@@ -517,6 +619,16 @@ impl GemmEngine {
             let (r0, r1, j0, j1) = task_rect(m, n, t, tasks);
             nn_rect(a, &bdec, k, n, r0, r1, j0, j1, &yp);
         });
+        self.abft_guard(&mut y, m, n, k, &|r, row| {
+            let arow = &a[r * k..(r + 1) * k];
+            for (j, slot) in row.iter_mut().enumerate() {
+                let mut acc = 0u32;
+                for (kk, &av) in arow.iter().enumerate() {
+                    acc = pim_mac_acc_dec(acc, pim_decode(b[kk * n + j].to_bits()), av.to_bits());
+                }
+                *slot = f32::from_bits(acc);
+            }
+        });
         self.arena.give_u64(bdec);
         self.priced(y, (m * n * k) as u64)
     }
@@ -550,6 +662,19 @@ impl GemmEngine {
         self.dispatch_tasks(tasks, |t| {
             let (r0, r1, j0, j1) = task_rect(m, n, t, tasks);
             tn_rect(a, b, k, m, n, r0, r1, j0, j1, &yp);
+        });
+        self.abft_guard(&mut y, m, n, k, &|r, row| {
+            for (j, slot) in row.iter_mut().enumerate() {
+                let mut acc = 0u32;
+                for kk in 0..k {
+                    acc = pim_mac_acc_dec(
+                        acc,
+                        pim_decode(a[kk * m + r].to_bits()),
+                        b[kk * n + j].to_bits(),
+                    );
+                }
+                *slot = f32::from_bits(acc);
+            }
         });
         self.priced(y, (m * n * k) as u64)
     }
@@ -779,6 +904,17 @@ const KC: usize = 256;
 /// Register-tile width of the `nt` micro-kernel: output columns
 /// accumulated simultaneously per x-element load.
 const NR: usize = 4;
+
+/// Exact ABFT row checksum: the wrapping u64 sum of the row's fp32 bit
+/// patterns.  Bit-exact (no float rounding in the checksum itself), so
+/// any single writeback bit-flip changes it and the fault-free verify
+/// pass matches the reference with probability 1 — detection has no
+/// false positives to re-run.
+#[inline]
+fn row_checksum(row: &[f32]) -> u64 {
+    row.iter()
+        .fold(0u64, |acc, v| acc.wrapping_add(v.to_bits() as u64))
+}
 
 /// Compute rows `start..start+y.len()` of the flattened `[batch, out]`
 /// output; returns the MAC count of this wave (the worker's ledger).

@@ -70,13 +70,14 @@
 //! accounting.  `rust/tests/training.rs` pins functional and analytic
 //! models together for LeNet-5 across batch sizes.
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::arch::gemm::{im2col_into, ActIn, ExecMode, GemmEngine, LayerParams, NetworkParams};
 use crate::arch::scratch::TrainScratch;
 use crate::fpu::softfloat::{pim_add_f32, pim_mul_f32, pim_sub_f32};
 use crate::fpu::FpCostModel;
 use crate::model::{Layer, Network};
+use crate::sim::faults::{corrupt_weights, FaultHook, FaultReport};
 use crate::{Error, Result};
 
 /// Ledger of one functional training step (fwd + bwd + update).
@@ -106,6 +107,18 @@ pub struct TrainStepResult {
     /// consumed result back via [`TrainEngine::recycle`] to keep the
     /// steady state allocation-free.
     pub grads: Vec<Option<LayerParams>>,
+    /// Fault/ABFT activity of this step (all-zero when no fault hook is
+    /// armed — the fault-free ledger is untouched).
+    pub faults: FaultReport,
+    /// Extra MAC waves spent on ABFT checksums and row retries —
+    /// reported *separately* from `waves` so the clean ledger keeps
+    /// matching the analytic model exactly.
+    pub fault_waves: u64,
+    /// Latency of `fault_waves` (added into `latency_s`).
+    pub fault_latency_s: f64,
+    /// Energy of the recovery work: retried MACs at full MAC cost,
+    /// checksum adds at the 1/20-MAC add cost (added into `energy_j`).
+    pub fault_energy_j: f64,
 }
 
 impl TrainStepResult {
@@ -126,6 +139,9 @@ pub struct TrainTotals {
     pub adds_bwd: u64,
     pub stored_activations: u64,
     pub waves: u64,
+    /// ABFT/recovery MAC waves (kept out of `waves` so the clean
+    /// ledger still matches the analytic model under fault injection).
+    pub fault_waves: u64,
     pub latency_s: f64,
     pub energy_j: f64,
 }
@@ -140,6 +156,7 @@ impl TrainTotals {
         self.adds_bwd += r.adds_bwd;
         self.stored_activations += r.stored_activations;
         self.waves += r.waves;
+        self.fault_waves += r.fault_waves;
         self.latency_s += r.latency_s;
         self.energy_j += r.energy_j;
     }
@@ -398,17 +415,22 @@ pub struct TrainEngine {
     e_write: f64,
     /// Reusable per-step state (tape spine, loss terms, grad spines).
     scratch: Mutex<TrainScratch>,
+    /// Per-chip fault hook (mirrors the GEMM engine's — the train step
+    /// uses it for weight-storage faults, step accounting and the
+    /// refuse-corrupt-gradients check).  `None` = PR 5 fast path.
+    faults: Option<Arc<FaultHook>>,
 }
 
 impl Clone for TrainEngine {
-    /// Clones share the GEMM engine's pool/arena but get fresh step
-    /// scratch (scratch is held for a whole step; sharing it would
-    /// serialise independent users for no benefit).
+    /// Clones share the GEMM engine's pool/arena (and fault hook) but
+    /// get fresh step scratch (scratch is held for a whole step;
+    /// sharing it would serialise independent users for no benefit).
     fn clone(&self) -> TrainEngine {
         TrainEngine {
             gemm: self.gemm.clone(),
             e_write: self.e_write,
             scratch: Mutex::new(TrainScratch::default()),
+            faults: self.faults.clone(),
         }
     }
 }
@@ -427,12 +449,60 @@ impl TrainEngine {
             e_write: model.costs.e_write,
             gemm: GemmEngine::from_model_mode(model, lanes, threads, mode),
             scratch: Mutex::new(TrainScratch::default()),
+            faults: None,
         }
     }
 
     /// The underlying batched GEMM engine (shared with inference).
     pub fn gemm(&self) -> &GemmEngine {
         &self.gemm
+    }
+
+    /// Arm (or disarm) this engine's per-chip fault hook: the GEMM path
+    /// gains the ABFT checksum guard, the train step asserts
+    /// weight-storage faults and refuses to apply unrecovered
+    /// gradients.  `None` restores the exact PR 5 fast path.
+    pub fn set_fault_hook(&mut self, hook: Option<Arc<FaultHook>>) {
+        self.gemm.set_fault_hook(hook.clone());
+        self.faults = hook;
+    }
+
+    /// The armed fault hook, if any.
+    pub fn fault_hook(&self) -> Option<&Arc<FaultHook>> {
+        self.faults.as_ref()
+    }
+
+    /// Assert the seeded weight-storage fault map on the parameter
+    /// store for `step`: stuck cells are re-asserted (physical faults
+    /// win every write), transient flips draw per (step, global
+    /// parameter index).  Keyed without a chip id, so the corrupted
+    /// model is identical however the batch is sharded.  These faults
+    /// are *silent* with respect to ABFT (the checksums verify the
+    /// arithmetic, not the model) — their effect shows up in the loss,
+    /// which is the endurance experiment.
+    pub(crate) fn assert_weight_faults(&self, params: &mut NetworkParams, step: u64) {
+        let Some(hook) = self.faults.as_deref() else {
+            return;
+        };
+        let cfg = *hook.session().config();
+        if !cfg.weight_faults_enabled() {
+            return;
+        }
+        let total: u64 = params
+            .layers
+            .iter()
+            .flatten()
+            .map(|lp| (lp.w.len() + lp.b.len()) as u64)
+            .sum();
+        let mut base = 0u64;
+        let mut changed = 0u64;
+        for lp in params.layers.iter_mut().flatten() {
+            changed += corrupt_weights(&cfg, &mut lp.w, base, total, step);
+            base += lp.w.len() as u64;
+            changed += corrupt_weights(&cfg, &mut lp.b, base, total, step);
+            base += lp.b.len() as u64;
+        }
+        hook.note_weight_faults(changed);
     }
 
     /// Return a consumed step result's buffers to the engine's scratch
@@ -616,6 +686,16 @@ impl TrainEngine {
         lr: f32,
     ) -> Result<TrainStepResult> {
         let classes = self.validate(net, params, images, labels, batch)?;
+        // Fault bookkeeping: claim the step index, snapshot the hook's
+        // counters (the per-step delta prices this step even when
+        // several engines share one session), assert the weight-storage
+        // fault map before any forward read.
+        let fault_before = self.faults.as_deref().map(|h| {
+            let step = h.session().begin_step();
+            let before = h.report();
+            self.assert_weight_faults(params, step);
+            before
+        });
         let arena = self.gemm.arena();
         let mut scratch = self.scratch.lock().expect("train scratch poisoned");
         let TrainScratch {
@@ -654,6 +734,29 @@ impl TrainEngine {
         let grads = bwd.grads;
         self.drain_tape(tape);
 
+        // ---- refuse to apply a gradient ABFT could not repair ----
+        let fault_delta = match (self.faults.as_deref(), fault_before.as_ref()) {
+            (Some(h), Some(before)) => h.report().minus(before),
+            _ => FaultReport::default(),
+        };
+        if fault_delta.unrecovered > 0 {
+            // Hand the gradient buffers straight to the arena: the
+            // scratch lock is still held, so `recycle_grads` (which
+            // re-locks it for the spine) must not run here.
+            for g in grads {
+                if let Some(lp) = g {
+                    arena.give(lp.w);
+                    arena.give(lp.b);
+                }
+            }
+            return Err(Error::Sim(format!(
+                "ABFT detected {} corrupted row(s) it could not recover \
+                 (retry budget {}); step not applied",
+                fault_delta.unrecovered,
+                self.faults.as_deref().map(|h| h.retries()).unwrap_or(0),
+            )));
+        }
+
         // ---- SGD update: w := w − lr·g, one in-array MAC/param ----
         let macs_wu = self.apply_sgd(params, &grads, lr);
 
@@ -661,12 +764,25 @@ impl TrainEngine {
         //      does: the functional and analytic models never drift ----
         let total_macs = macs_fwd + macs_bwd + macs_wu;
         let waves = total_macs.div_ceil(self.gemm.lanes as u64);
-        let latency_s = waves as f64 * self.gemm.model().t_mac();
+        let mut latency_s = waves as f64 * self.gemm.model().t_mac();
         let e_mac = self.gemm.model().e_mac();
         let stash_writes = stored * 32;
         let mut energy_j = total_macs as f64 * e_mac;
         energy_j += stash_writes as f64 * self.e_write;
         energy_j += adds as f64 * e_mac / 20.0;
+
+        // ---- price the recovery work as extra MAC waves, separately
+        //      from the clean ledger (the shared formula of
+        //      `ClusterCost::from_counts`) ----
+        let lanes = self.gemm.lanes as u64;
+        let fault_redo = fault_delta.retry_macs + fault_delta.reshard_macs;
+        let fault_waves =
+            fault_delta.checksum_adds.div_ceil(lanes) + fault_redo.div_ceil(lanes);
+        let fault_latency_s = fault_waves as f64 * self.gemm.model().t_mac();
+        let mut fault_energy_j = fault_redo as f64 * e_mac;
+        fault_energy_j += fault_delta.checksum_adds as f64 * e_mac / 20.0;
+        latency_s += fault_latency_s;
+        energy_j += fault_energy_j;
 
         Ok(TrainStepResult {
             loss,
@@ -680,6 +796,10 @@ impl TrainEngine {
             latency_s,
             energy_j,
             grads,
+            faults: fault_delta,
+            fault_waves,
+            fault_latency_s,
+            fault_energy_j,
         })
     }
 
@@ -712,6 +832,11 @@ impl TrainEngine {
             grad_spines,
         } = &mut *scratch;
 
+        // Per-sample fault accounting: the cluster prices recovery from
+        // the shared session; here the hook delta only gates the
+        // refuse-corrupt-gradients check.
+        let fault_before = self.faults.as_deref().map(|h| h.report());
+
         let macs_fwd = self.forward_taped(net, params, image, 1, tape);
         let (adds, stored) = TrainEngine::fwd_ride_along(net);
         let logits = tape.last().expect("tape holds the logits");
@@ -721,6 +846,23 @@ impl TrainEngine {
         let spine = grad_spines.pop().unwrap_or_default();
         let bwd = self.backward(net, params, image, tape, delta, 1, spine);
         self.drain_tape(tape);
+        if let (Some(h), Some(before)) = (self.faults.as_deref(), fault_before.as_ref()) {
+            let d = h.report().minus(before);
+            if d.unrecovered > 0 {
+                for g in bwd.grads {
+                    if let Some(lp) = g {
+                        arena.give(lp.w);
+                        arena.give(lp.b);
+                    }
+                }
+                return Err(Error::Sim(format!(
+                    "ABFT detected {} corrupted row(s) it could not recover \
+                     (retry budget {}); microgradient discarded",
+                    d.unrecovered,
+                    h.retries(),
+                )));
+            }
+        }
         Ok(SampleGrad {
             grads: bwd.grads,
             loss_term,

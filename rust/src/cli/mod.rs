@@ -93,7 +93,8 @@ USAGE:
   mram-pim report [--table1|--fig5|--fig6|--fa|--fast-switch|--all] [--steps N]
   mram-pim train  [--steps N] [--lr F] [--seed N] [--artifacts DIR]
                   [--train-size N] [--eval-every N] [--threads N]
-                  [--shards N] [--no-deep-validate] [--config FILE]
+                  [--shards N] [--faults SPEC] [--no-deep-validate]
+                  [--config FILE]
   mram-pim mac    [--format fp32|fp16|bf16] [--ultrafast]
   mram-pim sweep  [--what align|formats|subarray|shards]
   mram-pim selfcheck
@@ -105,9 +106,13 @@ wave-parallel train engine, priced per step — with no PJRT or artifacts
 required.  `--shards N` splits every batch data-parallel across N
 modeled PIM chips with a priced in-array gradient all-reduce; the
 merged result is bit-identical across all shard counts >= 2 (and
-`--shards 1` is the single-chip engine, bit for bit).  (Built with
-`--features pjrt` + `make artifacts`, the same command executes the
-AOT-compiled XLA graphs instead.)"
+`--shards 1` is the single-chip engine, bit for bit).  `--faults SPEC`
+arms the seeded device fault model with ABFT recovery, e.g.
+`--faults transient=1e-4,stuck=4,weight_stuck=2,chip_dead=1,seed=7`
+(keys: transient, stuck, weight_stuck, weight_flip, chip_fail,
+chip_dead, seed, retries, shard_retries, policy=reshard|rollback).
+(Built with `--features pjrt` + `make artifacts`, the same command
+executes the AOT-compiled XLA graphs instead.)"
 }
 
 #[cfg(test)]

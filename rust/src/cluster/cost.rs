@@ -49,6 +49,14 @@ pub struct ClusterCounts {
     /// Trainable parameters (update MACs; also the reduce/broadcast
     /// message size in values).
     pub params: u64,
+    /// ABFT checksum adds spent on detection (zero when faults are
+    /// disabled — the analytic model's counts).
+    pub fault_checksum_adds: u64,
+    /// MACs spent recomputing ABFT-flagged rows.
+    pub fault_retry_macs: u64,
+    /// MACs spent on shard retries / re-shards (including discarded
+    /// failed attempts).
+    pub fault_reshard_macs: u64,
 }
 
 impl ClusterCounts {
@@ -65,6 +73,9 @@ impl ClusterCounts {
             shard_adds: sizes.iter().map(|&b| adds_per_sample * b as u64).collect(),
             shard_stash: sizes.iter().map(|&b| stash_per_sample * b as u64).collect(),
             params: net.param_count() as u64,
+            fault_checksum_adds: 0,
+            fault_retry_macs: 0,
+            fault_reshard_macs: 0,
         }
     }
 }
@@ -102,6 +113,18 @@ pub struct ClusterCost {
     pub update_waves: u64,
     pub update_latency_s: f64,
     pub update_energy_j: f64,
+    // -- fault detection & recovery (all zero when faults are off) --
+    /// ABFT checksum adds (detection).
+    pub fault_checksum_adds: u64,
+    /// MACs redone for recovery: ABFT row retries + shard re-shards.
+    pub fault_retry_macs: u64,
+    pub fault_reshard_macs: u64,
+    /// Extra MAC waves for checksums + redone work — kept out of
+    /// `total_waves()` so the clean ledger still matches the analytic
+    /// model under fault injection.
+    pub fault_waves: u64,
+    pub fault_latency_s: f64,
+    pub fault_energy_j: f64,
 }
 
 /// `ceil(log2 s)` for `s ≥ 1` (0 for a single chip).
@@ -136,6 +159,19 @@ impl ClusterCost {
             e
         };
 
+        // -- fault detection & recovery, priced as extra MAC waves:
+        //    checksum adds at the 1/20-MAC add energy, redone MACs at
+        //    full MAC cost.  The EXACT expressions `TrainEngine::
+        //    train_step` uses, so the single-chip delegation stays
+        //    bit-equal.  All-zero counts price to exactly 0.0 — the
+        //    fault-free ledger is bit-identical to PR 5. --
+        let fault_redo = counts.fault_retry_macs + counts.fault_reshard_macs;
+        let fault_waves =
+            counts.fault_checksum_adds.div_ceil(lanes_u) + fault_redo.div_ceil(lanes_u);
+        let fault_latency_s = fault_waves as f64 * t_mac;
+        let mut fault_energy_j = fault_redo as f64 * e_mac;
+        fault_energy_j += counts.fault_checksum_adds as f64 * e_mac / 20.0;
+
         if s <= 1 {
             // Single chip: exactly `Accelerator::train_step_cost` — the
             // update shares the one wave pool, nothing moves off-chip.
@@ -163,6 +199,12 @@ impl ClusterCost {
                 update_waves: 0,
                 update_latency_s: 0.0,
                 update_energy_j: 0.0,
+                fault_checksum_adds: counts.fault_checksum_adds,
+                fault_retry_macs: counts.fault_retry_macs,
+                fault_reshard_macs: counts.fault_reshard_macs,
+                fault_waves,
+                fault_latency_s,
+                fault_energy_j,
             };
         }
 
@@ -219,6 +261,12 @@ impl ClusterCost {
             update_waves,
             update_latency_s: update_waves as f64 * t_mac,
             update_energy_j: p as f64 * e_mac,
+            fault_checksum_adds: counts.fault_checksum_adds,
+            fault_retry_macs: counts.fault_retry_macs,
+            fault_reshard_macs: counts.fault_reshard_macs,
+            fault_waves,
+            fault_latency_s,
+            fault_energy_j,
         }
     }
 
@@ -234,14 +282,23 @@ impl ClusterCost {
         self.shard_waves.iter().sum::<u64>() + self.reduce_waves + self.update_waves
     }
 
-    /// Step latency: parallel compute + interconnect + reduce + update.
+    /// Step latency: parallel compute + interconnect + reduce + update
+    /// + fault detection/recovery (0.0 when faults are off).
     pub fn latency_s(&self) -> f64 {
-        self.compute_latency_s + self.link_latency_s + self.reduce_latency_s + self.update_latency_s
+        self.compute_latency_s
+            + self.link_latency_s
+            + self.reduce_latency_s
+            + self.update_latency_s
+            + self.fault_latency_s
     }
 
-    /// Step energy: all component terms.
+    /// Step energy: all component terms (fault term 0.0 when off).
     pub fn energy_j(&self) -> f64 {
-        self.compute_energy_j + self.link_energy_j + self.reduce_energy_j + self.update_energy_j
+        self.compute_energy_j
+            + self.link_energy_j
+            + self.reduce_energy_j
+            + self.update_energy_j
+            + self.fault_energy_j
     }
 
     /// Fraction of step latency spent merging gradients (interconnect +
@@ -351,11 +408,15 @@ mod tests {
             let lat = c.compute_latency_s
                 + c.link_latency_s
                 + c.reduce_latency_s
-                + c.update_latency_s;
+                + c.update_latency_s
+                + c.fault_latency_s;
             let en = c.compute_energy_j
                 + c.link_energy_j
                 + c.reduce_energy_j
-                + c.update_energy_j;
+                + c.update_energy_j
+                + c.fault_energy_j;
+            assert_eq!(c.fault_latency_s, 0.0, "analytic counts carry no faults");
+            assert_eq!(c.fault_waves, 0);
             assert_eq!(c.latency_s(), lat, "shards {shards} latency terms");
             assert_eq!(c.energy_j(), en, "shards {shards} energy terms");
             let waves: u64 =

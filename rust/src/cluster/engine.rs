@@ -29,7 +29,8 @@
 //! *counted* per-chip work, which the tests hold exactly equal to the
 //! analytic [`cluster_step_cost`](crate::cluster::cluster_step_cost).
 
-use std::sync::Mutex;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Mutex};
 use std::thread;
 
 use crate::arch::gemm::{ExecMode, NetworkParams};
@@ -40,6 +41,7 @@ use crate::cluster::plan::{ClusterConfig, ShardPlan};
 use crate::cluster::reduce::{reduce_grads, GradSet};
 use crate::fpu::FpCostModel;
 use crate::model::Network;
+use crate::sim::faults::{FaultHook, FaultReport, FaultSession, RecoveryPolicy};
 use crate::{Error, Result};
 
 /// Ledger + outputs of one cluster training step.  The scalar fields
@@ -70,6 +72,9 @@ pub struct ClusterStepResult {
     pub cost: ClusterCost,
     /// Merged per-layer gradients (the all-reduce output).
     pub grads: GradSet,
+    /// Fault/ABFT/recovery activity of this step (all-zero when no
+    /// fault session is armed).
+    pub faults: FaultReport,
 }
 
 impl ClusterStepResult {
@@ -88,6 +93,7 @@ impl ClusterStepResult {
         totals.adds_bwd += self.adds_bwd;
         totals.stored_activations += self.stored_activations;
         totals.waves += self.waves;
+        totals.fault_waves += self.cost.fault_waves;
         totals.latency_s += self.latency_s;
         totals.energy_j += self.energy_j;
     }
@@ -102,9 +108,13 @@ impl ClusterStepResult {
             shard_adds: vec![r.adds],
             shard_stash: vec![r.stored_activations],
             params: r.macs_wu,
+            fault_checksum_adds: r.faults.checksum_adds,
+            fault_retry_macs: r.faults.retry_macs,
+            fault_reshard_macs: r.faults.reshard_macs,
         };
         let cost = ClusterCost::from_counts(&counts, lanes, model);
         debug_assert_eq!(cost.total_waves(), r.waves);
+        debug_assert_eq!(cost.fault_waves, r.fault_waves);
         ClusterStepResult {
             loss: r.loss,
             macs_fwd: r.macs_fwd,
@@ -119,15 +129,9 @@ impl ClusterStepResult {
             energy_j: r.energy_j,
             cost,
             grads: r.grads,
+            faults: r.faults,
         }
     }
-}
-
-/// Per-shard worker output: the chunk's microgradients in local sample
-/// order (global order = shard order × local order, since chunks are
-/// contiguous and ordered).
-struct ShardOut {
-    samples: Vec<SampleGrad>,
 }
 
 /// The sharded data-parallel training engine.
@@ -145,13 +149,20 @@ pub struct ClusterEngine {
     mode: ExecMode,
     cfg: ClusterConfig,
     lanes: usize,
+    /// Shared fault session (None ⇒ fault-free fast path, bit-identical
+    /// to the unarmed engine).
+    faults: Option<Arc<FaultSession>>,
 }
 
 impl Clone for ClusterEngine {
     /// Rebuilds an identical cluster (fresh pools/arenas; numerics are
-    /// construction-independent).
+    /// construction-independent).  The fault session is shared, the
+    /// per-chip hooks are rebuilt.
     fn clone(&self) -> Self {
-        ClusterEngine::new_mode(*self.engine.gemm().model(), self.lanes, self.cfg, self.mode)
+        let mut c =
+            ClusterEngine::new_mode(*self.engine.gemm().model(), self.lanes, self.cfg, self.mode);
+        c.set_faults(self.faults.clone());
+        c
     }
 }
 
@@ -193,7 +204,34 @@ impl ClusterEngine {
             mode,
             cfg,
             lanes: lanes.max(1),
+            faults: None,
         }
+    }
+
+    /// Arm (or disarm, with `None`) fault injection + ABFT recovery on
+    /// every chip.  The global update engine is chip 0; shard engine
+    /// `t` is chip `t + 1`.  Weight-storage faults are keyed without
+    /// the chip id (the parameter store is shared), so a fault config
+    /// corrupts the same weights at every shard count.
+    pub fn set_faults(&mut self, session: Option<Arc<FaultSession>>) {
+        self.engine.set_fault_hook(
+            session
+                .as_ref()
+                .map(|s| Arc::new(FaultHook::new(s.clone(), 0, self.lanes))),
+        );
+        for (t, eng) in self.shard_engines.iter_mut().enumerate() {
+            eng.set_fault_hook(
+                session
+                    .as_ref()
+                    .map(|s| Arc::new(FaultHook::new(s.clone(), t as u64 + 1, self.lanes))),
+            );
+        }
+        self.faults = session;
+    }
+
+    /// The armed fault session, if any.
+    pub fn fault_session(&self) -> Option<&Arc<FaultSession>> {
+        self.faults.as_ref()
     }
 
     pub fn config(&self) -> &ClusterConfig {
@@ -249,15 +287,28 @@ impl ClusterEngine {
         }
 
         self.engine.validate(net, params, images, labels, batch)?;
+
+        let session = self.faults.as_deref();
+        let step = session.map(|s| s.begin_step()).unwrap_or(0);
+        let fault_before = session.map(|s| s.report());
+        // Weight-storage faults hit the shared parameter store once per
+        // step, before any chip reads it (keyed without the chip id, so
+        // the corruption is shard-count invariant).
+        self.engine.assert_weight_faults(params, step);
+
         let plan = ShardPlan::split(batch, self.cfg.shards)?;
         let chunks = plan.chunks();
         let (c0, h0, w0) = net.input;
         let in_units = c0 * h0 * w0;
+        let shards_u = self.cfg.shards as u64;
+        // Analytic fwd+bwd MACs per sample — the charge for discarded
+        // (wasted) and re-executed chunks.
+        let fwd_per_sample: u64 = net.layers.iter().map(|l| l.macs_fwd()).sum();
+        let chunk_macs = |lo: usize, hi: usize| 3 * fwd_per_sample * (hi - lo) as u64;
 
         // ---- fan out: one persistent chip engine per shard ----
         let frozen: &NetworkParams = params;
-        let run_shard = |t: usize, engine: &TrainEngine| -> Result<ShardOut> {
-            let (lo, hi) = chunks[t];
+        let run_range = |engine: &TrainEngine, lo: usize, hi: usize| -> Result<Vec<SampleGrad>> {
             let mut samples = Vec::with_capacity(hi - lo);
             for b in lo..hi {
                 samples.push(engine.micrograd(
@@ -268,17 +319,63 @@ impl ClusterEngine {
                     batch,
                 )?);
             }
-            Ok(ShardOut { samples })
+            Ok(samples)
         };
-        let shard_results: Vec<Result<ShardOut>> = match self.mode {
+        // One attempt at shard `t` on chip `t + 1`.  Dead chips refuse
+        // up front (nothing wasted); panics are captured *inside* the
+        // task so the chip pool never trips its poison flag; injected
+        // transient chip failures strike the first attempt only, after
+        // the compute — the work is charged as wasted and discarded.
+        let run_shard = |t: usize, engine: &TrainEngine, attempt: u32| -> Result<Vec<SampleGrad>> {
+            let (lo, hi) = chunks[t];
+            let chip = t as u64 + 1;
+            if let Some(s) = session {
+                if s.chip_is_dead(chip, shards_u) {
+                    s.note_shard_failure(0);
+                    return Err(Error::Sim(format!("chip {chip} is permanently dead")));
+                }
+            }
+            let out = match catch_unwind(AssertUnwindSafe(|| run_range(engine, lo, hi))) {
+                Ok(Ok(out)) => out,
+                Ok(Err(e)) => {
+                    if let Some(s) = session {
+                        s.note_shard_failure(chunk_macs(lo, hi));
+                    }
+                    return Err(e);
+                }
+                Err(_) => {
+                    if let Some(s) = session {
+                        s.note_shard_failure(chunk_macs(lo, hi));
+                    }
+                    return Err(Error::Sim(format!(
+                        "shard {t} worker panicked; chunk [{lo}, {hi}) discarded"
+                    )));
+                }
+            };
+            if attempt == 0 {
+                if let Some(s) = session {
+                    if s.chip_failed_transiently(chip, step) {
+                        s.note_shard_failure(chunk_macs(lo, hi));
+                        for sg in out {
+                            engine.recycle_grads(sg.grads);
+                        }
+                        return Err(Error::Sim(format!(
+                            "chip {chip} failed transiently at step {step}"
+                        )));
+                    }
+                }
+            }
+            Ok(out)
+        };
+        let shard_results: Vec<Result<Vec<SampleGrad>>> = match self.mode {
             ExecMode::Pooled | ExecMode::Flat => {
                 // Persistent chip pool: zero spawns per step; each task
                 // drives its own shard engine, results land in per-chip
                 // slots.
-                let slots: Vec<Mutex<Option<Result<ShardOut>>>> =
+                let slots: Vec<Mutex<Option<Result<Vec<SampleGrad>>>>> =
                     chunks.iter().map(|_| Mutex::new(None)).collect();
                 self.chips.run(chunks.len(), |t| {
-                    let r = run_shard(t, &self.shard_engines[t]);
+                    let r = run_shard(t, &self.shard_engines[t], 0);
                     *slots[t].lock().expect("shard slot poisoned") = Some(r);
                 });
                 slots
@@ -286,7 +383,7 @@ impl ClusterEngine {
                     .map(|m| {
                         m.into_inner()
                             .expect("shard slot poisoned")
-                            .expect("shard task ran")
+                            .unwrap_or_else(|| Err(Error::Sim("shard task never ran".into())))
                     })
                     .collect()
             }
@@ -297,17 +394,117 @@ impl ClusterEngine {
                 thread::scope(|s| {
                     let mut handles = Vec::with_capacity(chunks.len());
                     for (t, engine) in self.shard_engines.iter().enumerate() {
-                        handles.push(s.spawn(move || run_shard(t, engine)));
+                        handles.push(s.spawn(move || run_shard(t, engine, 0)));
                     }
                     note_worker_launches(handles.len() as u64);
                     handles
                         .into_iter()
-                        .map(|h| h.join().expect("shard worker panicked"))
+                        .enumerate()
+                        .map(|(t, h)| match h.join() {
+                            Ok(r) => r,
+                            // A panic that escaped the in-task capture
+                            // degrades to a recoverable shard failure
+                            // instead of tearing the whole step down.
+                            Err(_) => Err(Error::Sim(format!("shard {t} worker panicked"))),
+                        })
                         .collect()
                 })
             }
         };
-        let outs: Vec<ShardOut> = shard_results.into_iter().collect::<Result<_>>()?;
+
+        // ---- recover failed shards: bounded retries on the caller ----
+        let budget = session.map(|s| s.config().shard_retries).unwrap_or(0);
+        let mut outs: Vec<Option<Vec<SampleGrad>>> = Vec::with_capacity(chunks.len());
+        let mut last_err: Option<Error> = None;
+        for (t, r) in shard_results.into_iter().enumerate() {
+            match r {
+                Ok(o) => outs.push(Some(o)),
+                Err(e) => {
+                    let Some(s) = session else {
+                        // Unarmed cluster keeps the strict contract:
+                        // the first shard error fails the step.
+                        return Err(e);
+                    };
+                    let mut recovered = None;
+                    let mut err = e;
+                    for _ in 0..budget {
+                        s.note_shard_retry();
+                        match run_shard(t, &self.shard_engines[t], 1) {
+                            Ok(o) => {
+                                recovered = Some(o);
+                                break;
+                            }
+                            Err(e2) => err = e2,
+                        }
+                    }
+                    if recovered.is_none() {
+                        last_err = Some(err);
+                    }
+                    outs.push(recovered);
+                }
+            }
+        }
+
+        // ---- retry budget exhausted: re-shard onto survivors or roll
+        //      back ----
+        let failed: Vec<usize> = outs
+            .iter()
+            .enumerate()
+            .filter_map(|(t, o)| o.is_none().then_some(t))
+            .collect();
+        if !failed.is_empty() {
+            let s = session.expect("unarmed shard errors returned above");
+            let err_text = last_err
+                .map(|e| e.to_string())
+                .unwrap_or_else(|| "shard failed".into());
+            match s.config().policy {
+                RecoveryPolicy::Rollback => {
+                    s.note_rollback();
+                    return Err(Error::Sim(format!(
+                        "{} shard(s) failed after {} retries; rolling back step \
+                         (params untouched): {err_text}",
+                        failed.len(),
+                        budget,
+                    )));
+                }
+                RecoveryPolicy::Reshard => {
+                    let survivors: Vec<usize> = outs
+                        .iter()
+                        .enumerate()
+                        .filter_map(|(t, o)| o.is_some().then_some(t))
+                        .collect();
+                    if survivors.is_empty() {
+                        return Err(Error::Sim(format!(
+                            "all {} shards failed; no survivors to re-shard onto: {err_text}",
+                            chunks.len(),
+                        )));
+                    }
+                    // Recompute each lost chunk on the surviving chips
+                    // (round-robin), splicing the samples back at their
+                    // canonical positions — the merged gradient stays
+                    // bit-identical to the fault-free step.  Survivors
+                    // already cleared this step's transient window, so
+                    // the redo runs through plain `run_range`.
+                    let mut rr = 0usize;
+                    for t in failed {
+                        let (lo, hi) = chunks[t];
+                        let sub = ShardPlan::split(hi - lo, survivors.len().min(hi - lo))?;
+                        let mut redone = Vec::with_capacity(hi - lo);
+                        for &(slo, shi) in sub.chunks() {
+                            let eng = &self.shard_engines[survivors[rr % survivors.len()]];
+                            rr += 1;
+                            redone.extend(run_range(eng, lo + slo, lo + shi)?);
+                        }
+                        s.note_reshard(chunk_macs(lo, hi));
+                        outs[t] = Some(redone);
+                    }
+                }
+            }
+        }
+        let outs: Vec<Vec<SampleGrad>> = outs
+            .into_iter()
+            .map(|o| o.expect("all shards recovered"))
+            .collect();
 
         // ---- per-shard ledger counts (fwd + bwd) ----
         let mut shard_macs = Vec::with_capacity(outs.len());
@@ -317,7 +514,7 @@ impl ClusterEngine {
         let (mut adds, mut adds_bwd, mut stored) = (0u64, 0u64, 0u64);
         for out in &outs {
             let (mut m, mut a, mut st) = (0u64, 0u64, 0u64);
-            for sg in &out.samples {
+            for sg in out {
                 m += sg.macs_fwd + sg.macs_bwd;
                 a += sg.adds;
                 st += sg.stored_activations;
@@ -336,7 +533,7 @@ impl ClusterEngine {
         let mut terms = Vec::with_capacity(batch);
         let mut sample_grads: Vec<GradSet> = Vec::with_capacity(batch);
         for out in outs {
-            for sg in out.samples {
+            for sg in out {
                 terms.push(sg.loss_term);
                 sample_grads.push(sg.grads);
             }
@@ -367,12 +564,19 @@ impl ClusterEngine {
 
         // ---- price the counted schedule (same constructor as the
         //      analytic cluster_step_cost: equal counts ⇒ equal ledger) --
+        let fault_delta = match (session, &fault_before) {
+            (Some(s), Some(before)) => s.report().minus(before),
+            _ => FaultReport::default(),
+        };
         let counts = ClusterCounts {
             batch,
             shard_macs,
             shard_adds,
             shard_stash,
             params: macs_wu,
+            fault_checksum_adds: fault_delta.checksum_adds,
+            fault_retry_macs: fault_delta.retry_macs,
+            fault_reshard_macs: fault_delta.reshard_macs,
         };
         let cost = ClusterCost::from_counts(&counts, self.lanes, self.engine.gemm().model());
 
@@ -390,6 +594,7 @@ impl ClusterEngine {
             energy_j: cost.energy_j(),
             cost,
             grads: merged,
+            faults: fault_delta,
         })
     }
 }

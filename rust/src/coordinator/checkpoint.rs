@@ -48,17 +48,15 @@ impl Checkpoint {
         TrainState::from_host(tensors)
     }
 
+    /// Atomic save: validate first, write the bytes to `<path>.tmp`,
+    /// fsync, then rename over the destination — a crash, ENOSPC or
+    /// validation error mid-save can never truncate or corrupt an
+    /// existing checkpoint (the old in-place `File::create` did exactly
+    /// that).
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
-        let mut f = std::fs::File::create(path)?;
-        f.write_all(MAGIC)?;
-        f.write_all(&VERSION.to_le_bytes())?;
-        f.write_all(&self.step.to_le_bytes())?;
-        f.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        let path = path.as_ref();
+        // Refuse malformed checkpoints before touching the filesystem.
         for (dims, data) in &self.tensors {
-            f.write_all(&(dims.len() as u32).to_le_bytes())?;
-            for &d in dims {
-                f.write_all(&d.to_le_bytes())?;
-            }
             let n: u64 = dims.iter().product::<u64>().max(1);
             if data.len() as u64 != n && !(dims.is_empty() && data.len() == 1) {
                 return Err(Error::Sim(format!(
@@ -66,11 +64,35 @@ impl Checkpoint {
                     data.len()
                 )));
             }
-            for &v in data {
-                f.write_all(&v.to_le_bytes())?;
-            }
         }
-        Ok(())
+        let mut tmp = path.as_os_str().to_owned();
+        tmp.push(".tmp");
+        let tmp = std::path::PathBuf::from(tmp);
+        let result = (|| -> Result<()> {
+            let f = std::fs::File::create(&tmp)?;
+            let mut w = std::io::BufWriter::new(f);
+            w.write_all(MAGIC)?;
+            w.write_all(&VERSION.to_le_bytes())?;
+            w.write_all(&self.step.to_le_bytes())?;
+            w.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+            for (dims, data) in &self.tensors {
+                w.write_all(&(dims.len() as u32).to_le_bytes())?;
+                for &d in dims {
+                    w.write_all(&d.to_le_bytes())?;
+                }
+                for &v in data {
+                    w.write_all(&v.to_le_bytes())?;
+                }
+            }
+            w.flush()?;
+            w.get_ref().sync_all()?;
+            std::fs::rename(&tmp, path)?;
+            Ok(())
+        })();
+        if result.is_err() {
+            let _ = std::fs::remove_file(&tmp);
+        }
+        result
     }
 
     pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
@@ -185,5 +207,37 @@ mod tests {
             step: 0,
         };
         assert!(c.save(tmp("bad.ckpt")).is_err());
+        // validation happens before any file is touched
+        assert!(!tmp("bad.ckpt").exists());
+        assert!(!tmp("bad.ckpt.tmp").exists());
+    }
+
+    #[test]
+    fn failed_save_leaves_original_intact() {
+        // A good checkpoint on disk must survive a later save that
+        // errors out: the atomic tmp+rename path never truncates the
+        // destination (the pre-atomic in-place create did).
+        let path = tmp("intact.ckpt");
+        let good = sample();
+        good.save(&path).unwrap();
+        let bad = Checkpoint {
+            tensors: vec![(vec![2, 2], vec![1.0])],
+            step: 9,
+        };
+        assert!(bad.save(&path).is_err());
+        assert_eq!(Checkpoint::load(&path).unwrap(), good);
+        assert!(!tmp("intact.ckpt.tmp").exists(), "no temp debris");
+    }
+
+    #[test]
+    fn save_replaces_older_checkpoint_atomically() {
+        let path = tmp("replace.ckpt");
+        let mut a = sample();
+        a.save(&path).unwrap();
+        a.step = 999;
+        a.tensors[0].1[0] = -7.25;
+        a.save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap(), a);
+        assert!(!tmp("replace.ckpt.tmp").exists());
     }
 }

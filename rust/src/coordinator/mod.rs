@@ -108,6 +108,12 @@ impl Coordinator {
         &self.net
     }
 
+    /// The runtime this coordinator drives (e.g. to read the fault
+    /// report after a run).
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+
     /// Run functional training + cost simulation + deep validation.
     pub fn run(&self, cfg: &RunConfig) -> Result<TrainReport> {
         let sw = Stopwatch::start();

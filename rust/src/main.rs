@@ -101,6 +101,21 @@ fn cmd_train(args: &Args) -> mram_pim::Result<()> {
     let mut runtime = Runtime::load_dir(&artifacts)?;
     runtime.set_threads(cfg.threads);
     runtime.set_shards(cfg.shards);
+    let fault_spec = args.str_or("faults", "");
+    if !fault_spec.is_empty() {
+        let fault_cfg = mram_pim::sim::FaultConfig::parse(&fault_spec)?;
+        runtime.set_faults(Some(fault_cfg));
+        match runtime.fault_report() {
+            Some(_) => println!(
+                "fault model armed: {fault_spec} (ABFT-checksummed GEMM waves, \
+                 bounded retry, cluster re-shard)"
+            ),
+            None => println!(
+                "note: --faults ignored — the {} backend does not model the device array",
+                runtime.platform()
+            ),
+        }
+    }
     // The PJRT backend is single-device and ignores the knob — report
     // (and cross-check) what the runtime actually provisioned.
     let shards = runtime.shards();
@@ -158,6 +173,31 @@ fn cmd_train(args: &Args) -> mram_pim::Result<()> {
     }
     if let Some(f) = &report.functional {
         report_functional_ledger(f, coord.network(), shards)?;
+    }
+    if let Some(fr) = coord.runtime().fault_report() {
+        println!("\nfault tolerance ({} steps under the armed fault model):", fr.steps);
+        println!(
+            "  injected: {} corrupted writeback element(s) across {} row(s), \
+             {} weight-storage bit fault(s)",
+            fr.injected, fr.injected_rows, fr.weight_faults
+        );
+        println!(
+            "  ABFT: {} row(s) detected ({:.1}% of corrupted rows), {} retried, \
+             {} unrecovered",
+            fr.detected_rows,
+            fr.detection_rate() * 100.0,
+            fr.retried_rows,
+            fr.unrecovered
+        );
+        println!(
+            "  cluster: {} shard failure(s), {} shard retry(ies), {} re-shard(s), \
+             {} rollback(s)",
+            fr.shard_failures, fr.shard_retries, fr.reshards, fr.rollbacks
+        );
+        println!(
+            "  recovery work: {} checksum adds, {} retry MACs, {} re-shard MACs",
+            fr.checksum_adds, fr.retry_macs, fr.reshard_macs
+        );
     }
     println!(
         "final accuracy: {:.2}%  (wall {:.1}s)",

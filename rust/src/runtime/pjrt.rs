@@ -166,6 +166,15 @@ impl Runtime {
     pub fn shards(&self) -> usize {
         1
     }
+
+    /// Fault injection models the PIM device array, which XLA does not
+    /// expose — accepted for API parity, ignored.
+    pub fn set_faults(&mut self, _cfg: Option<crate::sim::FaultConfig>) {}
+
+    /// No fault session ever runs on the XLA backend.
+    pub fn fault_report(&self) -> Option<crate::sim::FaultReport> {
+        None
+    }
 }
 
 /// Model parameters held as device literals between steps.

@@ -17,7 +17,7 @@
 //! `training_work`/`train_step_cost` models.
 
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use super::{HostTensor, FUNCTIONAL_LANES};
 use crate::arch::gemm::{LayerParams, NetworkParams};
@@ -26,6 +26,7 @@ use crate::cluster::{ClusterConfig, ClusterEngine};
 use crate::fpu::softfloat::{pim_add_f32, pim_mul_f32};
 use crate::fpu::FpCostModel;
 use crate::model::{Layer, Network};
+use crate::sim::faults::{FaultConfig, FaultHook, FaultReport, FaultSession};
 use crate::{Error, Result};
 
 /// Lay a parameter set out as shaped host tensors, `(w, b)` per
@@ -170,6 +171,9 @@ pub struct Runtime {
     /// state in and out of this instead of rebuilding `NetworkParams`
     /// (two allocations per tensor per step in PR 3; zero now).
     cached: Mutex<Option<NetworkParams>>,
+    /// Armed fault session (CLI `--faults`).  `None` ⇒ fault-free fast
+    /// path, bit-identical to a runtime without the feature.
+    faults: Option<Arc<FaultSession>>,
 }
 
 impl Runtime {
@@ -189,6 +193,7 @@ impl Runtime {
             totals: Mutex::new(TrainTotals::default()),
             cluster: Mutex::new(None),
             cached: Mutex::new(None),
+            faults: None,
         })
     }
 
@@ -199,6 +204,11 @@ impl Runtime {
         let model = *self.engine.gemm().model();
         self.threads = threads.max(1);
         self.engine = TrainEngine::new(model, FUNCTIONAL_LANES, self.threads);
+        self.engine.set_fault_hook(
+            self.faults
+                .as_ref()
+                .map(|s| Arc::new(FaultHook::new(s.clone(), 0, FUNCTIONAL_LANES))),
+        );
         *self.cluster.get_mut().expect("cluster lock poisoned") = None;
     }
 
@@ -220,16 +230,39 @@ impl Runtime {
         self.shards
     }
 
+    /// Arm (or disarm, with `None`) the device fault model + ABFT
+    /// recovery for every subsequent train step (the CLI `--faults`
+    /// flag).  Counters accumulate across steps into
+    /// [`Runtime::fault_report`].
+    pub fn set_faults(&mut self, cfg: Option<FaultConfig>) {
+        self.faults = cfg.map(|c| Arc::new(FaultSession::new(c)));
+        self.engine.set_fault_hook(
+            self.faults
+                .as_ref()
+                .map(|s| Arc::new(FaultHook::new(s.clone(), 0, FUNCTIONAL_LANES))),
+        );
+        *self.cluster.get_mut().expect("cluster lock poisoned") = None;
+    }
+
+    /// Cumulative fault/ABFT/recovery counters of every step this
+    /// runtime executed.  `None` when no fault session is armed (and
+    /// always `None` on the PJRT backend).
+    pub fn fault_report(&self) -> Option<FaultReport> {
+        self.faults.as_ref().map(|s| s.report())
+    }
+
     /// Build the cluster engine the current `shards`/`threads`
     /// provisioning implies (cached in `self.cluster` by the caller).
     fn build_cluster(&self) -> ClusterEngine {
         let model = *self.engine.gemm().model();
         let threads_per_shard = (self.threads / self.shards).max(1);
-        ClusterEngine::new(
+        let mut cl = ClusterEngine::new(
             model,
             FUNCTIONAL_LANES,
             ClusterConfig::new(self.shards, threads_per_shard),
-        )
+        );
+        cl.set_faults(self.faults.clone());
+        cl
     }
 
     pub fn platform(&self) -> String {

@@ -100,6 +100,579 @@ pub fn mul_error_rate(faults: &[Fault], n: usize, seed: u64) -> f64 {
     bad as f64 / n as f64
 }
 
+// ---------------------------------------------------------------------------
+// Training-path fault model (PR 6): deterministic per-chip fault maps,
+// ABFT bookkeeping, and recovery accounting.
+//
+// Three independent fault axes, all seeded and replayable:
+//
+//  * **Weight-storage faults** (`weight_stuck`, `weight_flip`) corrupt the
+//    stored parameters themselves, in the *decoded* `u64` domain the PR 5
+//    blocked kernels pre-decode weights into ([`pim_decode`] → flip/force a
+//    fraction bit → [`pim_encode`]).  These are silent with respect to ABFT
+//    (the checksums verify the arithmetic, not the model) — their effect is
+//    measured in loss, the endurance story of §2.
+//  * **Writeback faults** (`transient`, `stuck`) corrupt GEMM outputs as
+//    the MAC waves latch them: a transient bit-flip per output element, and
+//    per-chip stuck writeback lanes that force a fraction bit.  These are
+//    what the ABFT row checksums detect; a bounded retry recomputes just the
+//    affected rows from re-read (re-decoded) operands (the retry re-issues
+//    through spare lanes, so a stuck lane does not re-corrupt it).
+//  * **Chip failures** (`chip_fail`, `chip_dead`) take out a whole cluster
+//    shard — transiently (one step's attempt) or permanently.  The cluster
+//    retries the shard up to `shard_retries`, then re-shards the failed
+//    chunk over the survivors (or rolls the step back, by policy).
+//
+// Every draw is a pure function of (seed, fault class, chip, position), so
+// the same config replays bit-identically across thread counts and
+// `ExecMode`s.
+
+use crate::fpu::softfloat::{pim_decode, pim_encode};
+use crate::{Error, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// What the cluster does once a shard exhausts its retry budget.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecoveryPolicy {
+    /// Re-split the failed chunk over the surviving chips (reusing
+    /// `ShardPlan`) and complete the step.
+    Reshard,
+    /// Abandon the step: parameters stay at their last committed state
+    /// (the implicit checkpoint) and the step reports an error.
+    Rollback,
+}
+
+/// Seeded fault-injection configuration, parsed from the CLI
+/// `--faults key=value,...` spec.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultConfig {
+    /// Per-output-element transient writeback bit-flip probability.
+    pub transient: f64,
+    /// Stuck writeback lanes per chip (each forces one fraction bit).
+    pub stuck_lanes: u64,
+    /// Permanently stuck weight cells across the whole parameter store.
+    pub weight_stuck: u64,
+    /// Per-weight per-step transient storage bit-flip probability.
+    pub weight_flip: f64,
+    /// Per-chip per-step transient whole-shard failure probability.
+    pub chip_fail: f64,
+    /// Permanently dead chips in the cluster.
+    pub chip_dead: u64,
+    /// Seed for every fault stream.
+    pub seed: u64,
+    /// ABFT row-retry budget for a corrupted GEMM wave.
+    pub retries: u32,
+    /// Re-execution budget for a failed cluster shard.
+    pub shard_retries: u32,
+    /// Action once a shard's retry budget is exhausted.
+    pub policy: RecoveryPolicy,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            transient: 0.0,
+            stuck_lanes: 0,
+            weight_stuck: 0,
+            weight_flip: 0.0,
+            chip_fail: 0.0,
+            chip_dead: 0,
+            seed: 1,
+            retries: 1,
+            shard_retries: 1,
+            policy: RecoveryPolicy::Reshard,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Parse a CLI spec like
+    /// `transient=1e-5,stuck=4,weight_stuck=8,weight_flip=1e-6,chip_fail=0.1,chip_dead=1,seed=7,retries=1,shard_retries=1,policy=reshard`.
+    pub fn parse(spec: &str) -> Result<FaultConfig> {
+        let mut cfg = FaultConfig::default();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, val) = part.split_once('=').ok_or_else(|| {
+                Error::Config(format!("--faults: expected key=value, got {part:?}"))
+            })?;
+            let (key, val) = (key.trim(), val.trim());
+            let bad = || Error::Config(format!("--faults: bad value for {key}: {val:?}"));
+            match key {
+                "transient" => cfg.transient = val.parse().map_err(|_| bad())?,
+                "stuck" => cfg.stuck_lanes = val.parse().map_err(|_| bad())?,
+                "weight_stuck" => cfg.weight_stuck = val.parse().map_err(|_| bad())?,
+                "weight_flip" => cfg.weight_flip = val.parse().map_err(|_| bad())?,
+                "chip_fail" => cfg.chip_fail = val.parse().map_err(|_| bad())?,
+                "chip_dead" => cfg.chip_dead = val.parse().map_err(|_| bad())?,
+                "seed" => cfg.seed = val.parse().map_err(|_| bad())?,
+                "retries" => cfg.retries = val.parse().map_err(|_| bad())?,
+                "shard_retries" => cfg.shard_retries = val.parse().map_err(|_| bad())?,
+                "policy" => {
+                    cfg.policy = match val {
+                        "reshard" => RecoveryPolicy::Reshard,
+                        "rollback" => RecoveryPolicy::Rollback,
+                        other => {
+                            return Err(Error::Config(format!(
+                                "--faults: unknown policy {other:?} (want reshard|rollback)"
+                            )))
+                        }
+                    }
+                }
+                other => {
+                    return Err(Error::Config(format!("--faults: unknown key {other:?}")))
+                }
+            }
+        }
+        for (name, rate) in [
+            ("transient", cfg.transient),
+            ("weight_flip", cfg.weight_flip),
+            ("chip_fail", cfg.chip_fail),
+        ] {
+            if !(0.0..=1.0).contains(&rate) {
+                return Err(Error::Config(format!(
+                    "--faults: {name} must be a probability in [0, 1], got {rate}"
+                )));
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Any weight-storage fault axis active?
+    pub fn weight_faults_enabled(&self) -> bool {
+        self.weight_stuck > 0 || self.weight_flip > 0.0
+    }
+}
+
+// Distinct salts keep each fault class on an independent hash stream.
+const TRANSIENT_SALT: u64 = 0x5452_414E_5349_4E54; // "TRANSINT"
+const STUCK_SALT: u64 = 0x5354_5543_4B4C_414E; // "STUCKLAN"
+const WEIGHT_STUCK_SALT: u64 = 0x5745_4947_5354_5543; // "WEIGSTUC"
+const WEIGHT_FLIP_SALT: u64 = 0x5745_4947_464C_4950; // "WEIGFLIP"
+const CHIP_FAIL_SALT: u64 = 0x4348_4950_4641_494C; // "CHIPFAIL"
+const CHIP_DEAD_SALT: u64 = 0x4348_4950_4445_4144; // "CHIPDEAD"
+
+/// splitmix64 finaliser — the bit mixer under every fault draw.
+#[inline]
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Chained hash of a fault-stream position: every draw is a pure
+/// function of (seed, salt, a, b, c).
+#[inline]
+fn fault_hash(seed: u64, salt: u64, a: u64, b: u64, c: u64) -> u64 {
+    let h = mix64(seed ^ salt);
+    let h = mix64(h ^ a);
+    let h = mix64(h ^ b);
+    mix64(h ^ c)
+}
+
+/// Map a hash to a uniform draw in [0, 1).
+#[inline]
+fn unit(h: u64) -> f64 {
+    (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// Flip one fraction bit (0..=22) of an fp32, in the decoded `u64`
+/// domain the blocked kernels store weight panels in.
+#[inline]
+fn frac_flip(bits: u32, bit: u32) -> u32 {
+    pim_encode(pim_decode(bits) ^ (1u64 << bit))
+}
+
+/// Force one fraction bit (0..=22) of an fp32 to a stuck value, in the
+/// decoded `u64` domain.
+#[inline]
+fn frac_force(bits: u32, bit: u32, one: bool) -> u32 {
+    let dec = pim_decode(bits);
+    let m = 1u64 << bit;
+    pim_encode(if one { dec | m } else { dec & !m })
+}
+
+/// Cumulative fault/recovery counters — a snapshot of a
+/// [`FaultSession`] or [`FaultHook`], and (as a delta via
+/// [`FaultReport::minus`]) the per-step fault summary attached to step
+/// results.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultReport {
+    /// Training steps the session has begun.
+    pub steps: u64,
+    /// Writeback fault sites injected (elements whose bits changed).
+    pub injected: u64,
+    /// Output rows that had at least one injected writeback fault.
+    pub injected_rows: u64,
+    /// Weight-storage fault sites asserted (bits actually changed).
+    pub weight_faults: u64,
+    /// ABFT checksum adds spent on detection (reference + verify).
+    pub checksum_adds: u64,
+    /// Rows whose checksum flagged corruption.
+    pub detected_rows: u64,
+    /// Rows recomputed from re-decoded operands.
+    pub retried_rows: u64,
+    /// MACs spent on row retries.
+    pub retry_macs: u64,
+    /// Rows still corrupt after the retry budget.
+    pub unrecovered: u64,
+    /// Cluster shard attempts that failed (panic, ABFT exhaustion, or
+    /// injected chip failure).
+    pub shard_failures: u64,
+    /// Shard re-executions on the same chip.
+    pub shard_retries: u64,
+    /// Failed chunks re-split over surviving chips.
+    pub reshards: u64,
+    /// MACs spent on shard retries/re-shards (including discarded
+    /// attempts).
+    pub reshard_macs: u64,
+    /// Steps abandoned under [`RecoveryPolicy::Rollback`].
+    pub rollbacks: u64,
+}
+
+impl FaultReport {
+    /// Field-wise difference (`self` − `earlier`) — the per-step delta
+    /// between two snapshots of the same session or hook.
+    pub fn minus(&self, earlier: &FaultReport) -> FaultReport {
+        FaultReport {
+            steps: self.steps.wrapping_sub(earlier.steps),
+            injected: self.injected.wrapping_sub(earlier.injected),
+            injected_rows: self.injected_rows.wrapping_sub(earlier.injected_rows),
+            weight_faults: self.weight_faults.wrapping_sub(earlier.weight_faults),
+            checksum_adds: self.checksum_adds.wrapping_sub(earlier.checksum_adds),
+            detected_rows: self.detected_rows.wrapping_sub(earlier.detected_rows),
+            retried_rows: self.retried_rows.wrapping_sub(earlier.retried_rows),
+            retry_macs: self.retry_macs.wrapping_sub(earlier.retry_macs),
+            unrecovered: self.unrecovered.wrapping_sub(earlier.unrecovered),
+            shard_failures: self.shard_failures.wrapping_sub(earlier.shard_failures),
+            shard_retries: self.shard_retries.wrapping_sub(earlier.shard_retries),
+            reshards: self.reshards.wrapping_sub(earlier.reshards),
+            reshard_macs: self.reshard_macs.wrapping_sub(earlier.reshard_macs),
+            rollbacks: self.rollbacks.wrapping_sub(earlier.rollbacks),
+        }
+    }
+
+    /// Fraction of corrupted rows the ABFT checksums caught (1.0 when
+    /// nothing was injected — there was nothing to miss).
+    pub fn detection_rate(&self) -> f64 {
+        if self.injected_rows == 0 {
+            1.0
+        } else {
+            self.detected_rows as f64 / self.injected_rows as f64
+        }
+    }
+
+    /// Did any fault slip through or stay unrecovered?
+    pub fn clean(&self) -> bool {
+        self.unrecovered == 0 && self.rollbacks == 0
+    }
+}
+
+macro_rules! fault_counters {
+    ($($field:ident),* $(,)?) => {
+        #[derive(Debug, Default)]
+        struct FaultCounters {
+            $($field: AtomicU64,)*
+        }
+
+        impl FaultCounters {
+            fn snapshot(&self, steps: u64) -> FaultReport {
+                FaultReport {
+                    steps,
+                    $($field: self.$field.load(Ordering::Relaxed),)*
+                }
+            }
+        }
+    };
+}
+
+fault_counters!(
+    injected,
+    injected_rows,
+    weight_faults,
+    checksum_adds,
+    detected_rows,
+    retried_rows,
+    retry_macs,
+    unrecovered,
+    shard_failures,
+    shard_retries,
+    reshards,
+    reshard_macs,
+    rollbacks,
+);
+
+/// One fault-injection run: the config plus cumulative counters shared
+/// by every chip hook.  Cheap atomic bumps (Relaxed — counters, not
+/// synchronisation).
+#[derive(Debug)]
+pub struct FaultSession {
+    cfg: FaultConfig,
+    steps: AtomicU64,
+    totals: FaultCounters,
+}
+
+impl FaultSession {
+    pub fn new(cfg: FaultConfig) -> FaultSession {
+        FaultSession { cfg, steps: AtomicU64::new(0), totals: FaultCounters::default() }
+    }
+
+    pub fn config(&self) -> &FaultConfig {
+        &self.cfg
+    }
+
+    /// Claim the next step index (0-based) for fault-stream keying.
+    pub fn begin_step(&self) -> u64 {
+        self.steps.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Snapshot the cumulative counters.
+    pub fn report(&self) -> FaultReport {
+        self.totals.snapshot(self.steps.load(Ordering::Relaxed))
+    }
+
+    /// Is `chip` (1-based cluster chip id) one of the `chip_dead`
+    /// permanently dead chips among `chips`?  The dead set is the
+    /// `chip_dead` chips with the smallest seeded hash — deterministic,
+    /// exactly-K, allocation-free.
+    pub fn chip_is_dead(&self, chip: u64, chips: u64) -> bool {
+        let k = self.cfg.chip_dead.min(chips);
+        if k == 0 || chip == 0 || chip > chips {
+            return false;
+        }
+        let hc = fault_hash(self.cfg.seed, CHIP_DEAD_SALT, chip, 0, 0);
+        let mut rank = 0u64;
+        for c in 1..=chips {
+            if c == chip {
+                continue;
+            }
+            let h = fault_hash(self.cfg.seed, CHIP_DEAD_SALT, c, 0, 0);
+            if h < hc || (h == hc && c < chip) {
+                rank += 1;
+            }
+        }
+        rank < k
+    }
+
+    /// Does `chip` suffer a transient whole-shard failure on its first
+    /// attempt at `step`?  (Transients never recur on retry.)
+    pub fn chip_failed_transiently(&self, chip: u64, step: u64) -> bool {
+        self.cfg.chip_fail > 0.0
+            && unit(fault_hash(self.cfg.seed, CHIP_FAIL_SALT, step, chip, 0)) < self.cfg.chip_fail
+    }
+
+    pub fn note_shard_failure(&self, wasted_macs: u64) {
+        self.totals.shard_failures.fetch_add(1, Ordering::Relaxed);
+        self.totals.reshard_macs.fetch_add(wasted_macs, Ordering::Relaxed);
+    }
+
+    pub fn note_shard_retry(&self) {
+        self.totals.shard_retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A re-shard of one failed chunk; `redo_macs` is the work re-run
+    /// on the survivors.
+    pub fn note_reshard(&self, redo_macs: u64) {
+        self.totals.reshards.fetch_add(1, Ordering::Relaxed);
+        self.totals.reshard_macs.fetch_add(redo_macs, Ordering::Relaxed);
+    }
+
+    pub fn note_rollback(&self) {
+        self.totals.rollbacks.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// One stuck writeback lane: every output element landing on `lane`
+/// has fraction bit `bit` forced to `one`.
+#[derive(Debug, Clone, Copy)]
+struct StuckLane {
+    lane: u64,
+    bit: u32,
+    one: bool,
+}
+
+/// Per-chip fault hook armed on a `GemmEngine`/`TrainEngine`.  Carries
+/// the chip's stuck-lane map, its private GEMM epoch counter (bumped
+/// once per logical GEMM, identically across `ExecMode`s and thread
+/// counts), and a per-hook mirror of the ABFT counters so an engine can
+/// price its own step even when several engines share one session.
+#[derive(Debug)]
+pub struct FaultHook {
+    session: Arc<FaultSession>,
+    chip: u64,
+    lanes: u64,
+    transient_stream: u64,
+    stuck: Vec<StuckLane>,
+    epoch: AtomicU64,
+    local: FaultCounters,
+}
+
+impl FaultHook {
+    pub fn new(session: Arc<FaultSession>, chip: u64, lanes: usize) -> FaultHook {
+        let cfg = session.cfg;
+        let lanes = lanes.max(1) as u64;
+        let stuck = (0..cfg.stuck_lanes)
+            .map(|s| {
+                let h = fault_hash(cfg.seed, STUCK_SALT, chip, s, 0);
+                StuckLane {
+                    lane: h % lanes,
+                    bit: ((h >> 32) % 23) as u32,
+                    one: (h >> 60) & 1 == 1,
+                }
+            })
+            .collect();
+        FaultHook {
+            transient_stream: mix64(mix64(cfg.seed ^ TRANSIENT_SALT) ^ chip),
+            session,
+            chip,
+            lanes,
+            stuck,
+            epoch: AtomicU64::new(0),
+            local: FaultCounters::default(),
+        }
+    }
+
+    pub fn session(&self) -> &Arc<FaultSession> {
+        &self.session
+    }
+
+    pub fn chip(&self) -> u64 {
+        self.chip
+    }
+
+    /// ABFT row-retry budget.
+    pub fn retries(&self) -> u32 {
+        self.session.cfg.retries
+    }
+
+    /// Claim the next GEMM epoch on this chip.
+    pub fn bump_epoch(&self) -> u64 {
+        self.epoch.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Corrupt a freshly-latched `rows`×`cols` GEMM output in place:
+    /// stuck writeback lanes plus seeded transient flips, keyed by
+    /// (chip, epoch, element).  Returns (elements changed, rows
+    /// changed).  Applied to the first attempt only — retries re-issue
+    /// through spare lanes and a fresh transient draw never recurs.
+    pub fn inject(&self, y: &mut [f32], rows: usize, cols: usize, epoch: u64) -> (u64, u64) {
+        debug_assert_eq!(y.len(), rows * cols);
+        let cfg = &self.session.cfg;
+        if self.stuck.is_empty() && cfg.transient <= 0.0 {
+            return (0, 0);
+        }
+        let mut changed = 0u64;
+        let mut rows_hit = 0u64;
+        for r in 0..rows {
+            let mut row_hit = false;
+            for j in 0..cols {
+                let idx = r * cols + j;
+                let bits = y[idx].to_bits();
+                let mut nb = bits;
+                for s in &self.stuck {
+                    if idx as u64 % self.lanes == s.lane {
+                        nb = frac_force(nb, s.bit, s.one);
+                    }
+                }
+                if cfg.transient > 0.0 {
+                    let h = mix64(mix64(self.transient_stream ^ epoch) ^ idx as u64);
+                    if unit(h) < cfg.transient {
+                        nb = frac_flip(nb, ((h & 0x7FF) % 23) as u32);
+                    }
+                }
+                if nb != bits {
+                    y[idx] = f32::from_bits(nb);
+                    changed += 1;
+                    row_hit = true;
+                }
+            }
+            if row_hit {
+                rows_hit += 1;
+            }
+        }
+        if changed > 0 {
+            self.local.injected.fetch_add(changed, Ordering::Relaxed);
+            self.local.injected_rows.fetch_add(rows_hit, Ordering::Relaxed);
+            self.session.totals.injected.fetch_add(changed, Ordering::Relaxed);
+            self.session.totals.injected_rows.fetch_add(rows_hit, Ordering::Relaxed);
+        }
+        (changed, rows_hit)
+    }
+
+    /// Record one guarded GEMM's ABFT outcome on the hook and the
+    /// shared session.
+    pub fn note_abft(
+        &self,
+        checksum_adds: u64,
+        detected_rows: u64,
+        retried_rows: u64,
+        retry_macs: u64,
+        unrecovered: u64,
+    ) {
+        for counters in [&self.local, &self.session.totals] {
+            counters.checksum_adds.fetch_add(checksum_adds, Ordering::Relaxed);
+            counters.detected_rows.fetch_add(detected_rows, Ordering::Relaxed);
+            counters.retried_rows.fetch_add(retried_rows, Ordering::Relaxed);
+            counters.retry_macs.fetch_add(retry_macs, Ordering::Relaxed);
+            counters.unrecovered.fetch_add(unrecovered, Ordering::Relaxed);
+        }
+    }
+
+    /// Record asserted weight-storage faults.
+    pub fn note_weight_faults(&self, n: u64) {
+        if n > 0 {
+            self.local.weight_faults.fetch_add(n, Ordering::Relaxed);
+            self.session.totals.weight_faults.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Snapshot this hook's private counters (shard/step fields zero).
+    pub fn report(&self) -> FaultReport {
+        self.local.snapshot(0)
+    }
+}
+
+/// Assert weight-storage faults on one parameter slice occupying
+/// `[base, base + data.len())` of a `params`-weight store, at `step`.
+/// Stuck cells are re-asserted every step (physical faults win every
+/// write); transient flips draw per (step, global index).  Keyed
+/// without a chip id, so the corrupted model is shard-count invariant.
+/// Returns the number of values whose bits actually changed.
+pub fn corrupt_weights(
+    cfg: &FaultConfig,
+    data: &mut [f32],
+    base: u64,
+    params: u64,
+    step: u64,
+) -> u64 {
+    if data.is_empty() || params == 0 {
+        return 0;
+    }
+    let mut changed = 0u64;
+    for s in 0..cfg.weight_stuck {
+        let h = fault_hash(cfg.seed, WEIGHT_STUCK_SALT, s, 0, 0);
+        let idx = h % params;
+        if idx >= base && idx < base + data.len() as u64 {
+            let v = &mut data[(idx - base) as usize];
+            let nb = frac_force(v.to_bits(), ((h >> 32) % 23) as u32, (h >> 60) & 1 == 1);
+            if nb != v.to_bits() {
+                *v = f32::from_bits(nb);
+                changed += 1;
+            }
+        }
+    }
+    if cfg.weight_flip > 0.0 {
+        for (i, v) in data.iter_mut().enumerate() {
+            let h = fault_hash(cfg.seed, WEIGHT_FLIP_SALT, step, base + i as u64, 0);
+            if unit(h) < cfg.weight_flip {
+                *v = f32::from_bits(frac_flip(v.to_bits(), ((h & 0x7FF) % 23) as u32));
+                changed += 1;
+            }
+        }
+    }
+    changed
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -180,5 +753,159 @@ mod tests {
         let r_few = mul_error_rate(&few, 64, 5);
         let r_many = mul_error_rate(&many, 64, 5);
         assert!(r_many >= r_few, "{r_many} vs {r_few}");
+    }
+
+    // ---- PR 6 training-path fault model ----
+
+    #[test]
+    fn fault_config_parses_every_key() {
+        let cfg = FaultConfig::parse(
+            "transient=1e-5,stuck=4,weight_stuck=8,weight_flip=1e-6,\
+             chip_fail=0.1,chip_dead=1,seed=7,retries=2,shard_retries=3,policy=rollback",
+        )
+        .unwrap();
+        assert_eq!(cfg.transient, 1e-5);
+        assert_eq!(cfg.stuck_lanes, 4);
+        assert_eq!(cfg.weight_stuck, 8);
+        assert_eq!(cfg.weight_flip, 1e-6);
+        assert_eq!(cfg.chip_fail, 0.1);
+        assert_eq!(cfg.chip_dead, 1);
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.retries, 2);
+        assert_eq!(cfg.shard_retries, 3);
+        assert_eq!(cfg.policy, RecoveryPolicy::Rollback);
+        assert_eq!(FaultConfig::parse("").unwrap(), FaultConfig::default());
+    }
+
+    #[test]
+    fn fault_config_rejects_junk() {
+        assert!(FaultConfig::parse("bogus=1").is_err());
+        assert!(FaultConfig::parse("transient").is_err());
+        assert!(FaultConfig::parse("transient=nope").is_err());
+        assert!(FaultConfig::parse("transient=1.5").is_err());
+        assert!(FaultConfig::parse("chip_fail=-0.1").is_err());
+        assert!(FaultConfig::parse("policy=explode").is_err());
+    }
+
+    #[test]
+    fn writeback_injection_is_deterministic_and_detectable() {
+        let cfg = FaultConfig {
+            transient: 0.02,
+            stuck_lanes: 3,
+            ..FaultConfig::default()
+        };
+        let mk = || FaultHook::new(Arc::new(FaultSession::new(cfg)), 1, 64);
+        let (rows, cols) = (16, 24);
+        let clean: Vec<f32> = (0..rows * cols).map(|i| i as f32 * 0.25 - 7.0).collect();
+        let mut a = clean.clone();
+        let mut b = clean.clone();
+        let (ca, ra) = mk().inject(&mut a, rows, cols, 5);
+        let (cb, rb) = mk().inject(&mut b, rows, cols, 5);
+        assert!(ca > 0, "rates above must inject at this size");
+        assert_eq!((ca, ra), (cb, rb));
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "same seed ⇒ bit-identical corruption");
+        }
+        // Every injected element genuinely changed its bits.
+        let diffs = a
+            .iter()
+            .zip(&clean)
+            .filter(|(x, c)| x.to_bits() != c.to_bits())
+            .count() as u64;
+        assert_eq!(diffs, ca);
+        // A different epoch draws a different transient pattern.
+        let mut c = clean.clone();
+        mk().inject(&mut c, rows, cols, 6);
+        assert!(
+            a.iter().zip(&c).any(|(x, y)| x.to_bits() != y.to_bits()),
+            "epoch must key the transient stream"
+        );
+        // Zero rates with no stuck lanes: injection is a no-op.
+        let quiet = FaultHook::new(
+            Arc::new(FaultSession::new(FaultConfig::default())),
+            1,
+            64,
+        );
+        let mut d = clean.clone();
+        assert_eq!(quiet.inject(&mut d, rows, cols, 5), (0, 0));
+        for (x, c) in d.iter().zip(&clean) {
+            assert_eq!(x.to_bits(), c.to_bits());
+        }
+    }
+
+    #[test]
+    fn corrupt_weights_replays_bit_identically() {
+        let cfg = FaultConfig {
+            weight_stuck: 6,
+            weight_flip: 0.01,
+            seed: 11,
+            ..FaultConfig::default()
+        };
+        let clean: Vec<f32> = (0..512).map(|i| (i as f32 - 256.0) * 0.031).collect();
+        let run = |step: u64| {
+            let mut w = clean.clone();
+            let n = corrupt_weights(&cfg, &mut w, 100, 1000, step);
+            (w, n)
+        };
+        let (w1, n1) = run(3);
+        let (w2, n2) = run(3);
+        assert_eq!(n1, n2);
+        assert!(n1 > 0, "512 weights at flip 1e-2 must hit");
+        for (a, b) in w1.iter().zip(&w2) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Different step ⇒ different transient flips.
+        let (w3, _) = run(4);
+        assert!(w1.iter().zip(&w3).any(|(a, b)| a.to_bits() != b.to_bits()));
+        // Corrupted values are still valid fp32 bit patterns that
+        // round-trip the decoded domain (no fabricated implicit bits).
+        for v in &w1 {
+            assert_eq!(
+                pim_encode(pim_decode(v.to_bits())),
+                v.to_bits(),
+                "decode/encode round-trip"
+            );
+        }
+    }
+
+    #[test]
+    fn dead_chip_set_is_exactly_k_and_stable() {
+        let s = FaultSession::new(FaultConfig {
+            chip_dead: 2,
+            seed: 5,
+            ..FaultConfig::default()
+        });
+        let chips = 8u64;
+        let dead: Vec<u64> = (1..=chips).filter(|&c| s.chip_is_dead(c, chips)).collect();
+        assert_eq!(dead.len(), 2, "{dead:?}");
+        let again: Vec<u64> = (1..=chips).filter(|&c| s.chip_is_dead(c, chips)).collect();
+        assert_eq!(dead, again);
+        // chip_dead >= chips kills everything; zero kills nothing.
+        let all =
+            FaultSession::new(FaultConfig { chip_dead: 99, seed: 5, ..FaultConfig::default() });
+        assert!((1..=4u64).all(|c| all.chip_is_dead(c, 4)));
+        let none = FaultSession::new(FaultConfig::default());
+        assert!(!(1..=4u64).any(|c| none.chip_is_dead(c, 4)));
+    }
+
+    #[test]
+    fn fault_report_delta_and_rates() {
+        let s = FaultSession::new(FaultConfig::default());
+        let before = s.report();
+        s.begin_step();
+        s.note_shard_failure(100);
+        s.note_shard_retry();
+        s.note_reshard(250);
+        let d = s.report().minus(&before);
+        assert_eq!(d.steps, 1);
+        assert_eq!(d.shard_failures, 1);
+        assert_eq!(d.shard_retries, 1);
+        assert_eq!(d.reshards, 1);
+        assert_eq!(d.reshard_macs, 350);
+        assert_eq!(FaultReport::default().detection_rate(), 1.0);
+        let r = FaultReport { injected_rows: 4, detected_rows: 4, ..FaultReport::default() };
+        assert_eq!(r.detection_rate(), 1.0);
+        assert!(r.clean());
+        assert!(!FaultReport { unrecovered: 1, ..FaultReport::default() }.clean());
     }
 }

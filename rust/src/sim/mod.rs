@@ -9,6 +9,9 @@ pub mod faults;
 pub mod ledger;
 pub mod subarray;
 
-pub use faults::{Fault, FaultKind};
+pub use faults::{
+    corrupt_weights, Fault, FaultConfig, FaultHook, FaultKind, FaultReport, FaultSession,
+    RecoveryPolicy,
+};
 pub use ledger::{Ledger, OpClass};
 pub use subarray::{BitVecCol, Subarray};

@@ -1,0 +1,483 @@
+//! PR 6 fault-tolerance suite: the seeded device fault model, ABFT
+//! checksum detection on the GEMM wave path, and cluster-level recovery
+//! (shard retry, re-shard onto survivors, rollback) must all be
+//! **deterministic** and — whenever recovery succeeds — **bit-identical**
+//! to the fault-free run: retried rows are recomputed from re-decoded
+//! operands on the exact blocked-kernel chains, re-sharded chunks merge
+//! at their canonical batch position, and every unit of recovery work is
+//! priced in the separate fault ledger so the clean macs/waves ledger
+//! still matches the analytic model exactly.
+
+use std::sync::Arc;
+
+use mram_pim::arch::{ExecMode, NetworkParams, TrainEngine};
+use mram_pim::cluster::{cluster_step_cost, ClusterConfig, ClusterEngine};
+use mram_pim::data::Dataset;
+use mram_pim::fpu::FpCostModel;
+use mram_pim::model::{Layer, Network};
+use mram_pim::prop::Rng;
+use mram_pim::runtime::Runtime;
+use mram_pim::sim::{FaultConfig, FaultHook, FaultReport, FaultSession};
+
+const LANES: usize = 1024;
+
+fn mlp() -> Network {
+    Network {
+        name: "fault-test-mlp",
+        input: (1, 4, 4),
+        layers: vec![
+            Layer::Dense { inp: 16, out: 12 },
+            Layer::Relu { units: 12 },
+            Layer::Dense { inp: 12, out: 6 },
+        ],
+    }
+}
+
+fn convnet() -> Network {
+    Network {
+        name: "fault-test-conv",
+        input: (1, 6, 6),
+        layers: vec![
+            Layer::Conv2d {
+                in_ch: 1,
+                out_ch: 2,
+                kh: 3,
+                kw: 3,
+                in_h: 6,
+                in_w: 6,
+            },
+            Layer::Relu { units: 2 * 4 * 4 },
+            Layer::AvgPool2 {
+                ch: 2,
+                in_h: 4,
+                in_w: 4,
+            },
+            Layer::Dense { inp: 8, out: 4 },
+        ],
+    }
+}
+
+fn step_batches(net: &Network, batch: usize, steps: usize, seed: u64) -> Vec<(Vec<f32>, Vec<i32>)> {
+    let (c, h, w) = net.input;
+    let classes = net.layers.last().unwrap().out_units();
+    let mut rng = Rng::new(seed);
+    (0..steps)
+        .map(|_| {
+            (
+                (0..batch * c * h * w).map(|_| rng.f32_normal(1)).collect(),
+                (0..batch).map(|_| rng.below(classes as u64) as i32).collect(),
+            )
+        })
+        .collect()
+}
+
+fn param_bits(p: &NetworkParams) -> Vec<u32> {
+    p.layers
+        .iter()
+        .flatten()
+        .flat_map(|lp| lp.w.iter().chain(&lp.b).map(|v| v.to_bits()))
+        .collect()
+}
+
+/// One scalar snapshot per step of the fields the assertions below care
+/// about (TrainStepResult holds grads, so we don't keep it around).
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct StepLedger {
+    loss: u32,
+    waves: u64,
+    fault_waves: u64,
+    latency_s: f64,
+    fault_latency_s: f64,
+    energy_j: f64,
+    fault_energy_j: f64,
+}
+
+/// Run `steps` single-chip SGD steps, optionally fault-armed; returns
+/// (params, per-step ledgers, session report if armed).
+fn run_train(
+    net: &Network,
+    mode: ExecMode,
+    threads: usize,
+    cfg: Option<FaultConfig>,
+    batches: &[(Vec<f32>, Vec<i32>)],
+    batch: usize,
+    seed: u64,
+) -> (NetworkParams, Vec<StepLedger>, Option<FaultReport>) {
+    let mut eng = TrainEngine::new_mode(FpCostModel::proposed_fp32(), LANES, threads, mode);
+    let session = cfg.map(|c| Arc::new(FaultSession::new(c)));
+    eng.set_fault_hook(
+        session
+            .as_ref()
+            .map(|s| Arc::new(FaultHook::new(s.clone(), 0, LANES))),
+    );
+    let mut params = NetworkParams::init(net, seed);
+    let mut ledgers = Vec::new();
+    for (x, labels) in batches {
+        let r = eng
+            .train_step(net, &mut params, x, labels, batch, 0.1)
+            .expect("train step");
+        ledgers.push(StepLedger {
+            loss: r.loss.to_bits(),
+            waves: r.waves,
+            fault_waves: r.fault_waves,
+            latency_s: r.latency_s,
+            fault_latency_s: r.fault_latency_s,
+            energy_j: r.energy_j,
+            fault_energy_j: r.fault_energy_j,
+        });
+        eng.recycle(r);
+    }
+    (params, ledgers, session.map(|s| s.report()))
+}
+
+/// Run `steps` cluster SGD steps, optionally fault-armed; returns
+/// (params, loss bits, last step result summary, session report).
+fn run_cluster(
+    net: &Network,
+    shards: usize,
+    threads: usize,
+    cfg: Option<FaultConfig>,
+    batches: &[(Vec<f32>, Vec<i32>)],
+    batch: usize,
+    seed: u64,
+) -> (NetworkParams, Vec<u32>, Option<FaultReport>) {
+    let mut eng = ClusterEngine::new(
+        FpCostModel::proposed_fp32(),
+        LANES,
+        ClusterConfig::new(shards, threads),
+    );
+    let session = cfg.map(|c| Arc::new(FaultSession::new(c)));
+    eng.set_faults(session.clone());
+    let mut params = NetworkParams::init(net, seed);
+    let mut losses = Vec::new();
+    for (x, labels) in batches {
+        let r = eng
+            .train_step(net, &mut params, x, labels, batch, 0.1)
+            .expect("cluster step");
+        losses.push(r.loss.to_bits());
+    }
+    (params, losses, session.map(|s| s.report()))
+}
+
+/// An armed fault hook with every rate at zero changes *nothing* in the
+/// numerics or the clean ledger: params, losses and `waves` are
+/// bit-identical to the unarmed engine.  The checksum passes themselves
+/// are priced work, so the armed run carries `fault_waves > 0` — but
+/// strictly in the separate fault terms (`latency_s` is exactly the
+/// clean latency plus `fault_latency_s`).
+#[test]
+fn armed_at_zero_rates_is_bit_identical_to_unarmed() {
+    let net = convnet();
+    let batch = 8;
+    let batches = step_batches(&net, batch, 2, 0xFA01);
+    let (pc, lc, rc) = run_train(&net, ExecMode::Pooled, 2, None, &batches, batch, 0x5EED);
+    let (pa, la, ra) = run_train(
+        &net,
+        ExecMode::Pooled,
+        2,
+        Some(FaultConfig::default()),
+        &batches,
+        batch,
+        0x5EED,
+    );
+    assert_eq!(param_bits(&pc), param_bits(&pa), "weights drifted");
+    assert!(rc.is_none());
+    let rep = ra.expect("armed run has a report");
+    assert_eq!(rep.injected, 0);
+    assert_eq!(rep.detected_rows, 0);
+    assert!(rep.checksum_adds > 0, "checksums ran");
+    for (clean, armed) in lc.iter().zip(&la) {
+        assert_eq!(clean.loss, armed.loss, "loss drifted");
+        assert_eq!(clean.waves, armed.waves, "clean wave ledger drifted");
+        assert_eq!(clean.fault_waves, 0);
+        assert!(armed.fault_waves > 0, "checksum waves are priced");
+        assert_eq!(
+            armed.latency_s,
+            clean.latency_s + armed.fault_latency_s,
+            "fault latency must be purely additive"
+        );
+        assert_eq!(
+            armed.energy_j,
+            clean.energy_j + armed.fault_energy_j,
+            "fault energy must be purely additive"
+        );
+    }
+}
+
+/// With aggressive writeback faults armed (transient flips + stuck
+/// lanes), ABFT detects every corrupted row and the bounded retry
+/// recovers it — the 3-step training run is bit-identical to the clean
+/// one, end to end.
+#[test]
+fn abft_detects_and_recovers_bit_identically() {
+    let net = convnet();
+    let batch = 8;
+    let batches = step_batches(&net, batch, 3, 0xFA02);
+    let cfg = FaultConfig::parse("transient=0.02,stuck=2,seed=5").unwrap();
+    let (pc, lc, _) = run_train(&net, ExecMode::Pooled, 2, None, &batches, batch, 0xF00D);
+    let (pa, la, ra) = run_train(&net, ExecMode::Pooled, 2, Some(cfg), &batches, batch, 0xF00D);
+    assert_eq!(param_bits(&pc), param_bits(&pa), "weights drifted under recovery");
+    for (clean, armed) in lc.iter().zip(&la) {
+        assert_eq!(clean.loss, armed.loss, "loss drifted under recovery");
+        assert_eq!(clean.waves, armed.waves, "clean ledger drifted");
+    }
+    let rep = ra.unwrap();
+    assert!(rep.injected > 0, "fault model must inject at these rates");
+    assert_eq!(rep.detected_rows, rep.injected_rows, "every corrupted row detected");
+    assert_eq!(rep.retried_rows, rep.detected_rows);
+    assert!(rep.retry_macs > 0);
+    assert_eq!(rep.unrecovered, 0);
+    assert_eq!(rep.detection_rate(), 1.0);
+}
+
+/// `retries=0` turns every detection into an unrecoverable fault: the
+/// step must surface an error instead of silently applying corrupted
+/// gradients, and the report must say so.
+#[test]
+fn retries_zero_surfaces_unrecovered() {
+    let net = convnet();
+    let batch = 8;
+    let batches = step_batches(&net, batch, 1, 0xFA03);
+    let cfg = FaultConfig::parse("transient=0.05,retries=0,seed=5").unwrap();
+    let mut eng = TrainEngine::new(FpCostModel::proposed_fp32(), LANES, 2);
+    let session = Arc::new(FaultSession::new(cfg));
+    eng.set_fault_hook(Some(Arc::new(FaultHook::new(session.clone(), 0, LANES))));
+    let mut params = NetworkParams::init(&net, 0xBAD);
+    let before = param_bits(&params);
+    let (x, labels) = &batches[0];
+    let err = eng
+        .train_step(&net, &mut params, x, labels, batch, 0.1)
+        .expect_err("unrecovered corruption must fail the step");
+    assert!(
+        err.to_string().contains("ABFT"),
+        "error should name the detector: {err}"
+    );
+    assert_eq!(param_bits(&params), before, "failed step must not touch weights");
+    let rep = session.report();
+    assert!(rep.detected_rows > 0);
+    assert!(rep.unrecovered > 0);
+    assert_eq!(rep.retried_rows, 0, "no retry budget, no retries");
+}
+
+/// Same seed + config ⇒ the same faults: the injection stream, the
+/// recovery work and the trained weights are invariant across execution
+/// modes and thread counts (the per-hook epoch stream advances once per
+/// logical GEMM in every mode).
+#[test]
+fn fault_reports_invariant_across_modes_and_threads() {
+    let net = convnet();
+    let batch = 6;
+    let batches = step_batches(&net, batch, 2, 0xFA04);
+    let cfg = FaultConfig::parse("transient=0.01,stuck=1,seed=9").unwrap();
+    let mut want: Option<(Vec<u32>, Vec<u32>, FaultReport)> = None;
+    for (mode, threads) in [
+        (ExecMode::Pooled, 1usize),
+        (ExecMode::Pooled, 4),
+        (ExecMode::Flat, 1),
+        (ExecMode::Flat, 4),
+        (ExecMode::Scoped, 2),
+    ] {
+        let (p, l, r) = run_train(&net, mode, threads, Some(cfg), &batches, batch, 0xCAFE);
+        let bits = param_bits(&p);
+        let losses: Vec<u32> = l.iter().map(|s| s.loss).collect();
+        let rep = r.unwrap();
+        match &want {
+            None => {
+                assert!(rep.injected > 0, "seed 9 must inject at these rates");
+                want = Some((bits, losses, rep));
+            }
+            Some((wb, wl, wr)) => {
+                assert_eq!(&bits, wb, "{mode:?} x{threads}: weights drifted");
+                assert_eq!(&losses, wl, "{mode:?} x{threads}: losses drifted");
+                assert_eq!(&rep, wr, "{mode:?} x{threads}: fault report drifted");
+            }
+        }
+    }
+}
+
+/// Transient whole-chip failures (`chip_fail=1.0`: every shard fails its
+/// first attempt, every step) are absorbed by the shard retry budget —
+/// the run completes bit-identical to the clean cluster, with the
+/// retries on the record and no re-shard needed.
+#[test]
+fn cluster_chip_transient_failure_recovers_bit_identically() {
+    let net = mlp();
+    let batch = 8;
+    let steps = 2;
+    let batches = step_batches(&net, batch, steps, 0xFA05);
+    let cfg = FaultConfig::parse("chip_fail=1.0,seed=2").unwrap();
+    let (pc, lc, _) = run_cluster(&net, 2, 2, None, &batches, batch, 0xD00D);
+    let (pa, la, ra) = run_cluster(&net, 2, 2, Some(cfg), &batches, batch, 0xD00D);
+    assert_eq!(param_bits(&pc), param_bits(&pa), "weights drifted");
+    assert_eq!(lc, la, "losses drifted");
+    let rep = ra.unwrap();
+    assert_eq!(rep.shard_failures, (2 * steps) as u64, "both chips fail each step");
+    assert_eq!(rep.shard_retries, (2 * steps) as u64, "one retry recovers each");
+    assert_eq!(rep.reshards, 0);
+    assert_eq!(rep.rollbacks, 0);
+    assert_eq!(rep.unrecovered, 0);
+}
+
+/// ISSUE 6 acceptance: a permanently dead chip in a 4-shard LeNet-5
+/// cluster.  Every step the dead shard exhausts its retry budget and its
+/// chunk is re-sharded onto the survivors; the 3-step run ends with
+/// exactly the fault-free weights and losses, and the re-shard work is
+/// priced.
+#[test]
+fn dead_chip_reshards_onto_survivors_lenet() {
+    let net = Network::lenet5();
+    let batch = 8;
+    let batches = step_batches(&net, batch, 3, 0xFA06);
+    let cfg = FaultConfig::parse("chip_dead=1,seed=4").unwrap();
+
+    let clean = ClusterEngine::new(FpCostModel::proposed_fp32(), LANES, ClusterConfig::new(4, 2));
+    let mut faulty =
+        ClusterEngine::new(FpCostModel::proposed_fp32(), LANES, ClusterConfig::new(4, 2));
+    let session = Arc::new(FaultSession::new(cfg));
+    faulty.set_faults(Some(session.clone()));
+
+    let mut pc = NetworkParams::init(&net, 0x1E57);
+    let mut pa = NetworkParams::init(&net, 0x1E57);
+    for (x, labels) in &batches {
+        let rc = clean.train_step(&net, &mut pc, x, labels, batch, 0.1).unwrap();
+        let ra = faulty.train_step(&net, &mut pa, x, labels, batch, 0.1).unwrap();
+        assert_eq!(rc.loss.to_bits(), ra.loss.to_bits(), "loss drifted");
+        assert_eq!(rc.waves, ra.waves, "clean wave ledger drifted");
+        assert!(ra.faults.reshards > 0, "dead chip must force a re-shard");
+        assert!(ra.cost.fault_reshard_macs > 0, "re-shard work must be priced");
+        assert!(ra.latency_s > rc.latency_s, "recovery latency must show up");
+        assert!(ra.energy_j > rc.energy_j, "recovery energy must show up");
+    }
+    assert_eq!(param_bits(&pc), param_bits(&pa), "recovered weights must match fault-free");
+    let rep = session.report();
+    assert_eq!(rep.reshards, 3, "one re-shard per step");
+    assert!(rep.shard_failures >= 3);
+    assert_eq!(rep.unrecovered, 0);
+    assert_eq!(rep.rollbacks, 0);
+    assert!(rep.reshard_macs > 0);
+}
+
+/// `policy=rollback`: a dead chip makes the step fail *cleanly* — the
+/// parameters are untouched (no partial update), the rollback is
+/// counted, and the failure repeats deterministically.
+#[test]
+fn rollback_policy_keeps_params_untouched() {
+    let net = mlp();
+    let batch = 8;
+    let batches = step_batches(&net, batch, 1, 0xFA07);
+    let cfg = FaultConfig::parse("chip_dead=1,policy=rollback,seed=4").unwrap();
+    let mut eng = ClusterEngine::new(FpCostModel::proposed_fp32(), LANES, ClusterConfig::new(2, 2));
+    let session = Arc::new(FaultSession::new(cfg));
+    eng.set_faults(Some(session.clone()));
+    let mut params = NetworkParams::init(&net, 0xAAA);
+    let before = param_bits(&params);
+    let (x, labels) = &batches[0];
+    let err = eng
+        .train_step(&net, &mut params, x, labels, batch, 0.1)
+        .expect_err("rollback policy must fail the step");
+    assert!(
+        err.to_string().contains("rolling back"),
+        "error should say what happened: {err}"
+    );
+    assert_eq!(param_bits(&params), before, "rollback must leave params untouched");
+    let rep = session.report();
+    assert_eq!(rep.rollbacks, 1);
+    assert_eq!(rep.reshards, 0, "rollback policy never re-shards");
+    // deterministic: the same step fails the same way again
+    let err2 = eng
+        .train_step(&net, &mut params, x, labels, batch, 0.1)
+        .expect_err("dead chip is permanent");
+    assert!(err2.to_string().contains("rolling back"));
+    assert_eq!(param_bits(&params), before);
+}
+
+/// Weight-storage faults are keyed *without* a chip id: the corrupted
+/// model — and therefore the whole training trajectory — is identical
+/// however the batch is sharded, and replays bit-for-bit under the same
+/// seed.
+#[test]
+fn weight_faults_are_shard_invariant_and_repeatable() {
+    let net = mlp();
+    let batch = 8;
+    let batches = step_batches(&net, batch, 2, 0xFA08);
+    let cfg = FaultConfig::parse("weight_stuck=12,weight_flip=1e-3,seed=13").unwrap();
+    let (p1, l1, r1) = run_cluster(&net, 1, 2, Some(cfg), &batches, batch, 0x777);
+    let (p2, l2, r2) = run_cluster(&net, 2, 2, Some(cfg), &batches, batch, 0x777);
+    let (p1b, l1b, r1b) = run_cluster(&net, 1, 2, Some(cfg), &batches, batch, 0x777);
+    let rep1 = r1.unwrap();
+    let rep2 = r2.unwrap();
+    assert!(rep1.weight_faults > 0, "weight fault model must assert cells");
+    assert_eq!(
+        rep1.weight_faults, rep2.weight_faults,
+        "weight faults are keyed without a chip id"
+    );
+    assert_eq!(param_bits(&p1), param_bits(&p2), "corrupted trajectory must be shard-invariant");
+    assert_eq!(l1, l2);
+    // exact replay
+    assert_eq!(param_bits(&p1), param_bits(&p1b));
+    assert_eq!(l1, l1b);
+    assert_eq!(rep1, r1b.unwrap());
+    // and it genuinely diverges from the fault-free model
+    let (pc, _, _) = run_cluster(&net, 1, 2, None, &batches, batch, 0x777);
+    assert_ne!(param_bits(&pc), param_bits(&p1), "weight faults must corrupt the model");
+}
+
+/// The fault ledger decomposes exactly: `fault_waves` is the wave bill
+/// of the checksum adds plus the redo MACs, and the *clean* macs/waves
+/// ledger still equals the analytic `cluster_step_cost` — recovery never
+/// leaks into the fault-free cost model.
+#[test]
+fn fault_pricing_decomposes_and_clean_ledger_stays_analytic() {
+    let net = mlp();
+    let batch = 8;
+    let shards = 2;
+    let model = FpCostModel::proposed_fp32();
+    let batches = step_batches(&net, batch, 1, 0xFA09);
+    let cfg = FaultConfig::parse("chip_dead=1,transient=0.01,seed=6").unwrap();
+    let eng = {
+        let mut e = ClusterEngine::new(model, LANES, ClusterConfig::new(shards, 2));
+        e.set_faults(Some(Arc::new(FaultSession::new(cfg))));
+        e
+    };
+    let mut params = NetworkParams::init(&net, 0x909);
+    let (x, labels) = &batches[0];
+    let r = eng.train_step(&net, &mut params, x, labels, batch, 0.1).unwrap();
+    let lanes = LANES as u64;
+    let redo = r.faults.retry_macs + r.faults.reshard_macs;
+    assert!(r.faults.reshards > 0 && redo > 0, "dead chip must force redo work");
+    assert_eq!(r.cost.fault_checksum_adds, r.faults.checksum_adds);
+    assert_eq!(r.cost.fault_retry_macs, r.faults.retry_macs);
+    assert_eq!(r.cost.fault_reshard_macs, r.faults.reshard_macs);
+    assert_eq!(
+        r.cost.fault_waves,
+        r.faults.checksum_adds.div_ceil(lanes) + redo.div_ceil(lanes),
+        "fault wave bill must decompose"
+    );
+    assert!(r.cost.fault_latency_s > 0.0 && r.cost.fault_energy_j > 0.0);
+    // the clean ledger is untouched by any of it
+    let analytic = cluster_step_cost(&net, batch, shards, LANES, &model).unwrap();
+    assert_eq!(r.waves, analytic.total_waves(), "clean waves leaked fault work");
+    assert_eq!(r.total_macs(), analytic.total_macs(), "clean macs leaked fault work");
+    assert_eq!(r.latency_s, r.cost.latency_s());
+    assert_eq!(r.energy_j, r.cost.energy_j());
+}
+
+/// Runtime plumbing: `--faults` arms the functional backend end to end
+/// and `fault_report()` exposes the session; disarming drops it.
+#[test]
+fn runtime_set_faults_smoke() {
+    let mut rt = Runtime::load_dir("artifacts").expect("functional runtime");
+    rt.set_threads(2);
+    assert!(rt.fault_report().is_none());
+    rt.set_faults(Some(FaultConfig::parse("transient=1e-3,seed=3").unwrap()));
+    let mut data = Dataset::synthetic(32, 0x5A11);
+    let b = data.next_batch(4);
+    let mut state = rt.init_params(7).unwrap();
+    rt.train_step(&mut state, &b.images, &b.labels, 0.05).unwrap();
+    let rep = rt.fault_report().expect("armed runtime reports");
+    assert_eq!(rep.steps, 1);
+    assert!(rep.checksum_adds > 0, "ABFT ran on the runtime path");
+    assert_eq!(rep.unrecovered, 0);
+    rt.set_faults(None);
+    assert!(rt.fault_report().is_none());
+}

@@ -35,6 +35,7 @@ BENCHES = [
     "BENCH_train_step.json",
     "BENCH_gemm_wave.json",
     "BENCH_cluster_scaling.json",
+    "BENCH_fault_tolerance.json",
 ]
 
 # The gated headline entry of each bench file.
@@ -42,7 +43,22 @@ GATES = {
     "BENCH_train_step.json": "lenet5 train step batch 32 (threads 4, pooled)",
     "BENCH_gemm_wave.json": "gemm engine 128x256 batch 32 (threads 4)",
     "BENCH_cluster_scaling.json": "lenet5 cluster step batch 32 shards 4",
+    "BENCH_fault_tolerance.json": "lenet5 fault-free train step batch 32 (threads 4)",
 }
+
+# ``metric:`` entries carry verification percentages in ``mean_ns``
+# (detection rate, recovered-loss match), not wall-clock — higher is
+# better.  Reversed gates fail on any drop below the committed baseline.
+REVERSED_GATES = {
+    "BENCH_fault_tolerance.json": ["metric: abft detection rate pct"],
+}
+
+# Cross-entry gate within the fresh fault_tolerance run: the
+# armed-at-zero-rate ABFT step may cost at most this much wall-clock
+# over the fault-free step (env ``FAULT_FREE_OVERHEAD_PCT``; CI relaxes
+# for shared-runner noise).
+FAULT_FREE_ENTRY = "lenet5 fault-free train step batch 32 (threads 4)"
+ZERO_RATE_ENTRY = "lenet5 abft-armed zero-rate train step batch 32 (threads 4)"
 
 
 def load_committed(path):
@@ -95,9 +111,18 @@ def main():
             failures.append(f"{path} missing fresh output")
             continue
         gate_name = GATES.get(path)
+        reversed_names = REVERSED_GATES.get(path, [])
         for name in sorted(base.keys() & fresh.keys()):
             b, f = base[name]["mean_ns"], fresh[name]["mean_ns"]
             delta = (f - b) / b * 100.0 if b else 0.0
+            if name.startswith("metric: "):
+                tag = "GATE" if name in reversed_names else "info"
+                print(f"[{tag}] {name}: baseline {b:.1f}, fresh {f:.1f} ({delta:+.1f}%)")
+                if name in reversed_names and f < b - 1e-9:
+                    failures.append(
+                        f"{name}: dropped to {f:.1f} from baseline {b:.1f} (must not regress)"
+                    )
+                continue
             gated = name == gate_name
             tag = "GATE" if gated else "info"
             print(f"[{tag}] {name}: baseline {b/1e6:.2f} ms, fresh {f/1e6:.2f} ms ({delta:+.1f}%)")
@@ -110,6 +135,31 @@ def main():
                 failures.append(f"{path}: committed baseline lacks gated entry '{gate_name}'")
             if fresh and gate_name not in fresh:
                 failures.append(f"{path}: fresh run lacks gated entry '{gate_name}'")
+        for name in reversed_names:
+            if name not in base:
+                failures.append(f"{path}: committed baseline lacks reversed gate '{name}'")
+            if fresh and name not in fresh:
+                failures.append(f"{path}: fresh run lacks reversed gate '{name}'")
+        # Fault-free ABFT overhead: compare the two fresh entries of the
+        # same run (hardware-independent, unlike the baselines).
+        if path == "BENCH_fault_tolerance.json" and fresh:
+            limit = float(os.environ.get("FAULT_FREE_OVERHEAD_PCT", "5"))
+            if FAULT_FREE_ENTRY in fresh and ZERO_RATE_ENTRY in fresh:
+                clean = fresh[FAULT_FREE_ENTRY]["mean_ns"]
+                armed = fresh[ZERO_RATE_ENTRY]["mean_ns"]
+                pct = (armed - clean) / clean * 100.0 if clean else 0.0
+                print(
+                    f"[GATE] abft fault-free overhead: {pct:+.2f}% "
+                    f"(armed-at-zero vs fault-free, limit +{limit}%)"
+                )
+                if pct > limit:
+                    failures.append(
+                        f"abft fault-free overhead {pct:+.2f}% exceeds +{limit}%"
+                    )
+            else:
+                failures.append(
+                    f"{path}: fresh run lacks the fault-free/zero-rate entry pair"
+                )
 
     if failures:
         print("\nbench regression gate FAILED:")
