@@ -1,0 +1,249 @@
+"""Pre-validation for the PR 7 per-shard batched gradient accumulation.
+
+The cluster used to reduce one microgradient per *sample* (32 host
+lowerings per step — the shards=2 wall-clock anomaly).  The fix runs one
+batched backward per shard, which regroups the canonical
+global-sample-order `pim_add` chain.  FTZ fp32 addition is NOT
+associative, so the regrouping has to be chosen carefully:
+
+  * naive: each shard folds its chunk from +0 into an independent
+    partial, then the host folds the S partials.  This is a DIFFERENT
+    grouping of the same terms and is **not** bit-identical to the
+    global chain (counterexample below, plus a random census).
+  * seeded chain continuation: shard s's accumulation *starts from* the
+    merged partial of shards 0..s-1.  The concatenated per-chunk chains
+    are then literally the global chain, paused at chunk boundaries —
+    bit-identical by construction, for any split, including empty
+    chunks.  This is what the Rust `gemm_tn` seed + seeded db fold
+    implement.
+
+This script proves both halves on the exact softfloat semantics
+(imported from validate_decoded_mac.py, the PR 5 harness that mirrors
+rust/src/fpu/softfloat.rs branch for branch), over:
+
+  - dense wgrad row order (row b = sample b), and
+  - conv wgrad row order (row r = b*ohw + p, sample-major — chunking at
+    sample boundaries keeps row ranges contiguous),
+
+for shard counts {1, 2, 4, 8, 16, 32, 64} of a batch of 32 (shards=64
+exercises zero-sample chunks, which must pass the carry through
+untouched).  It also pre-validates the cluster_scaling in-binary gate
+arithmetic: with the paper's cost constants, shards=64 simulated step
+latency is < 0.05x shards=1 for LeNet-5 at batch 32 / 32,768 lanes.
+
+Run: python3 python/tests/validate_shard_reduce.py
+(Repo convention: the authoring container has no Rust toolchain, so the
+numerics are pre-validated here; the Rust property test
+`cluster::prop_shard_chain_matches_engine` re-checks the same
+regrouping on every `cargo test`.)
+"""
+
+import math
+import random
+import struct
+
+from validate_decoded_mac import pim_add_bits, pim_mac_acc_bits
+
+M32 = 0xFFFFFFFF
+
+
+def f2b(x):
+    return struct.unpack("<I", struct.pack("<f", x))[0]
+
+
+def shard_split(batch, shards):
+    """Mirror of ShardPlan::split after the PR 7 relaxation: front-load
+    the remainder; shards beyond the batch get empty (lo == hi) chunks."""
+    assert shards >= 1 and batch >= 1
+    base, rem = divmod(batch, shards)
+    chunks, start = [], 0
+    for t in range(shards):
+        take = base + (1 if t < rem else 0)
+        chunks.append((start, start + take))
+        start += take
+    assert start == batch
+    return chunks
+
+
+def chain_wgrad(rows, row_terms):
+    """Global chain: acc_{r+1} = pim_add(acc_r, ftz(d_r * x_r)) from +0,
+    rows in ascending order — the canonical single-chip contraction."""
+    acc = 0
+    for r in rows:
+        d, x = row_terms[r]
+        acc = pim_mac_acc_bits(acc, d, x)
+    return acc
+
+
+def naive_shard_fold(chunks, row_terms):
+    """Independent per-chunk partials from +0, folded left — NOT the
+    canonical chain (each chunk re-rounds from zero)."""
+    acc = 0
+    for lo, hi in chunks:
+        part = chain_wgrad(range(lo, hi), row_terms)
+        acc = pim_add_bits(acc, part)
+    return acc
+
+
+def seeded_shard_chain(chunks, row_terms):
+    """Chain continuation: chunk s starts from the carry of chunks
+    0..s-1 — what the seeded gemm_tn / seeded db fold compute."""
+    carry = 0
+    for lo, hi in chunks:
+        for r in range(lo, hi):
+            d, x = row_terms[r]
+            carry = pim_mac_acc_bits(carry, d, x)
+    return carry
+
+
+def random_bits(rng):
+    # Wide exponent spread so alignment shifts + cancellation are common:
+    # that is where FTZ non-associativity bites.
+    e = rng.choice([0, 1, 20, 96, 126, 127, 128, 158, 230, 254])
+    m = rng.getrandbits(23)
+    s = rng.getrandbits(1)
+    return ((s << 31) | (e << 23) | m) & M32
+
+
+def check_counterexample():
+    # terms 1, 1e30, -1e30 split (0..1),(1..3):
+    #   chain: ((0+1)+1e30)+(-1e30) = 0   (the 1 is absorbed)
+    #   naive: 1 + ((0+1e30)+(-1e30)) = 1
+    terms = [(f2b(1.0), f2b(1.0)), (f2b(1e30), f2b(1.0)), (f2b(-1e30), f2b(1.0))]
+    chain = chain_wgrad(range(3), terms)
+    naive = naive_shard_fold([(0, 1), (1, 3)], terms)
+    seeded = seeded_shard_chain([(0, 1), (1, 3)], terms)
+    assert chain == 0x00000000, hex(chain)
+    assert naive == f2b(1.0), hex(naive)
+    assert seeded == chain
+    print("counterexample: chain=+0, naive fold=1.0, seeded chain=+0  OK")
+
+
+def check_census(rng, cases=300, batch=32):
+    shard_counts = [1, 2, 4, 8, 16, 32, 64]
+    naive_mismatch = 0
+    for _ in range(cases):
+        terms = [(random_bits(rng), random_bits(rng)) for _ in range(batch)]
+        chain = chain_wgrad(range(batch), terms)
+        if math.isnan(struct.unpack("<f", struct.pack("<I", chain))[0]):
+            continue
+        any_naive_diff = False
+        for s in shard_counts:
+            chunks = shard_split(batch, s)
+            assert seeded_shard_chain(chunks, terms) == chain, (
+                f"seeded chain broke regrouping at shards={s}"
+            )
+            if s > 1 and naive_shard_fold(chunks, terms) != chain:
+                any_naive_diff = True
+        if any_naive_diff:
+            naive_mismatch += 1
+    print(
+        f"census: seeded chain bit-identical in {cases}/{cases} random "
+        f"batches x shards {shard_counts}; naive fold mismatched the "
+        f"canonical chain in {naive_mismatch}/{cases}"
+    )
+    assert naive_mismatch > 0, "census too tame to distinguish the folds"
+
+
+def check_conv_row_order(rng, cases=50, batch=8, ohw=9):
+    """Conv wgrad rows are r = b*ohw + p (sample-major).  Chunking the
+    *samples* at (lo, hi) maps to the contiguous row range
+    [lo*ohw, hi*ohw) — so the seeded chain over per-shard row blocks is
+    again the global row chain, including empty chunks."""
+    for _ in range(cases):
+        rows = batch * ohw
+        terms = [(random_bits(rng), random_bits(rng)) for _ in range(rows)]
+        chain = chain_wgrad(range(rows), terms)
+        for s in [1, 2, 3, 5, 8, 16]:
+            chunks = [(lo * ohw, hi * ohw) for lo, hi in shard_split(batch, s)]
+            assert seeded_shard_chain(chunks, terms) == chain, (
+                f"conv row-order regrouping broke at shards={s}"
+            )
+    print(f"conv row order: seeded chain bit-identical in {cases}/{cases} batches")
+
+
+def check_bias_fold(rng, cases=100, batch=32):
+    """db is a pure pim_add fold over sample rows; the seeded version
+    continues the same fold across chunk boundaries."""
+    for _ in range(cases):
+        deltas = [random_bits(rng) for _ in range(batch)]
+        acc = 0
+        for d in deltas:
+            acc = pim_add_bits(acc, d)
+        for s in [1, 2, 4, 8, 16, 32, 64]:
+            carry = 0
+            for lo, hi in shard_split(batch, s):
+                for r in range(lo, hi):
+                    carry = pim_add_bits(carry, deltas[r])
+            assert carry == acc, f"bias fold regrouping broke at shards={s}"
+    print(f"bias fold: seeded chain bit-identical in {cases}/{cases} batches")
+
+
+# ---- cluster_scaling gate arithmetic (shards=64 < 0.05x shards=1) ----
+
+def proposed_costs():
+    """OpCosts::proposed_default(): Table 1 cell, 1T-1R, 28 nm, 1024^2."""
+    pitch = math.sqrt(30.0) * 28e-9
+    line_len = 1024 * pitch
+    c_line = 200e-12 * line_len
+    r_line = 2.0e6 * line_len
+    t_rc = 0.5 * r_line * c_line
+    t_read = 0.25e-9 + t_rc + 0.40e-9
+    t_write = (0.28e-9 + 2.0e-9) * 1  # 1T-1R: one write step
+    t_search = t_read
+    return t_read, t_write, t_search
+
+
+def check_latency_gate():
+    t_read, t_write, t_search = proposed_costs()
+    ne, nm = 8, 23
+    t_add = (
+        (1 + 7 * ne + 7 * nm) * t_read
+        + (7 * ne + 7 * nm) * t_write
+        + 2 * (nm + 2) * t_search
+    )
+    t_mul = (2 * nm * nm + 6.5 * nm + 6 * ne + 3) * (t_read + t_write)
+    t_mac = t_mul + t_add
+
+    # LeNet-5 per-sample forward MACs and parameter count.
+    fwd = 6 * 24 * 24 * 25 + 12 * 8 * 8 * 150 + 192 * 97 + 97 * 10
+    p = (150 + 6) + (1800 + 12) + (192 * 97 + 97) + (97 * 10 + 10)
+    assert fwd == 221_194 and p == 21_669
+    batch, lanes = 32, 32_768
+
+    def sim_latency(shards):
+        chunks = shard_split(batch, shards)
+        sizes = [hi - lo for lo, hi in chunks]
+        if shards == 1:
+            waves = -(-(3 * fwd * batch + p) // lanes)
+            return waves * t_mac
+        active = sum(1 for n in sizes if n > 0)
+        max_waves = max(-(-(3 * fwd * n) // lanes) for n in sizes)
+        levels = max(1, math.ceil(math.log2(active)))
+        reduce_l = levels * -(-p // lanes) * t_add
+        hop_waves = -(-(p * 32) // lanes)
+        link_l = 2 * levels * hop_waves * t_write
+        update_l = -(-p // lanes) * t_mac
+        return max_waves * t_mac + reduce_l + link_l + update_l
+
+    l1 = sim_latency(1)
+    for s in [2, 4, 8, 16, 32, 64]:
+        ls = sim_latency(s)
+        print(f"  sim latency shards={s:>2}: {ls*1e6:8.1f} us  ({ls/l1:.4f}x of shards=1)")
+    ratio = sim_latency(64) / l1
+    assert ratio < 0.05, f"shards=64 gate would fail: {ratio:.4f}"
+    print(f"latency gate: shards=64 is {ratio:.4f}x shards=1 (< 0.05)  OK")
+
+
+def main():
+    rng = random.Random(0xC1A5)
+    check_counterexample()
+    check_census(rng)
+    check_conv_row_order(rng)
+    check_bias_fold(rng)
+    check_latency_gate()
+    print("validate_shard_reduce: all checks passed")
+
+
+if __name__ == "__main__":
+    main()

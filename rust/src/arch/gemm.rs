@@ -645,8 +645,35 @@ impl GemmEngine {
     /// the column sweep (both operands are fresh per step, so a
     /// per-call panel would not out-amortise the hoist).
     pub fn gemm_tn(&self, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> GemmResult {
+        self.gemm_tn_seeded(a, b, None, m, k, n)
+    }
+
+    /// TN kernel with a **seeded accumulator**: every output element's
+    /// MAC chain starts from `seed[r, n]`'s exact bits instead of `+0`.
+    ///
+    /// This is the chain-continuation primitive behind the cluster's
+    /// per-shard batched wgrad: shard `s` seeds its contraction with the
+    /// merged partial of shards `0..s`, so the concatenated per-chunk
+    /// chains are *literally* the global ascending-row chain, paused at
+    /// chunk boundaries (pre-validated in
+    /// `python/tests/validate_shard_reduce.py` — an unseeded fold of
+    /// independent partials is **not** bit-identical under FTZ).
+    /// `seed: None` is exactly [`GemmEngine::gemm_tn`]; `k == 0` returns
+    /// the seed unchanged at zero priced cost.
+    pub fn gemm_tn_seeded(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        seed: Option<&[f32]>,
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> GemmResult {
         assert_eq!(a.len(), k * m, "tn A shape");
         assert_eq!(b.len(), k * n, "tn B shape");
+        if let Some(s) = seed {
+            assert_eq!(s.len(), m * n, "tn seed shape");
+        }
         if m * n == 0 {
             return GemmResult {
                 y: Vec::new(),
@@ -661,11 +688,11 @@ impl GemmEngine {
         let yp = SendPtr(y.as_mut_ptr());
         self.dispatch_tasks(tasks, |t| {
             let (r0, r1, j0, j1) = task_rect(m, n, t, tasks);
-            tn_rect(a, b, k, m, n, r0, r1, j0, j1, &yp);
+            tn_rect(a, b, seed, k, m, n, r0, r1, j0, j1, &yp);
         });
         self.abft_guard(&mut y, m, n, k, &|r, row| {
             for (j, slot) in row.iter_mut().enumerate() {
-                let mut acc = 0u32;
+                let mut acc = seed.map(|s| s[r * n + j].to_bits()).unwrap_or(0);
                 for kk in 0..k {
                     acc = pim_mac_acc_dec(
                         acc,
@@ -1091,10 +1118,13 @@ fn nn_rect(
 /// The δ-element decode is hoisted per `(kk, r)` and amortised over the
 /// column sweep; the output rectangle itself is the stationary operand,
 /// so no K-panel split is needed (it is resident by construction).
+/// With `seed`, accumulators start from the seed's exact bits (the
+/// cluster's chain-continuation wgrad) instead of `+0`.
 #[allow(clippy::too_many_arguments)]
 fn tn_rect(
     a: &[f32],
     b: &[f32],
+    seed: Option<&[f32]>,
     k: usize,
     m: usize,
     n: usize,
@@ -1109,7 +1139,11 @@ fn tn_rect(
         return;
     }
     for r in r0..r1 {
-        unsafe { rect_row(yp, n, r, j0, j1) }.fill(0.0);
+        let yrow = unsafe { rect_row(yp, n, r, j0, j1) };
+        match seed {
+            Some(s) => yrow.copy_from_slice(&s[r * n + j0..r * n + j1]),
+            None => yrow.fill(0.0),
+        }
     }
     for kk in 0..k {
         let arow = &a[kk * m..(kk + 1) * m];

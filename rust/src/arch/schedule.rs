@@ -52,9 +52,15 @@ impl PipelineSchedule {
 
     /// Sharded variant: each MAC-bearing layer's fwd/bwd stage shrinks
     /// to the most-loaded chip's chunk (`ceil(batch / shards)`), and a
-    /// gradient all-reduce stage (`ceil(log2 shards)` tree levels of
-    /// `ceil(params / lanes)` row-parallel add-waves at the paper's
-    /// search-based `T_add`) slots between backward and update.
+    /// gradient all-reduce stage slots between backward and update.
+    /// The reduce is **double-buffered** against compute (PR 7): while
+    /// layer *k*'s partials tree-merge across chips, the chips are
+    /// already running the next batch's backward through that stage, so
+    /// only the reduce time *exceeding* the backward stage is exposed —
+    /// `max(0, reduce − bwd)`, where the reduce is `ceil(log2 A)` tree
+    /// levels over the `A = min(shards, batch)` **active** chips (empty
+    /// chunks neither send nor receive) × `ceil(params / lanes)`
+    /// row-parallel add-waves at the paper's search-based `T_add`.
     /// `shards == 1` is exactly [`PipelineSchedule::build`] — no reduce
     /// stages, same stage vector, the seed invariant.
     pub fn build_sharded(
@@ -74,7 +80,7 @@ impl PipelineSchedule {
         // baseline has no standalone add model and prices it as a MAC
         // (conservative).
         let t_add = accel.fp_model().map(|m| m.t_add()).unwrap_or(t_mac);
-        let levels = crate::cluster::cost::tree_levels(shards);
+        let levels = crate::cluster::cost::tree_levels(shards.min(batch));
         let mut stage_latency_s = Vec::new();
         for l in &net.layers {
             let fwd_macs = l.macs_fwd() * chunk as u64;
@@ -82,10 +88,14 @@ impl PipelineSchedule {
                 continue;
             }
             stage_latency_s.push(fwd_macs.div_ceil(lanes) as f64 * t_mac);
-            stage_latency_s.push((2 * fwd_macs).div_ceil(lanes) as f64 * t_mac);
+            let bwd = (2 * fwd_macs).div_ceil(lanes) as f64 * t_mac;
+            stage_latency_s.push(bwd);
             let wu = l.params() as u64;
-            // gradient all-reduce for this layer's parameters
-            stage_latency_s.push((levels * wu.div_ceil(lanes)).max(1) as f64 * t_add);
+            // gradient all-reduce for this layer's parameters,
+            // double-buffered behind the next batch's backward: only
+            // the excess is an exposed stage (0.0 when fully hidden).
+            let reduce = (levels * wu.div_ceil(lanes)).max(1) as f64 * t_add;
+            stage_latency_s.push((reduce - bwd).max(0.0));
             // weight update (per-layer params, batch-independent)
             stage_latency_s.push(wu.div_ceil(lanes).max(1) as f64 * t_mac);
         }
@@ -223,9 +233,41 @@ mod tests {
         let sharded = PipelineSchedule::build_sharded(&a, &net, 32, 10, 4);
         // 4 MAC layers × (fwd, bwd, reduce, update)
         assert_eq!(sharded.stages, 16);
-        assert!(sharded.stage_latency_s.iter().all(|&t| t > 0.0));
+        // fwd/bwd/update stages do real work; the reduce stage (index 2
+        // of each group of 4) is double-buffered behind the backward and
+        // may be fully hidden (0.0) — never negative.
+        for (i, &t) in sharded.stage_latency_s.iter().enumerate() {
+            if i % 4 == 2 {
+                assert!(t >= 0.0, "stage {i}: exposed reduce went negative");
+            } else {
+                assert!(t > 0.0, "stage {i}: compute stage must be positive");
+            }
+        }
+        // At LeNet-5 scale the tree merge hides entirely behind the
+        // backward of the next batch.
+        for i in (2..sharded.stages).step_by(4) {
+            assert!(
+                sharded.stage_latency_s[i] <= sharded.stage_latency_s[i - 1],
+                "stage {i}: exposed reduce exceeds the backward it hides behind"
+            );
+        }
         assert!(sharded.bottleneck_s() < plain.bottleneck_s());
         assert!(sharded.total_s() < plain.total_s());
+    }
+
+    #[test]
+    fn oversharded_schedule_clamps_to_active_chips() {
+        // shards > batch: chunk is 1 either way and the reduce tree is
+        // built over the active chips only, so 64 chips at batch 32
+        // schedule exactly like 32 chips.
+        let net = Network::lenet5();
+        let a = accel();
+        let s32 = PipelineSchedule::build_sharded(&a, &net, 32, 10, 32);
+        let s64 = PipelineSchedule::build_sharded(&a, &net, 32, 10, 64);
+        assert_eq!(s64.stages, s32.stages);
+        for (x, y) in s64.stage_latency_s.iter().zip(&s32.stage_latency_s) {
+            assert_eq!(x, y, "idle chips must not change the pipeline");
+        }
     }
 
     /// Invariants at shards ∈ {1, 4}: the steady-state per-batch latency

@@ -51,10 +51,12 @@
 //!
 //! The backward lowering and the update are factored out
 //! ([`TrainEngine::backward`], [`TrainEngine::apply_sgd`]) so the
-//! data-parallel cluster ([`crate::cluster`]) reuses them:
-//! [`TrainEngine::micrograd`] evaluates one sample's gradient at
-//! global-batch scaling — the canonical element of the cluster's
-//! order-preserving gradient all-reduce.
+//! data-parallel cluster ([`crate::cluster`]) reuses them.  Since PR 7
+//! the cluster runs one *batched* backward per shard chunk
+//! ([`TrainEngine::shard_forward_dgrad`] + [`TrainEngine::shard_wgrad`]
+//! with seeded accumulation); [`TrainEngine::micrograd`] — one sample's
+//! gradient at global-batch scaling — survives as the per-sample
+//! *specification* those chunked folds are proven against.
 //!
 //! **Ledger parity.**  One [`TrainStepResult`] reports loss, gradients
 //! and latency/energy/waves for fwd+bwd+update, and its MAC/wave totals
@@ -381,6 +383,42 @@ pub(crate) struct BackwardOut {
     pub grads: Vec<Option<LayerParams>>,
     pub macs_bwd: u64,
     pub adds_bwd: u64,
+}
+
+/// Phase-A output of one shard's batched backward (PR 7): the forward
+/// activation tape, the per-MAC-layer δ matrices in GEMM row layout,
+/// the chunk's unreduced loss terms and the phase-A ledger counts.
+///
+/// Everything computed here is a pure per-sample function (δ rows,
+/// dX rows, loss terms), so phase A runs on every shard in parallel
+/// and is independently retryable under the fault model.  Only the
+/// wgrad/db contractions — which *continue one global MAC chain* across
+/// shards — are deferred to the chain-sequential
+/// [`TrainEngine::shard_wgrad`] phase.
+pub(crate) struct ShardDelta {
+    /// Per-layer δ in GEMM row layout (`None` for parameter-free
+    /// layers): `Dense` → `[chunk, out]`, `Conv2d` →
+    /// `[chunk·oh·ow, out_ch]` with sample-major rows — chunking the
+    /// batch at sample boundaries keeps each shard's row block a
+    /// contiguous slice of the global contraction order.
+    pub deltas: Vec<Option<Vec<f32>>>,
+    /// The forward tape (`tape[l]` = input to layer `l`; slot 0 is the
+    /// borrowed-input sentinel) — phase B re-reads the MAC layers'
+    /// inputs for the wgrad contractions.
+    pub tape: Vec<Vec<f32>>,
+    /// Unreduced `−ln p` loss terms, one per chunk sample in order.
+    pub loss_terms: Vec<f64>,
+    /// Chunk size (local batch).
+    pub batch: usize,
+    pub macs_fwd: u64,
+    /// dgrad MACs — exactly `macs_fwd` (same contraction sizes).
+    pub macs_dgrad: u64,
+    /// Forward ride-along adds for the chunk.
+    pub adds: u64,
+    /// Phase-A backward ride-along ops (col2im accumulation, pool
+    /// scaling); the db fold lands in phase B.
+    pub adds_bwd: u64,
+    pub stored_activations: u64,
 }
 
 /// One sample's gradient contribution to a data-parallel cluster step:
@@ -804,8 +842,10 @@ impl TrainEngine {
     }
 
     /// Gradient of one sample at global-batch scaling `denom` — the
-    /// canonical microgradient of the cluster's order-preserving
-    /// gradient all-reduce.  Runs the same taped forward and the same
+    /// per-sample *specification* of the cluster's order-preserving
+    /// gradient merge (the execution path is the batched
+    /// [`TrainEngine::shard_forward_dgrad`]/[`TrainEngine::shard_wgrad`]
+    /// pair since PR 7).  Runs the same taped forward and the same
     /// extracted backward as [`TrainEngine::train_step`], at batch 1,
     /// so every per-sample bit matches what the batched engine computes
     /// for that sample's row.  Return the gradients via
@@ -1128,6 +1168,311 @@ impl TrainEngine {
             grads,
             macs_bwd,
             adds_bwd,
+        }
+    }
+
+    /// Phase A of the cluster's per-shard batched backward: one taped
+    /// forward over the chunk, loss terms at global-batch scaling
+    /// (`denom`), then the δ-propagation walk — the dgrad half of
+    /// [`TrainEngine::backward`], bit for bit — with each MAC-bearing
+    /// layer's δ matrix stashed instead of drained.  Returns `Err` when
+    /// ABFT could not recover an injected fault (the cluster treats
+    /// that as a shard failure and retries).
+    pub(crate) fn shard_forward_dgrad(
+        &self,
+        net: &Network,
+        params: &NetworkParams,
+        images: &[f32],
+        labels: &[i32],
+        batch: usize,
+        denom: usize,
+    ) -> Result<ShardDelta> {
+        let classes = self.validate(net, params, images, labels, batch)?;
+        if denom == 0 {
+            return Err(Error::Sim("zero gradient denominator".into()));
+        }
+        let arena = self.gemm.arena();
+        let fault_before = self.faults.as_deref().map(|h| h.report());
+
+        let mut tape: Vec<Vec<f32>> = Vec::with_capacity(net.layers.len() + 1);
+        let macs_fwd = self.forward_taped(net, params, images, batch, &mut tape);
+        let (adds_per_sample, stored_per_sample) = TrainEngine::fwd_ride_along(net);
+
+        let logits = tape.last().expect("tape holds the logits");
+        let mut delta = arena.take(batch * classes);
+        let mut loss_terms = Vec::with_capacity(batch);
+        softmax_xent_terms_into(
+            logits, labels, batch, classes, denom, &mut loss_terms, &mut delta,
+        );
+
+        // The dgrad walk: identical branches to `backward`, minus the
+        // wgrad GEMMs and the db folds (those continue the global chain
+        // in phase B), with the δ matrices kept instead of recycled.
+        let direct = self.gemm.mode() == ExecMode::Pooled;
+        let mut macs_dgrad = 0u64;
+        let mut adds_bwd = 0u64;
+        let mut deltas: Vec<Option<Vec<f32>>> = Vec::new();
+        deltas.resize_with(net.layers.len(), || None);
+        for (l, layer) in net.layers.iter().enumerate().rev() {
+            match *layer {
+                Layer::Dense { inp, out } => {
+                    let lp = params.layers[l].as_ref().expect("dense layer params");
+                    let gx = if direct {
+                        self.gemm.gemm_nn(&delta, &lp.w, batch, out, inp)
+                    } else {
+                        let mut wt = arena.take(out * inp);
+                        transpose_into(&lp.w, out, inp, &mut wt);
+                        let gx = self.gemm.gemm(&wt, &delta, None, inp, out, batch);
+                        arena.give(wt);
+                        gx
+                    };
+                    macs_dgrad += gx.macs;
+                    deltas[l] = Some(std::mem::replace(&mut delta, gx.y));
+                }
+                Layer::Conv2d {
+                    in_ch,
+                    out_ch,
+                    kh,
+                    kw,
+                    in_h,
+                    in_w,
+                } => {
+                    let (oh, ow) = (in_h - kh + 1, in_w - kw + 1);
+                    let k = in_ch * kh * kw;
+                    let ohw = oh * ow;
+                    let rows = batch * ohw;
+                    let plane = in_ch * in_h * in_w;
+                    let mut dmat = arena.take(rows * out_ch);
+                    for b in 0..batch {
+                        for oc in 0..out_ch {
+                            let src =
+                                &delta[(b * out_ch + oc) * ohw..(b * out_ch + oc + 1) * ohw];
+                            for (p, &d) in src.iter().enumerate() {
+                                dmat[(b * ohw + p) * out_ch + oc] = d;
+                            }
+                        }
+                    }
+                    let lp = params.layers[l].as_ref().expect("conv layer params");
+                    let gp = if direct {
+                        self.gemm.gemm_nn(&dmat, &lp.w, rows, out_ch, k)
+                    } else {
+                        let mut wt = arena.take(out_ch * k);
+                        transpose_into(&lp.w, out_ch, k, &mut wt);
+                        let gp = self.gemm.gemm(&wt, &dmat, None, k, out_ch, rows);
+                        arena.give(wt);
+                        gp
+                    };
+                    macs_dgrad += gp.macs;
+                    let mut dx = arena.take(batch * plane);
+                    for b in 0..batch {
+                        adds_bwd += col2im_accumulate(
+                            &gp.y[b * ohw * k..(b + 1) * ohw * k],
+                            in_ch,
+                            in_h,
+                            in_w,
+                            kh,
+                            kw,
+                            &mut dx[b * plane..(b + 1) * plane],
+                        );
+                    }
+                    arena.give(gp.y);
+                    deltas[l] = Some(dmat);
+                    arena.give(std::mem::replace(&mut delta, dx));
+                }
+                Layer::AvgPool2 { ch, in_h, in_w } => {
+                    let (oh, ow) = (in_h / 2, in_w / 2);
+                    let planes = batch * ch;
+                    debug_assert_eq!(delta.len(), planes * oh * ow);
+                    let mut dx = arena.take(planes * in_h * in_w);
+                    for p in 0..planes {
+                        let src = &delta[p * oh * ow..(p + 1) * oh * ow];
+                        let dst = &mut dx[p * in_h * in_w..(p + 1) * in_h * in_w];
+                        for r in 0..oh {
+                            for c in 0..ow {
+                                let g = pim_mul_f32(src[r * ow + c], 0.25);
+                                let i = 2 * r * in_w + 2 * c;
+                                dst[i] = g;
+                                dst[i + 1] = g;
+                                dst[i + in_w] = g;
+                                dst[i + in_w + 1] = g;
+                            }
+                        }
+                    }
+                    adds_bwd += (planes * oh * ow) as u64;
+                    arena.give(std::mem::replace(&mut delta, dx));
+                }
+                Layer::Relu { units } => {
+                    let y_out = taped_output(&tape, l + 1);
+                    debug_assert_eq!(delta.len(), batch * units);
+                    for (d, &y) in delta.iter_mut().zip(y_out) {
+                        if y <= 0.0 {
+                            *d = 0.0;
+                        }
+                    }
+                }
+            }
+        }
+        arena.give(delta);
+
+        let sd = ShardDelta {
+            deltas,
+            tape,
+            loss_terms,
+            batch,
+            macs_fwd,
+            macs_dgrad,
+            adds: adds_per_sample * batch as u64,
+            adds_bwd,
+            stored_activations: stored_per_sample * batch as u64,
+        };
+        if let (Some(h), Some(before)) = (self.faults.as_deref(), fault_before.as_ref()) {
+            let d = h.report().minus(before);
+            if d.unrecovered > 0 {
+                let retries = h.retries();
+                self.drain_shard_delta(sd);
+                return Err(Error::Sim(format!(
+                    "ABFT detected {} corrupted row(s) it could not recover \
+                     (retry budget {retries}); shard forward/dgrad discarded",
+                    d.unrecovered,
+                )));
+            }
+        }
+        Ok(sd)
+    }
+
+    /// Phase B of the cluster's per-shard batched backward: continue
+    /// the global wgrad/db MAC chains over this shard's rows.  `carry`
+    /// holds the merged partial of all earlier shards (zeros for shard
+    /// 0) and is replaced in place with the chain extended by this
+    /// chunk — seeding every accumulator with the incoming partial's
+    /// exact bits ([`GemmEngine::gemm_tn_seeded`]), so the concatenated
+    /// per-shard contractions are *literally* the single-chip batched
+    /// chain paused at chunk boundaries (pre-validated in
+    /// `python/tests/validate_shard_reduce.py`; an unseeded fold of
+    /// independent partials is **not** bit-identical under FTZ).
+    ///
+    /// Stages into fresh buffers and commits only when ABFT recovered
+    /// every injected fault, so a failed call leaves `carry` untouched
+    /// and is retryable.  Returns `(wgrad MACs, db adds)`.
+    pub(crate) fn shard_wgrad(
+        &self,
+        net: &Network,
+        x: &[f32],
+        sd: &ShardDelta,
+        carry: &mut [Option<LayerParams>],
+    ) -> Result<(u64, u64)> {
+        assert_eq!(carry.len(), net.layers.len(), "carry spine shape");
+        let arena = self.gemm.arena();
+        let batch = sd.batch;
+        let fault_before = self.faults.as_deref().map(|h| h.report());
+        let mut macs_wgrad = 0u64;
+        let mut adds_db = 0u64;
+        let mut staged: Vec<Option<LayerParams>> = Vec::new();
+        staged.resize_with(net.layers.len(), || None);
+        for (l, layer) in net.layers.iter().enumerate() {
+            let x_in: &[f32] = if l == 0 { x } else { &sd.tape[l] };
+            match *layer {
+                Layer::Dense { inp, out } => {
+                    let dmat = sd.deltas[l].as_ref().expect("dense shard delta");
+                    let seed = carry[l].as_ref().expect("dense carry");
+                    // dW chain continuation: δ [chunk, out] and X
+                    // [chunk, inp] row-major as-is, accumulators seeded
+                    // with the merged partial.  The TN layout works in
+                    // every execution mode (dispatch differs, values
+                    // cannot).
+                    let gw = self
+                        .gemm
+                        .gemm_tn_seeded(dmat, x_in, Some(&seed.w), out, batch, inp);
+                    macs_wgrad += gw.macs;
+                    // db chain continuation over the chunk's rows.
+                    let mut gb = arena.take(out);
+                    gb.copy_from_slice(&seed.b);
+                    for b in 0..batch {
+                        for (slot, &d) in gb.iter_mut().zip(&dmat[b * out..(b + 1) * out]) {
+                            *slot = pim_add_f32(*slot, d);
+                        }
+                    }
+                    adds_db += (batch * out) as u64;
+                    staged[l] = Some(LayerParams { w: gw.y, b: gb });
+                }
+                Layer::Conv2d {
+                    in_ch,
+                    out_ch,
+                    kh,
+                    kw,
+                    in_h,
+                    in_w,
+                } => {
+                    let (oh, ow) = (in_h - kh + 1, in_w - kw + 1);
+                    let k = in_ch * kh * kw;
+                    let ohw = oh * ow;
+                    let rows = batch * ohw;
+                    let plane = in_ch * in_h * in_w;
+                    let dmat = sd.deltas[l].as_ref().expect("conv shard delta");
+                    let mut patches = arena.take(rows * k);
+                    for b in 0..batch {
+                        im2col_into(
+                            &x_in[b * plane..(b + 1) * plane],
+                            in_ch,
+                            in_h,
+                            in_w,
+                            kh,
+                            kw,
+                            &mut patches[b * ohw * k..(b + 1) * ohw * k],
+                        );
+                    }
+                    let seed = carry[l].as_ref().expect("conv carry");
+                    let gw = self
+                        .gemm
+                        .gemm_tn_seeded(dmat, &patches, Some(&seed.w), out_ch, rows, k);
+                    arena.give(patches);
+                    macs_wgrad += gw.macs;
+                    let mut gb = arena.take(out_ch);
+                    gb.copy_from_slice(&seed.b);
+                    for r in 0..rows {
+                        for (slot, &d) in gb.iter_mut().zip(&dmat[r * out_ch..(r + 1) * out_ch])
+                        {
+                            *slot = pim_add_f32(*slot, d);
+                        }
+                    }
+                    adds_db += (rows * out_ch) as u64;
+                    staged[l] = Some(LayerParams { w: gw.y, b: gb });
+                }
+                Layer::AvgPool2 { .. } | Layer::Relu { .. } => {}
+            }
+        }
+        if let (Some(h), Some(before)) = (self.faults.as_deref(), fault_before.as_ref()) {
+            let d = h.report().minus(before);
+            if d.unrecovered > 0 {
+                for s in staged.drain(..).flatten() {
+                    arena.give(s.w);
+                    arena.give(s.b);
+                }
+                return Err(Error::Sim(format!(
+                    "ABFT detected {} corrupted row(s) it could not recover \
+                     (retry budget {}); shard wgrad discarded, carry untouched",
+                    d.unrecovered,
+                    h.retries(),
+                )));
+            }
+        }
+        // Commit: the extended chain replaces the incoming partial.
+        for (c, s) in carry.iter_mut().zip(staged.drain(..)) {
+            if let Some(new) = s {
+                let old = std::mem::replace(c, Some(new)).expect("carry/staged shape");
+                arena.give(old.w);
+                arena.give(old.b);
+            }
+        }
+        Ok((macs_wgrad, adds_db))
+    }
+
+    /// Return a [`ShardDelta`]'s buffers to the scratch arena.
+    pub(crate) fn drain_shard_delta(&self, mut sd: ShardDelta) {
+        let arena = self.gemm.arena();
+        self.drain_tape(&mut sd.tape);
+        for m in sd.deltas.drain(..).flatten() {
+            arena.give(m);
         }
     }
 }

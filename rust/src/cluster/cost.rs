@@ -12,12 +12,14 @@
 //!    latency is the most-loaded chip's MAC waves, energy is the sum of
 //!    all chips' (MACs + activation-stash writes + ride-along adds),
 //!    mirroring `Accelerator::train_step_cost` term for term.
-//! 2. **interconnect** — the reduce tree moves `S − 1` gradient
+//! 2. **interconnect** — the reduce tree moves `A − 1` gradient
 //!    messages up and broadcasts the updated weights back down
-//!    (`S − 1` more): every transferred value is written once into the
-//!    destination arrays (`e_write` per bit), `2·ceil(log2 S)` hops on
-//!    the critical path.
-//! 3. **reduce** — partials merge pairwise over `ceil(log2 S)` tree
+//!    (`A − 1` more), where `A` is the number of **active** chips
+//!    (chips whose chunk holds at least one sample — an oversharded
+//!    sweep parks the tail chips entirely outside the tree): every
+//!    transferred value is written once into the destination arrays
+//!    (`e_write` per bit), `2·ceil(log2 A)` hops on the critical path.
+//! 3. **reduce** — partials merge pairwise over `ceil(log2 A)` tree
 //!    levels; each merge is `params` row-parallel in-array adds priced
 //!    at the paper's search-based `T_add`/`E_add` — the add procedure
 //!    §3.3 makes O(Nm) is exactly what a gradient all-reduce exercises.
@@ -40,6 +42,12 @@ use crate::Result;
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ClusterCounts {
     pub batch: usize,
+    /// Per-chip chunk sizes in samples, shard order.  Chips with zero
+    /// samples are idle this step: they price to zero compute and are
+    /// excluded from the reduce tree and the interconnect (an
+    /// oversharded sweep — 64 chips at batch 32 — pays only for the
+    /// *active* chips).
+    pub shard_samples: Vec<usize>,
     /// Per-chip fwd + bwd MACs, shard order.
     pub shard_macs: Vec<u64>,
     /// Per-chip forward ride-along adds (bias/pool).
@@ -69,6 +77,7 @@ impl ClusterCounts {
         let sizes = plan.chunk_sizes();
         ClusterCounts {
             batch: plan.batch(),
+            shard_samples: sizes.clone(),
             shard_macs: sizes.iter().map(|&b| 3 * fwd_per_sample * b as u64).collect(),
             shard_adds: sizes.iter().map(|&b| adds_per_sample * b as u64).collect(),
             shard_stash: sizes.iter().map(|&b| stash_per_sample * b as u64).collect(),
@@ -225,15 +234,23 @@ impl ClusterCost {
             compute_energy_j += chip_energy(macs, stash, adds);
         }
 
-        // -- reduce tree --
-        let levels = tree_levels(s);
-        let reduce_adds = (s as u64 - 1) * p;
+        // -- reduce tree: built over the chips that actually computed a
+        //    gradient this step (empty shards hold no partial to merge
+        //    and receive no broadcast) --
+        let active = counts
+            .shard_samples
+            .iter()
+            .filter(|&&n| n > 0)
+            .count()
+            .max(1);
+        let levels = tree_levels(active);
+        let reduce_adds = (active as u64 - 1) * p;
         let reduce_waves = levels * p.div_ceil(lanes_u);
         let t_add = model.t_add();
         let e_add = model.e_add();
 
         // -- interconnect --
-        let link_transfers = 2 * (s as u64 - 1);
+        let link_transfers = 2 * (active as u64 - 1);
         let link_bits = link_transfers * p * 32;
         let hop_waves = (p * 32).div_ceil(lanes_u);
         let link_latency_s = (2 * levels * hop_waves) as f64 * model.costs.t_write;
@@ -403,7 +420,7 @@ mod tests {
     #[test]
     fn totals_decompose_with_nothing_unaccounted() {
         let net = Network::lenet5();
-        for shards in [1usize, 2, 4, 8] {
+        for shards in [1usize, 2, 4, 8, 16, 32, 64] {
             let c = cluster_step_cost(&net, 32, shards, LANES, &model()).unwrap();
             let lat = c.compute_latency_s
                 + c.link_latency_s
@@ -468,8 +485,51 @@ mod tests {
     }
 
     #[test]
-    fn oversharded_batch_errors() {
+    fn oversharded_empty_chips_price_to_zero() {
         let net = Network::lenet5();
-        assert!(cluster_step_cost(&net, 4, 8, LANES, &model()).is_err());
+        let m = model();
+        // shards > batch is legal since PR 7: split(4, 8) puts one
+        // sample on each of the first four chips and leaves four empty.
+        let c8 = cluster_step_cost(&net, 4, 8, LANES, &m).unwrap();
+        let c4 = cluster_step_cost(&net, 4, 4, LANES, &m).unwrap();
+        assert_eq!(c8.shards, 8);
+        // Idle chips burn nothing...
+        assert_eq!(&c8.shard_waves[4..], &[0, 0, 0, 0]);
+        assert_eq!(&c8.shard_macs[4..], &[0, 0, 0, 0]);
+        // ...and the reduce tree + interconnect are built over the four
+        // ACTIVE chips only, so every priced term matches shards=4.
+        assert_eq!(c8.reduce_adds, c4.reduce_adds);
+        assert_eq!(c8.link_transfers, c4.link_transfers);
+        assert_eq!(c8.link_bits, c4.link_bits);
+        assert_eq!(c8.latency_s(), c4.latency_s());
+        assert_eq!(c8.energy_j(), c4.energy_j());
+        assert_eq!(c8.total_macs(), c4.total_macs());
+        assert_eq!(c8.total_waves(), c4.total_waves());
+        // The 64-chip sweep shape at the CLI train batch.
+        let c64 = cluster_step_cost(&net, 32, 64, LANES, &m).unwrap();
+        let c32 = cluster_step_cost(&net, 32, 32, LANES, &m).unwrap();
+        assert_eq!(c64.latency_s(), c32.latency_s());
+        assert_eq!(c64.energy_j(), c32.energy_j());
+    }
+
+    #[test]
+    fn deep_sweep_hits_the_bench_gate() {
+        // The in-binary cluster_scaling gate, deterministically: at 64
+        // chips (32 active) the simulated step is < 0.05x single-chip.
+        let net = Network::lenet5();
+        let m = model();
+        let l1 = cluster_step_cost(&net, 32, 1, LANES, &m).unwrap().latency_s();
+        let mut prev = l1;
+        for shards in [2usize, 4, 8, 16, 32] {
+            let ls = cluster_step_cost(&net, 32, shards, LANES, &m).unwrap().latency_s();
+            assert!(ls < prev, "latency must keep shrinking at shards={shards}");
+            prev = ls;
+        }
+        let l64 = cluster_step_cost(&net, 32, 64, LANES, &m).unwrap().latency_s();
+        assert!(
+            l64 < 0.05 * l1,
+            "shards=64 must be < 0.05x shards=1: {}",
+            l64 / l1
+        );
     }
 }

@@ -1,44 +1,63 @@
 //! The data-parallel cluster engine: N modeled PIM chips, each a
 //! *persistent* [`TrainEngine`] (own worker pool, own scratch arena)
 //! driven from a persistent chip-level [`WorkerPool`] — zero thread
-//! spawns per steady-state cluster step — merged by the
-//! order-preserving gradient all-reduce and one global in-array SGD
-//! update.  The frozen [`ExecMode::Scoped`] baseline keeps the PR 3
-//! shape (fresh `thread::scope` chip threads per step, allocating
-//! engines) for the acceptance bench.
+//! spawns per steady-state cluster step — merged by a *seeded chain
+//! continuation* of the global gradient accumulation and one global
+//! in-array SGD update.  The frozen [`ExecMode::Scoped`] baseline keeps
+//! the PR 3 shape (fresh `thread::scope` chip threads per step) for the
+//! acceptance bench.
 //!
-//! **Bit-reproducibility contract.**
+//! **Bit-reproducibility contract (PR 7).**
 //!
 //! * `shards == 1` *delegates* to [`TrainEngine::train_step`] — the seed
 //!   invariant: a 1-chip cluster is the PR 2 engine, bit for bit,
 //!   ledger for ledger.
-//! * `shards ≥ 2`: every chip evaluates *per-sample microgradients*
-//!   ([`TrainEngine::micrograd`], δ scaled by the global batch), and
-//!   [`reduce_grads`] folds them in **global sample order** — so the
-//!   merged gradient, loss and updated weights are identical for every
-//!   shard count ≥ 2, every thread count and every execution mode.
-//!   For networks whose wgrad contractions are purely per-sample outer
-//!   products (dense MLPs) the fold *is* the batched GEMM accumulation
-//!   chain, so the result also equals the single-chip engine exactly;
-//!   conv wgrads chain over output pixels inside each sample first,
-//!   which fixes the canonical (shard-invariant) order at sample
-//!   granularity rather than the single-chip pixel-interleaved order.
-//!   `rust/tests/cluster.rs` pins both facts.
+//! * `shards ≥ 2`: each chip runs **one batched backward over its whole
+//!   chunk** — phase A, [`TrainEngine::shard_forward_dgrad`]: taped
+//!   forward, loss terms at global-batch scaling, δ-propagation — and a
+//!   chain-sequential walker continues the global wgrad/db MAC chains
+//!   across the chunks in global sample order — phase B,
+//!   [`TrainEngine::shard_wgrad`]: shard `s`'s accumulators are
+//!   *seeded* with the merged partial of shards `0..s`, so the
+//!   concatenated per-chunk contractions are literally the single-chip
+//!   batched chain paused at chunk boundaries.  FTZ fp32 addition is
+//!   not associative, so this seeding is what makes the loss, merged
+//!   gradients and updated weights **bit-identical to the single-chip
+//!   engine at every shard count**, dense and conv alike (pre-validated
+//!   in `python/tests/validate_shard_reduce.py`, re-pinned on every
+//!   `cargo test` by `cluster::prop_shard_chain_matches_engine`).
+//!
+//! This replaces the PR 3–6 per-sample microgradient reduce, which
+//! merged correctly but lowered `batch` single-sample backwards per
+//! step on the host — the `shards=2` wall-clock anomaly (a shards=2
+//! step cost ~2.8× a shards=1 step in host time).  The batched phases
+//! do the same MACs as the single-chip step, so the anomaly is gone
+//! rather than re-documented.
+//!
+//! Phase B overlaps phase A: the walker runs as one extra task on the
+//! chip pool and folds shard `s` while shards `s+1..` are still
+//! computing — compute/communication overlap without a host barrier.
+//! Chips whose chunk is empty (`shards > batch`) no-op at zero priced
+//! cost and pass the chain through untouched.
 //!
 //! The ledger is priced by [`ClusterCost::from_counts`] from the
 //! *counted* per-chip work, which the tests hold exactly equal to the
 //! analytic [`cluster_step_cost`](crate::cluster::cluster_step_cost).
+//! Recovery (PR 6) retries a failed chunk on its own chip, then
+//! re-shards it over the survivors or rolls the step back; redone work
+//! is attributed to the *canonical* shard, so the clean ledger stays
+//! analytic under fault injection.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 
-use crate::arch::gemm::{ExecMode, NetworkParams};
+use crate::arch::gemm::{ExecMode, LayerParams, NetworkParams};
 use crate::arch::pool::{note_worker_launches, WorkerPool};
-use crate::arch::train::{SampleGrad, TrainEngine, TrainStepResult, TrainTotals};
+use crate::arch::train::{ShardDelta, TrainEngine, TrainStepResult, TrainTotals};
 use crate::cluster::cost::{ClusterCost, ClusterCounts};
 use crate::cluster::plan::{ClusterConfig, ShardPlan};
-use crate::cluster::reduce::{reduce_grads, GradSet};
+use crate::cluster::reduce::GradSet;
 use crate::fpu::FpCostModel;
 use crate::model::Network;
 use crate::sim::faults::{FaultHook, FaultReport, FaultSession, RecoveryPolicy};
@@ -58,10 +77,6 @@ pub struct ClusterStepResult {
     pub adds: u64,
     pub adds_bwd: u64,
     pub stored_activations: u64,
-    /// Host-side `pim_add` applications of the canonical merge fold
-    /// (counted, not priced — the priced reduce is `cost.reduce_adds`,
-    /// the physical tree over shard partials).
-    pub merge_adds: u64,
     /// Total array wave events (`cost.total_waves()`).
     pub waves: u64,
     /// Cluster step latency (`cost.latency_s()`).
@@ -70,7 +85,8 @@ pub struct ClusterStepResult {
     pub energy_j: f64,
     /// The decomposed priced schedule.
     pub cost: ClusterCost,
-    /// Merged per-layer gradients (the all-reduce output).
+    /// Merged per-layer gradients — the final carry of the seeded
+    /// chain, equal bit for bit to the single-chip batched gradient.
     pub grads: GradSet,
     /// Fault/ABFT/recovery activity of this step (all-zero when no
     /// fault session is armed).
@@ -104,6 +120,7 @@ impl ClusterStepResult {
     fn from_single(r: TrainStepResult, batch: usize, lanes: usize, model: &FpCostModel) -> Self {
         let counts = ClusterCounts {
             batch,
+            shard_samples: vec![batch],
             shard_macs: vec![r.macs_fwd + r.macs_bwd],
             shard_adds: vec![r.adds],
             shard_stash: vec![r.stored_activations],
@@ -123,7 +140,6 @@ impl ClusterStepResult {
             adds: r.adds,
             adds_bwd: r.adds_bwd,
             stored_activations: r.stored_activations,
-            merge_adds: 0,
             waves: r.waves,
             latency_s: r.latency_s,
             energy_j: r.energy_j,
@@ -134,17 +150,69 @@ impl ClusterStepResult {
     }
 }
 
+/// Hand-off cell between a shard's phase A task and the fold walker.
+enum Slot {
+    /// Phase A still running.
+    Empty,
+    /// Phase A finished: `Ok(None)` is an empty (zero-sample) chunk,
+    /// `Ok(Some(_))` the chunk's δ/tape bundle, `Err` a failed attempt
+    /// parked for the caller's recovery pass.
+    Ready(Result<Option<ShardDelta>>),
+    /// Consumed by the walker or the recovery pass.
+    Taken,
+}
+
+/// Immutable per-step context shared by the phase A tasks, the walker
+/// and the recovery pass.
+struct StepCtx<'a> {
+    net: &'a Network,
+    frozen: &'a NetworkParams,
+    images: &'a [f32],
+    labels: &'a [i32],
+    batch: usize,
+    in_units: usize,
+    chunks: &'a [(usize, usize)],
+    session: Option<&'a FaultSession>,
+    step: u64,
+    /// Analytic forward MACs per sample — the charge unit for wasted
+    /// (discarded) and redone chunk work.
+    fwd_per_sample: u64,
+}
+
+/// The walker's mutable state: the traveling merged-gradient carry plus
+/// the global and per-shard ledgers, advanced strictly in shard order.
+struct Walk {
+    /// Global wgrad/db chain partial after folding shards `0..next`.
+    carry: GradSet,
+    /// Loss terms in global sample order.
+    terms: Vec<f64>,
+    /// First shard index not yet folded.
+    next: usize,
+    /// Fatal phase-B error (rolls the step back).
+    err: Option<Error>,
+    shard_macs: Vec<u64>,
+    shard_adds: Vec<u64>,
+    shard_stash: Vec<u64>,
+    macs_fwd: u64,
+    macs_bwd: u64,
+    adds: u64,
+    adds_bwd: u64,
+    stored: u64,
+}
+
 /// The sharded data-parallel training engine.
 #[derive(Debug)]
 pub struct ClusterEngine {
-    /// The single-chip engine: the `shards == 1` delegation path and
-    /// the global SGD update (every chip is provisioned identically).
+    /// The single-chip engine: the `shards == 1` delegation path, the
+    /// phase-B fold chip, and the global SGD update (every chip is
+    /// provisioned identically).
     engine: TrainEngine,
     /// One persistent engine per modeled chip (`shards ≥ 2`), each with
     /// its own worker pool and scratch arena — chips never contend.
     shard_engines: Vec<TrainEngine>,
     /// Persistent chip-dispatch pool (`shards − 1` workers; the caller
-    /// is the Nth chip driver).  Unused in scoped mode.
+    /// is the Nth chip driver; the fold walker rides along as one extra
+    /// task).  Unused in scoped mode.
     chips: WorkerPool,
     mode: ExecMode,
     cfg: ClusterConfig,
@@ -253,16 +321,172 @@ impl ClusterEngine {
     }
 
     /// Return a consumed cluster step result.  The merged gradient set
-    /// is host-allocated by the all-reduce, so it is simply dropped;
-    /// this hook exists for API symmetry with
-    /// [`TrainEngine::recycle`] (per-sample microgradients are already
-    /// recycled into their shard engines internally).
+    /// is the fold's traveling carry (host-allocated once per step), so
+    /// it is simply dropped; this hook exists for API symmetry with
+    /// [`TrainEngine::recycle`] (each shard's δ/tape bundle is already
+    /// recycled into the chip that computed it).
     pub fn recycle(&self, r: ClusterStepResult) {
         drop(r);
     }
 
+    /// One phase-A attempt at samples `[lo, hi)` on chip
+    /// `engine_idx + 1`.  Empty chunks no-op (`Ok(None)`): no dead-chip
+    /// check, no transient draw, zero cost.  Dead chips refuse up front
+    /// (nothing wasted); panics are captured here so the chip pool
+    /// never trips its poison flag; injected transient chip failures
+    /// strike the first attempt only, after the compute — the fwd +
+    /// dgrad work is charged as wasted and the bundle discarded.
+    fn phase_a(
+        &self,
+        cx: &StepCtx<'_>,
+        lo: usize,
+        hi: usize,
+        engine_idx: usize,
+        attempt: u32,
+    ) -> Result<Option<ShardDelta>> {
+        if lo == hi {
+            return Ok(None);
+        }
+        let chip = engine_idx as u64 + 1;
+        let engine = &self.shard_engines[engine_idx];
+        if let Some(s) = cx.session {
+            if s.chip_is_dead(chip, self.cfg.shards as u64) {
+                s.note_shard_failure(0);
+                return Err(Error::Sim(format!("chip {chip} is permanently dead")));
+            }
+        }
+        // Work at risk in phase A: forward + dgrad over the chunk.
+        let wasted = 2 * cx.fwd_per_sample * (hi - lo) as u64;
+        let sd = match catch_unwind(AssertUnwindSafe(|| {
+            engine.shard_forward_dgrad(
+                cx.net,
+                cx.frozen,
+                &cx.images[lo * cx.in_units..hi * cx.in_units],
+                &cx.labels[lo..hi],
+                hi - lo,
+                cx.batch,
+            )
+        })) {
+            Ok(Ok(sd)) => sd,
+            Ok(Err(e)) => {
+                if let Some(s) = cx.session {
+                    s.note_shard_failure(wasted);
+                }
+                return Err(e);
+            }
+            Err(_) => {
+                if let Some(s) = cx.session {
+                    s.note_shard_failure(wasted);
+                }
+                return Err(Error::Sim(format!(
+                    "shard worker panicked; chunk [{lo}, {hi}) discarded"
+                )));
+            }
+        };
+        if attempt == 0 {
+            if let Some(s) = cx.session {
+                if s.chip_failed_transiently(chip, cx.step) {
+                    s.note_shard_failure(wasted);
+                    engine.drain_shard_delta(sd);
+                    return Err(Error::Sim(format!(
+                        "chip {chip} failed transiently at step {}",
+                        cx.step
+                    )));
+                }
+            }
+        }
+        Ok(Some(sd))
+    }
+
+    /// Fold one completed chunk into the traveling chain: account its
+    /// phase-A ledger to *canonical* shard `t` (whichever chip computed
+    /// it — this is what keeps the clean ledger analytic under
+    /// re-sharding), extend the loss terms, run phase B on chip 0 with
+    /// the carry seeded from shards `0..t`, and recycle the bundle into
+    /// the chip that computed it.  A failed phase-B attempt leaves the
+    /// carry untouched (staged commit inside `shard_wgrad`), so it
+    /// retries in place up to the session budget.
+    fn fold_entry(
+        &self,
+        cx: &StepCtx<'_>,
+        w: &mut Walk,
+        t: usize,
+        engine_idx: usize,
+        lo: usize,
+        hi: usize,
+        sd: ShardDelta,
+    ) -> Result<()> {
+        debug_assert_eq!(sd.batch, hi - lo);
+        w.shard_macs[t] += sd.macs_fwd + sd.macs_dgrad;
+        w.shard_adds[t] += sd.adds;
+        w.shard_stash[t] += sd.stored_activations;
+        w.macs_fwd += sd.macs_fwd;
+        w.macs_bwd += sd.macs_dgrad;
+        w.adds += sd.adds;
+        w.adds_bwd += sd.adds_bwd;
+        w.stored += sd.stored_activations;
+        w.terms.extend_from_slice(&sd.loss_terms);
+
+        let x = &cx.images[lo * cx.in_units..hi * cx.in_units];
+        let budget = cx.session.map(|s| s.config().shard_retries).unwrap_or(0);
+        let mut attempt = 0u32;
+        let folded = loop {
+            match self.engine.shard_wgrad(cx.net, x, &sd, &mut w.carry) {
+                Ok(counts) => break Ok(counts),
+                Err(e) => {
+                    let Some(s) = cx.session else { break Err(e) };
+                    if attempt >= budget {
+                        break Err(e);
+                    }
+                    attempt += 1;
+                    s.note_shard_failure(cx.fwd_per_sample * (hi - lo) as u64);
+                    s.note_shard_retry();
+                }
+            }
+        };
+        self.shard_engines[engine_idx].drain_shard_delta(sd);
+        let (macs_wgrad, adds_db) = folded?;
+        w.shard_macs[t] += macs_wgrad;
+        w.macs_bwd += macs_wgrad;
+        w.adds_bwd += adds_db;
+        Ok(())
+    }
+
+    /// Recycle every unconsumed phase-A bundle from `from` on
+    /// (abandoning the step on an error exit).
+    fn drain_slots(&self, slots: &mut [Slot], from: usize) {
+        for (t, s) in slots.iter_mut().enumerate().skip(from) {
+            if let Slot::Ready(Ok(Some(sd))) = std::mem::replace(s, Slot::Taken) {
+                self.shard_engines[t].drain_shard_delta(sd);
+            }
+        }
+    }
+
+    /// A phase-B (fold) failure is not chunk-local — the chain cannot
+    /// advance past it — so it abandons the step: drain what remains
+    /// and roll back (the carry commit protocol guarantees `params` and
+    /// the carry were never touched by the failed attempt).
+    fn fold_failed(
+        &self,
+        slots: &mut [Slot],
+        from: usize,
+        session: Option<&FaultSession>,
+        e: Error,
+    ) -> Error {
+        self.drain_slots(slots, from);
+        if let Some(s) = session {
+            s.note_rollback();
+            return Error::Sim(format!(
+                "gradient fold failed after retries; rolling back step \
+                 (params untouched): {e}"
+            ));
+        }
+        e
+    }
+
     /// One data-parallel SGD step: shard the batch, run every chip's
-    /// fwd + bwd concurrently, all-reduce the gradients in canonical
+    /// batched fwd + dgrad concurrently while the fold walker continues
+    /// the seeded gradient chain across finished chunks in global
     /// order, apply one global in-array update — returning the full
     /// decomposed ledger + merged gradients.
     pub fn train_step(
@@ -299,267 +523,270 @@ impl ClusterEngine {
         let plan = ShardPlan::split(batch, self.cfg.shards)?;
         let chunks = plan.chunks();
         let (c0, h0, w0) = net.input;
-        let in_units = c0 * h0 * w0;
-        let shards_u = self.cfg.shards as u64;
-        // Analytic fwd+bwd MACs per sample — the charge for discarded
-        // (wasted) and re-executed chunks.
-        let fwd_per_sample: u64 = net.layers.iter().map(|l| l.macs_fwd()).sum();
-        let chunk_macs = |lo: usize, hi: usize| 3 * fwd_per_sample * (hi - lo) as u64;
-
-        // ---- fan out: one persistent chip engine per shard ----
         let frozen: &NetworkParams = params;
-        let run_range = |engine: &TrainEngine, lo: usize, hi: usize| -> Result<Vec<SampleGrad>> {
-            let mut samples = Vec::with_capacity(hi - lo);
-            for b in lo..hi {
-                samples.push(engine.micrograd(
-                    net,
-                    frozen,
-                    &images[b * in_units..(b + 1) * in_units],
-                    labels[b],
-                    batch,
-                )?);
-            }
-            Ok(samples)
+        let cx = StepCtx {
+            net,
+            frozen,
+            images,
+            labels,
+            batch,
+            in_units: c0 * h0 * w0,
+            chunks,
+            session,
+            step,
+            fwd_per_sample: net.layers.iter().map(|l| l.macs_fwd()).sum(),
         };
-        // One attempt at shard `t` on chip `t + 1`.  Dead chips refuse
-        // up front (nothing wasted); panics are captured *inside* the
-        // task so the chip pool never trips its poison flag; injected
-        // transient chip failures strike the first attempt only, after
-        // the compute — the work is charged as wasted and discarded.
-        let run_shard = |t: usize, engine: &TrainEngine, attempt: u32| -> Result<Vec<SampleGrad>> {
+
+        // The chain carry starts at +0 in every accumulator — shard 0's
+        // seed — shaped exactly like the parameter set.
+        let carry: GradSet = frozen
+            .layers
+            .iter()
+            .map(|lp| {
+                lp.as_ref().map(|lp| LayerParams {
+                    w: vec![0.0; lp.w.len()],
+                    b: vec![0.0; lp.b.len()],
+                })
+            })
+            .collect();
+        let walk = Mutex::new(Walk {
+            carry,
+            terms: Vec::with_capacity(batch),
+            next: 0,
+            err: None,
+            shard_macs: vec![0; chunks.len()],
+            shard_adds: vec![0; chunks.len()],
+            shard_stash: vec![0; chunks.len()],
+            macs_fwd: 0,
+            macs_bwd: 0,
+            adds: 0,
+            adds_bwd: 0,
+            stored: 0,
+        });
+        let slots: Mutex<Vec<Slot>> =
+            Mutex::new(chunks.iter().map(|_| Slot::Empty).collect());
+        let ready = Condvar::new();
+
+        // One phase-A task per shard: compute, publish the slot, wake
+        // the walker.  The outer catch is the deadlock guard — a slot
+        // left `Empty` would stall the walker forever, so *every* exit
+        // publishes (phase_a catches compute panics itself, with fault
+        // accounting).
+        let run_task = |t: usize| {
             let (lo, hi) = chunks[t];
-            let chip = t as u64 + 1;
-            if let Some(s) = session {
-                if s.chip_is_dead(chip, shards_u) {
-                    s.note_shard_failure(0);
-                    return Err(Error::Sim(format!("chip {chip} is permanently dead")));
-                }
-            }
-            let out = match catch_unwind(AssertUnwindSafe(|| run_range(engine, lo, hi))) {
-                Ok(Ok(out)) => out,
-                Ok(Err(e)) => {
-                    if let Some(s) = session {
-                        s.note_shard_failure(chunk_macs(lo, hi));
-                    }
-                    return Err(e);
-                }
-                Err(_) => {
-                    if let Some(s) = session {
-                        s.note_shard_failure(chunk_macs(lo, hi));
-                    }
-                    return Err(Error::Sim(format!(
-                        "shard {t} worker panicked; chunk [{lo}, {hi}) discarded"
-                    )));
-                }
-            };
-            if attempt == 0 {
-                if let Some(s) = session {
-                    if s.chip_failed_transiently(chip, step) {
-                        s.note_shard_failure(chunk_macs(lo, hi));
-                        for sg in out {
-                            engine.recycle_grads(sg.grads);
-                        }
-                        return Err(Error::Sim(format!(
-                            "chip {chip} failed transiently at step {step}"
-                        )));
-                    }
-                }
-            }
-            Ok(out)
+            let r = catch_unwind(AssertUnwindSafe(|| self.phase_a(&cx, lo, hi, t, 0)))
+                .unwrap_or_else(|_| Err(Error::Sim(format!("shard {t} task panicked"))));
+            let mut guard = slots.lock().expect("shard slots poisoned");
+            guard[t] = Slot::Ready(r);
+            ready.notify_all();
         };
-        let shard_results: Vec<Result<Vec<SampleGrad>>> = match self.mode {
+        // The fold walker: consume slots strictly in shard order,
+        // folding each chunk into the carry while later shards are
+        // still computing.  A failed slot is parked (not consumed) and
+        // the walk stalls there for the caller's recovery pass.
+        let run_walker = || {
+            let mut w = walk.lock().expect("walk state poisoned");
+            while w.next < chunks.len() {
+                let t = w.next;
+                let mut guard = slots.lock().expect("shard slots poisoned");
+                let slot = loop {
+                    match std::mem::replace(&mut guard[t], Slot::Taken) {
+                        Slot::Empty => {
+                            guard[t] = Slot::Empty;
+                            guard = ready.wait(guard).expect("shard slots poisoned");
+                        }
+                        s => break s,
+                    }
+                };
+                drop(guard);
+                match slot {
+                    Slot::Ready(Ok(None)) => w.next = t + 1,
+                    Slot::Ready(Ok(Some(sd))) => {
+                        let (lo, hi) = chunks[t];
+                        match self.fold_entry(&cx, &mut w, t, t, lo, hi, sd) {
+                            Ok(()) => w.next = t + 1,
+                            Err(e) => {
+                                w.err = Some(e);
+                                return;
+                            }
+                        }
+                    }
+                    Slot::Ready(Err(e)) => {
+                        slots.lock().expect("shard slots poisoned")[t] = Slot::Ready(Err(e));
+                        return;
+                    }
+                    Slot::Empty | Slot::Taken => unreachable!("walker raced slot {t}"),
+                }
+            }
+        };
+
+        let s_count = chunks.len();
+        match self.mode {
             ExecMode::Pooled | ExecMode::Flat => {
-                // Persistent chip pool: zero spawns per step; each task
-                // drives its own shard engine, results land in per-chip
-                // slots.
-                let slots: Vec<Mutex<Option<Result<Vec<SampleGrad>>>>> =
-                    chunks.iter().map(|_| Mutex::new(None)).collect();
-                self.chips.run(chunks.len(), |t| {
-                    let r = run_shard(t, &self.shard_engines[t], 0);
-                    *slots[t].lock().expect("shard slot poisoned") = Some(r);
+                // Persistent chip pool, `shards + 1` tasks: tasks
+                // `0..shards` are phase A, task `shards` is the walker.
+                // Ascending task claiming guarantees every phase-A task
+                // is claimed before the walker, so the pool's `shards`
+                // executors (`shards − 1` workers + the caller) never
+                // deadlock.  Zero spawns per step.
+                self.chips.run(s_count + 1, |i| {
+                    if i < s_count {
+                        run_task(i);
+                    } else {
+                        run_walker();
+                    }
                 });
-                slots
-                    .into_iter()
-                    .map(|m| {
-                        m.into_inner()
-                            .expect("shard slot poisoned")
-                            .unwrap_or_else(|| Err(Error::Sim("shard task never ran".into())))
-                    })
-                    .collect()
             }
             ExecMode::Scoped => {
                 // Frozen PR 3 fan-out: fresh scoped chip threads each
-                // step.
-                let run_shard = &run_shard;
-                thread::scope(|s| {
-                    let mut handles = Vec::with_capacity(chunks.len());
-                    for (t, engine) in self.shard_engines.iter().enumerate() {
-                        handles.push(s.spawn(move || run_shard(t, engine, 0)));
+                // step; the caller runs the walker inline.
+                thread::scope(|scope| {
+                    let task = &run_task;
+                    for t in 0..s_count {
+                        scope.spawn(move || task(t));
                     }
-                    note_worker_launches(handles.len() as u64);
-                    handles
-                        .into_iter()
-                        .enumerate()
-                        .map(|(t, h)| match h.join() {
-                            Ok(r) => r,
-                            // A panic that escaped the in-task capture
-                            // degrades to a recoverable shard failure
-                            // instead of tearing the whole step down.
-                            Err(_) => Err(Error::Sim(format!("shard {t} worker panicked"))),
-                        })
-                        .collect()
-                })
+                    note_worker_launches(s_count as u64);
+                    run_walker();
+                });
             }
-        };
+        }
 
-        // ---- recover failed shards: bounded retries on the caller ----
+        let mut w = walk.into_inner().expect("walk state poisoned");
+        let mut slots = slots.into_inner().expect("shard slots poisoned");
+
+        if let Some(e) = w.err.take() {
+            return Err(self.fold_failed(&mut slots, w.next, session, e));
+        }
+
+        // ---- recovery pass: the walker parked at a failed shard (or
+        //      phase A outran it); resume the fold inline, retrying and
+        //      re-sharding per the session policy ----
         let budget = session.map(|s| s.config().shard_retries).unwrap_or(0);
-        let mut outs: Vec<Option<Vec<SampleGrad>>> = Vec::with_capacity(chunks.len());
-        let mut last_err: Option<Error> = None;
-        for (t, r) in shard_results.into_iter().enumerate() {
-            match r {
-                Ok(o) => outs.push(Some(o)),
-                Err(e) => {
+        while w.next < chunks.len() {
+            let t = w.next;
+            let (lo, hi) = chunks[t];
+            match std::mem::replace(&mut slots[t], Slot::Taken) {
+                Slot::Ready(Ok(None)) => w.next = t + 1,
+                Slot::Ready(Ok(Some(sd))) => {
+                    if let Err(e) = self.fold_entry(&cx, &mut w, t, t, lo, hi, sd) {
+                        return Err(self.fold_failed(&mut slots, t + 1, session, e));
+                    }
+                    w.next = t + 1;
+                }
+                Slot::Ready(Err(e)) => {
                     let Some(s) = session else {
                         // Unarmed cluster keeps the strict contract:
                         // the first shard error fails the step.
+                        self.drain_slots(&mut slots, t + 1);
                         return Err(e);
                     };
-                    let mut recovered = None;
+                    // Bounded retries on the owning chip first.
+                    let mut recovered: Option<ShardDelta> = None;
                     let mut err = e;
                     for _ in 0..budget {
                         s.note_shard_retry();
-                        match run_shard(t, &self.shard_engines[t], 1) {
-                            Ok(o) => {
-                                recovered = Some(o);
+                        match self.phase_a(&cx, lo, hi, t, 1) {
+                            Ok(sd) => {
+                                recovered = sd;
                                 break;
                             }
                             Err(e2) => err = e2,
                         }
                     }
-                    if recovered.is_none() {
-                        last_err = Some(err);
-                    }
-                    outs.push(recovered);
-                }
-            }
-        }
-
-        // ---- retry budget exhausted: re-shard onto survivors or roll
-        //      back ----
-        let failed: Vec<usize> = outs
-            .iter()
-            .enumerate()
-            .filter_map(|(t, o)| o.is_none().then_some(t))
-            .collect();
-        if !failed.is_empty() {
-            let s = session.expect("unarmed shard errors returned above");
-            let err_text = last_err
-                .map(|e| e.to_string())
-                .unwrap_or_else(|| "shard failed".into());
-            match s.config().policy {
-                RecoveryPolicy::Rollback => {
-                    s.note_rollback();
-                    return Err(Error::Sim(format!(
-                        "{} shard(s) failed after {} retries; rolling back step \
-                         (params untouched): {err_text}",
-                        failed.len(),
-                        budget,
-                    )));
-                }
-                RecoveryPolicy::Reshard => {
-                    let survivors: Vec<usize> = outs
-                        .iter()
-                        .enumerate()
-                        .filter_map(|(t, o)| o.is_some().then_some(t))
-                        .collect();
-                    if survivors.is_empty() {
-                        return Err(Error::Sim(format!(
-                            "all {} shards failed; no survivors to re-shard onto: {err_text}",
-                            chunks.len(),
-                        )));
-                    }
-                    // Recompute each lost chunk on the surviving chips
-                    // (round-robin), splicing the samples back at their
-                    // canonical positions — the merged gradient stays
-                    // bit-identical to the fault-free step.  Survivors
-                    // already cleared this step's transient window, so
-                    // the redo runs through plain `run_range`.
-                    let mut rr = 0usize;
-                    for t in failed {
-                        let (lo, hi) = chunks[t];
-                        let sub = ShardPlan::split(hi - lo, survivors.len().min(hi - lo))?;
-                        let mut redone = Vec::with_capacity(hi - lo);
-                        for &(slo, shi) in sub.chunks() {
-                            let eng = &self.shard_engines[survivors[rr % survivors.len()]];
-                            rr += 1;
-                            redone.extend(run_range(eng, lo + slo, lo + shi)?);
+                    let Some(sd) = recovered else {
+                        match s.config().policy {
+                            RecoveryPolicy::Rollback => {
+                                self.drain_slots(&mut slots, t + 1);
+                                s.note_rollback();
+                                return Err(Error::Sim(format!(
+                                    "shard {t} failed after {budget} retries; rolling \
+                                     back step (params untouched): {err}"
+                                )));
+                            }
+                            RecoveryPolicy::Reshard => {
+                                // Recompute the lost chunk on the chips
+                                // that completed phase A (round-robin),
+                                // folding the sub-chunks at shard `t`'s
+                                // canonical position — the merged
+                                // gradient stays bit-identical to the
+                                // fault-free step.  Survivors already
+                                // cleared this step's transient window,
+                                // so the redo skips the draw.
+                                let survivors: Vec<usize> = (0..chunks.len())
+                                    .filter(|&u| {
+                                        let (ulo, uhi) = chunks[u];
+                                        ulo < uhi
+                                            && (u < t
+                                                || matches!(
+                                                    &slots[u],
+                                                    Slot::Ready(Ok(Some(_)))
+                                                ))
+                                    })
+                                    .collect();
+                                if survivors.is_empty() {
+                                    self.drain_slots(&mut slots, t + 1);
+                                    return Err(Error::Sim(format!(
+                                        "all {} shards failed; no survivors to \
+                                         re-shard onto: {err}",
+                                        chunks.len(),
+                                    )));
+                                }
+                                let sub =
+                                    ShardPlan::split(hi - lo, survivors.len().min(hi - lo))?;
+                                let mut rr = 0usize;
+                                for &(slo, shi) in sub.chunks() {
+                                    let eng_idx = survivors[rr % survivors.len()];
+                                    rr += 1;
+                                    let sd = self
+                                        .phase_a(&cx, lo + slo, lo + shi, eng_idx, 1)?
+                                        .expect("sub-chunks are non-empty");
+                                    if let Err(e) = self.fold_entry(
+                                        &cx,
+                                        &mut w,
+                                        t,
+                                        eng_idx,
+                                        lo + slo,
+                                        lo + shi,
+                                        sd,
+                                    ) {
+                                        return Err(self.fold_failed(
+                                            &mut slots,
+                                            t + 1,
+                                            session,
+                                            e,
+                                        ));
+                                    }
+                                }
+                                s.note_reshard(2 * cx.fwd_per_sample * (hi - lo) as u64);
+                                w.next = t + 1;
+                                continue;
+                            }
                         }
-                        s.note_reshard(chunk_macs(lo, hi));
-                        outs[t] = Some(redone);
+                    };
+                    if let Err(e) = self.fold_entry(&cx, &mut w, t, t, lo, hi, sd) {
+                        return Err(self.fold_failed(&mut slots, t + 1, session, e));
                     }
+                    w.next = t + 1;
+                }
+                Slot::Empty | Slot::Taken => {
+                    unreachable!("phase A barrier left slot {t} unfilled")
                 }
             }
         }
-        let outs: Vec<Vec<SampleGrad>> = outs
-            .into_iter()
-            .map(|o| o.expect("all shards recovered"))
-            .collect();
 
-        // ---- per-shard ledger counts (fwd + bwd) ----
-        let mut shard_macs = Vec::with_capacity(outs.len());
-        let mut shard_adds = Vec::with_capacity(outs.len());
-        let mut shard_stash = Vec::with_capacity(outs.len());
-        let (mut macs_fwd, mut macs_bwd) = (0u64, 0u64);
-        let (mut adds, mut adds_bwd, mut stored) = (0u64, 0u64, 0u64);
-        for out in &outs {
-            let (mut m, mut a, mut st) = (0u64, 0u64, 0u64);
-            for sg in out {
-                m += sg.macs_fwd + sg.macs_bwd;
-                a += sg.adds;
-                st += sg.stored_activations;
-                macs_fwd += sg.macs_fwd;
-                macs_bwd += sg.macs_bwd;
-                adds += sg.adds;
-                adds_bwd += sg.adds_bwd;
-                stored += sg.stored_activations;
-            }
-            shard_macs.push(m);
-            shard_adds.push(a);
-            shard_stash.push(st);
-        }
-
-        // ---- canonical merge: global sample order ----
-        let mut terms = Vec::with_capacity(batch);
-        let mut sample_grads: Vec<GradSet> = Vec::with_capacity(batch);
-        for out in outs {
-            for sg in out {
-                terms.push(sg.loss_term);
-                sample_grads.push(sg.grads);
-            }
-        }
+        // ---- loss: the canonical f64 fold in global sample order ----
+        debug_assert_eq!(w.terms.len(), batch);
         let mut acc = 0f64;
-        for t in &terms {
-            acc += *t;
+        for term in &w.terms {
+            acc += *term;
         }
         let loss = (acc / batch as f64) as f32;
         if !loss.is_finite() {
             return Err(Error::Sim(format!("cluster loss diverged: {loss}")));
         }
-        let (merged, merge_adds) = reduce_grads(&sample_grads)?;
 
-        // Microgradient buffers came from the shard engines' arenas;
-        // hand each sample's set back to the chip that computed it so
-        // the next step's takes hit the free lists.
-        let mut give_back = sample_grads.into_iter();
-        for (t, &(lo, hi)) in chunks.iter().enumerate() {
-            for _ in lo..hi {
-                let gs = give_back.next().expect("sample count matches plan");
-                self.shard_engines[t].recycle_grads(gs);
-            }
-        }
-
-        // ---- one global in-array SGD update ----
+        // ---- one global in-array SGD update on the final carry ----
+        let merged = w.carry;
         let macs_wu = self.engine.apply_sgd(params, &merged, lr);
 
         // ---- price the counted schedule (same constructor as the
@@ -570,9 +797,10 @@ impl ClusterEngine {
         };
         let counts = ClusterCounts {
             batch,
-            shard_macs,
-            shard_adds,
-            shard_stash,
+            shard_samples: plan.chunk_sizes(),
+            shard_macs: w.shard_macs,
+            shard_adds: w.shard_adds,
+            shard_stash: w.shard_stash,
             params: macs_wu,
             fault_checksum_adds: fault_delta.checksum_adds,
             fault_retry_macs: fault_delta.retry_macs,
@@ -582,13 +810,12 @@ impl ClusterEngine {
 
         Ok(ClusterStepResult {
             loss,
-            macs_fwd,
-            macs_bwd,
+            macs_fwd: w.macs_fwd,
+            macs_bwd: w.macs_bwd,
             macs_wu,
-            adds,
-            adds_bwd,
-            stored_activations: stored,
-            merge_adds,
+            adds: w.adds,
+            adds_bwd: w.adds_bwd,
+            stored_activations: w.stored,
             waves: cost.total_waves(),
             latency_s: cost.latency_s(),
             energy_j: cost.energy_j(),
@@ -635,6 +862,14 @@ mod tests {
         )
     }
 
+    fn param_bits(p: &NetworkParams) -> Vec<u32> {
+        p.layers
+            .iter()
+            .flatten()
+            .flat_map(|lp| lp.w.iter().chain(&lp.b).map(|v| v.to_bits()))
+            .collect()
+    }
+
     #[test]
     fn shards_1_delegates_to_train_engine() {
         let net = mlp();
@@ -663,6 +898,9 @@ mod tests {
 
     #[test]
     fn mlp_sharding_is_bit_invariant_and_matches_engine() {
+        // Since PR 7 the seeded chain makes every shard count — 1
+        // included — bit-identical: the reference here is the shards=1
+        // delegation, i.e. the single-chip batched engine itself.
         let net = mlp();
         let batch = 6;
         let (x, labels) = batch_data(&net, batch, 0x7E5);
@@ -672,12 +910,7 @@ mod tests {
             let mut p = NetworkParams::init(&net, 11);
             let r = eng.train_step(&net, &mut p, &x, &labels, batch, 0.1).unwrap();
             assert!(r.loss.is_finite());
-            let bits: Vec<u32> = p
-                .layers
-                .iter()
-                .flatten()
-                .flat_map(|lp| lp.w.iter().chain(&lp.b).map(|v| v.to_bits()))
-                .collect();
+            let bits = param_bits(&p);
             match &reference {
                 None => reference = Some(bits),
                 Some(want) => assert_eq!(&bits, want, "shards {shards} diverged"),
@@ -716,15 +949,33 @@ mod tests {
     }
 
     #[test]
+    fn oversharded_cluster_no_ops_idle_chips() {
+        // More chips than samples is legal since PR 7: the empty-chunk
+        // chips contribute zero waves, zero MACs, and pass the chain
+        // through — the result is bit-identical to every other shard
+        // count.
+        let net = mlp();
+        let batch = 4;
+        let (x, labels) = batch_data(&net, batch, 1);
+        let mut p1 = NetworkParams::init(&net, 2);
+        let mut p8 = p1.clone();
+        let r1 = cluster(1).train_step(&net, &mut p1, &x, &labels, batch, 0.1).unwrap();
+        let r8 = cluster(8).train_step(&net, &mut p8, &x, &labels, batch, 0.1).unwrap();
+        assert_eq!(r1.loss.to_bits(), r8.loss.to_bits());
+        assert_eq!(param_bits(&p1), param_bits(&p8));
+        assert_eq!(r8.cost.shards, 8);
+        assert_eq!(r8.cost.shard_waves.len(), 8);
+        assert_eq!(&r8.cost.shard_waves[4..], &[0, 0, 0, 0], "idle chips priced");
+        assert_eq!(r8.total_macs(), r1.total_macs());
+    }
+
+    #[test]
     fn error_paths_surface() {
         let net = mlp();
         let (x, labels) = batch_data(&net, 4, 1);
-        // more shards than samples
-        let eng = cluster(8);
-        let mut p = NetworkParams::init(&net, 2);
-        assert!(eng.train_step(&net, &mut p, &x, &labels, 4, 0.1).is_err());
-        // bad labels propagate out of the shard workers
         let eng = cluster(2);
+        let mut p = NetworkParams::init(&net, 2);
+        // bad labels propagate out of the shard workers
         assert!(eng
             .train_step(&net, &mut p, &x, &[0, 1, 9, 0], 4, 0.1)
             .is_err());
@@ -732,17 +983,22 @@ mod tests {
         assert!(eng
             .train_step(&net, &mut p, &x[..x.len() - 1], &labels, 4, 0.1)
             .is_err());
+        // a good step still goes through on the same engine afterwards
+        assert!(eng.train_step(&net, &mut p, &x, &labels, 4, 0.1).is_ok());
     }
 
     #[test]
-    fn merge_adds_counts_the_canonical_fold() {
+    fn batched_fold_has_no_host_merge() {
+        // The PR 7 chain fold does the wgrad contraction *inside* the
+        // per-shard GEMMs: backward MACs are exactly 2× forward (dgrad
+        // + wgrad) with no per-sample host fold on top, and the update
+        // touches each parameter once.
         let net = mlp();
         let batch = 4;
         let (x, labels) = batch_data(&net, batch, 0xF0);
         let mut p = NetworkParams::init(&net, 5);
         let r = cluster(2).train_step(&net, &mut p, &x, &labels, batch, 0.1).unwrap();
-        // batch folds × every parameter element
-        assert_eq!(r.merge_adds, batch as u64 * net.param_count() as u64);
+        assert_eq!(r.macs_bwd, 2 * r.macs_fwd);
         assert_eq!(r.macs_wu, net.param_count() as u64);
         assert_eq!(r.cost.shards, 2);
     }

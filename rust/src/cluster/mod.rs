@@ -4,18 +4,22 @@
 //!
 //! The paper evaluates a single chip; this module scales the functional
 //! training loop out the way the digital in-array fp datapath uniquely
-//! permits: **bit-reproducibly**.  Each chip runs the shared
-//! [`crate::arch::TrainEngine`] lowering on a contiguous chunk of the
-//! batch ([`ShardPlan`]), gradients merge through an order-preserving
-//! `pim_add` chain ([`reduce_grads`]), and one in-array SGD update
-//! finishes the step.  The ledger decomposes exactly into per-shard
-//! compute + interconnect + reduce + update terms ([`ClusterCost`]),
-//! cross-checked against the analytic [`cluster_step_cost`] the same
-//! way `TrainEngine`'s ledger is pinned to `training_work`.
+//! permits: **bit-reproducibly**.  Each chip runs one batched
+//! [`crate::arch::TrainEngine`] backward over a contiguous chunk of the
+//! batch ([`ShardPlan`]; chunks may be empty when `shards > batch`),
+//! gradients merge by *seeded chain continuation* — each shard's wgrad
+//! accumulators start from the merged partial of the shards before it,
+//! reproducing the order-preserving `pim_add` chain ([`reduce_grads`]
+//! is its specification) bit for bit at every shard count — and one
+//! in-array SGD update finishes the step.  The ledger decomposes
+//! exactly into per-shard compute + interconnect + reduce + update
+//! terms ([`ClusterCost`]), cross-checked against the analytic
+//! [`cluster_step_cost`] the same way `TrainEngine`'s ledger is pinned
+//! to `training_work`.
 //!
 //! Layering: [`plan`] (topology + batch split), [`reduce`] (the value
 //! semantics of the merge), [`cost`] (the priced schedule), [`engine`]
-//! (the scoped-thread execution engine gluing them to `TrainEngine`).
+//! (the phased execution engine gluing them to `TrainEngine`).
 
 pub mod cost;
 pub mod engine;

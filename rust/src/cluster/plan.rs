@@ -40,18 +40,17 @@ pub struct ShardPlan {
 impl ShardPlan {
     /// Split `batch` samples across `shards` chips as evenly as
     /// possible (the first `batch % shards` chips take one extra
-    /// sample).  Every chip must receive at least one sample.
+    /// sample).  With `shards > batch`, the trailing chips get
+    /// **empty** (`lo == hi`) chunks: a zero-sample shard no-ops at
+    /// zero priced cost and passes the gradient chain through
+    /// untouched, so oversharded sweeps (64 chips at batch 32) are
+    /// legal since PR 7.
     pub fn split(batch: usize, shards: usize) -> Result<ShardPlan> {
         if shards == 0 {
             return Err(Error::Sim("cluster needs at least one shard".into()));
         }
         if batch == 0 {
             return Err(Error::Sim("cannot shard an empty batch".into()));
-        }
-        if shards > batch {
-            return Err(Error::Sim(format!(
-                "{shards} shards cannot each take a sample of a batch of {batch}"
-            )));
         }
         let base = batch / shards;
         let rem = batch % shards;
@@ -88,6 +87,13 @@ impl ShardPlan {
     pub fn chunk_sizes(&self) -> Vec<usize> {
         self.chunks.iter().map(|&(lo, hi)| hi - lo).collect()
     }
+
+    /// Chips that actually hold samples — the count the reduce tree and
+    /// interconnect pricing are built over (empty shards neither send
+    /// nor receive gradient traffic).
+    pub fn active_shards(&self) -> usize {
+        self.chunks.iter().filter(|&&(lo, hi)| hi > lo).count()
+    }
 }
 
 #[cfg(test)]
@@ -115,14 +121,35 @@ mod tests {
             expect = hi;
         }
         assert_eq!(expect, 10);
+        assert_eq!(p.active_shards(), 3);
     }
 
     #[test]
     fn degenerate_splits_error() {
         assert!(ShardPlan::split(8, 0).is_err());
         assert!(ShardPlan::split(0, 1).is_err());
-        assert!(ShardPlan::split(4, 5).is_err());
         assert!(ShardPlan::split(4, 4).is_ok());
+    }
+
+    #[test]
+    fn oversharded_split_yields_empty_tail_chunks() {
+        let p = ShardPlan::split(4, 7).unwrap();
+        assert_eq!(p.shards(), 7);
+        assert_eq!(p.chunk_sizes(), vec![1, 1, 1, 1, 0, 0, 0]);
+        assert_eq!(p.active_shards(), 4);
+        assert_eq!(p.max_chunk(), 1);
+        // Empty chunks still sit at their canonical position: the cover
+        // of [0, batch) stays contiguous and ordered.
+        let mut expect = 0;
+        for &(lo, hi) in p.chunks() {
+            assert_eq!(lo, expect);
+            expect = hi;
+        }
+        assert_eq!(expect, 4);
+        // 64 chips at the CLI train batch of 32: the PR 7 sweep shape.
+        let p = ShardPlan::split(32, 64).unwrap();
+        assert_eq!(p.active_shards(), 32);
+        assert_eq!(p.chunk_sizes().iter().sum::<usize>(), 32);
     }
 
     #[test]

@@ -8,11 +8,16 @@
 //! the order: [`reduce_grads`] folds its inputs with [`pim_add_f32`] in
 //! the exact order given, starting from +0 — a left-leaning reduce
 //! tree, the only tree shape whose bits reproduce the sequential
-//! accumulation chain a single chip would run.  The cluster engine
-//! feeds it per-sample microgradients in global sample order, which is
-//! why the merged gradient is identical for every shard count (and, for
-//! dense layers, identical to the single-chip batched GEMM chain — the
-//! wgrad GEMM's contraction *is* this chain).
+//! accumulation chain a single chip would run.
+//!
+//! Since PR 7 this function is the *specification* of the merge, not
+//! the cluster's execution path: [`crate::cluster::ClusterEngine`]
+//! realizes the same chain **inside** the per-shard wgrad GEMMs by
+//! seeding each shard's accumulators with the merged partial of the
+//! shards before it (`GemmEngine::gemm_tn_seeded` + the seeded db
+//! fold), so no host-side per-sample fold runs at all.  The property
+//! test `cluster::prop_allreduce_equals_host_chain` keeps the two
+//! definitions pinned to each other.
 //!
 //! Pricing is separate: [`crate::cluster::ClusterCost`] charges the
 //! physical schedule (one partial per chip, tree-merged in

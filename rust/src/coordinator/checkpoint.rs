@@ -49,10 +49,13 @@ impl Checkpoint {
     }
 
     /// Atomic save: validate first, write the bytes to `<path>.tmp`,
-    /// fsync, then rename over the destination — a crash, ENOSPC or
-    /// validation error mid-save can never truncate or corrupt an
-    /// existing checkpoint (the old in-place `File::create` did exactly
-    /// that).
+    /// fsync, rename over the destination, then fsync the parent
+    /// directory — a crash, ENOSPC or validation error mid-save can
+    /// never truncate or corrupt an existing checkpoint (the old
+    /// in-place `File::create` did exactly that), and the rename itself
+    /// is durable: without the directory fsync a power cut after
+    /// `rename` can leave the *directory entry* pointing at the old
+    /// inode even though the data blocks were synced.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
         let path = path.as_ref();
         // Refuse malformed checkpoints before touching the filesystem.
@@ -87,6 +90,17 @@ impl Checkpoint {
             w.flush()?;
             w.get_ref().sync_all()?;
             std::fs::rename(&tmp, path)?;
+            // Durable rename: fsync the parent directory so the new
+            // entry itself survives a crash (POSIX renames are atomic
+            // in ordering but not persistence).  Non-POSIX targets may
+            // refuse to open a directory for sync — degrade gracefully
+            // there rather than fail a checkpoint that is already
+            // atomically in place.
+            if let Some(parent) = path.parent().filter(|p| !p.as_os_str().is_empty()) {
+                if let Ok(dir) = std::fs::File::open(parent) {
+                    let _ = dir.sync_all();
+                }
+            }
             Ok(())
         })();
         if result.is_err() {
@@ -227,6 +241,41 @@ mod tests {
         assert!(bad.save(&path).is_err());
         assert_eq!(Checkpoint::load(&path).unwrap(), good);
         assert!(!tmp("intact.ckpt.tmp").exists(), "no temp debris");
+    }
+
+    #[test]
+    fn every_truncation_point_is_detected() {
+        // Stronger than the half-file check: a crash can cut the byte
+        // stream anywhere, and every strict prefix must refuse to load
+        // (the format implies its exact length, so there is no prefix
+        // that parses as a complete checkpoint).
+        let c = sample();
+        let path = tmp("trunc_sweep.ckpt");
+        c.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        for cut in 0..bytes.len() {
+            std::fs::write(&path, &bytes[..cut]).unwrap();
+            assert!(
+                Checkpoint::load(&path).is_err(),
+                "prefix of {cut}/{} bytes parsed as a checkpoint",
+                bytes.len()
+            );
+        }
+    }
+
+    #[test]
+    fn save_into_fresh_directory_is_durable_and_loads() {
+        // Exercises the parent-directory fsync after rename (a fresh
+        // subdirectory's entry is exactly what a crash would lose).
+        let dir = tmp("fresh_subdir");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("nested.ckpt");
+        let c = sample();
+        c.save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap(), c);
+        let mut tmp_name = path.as_os_str().to_owned();
+        tmp_name.push(".tmp");
+        assert!(!std::path::PathBuf::from(tmp_name).exists(), "no temp debris");
     }
 
     #[test]

@@ -87,11 +87,16 @@ fn cmd_train(args: &Args) -> mram_pim::Result<()> {
         threads: args.usize_or("threads", 4)?,
         shards: args.usize_or("shards", 1)?.max(1),
     };
+    // `--shards` beyond the train batch is legal since PR 7: the
+    // trailing chips get empty chunks, no-op at zero priced cost, and
+    // pass the gradient chain through untouched.
     if cfg.shards > TRAIN_BATCH {
-        return Err(mram_pim::Error::Config(format!(
-            "--shards {} exceeds the train batch of {TRAIN_BATCH}",
-            cfg.shards
-        )));
+        println!(
+            "note: --shards {} exceeds the train batch of {TRAIN_BATCH}; \
+             {} chip(s) will idle at zero priced cost",
+            cfg.shards,
+            cfg.shards - TRAIN_BATCH
+        );
     }
 
     // The default offline build loads the functional PIM runtime (real
@@ -356,7 +361,7 @@ fn cmd_sweep(args: &Args) -> mram_pim::Result<()> {
                 Accelerator::new(AccelKind::Proposed, FloatFormat::FP32, FUNCTIONAL_LANES);
             let model = FpCostModel::proposed_fp32();
             println!("shard-scaling sweep (LeNet-5 @ batch 32, {FUNCTIONAL_LANES} lanes):");
-            for shards in [1usize, 2, 4, 8] {
+            for shards in [1usize, 2, 4, 8, 16, 32, 64] {
                 let c = cluster_step_cost(&net, TRAIN_BATCH, shards, FUNCTIONAL_LANES, &model)?;
                 let pipe = PipelineSchedule::build_sharded(&accel, &net, TRAIN_BATCH, 100, shards);
                 println!(

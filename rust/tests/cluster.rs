@@ -1,11 +1,13 @@
-//! Cross-shard determinism suite (ISSUE 3): the sharded multi-chip
-//! cluster must be bit-reproducible — shards=1 is the PR 2 `TrainEngine`
-//! path exactly (anti-drift), shard counts ≥ 2 are bit-identical to
-//! each other (and, for dense MLPs, to the single chip too), the priced
-//! tree all-reduce equals the host `pim_add` chain element for element,
-//! the cluster ledger decomposes into per-shard + interconnect + reduce
-//! + update terms with nothing unaccounted, and a checkpoint round trip
-//! resumes bit-identically.  Everything runs in tier-1 `cargo test -q`.
+//! Cross-shard determinism suite (ISSUE 3, hardened in PR 7): the
+//! sharded multi-chip cluster must be bit-reproducible — *every* shard
+//! count, dense or conv, oversharded or not, is bit-identical to the
+//! single-chip PR 2 `TrainEngine` path (seeded chain continuation makes
+//! the per-shard batched wgrads *be* the global accumulation chain),
+//! the priced tree all-reduce equals the host `pim_add` chain element
+//! for element, the cluster ledger decomposes into per-shard +
+//! interconnect + reduce + update terms with nothing unaccounted, and a
+//! checkpoint round trip resumes bit-identically.  Everything runs in
+//! tier-1 `cargo test -q`.
 
 use mram_pim::arch::{LayerParams, NetworkParams, TrainEngine, TrainTotals};
 use mram_pim::cluster::{
@@ -169,24 +171,21 @@ fn mlp_shards_1_2_4_bit_identical() {
 }
 
 /// Cross-shard determinism with conv layers: every shard count ≥ 2
-/// produces bit-identical weights and losses (the canonical per-sample
-/// merge order), equal MAC totals, and thread count never matters.
+/// produces weights and losses bit-identical to the single-chip
+/// `TrainEngine` (conv wgrad rows are sample-major, so sample chunking
+/// is a pause point of the same chain), equal MAC totals, and thread
+/// count never matters.
 #[test]
 fn conv_shards_2_4_8_bit_identical() {
     let net = convnet();
     let batch = 8;
     let batches = step_batches(&net, batch, 3, 0xC0DE);
-    let mut reference: Option<(Vec<u32>, Vec<u32>)> = None;
+    let (pe, le, _) = run_engine(&net, 3, &batches, batch, 0xBEEF);
+    let want = param_bits(&pe);
     for (shards, threads) in [(2usize, 1usize), (2, 4), (4, 2), (8, 1)] {
         let (p, l, t) = run_cluster(&net, shards, threads, &batches, batch, 0xBEEF);
-        let bits = param_bits(&p);
-        match &reference {
-            None => reference = Some((bits, l)),
-            Some((wb, wl)) => {
-                assert_eq!(&bits, wb, "shards {shards} threads {threads}: weights");
-                assert_eq!(&l, wl, "shards {shards} threads {threads}: losses");
-            }
-        }
+        assert_eq!(param_bits(&p), want, "shards {shards} threads {threads}: weights");
+        assert_eq!(l, le, "shards {shards} threads {threads}: losses");
         assert_eq!(t.total_macs(), 3 * net.training_work(batch).total_macs());
     }
 }
@@ -327,11 +326,78 @@ fn cluster_ledger_decomposes_and_matches_analytic() {
 #[test]
 fn shard_plan_respects_batch_bounds() {
     assert!(ShardPlan::split(32, 8).is_ok());
-    assert!(ShardPlan::split(4, 8).is_err());
     assert!(ShardPlan::split(8, 0).is_err());
     let plan = ShardPlan::split(7, 3).unwrap();
     assert_eq!(plan.chunk_sizes(), vec![3, 2, 2]);
     assert_eq!(plan.max_chunk(), 3);
+    // Oversharding is legal since PR 7: the trailing chips get empty
+    // chunks and no-op at zero priced cost.
+    let over = ShardPlan::split(4, 8).unwrap();
+    assert_eq!(over.chunk_sizes(), vec![1, 1, 1, 1, 0, 0, 0, 0]);
+    assert_eq!(over.active_shards(), 4);
+    assert_eq!(over.max_chunk(), 1);
+}
+
+/// PR 7 tentpole property (`cluster::prop_shard_chain_matches_engine`,
+/// referenced from the engine and the Python pre-validation
+/// `python/tests/validate_shard_reduce.py`): per-shard batched gradient
+/// accumulation with seeded chain continuation is bit-identical to the
+/// single-chip `TrainEngine` at *every* shard count — loss, merged
+/// gradients, and post-SGD weights — across random dense/conv nets,
+/// batch sizes, shard counts {1, 2, 4, 8, 16, 32} (including
+/// oversharded splits), and thread counts.
+#[test]
+fn prop_shard_chain_matches_engine() {
+    check(
+        "sharded batched wgrad chain == single-chip engine, bit for bit",
+        0x5EED_C4A1,
+        24,
+        |r: &mut Rng| {
+            let net = if r.below(2) == 0 { mlp() } else { convnet() };
+            let batch = 1 + r.below(8) as usize;
+            let shards = [1usize, 2, 4, 8, 16, 32][r.below(6) as usize];
+            let threads = 1 + r.below(4) as usize;
+            let seed = r.below(1 << 30);
+            let batches = step_batches(&net, batch, 1, seed ^ 0xDA7A);
+            (net, batch, shards, threads, seed, batches)
+        },
+        |(net, batch, shards, threads, seed, batches)| {
+            let (x, labels) = &batches[0];
+            let eng = TrainEngine::new(FpCostModel::proposed_fp32(), LANES, *threads);
+            let mut pe = NetworkParams::init(net, *seed);
+            let re = eng
+                .train_step(net, &mut pe, x, labels, *batch, 0.1)
+                .map_err(|e| format!("engine: {e}"))?;
+            let cl = ClusterEngine::new(
+                FpCostModel::proposed_fp32(),
+                LANES,
+                ClusterConfig::new(*shards, *threads),
+            );
+            let mut pc = NetworkParams::init(net, *seed);
+            let rc = cl
+                .train_step(net, &mut pc, x, labels, *batch, 0.1)
+                .map_err(|e| format!("cluster shards={shards}: {e}"))?;
+            if rc.loss.to_bits() != re.loss.to_bits() {
+                return Err(format!(
+                    "loss drift at shards={shards}: {} vs {}",
+                    rc.loss, re.loss
+                ));
+            }
+            let grad_bits = |g: &GradSet| -> Vec<u32> {
+                g.iter()
+                    .flatten()
+                    .flat_map(|lp| lp.w.iter().chain(&lp.b).map(|v| v.to_bits()))
+                    .collect()
+            };
+            if grad_bits(&rc.grads) != grad_bits(&re.grads) {
+                return Err(format!("merged gradients drift at shards={shards}"));
+            }
+            if param_bits(&pc) != param_bits(&pe) {
+                return Err(format!("weight drift at shards={shards}"));
+            }
+            Ok(())
+        },
+    );
 }
 
 /// Checkpoint round trip (coordinator/checkpoint): save → load →

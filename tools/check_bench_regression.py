@@ -11,10 +11,14 @@ the threads-4 ``gemm_wave`` engine, and the shards-4 ``cluster_scaling``
 step — must not regress more than ``--max-regress-pct`` (default 10,
 env ``BENCH_REGRESSION_PCT``) versus the committed baseline's
 ``mean_ns``.  All other shared entries are reported but informational.
-(``cluster_scaling`` gates shards=4, not shards=2: the shards=2 point
-is dominated by the per-sample micrograd lowering's fixed costs at only
-2-way chip parallelism — see EXPERIMENTS.md §PR 5 — and is reported
-informationally.)
+
+``cluster_scaling`` additionally gates shards=2 ≤ shards=1 *within the
+fresh run* (hardware-independent, like the ABFT overhead gate): PR 7
+replaced the per-sample micrograd lowering with one batched backward
+per shard, so splitting the batch across two chips must never cost
+wall-clock over one chip.  Before the fix shards=2 ran ~2.8× slower
+than shards=1 and was only reported informationally — that anomaly is
+gone, and this gate keeps it gone.
 
 Baselines are hardware-dependent: after intentional perf changes (or on
 new hardware) re-run the benches with ``-- --json`` and commit the
@@ -59,6 +63,13 @@ REVERSED_GATES = {
 # for shared-runner noise).
 FAULT_FREE_ENTRY = "lenet5 fault-free train step batch 32 (threads 4)"
 ZERO_RATE_ENTRY = "lenet5 abft-armed zero-rate train step batch 32 (threads 4)"
+
+# Cross-entry gate within the fresh cluster_scaling run: splitting the
+# batch across two chips must not cost wall-clock over one chip (the
+# PR 7 anomaly fix).  Env ``SHARD2_SLACK_PCT`` grants measurement slack
+# on noisy shared runners (default 5%).
+SHARDS_1_ENTRY = "lenet5 cluster step batch 32 shards 1"
+SHARDS_2_ENTRY = "lenet5 cluster step batch 32 shards 2"
 
 
 def load_committed(path):
@@ -159,6 +170,27 @@ def main():
             else:
                 failures.append(
                     f"{path}: fresh run lacks the fault-free/zero-rate entry pair"
+                )
+        # Shards=2 anomaly gate: compare the two fresh entries of the
+        # same run (hardware-independent, unlike the baselines).
+        if path == "BENCH_cluster_scaling.json" and fresh:
+            slack = float(os.environ.get("SHARD2_SLACK_PCT", "5"))
+            if SHARDS_1_ENTRY in fresh and SHARDS_2_ENTRY in fresh:
+                s1 = fresh[SHARDS_1_ENTRY]["mean_ns"]
+                s2 = fresh[SHARDS_2_ENTRY]["mean_ns"]
+                pct = (s2 - s1) / s1 * 100.0 if s1 else 0.0
+                print(
+                    f"[GATE] shards=2 vs shards=1 wall-clock: {pct:+.2f}% "
+                    f"(must be <= +{slack}%)"
+                )
+                if pct > slack:
+                    failures.append(
+                        f"shards=2 step is {pct:+.2f}% vs shards=1 "
+                        f"(limit +{slack}%; the PR 7 anomaly fix must hold)"
+                    )
+            else:
+                failures.append(
+                    f"{path}: fresh run lacks the shards=1/shards=2 entry pair"
                 )
 
     if failures:
