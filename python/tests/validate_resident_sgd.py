@@ -1,0 +1,297 @@
+"""Validation harness for the PR 8 resident decoded-weight panels.
+
+With the decoded u64 panel as the *resident* weight format, the SGD
+update and the weight-storage fault model must operate in the decoded
+domain directly — encode back to f32 only at checkpoint/eval/all-reduce
+boundaries.  This script ports the bit-exact PIM softfloat reference
+(rust/src/fpu/softfloat.rs) to Python and proves three things:
+
+1. ``pim_sgd_dec(wdec, lr, g)`` — the decoded-domain update
+   ``decode(add(encode(wdec), mul(lr, g) ^ SIGN))`` — is bit-identical
+   to the frozen f32 chain ``pim_sub_f32(w, pim_mul_f32(lr, g))`` on
+   every edge-grid triple and a large random sweep, and its result is
+   *canonical* (``decode(encode(d)) == d``), so the resident panel can
+   feed ``pim_mac_acc_dec`` forever without re-normalisation.
+
+2. The dec-native fault injectors ``frac_flip_dec``/``frac_force_dec``
+   (XOR / force a significand bit of the resident word, mirror kept via
+   ``pim_encode``) are bit-identical to the f32-path ``frac_flip``/
+   ``frac_force`` (which wrap the same bit op in decode/encode), for
+   every bit 0..=22 the fault model draws, on every pattern class —
+   and also preserve canonicality.
+
+3. ``pim_sub_dec(adec, bbits)`` — decoded-domain subtract used by the
+   update — matches ``pim_sub_f32`` on the full edge grid.
+
+Run: python3 python/tests/validate_resident_sgd.py
+(Repo convention: the authoring container has no Rust toolchain, so the
+numerics are pre-validated here; the Rust tests
+`fpu::softfloat::tests::sgd_dec_matches_f32_chain_on_triple_grid` and
+`sim::faults::tests::corrupt_weights_dec_matches_f32_path` re-check the
+same grids on every `cargo test`.)
+"""
+
+QNAN = 0x7FC00000
+INF = 0x7F800000
+EXP = 0x7F800000
+MIN_NORMAL_MANT = 0x00800000
+M32 = 0xFFFFFFFF
+SIGN = 0x80000000
+
+
+def fields(bits):
+    return (bits >> 31) & 1, (bits >> 23) & 0xFF, bits & 0x7FFFFF
+
+
+def mul_core_sig(sign, ea, ma, eb, mb):
+    p = ma * mb
+    top_set = (p >> 47) & 1
+    s = 23 + top_set
+    mant_preround = (p >> s) & 0xFFFFFF
+    guard = (p >> (s - 1)) & 1
+    sticky = (p & ((1 << (s - 1)) - 1)) != 0
+    round_up = guard == 1 and (sticky or (mant_preround & 1) == 1)
+    mant = mant_preround + (1 if round_up else 0)
+    e = ea + eb - 127 + top_set
+    e0 = e
+    if mant == 1 << 24:
+        mant >>= 1
+        e += 1
+    if e >= 255:
+        return sign | INF
+    if e <= 0:
+        if e0 == 0 and mant_preround == 0xFFFFFF:
+            return sign | MIN_NORMAL_MANT
+        return sign
+    return sign | (e << 23) | (mant & 0x7FFFFF)
+
+
+def pim_mul_bits(abits, bbits):
+    sa, ea, fa = fields(abits)
+    sb, eb, fb = fields(bbits)
+    a_nan = ea == 255 and fa != 0
+    b_nan = eb == 255 and fb != 0
+    a_inf = ea == 255 and fa == 0
+    b_inf = eb == 255 and fb == 0
+    a_zero = ea == 0
+    b_zero = eb == 0
+    sign = ((sa ^ sb) << 31) & M32
+    if a_nan or b_nan or (a_inf and b_zero) or (b_inf and a_zero):
+        return QNAN
+    if a_inf or b_inf:
+        return sign | INF
+    if a_zero or b_zero:
+        return sign
+    return mul_core_sig(sign, ea, fa | MIN_NORMAL_MANT, eb, fb | MIN_NORMAL_MANT)
+
+
+def pim_add_bits(abits, bbits):
+    sa, ea, fa = fields(abits)
+    sb, eb, fb = fields(bbits)
+    a_nan = ea == 255 and fa != 0
+    b_nan = eb == 255 and fb != 0
+    a_inf = ea == 255 and fa == 0
+    b_inf = eb == 255 and fb == 0
+    a_zero = ea == 0
+    b_zero = eb == 0
+    if a_nan or b_nan or (a_inf and b_inf and sa != sb):
+        return QNAN
+    if a_inf:
+        return abits
+    if b_inf:
+        return bbits
+    if a_zero and b_zero:
+        return ((sa & sb) << 31) & M32
+    if a_zero:
+        return bbits
+    if b_zero:
+        return abits
+
+    if (abits & 0x7FFFFFFF) >= (bbits & 0x7FFFFFFF):
+        xbits, ybits = abits, bbits
+    else:
+        xbits, ybits = bbits, abits
+    sx, ex, fx = fields(xbits)
+    _, ey, fy = fields(ybits)
+    mx = (fx | MIN_NORMAL_MANT) << 3
+    my = (fy | MIN_NORMAL_MANT) << 3
+    d = min(ex - ey, 27)
+    lost = my & ((1 << d) - 1)
+    my_al = (my >> d) | (1 if lost != 0 else 0)
+    subtract = sx != (ybits >> 31) & 1
+    total = (mx - my_al) if subtract else (mx + my_al)
+    if total == 0:
+        return 0
+    p = total.bit_length() - 1
+    if p == 27:
+        total_n, e0 = (total >> 1) | (total & 1), ex + 1
+    else:
+        total_n, e0 = total << (26 - p), ex - (26 - p)
+    kept_preround = total_n >> 3
+    rb = (total_n >> 2) & 1
+    st = (total_n & 3) != 0
+    round_up = rb == 1 and (st or (kept_preround & 1) == 1)
+    kept = kept_preround + (1 if round_up else 0)
+    e = e0
+    if kept == 1 << 24:
+        kept >>= 1
+        e += 1
+    sign = (sx << 31) & M32
+    if e >= 255:
+        return sign | INF
+    if e <= 0:
+        if e0 == 0 and kept_preround == 0xFFFFFF:
+            return sign | MIN_NORMAL_MANT
+        return sign
+    return sign | (e << 23) | (kept & 0x7FFFFF)
+
+
+def pim_decode(bits):
+    e = (bits >> 23) & 0xFF
+    f = bits & 0x7FFFFF
+    mant = (f | MIN_NORMAL_MANT) if 1 <= e <= 254 else f
+    return mant | (e << 24) | (((bits >> 31) & 1) << 32)
+
+
+def pim_encode(dec):
+    return ((((dec >> 32) & 1) << 31) | (((dec >> 24) & 0xFF) << 23) | (dec & 0x7FFFFF)) & M32
+
+
+def pim_sub_f32(abits, bbits):
+    """Frozen engine update primitive: a - b as add(a, -b)."""
+    return pim_add_bits(abits, bbits ^ SIGN)
+
+
+# ---- PR 8 decoded-domain primitives (mirrors of the new Rust) ----
+
+def pim_sub_dec(adec, bbits):
+    return pim_decode(pim_add_bits(pim_encode(adec), bbits ^ SIGN))
+
+
+def pim_sgd_dec(wdec, lrbits, gbits):
+    return pim_sub_dec(wdec, pim_mul_bits(lrbits, gbits))
+
+
+# ---- fault model: f32-path (frozen) vs dec-native (PR 8) ----
+
+def frac_flip(bits, bit):
+    return pim_encode(pim_decode(bits) ^ (1 << bit))
+
+
+def frac_force(bits, bit, one):
+    dec = pim_decode(bits)
+    mask = 1 << bit
+    dec = (dec | mask) if one else (dec & ~mask)
+    return pim_encode(dec)
+
+
+def frac_flip_dec(dec, bit):
+    return dec ^ (1 << bit)
+
+
+def frac_force_dec(dec, bit, one):
+    mask = 1 << bit
+    return (dec | mask) if one else (dec & ~mask)
+
+
+def edge_bit_patterns():
+    exps = [0, 1, 2, 127, 253, 254, 255]
+    mants = [0, 1, 0x400000, 0x7FFFFF]
+    out = []
+    for e in exps:
+        for m in mants:
+            for s in (0, 1):
+                out.append(((s << 31) | (e << 23) | m) & M32)
+    return out
+
+
+def canonical(dec):
+    return pim_decode(pim_encode(dec)) == dec
+
+
+def main():
+    grid = edge_bit_patterns()
+
+    # 1. decoded-domain SGD == frozen f32 chain, on the full triple grid
+    n = 0
+    for w in grid:
+        wdec = pim_decode(w)
+        assert canonical(wdec)
+        for lr in grid:
+            for g in grid:
+                got_dec = pim_sgd_dec(wdec, lr, g)
+                want = pim_sub_f32(w, pim_mul_bits(lr, g))
+                assert pim_encode(got_dec) == want, (
+                    f"sgd mismatch w={w:#010x} lr={lr:#010x} g={g:#010x}: "
+                    f"enc(dec)={pim_encode(got_dec):#010x} f32={want:#010x}"
+                )
+                assert canonical(got_dec), f"non-canonical sgd result {got_dec:#x}"
+                n += 1
+    print(f"sgd edge-grid triples OK: {n}")
+
+    # also pim_sub_dec alone on the pair grid
+    for a in grid:
+        adec = pim_decode(a)
+        for b in grid:
+            assert pim_encode(pim_sub_dec(adec, b)) == pim_sub_f32(a, b)
+    print(f"sub edge-grid pairs OK: {len(grid) ** 2}")
+
+    # 2. dec-native fault injectors == f32-path, all bits 0..=22, all classes
+    checked = 0
+    for w in grid:
+        dec = pim_decode(w)
+        for bit in range(23):
+            nf = frac_flip_dec(dec, bit)
+            assert pim_encode(nf) == frac_flip(w, bit), (
+                f"flip mismatch w={w:#010x} bit={bit}"
+            )
+            assert canonical(nf), f"non-canonical flip {nf:#x} (w={w:#010x} bit={bit})"
+            for one in (False, True):
+                ns = frac_force_dec(dec, bit, one)
+                assert pim_encode(ns) == frac_force(w, bit, one), (
+                    f"force mismatch w={w:#010x} bit={bit} one={one}"
+                )
+                assert canonical(ns)
+                checked += 3
+    print(f"fault-injector patterns OK: {checked}")
+
+    # 3. random sweep: SGD chain + chained updates stay canonical and in
+    #    lockstep with the f32 mirror across multiple steps (the resident
+    #    lifetime: decode once, update in place many times)
+    state = 0xC0FFEE5EED5EED01
+    def rnd():
+        nonlocal state
+        state ^= (state << 13) & 0xFFFFFFFFFFFFFFFF
+        state ^= state >> 7
+        state ^= (state << 17) & 0xFFFFFFFFFFFFFFFF
+        return state
+
+    for trial in range(50_000):
+        w = rnd() & M32
+        wdec = pim_decode(w)
+        # 4 chained updates interleaved with fault hits — the resident life
+        for step in range(4):
+            lr = rnd() & M32
+            g = rnd() & M32
+            if step % 2 == 0:
+                g &= 0x807FFFFF  # zero-class gradient half the time
+            wdec = pim_sgd_dec(wdec, lr, g)
+            w = pim_sub_f32(w, pim_mul_bits(lr, g))
+            assert pim_encode(wdec) == w, f"trial {trial} step {step} drifted"
+            assert canonical(wdec)
+            h = rnd()
+            bit = h % 23
+            if h & 1:
+                wdec = frac_flip_dec(wdec, bit)
+                w = frac_flip(w, bit)
+            else:
+                wdec = frac_force_dec(wdec, bit, (h >> 8) & 1 == 1)
+                w = frac_force(w, bit, (h >> 8) & 1 == 1)
+            assert pim_encode(wdec) == w, f"trial {trial} fault step {step} drifted"
+            assert canonical(wdec)
+    print("random chained resident updates OK: 50000 trials x 4 steps")
+    print("resident decoded-domain SGD + fault injection are bit-identical")
+
+
+if __name__ == "__main__":
+    main()

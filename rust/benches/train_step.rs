@@ -22,10 +22,16 @@
 //! (`TRAIN_STEP_MIN_SPEEDUP` overrides the floor for noisy runners; CI
 //! uses a relaxed value), a steady-state step in *either* pooled mode
 //! must perform **zero heap allocations** (counting global allocator;
-//! `TRAIN_STEP_ALLOC_TOLERANCE` overrides) and **zero thread spawns**
-//! (the pool's launch counter), the pooled and flat engines must
-//! produce bit-identical losses and updated weights, and the ledger
-//! must equal the analytic `training_work` exactly.
+//! `TRAIN_STEP_ALLOC_TOLERANCE` overrides), **zero thread spawns**
+//! (the pool's launch counter) and — since PR 8 — **zero weight-panel
+//! decode passes** (`arch::panel_decodes`; the decoded u64 panel is the
+//! *resident* weight format, rebuilt only when the f32 mirror changes
+//! under the engine, so a steady step re-decodes nothing), the pooled
+//! and flat engines must produce bit-identical losses and updated
+//! weights, and the ledger must equal the analytic `training_work`
+//! exactly.  The decode count is also emitted as a `metric:` JSON entry
+//! with an exact baseline of 0, so CI's bench-regression gate fails if
+//! a future change quietly reintroduces per-step decoding.
 //!
 //! Also reports the forward-only pass for the fwd:bwd:update split that
 //! EXPERIMENTS.md compares against Fig. 6.
@@ -36,8 +42,8 @@
 //! baseline).
 
 use mram_pim::arch::pool::worker_launches;
-use mram_pim::arch::{ExecMode, NetworkParams, TrainEngine};
-use mram_pim::bench::{bench, emit, heap_allocations, CountingAllocator};
+use mram_pim::arch::{panel_decodes, ExecMode, NetworkParams, TrainEngine};
+use mram_pim::bench::{bench, emit, heap_allocations, BenchResult, CountingAllocator};
 use mram_pim::data::Dataset;
 use mram_pim::fpu::FpCostModel;
 use mram_pim::model::Network;
@@ -53,15 +59,18 @@ fn env_f64(name: &str, default: f64) -> f64 {
         .unwrap_or(default)
 }
 
-/// Warm the engine, then measure allocations + spawns of one steady
-/// step; returns (allocs, spawns, loss).
+/// Warm the engine, then measure allocations + spawns + weight-panel
+/// decode passes of one steady step; returns (allocs, spawns, decodes,
+/// loss).  The decode counter is thread-local to this (dispatching)
+/// thread, which is exactly where both resident rebuilds and transient
+/// per-call panel passes are accounted.
 fn steady_audit(
     eng: &TrainEngine,
     net: &Network,
     images: &[f32],
     labels: &[i32],
     batch: usize,
-) -> (u64, u64, f32) {
+) -> (u64, u64, u64, f32) {
     let mut p = NetworkParams::init(net, 7);
     for _ in 0..2 {
         let r = eng
@@ -71,6 +80,7 @@ fn steady_audit(
     }
     let spawns0 = worker_launches();
     let allocs0 = heap_allocations();
+    let decodes0 = panel_decodes();
     let r = eng
         .train_step(net, &mut p, images, labels, batch, 0.05)
         .expect("steady step");
@@ -79,6 +89,7 @@ fn steady_audit(
     (
         heap_allocations() - allocs0,
         worker_launches() - spawns0,
+        panel_decodes() - decodes0,
         loss,
     )
 }
@@ -187,9 +198,9 @@ fn main() {
     // ---- steady-state allocation + spawn audit: the blocked engine
     //      and the flat floor must both be clean, so the speedup below
     //      is a kernel comparison, not an allocator artifact ----
-    let (pooled_allocs, pooled_spawns, loss_pooled) =
+    let (pooled_allocs, pooled_spawns, pooled_decodes, loss_pooled) =
         steady_audit(&pooled4, &net, &images, &labels, batch);
-    let (flat_allocs, flat_spawns, loss_flat) =
+    let (flat_allocs, flat_spawns, flat_decodes, loss_flat) =
         steady_audit(&flat4, &net, &images, &labels, batch);
     assert_eq!(
         loss_pooled.to_bits(),
@@ -236,8 +247,9 @@ fn main() {
         r4.mean_ns / r_fwd.mean_ns
     );
     println!(
-        "steady-state audit: pooled {pooled_allocs} allocs / {pooled_spawns} spawns, \
-         flat floor {flat_allocs} allocs / {flat_spawns} spawns per step; \
+        "steady-state audit: pooled {pooled_allocs} allocs / {pooled_spawns} spawns / \
+         {pooled_decodes} panel decodes, \
+         flat floor {flat_allocs} allocs / {flat_spawns} spawns / {flat_decodes} decodes per step; \
          scoped baseline spawns {scoped_spawns:.0} threads/step"
     );
     println!(
@@ -250,6 +262,18 @@ fn main() {
     results.push(r4);
     results.push(rf);
     results.push(rs);
+    // PR 8 resident-panel counter, emitted as an exact `metric:` entry
+    // (value in `mean_ns`, baseline 0.0): the regression gate treats any
+    // fresh value above the committed 0 as a hard failure.
+    let d = pooled_decodes as f64;
+    results.push(BenchResult {
+        name: "metric: decodes per step (threads 4, pooled)".into(),
+        iters: 1,
+        mean_ns: d,
+        p50_ns: d,
+        p99_ns: d,
+        min_ns: d,
+    });
     emit("train_step", &results);
 
     // ---- acceptance gates ----
@@ -272,6 +296,13 @@ fn main() {
         assert_eq!(
             spawns, 0,
             "acceptance: steady-state {who} train step must not spawn threads"
+        );
+    }
+    for (who, decodes) in [("pooled", pooled_decodes), ("flat floor", flat_decodes)] {
+        assert_eq!(
+            decodes, 0,
+            "acceptance: steady-state {who} train step must not re-decode weight \
+             panels (resident-panel contract; measured {decodes} bulk decode passes)"
         );
     }
     println!("train_step OK");

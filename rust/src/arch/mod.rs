@@ -16,7 +16,8 @@ pub mod train;
 
 pub use accel::{Accelerator, AccelKind, RunCost};
 pub use gemm::{
-    im2col, pim_gemm, ExecMode, ForwardResult, GemmEngine, GemmResult, LayerParams, NetworkParams,
+    im2col, panel_decodes, pim_gemm, ExecMode, ForwardResult, GemmEngine, GemmResult, LayerParams,
+    NetworkParams,
 };
 pub use pool::{worker_launches, WorkerPool};
 pub use scratch::Arena;

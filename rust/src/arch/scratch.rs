@@ -55,6 +55,17 @@ pub struct Arena {
     /// Free list for the `u64` decoded-operand panels the blocked GEMM
     /// kernels build per call ([`crate::fpu::softfloat::pim_decode`]).
     pools_u64: Mutex<HashMap<usize, Vec<Vec<u64>>>>,
+    /// Debug-build ownership ledger for the `u64` pool: the base
+    /// pointer of every buffer currently *out* (handed to a caller by
+    /// [`Arena::take_u64`], not yet returned).  `take_u64` buffers are
+    /// deliberately not re-zeroed, so a buffer returned twice — or a
+    /// foreign buffer (e.g. a **resident weight panel**, which the
+    /// arena must never own) slipped into [`Arena::give_u64`] — would
+    /// be handed back out while its bits are still live somewhere
+    /// else.  The ledger turns both into an immediate panic in debug
+    /// builds; release builds carry no field and pay nothing.
+    #[cfg(debug_assertions)]
+    outstanding_u64: Mutex<std::collections::HashSet<usize>>,
 }
 
 impl Arena {
@@ -64,6 +75,8 @@ impl Arena {
             enabled: true,
             pools: Mutex::new(HashMap::new()),
             pools_u64: Mutex::new(HashMap::new()),
+            #[cfg(debug_assertions)]
+            outstanding_u64: Mutex::new(std::collections::HashSet::new()),
         }
     }
 
@@ -75,6 +88,8 @@ impl Arena {
             enabled: false,
             pools: Mutex::new(HashMap::new()),
             pools_u64: Mutex::new(HashMap::new()),
+            #[cfg(debug_assertions)]
+            outstanding_u64: Mutex::new(std::collections::HashSet::new()),
         }
     }
 
@@ -131,27 +146,47 @@ impl Arena {
         if len == 0 {
             return Vec::new();
         }
-        if self.enabled {
-            let recycled = self
-                .pools_u64
+        let recycled = if self.enabled {
+            self.pools_u64
                 .lock()
                 .expect("arena lock poisoned")
                 .get_mut(&len)
-                .and_then(Vec::pop);
-            if let Some(v) = recycled {
-                debug_assert_eq!(v.len(), len);
-                return v;
-            }
+                .and_then(Vec::pop)
+        } else {
+            None
+        };
+        let v = recycled.unwrap_or_else(|| vec![0u64; len]);
+        debug_assert_eq!(v.len(), len);
+        #[cfg(debug_assertions)]
+        if self.enabled {
+            self.outstanding_u64
+                .lock()
+                .expect("arena guard poisoned")
+                .insert(v.as_ptr() as usize);
         }
-        vec![0u64; len]
+        v
     }
 
     /// Return a decoded-operand buffer to the free list (dropped when
-    /// the arena is disabled or the buffer is empty).
+    /// the arena is disabled or the buffer is empty).  Debug builds
+    /// verify the buffer is one this arena handed out and still
+    /// considers outstanding — a double give, or a foreign/resident
+    /// buffer, panics instead of parking bits that are still live
+    /// elsewhere (the un-zeroed `take_u64` would alias them).
     pub fn give_u64(&self, v: Vec<u64>) {
         if !self.enabled || v.is_empty() {
             return;
         }
+        #[cfg(debug_assertions)]
+        assert!(
+            self.outstanding_u64
+                .lock()
+                .expect("arena guard poisoned")
+                .remove(&(v.as_ptr() as usize)),
+            "give_u64 of a u64 buffer that is not outstanding (double give, or a \
+             foreign/resident-panel buffer): recycling it would alias live data \
+             on the next un-zeroed take_u64"
+        );
         self.pools_u64
             .lock()
             .expect("arena lock poisoned")
@@ -279,5 +314,46 @@ mod tests {
         assert_eq!(v, vec![0u64; 4]);
         a.give_u64(v);
         assert_eq!(a.free_buffers(), 0);
+    }
+
+    #[test]
+    fn u64_ownership_guard_allows_normal_recycling() {
+        // Interleaved take/give cycles across sizes are exactly the
+        // pattern the kernels run; the debug ledger must stay silent.
+        let a = Arena::pooled();
+        let v6 = a.take_u64(6);
+        let v9 = a.take_u64(9);
+        a.give_u64(v6);
+        let v6b = a.take_u64(6); // recycled, outstanding again
+        a.give_u64(v9);
+        a.give_u64(v6b);
+        assert_eq!(a.free_buffers(), 2);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "not outstanding")]
+    fn give_u64_of_foreign_buffer_panics_in_debug() {
+        // A buffer the arena never handed out — the resident-panel
+        // alias bug class: parking it would hand its live bits to the
+        // next un-zeroed take_u64.
+        let a = Arena::pooled();
+        a.give_u64(vec![7u64; 4]);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "not outstanding")]
+    fn double_give_u64_panics_in_debug() {
+        // Giving a size-4 buffer twice without an intervening take:
+        // the second give's buffer is not outstanding any more (the
+        // ledger tracks the allocation, not the Vec handle).
+        let a = Arena::pooled();
+        let v = a.take_u64(4);
+        a.give_u64(v);
+        // Simulate the stale-handle double give with a fresh Vec that
+        // was never taken — the ledger treats both identically: the
+        // pointer is not outstanding, so parking it must panic.
+        a.give_u64(vec![0u64; 4]);
     }
 }

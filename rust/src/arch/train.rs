@@ -76,10 +76,10 @@ use std::sync::{Arc, Mutex};
 
 use crate::arch::gemm::{im2col_into, ActIn, ExecMode, GemmEngine, LayerParams, NetworkParams};
 use crate::arch::scratch::TrainScratch;
-use crate::fpu::softfloat::{pim_add_f32, pim_mul_f32, pim_sub_f32};
+use crate::fpu::softfloat::{pim_add_f32, pim_encode, pim_mul_f32, pim_sgd_dec, pim_sub_f32};
 use crate::fpu::FpCostModel;
 use crate::model::{Layer, Network};
-use crate::sim::faults::{corrupt_weights, FaultHook, FaultReport};
+use crate::sim::faults::{corrupt_weights, corrupt_weights_dec, FaultHook, FaultReport};
 use crate::{Error, Result};
 
 /// Ledger of one functional training step (fwd + bwd + update).
@@ -510,6 +510,29 @@ impl TrainEngine {
         self.faults.as_ref()
     }
 
+    /// Make every weight matrix resident in the decoded in-array
+    /// format: one parallel decode pass per layer whose panel is
+    /// missing or stale-shaped (first step, or after a checkpoint
+    /// restore cleared it), nothing at all once resident — the
+    /// `decodes_per_step == 0` steady state the train_step bench gates.
+    /// Pooled-only: the frozen Flat/Scoped floors keep re-deriving
+    /// everything from the f32 mirror, which is what makes them floors.
+    pub fn ensure_resident(&self, params: &mut NetworkParams) {
+        if self.gemm.mode() != ExecMode::Pooled {
+            return;
+        }
+        for lp in params.layers.iter_mut().flatten() {
+            if lp.wdec.len() != lp.w.len() {
+                // `resize` on a previously-sized Vec keeps its capacity,
+                // so a checkpoint-restore rebuild stays allocation-free.
+                lp.wdec.resize(lp.w.len(), 0);
+                self.gemm.decode_panel(&lp.w, &mut lp.wdec);
+            } else {
+                debug_assert!(lp.panel_in_sync(), "resident panel drifted from mirror");
+            }
+        }
+    }
+
     /// Assert the seeded weight-storage fault map on the parameter
     /// store for `step`: stuck cells are re-asserted (physical faults
     /// win every write), transient flips draw per (step, global
@@ -535,7 +558,18 @@ impl TrainEngine {
         let mut base = 0u64;
         let mut changed = 0u64;
         for lp in params.layers.iter_mut().flatten() {
-            changed += corrupt_weights(&cfg, &mut lp.w, base, total, step);
+            // Weight faults hit the one true copy: the resident decoded
+            // panel when present (dec-native injectors, mirror kept in
+            // lockstep via `pim_encode`), the f32 store otherwise.  Both
+            // paths draw the same (index, bit) stream from the same base
+            // offsets, so the corrupted model is shard-count invariant
+            // either way (`sim::faults::tests::corrupt_weights_dec_matches_f32_path`).
+            changed += if lp.wdec.len() == lp.w.len() && !lp.w.is_empty() {
+                let LayerParams { w, wdec, .. } = lp;
+                corrupt_weights_dec(&cfg, wdec, w, base, total, step)
+            } else {
+                corrupt_weights(&cfg, &mut lp.w, base, total, step)
+            };
             base += lp.w.len() as u64;
             changed += corrupt_weights(&cfg, &mut lp.b, base, total, step);
             base += lp.b.len() as u64;
@@ -724,6 +758,9 @@ impl TrainEngine {
         lr: f32,
     ) -> Result<TrainStepResult> {
         let classes = self.validate(net, params, images, labels, batch)?;
+        // Resident panels first: weight faults and the forward both
+        // read the decoded copy, so it must exist before either.
+        self.ensure_resident(params);
         // Fault bookkeeping: claim the step index, snapshot the hook's
         // counters (the per-step delta prices this step even when
         // several engines share one session), assert the weight-storage
@@ -915,23 +952,38 @@ impl TrainEngine {
     }
 
     /// In-array SGD update `w := w − lr·g` — one multiply + subtract
-    /// per parameter ([`pim_mul_f32`] then [`pim_sub_f32`]) — returning
-    /// the update-MAC count (`training_work`'s `macs_wu`).  The cluster
-    /// engine applies this once on the merged gradient: the exact chain
-    /// a single chip runs.
+    /// per parameter — returning the update-MAC count (`training_work`'s
+    /// `macs_wu`).  Resident weight panels update *in the decoded
+    /// domain* ([`pim_sgd_dec`]), with the f32 mirror re-encoded in
+    /// lockstep so eval/checkpoint/all-reduce boundaries read current
+    /// bits; layers without a panel (biases, the frozen Flat/Scoped
+    /// floors) run the historical [`pim_mul_f32`]-then-[`pim_sub_f32`]
+    /// chain.  The two are bit-identical on the full edge grid
+    /// (`fpu::softfloat::tests::sgd_dec_matches_f32_chain_on_triple_grid`,
+    /// pre-validated in `python/tests/validate_resident_sgd.py`).  The
+    /// cluster engine applies this once on the merged gradient: the
+    /// exact chain a single chip runs.
     pub fn apply_sgd(
         &self,
         params: &mut NetworkParams,
         grads: &[Option<LayerParams>],
         lr: f32,
     ) -> u64 {
+        let lr_bits = lr.to_bits();
         let mut macs_wu = 0u64;
         for (p, g) in params.layers.iter_mut().zip(grads) {
             let (Some(p), Some(g)) = (p.as_mut(), g.as_ref()) else {
                 continue;
             };
-            for (w, &gw) in p.w.iter_mut().zip(&g.w) {
-                *w = pim_sub_f32(*w, pim_mul_f32(lr, gw));
+            if p.wdec.len() == p.w.len() && !p.w.is_empty() {
+                for ((wd, w), gw) in p.wdec.iter_mut().zip(p.w.iter_mut()).zip(&g.w) {
+                    *wd = pim_sgd_dec(*wd, lr_bits, gw.to_bits());
+                    *w = f32::from_bits(pim_encode(*wd));
+                }
+            } else {
+                for (w, &gw) in p.w.iter_mut().zip(&g.w) {
+                    *w = pim_sub_f32(*w, pim_mul_f32(lr, gw));
+                }
             }
             for (b, &gb) in p.b.iter_mut().zip(&g.b) {
                 *b = pim_sub_f32(*b, pim_mul_f32(lr, gb));
@@ -1004,8 +1056,12 @@ impl TrainEngine {
                     // dX = δ·W.
                     let lp = params.layers[l].as_ref().expect("dense layer params");
                     let gx = if direct {
-                        // NN layout: W [out, inp] read by k-rows.
-                        self.gemm.gemm_nn(&delta, &lp.w, batch, out, inp)
+                        // NN layout: W [out, inp] read by k-rows — from
+                        // the resident panel when one is held.
+                        match self.gemm.resident_panel(lp) {
+                            Some(panel) => self.gemm.gemm_nn_dec(&delta, panel, batch, out, inp),
+                            None => self.gemm.gemm_nn(&delta, &lp.w, batch, out, inp),
+                        }
                     } else {
                         let mut wt = arena.take(out * inp);
                         transpose_into(&lp.w, out, inp, &mut wt);
@@ -1014,7 +1070,11 @@ impl TrainEngine {
                         gx
                     };
                     macs_bwd += gx.macs;
-                    grads[l] = Some(LayerParams { w: gw.y, b: gb });
+                    grads[l] = Some(LayerParams {
+                        w: gw.y,
+                        b: gb,
+                        wdec: Vec::new(),
+                    });
                     arena.give(std::mem::replace(&mut delta, gx.y));
                 }
                 Layer::Conv2d {
@@ -1098,8 +1158,12 @@ impl TrainEngine {
                     // dX = col2im(δ·W).
                     let lp = params.layers[l].as_ref().expect("conv layer params");
                     let gp = if direct {
-                        // NN layout: W [out_ch, k] read by k-rows.
-                        self.gemm.gemm_nn(&dmat, &lp.w, rows, out_ch, k)
+                        // NN layout: W [out_ch, k] read by k-rows — from
+                        // the resident panel when one is held.
+                        match self.gemm.resident_panel(lp) {
+                            Some(panel) => self.gemm.gemm_nn_dec(&dmat, panel, rows, out_ch, k),
+                            None => self.gemm.gemm_nn(&dmat, &lp.w, rows, out_ch, k),
+                        }
                     } else {
                         let mut wt = arena.take(out_ch * k);
                         transpose_into(&lp.w, out_ch, k, &mut wt);
@@ -1122,7 +1186,11 @@ impl TrainEngine {
                         );
                     }
                     arena.give(gp.y);
-                    grads[l] = Some(LayerParams { w: gw.y, b: gb });
+                    grads[l] = Some(LayerParams {
+                        w: gw.y,
+                        b: gb,
+                        wdec: Vec::new(),
+                    });
                     arena.give(std::mem::replace(&mut delta, dx));
                 }
                 Layer::AvgPool2 { ch, in_h, in_w } => {
@@ -1218,7 +1286,10 @@ impl TrainEngine {
                 Layer::Dense { inp, out } => {
                     let lp = params.layers[l].as_ref().expect("dense layer params");
                     let gx = if direct {
-                        self.gemm.gemm_nn(&delta, &lp.w, batch, out, inp)
+                        match self.gemm.resident_panel(lp) {
+                            Some(panel) => self.gemm.gemm_nn_dec(&delta, panel, batch, out, inp),
+                            None => self.gemm.gemm_nn(&delta, &lp.w, batch, out, inp),
+                        }
                     } else {
                         let mut wt = arena.take(out * inp);
                         transpose_into(&lp.w, out, inp, &mut wt);
@@ -1254,7 +1325,10 @@ impl TrainEngine {
                     }
                     let lp = params.layers[l].as_ref().expect("conv layer params");
                     let gp = if direct {
-                        self.gemm.gemm_nn(&dmat, &lp.w, rows, out_ch, k)
+                        match self.gemm.resident_panel(lp) {
+                            Some(panel) => self.gemm.gemm_nn_dec(&dmat, panel, rows, out_ch, k),
+                            None => self.gemm.gemm_nn(&dmat, &lp.w, rows, out_ch, k),
+                        }
                     } else {
                         let mut wt = arena.take(out_ch * k);
                         transpose_into(&lp.w, out_ch, k, &mut wt);
@@ -1393,7 +1467,11 @@ impl TrainEngine {
                         }
                     }
                     adds_db += (batch * out) as u64;
-                    staged[l] = Some(LayerParams { w: gw.y, b: gb });
+                    staged[l] = Some(LayerParams {
+                        w: gw.y,
+                        b: gb,
+                        wdec: Vec::new(),
+                    });
                 }
                 Layer::Conv2d {
                     in_ch,
@@ -1436,7 +1514,11 @@ impl TrainEngine {
                         }
                     }
                     adds_db += (rows * out_ch) as u64;
-                    staged[l] = Some(LayerParams { w: gw.y, b: gb });
+                    staged[l] = Some(LayerParams {
+                        w: gw.y,
+                        b: gb,
+                        wdec: Vec::new(),
+                    });
                 }
                 Layer::AvgPool2 { .. } | Layer::Relu { .. } => {}
             }
@@ -1696,6 +1778,152 @@ mod tests {
         let (loss, correct) = eng.evaluate(&net, &params, &x, &labels, batch).unwrap();
         assert!(loss.is_finite() && loss > 0.0);
         assert!(correct <= batch);
+    }
+
+    fn engine_mode(threads: usize, mode: ExecMode) -> TrainEngine {
+        TrainEngine::new_mode(
+            FpCostModel::new(OpCosts::proposed_default(), FloatFormat::FP32),
+            1024,
+            threads,
+            mode,
+        )
+    }
+
+    fn conv_net() -> Network {
+        Network {
+            name: "test-conv",
+            input: (1, 6, 6),
+            layers: vec![
+                Layer::Conv2d {
+                    in_ch: 1,
+                    out_ch: 2,
+                    kh: 3,
+                    kw: 3,
+                    in_h: 6,
+                    in_w: 6,
+                },
+                Layer::Relu { units: 2 * 4 * 4 },
+                Layer::AvgPool2 {
+                    ch: 2,
+                    in_h: 4,
+                    in_w: 4,
+                },
+                Layer::Dense { inp: 8, out: 4 },
+            ],
+        }
+    }
+
+    #[test]
+    fn resident_pooled_steps_match_flat_and_scoped_floors() {
+        // The whole PR 8 contract in one walk: three pooled engines'
+        // resident-panel steps (threads 1 and 4) against the frozen
+        // Flat (PR 4) and Scoped (PR 3) floors, three chained steps —
+        // losses, gradients and final parameters all bit-identical,
+        // pooled panels in sync with their mirrors, floors never
+        // growing panels at all.
+        let net = conv_net();
+        let batch = 3;
+        let mut rng = Rng::new(0x9A11E7);
+        let x: Vec<f32> = (0..batch * 36).map(|_| rng.f32_normal(1)).collect();
+        let labels: Vec<i32> = (0..batch).map(|_| rng.below(4) as i32).collect();
+        let engines = [
+            engine(1),
+            engine(4),
+            engine_mode(4, ExecMode::Flat),
+            engine_mode(4, ExecMode::Scoped),
+        ];
+        let mut nets: Vec<NetworkParams> =
+            engines.iter().map(|_| NetworkParams::init(&net, 11)).collect();
+        for step in 0..3 {
+            let mut loss_bits = Vec::new();
+            for (e, p) in engines.iter().zip(nets.iter_mut()) {
+                let r = e.train_step(&net, p, &x, &labels, batch, 0.1).unwrap();
+                loss_bits.push(r.loss.to_bits());
+                e.recycle(r);
+            }
+            assert!(
+                loss_bits.iter().all(|&b| b == loss_bits[0]),
+                "step {step} losses diverged: {loss_bits:x?}"
+            );
+        }
+        for (i, p) in nets.iter().enumerate().skip(1) {
+            for (la, lb) in nets[0].layers.iter().flatten().zip(p.layers.iter().flatten()) {
+                for (a, b) in la.w.iter().zip(&lb.w) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "engine {i} weight drift");
+                }
+                for (a, b) in la.b.iter().zip(&lb.b) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "engine {i} bias drift");
+                }
+            }
+        }
+        for p in &nets[..2] {
+            for lp in p.layers.iter().flatten() {
+                assert!(lp.panel_in_sync(), "pooled panel drifted from mirror");
+            }
+        }
+        for p in &nets[2..] {
+            for lp in p.layers.iter().flatten() {
+                assert!(lp.wdec.is_empty(), "frozen floors must not grow panels");
+            }
+        }
+    }
+
+    #[test]
+    fn resident_panels_make_steady_state_decode_free() {
+        use crate::arch::gemm::panel_decodes;
+        let net = conv_net();
+        let batch = 2;
+        let mut rng = Rng::new(0xDEC0DE);
+        let x: Vec<f32> = (0..batch * 36).map(|_| rng.f32_normal(1)).collect();
+        let labels: Vec<i32> = (0..batch).map(|_| rng.below(4) as i32).collect();
+        let eng = engine(2);
+        let mut params = NetworkParams::init(&net, 5);
+        // First step: exactly one decode pass per weight matrix (conv +
+        // dense) to build the resident panels, nothing per-kernel.
+        let d0 = panel_decodes();
+        let r = eng.train_step(&net, &mut params, &x, &labels, batch, 0.1).unwrap();
+        eng.recycle(r);
+        assert_eq!(panel_decodes() - d0, 2, "one panel build per MAC layer");
+        // Steady state: zero decode passes per step — the counter the
+        // train_step bench gates as `decodes_per_step == 0`.
+        let d1 = panel_decodes();
+        for _ in 0..3 {
+            let r = eng.train_step(&net, &mut params, &x, &labels, batch, 0.1).unwrap();
+            eng.recycle(r);
+        }
+        assert_eq!(panel_decodes(), d1, "resident steady state decodes");
+    }
+
+    #[test]
+    fn ensure_resident_rebuilds_cleared_panels_bit_exactly() {
+        // A checkpoint restore overwrites the f32 mirror and clears the
+        // panel; the next step must rebuild it (capacity kept) and stay
+        // in bit-lockstep with an engine that was never interrupted.
+        let net = dense_net(6, 4);
+        let batch = 3;
+        let mut rng = Rng::new(0x0C1EA2);
+        let x: Vec<f32> = (0..batch * 6).map(|_| rng.f32_normal(2)).collect();
+        let labels: Vec<i32> = (0..batch).map(|_| rng.below(4) as i32).collect();
+        let (ea, eb) = (engine(2), engine(2));
+        let mut pa = NetworkParams::init(&net, 6);
+        let mut pb = pa.clone();
+        for step in 0..3 {
+            // Simulate the restore boundary on engine A only.
+            for lp in pa.layers.iter_mut().flatten() {
+                lp.wdec.clear();
+            }
+            let ra = ea.train_step(&net, &mut pa, &x, &labels, batch, 0.1).unwrap();
+            let rb = eb.train_step(&net, &mut pb, &x, &labels, batch, 0.1).unwrap();
+            assert_eq!(ra.loss.to_bits(), rb.loss.to_bits(), "step {step}");
+            ea.recycle(ra);
+            eb.recycle(rb);
+            for (la, lb) in pa.layers.iter().flatten().zip(pb.layers.iter().flatten()) {
+                assert!(la.panel_in_sync(), "rebuilt panel out of sync");
+                for (a, b) in la.w.iter().zip(&lb.w) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "step {step} weight drift");
+                }
+            }
+        }
     }
 
     #[test]

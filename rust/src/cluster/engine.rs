@@ -515,6 +515,10 @@ impl ClusterEngine {
         let session = self.faults.as_deref();
         let step = session.map(|s| s.begin_step()).unwrap_or(0);
         let fault_before = session.map(|s| s.report());
+        // Resident decoded panels first: every shard reads the shared
+        // frozen parameter store, so the panels must exist (and faults
+        // must hit them — the one true copy) before any chip starts.
+        self.engine.ensure_resident(params);
         // Weight-storage faults hit the shared parameter store once per
         // step, before any chip reads it (keyed without the chip id, so
         // the corruption is shard-count invariant).
@@ -546,6 +550,7 @@ impl ClusterEngine {
                 lp.as_ref().map(|lp| LayerParams {
                     w: vec![0.0; lp.w.len()],
                     b: vec![0.0; lp.b.len()],
+                    wdec: Vec::new(),
                 })
             })
             .collect();

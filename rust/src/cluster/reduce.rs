@@ -49,6 +49,7 @@ pub fn reduce_grads(parts: &[GradSet]) -> Result<(GradSet, u64)> {
             g.as_ref().map(|g| LayerParams {
                 w: vec![0f32; g.w.len()],
                 b: vec![0f32; g.b.len()],
+                wdec: Vec::new(),
             })
         })
         .collect();
@@ -101,6 +102,7 @@ mod tests {
                 s.map(|(w, b)| LayerParams {
                     w: (0..w).map(|_| rng.f32_normal(6)).collect(),
                     b: (0..b).map(|_| rng.f32_normal(6)).collect(),
+                    wdec: Vec::new(),
                 })
             })
             .collect()

@@ -5,6 +5,17 @@
 //! magic "MPIM" | u32 version | u32 n_tensors |
 //!   per tensor: u32 rank | u64 dims[rank] | f32 data[prod(dims)]
 //! ```
+//!
+//! **Resident-panel boundary.**  Checkpoints speak plain fp32 tensors —
+//! they never see the engine's resident decoded weight panels.  The
+//! encode happens *implicitly* at save: the engine's decoded-domain SGD
+//! keeps the f32 mirror in bit-lockstep (`pim_encode` is the proven
+//! lossless inverse of `pim_decode`), so `from_state` captures exactly
+//! the resident bits.  The decode happens at load: restoring through
+//! `runtime::copy_state_into` invalidates any stale panel and the next
+//! train step rebuilds it from the restored mirror, bit for bit
+//! (`rust/tests/cluster.rs::checkpoint_resume_is_bit_identical`
+//! resumes mid-run and must match the uninterrupted engine exactly).
 
 use std::io::{Read, Write};
 use std::path::Path;

@@ -361,6 +361,31 @@ pub fn pim_sub_f32(a: f32, b: f32) -> f32 {
     f32::from_bits(pim_add_bits(a.to_bits(), b.to_bits() ^ 0x8000_0000))
 }
 
+/// Decoded-domain subtract: `decode(a) - b` returned in decoded form.
+/// The resident weight panels (PR 8) live in [`pim_decode`]'s packed
+/// format across steps; this keeps the update in that domain so the
+/// panel never round-trips through the f32 mirror.  Bit-identical to
+/// [`pim_sub_f32`] on the encoded pair (the encode/decode round trip is
+/// lossless, pinned by `decode_encode_roundtrips_every_pattern_class`),
+/// and the result is always *canonical* (`decode(encode(d)) == d`), so
+/// it can feed [`pim_mac_acc_dec`] directly.
+#[inline(always)]
+pub fn pim_sub_dec(adec: u64, bbits: u32) -> u64 {
+    pim_decode(pim_add_bits(pim_encode(adec), bbits ^ 0x8000_0000))
+}
+
+/// The in-array SGD update on a resident decoded weight:
+/// `w := w − lr·g` with `w` held in [`pim_decode`] form.  Exactly the
+/// `pim_sub_f32(w, pim_mul_f32(lr, g))` chain of the frozen engine —
+/// `tests::sgd_dec_matches_f32_chain_on_triple_grid` pins the full edge
+/// grid and `python/tests/validate_resident_sgd.py` mirrors it (plus
+/// 200k chained random updates proving the panel stays canonical and in
+/// lockstep with its f32 mirror over a resident lifetime).
+#[inline(always)]
+pub fn pim_sgd_dec(wdec: u64, lr_bits: u32, g_bits: u32) -> u64 {
+    pim_sub_dec(wdec, pim_mul_bits(lr_bits, g_bits))
+}
+
 /// Flush subnormals of a host float to signed zero (the FTZ the oracle
 /// applies to inputs/outputs when comparing against host IEEE).
 pub fn ftz(x: f32) -> f32 {
@@ -772,6 +797,48 @@ mod tests {
                 pim_mac_acc_bits(acc, w, x),
                 "acc={acc:#010x} w={w:#010x} x={x:#010x}"
             );
+        }
+    }
+
+    #[test]
+    fn sgd_dec_matches_f32_chain_on_triple_grid() {
+        // Exhaustive: the decoded-domain SGD update on a resident panel
+        // word must be bit-identical to the frozen engine's
+        // `pim_sub_f32(w, pim_mul_f32(lr, g))` chain for every
+        // (w, lr, g) edge triple, and its result must stay canonical
+        // (decode∘encode fixed point) so it can feed `pim_mac_acc_dec`
+        // without re-normalisation.  Mirrored (plus a 200k chained
+        // random sweep) by `python/tests/validate_resident_sgd.py`.
+        let grid = edge_bit_patterns();
+        for &w in &grid {
+            let wdec = pim_decode(w);
+            for &lr in &grid {
+                for &g in &grid {
+                    let got = pim_sgd_dec(wdec, lr, g);
+                    let want = pim_add_bits(w, pim_mul_bits(lr, g) ^ 0x8000_0000);
+                    assert_eq!(
+                        pim_encode(got),
+                        want,
+                        "w={w:#010x} lr={lr:#010x} g={g:#010x}"
+                    );
+                    assert_eq!(pim_decode(pim_encode(got)), got, "non-canonical");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sub_dec_matches_sub_f32_on_pair_grid() {
+        let grid = edge_bit_patterns();
+        for &a in &grid {
+            let adec = pim_decode(a);
+            for &b in &grid {
+                let got = pim_sub_dec(adec, b);
+                let want =
+                    pim_sub_f32(f32::from_bits(a), f32::from_bits(b)).to_bits();
+                assert_eq!(pim_encode(got), want, "a={a:#010x} b={b:#010x}");
+                assert_eq!(pim_decode(pim_encode(got)), got, "non-canonical");
+            }
         }
     }
 

@@ -89,6 +89,9 @@ fn state_to_params(net: &Network, state: &TrainState) -> Result<NetworkParams> {
         layers.push(Some(LayerParams {
             w: w.data.clone(),
             b: b.data.clone(),
+            // Decode-on-load: the resident decoded panel is rebuilt by
+            // the engine's `ensure_resident` on the next step.
+            wdec: Vec::new(),
         }));
     }
     if it.next().is_some() {
@@ -129,6 +132,15 @@ fn copy_state_into(net: &Network, state: &TrainState, params: &mut NetworkParams
             )));
         }
         let lp = slot.as_mut().expect("cache shaped for this network");
+        // Decode-on-load boundary for the resident panel: if the
+        // incoming mirror differs bit-anywhere (a real restore, not the
+        // per-step state round-trip, whose bits match exactly), the
+        // panel is stale — clear it (capacity kept) so the engine's
+        // `ensure_resident` rebuilds it allocation-free.  Bit-identical
+        // reloads keep the panel, preserving `decodes_per_step == 0`.
+        if lp.w.iter().zip(&w.data).any(|(a, b)| a.to_bits() != b.to_bits()) {
+            lp.wdec.clear();
+        }
         lp.w.copy_from_slice(&w.data);
         lp.b.copy_from_slice(&b.data);
     }

@@ -673,6 +673,61 @@ pub fn corrupt_weights(
     changed
 }
 
+/// [`corrupt_weights`] for a *resident* decoded weight panel: the fault
+/// hits the one true copy (`wdec`, the u64 words the blocked kernels
+/// and the decoded-domain SGD update read) directly — XOR / force the
+/// significand bit in place — with the f32 `mirror` re-encoded in
+/// lockstep so eval/checkpoint boundaries observe the corrupted model.
+/// Draws the identical (index, bit) stream from the identical `base`
+/// offsets as the f32 path, so shard-count invariance is untouched;
+/// since every resident word is canonical
+/// (`pim_decode(pim_encode(d)) == d`, the panel invariant), the
+/// injected bits are identical too — pre-validated in
+/// `python/tests/validate_resident_sgd.py` and re-checked by
+/// `corrupt_weights_dec_matches_f32_path` below.  Without this
+/// dec-native re-assert, a stuck cell would be "healed" by the first
+/// in-place SGD write after it.
+pub fn corrupt_weights_dec(
+    cfg: &FaultConfig,
+    wdec: &mut [u64],
+    mirror: &mut [f32],
+    base: u64,
+    params: u64,
+    step: u64,
+) -> u64 {
+    assert_eq!(wdec.len(), mirror.len(), "panel/mirror shape");
+    if wdec.is_empty() || params == 0 {
+        return 0;
+    }
+    let mut changed = 0u64;
+    for s in 0..cfg.weight_stuck {
+        let h = fault_hash(cfg.seed, WEIGHT_STUCK_SALT, s, 0, 0);
+        let idx = h % params;
+        if idx >= base && idx < base + wdec.len() as u64 {
+            let slot = (idx - base) as usize;
+            let m = 1u64 << ((h >> 32) % 23);
+            let dec = wdec[slot];
+            let nd = if (h >> 60) & 1 == 1 { dec | m } else { dec & !m };
+            if nd != dec {
+                wdec[slot] = nd;
+                mirror[slot] = f32::from_bits(pim_encode(nd));
+                changed += 1;
+            }
+        }
+    }
+    if cfg.weight_flip > 0.0 {
+        for (i, (d, v)) in wdec.iter_mut().zip(mirror.iter_mut()).enumerate() {
+            let h = fault_hash(cfg.seed, WEIGHT_FLIP_SALT, step, base + i as u64, 0);
+            if unit(h) < cfg.weight_flip {
+                *d ^= 1u64 << ((h & 0x7FF) % 23);
+                *v = f32::from_bits(pim_encode(*d));
+                changed += 1;
+            }
+        }
+    }
+    changed
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -865,6 +920,42 @@ mod tests {
                 v.to_bits(),
                 "decode/encode round-trip"
             );
+        }
+    }
+
+    #[test]
+    fn corrupt_weights_dec_matches_f32_path() {
+        // The dec-native injector (resident panels) against the frozen
+        // f32 path: identical (index, bit) stream, identical corrupted
+        // bits, identical changed count — and the mirror stays in
+        // lockstep with the panel while every resident word remains
+        // canonical.  Grid mirrored from
+        // python/tests/validate_resident_sgd.py.
+        let cfg = FaultConfig {
+            weight_stuck: 6,
+            weight_flip: 0.01,
+            seed: 11,
+            ..FaultConfig::default()
+        };
+        let clean: Vec<f32> = (0..512).map(|i| (i as f32 - 256.0) * 0.031).collect();
+        for step in [3u64, 4, 9] {
+            let mut w_f32 = clean.clone();
+            let n_f32 = corrupt_weights(&cfg, &mut w_f32, 100, 1000, step);
+
+            let mut mirror = clean.clone();
+            let mut wdec: Vec<u64> =
+                clean.iter().map(|v| pim_decode(v.to_bits())).collect();
+            let n_dec = corrupt_weights_dec(&cfg, &mut wdec, &mut mirror, 100, 1000, step);
+
+            assert_eq!(n_f32, n_dec, "step {step} changed count");
+            assert!(n_dec > 0, "512 weights at flip 1e-2 must hit");
+            for (i, ((&f, &m), &d)) in
+                w_f32.iter().zip(&mirror).zip(&wdec).enumerate()
+            {
+                assert_eq!(f.to_bits(), m.to_bits(), "step {step} mirror[{i}]");
+                assert_eq!(pim_encode(d), f.to_bits(), "step {step} panel[{i}]");
+                assert_eq!(pim_decode(pim_encode(d)), d, "step {step} canonical[{i}]");
+            }
         }
     }
 

@@ -222,6 +222,7 @@ fn prop_allreduce_equals_host_chain() {
                         Some(LayerParams {
                             w: (0..w_len).map(|_| r.f32_adversarial()).collect(),
                             b: (0..b_len).map(|_| r.f32_normal(8)).collect(),
+                            wdec: Vec::new(),
                         }),
                         None,
                     ]
@@ -401,20 +402,28 @@ fn prop_shard_chain_matches_engine() {
 }
 
 /// Checkpoint round trip (coordinator/checkpoint): save → load →
-/// resume one step is bit-identical to an uninterrupted 2-step run.
+/// resume *three* steps is bit-identical to an uninterrupted 4-step
+/// run.  Since PR 8 the engine trains on resident decoded weight
+/// panels, so this also pins the encode-at-save/decode-at-load
+/// boundary: the checkpoint captures the f32 mirror (kept in lockstep
+/// with the panel by the decoded-domain SGD), the restore invalidates
+/// the stale panel, and the first resumed step rebuilds it from the
+/// restored bits — three chained steps leave any drift nowhere to hide.
 #[test]
 fn checkpoint_resume_is_bit_identical() {
     let rt = Runtime::load_dir("artifacts").expect("functional runtime");
     let mut data = Dataset::synthetic(64, 0x5A11);
     let b0 = data.next_batch(8);
-    let b1 = data.next_batch(8);
+    let resume_batches: Vec<_> = (0..3).map(|_| data.next_batch(8)).collect();
 
-    // Uninterrupted: init → step(b0) → step(b1).
+    // Uninterrupted: init → step(b0) → 3 more steps.
     let mut straight = rt.init_params(21).unwrap();
     rt.train_step(&mut straight, &b0.images, &b0.labels, 0.05).unwrap();
-    rt.train_step(&mut straight, &b1.images, &b1.labels, 0.05).unwrap();
+    for b in &resume_batches {
+        rt.train_step(&mut straight, &b.images, &b.labels, 0.05).unwrap();
+    }
 
-    // Interrupted: init → step(b0) → save → load → step(b1).
+    // Interrupted: init → step(b0) → save → load → 3 resumed steps.
     let mut resumed = rt.init_params(21).unwrap();
     rt.train_step(&mut resumed, &b0.images, &b0.labels, 0.05).unwrap();
     let dir = std::env::temp_dir().join("mram_pim_cluster_test");
@@ -424,7 +433,9 @@ fn checkpoint_resume_is_bit_identical() {
     let restored = Checkpoint::load(&path).unwrap();
     assert_eq!(restored.step, 1);
     let mut resumed = restored.to_state().unwrap();
-    rt.train_step(&mut resumed, &b1.images, &b1.labels, 0.05).unwrap();
+    for b in &resume_batches {
+        rt.train_step(&mut resumed, &b.images, &b.labels, 0.05).unwrap();
+    }
     let _ = std::fs::remove_file(&path);
 
     let a = straight.to_host().unwrap();

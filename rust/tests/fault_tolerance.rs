@@ -391,10 +391,58 @@ fn rollback_policy_keeps_params_untouched() {
     assert_eq!(param_bits(&params), before);
 }
 
+/// PR 8: weight-storage faults hit the **one true copy**.  Pooled
+/// engines keep weights as resident decoded panels (faults asserted in
+/// the decoded domain, f32 mirror re-encoded in lockstep); the frozen
+/// Flat and Scoped floors keep the f32 store.  Same seed ⇒ identical
+/// corrupted trajectories across all of them — and the resident panel
+/// must be re-asserted *every* step: a missed re-assert would let the
+/// in-place SGD write "heal" a stuck cell and drift the pooled run
+/// from the floors, which this cross-mode walk would catch.
+#[test]
+fn weight_faults_on_resident_panels_match_the_f32_floors() {
+    let net = convnet();
+    let batch = 6;
+    let batches = step_batches(&net, batch, 3, 0xFA10);
+    let cfg = FaultConfig::parse("weight_stuck=12,weight_flip=1e-3,seed=13").unwrap();
+    let mut want: Option<(Vec<u32>, Vec<u32>, FaultReport)> = None;
+    for (mode, threads) in [
+        (ExecMode::Pooled, 1usize),
+        (ExecMode::Pooled, 4),
+        (ExecMode::Flat, 2),
+        (ExecMode::Scoped, 2),
+    ] {
+        let (p, l, r) = run_train(&net, mode, threads, Some(cfg), &batches, batch, 0xB00);
+        let bits = param_bits(&p);
+        let losses: Vec<u32> = l.iter().map(|s| s.loss).collect();
+        let rep = r.unwrap();
+        if mode == ExecMode::Pooled {
+            for lp in p.layers.iter().flatten() {
+                assert!(
+                    lp.panel_in_sync(),
+                    "faulted resident panel out of sync with its mirror"
+                );
+            }
+        }
+        match &want {
+            None => {
+                assert!(rep.weight_faults > 0, "weight fault model must assert cells");
+                want = Some((bits, losses, rep));
+            }
+            Some((wb, wl, wr)) => {
+                assert_eq!(&bits, wb, "{mode:?} x{threads}: corrupted weights drifted");
+                assert_eq!(&losses, wl, "{mode:?} x{threads}: losses drifted");
+                assert_eq!(&rep, wr, "{mode:?} x{threads}: fault report drifted");
+            }
+        }
+    }
+}
+
 /// Weight-storage faults are keyed *without* a chip id: the corrupted
 /// model — and therefore the whole training trajectory — is identical
 /// however the batch is sharded, and replays bit-for-bit under the same
-/// seed.
+/// seed.  The cluster engines run pooled, so since PR 8 this exercises
+/// the dec-native injector on the shared resident panels.
 #[test]
 fn weight_faults_are_shard_invariant_and_repeatable() {
     let net = mlp();
@@ -402,17 +450,27 @@ fn weight_faults_are_shard_invariant_and_repeatable() {
     let batches = step_batches(&net, batch, 2, 0xFA08);
     let cfg = FaultConfig::parse("weight_stuck=12,weight_flip=1e-3,seed=13").unwrap();
     let (p1, l1, r1) = run_cluster(&net, 1, 2, Some(cfg), &batches, batch, 0x777);
-    let (p2, l2, r2) = run_cluster(&net, 2, 2, Some(cfg), &batches, batch, 0x777);
     let (p1b, l1b, r1b) = run_cluster(&net, 1, 2, Some(cfg), &batches, batch, 0x777);
     let rep1 = r1.unwrap();
-    let rep2 = r2.unwrap();
     assert!(rep1.weight_faults > 0, "weight fault model must assert cells");
-    assert_eq!(
-        rep1.weight_faults, rep2.weight_faults,
-        "weight faults are keyed without a chip id"
-    );
-    assert_eq!(param_bits(&p1), param_bits(&p2), "corrupted trajectory must be shard-invariant");
-    assert_eq!(l1, l2);
+    for shards in [2usize, 4, 8] {
+        let (ps, ls, rs) = run_cluster(&net, shards, 2, Some(cfg), &batches, batch, 0x777);
+        let reps = rs.unwrap();
+        assert_eq!(
+            rep1.weight_faults, reps.weight_faults,
+            "shards={shards}: weight faults are keyed without a chip id"
+        );
+        assert_eq!(
+            param_bits(&p1),
+            param_bits(&ps),
+            "shards={shards}: corrupted trajectory must be shard-invariant"
+        );
+        assert_eq!(l1, ls, "shards={shards}: losses drifted");
+    }
+    // the resident panels survive the faulted run in mirror lockstep
+    for lp in p1.layers.iter().flatten() {
+        assert!(lp.panel_in_sync(), "faulted resident panel out of sync");
+    }
     // exact replay
     assert_eq!(param_bits(&p1), param_bits(&p1b));
     assert_eq!(l1, l1b);

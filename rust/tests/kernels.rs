@@ -198,6 +198,69 @@ fn decoded_panels_recycle_through_the_arena() {
 }
 
 #[test]
+fn abft_retry_reads_the_resident_panel_after_in_place_update() {
+    // PR 8 stale-mirror regression: the resident decoded weight panel
+    // is updated *in place* by the decoded-domain SGD, and the f32
+    // source it was decoded from is left untouched — maximally stale.
+    // An armed engine's ABFT retry must recompute corrupted rows from
+    // the panel the primary pass read (never by re-decoding f32 bits),
+    // so the retried rows come back bit-identical to a clean engine
+    // evaluating the same panel.
+    use mram_pim::fpu::softfloat::{pim_decode, pim_sgd_dec};
+    use mram_pim::sim::{FaultConfig, FaultHook, FaultSession};
+    use std::sync::Arc;
+
+    let cfg = FaultConfig::parse("transient=0.08,stuck=2,seed=23").unwrap();
+    let mut rng = Rng::new(0x8E51);
+    let mut total_injected = 0u64;
+    for &(m, k, n) in SHAPES {
+        let a = sparse_vec(&mut rng, m * k);
+        let w0 = sparse_vec(&mut rng, n * k);
+        // Decode once (the resident build)...
+        let mut panel: Vec<u64> = w0.iter().map(|v| pim_decode(v.to_bits())).collect();
+        // ...then one SGD-shaped in-place update in the decoded domain.
+        let g = sparse_vec(&mut rng, n * k);
+        let lr = 0.125f32;
+        for (d, gv) in panel.iter_mut().zip(&g) {
+            *d = pim_sgd_dec(*d, lr.to_bits(), gv.to_bits());
+        }
+
+        let clean = engine(2, ExecMode::Pooled);
+        let mut armed = engine(2, ExecMode::Pooled);
+        let session = Arc::new(FaultSession::new(cfg));
+        armed.set_fault_hook(Some(Arc::new(FaultHook::new(session.clone(), 1, LANES))));
+
+        // The same resident [n, k] panel feeds both kernel views:
+        // NT (forward) and NN (dgrad, read as [k', n'] = [n, k]).
+        let want_nt = clean.gemm_nt_dec(&a, &panel, None, m, k, n);
+        let got_nt = armed.gemm_nt_dec(&a, &panel, None, m, k, n);
+        let a2 = sparse_vec(&mut rng, m * n);
+        let want_nn = clean.gemm_nn_dec(&a2, &panel, m, n, k);
+        let got_nn = armed.gemm_nn_dec(&a2, &panel, m, n, k);
+        for (kind, want, got) in
+            [("nt", &want_nt.y, &got_nt.y), ("nn", &want_nn.y, &got_nn.y)]
+        {
+            assert_eq!(want.len(), got.len());
+            for (i, (w, gv)) in want.iter().zip(got.iter()).enumerate() {
+                assert_eq!(
+                    w.to_bits(),
+                    gv.to_bits(),
+                    "{kind}[{i}] ({m},{k},{n}) retry must read the updated panel"
+                );
+            }
+        }
+        let rep = session.report();
+        assert_eq!(rep.unrecovered, 0, "({m},{k},{n})");
+        assert_eq!(rep.detected_rows, rep.injected_rows, "({m},{k},{n})");
+        total_injected += rep.injected;
+    }
+    assert!(
+        total_injected > 0,
+        "fault model at transient=0.08 must actually corrupt something"
+    );
+}
+
+#[test]
 fn armed_kernels_recover_bit_identically_across_layouts() {
     // PR 6: a GemmEngine armed with an aggressive writeback fault model
     // (transient flips + stuck lanes) must still return exactly the

@@ -4,6 +4,12 @@
 //! allocator over *all* threads, so a stray allocation on a pool
 //! worker fails too.
 //!
+//! Since PR 8 the pooled engine also owns **resident decoded weight
+//! panels** (`LayerParams::wdec`): the one-time panel build allocates
+//! during the first warm-up step, and the audited steady step must stay
+//! at zero even though it updates the panels in place every step (the
+//! decoded-domain SGD writes into buffers whose capacity never moves).
+//!
 //! Everything lives in one `#[test]` so no concurrently-running test
 //! can pollute the global counters.
 

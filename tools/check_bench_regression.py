@@ -12,6 +12,19 @@ step — must not regress more than ``--max-regress-pct`` (default 10,
 env ``BENCH_REGRESSION_PCT``) versus the committed baseline's
 ``mean_ns``.  All other shared entries are reported but informational.
 
+Entries present in the fresh output but absent from the committed
+baseline are a hard failure: a silently-unknown name means a gate (or a
+``metric:`` counter) was added without refreshing the baseline, so
+nothing would ever compare it — exactly how the decodes-per-step gate
+could rot away unnoticed.  Refresh and commit the ``BENCH_*.json``
+whenever a bench grows an entry.
+
+``EXACT_GATES`` entries carry counters in ``mean_ns`` (the PR 8
+``decodes per step`` resident-panel counter, committed baseline 0.0)
+and must match the baseline bit-for-bit in either direction: any
+nonzero fresh value means a steady-state train step re-decoded a weight
+panel, which the resident-panel contract forbids.
+
 ``cluster_scaling`` additionally gates shards=2 ≤ shards=1 *within the
 fresh run* (hardware-independent, like the ABFT overhead gate): PR 7
 replaced the per-sample micrograd lowering with one batched backward
@@ -55,6 +68,13 @@ GATES = {
 # better.  Reversed gates fail on any drop below the committed baseline.
 REVERSED_GATES = {
     "BENCH_fault_tolerance.json": ["metric: abft detection rate pct"],
+}
+
+# ``metric:`` entries that must equal the committed baseline *exactly*
+# (counters, not wall-clock — here: bulk weight-panel decode passes in a
+# steady-state pooled train step, resident-panel contract value 0.0).
+EXACT_GATES = {
+    "BENCH_train_step.json": ["metric: decodes per step (threads 4, pooled)"],
 }
 
 # Cross-entry gate within the fresh fault_tolerance run: the
@@ -123,15 +143,30 @@ def main():
             continue
         gate_name = GATES.get(path)
         reversed_names = REVERSED_GATES.get(path, [])
+        exact_names = EXACT_GATES.get(path, [])
+        # Unknown fresh entries: a name the committed baseline has never
+        # seen can never be compared, so a new gate added without a
+        # baseline refresh would silently pass forever.
+        for name in sorted(fresh.keys() - base.keys()):
+            failures.append(
+                f"{path}: fresh entry '{name}' is absent from the committed "
+                f"baseline (refresh with `cargo bench -- --json` and commit)"
+            )
         for name in sorted(base.keys() & fresh.keys()):
             b, f = base[name]["mean_ns"], fresh[name]["mean_ns"]
             delta = (f - b) / b * 100.0 if b else 0.0
             if name.startswith("metric: "):
-                tag = "GATE" if name in reversed_names else "info"
+                gated = name in reversed_names or name in exact_names
+                tag = "GATE" if gated else "info"
                 print(f"[{tag}] {name}: baseline {b:.1f}, fresh {f:.1f} ({delta:+.1f}%)")
                 if name in reversed_names and f < b - 1e-9:
                     failures.append(
                         f"{name}: dropped to {f:.1f} from baseline {b:.1f} (must not regress)"
+                    )
+                if name in exact_names and abs(f - b) > 1e-9:
+                    failures.append(
+                        f"{name}: fresh {f:.1f} != committed {b:.1f} (exact gate; a "
+                        f"nonzero decode count means the resident-panel contract broke)"
                     )
                 continue
             gated = name == gate_name
@@ -151,6 +186,11 @@ def main():
                 failures.append(f"{path}: committed baseline lacks reversed gate '{name}'")
             if fresh and name not in fresh:
                 failures.append(f"{path}: fresh run lacks reversed gate '{name}'")
+        for name in exact_names:
+            if name not in base:
+                failures.append(f"{path}: committed baseline lacks exact gate '{name}'")
+            if fresh and name not in fresh:
+                failures.append(f"{path}: fresh run lacks exact gate '{name}'")
         # Fault-free ABFT overhead: compare the two fresh entries of the
         # same run (hardware-independent, unlike the baselines).
         if path == "BENCH_fault_tolerance.json" and fresh:
