@@ -1,0 +1,457 @@
+#!/usr/bin/env python3
+"""Pre-validation of the PR 9 serving tier: coalescing policy, admission
+control, deadline shedding and percentile accounting — mirrored
+loop-for-loop from `rust/src/serve/sim.rs` (no Rust toolchain in the
+authoring container, so the discrete-event semantics are proven here
+first and the Rust implementation transcribes them).
+
+What is validated:
+
+ 1. Determinism: the same seed replays the identical event sequence.
+ 2. Conservation: submitted == admitted + rejected and
+    admitted == completed + shed + failed, over a randomized grid of
+    policies, loads and fault configurations.
+ 3. Front-only deadline shedding == full-queue-scan shedding: the queue
+    is FIFO and every request carries the same deadline offset, so the
+    front request always has the earliest expiry — shedding only from
+    the front is exact, not an approximation.
+ 4. Nearest-rank percentile accounting against a brute-force reference.
+ 5. The admitted-p99 bound the bench gates in-binary:
+    p99 <= deadline + 2*svc(max_batch) + max_wait whenever a deadline
+    is armed (one transient-redispatch service slot of slack).
+ 6. Batching never exceeds max_batch and never dispatches empty.
+
+Run with --emit-baseline to print the scenario table the committed
+`BENCH_serving.json` / EXPERIMENTS.md values are derived from (count
+metrics are exact mirrors; millisecond metrics scale linearly with the
+analytic t_mac and are guarded by ceiling gates with slack, not
+equality gates).
+"""
+
+import math
+import sys
+
+MASK = (1 << 64) - 1
+
+# ---------------------------------------------------------------------------
+# Mirrors of rust/src/prop/mod.rs (xorshift64*) and sim/faults.rs
+# (splitmix64 fault draws).
+
+
+class Rng:
+    """xorshift64* — mirror of prop::Rng."""
+
+    def __init__(self, seed):
+        self.s = max(seed, 1) & MASK
+
+    def next_u64(self):
+        x = self.s
+        x ^= (x << 13) & MASK
+        x ^= x >> 7
+        x ^= (x << 17) & MASK
+        self.s = x
+        return (x * 0x2545F4914F6CDD1D) & MASK
+
+    def unit_f64(self):
+        return (self.next_u64() >> 11) / float(1 << 53)
+
+
+def mix64(z):
+    z = (z + 0x9E3779B97F4A7C15) & MASK
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+    return z ^ (z >> 31)
+
+
+def fault_hash(seed, salt, a, b, c):
+    h = mix64(seed ^ salt)
+    h = mix64(h ^ a)
+    h = mix64(h ^ b)
+    return mix64(h ^ c)
+
+
+def unit(h):
+    return (h >> 11) * (1.0 / float(1 << 53))
+
+
+CHIP_FAIL_SALT = 0x434849504641494C  # "CHIPFAIL"
+CHIP_DEAD_SALT = 0x4348495044454144  # "CHIPDEAD"
+
+
+def chip_is_dead(seed, chip_dead, chip, chips):
+    k = min(chip_dead, chips)
+    if k == 0 or chip == 0 or chip > chips:
+        return False
+    hc = fault_hash(seed, CHIP_DEAD_SALT, chip, 0, 0)
+    rank = 0
+    for c in range(1, chips + 1):
+        if c == chip:
+            continue
+        h = fault_hash(seed, CHIP_DEAD_SALT, c, 0, 0)
+        if h < hc or (h == hc and c < chip):
+            rank += 1
+    return rank < k
+
+
+def chip_failed_transiently(seed, chip_fail, chip, step):
+    return chip_fail > 0.0 and unit(fault_hash(seed, CHIP_FAIL_SALT, step, chip, 0)) < chip_fail
+
+
+# ---------------------------------------------------------------------------
+# Mirror of the analytic service-time model: fpu/cost.rs t_mac() over
+# nvsim OpCosts::proposed_default() (1024x1024 array, OneT1R cell,
+# SOT_MRAM_TABLE1, 28 nm node), and the per-layer GEMM wave pricing of
+# arch/gemm.rs (waves = ceil(macs / lanes), latency = waves * t_mac).
+
+LANES = 32_768  # runtime::FUNCTIONAL_LANES
+
+
+def t_mac_fp32():
+    pitch = math.sqrt(30.0) * 28e-9  # OneT1R cell_area_f2=30 @ 28 nm
+    line = 1024 * pitch
+    c_line = 200e-12 * line
+    r_line = 2.0e6 * line
+    t_read = 0.25e-9 + 0.5 * r_line * c_line + 0.40e-9  # decode + elmore + sense
+    t_search = t_read
+    t_write = (0.28e-9 + 2.0e-9) * 1  # (driver + switch) * write_steps
+    ne, nm = 8, 23
+    t_mul = (2.0 * nm * nm + 6.5 * nm + 6.0 * ne + 3.0) * (t_read + t_write)
+    t_add = (
+        (1.0 + 7.0 * ne + 7.0 * nm) * t_read
+        + (7.0 * ne + 7.0 * nm) * t_write
+        + 2.0 * (nm + 2.0) * t_search
+    )
+    return t_mul + t_add
+
+
+T_MAC = t_mac_fp32()
+
+# LeNet-5 GEMM layers as (per-sample macs, output rows per sample, cols):
+#   conv1: m = b*576, n = 6,  k = 25   -> 86_400 macs/sample
+#   conv2: m = b*64,  n = 12, k = 150  -> 115_200
+#   dense1: m = b,    n = 97, k = 192  -> 18_624
+#   dense2: m = b,    n = 10, k = 97   -> 970
+LENET_GEMMS = [(86_400, 576, 6), (115_200, 64, 12), (18_624, 1, 97), (970, 1, 10)]
+
+
+def svc_latency(batch):
+    """Clean forward latency of one batched dispatch.  Accumulated
+    per layer — `t += waves_l * t_mac` — because ForwardResult.latency_s
+    sums each GEMM layer's priced latency in layer order, which is not
+    bit-identical to `(sum of waves) * t_mac` in f64."""
+    t = 0.0
+    for macs, _, _ in LENET_GEMMS:
+        waves = (batch * macs + LANES - 1) // LANES
+        t += waves * T_MAC
+    return t
+
+
+def abft_latency(batch):
+    """ABFT checksum pricing of an armed, fault-free forward: the
+    reference+verify adds (2*m*n per GEMM) summed over the pass, then
+    ceil-divided by the lanes once — the train_step pricing idiom."""
+    adds = sum(2 * (batch * rows_per) * cols for _, rows_per, cols in LENET_GEMMS)
+    return ((adds + LANES - 1) // LANES) * T_MAC
+
+
+# ---------------------------------------------------------------------------
+# The serving policy + discrete-event loop (mirror of serve/sim.rs).
+
+DEF_MAX_BATCH = 32
+DEF_MAX_WAIT = 2e-3
+DEF_DEPTH = 256
+DEF_DEADLINE = 8e-3
+
+
+def open_loop_arrivals(n, rate, seed):
+    rng = Rng(seed)
+    t = 0.0
+    out = []
+    for _ in range(n):
+        u = rng.unit_f64()
+        t += -math.log(1.0 - u) / rate
+        out.append(t)
+    return out
+
+
+def percentile(samples, q):
+    """Nearest-rank percentile (mirror of serve/metrics.rs)."""
+    if not samples:
+        return 0.0
+    s = sorted(samples)
+    rank = math.ceil(q / 100.0 * len(s))
+    return s[max(rank, 1) - 1]
+
+
+def simulate(
+    arrivals,
+    chips=2,
+    max_batch=DEF_MAX_BATCH,
+    max_wait=DEF_MAX_WAIT,
+    depth=DEF_DEPTH,
+    deadline=DEF_DEADLINE,
+    armed=False,
+    fault_seed=1,
+    chip_dead=0,
+    chip_fail=0.0,
+    shed_full_scan=False,
+):
+    """The serve/sim.rs event loop, op-for-op.  Returns the stats dict.
+
+    `shed_full_scan=True` switches deadline shedding from front-only to
+    a full queue scan — used by check 3 to prove the two are identical
+    under FIFO + uniform deadlines."""
+    INF = float("inf")
+    live = [c for c in range(1, chips + 1) if not (armed and chip_is_dead(fault_seed, chip_dead, c, chips))]
+    if not live:
+        raise RuntimeError("all chips dead")
+    free_at = {c: 0.0 for c in live}
+    queue = []  # request indices (FIFO)
+    lat = []
+    st = dict(
+        submitted=0, admitted=0, rejected=0, shed=0, completed=0, failed=0,
+        batches=0, batched_samples=0, redispatched=0, fault_latency=0.0,
+    )
+    n = len(arrivals)
+    i = 0
+    now = 0.0
+    step = 0
+    last_done = 0.0
+    max_seen_batch = 0
+
+    def admit(j):
+        st["submitted"] += 1
+        if len(queue) >= depth:
+            st["rejected"] += 1
+        else:
+            queue.append(j)
+            st["admitted"] += 1
+
+    while True:
+        drained = i >= n
+        if not queue:
+            if drained:
+                break
+            now = max(now, arrivals[i])
+            admit(i)
+            i += 1
+            continue
+        t_chip = min(free_at[c] for c in live)
+        front = arrivals[queue[0]]
+        t_ready = now if (len(queue) >= max_batch or drained) else front + max_wait
+        t_disp = max(now, t_chip, t_ready)
+        if not drained and arrivals[i] <= t_disp:
+            now = max(now, arrivals[i])
+            admit(i)
+            i += 1
+            continue
+        now = t_disp
+        # --- dispatch at `now` ---
+        if deadline > 0.0:
+            if shed_full_scan:
+                kept = [j for j in queue if not now - arrivals[j] > deadline]
+                st["shed"] += len(queue) - len(kept)
+                queue[:] = kept
+            else:
+                while queue and now - arrivals[queue[0]] > deadline:
+                    queue.pop(0)
+                    st["shed"] += 1
+        if not queue:
+            continue
+        b = min(len(queue), max_batch)
+        ids = queue[:b]
+        del queue[:b]
+        max_seen_batch = max(max_seen_batch, b)
+        # earliest-free live chip (lowest id wins ties)
+        chip = live[0]
+        for c in live[1:]:
+            if free_at[c] < free_at[chip]:
+                chip = c
+        start = now
+        this_step = step
+        step += 1
+        if armed and chip_failed_transiently(fault_seed, chip_fail, chip, this_step):
+            free_at[chip] = start + svc_latency(b)
+            st["redispatched"] += 1
+            chip = live[0]
+            for c in live[1:]:
+                if free_at[c] < free_at[chip]:
+                    chip = c
+            start = max(now, free_at[chip])
+        fault_extra = abft_latency(b) if armed else 0.0
+        latency = svc_latency(b) + fault_extra
+        done = start + latency
+        free_at[chip] = done
+        last_done = max(last_done, done)
+        st["batches"] += 1
+        st["batched_samples"] += b
+        st["fault_latency"] += fault_extra
+        # fault-free mirror: unrecovered is always 0 here, so every
+        # dispatched batch completes
+        st["completed"] += b
+        for j in ids:
+            lat.append(done - arrivals[j])
+
+    elapsed = max(now, last_done)
+    st["elapsed"] = elapsed
+    st["p50"] = percentile(lat, 50.0)
+    st["p99"] = percentile(lat, 99.0)
+    st["mean"] = sum(lat) / len(lat) if lat else 0.0
+    st["throughput"] = st["completed"] / elapsed if elapsed > 0.0 else 0.0
+    st["max_seen_batch"] = max_seen_batch
+    return st
+
+
+def capacity_rps(chips, max_batch):
+    return chips * max_batch / svc_latency(max_batch)
+
+
+# ---------------------------------------------------------------------------
+# Checks.
+
+
+def check_determinism():
+    arr = open_loop_arrivals(4000, 1.2 * capacity_rps(2, 32), 42)
+    a = simulate(arr)
+    b = simulate(arr)
+    assert a == b, "same inputs must replay identically"
+    print("determinism: OK")
+
+
+def check_conservation():
+    rng = Rng(7)
+    cases = 0
+    for _ in range(200):
+        chips = 1 + rng.next_u64() % 3
+        max_batch = 1 + rng.next_u64() % 32
+        depth = 1 + rng.next_u64() % 64
+        max_wait = rng.unit_f64() * 4e-3
+        deadline = 0.0 if rng.next_u64() % 4 == 0 else rng.unit_f64() * 12e-3
+        mult = 0.25 + rng.unit_f64() * 3.0
+        chip_fail = 0.0 if rng.next_u64() % 2 == 0 else rng.unit_f64() * 0.5
+        chip_dead = rng.next_u64() % chips  # always leaves a survivor
+        armed = chip_fail > 0.0 or chip_dead > 0
+        n = 200 + rng.next_u64() % 400
+        arr = open_loop_arrivals(int(n), mult * capacity_rps(chips, max_batch), rng.next_u64())
+        st = simulate(
+            arr, chips=int(chips), max_batch=int(max_batch), depth=int(depth),
+            max_wait=max_wait, deadline=deadline, armed=armed,
+            fault_seed=rng.next_u64() | 1, chip_dead=int(chip_dead), chip_fail=chip_fail,
+        )
+        assert st["submitted"] == len(arr)
+        assert st["submitted"] == st["admitted"] + st["rejected"], st
+        assert st["admitted"] == st["completed"] + st["shed"] + st["failed"], st
+        assert st["batched_samples"] == st["completed"] + st["failed"]
+        assert st["max_seen_batch"] <= max_batch
+        cases += 1
+    print(f"conservation over {cases} randomized configs: OK")
+
+
+def check_front_only_shed():
+    rng = Rng(13)
+    for _ in range(60):
+        chips = 1 + rng.next_u64() % 2
+        max_batch = 1 + rng.next_u64() % 16
+        deadline = 1e-4 + rng.unit_f64() * 3e-3  # tight: force shedding
+        mult = 1.0 + rng.unit_f64() * 3.0
+        arr = open_loop_arrivals(400, mult * capacity_rps(int(chips), int(max_batch)), rng.next_u64())
+        a = simulate(arr, chips=int(chips), max_batch=int(max_batch), deadline=deadline)
+        b = simulate(arr, chips=int(chips), max_batch=int(max_batch), deadline=deadline,
+                     shed_full_scan=True)
+        assert a == b, f"front-only shed diverged from full scan: {a} vs {b}"
+    print("front-only shed == full-queue-scan shed (FIFO + uniform deadline): OK")
+
+
+def check_percentiles():
+    rng = Rng(5)
+    for _ in range(100):
+        n = 1 + rng.next_u64() % 200
+        samples = [rng.unit_f64() for _ in range(n)]
+        for q in (50.0, 90.0, 99.0, 100.0):
+            got = percentile(samples, q)
+            # brute-force nearest-rank: smallest x with rank(x) >= q% of n
+            s = sorted(samples)
+            k = max(math.ceil(q / 100.0 * len(s)), 1)
+            assert got == s[k - 1]
+            # at least q% of samples are <= the reported percentile
+            assert sum(1 for x in samples if x <= got) >= q / 100.0 * len(s) - 1e-9
+    assert percentile([], 99.0) == 0.0
+    print("nearest-rank percentile accounting: OK")
+
+
+def check_p99_bound():
+    rng = Rng(23)
+    for _ in range(40):
+        mult = 0.5 + rng.unit_f64() * 2.5
+        chip_fail = 0.0 if rng.next_u64() % 2 == 0 else 0.3
+        arr = open_loop_arrivals(2000, mult * capacity_rps(2, 32), rng.next_u64())
+        st = simulate(arr, armed=chip_fail > 0.0, chip_fail=chip_fail,
+                      fault_seed=rng.next_u64() | 1)
+        bound = DEF_DEADLINE + 2.0 * svc_latency(DEF_MAX_BATCH) + DEF_MAX_WAIT
+        assert st["p99"] <= bound, f"p99 {st['p99'] * 1e3:.3f} ms over bound {bound * 1e3:.3f} ms"
+    print("admitted-p99 bound (deadline + 2*svc(B) + max_wait): OK")
+
+
+# ---------------------------------------------------------------------------
+# Baseline scenarios (the committed BENCH_serving.json values).
+
+WALL_MS_PER_BATCH = 29.0  # committed lenet5 forward batch-32 wall (threads 4)
+
+
+def scenario_table():
+    cap = capacity_rps(2, DEF_MAX_BATCH)
+    rows = []
+    for name, n, mult, dead in [
+        ("1.0x healthy", 100_000, 1.0, False),
+        ("2.0x healthy", 20_000, 2.0, False),
+        ("0.5x healthy", 20_000, 0.5, False),
+        ("1.0x-of-healthy, one chip dead", 20_000, 1.0, True),
+    ]:
+        arr = open_loop_arrivals(n, mult * cap, 42)
+        st = simulate(arr, armed=dead, chip_dead=1 if dead else 0, fault_seed=9)
+        st["name"], st["n"], st["mult"] = name, n, mult
+        rows.append(st)
+    return cap, rows
+
+
+def emit_baseline():
+    cap, rows = scenario_table()
+    print(f"t_mac = {T_MAC * 1e6:.6f} us   svc(32) = {svc_latency(32) * 1e3:.6f} ms   "
+          f"svc(1) = {svc_latency(1) * 1e6:.3f} us")
+    print(f"healthy capacity (2 chips) = {cap:,.1f} req/s\n")
+    hdr = (f"{'scenario':<34} {'thr krps':>9} {'p50 ms':>8} {'p99 ms':>8} "
+           f"{'rej %':>7} {'shed %':>7} {'batches':>8} {'wall est s':>10}")
+    print(hdr)
+    for st in rows:
+        rej = 100.0 * st["rejected"] / st["submitted"]
+        shed = 100.0 * st["shed"] / st["submitted"]
+        wall = st["batches"] * WALL_MS_PER_BATCH / 1e3
+        print(f"{st['name']:<34} {st['throughput'] / 1e3:>9.2f} {st['p50'] * 1e3:>8.3f} "
+              f"{st['p99'] * 1e3:>8.3f} {rej:>7.2f} {shed:>7.2f} {st['batches']:>8} {wall:>10.1f}")
+    print("\nBENCH_serving.json metric values (mean_ns carries the metric):")
+    s1, s2, _s05, sd = rows[0], rows[1], rows[2], rows[3]
+    print(f"  throughput krps @1.0x healthy      = {s1['throughput'] / 1e3:.1f}")
+    print(f"  p50 ms @1.0x healthy               = {s1['p50'] * 1e3:.1f}")
+    print(f"  p99 ms @1.0x healthy               = {s1['p99'] * 1e3:.1f}")
+    print(f"  p99 ms @2.0x healthy               = {s2['p99'] * 1e3:.1f}")
+    print(f"  shed+reject pct @2.0x healthy      = "
+          f"{100.0 * (s2['shed'] + s2['rejected']) / s2['submitted']:.1f}")
+    print(f"  p99 ms @1.0x one-dead              = {sd['p99'] * 1e3:.1f}")
+    print(f"  completed pct @1.0x one-dead       = {100.0 * sd['completed'] / sd['submitted']:.1f}")
+
+
+def main():
+    check_determinism()
+    check_conservation()
+    check_front_only_shed()
+    check_percentiles()
+    check_p99_bound()
+    print("\nvalidate_serving_batching: ALL CHECKS PASSED")
+    if "--emit-baseline" in sys.argv:
+        print()
+        emit_baseline()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

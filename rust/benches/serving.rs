@@ -1,0 +1,222 @@
+//! PR 9 serving-tier bench + acceptance gates.
+//!
+//! Four deterministic virtual-time scenarios (open-loop Poisson
+//! arrivals, seed 42, the default `BatchPolicy`) over real warm
+//! resident-panel engines — wall-clock entries time the simulation
+//! itself (forward compute dominates), `metric:` entries carry the
+//! serving SLO numbers in `mean_ns`:
+//!
+//! * **1.0x healthy** — 10^5 arrivals at the fleet's saturated
+//!   capacity: the headline `tools/check_bench_regression.py` gates;
+//! * **2.0x healthy** — overload: admission control must reject
+//!   deterministically and keep the admitted p99 bounded;
+//! * **0.5x healthy** — light load: coalescing trades partial batches
+//!   for bounded latency, nothing is lost;
+//! * **1.0x-of-healthy, one chip dead** — `chip_dead=1,seed=9`: the
+//!   survivor serves at reduced capacity, ABFT checksum waves priced
+//!   into every request's latency.
+//!
+//! In-binary acceptance gates: request conservation in every scenario,
+//! zero unrecovered faults, admitted p99 within the analytic
+//! `BatchPolicy::p99_bound_s` cap (env `SERVING_P99_BOUND_FACTOR`
+//! relaxes on noisy runners), and a steady-state zero-allocation audit
+//! (a warmed run replayed end-to-end touches the heap zero times; env
+//! `SERVING_ALLOC_TOLERANCE`).  The regression script holds the p99 /
+//! shed-rate metrics under ceiling gates and the two zero counters
+//! under exact gates.
+//!
+//! Run: `cargo bench --bench serving` (add `-- --json` for
+//! `BENCH_serving.json`).
+
+use std::sync::Arc;
+
+use mram_pim::arch::NetworkParams;
+use mram_pim::bench::{bench, emit, heap_allocations, BenchResult, CountingAllocator};
+use mram_pim::data::Dataset;
+use mram_pim::fpu::FpCostModel;
+use mram_pim::model::Network;
+use mram_pim::runtime::FUNCTIONAL_LANES;
+use mram_pim::serve::{open_loop_arrivals, BatchPolicy, InferBackend, ServeReport, ServeSim};
+use mram_pim::sim::{FaultConfig, FaultSession};
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+fn env_f64(name: &str, default: f64) -> f64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// A scalar-metric pseudo-entry (SLO value in `mean_ns`): keeps the
+/// serving trajectory in the same JSON sidecar the wall-clock entries
+/// use, so the regression gate can watch it.
+fn metric(name: &str, v: f64) -> BenchResult {
+    BenchResult {
+        name: name.to_string(),
+        iters: 1,
+        mean_ns: v,
+        p50_ns: v,
+        p99_ns: v,
+        min_ns: v,
+    }
+}
+
+fn make_backend(session: Option<Arc<FaultSession>>) -> InferBackend {
+    let net = Network::lenet5();
+    let params = NetworkParams::init(&net, 3);
+    InferBackend::new(
+        net,
+        params,
+        FpCostModel::proposed_fp32(),
+        FUNCTIONAL_LANES,
+        4,
+        2,
+        session,
+    )
+    .expect("serve backend")
+}
+
+fn pool() -> Vec<f32> {
+    Dataset::synthetic(256, 7).full_batch(256).images
+}
+
+fn main() {
+    let policy = BatchPolicy::default();
+    let bound_factor = env_f64("SERVING_P99_BOUND_FACTOR", 1.0);
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut reports: Vec<ServeReport> = Vec::new();
+    let mut total_unrecovered = 0u64;
+
+    let scenarios: [(&str, usize, f64, bool); 4] = [
+        ("serving: 100000 open-loop arrivals @ 1.0x offered load (chips 2, healthy)",
+         100_000, 1.0, false),
+        ("serving: 20000 open-loop arrivals @ 2.0x offered load (chips 2, healthy)",
+         20_000, 2.0, false),
+        ("serving: 20000 open-loop arrivals @ 0.5x offered load (chips 2, healthy)",
+         20_000, 0.5, false),
+        ("serving: 20000 open-loop arrivals @ 1.0x-of-healthy load (chips 2, one dead)",
+         20_000, 1.0, true),
+    ];
+
+    for (name, n, mult, dead) in scenarios {
+        let session = if dead {
+            Some(Arc::new(FaultSession::new(
+                FaultConfig::parse("chip_dead=1,seed=9").expect("fault spec"),
+            )))
+        } else {
+            None
+        };
+        let mut sim = ServeSim::new(make_backend(session.clone()), policy, pool(), n)
+            .expect("serve sim");
+        let cap = sim.capacity_rps();
+        sim.warm().expect("warm");
+        let arrivals = open_loop_arrivals(n, mult * cap, 42);
+        let mut report: Option<ServeReport> = None;
+        let r = bench(name, 0, 1, || {
+            report = Some(sim.run(&arrivals).expect("serve run"));
+        });
+        let report = report.expect("one timed run");
+        let st = report.stats;
+
+        // ---- acceptance gates, per scenario ----
+        assert!(st.conservation_holds(), "{name}: request conservation broke: {st:?}");
+        assert_eq!(st.submitted, n as u64, "{name}: every arrival must be accounted");
+        assert!(
+            st.batched_samples <= st.batches * policy.max_batch as u64,
+            "{name}: a batch exceeded max_batch"
+        );
+        assert_eq!(st.failed, 0, "{name}: no batch may fail on unrecovered faults");
+        let bound = policy.p99_bound_s(sim.backend().svc_latency(policy.max_batch))
+            * bound_factor;
+        assert!(
+            report.p99_s <= bound,
+            "{name}: admitted p99 {:.3} ms over the analytic bound {:.3} ms",
+            report.p99_s * 1e3,
+            bound * 1e3
+        );
+        if let Some(s) = &session {
+            total_unrecovered += s.report().unrecovered;
+            assert!(
+                st.fault_latency_s > 0.0,
+                "{name}: ABFT pricing must reach per-request latency"
+            );
+            assert_eq!(sim.live_chips(), 1, "{name}: chip_dead=1 leaves one survivor");
+        }
+        println!(
+            "{name}\n  admitted {} / rejected {} / shed {} / completed {}  \
+             batches {} (mean {:.1})  thr {:.1} krps  p50 {:.3} ms  p99 {:.3} ms",
+            st.admitted,
+            st.rejected,
+            st.shed,
+            st.completed,
+            st.batches,
+            st.batched_samples as f64 / st.batches.max(1) as f64,
+            report.throughput_rps / 1e3,
+            report.p50_s * 1e3,
+            report.p99_s * 1e3,
+        );
+        results.push(r);
+        reports.push(report);
+    }
+
+    // ---- steady-state allocation audit: a warmed (unarmed) scenario
+    //      replayed end-to-end must not touch the heap — armed runs
+    //      advance hook epochs and legitimately diverge, so the audit
+    //      scenario runs clean ----
+    let mut audit = ServeSim::new(make_backend(None), policy, pool(), 4000).expect("audit sim");
+    let audit_arrivals = open_loop_arrivals(4000, 1.2 * audit.capacity_rps(), 42);
+    audit.warm().expect("audit warm");
+    audit.run(&audit_arrivals).expect("audit settle run");
+    let allocs0 = heap_allocations();
+    let audit_report = audit.run(&audit_arrivals).expect("audit run");
+    let dispatch_allocs = heap_allocations() - allocs0;
+    assert!(audit_report.stats.conservation_holds());
+    println!("steady-state audit (warmed serving run, 4000 arrivals): {dispatch_allocs} allocs");
+
+    let (r1, r2, rd) = (&reports[0], &reports[1], &reports[3]);
+    results.push(metric(
+        "metric: serving throughput krps @1.0x healthy",
+        r1.throughput_rps / 1e3,
+    ));
+    results.push(metric("metric: serving p50 ms @1.0x healthy", r1.p50_s * 1e3));
+    results.push(metric("metric: serving p99 ms @1.0x healthy", r1.p99_s * 1e3));
+    results.push(metric("metric: serving p99 ms @2.0x healthy", r2.p99_s * 1e3));
+    results.push(metric(
+        "metric: serving shed+reject pct @2.0x healthy",
+        100.0 * (r2.stats.shed + r2.stats.rejected) as f64 / r2.stats.submitted as f64,
+    ));
+    results.push(metric("metric: serving p99 ms @1.0x one-dead", rd.p99_s * 1e3));
+    results.push(metric(
+        "metric: serving completed pct @1.0x one-dead",
+        100.0 * rd.stats.completed as f64 / rd.stats.submitted as f64,
+    ));
+    results.push(metric(
+        "metric: serving unrecovered faults",
+        total_unrecovered as f64,
+    ));
+    results.push(metric(
+        "metric: serving steady-state dispatch allocs",
+        dispatch_allocs as f64,
+    ));
+    emit("serving", &results);
+
+    // ---- final acceptance gates ----
+    assert_eq!(total_unrecovered, 0, "acceptance: ABFT must recover every served batch");
+    assert!(
+        reports[1].stats.rejected > 0,
+        "acceptance: 2x overload must reject deterministically"
+    );
+    assert_eq!(
+        reports[2].stats.completed, reports[2].stats.submitted,
+        "acceptance: 0.5x load must complete everything"
+    );
+    let alloc_tolerance = env_f64("SERVING_ALLOC_TOLERANCE", 0.0) as u64;
+    assert!(
+        dispatch_allocs <= alloc_tolerance,
+        "acceptance: a warmed serving run must not touch the heap \
+         (measured {dispatch_allocs} allocations, tolerance {alloc_tolerance})"
+    );
+    println!("serving OK");
+}

@@ -726,6 +726,12 @@ impl TrainEngine {
         batch: usize,
     ) -> Result<(f32, usize)> {
         let classes = self.validate(net, params, images, labels, batch)?;
+        // Eval waves run through the same ABFT guard as training; claim
+        // the batch on the session so the CLI fault report covers
+        // inference traffic too.
+        if let Some(h) = self.faults.as_deref() {
+            h.note_eval_batch();
+        }
         let r = self.gemm.forward(net, params, images, batch);
         let (loss, _) = softmax_xent(&r.y, labels, batch, classes);
         let mut correct = 0usize;

@@ -5,6 +5,9 @@
 //! mram-pim train  [--steps N] [--lr F] [--seed N] [--artifacts DIR]
 //!                 [--train-size N] [--threads N] [--shards N]
 //!                 [--no-deep-validate] [--config FILE]
+//! mram-pim serve  [--requests N] [--load F] [--chips N] [--threads N]
+//!                 [--depth N] [--max-batch N] [--max-wait-ms F]
+//!                 [--deadline-ms F] [--seed N] [--faults SPEC] [--real-time]
 //! mram-pim mac    [--format fp32|fp16|bf16] [--ultrafast]
 //! mram-pim sweep  [--what align|formats|subarray|shards]
 //! mram-pim selfcheck
@@ -95,6 +98,9 @@ USAGE:
                   [--train-size N] [--eval-every N] [--threads N]
                   [--shards N] [--faults SPEC] [--no-deep-validate]
                   [--config FILE]
+  mram-pim serve  [--requests N] [--load F] [--chips N] [--threads N]
+                  [--depth N] [--max-batch N] [--max-wait-ms F]
+                  [--deadline-ms F] [--seed N] [--faults SPEC] [--real-time]
   mram-pim mac    [--format fp32|fp16|bf16] [--ultrafast]
   mram-pim sweep  [--what align|formats|subarray|shards]
   mram-pim selfcheck
@@ -111,6 +117,17 @@ arms the seeded device fault model with ABFT recovery, e.g.
 `--faults transient=1e-4,stuck=4,weight_stuck=2,chip_dead=1,seed=7`
 (keys: transient, stuck, weight_stuck, weight_flip, chip_fail,
 chip_dead, seed, retries, shard_retries, policy=reshard|rollback).
+`serve` runs the inference serving tier over the warm resident-panel
+engines: an open-loop load generator offers `--load`x the fleet's
+saturated capacity, requests coalesce into batched GEMM waves
+(`--max-batch`/`--max-wait-ms`), a bounded queue (`--depth`) rejects
+overload fast, and `--deadline-ms` sheds stale requests before
+dispatch.  With `--faults`, dead chips shrink capacity via survivor
+re-dispatch and ABFT retry waves are priced into per-request latency
+(weight-storage axes are refused — serving never rewrites its panels).
+Default is the deterministic virtual-time simulation; `--real-time`
+drives the threaded wall-clock server instead (use a smaller
+`--requests` there).
 (Built with `--features pjrt` + `make artifacts`, the same command
 executes the AOT-compiled XLA graphs instead.)"
 }

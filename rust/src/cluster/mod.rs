@@ -28,5 +28,5 @@ pub mod reduce;
 
 pub use cost::{cluster_step_cost, verify_cluster_totals, ClusterCost, ClusterCounts};
 pub use engine::{ClusterEngine, ClusterStepResult};
-pub use plan::{ClusterConfig, ShardPlan};
+pub use plan::{live_chips, ClusterConfig, ShardPlan};
 pub use reduce::{reduce_grads, GradSet};

@@ -1,5 +1,6 @@
 //! Cluster topology and batch-sharding plan.
 
+use crate::sim::faults::FaultSession;
 use crate::{Error, Result};
 
 /// Configuration of a modeled multi-chip PIM cluster.
@@ -96,6 +97,19 @@ impl ShardPlan {
     }
 }
 
+/// Surviving chips of a fleet of `chips` (1-based cluster chip ids, the
+/// `FaultSession::chip_is_dead` convention) — the capacity the serving
+/// tier re-dispatches over when `chip_dead` is armed.  With no session
+/// every configured chip is live.
+pub fn live_chips(session: Option<&FaultSession>, chips: usize) -> Vec<usize> {
+    (1..=chips)
+        .filter(|&c| match session {
+            Some(s) => !s.chip_is_dead(c as u64, chips as u64),
+            None => true,
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -157,5 +171,34 @@ mod tests {
         let c = ClusterConfig::new(0, 0);
         assert_eq!((c.shards, c.threads_per_shard), (1, 1));
         assert_eq!(ClusterConfig::default(), ClusterConfig::new(1, 1));
+    }
+
+    #[test]
+    fn live_chips_tracks_the_dead_set() {
+        use crate::sim::faults::FaultConfig;
+
+        // No session: every configured chip is live.
+        assert_eq!(live_chips(None, 4), vec![1, 2, 3, 4]);
+        assert_eq!(live_chips(None, 0), Vec::<usize>::new());
+        // A zero-rate session kills nothing.
+        let clean = FaultSession::new(FaultConfig::default());
+        assert_eq!(live_chips(Some(&clean), 3), vec![1, 2, 3]);
+        // chip_dead=1 removes exactly one chip, deterministically.
+        let s = FaultSession::new(FaultConfig {
+            chip_dead: 1,
+            seed: 9,
+            ..FaultConfig::default()
+        });
+        let live = live_chips(Some(&s), 2);
+        assert_eq!(live.len(), 1);
+        assert!(s.chip_is_dead(if live[0] == 1 { 2 } else { 1 }, 2));
+        assert_eq!(live, live_chips(Some(&s), 2), "dead set is static");
+        // chip_dead >= chips leaves no survivors.
+        let all = FaultSession::new(FaultConfig {
+            chip_dead: 99,
+            seed: 5,
+            ..FaultConfig::default()
+        });
+        assert!(live_chips(Some(&all), 4).is_empty());
     }
 }

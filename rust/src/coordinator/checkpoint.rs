@@ -26,6 +26,21 @@ use crate::{Error, Result};
 const MAGIC: &[u8; 4] = b"MPIM";
 const VERSION: u32 = 1;
 
+/// Element count implied by a dims vector, with the historical
+/// scalar convention (`[]` → 1) — and overflow caught as a typed
+/// error: `u64::product` would wrap in release builds, letting a
+/// corrupt dims header alias a small (wrong) element count, and
+/// panic in debug builds.
+fn tensor_len(dims: &[u64]) -> Result<u64> {
+    let mut n: u64 = 1;
+    for &d in dims {
+        n = n.checked_mul(d).ok_or_else(|| {
+            Error::Sim(format!("tensor dims {dims:?} overflow the element count"))
+        })?;
+    }
+    Ok(n.max(1))
+}
+
 /// A host-side checkpoint: tensors as (dims, data).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Checkpoint {
@@ -71,7 +86,7 @@ impl Checkpoint {
         let path = path.as_ref();
         // Refuse malformed checkpoints before touching the filesystem.
         for (dims, data) in &self.tensors {
-            let n: u64 = dims.iter().product::<u64>().max(1);
+            let n = tensor_len(dims)?;
             if data.len() as u64 != n && !(dims.is_empty() && data.len() == 1) {
                 return Err(Error::Sim(format!(
                     "tensor dims {dims:?} inconsistent with {} values",
@@ -153,7 +168,7 @@ impl Checkpoint {
                 f.read_exact(&mut u64b)?;
                 dims.push(u64::from_le_bytes(u64b));
             }
-            let n: u64 = dims.iter().product::<u64>().max(1);
+            let n = tensor_len(&dims)?;
             if n > 1 << 28 {
                 return Err(Error::Sim(format!("implausible tensor size {n}")));
             }
@@ -164,7 +179,44 @@ impl Checkpoint {
             }
             tensors.push((dims, data));
         }
+        // The format implies its exact length; anything after the last
+        // tensor means the file is not the checkpoint it claims to be
+        // (e.g. two saves concatenated by a broken copy).
+        let mut trailing = [0u8; 1];
+        match f.read(&mut trailing) {
+            Ok(0) => {}
+            Ok(_) => {
+                return Err(Error::Sim(
+                    "trailing bytes after the checkpoint payload".into(),
+                ))
+            }
+            Err(e) => return Err(Error::Io(e)),
+        }
         Ok(Checkpoint { tensors, step })
+    }
+
+    /// Pre-flight a restore: does this checkpoint's tensor layout match
+    /// the runtime state it would be loaded into?  A typed shape
+    /// mismatch here beats a confusing downstream failure after the
+    /// state has already been half-replaced.
+    pub fn matches_shapes(&self, state: &TrainState) -> Result<()> {
+        let host = state.to_host_shaped()?;
+        if host.len() != self.tensors.len() {
+            return Err(Error::Sim(format!(
+                "checkpoint holds {} tensors, the runtime state {}",
+                self.tensors.len(),
+                host.len()
+            )));
+        }
+        for (i, (t, (dims, _))) in host.iter().zip(self.tensors.iter()).enumerate() {
+            if t.dims != *dims {
+                return Err(Error::Sim(format!(
+                    "tensor {i}: checkpoint dims {dims:?} do not match runtime dims {:?}",
+                    t.dims
+                )));
+            }
+        }
+        Ok(())
     }
 }
 
@@ -287,6 +339,75 @@ mod tests {
         let mut tmp_name = path.as_os_str().to_owned();
         tmp_name.push(".tmp");
         assert!(!std::path::PathBuf::from(tmp_name).exists(), "no temp debris");
+    }
+
+    #[test]
+    fn overflowing_dims_are_typed_errors_not_panics() {
+        // A corrupt dims header whose product wraps u64 used to alias a
+        // small element count (release) or panic (debug).  Craft the
+        // file by hand: one rank-3 tensor claiming u64::MAX x u64::MAX
+        // x 2 elements.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&7u64.to_le_bytes()); // step
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // n_tensors
+        bytes.extend_from_slice(&3u32.to_le_bytes()); // rank
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        bytes.extend_from_slice(&2u64.to_le_bytes());
+        let path = tmp("overflow.ckpt");
+        std::fs::write(&path, &bytes).unwrap();
+        match Checkpoint::load(&path) {
+            Err(Error::Sim(m)) => assert!(m.contains("overflow"), "{m}"),
+            other => panic!("expected overflow error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn trailing_garbage_is_refused() {
+        let c = sample();
+        let path = tmp("trailing.ckpt");
+        c.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(b"oops");
+        std::fs::write(&path, &bytes).unwrap();
+        match Checkpoint::load(&path) {
+            Err(Error::Sim(m)) => assert!(m.contains("trailing"), "{m}"),
+            other => panic!("expected trailing-bytes error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn single_byte_corruption_never_panics() {
+        // Flip every byte of a valid checkpoint in turn.  Loads may
+        // succeed (a flipped f32 payload bit is still a valid float) or
+        // fail typed; what they must never do is panic or wedge.
+        let c = sample();
+        let path = tmp("flip_sweep.ckpt");
+        c.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        for i in 0..bytes.len() {
+            let mut corrupt = bytes.clone();
+            corrupt[i] ^= 0xFF;
+            std::fs::write(&path, &corrupt).unwrap();
+            let _ = Checkpoint::load(&path); // Err or Ok, both fine; panic fails the test
+        }
+    }
+
+    #[test]
+    fn shape_preflight_catches_layout_mismatches() {
+        let c = sample();
+        let state = c.to_state().unwrap();
+        c.matches_shapes(&state).unwrap();
+        // Same tensor count, one dims vector off.
+        let mut skewed = c.clone();
+        skewed.tensors[0].0 = vec![3, 2];
+        assert!(skewed.matches_shapes(&state).is_err());
+        // Tensor count off.
+        let mut short = c.clone();
+        short.tensors.pop();
+        assert!(short.matches_shapes(&state).is_err());
     }
 
     #[test]

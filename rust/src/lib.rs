@@ -40,6 +40,11 @@
 //!   `artifacts/*.hlo.txt`), offline-typechecked against `rust/xla-stub`.
 //! * [`coordinator`] — the leader that drives functional training and the
 //!   cost simulation together and emits the paper's tables/figures.
+//! * [`serve`] — the inference serving tier: dynamic batching over the
+//!   resident-panel engines, bounded-queue admission control,
+//!   per-request deadlines, and graceful degradation under the
+//!   [`sim::faults`] chip-failure draws (survivor re-dispatch, ABFT
+//!   retry pricing in per-request latency).
 //!
 //! Supporting substrates: [`config`], [`cli`], [`metrics`], [`report`],
 //! [`prop`] (property-test engine) and [`bench`] (micro-bench harness).
@@ -61,6 +66,7 @@ pub mod nvsim;
 pub mod prop;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 
 /// Crate-wide error type.

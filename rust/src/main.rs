@@ -13,6 +13,7 @@ use mram_pim::model::Network;
 use mram_pim::nvsim::OpCosts;
 use mram_pim::report;
 use mram_pim::runtime::{Runtime, FUNCTIONAL_LANES, TRAIN_BATCH};
+use mram_pim::serve::{open_loop_arrivals, BatchPolicy, ServeError, ServeSim, Server};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -37,6 +38,7 @@ fn run(args: &Args) -> mram_pim::Result<()> {
     match args.command.as_str() {
         "report" => cmd_report(args),
         "train" => cmd_train(args),
+        "serve" => cmd_serve(args),
         "mac" => cmd_mac(args),
         "sweep" => cmd_sweep(args),
         "selfcheck" => cmd_selfcheck(args),
@@ -203,6 +205,10 @@ fn cmd_train(args: &Args) -> mram_pim::Result<()> {
             "  recovery work: {} checksum adds, {} retry MACs, {} re-shard MACs",
             fr.checksum_adds, fr.retry_macs, fr.reshard_macs
         );
+        println!(
+            "  inference coverage: {} eval batch(es) rode the same ABFT guard",
+            fr.eval_batches
+        );
     }
     println!(
         "final accuracy: {:.2}%  (wall {:.1}s)",
@@ -268,6 +274,192 @@ fn report_functional_ledger(
         )));
     }
     println!("  matches model::training_work and accel::train_step_cost exactly");
+    Ok(())
+}
+
+/// The `serve` subcommand: open-loop load against the serving tier.
+/// Default is the deterministic virtual-time simulation (seconds of
+/// wall-clock for ~10^5 arrivals); `--real-time` drives the threaded
+/// wall-clock server paced by a measured warm batch instead.
+fn cmd_serve(args: &Args) -> mram_pim::Result<()> {
+    let requests = args.usize_or("requests", 100_000)?;
+    let load = args.f64_or("load", 1.0)?;
+    if !(load.is_finite() && load > 0.0) {
+        return Err(mram_pim::Error::Config(format!(
+            "--load must be a positive multiplier, got {load}"
+        )));
+    }
+    let chips = args.usize_or("chips", 2)?;
+    let threads = args.usize_or("threads", 4)?;
+    let seed = args.usize_or("seed", 42)? as u64;
+    let policy = BatchPolicy {
+        max_batch: args.usize_or("max-batch", 32)?,
+        max_wait_s: args.f64_or("max-wait-ms", 2.0)? * 1e-3,
+        depth: args.usize_or("depth", 256)?,
+        deadline_s: args.f64_or("deadline-ms", 8.0)? * 1e-3,
+    };
+    policy.validate()?;
+    let artifacts = args.str_or("artifacts", "artifacts");
+    let mut rt = Runtime::load_dir(&artifacts)?;
+    rt.set_threads(threads);
+    let fault_spec = args.str_or("faults", "");
+    if !fault_spec.is_empty() {
+        rt.set_faults(Some(mram_pim::sim::FaultConfig::parse(&fault_spec)?));
+        match rt.fault_report() {
+            Some(_) => println!("fault model armed: {fault_spec}"),
+            None => println!(
+                "note: --faults ignored — the {} backend does not model the device array",
+                rt.platform()
+            ),
+        }
+    }
+    let state = rt.init_params(seed as i32)?;
+    // 256-image synthetic pool; request j serves pool row j % 256.
+    let pool = mram_pim::data::Dataset::synthetic(256, 7).full_batch(256).images;
+    println!("runtime backend: {}", rt.platform());
+    if args.switch("real-time") {
+        return serve_real_time(&rt, &state, chips, policy, requests, load, seed, &pool);
+    }
+    let backend = rt.infer_backend(&state, chips)?;
+    let mut sim = ServeSim::new(backend, policy, pool, requests)?;
+    let cap = sim.capacity_rps();
+    println!(
+        "serving (virtual time): {} chip(s) configured, {} alive; \
+         capacity {:.0} req/s; offering {load:.2}x = {:.0} req/s over {requests} requests",
+        chips,
+        sim.live_chips(),
+        cap,
+        load * cap
+    );
+    sim.warm()?;
+    let arrivals = open_loop_arrivals(requests, load * cap, seed);
+    let wall = std::time::Instant::now();
+    let r = sim.run(&arrivals)?;
+    let wall_s = wall.elapsed().as_secs_f64();
+    let st = r.stats;
+    println!("\n{:>10} submitted", st.submitted);
+    println!(
+        "{:>10} admitted / {} rejected at admission ({:.2}%)",
+        st.admitted,
+        st.rejected,
+        100.0 * st.rejected as f64 / st.submitted.max(1) as f64
+    );
+    println!(
+        "{:>10} completed / {} shed past deadline / {} failed on unrecovered faults",
+        st.completed, st.shed, st.failed
+    );
+    println!(
+        "{:>10} batches (mean size {:.1}), {} transient re-dispatch(es)",
+        st.batches,
+        st.batched_samples as f64 / st.batches.max(1) as f64,
+        st.redispatched
+    );
+    println!(
+        "\nthroughput {:.1} req/s ({:.1}% of healthy capacity)",
+        r.throughput_rps,
+        100.0 * r.throughput_rps / cap
+    );
+    println!(
+        "latency (completed): mean {:.3} ms  p50 {:.3} ms  p99 {:.3} ms  \
+         (p99 bound {:.3} ms)",
+        r.mean_s * 1e3,
+        r.p50_s * 1e3,
+        r.p99_s * 1e3,
+        policy.p99_bound_s(sim.backend().svc_latency(policy.max_batch)) * 1e3
+    );
+    if st.fault_latency_s > 0.0 {
+        println!(
+            "fault handling priced into latency: {:.3} ms total ABFT/retry waves",
+            st.fault_latency_s * 1e3
+        );
+    }
+    println!(
+        "virtual elapsed {:.3} s; simulated in {wall_s:.1} s wall-clock",
+        r.elapsed_s
+    );
+    Ok(())
+}
+
+///// Wall-clock serving: measure a warm full batch to estimate this
+/// machine's capacity, then pace the same open-loop schedule in real
+/// time against the threaded [`Server`].
+#[allow(clippy::too_many_arguments)]
+fn serve_real_time(
+    rt: &Runtime,
+    state: &mram_pim::runtime::TrainState,
+    chips: usize,
+    policy: BatchPolicy,
+    requests: usize,
+    load: f64,
+    seed: u64,
+    pool: &[f32],
+) -> mram_pim::Result<()> {
+    let probe = rt.infer_backend(state, chips)?;
+    let live = probe.live_engines();
+    if live.is_empty() {
+        return Err(mram_pim::Error::Sim(format!(
+            "serve: all {chips} chips dead under the armed fault session"
+        )));
+    }
+    let sample_len = probe.sample_len();
+    let b = policy.max_batch;
+    let mut imgs = Vec::with_capacity(b * sample_len);
+    for r in 0..b {
+        let row = (r % (pool.len() / sample_len)) * sample_len;
+        imgs.extend_from_slice(&pool[row..row + sample_len]);
+    }
+    let mut logits = vec![0.0f32; b * probe.classes()];
+    probe.infer(live[0], &imgs, b, &mut logits)?; // warm the arena
+    let t0 = std::time::Instant::now();
+    probe.infer(live[0], &imgs, b, &mut logits)?;
+    let batch_wall = t0.elapsed().as_secs_f64();
+    let cap = live.len() as f64 * b as f64 / batch_wall;
+    println!(
+        "serving (real time): {} chip(s) alive; measured warm batch-{b} wall {:.1} ms \
+         => capacity {:.0} req/s; offering {load:.2}x over {requests} requests",
+        live.len(),
+        batch_wall * 1e3,
+        cap
+    );
+    let srv = Server::spawn(rt.infer_backend(state, chips)?, policy)?;
+    let arrivals = open_loop_arrivals(requests, load * cap, seed);
+    let pool_n = pool.len() / sample_len;
+    let mut tickets = Vec::with_capacity(requests);
+    let start = std::time::Instant::now();
+    for (i, &a) in arrivals.iter().enumerate() {
+        let target = std::time::Duration::from_secs_f64(a);
+        if let Some(sleep) = target.checked_sub(start.elapsed()) {
+            std::thread::sleep(sleep);
+        }
+        let row = (i % pool_n) * sample_len;
+        match srv.submit(&pool[row..row + sample_len]) {
+            Ok(t) => tickets.push(t),
+            Err(ServeError::Overloaded { .. }) => {} // counted in server stats
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let (mut completed, mut shed, mut faulted, mut other) = (0u64, 0u64, 0u64, 0u64);
+    for t in tickets {
+        match t.wait() {
+            Ok(_) => completed += 1,
+            Err(ServeError::Deadline) => shed += 1,
+            Err(ServeError::Faulted { .. }) => faulted += 1,
+            Err(_) => other += 1,
+        }
+    }
+    let wall_s = start.elapsed().as_secs_f64();
+    let st = srv.shutdown();
+    println!(
+        "\n{} submitted: {} completed, {} rejected, {} shed, {} faulted, {} other",
+        st.submitted, completed, st.rejected, shed, faulted, other
+    );
+    println!(
+        "{} batches (mean size {:.1}); wall {:.1} s => {:.0} req/s delivered",
+        st.batches,
+        st.batched_samples as f64 / st.batches.max(1) as f64,
+        wall_s,
+        completed as f64 / wall_s.max(1e-9)
+    );
     Ok(())
 }
 

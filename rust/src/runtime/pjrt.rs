@@ -175,6 +175,20 @@ impl Runtime {
     pub fn fault_report(&self) -> Option<crate::sim::FaultReport> {
         None
     }
+
+    /// The serving tier runs on the modeled PIM chips, which XLA does
+    /// not expose — typed refusal for API parity with the functional
+    /// runtime.
+    pub fn infer_backend(
+        &self,
+        _state: &TrainState,
+        _chips: usize,
+    ) -> Result<crate::serve::InferBackend> {
+        Err(Error::Runtime(
+            "serving requires the functional PIM backend (build without --features pjrt)"
+                .into(),
+        ))
+    }
 }
 
 /// Model parameters held as device literals between steps.

@@ -341,17 +341,60 @@ impl Runtime {
     }
 
     /// Evaluate a batch: (mean loss, #correct as f32 — PJRT parity).
+    ///
+    /// Routed through the same engine-shaped parameter cache as
+    /// [`Runtime::train_step`] with the resident decoded panels built,
+    /// so repeated eval re-allocates nothing and (with a fault session
+    /// armed) rides the same ABFT-guarded waves, counted in
+    /// [`Runtime::fault_report`] as `eval_batches`.
     pub fn eval(
         &self,
         state: &TrainState,
         images: &[f32],
         labels: &[i32],
     ) -> Result<(f32, f32)> {
-        let params = state_to_params(&self.net, state)?;
+        let mut cache = self.cached.lock().expect("param cache poisoned");
+        match cache.as_mut() {
+            Some(p) => copy_state_into(&self.net, state, p)?,
+            None => *cache = Some(state_to_params(&self.net, state)?),
+        }
+        let params = cache.as_mut().expect("cache just filled");
+        self.engine.ensure_resident(params);
         let (loss, correct) =
             self.engine
-                .evaluate(&self.net, &params, images, labels, labels.len())?;
+                .evaluate(&self.net, params, images, labels, labels.len())?;
         Ok((loss, correct as f32))
+    }
+
+    /// Engine-shaped snapshot of a state with the resident decoded
+    /// weight panels built — the shared-immutable parameter set the
+    /// serving tier reads concurrently from every chip engine.
+    pub fn snapshot_params(&self, state: &TrainState) -> Result<NetworkParams> {
+        let mut params = state_to_params(&self.net, state)?;
+        self.engine.ensure_resident(&mut params);
+        Ok(params)
+    }
+
+    /// Build an inference serving backend over this runtime's network
+    /// and cost model: `chips` single-chip engines (cluster chip ids
+    /// `1..=chips`; id 0 is the training engine's hook) sharing one
+    /// resident parameter snapshot, with per-chip fault hooks drawn
+    /// from the armed session — the [`crate::serve`] entry point.
+    pub fn infer_backend(
+        &self,
+        state: &TrainState,
+        chips: usize,
+    ) -> Result<crate::serve::InferBackend> {
+        let params = self.snapshot_params(state)?;
+        crate::serve::InferBackend::new(
+            self.net.clone(),
+            params,
+            *self.engine.gemm().model(),
+            FUNCTIONAL_LANES,
+            self.threads,
+            chips,
+            self.faults.clone(),
+        )
     }
 
     /// Element-wise PIM multiply (softfloat gold chain — what the AOT
@@ -495,6 +538,21 @@ mod tests {
         let (loss, correct) = rt.eval(&state, &data.images, &data.labels).unwrap();
         assert!(loss.is_finite() && loss > 0.0);
         assert!((0.0..=16.0).contains(&correct));
+    }
+
+    #[test]
+    fn eval_rides_the_cached_resident_params() {
+        let rt = Runtime::load_dir("artifacts").unwrap();
+        let data = Dataset::synthetic(8, 11).full_batch(8);
+        let state = rt.init_params(11).unwrap();
+        let a = rt.eval(&state, &data.images, &data.labels).unwrap();
+        let b = rt.eval(&state, &data.images, &data.labels).unwrap();
+        assert_eq!(a, b, "cached-path eval is deterministic");
+        // The snapshot the serving tier shares carries resident panels.
+        let snap = rt.snapshot_params(&state).unwrap();
+        for p in snap.layers.iter().flatten() {
+            assert_eq!(p.wdec.len(), p.w.len(), "resident panel built");
+        }
     }
 
     #[test]

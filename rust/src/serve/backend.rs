@@ -1,0 +1,325 @@
+//! The inference backend: per-chip warm engines over one
+//! shared-immutable resident parameter snapshot.
+
+use std::sync::Arc;
+
+use crate::arch::gemm::{GemmEngine, NetworkParams};
+use crate::cluster::live_chips;
+use crate::fpu::FpCostModel;
+use crate::model::Network;
+use crate::sim::faults::{FaultHook, FaultSession};
+use crate::{Error, Result};
+
+/// Per-dispatch outcome: the priced latency of the batch (clean GEMM
+/// waves plus fault-handling waves from the hook ledger delta) and
+/// whether the ABFT retry budget left anything unrecovered.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InferOutcome {
+    /// Full batch service latency on the PIM clock: the forward pass's
+    /// ledger latency plus `fault_latency_s`.
+    pub latency_s: f64,
+    /// Portion of `latency_s` spent on fault handling: ABFT checksum
+    /// adds and row-retry MACs, ceil-divided into waves exactly like
+    /// the train-step pricing.
+    pub fault_latency_s: f64,
+    /// Output rows still corrupt after the retry budget.  Nonzero means
+    /// the caller must not deliver the logits.
+    pub unrecovered: u64,
+}
+
+/// `chips` single-chip inference engines reading **one** resident
+/// parameter snapshot.
+///
+/// The engines are clones of one pooled [`GemmEngine`] (shared worker
+/// pool + scratch arena — the serving tiers dispatch one batch at a
+/// time, so sharing stays correct), each armed with its own per-chip
+/// [`FaultHook`] (cluster chip ids `1..=chips`; id 0 is the training
+/// engine's hook).  The parameters are owned here and only ever read:
+/// the PR 8 resident decoded panels are shared-immutable across every
+/// chip, which is what makes dead-chip re-dispatch bit-transparent —
+/// any survivor computes the identical logits.
+#[derive(Debug)]
+pub struct InferBackend {
+    net: Network,
+    params: NetworkParams,
+    engines: Vec<GemmEngine>,
+    session: Option<Arc<FaultSession>>,
+    t_mac: f64,
+    sample_len: usize,
+    classes: usize,
+}
+
+impl InferBackend {
+    /// Build the backend.  `params` gains resident decoded panels here
+    /// if the snapshot does not carry them yet.  Weight-storage fault
+    /// axes are refused: serving never rewrites the panels, so a
+    /// `weight_stuck`/`weight_flip` config would be silently ignored —
+    /// a typed error is honest instead.
+    pub fn new(
+        net: Network,
+        mut params: NetworkParams,
+        model: FpCostModel,
+        lanes: usize,
+        threads: usize,
+        chips: usize,
+        session: Option<Arc<FaultSession>>,
+    ) -> Result<InferBackend> {
+        if chips == 0 {
+            return Err(Error::Config("serve: need at least one chip".into()));
+        }
+        if params.layers.len() != net.layers.len() {
+            return Err(Error::Runtime(format!(
+                "serve: snapshot has {} layers, network {}",
+                params.layers.len(),
+                net.layers.len()
+            )));
+        }
+        if let Some(s) = &session {
+            if s.config().weight_faults_enabled() {
+                return Err(Error::Config(
+                    "serve: weight-storage faults (weight_stuck/weight_flip) are a \
+                     training-side model; the serving tier never rewrites its panels"
+                        .into(),
+                ));
+            }
+        }
+        let Some(classes) = net.layers.last().map(|l| l.out_units()) else {
+            return Err(Error::Config("serve: cannot serve an empty network".into()));
+        };
+        let base = GemmEngine::from_model(model, lanes, threads);
+        // Residency: decode any panel the snapshot is missing, once,
+        // before the engines are cloned — every chip reads this copy.
+        for lp in params.layers.iter_mut().flatten() {
+            if lp.wdec.len() != lp.w.len() {
+                lp.wdec.resize(lp.w.len(), 0);
+                base.decode_panel(&lp.w, &mut lp.wdec);
+            }
+        }
+        let engines = (1..=chips as u64)
+            .map(|chip| {
+                let mut e = base.clone();
+                e.set_fault_hook(
+                    session.as_ref().map(|s| Arc::new(FaultHook::new(s.clone(), chip, lanes))),
+                );
+                e
+            })
+            .collect();
+        let (c0, h0, w0) = net.input;
+        Ok(InferBackend {
+            t_mac: model.t_mac(),
+            sample_len: c0 * h0 * w0,
+            classes,
+            net,
+            params,
+            engines,
+            session,
+        })
+    }
+
+    /// Configured chip count (dead chips included — they define offered
+    /// capacity, not surviving capacity).
+    pub fn chips(&self) -> usize {
+        self.engines.len()
+    }
+
+    /// Cluster chip id of engine `idx`.
+    pub fn chip_id(&self, idx: usize) -> u64 {
+        idx as u64 + 1
+    }
+
+    pub fn session(&self) -> Option<&Arc<FaultSession>> {
+        self.session.as_ref()
+    }
+
+    /// Engine indices of the surviving chips under the armed session's
+    /// `chip_dead` draw (all of them when no session is armed).  The
+    /// dead set is static per session, so callers compute this once.
+    pub fn live_engines(&self) -> Vec<usize> {
+        live_chips(self.session.as_deref(), self.engines.len())
+            .into_iter()
+            .map(|chip| chip - 1)
+            .collect()
+    }
+
+    /// Input values per sample (LeNet-5: 1·28·28 = 784).
+    pub fn sample_len(&self) -> usize {
+        self.sample_len
+    }
+
+    /// Logit count per sample.
+    pub fn classes(&self) -> usize {
+        self.classes
+    }
+
+    /// Per-MAC latency of the modeled array — the clock the serving
+    /// simulation runs on.
+    pub fn t_mac(&self) -> f64 {
+        self.t_mac
+    }
+
+    /// Analytic clean forward latency of one `batch`-sample dispatch:
+    /// per MAC-bearing layer, `ceil(batch · macs / lanes)` waves at
+    /// `t_mac` each, accumulated in layer order — exactly the
+    /// `ForwardResult::latency_s` the engine's ledger reports
+    /// (asserted in `rust/tests/serving.rs`).
+    pub fn svc_latency(&self, batch: usize) -> f64 {
+        let lanes = self.engines[0].lanes as u64;
+        let mut t = 0.0f64;
+        for layer in &self.net.layers {
+            let macs = layer.macs_fwd() * batch as u64;
+            if macs > 0 {
+                t += macs.div_ceil(lanes) as f64 * self.t_mac;
+            }
+        }
+        t
+    }
+
+    /// Run one coalesced batch on chip engine `idx`, writing the logits
+    /// row-major `[batch, classes]` into `out`.
+    ///
+    /// Steady-state allocation-free once warm: the forward runs through
+    /// the engine's arena, the result buffer is recycled after the copy
+    /// into `out`, and fault pricing reads a stack snapshot of the
+    /// hook's ledger.  The batch is claimed on the fault session as an
+    /// eval batch, so `FaultReport::eval_batches` covers serving
+    /// traffic.
+    pub fn infer(
+        &self,
+        idx: usize,
+        images: &[f32],
+        batch: usize,
+        out: &mut [f32],
+    ) -> Result<InferOutcome> {
+        let engine = self.engines.get(idx).ok_or_else(|| {
+            Error::Runtime(format!("serve: no chip engine {idx} (chips {})", self.engines.len()))
+        })?;
+        if images.len() != batch * self.sample_len {
+            return Err(Error::Runtime(format!(
+                "serve: batch {} needs {} input values, got {}",
+                batch,
+                batch * self.sample_len,
+                images.len()
+            )));
+        }
+        if out.len() < batch * self.classes {
+            return Err(Error::Runtime(format!(
+                "serve: logits buffer holds {} values, batch {} needs {}",
+                out.len(),
+                batch,
+                batch * self.classes
+            )));
+        }
+        let before = engine.fault_hook().map(|h| {
+            h.note_eval_batch();
+            h.report()
+        });
+        let r = engine.forward(&self.net, &self.params, images, batch);
+        out[..batch * self.classes].copy_from_slice(&r.y[..batch * self.classes]);
+        let clean_latency = r.latency_s;
+        engine.recycle_buf(r.y);
+        let (fault_latency_s, unrecovered) = match (engine.fault_hook(), before) {
+            (Some(h), Some(before)) => {
+                let d = h.report().minus(&before);
+                let lanes = engine.lanes as u64;
+                let fault_waves = d.checksum_adds.div_ceil(lanes) + d.retry_macs.div_ceil(lanes);
+                (fault_waves as f64 * self.t_mac, d.unrecovered)
+            }
+            _ => (0.0, 0),
+        };
+        Ok(InferOutcome {
+            latency_s: clean_latency + fault_latency_s,
+            fault_latency_s,
+            unrecovered,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::FUNCTIONAL_LANES;
+    use crate::sim::faults::FaultConfig;
+
+    fn backend(chips: usize, session: Option<Arc<FaultSession>>) -> InferBackend {
+        let net = Network::lenet5();
+        let params = NetworkParams::init(&net, 3);
+        InferBackend::new(
+            net,
+            params,
+            FpCostModel::proposed_fp32(),
+            FUNCTIONAL_LANES,
+            2,
+            chips,
+            session,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn svc_latency_matches_the_forward_ledger() {
+        let b = backend(1, None);
+        let imgs = vec![0.25f32; 3 * b.sample_len()];
+        let mut out = vec![0f32; 3 * b.classes()];
+        let oc = b.infer(0, &imgs, 3, &mut out).unwrap();
+        assert_eq!(oc.latency_s, b.svc_latency(3), "analytic svc == ledger latency");
+        assert_eq!(oc.fault_latency_s, 0.0);
+        assert_eq!(oc.unrecovered, 0);
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn every_chip_computes_identical_logits() {
+        let b = backend(3, None);
+        let imgs: Vec<f32> = (0..2 * b.sample_len()).map(|i| (i % 7) as f32 * 0.1).collect();
+        let mut a = vec![0f32; 2 * b.classes()];
+        let mut c = vec![0f32; 2 * b.classes()];
+        b.infer(0, &imgs, 2, &mut a).unwrap();
+        b.infer(2, &imgs, 2, &mut c).unwrap();
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a), bits(&c), "shared-immutable panels: any chip, same bits");
+    }
+
+    #[test]
+    fn armed_backend_prices_abft_and_counts_eval_batches() {
+        let s = Arc::new(FaultSession::new(FaultConfig::default()));
+        let b = backend(2, Some(s.clone()));
+        assert_eq!(b.live_engines(), vec![0, 1]);
+        let imgs = vec![0.5f32; b.sample_len()];
+        let mut out = vec![0f32; b.classes()];
+        let oc = b.infer(1, &imgs, 1, &mut out).unwrap();
+        assert!(oc.fault_latency_s > 0.0, "checksum waves are priced");
+        assert_eq!(oc.unrecovered, 0);
+        assert!(oc.latency_s > b.svc_latency(1));
+        assert_eq!(s.report().eval_batches, 1, "serving batch claimed on the session");
+    }
+
+    #[test]
+    fn weight_fault_configs_are_refused() {
+        let s = Arc::new(FaultSession::new(FaultConfig {
+            weight_stuck: 4,
+            ..FaultConfig::default()
+        }));
+        let net = Network::lenet5();
+        let params = NetworkParams::init(&net, 3);
+        assert!(InferBackend::new(
+            net,
+            params,
+            FpCostModel::proposed_fp32(),
+            FUNCTIONAL_LANES,
+            1,
+            1,
+            Some(s)
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn malformed_dispatches_are_typed_errors() {
+        let b = backend(1, None);
+        let imgs = vec![0f32; b.sample_len()];
+        let mut out = vec![0f32; b.classes()];
+        assert!(b.infer(5, &imgs, 1, &mut out).is_err(), "no such chip");
+        assert!(b.infer(0, &imgs[..10], 1, &mut out).is_err(), "short input");
+        assert!(b.infer(0, &imgs, 1, &mut out[..2]).is_err(), "short logits buffer");
+    }
+}

@@ -1,0 +1,152 @@
+//! Serving counters and SLO latency accounting.
+
+/// Request/batch counters of one serving run.  The conservation
+/// invariants ([`ServeStats::conservation_holds`]) guarantee no request
+/// is ever silently dropped: every submission is admitted or rejected,
+/// and every admitted request completes, is shed, or fails.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ServeStats {
+    /// Requests offered to the tier.
+    pub submitted: u64,
+    /// Requests accepted into the queue.
+    pub admitted: u64,
+    /// Requests refused at admission (queue full — `Overloaded`).
+    pub rejected: u64,
+    /// Admitted requests shed at dispatch for missing their deadline.
+    pub shed: u64,
+    /// Requests whose logits were delivered.
+    pub completed: u64,
+    /// Requests lost to unrecovered faults (batch answered `Faulted`).
+    pub failed: u64,
+    /// Coalesced batches dispatched to a chip.
+    pub batches: u64,
+    /// Samples carried by those batches (= completed + failed).
+    pub batched_samples: u64,
+    /// Batches re-dispatched after a transient chip failure.
+    pub redispatched: u64,
+    /// Total per-request latency attributable to fault handling (ABFT
+    /// checksum + retry waves), from the hook ledger deltas.
+    pub fault_latency_s: f64,
+}
+
+impl ServeStats {
+    /// Every request is accounted for exactly once.
+    pub fn conservation_holds(&self) -> bool {
+        self.submitted == self.admitted + self.rejected
+            && self.admitted == self.completed + self.shed + self.failed
+            && self.batched_samples == self.completed + self.failed
+    }
+}
+
+/// Preallocated latency sink with nearest-rank percentiles.
+///
+/// `record` appends within capacity (no allocation in the dispatch
+/// loop); `percentile` sorts a scratch copy with
+/// [`slice::sort_unstable_by`] (in-place, allocation-free) so the
+/// recorder keeps arrival order for inspection.
+#[derive(Debug)]
+pub struct LatencyRecorder {
+    samples: Vec<f64>,
+    scratch: Vec<f64>,
+}
+
+impl LatencyRecorder {
+    pub fn with_capacity(n: usize) -> LatencyRecorder {
+        LatencyRecorder { samples: Vec::with_capacity(n), scratch: Vec::with_capacity(n) }
+    }
+
+    pub fn clear(&mut self) {
+        self.samples.clear();
+    }
+
+    #[inline]
+    pub fn record(&mut self, v: f64) {
+        self.samples.push(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Nearest-rank percentile (`q` in `(0, 100]`): the smallest
+    /// recorded value whose rank is at least `q`% of the sample count.
+    /// `0.0` on an empty recorder.
+    pub fn percentile(&mut self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.scratch.clear();
+        self.scratch.extend_from_slice(&self.samples);
+        self.scratch.sort_unstable_by(f64::total_cmp);
+        let n = self.scratch.len();
+        let rank = ((q / 100.0 * n as f64).ceil() as usize).clamp(1, n);
+        self.scratch[rank - 1]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conservation_invariants() {
+        let mut st = ServeStats {
+            submitted: 10,
+            admitted: 8,
+            rejected: 2,
+            shed: 1,
+            completed: 6,
+            failed: 1,
+            batched_samples: 7,
+            batches: 2,
+            ..ServeStats::default()
+        };
+        assert!(st.conservation_holds());
+        st.shed = 2;
+        assert!(!st.conservation_holds(), "a silently dropped request must be visible");
+    }
+
+    #[test]
+    fn nearest_rank_percentiles() {
+        let mut rec = LatencyRecorder::with_capacity(8);
+        assert_eq!(rec.percentile(99.0), 0.0, "empty recorder");
+        assert_eq!(rec.mean(), 0.0);
+        for v in [5.0, 1.0, 4.0, 2.0, 3.0] {
+            rec.record(v);
+        }
+        assert_eq!(rec.len(), 5);
+        // sorted: [1,2,3,4,5]; nearest rank: ceil(q/100 * 5)
+        assert_eq!(rec.percentile(50.0), 3.0);
+        assert_eq!(rec.percentile(99.0), 5.0);
+        assert_eq!(rec.percentile(100.0), 5.0);
+        assert_eq!(rec.percentile(20.0), 1.0);
+        assert_eq!(rec.percentile(20.0001), 2.0);
+        assert!((rec.mean() - 3.0).abs() < 1e-12);
+        // percentile queries never disturb recorded order
+        rec.record(0.5);
+        assert_eq!(rec.percentile(100.0), 5.0);
+        rec.clear();
+        assert!(rec.is_empty());
+        assert_eq!(rec.percentile(50.0), 0.0);
+    }
+
+    #[test]
+    fn single_sample_is_every_percentile() {
+        let mut rec = LatencyRecorder::with_capacity(1);
+        rec.record(7.5);
+        for q in [0.001, 1.0, 50.0, 99.0, 100.0] {
+            assert_eq!(rec.percentile(q), 7.5);
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! Inference serving tier: dynamic batching, admission control, and
+//! graceful degradation under chip faults.
+//!
+//! The warm zero-alloc engines used to be reachable only through the
+//! offline CLI train/eval loop; this module is the outward-facing
+//! request path over them.  Single-sample inference requests enter a
+//! bounded FIFO queue and are **coalesced into the batched GEMM wave
+//! shape** the resident-panel engine already prefers
+//! ([`BatchPolicy`]: dispatch when `max_batch` requests are queued or
+//! the oldest has waited `max_wait_s`).  Overload is handled by
+//! **admission control** — a full queue rejects fast with a typed
+//! [`ServeError::Overloaded`] instead of collapsing tail latency — and
+//! by **deadline shedding**: requests whose queueing delay exceeds
+//! `deadline_s` are shed *before* dispatch, counted, never silently
+//! dropped.  Under an armed [`crate::sim::faults::FaultSession`] the
+//! tier degrades gracefully: permanently dead chips shrink capacity via
+//! survivor re-dispatch ([`crate::cluster::live_chips`]), transient
+//! chip failures re-dispatch the batch on the earliest-free survivor
+//! with the wasted attempt priced, and ABFT checksum/retry waves are
+//! priced into per-request latency from the hook's ledger delta.
+//!
+//! Two tiers share the policy, metrics and backend:
+//!
+//! * [`ServeSim`] — a deterministic single-threaded **virtual-time**
+//!   discrete-event loop over the analytic PIM latency model.  The
+//!   bench, CI gates, tests and the default CLI `serve` run here:
+//!   ~10⁵ open-loop arrivals replay bit-identically from a seed, in
+//!   seconds of wall-clock.  (Policy semantics are pre-validated in
+//!   `python/tests/validate_serving_batching.py`, the standing
+//!   no-Rust-toolchain discipline.)
+//! * [`Server`] — a real threaded front end (bounded MPSC queue +
+//!   dispatcher thread) for wall-clock serving: `submit` returns a
+//!   [`Ticket`] the caller blocks on.  The CLI `serve --real-time`
+//!   drives it.
+//!
+//! Batching is **bit-transparent**: the blocked kernels are row-wise
+//! independent, so any coalescing of N requests produces per-sample
+//! logits bit-identical to N batch-1 evals (property-tested in
+//! `rust/tests/serving.rs` across threads × chips × policies).
+
+pub mod backend;
+pub mod metrics;
+pub mod policy;
+pub mod server;
+pub mod sim;
+
+pub use backend::{InferBackend, InferOutcome};
+pub use metrics::{LatencyRecorder, ServeStats};
+pub use policy::BatchPolicy;
+pub use server::{Server, Ticket};
+pub use sim::{open_loop_arrivals, ServeReport, ServeSim};
+
+/// Typed per-request serving errors — the fast-rejection contract: an
+/// overloaded or degraded tier answers *something* for every request,
+/// immediately, instead of queueing into tail-latency collapse.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// Admission control: the bounded queue is full.  Back off and
+    /// retry; the depth is the configured bound, for client-side
+    /// pacing.
+    Overloaded { depth: usize },
+    /// The request's queueing delay exceeded the deadline; it was shed
+    /// before dispatch (its samples never reached a chip).
+    Deadline,
+    /// The batch's GEMM waves had faults the ABFT retry budget could
+    /// not recover; no logits were delivered for any sample in it.
+    Faulted { unrecovered: u64 },
+    /// Input shape does not match the served network.
+    Malformed { want: usize, got: usize },
+    /// The server is shut down (or shutting down) and accepts no new
+    /// requests.
+    Closed,
+    /// Backend failure that is a bug, not an operational condition.
+    Internal(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Overloaded { depth } => {
+                write!(f, "overloaded: queue depth {depth} reached, request rejected")
+            }
+            ServeError::Deadline => write!(f, "deadline exceeded: request shed before dispatch"),
+            ServeError::Faulted { unrecovered } => {
+                write!(f, "unrecovered faults in batch ({unrecovered} rows), no logits delivered")
+            }
+            ServeError::Malformed { want, got } => {
+                write!(f, "malformed request: want {want} input values, got {got}")
+            }
+            ServeError::Closed => write!(f, "server is closed"),
+            ServeError::Internal(m) => write!(f, "internal serving error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+impl From<ServeError> for crate::Error {
+    fn from(e: ServeError) -> crate::Error {
+        crate::Error::Runtime(format!("serving: {e}"))
+    }
+}

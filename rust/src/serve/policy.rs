@@ -1,0 +1,145 @@
+//! The coalescing / admission / deadline policy knobs.
+
+use crate::{Error, Result};
+
+/// Dynamic-batching policy of the serving tier.
+///
+/// Semantics (identical in [`super::ServeSim`] and [`super::Server`],
+/// and mirrored in `python/tests/validate_serving_batching.py`):
+///
+/// * a batch dispatches as soon as `max_batch` requests are queued, or
+///   once the **oldest** queued request has waited `max_wait_s`
+///   (partial batches trade a little throughput for bounded latency at
+///   low load);
+/// * a request arriving while `depth` requests are queued is rejected
+///   immediately with [`super::ServeError::Overloaded`] — admission
+///   control caps queueing delay at roughly
+///   `depth / max_batch · svc(max_batch)`;
+/// * at dispatch time, queued requests whose **queueing delay** exceeds
+///   `deadline_s` are shed from the front and answered with
+///   [`super::ServeError::Deadline`].  The queue is FIFO and every
+///   request carries the same deadline offset, so the front request
+///   always has the earliest expiry — front-only shedding is exact
+///   (proven against a full-queue scan in the Python mirror).  The
+///   deadline governs time-to-dispatch; delivered latency additionally
+///   includes the batch's service time.  `deadline_s <= 0` disables
+///   shedding.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchPolicy {
+    /// Coalescing cap: the batched GEMM wave shape requests merge into.
+    pub max_batch: usize,
+    /// Longest the oldest queued request lingers before a partial batch
+    /// dispatches anyway.
+    pub max_wait_s: f64,
+    /// Admission bound on queued requests.
+    pub depth: usize,
+    /// Per-request queueing-delay SLO; `<= 0` disables shedding.
+    pub deadline_s: f64,
+}
+
+impl Default for BatchPolicy {
+    /// The committed bench configuration: the engine's preferred train
+    /// batch (32), 2 ms coalescing wait, a 256-deep queue (8 full
+    /// batches ≈ 7.6 ms of backlog per 2-chip fleet) and an 8 ms
+    /// dispatch deadline.
+    fn default() -> Self {
+        BatchPolicy { max_batch: 32, max_wait_s: 2e-3, depth: 256, deadline_s: 8e-3 }
+    }
+}
+
+impl BatchPolicy {
+    pub fn validate(&self) -> Result<()> {
+        if self.max_batch == 0 {
+            return Err(Error::Config("serve: max_batch must be >= 1".into()));
+        }
+        if self.depth == 0 {
+            return Err(Error::Config("serve: queue depth must be >= 1".into()));
+        }
+        if !self.max_wait_s.is_finite() || self.max_wait_s < 0.0 {
+            return Err(Error::Config(format!(
+                "serve: max_wait_s must be finite and >= 0, got {}",
+                self.max_wait_s
+            )));
+        }
+        if !self.deadline_s.is_finite() {
+            return Err(Error::Config(format!(
+                "serve: deadline_s must be finite, got {}",
+                self.deadline_s
+            )));
+        }
+        Ok(())
+    }
+
+    /// Has a request that arrived at `arrival_s` missed its dispatch
+    /// deadline at `now_s`?
+    #[inline]
+    pub fn expired(&self, arrival_s: f64, now_s: f64) -> bool {
+        self.deadline_s > 0.0 && now_s - arrival_s > self.deadline_s
+    }
+
+    /// The analytic admitted-p99 latency bound the bench gates
+    /// in-binary, given the service time of a full batch.  With a
+    /// deadline armed: queueing delay is capped at `deadline_s`, plus
+    /// one wasted transient-redispatch service slot, the batch's own
+    /// service, and `max_wait_s` of slack (which also covers per-batch
+    /// ABFT fault pricing at the committed configuration).  With
+    /// shedding disabled the cap comes from admission control instead:
+    /// a full queue is at most `ceil(depth / max_batch)` batches of
+    /// backlog.
+    pub fn p99_bound_s(&self, svc_full_batch_s: f64) -> f64 {
+        if self.deadline_s > 0.0 {
+            self.deadline_s + 2.0 * svc_full_batch_s + self.max_wait_s
+        } else {
+            (self.depth.div_ceil(self.max_batch) + 2) as f64 * svc_full_batch_s + self.max_wait_s
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_policy_validates() {
+        let p = BatchPolicy::default();
+        assert!(p.validate().is_ok());
+        assert_eq!(p.max_batch, 32);
+        assert_eq!(p.depth, 256);
+    }
+
+    #[test]
+    fn degenerate_policies_are_typed_errors() {
+        assert!(BatchPolicy { max_batch: 0, ..BatchPolicy::default() }.validate().is_err());
+        assert!(BatchPolicy { depth: 0, ..BatchPolicy::default() }.validate().is_err());
+        assert!(
+            BatchPolicy { max_wait_s: -1.0, ..BatchPolicy::default() }.validate().is_err()
+        );
+        assert!(BatchPolicy { max_wait_s: f64::NAN, ..BatchPolicy::default() }
+            .validate()
+            .is_err());
+        assert!(BatchPolicy { deadline_s: f64::INFINITY, ..BatchPolicy::default() }
+            .validate()
+            .is_err());
+        // Disabled shedding is legal, not an error.
+        assert!(BatchPolicy { deadline_s: 0.0, ..BatchPolicy::default() }.validate().is_ok());
+    }
+
+    #[test]
+    fn expiry_is_strict_and_disableable() {
+        let p = BatchPolicy { deadline_s: 1.0, ..BatchPolicy::default() };
+        assert!(!p.expired(0.0, 1.0), "exactly at the deadline is not expired");
+        assert!(p.expired(0.0, 1.0 + 1e-9));
+        let off = BatchPolicy { deadline_s: 0.0, ..BatchPolicy::default() };
+        assert!(!off.expired(0.0, 1e9));
+    }
+
+    #[test]
+    fn p99_bound_tracks_the_active_cap() {
+        let svc = 1e-3;
+        let armed = BatchPolicy::default();
+        assert!((armed.p99_bound_s(svc) - (8e-3 + 2e-3 + 2e-3)).abs() < 1e-12);
+        let unshed = BatchPolicy { deadline_s: 0.0, ..BatchPolicy::default() };
+        // 256/32 = 8 backlog batches + 2 slack slots.
+        assert!((unshed.p99_bound_s(svc) - (10.0 * svc + 2e-3)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,371 @@
+//! The threaded wall-clock serving front end.
+//!
+//! A bounded MPSC request queue (std `Mutex` + `Condvar` — the crate
+//! builds with an empty dependency graph, so no async runtime) feeding
+//! one dispatcher thread that owns the [`InferBackend`].  `submit`
+//! never blocks on inference: it validates, admits or rejects, and
+//! returns a [`Ticket`] the caller waits on.  The dispatcher coalesces
+//! under the same [`BatchPolicy`] semantics as the virtual-time
+//! [`super::ServeSim`] (dispatch at `max_batch` or when the oldest
+//! request has waited `max_wait_s`; shed expired requests front-only),
+//! with real clocks instead of virtual ones.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::backend::InferBackend;
+use super::metrics::ServeStats;
+use super::policy::BatchPolicy;
+use super::ServeError;
+use crate::{Error, Result};
+
+/// One request's reply slot: filled exactly once by the dispatcher.
+#[derive(Debug)]
+struct TicketCell {
+    slot: Mutex<Option<std::result::Result<Vec<f32>, ServeError>>>,
+    cv: Condvar,
+}
+
+impl TicketCell {
+    fn fulfill(&self, r: std::result::Result<Vec<f32>, ServeError>) {
+        let mut slot = self.slot.lock().expect("ticket lock poisoned");
+        *slot = Some(r);
+        self.cv.notify_all();
+    }
+}
+
+/// Handle to an admitted request: block on [`Ticket::wait`] for the
+/// logits or the typed serving error (`Deadline`, `Faulted`, ...).
+#[derive(Debug)]
+pub struct Ticket(Arc<TicketCell>);
+
+impl Ticket {
+    /// Block until the dispatcher answers this request.
+    pub fn wait(self) -> std::result::Result<Vec<f32>, ServeError> {
+        let mut slot = self.0.slot.lock().expect("ticket lock poisoned");
+        loop {
+            if let Some(r) = slot.take() {
+                return r;
+            }
+            slot = self.0.cv.wait(slot).expect("ticket lock poisoned");
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Pending {
+    arrival: Instant,
+    image: Vec<f32>,
+    cell: Arc<TicketCell>,
+}
+
+#[derive(Debug)]
+struct QueueState {
+    queue: VecDeque<Pending>,
+    closed: bool,
+    stats: ServeStats,
+}
+
+#[derive(Debug)]
+struct Shared {
+    policy: BatchPolicy,
+    q: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+/// The running server: accepts requests until [`Server::shutdown`]
+/// (which drains the queue — every admitted request is answered).
+#[derive(Debug)]
+pub struct Server {
+    shared: Arc<Shared>,
+    worker: Option<JoinHandle<()>>,
+    sample_len: usize,
+    classes: usize,
+    live: usize,
+}
+
+impl Server {
+    /// Validate the policy, take ownership of the backend, and start
+    /// the dispatcher thread.
+    pub fn spawn(backend: InferBackend, policy: BatchPolicy) -> Result<Server> {
+        policy.validate()?;
+        let live = backend.live_engines();
+        if live.is_empty() {
+            return Err(Error::Sim(format!(
+                "serve: all {} chips dead under the armed fault session — nothing to serve on",
+                backend.chips()
+            )));
+        }
+        let sample_len = backend.sample_len();
+        let classes = backend.classes();
+        let shared = Arc::new(Shared {
+            policy,
+            q: Mutex::new(QueueState {
+                queue: VecDeque::with_capacity(policy.depth),
+                closed: false,
+                stats: ServeStats::default(),
+            }),
+            cv: Condvar::new(),
+        });
+        let worker_shared = shared.clone();
+        let live_count = live.len();
+        let worker = std::thread::Builder::new()
+            .name("pim-serve-dispatch".into())
+            .spawn(move || dispatcher(worker_shared, backend, live))
+            .map_err(Error::Io)?;
+        Ok(Server { shared, worker: Some(worker), sample_len, classes, live: live_count })
+    }
+
+    /// Offer one request.  Fast-fails with the typed error instead of
+    /// blocking: `Malformed` on a shape mismatch, `Overloaded` when
+    /// admission control rejects, `Closed` after shutdown begins.
+    pub fn submit(&self, image: &[f32]) -> std::result::Result<Ticket, ServeError> {
+        if image.len() != self.sample_len {
+            return Err(ServeError::Malformed { want: self.sample_len, got: image.len() });
+        }
+        let mut st = self.shared.q.lock().expect("serve queue lock poisoned");
+        if st.closed {
+            return Err(ServeError::Closed);
+        }
+        st.stats.submitted += 1;
+        if st.queue.len() >= self.shared.policy.depth {
+            st.stats.rejected += 1;
+            return Err(ServeError::Overloaded { depth: self.shared.policy.depth });
+        }
+        let cell = Arc::new(TicketCell { slot: Mutex::new(None), cv: Condvar::new() });
+        st.queue.push_back(Pending {
+            arrival: Instant::now(),
+            image: image.to_vec(),
+            cell: cell.clone(),
+        });
+        st.stats.admitted += 1;
+        drop(st);
+        self.shared.cv.notify_all();
+        Ok(Ticket(cell))
+    }
+
+    /// Counters so far (the dispatcher updates them live).
+    pub fn stats(&self) -> ServeStats {
+        self.shared.q.lock().expect("serve queue lock poisoned").stats
+    }
+
+    pub fn live_chips(&self) -> usize {
+        self.live
+    }
+
+    pub fn sample_len(&self) -> usize {
+        self.sample_len
+    }
+
+    pub fn classes(&self) -> usize {
+        self.classes
+    }
+
+    /// Stop admissions, drain the queue (every admitted request is
+    /// answered — completed, shed, or faulted), join the dispatcher and
+    /// return the final counters.
+    pub fn shutdown(mut self) -> ServeStats {
+        self.close_and_join();
+        self.shared.q.lock().expect("serve queue lock poisoned").stats
+    }
+
+    fn close_and_join(&mut self) {
+        {
+            let mut st = self.shared.q.lock().expect("serve queue lock poisoned");
+            st.closed = true;
+        }
+        self.shared.cv.notify_all();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        if self.worker.is_some() {
+            self.close_and_join();
+        }
+    }
+}
+
+fn dispatcher(shared: Arc<Shared>, backend: InferBackend, live: Vec<usize>) {
+    let policy = shared.policy;
+    let sample_len = backend.sample_len();
+    let classes = backend.classes();
+    let mut imgs: Vec<f32> = Vec::with_capacity(policy.max_batch * sample_len);
+    let mut logits: Vec<f32> = vec![0.0; policy.max_batch * classes];
+    let mut rr = 0usize;
+    loop {
+        let mut st = shared.q.lock().expect("serve queue lock poisoned");
+        if st.queue.is_empty() {
+            if st.closed {
+                return;
+            }
+            // Timeout fallback guards against a lost notify; normal
+            // wakeups come from submit/shutdown.
+            let _ = shared.cv.wait_timeout(st, Duration::from_millis(50));
+            continue;
+        }
+        let due = st.queue.len() >= policy.max_batch || st.closed;
+        if !due {
+            let waited = st.queue.front().expect("queue nonempty").arrival.elapsed();
+            let max_wait = Duration::from_secs_f64(policy.max_wait_s);
+            if waited < max_wait {
+                let _ = shared.cv.wait_timeout(st, max_wait - waited);
+                continue;
+            }
+        }
+        // Shed expired requests front-only (FIFO + uniform deadline:
+        // the front always expires first).
+        let mut stale: Vec<Pending> = Vec::new();
+        while let Some(p) = st.queue.front() {
+            if policy.deadline_s > 0.0 && p.arrival.elapsed().as_secs_f64() > policy.deadline_s {
+                stale.push(st.queue.pop_front().expect("front exists"));
+                st.stats.shed += 1;
+            } else {
+                break;
+            }
+        }
+        let b = st.queue.len().min(policy.max_batch);
+        let batch: Vec<Pending> = st.queue.drain(..b).collect();
+        drop(st);
+        for p in stale {
+            p.cell.fulfill(Err(ServeError::Deadline));
+        }
+        if batch.is_empty() {
+            continue;
+        }
+        imgs.clear();
+        for p in &batch {
+            imgs.extend_from_slice(&p.image);
+        }
+        let chip = live[rr % live.len()];
+        rr += 1;
+        let outcome = backend.infer(chip, &imgs[..b * sample_len], b, &mut logits);
+        let mut st = shared.q.lock().expect("serve queue lock poisoned");
+        st.stats.batches += 1;
+        st.stats.batched_samples += b as u64;
+        match outcome {
+            Ok(oc) if oc.unrecovered == 0 => {
+                st.stats.completed += b as u64;
+                st.stats.fault_latency_s += oc.fault_latency_s;
+                drop(st);
+                for (bi, p) in batch.iter().enumerate() {
+                    p.cell.fulfill(Ok(logits[bi * classes..(bi + 1) * classes].to_vec()));
+                }
+            }
+            Ok(oc) => {
+                st.stats.failed += b as u64;
+                st.stats.fault_latency_s += oc.fault_latency_s;
+                drop(st);
+                for p in &batch {
+                    p.cell.fulfill(Err(ServeError::Faulted { unrecovered: oc.unrecovered }));
+                }
+            }
+            Err(e) => {
+                st.stats.failed += b as u64;
+                drop(st);
+                let msg = e.to_string();
+                for p in &batch {
+                    p.cell.fulfill(Err(ServeError::Internal(msg.clone())));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::gemm::NetworkParams;
+    use crate::fpu::FpCostModel;
+    use crate::model::Network;
+    use crate::runtime::FUNCTIONAL_LANES;
+
+    fn backend(chips: usize) -> InferBackend {
+        let net = Network::lenet5();
+        let params = NetworkParams::init(&net, 3);
+        InferBackend::new(
+            net,
+            params,
+            FpCostModel::proposed_fp32(),
+            FUNCTIONAL_LANES,
+            2,
+            chips,
+            None,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn served_logits_match_direct_inference() {
+        let reference = backend(1);
+        let policy = BatchPolicy { max_wait_s: 1e-3, ..BatchPolicy::default() };
+        let srv = Server::spawn(backend(2), policy).unwrap();
+        let img: Vec<f32> = (0..srv.sample_len()).map(|i| (i % 13) as f32 * 0.03).collect();
+        let t = srv.submit(&img).unwrap();
+        let got = t.wait().unwrap();
+        let mut want = vec![0.0f32; reference.classes()];
+        reference.infer(0, &img, 1, &mut want).unwrap();
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&got), bits(&want), "served logits are bit-real");
+        let st = srv.shutdown();
+        assert!(st.conservation_holds());
+        assert_eq!(st.completed, 1);
+    }
+
+    #[test]
+    fn full_queue_rejects_with_overloaded() {
+        // Coalescing can't trigger (max_batch 8 never reached, 1 h
+        // max_wait), so the first request parks and the 1-deep queue
+        // stays full: the second submit must reject deterministically.
+        let policy =
+            BatchPolicy { depth: 1, max_batch: 8, max_wait_s: 3600.0, deadline_s: 0.0 };
+        let srv = Server::spawn(backend(1), policy).unwrap();
+        let img = vec![0.1f32; srv.sample_len()];
+        let t = srv.submit(&img).unwrap();
+        match srv.submit(&img) {
+            Err(ServeError::Overloaded { depth: 1 }) => {}
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        // Shutdown drains: the parked request still gets its logits.
+        let st = srv.shutdown();
+        let got = t.wait();
+        assert!(got.is_ok(), "drained on shutdown: {got:?}");
+        assert!(st.conservation_holds());
+        assert_eq!(st.rejected, 1);
+    }
+
+    #[test]
+    fn expired_requests_are_shed_with_deadline() {
+        // 1 µs deadline, 20 ms coalescing wait: by dispatch time the
+        // request is long stale.
+        let policy =
+            BatchPolicy { deadline_s: 1e-6, max_wait_s: 2e-2, max_batch: 8, depth: 16 };
+        let srv = Server::spawn(backend(1), policy).unwrap();
+        let img = vec![0.1f32; srv.sample_len()];
+        let t = srv.submit(&img).unwrap();
+        assert_eq!(t.wait(), Err(ServeError::Deadline));
+        let st = srv.shutdown();
+        assert_eq!(st.shed, 1);
+        assert!(st.conservation_holds());
+    }
+
+    #[test]
+    fn malformed_and_closed_submissions_fast_fail() {
+        let srv = Server::spawn(backend(1), BatchPolicy::default()).unwrap();
+        match srv.submit(&[0.0; 3]) {
+            Err(ServeError::Malformed { want, got: 3 }) => assert_eq!(want, 784),
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+        // Once the queue is closed, late submitters fast-fail typed.
+        let img = vec![0.0f32; srv.sample_len()];
+        srv.shared.q.lock().unwrap().closed = true;
+        assert_eq!(srv.submit(&img).err(), Some(ServeError::Closed));
+        let st = srv.shutdown();
+        assert!(st.conservation_holds());
+    }
+}

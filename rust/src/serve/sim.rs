@@ -1,0 +1,448 @@
+//! Deterministic virtual-time serving simulation.
+//!
+//! A single-threaded discrete-event loop over the analytic PIM latency
+//! model: requests arrive on an open-loop Poisson schedule
+//! ([`open_loop_arrivals`]), are admitted/rejected against the bounded
+//! queue, coalesced under the [`BatchPolicy`], and dispatched to the
+//! earliest-free surviving chip.  Service times come from the real
+//! engine ledger — every dispatch runs a *real* batched forward through
+//! [`InferBackend::infer`], so logits are bit-real and ABFT fault
+//! pricing lands in per-request latency — while the clock is virtual,
+//! so ~10⁵ arrivals replay bit-identically from a seed in seconds.
+//!
+//! The event-loop semantics (arrival-first tie-break, front-only
+//! deadline shedding, transient re-dispatch pricing) are mirrored
+//! loop-for-loop in `python/tests/validate_serving_batching.py`, where
+//! conservation, shed equivalence and the p99 bound are proven over
+//! randomized policy/load/fault grids.
+
+use std::collections::VecDeque;
+
+use super::backend::InferBackend;
+use super::metrics::{LatencyRecorder, ServeStats};
+use super::policy::BatchPolicy;
+use crate::prop::Rng;
+use crate::{Error, Result};
+
+/// Open-loop Poisson arrival schedule: `n` exponential inter-arrival
+/// gaps at `rate_rps`, from the crate's xorshift64* stream.  Open-loop
+/// means arrivals do not slow down when the server backs up — the load
+/// generator models independent clients, which is what makes overload
+/// behavior (rejection, shedding) observable at all.
+pub fn open_loop_arrivals(n: usize, rate_rps: f64, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let u = rng.unit_f64();
+        t += -(1.0 - u).ln() / rate_rps;
+        out.push(t);
+    }
+    out
+}
+
+/// Outcome of one simulated serving run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServeReport {
+    pub stats: ServeStats,
+    /// Virtual time from the first arrival epoch to the last batch
+    /// completion.
+    pub elapsed_s: f64,
+    /// Completed requests per virtual second.
+    pub throughput_rps: f64,
+    /// Mean / median / tail latency of **completed** requests
+    /// (arrival → logits delivered; rejected and shed requests answer
+    /// immediately and are counted, not averaged in).
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+}
+
+/// The virtual-time serving tier.
+///
+/// All buffers are sized at construction (queue to `depth`, batch
+/// scratch to `max_batch`, the latency recorder to `max_requests`), so
+/// a warmed run performs zero heap allocations — audited in
+/// `rust/benches/serving.rs` by re-running a scenario and diffing the
+/// allocation counter.
+#[derive(Debug)]
+pub struct ServeSim {
+    backend: InferBackend,
+    policy: BatchPolicy,
+    pool: Vec<f32>,
+    pool_n: usize,
+    /// Engine indices of surviving chips (static per session draw).
+    live: Vec<usize>,
+    /// Virtual time each live engine frees up, parallel to `live`.
+    free_at: Vec<f64>,
+    queue: VecDeque<u32>,
+    batch_ids: Vec<u32>,
+    batch_imgs: Vec<f32>,
+    logits: Vec<f32>,
+    rec: LatencyRecorder,
+    stats: ServeStats,
+}
+
+impl ServeSim {
+    /// `pool` is the flattened image pool requests draw from (request
+    /// `j` serves pool row `j % pool_n`); `max_requests` sizes the
+    /// latency recorder.
+    pub fn new(
+        backend: InferBackend,
+        policy: BatchPolicy,
+        pool: Vec<f32>,
+        max_requests: usize,
+    ) -> Result<ServeSim> {
+        policy.validate()?;
+        let sample_len = backend.sample_len();
+        if pool.is_empty() || pool.len() % sample_len != 0 {
+            return Err(Error::Config(format!(
+                "serve: image pool of {} values is not a multiple of the {} values/sample",
+                pool.len(),
+                sample_len
+            )));
+        }
+        let live = backend.live_engines();
+        if live.is_empty() {
+            return Err(Error::Sim(format!(
+                "serve: all {} chips dead under the armed fault session — nothing to serve on",
+                backend.chips()
+            )));
+        }
+        let classes = backend.classes();
+        Ok(ServeSim {
+            pool_n: pool.len() / sample_len,
+            free_at: vec![0.0; live.len()],
+            queue: VecDeque::with_capacity(policy.depth),
+            batch_ids: Vec::with_capacity(policy.max_batch),
+            batch_imgs: Vec::with_capacity(policy.max_batch * sample_len),
+            logits: vec![0.0; policy.max_batch * classes],
+            rec: LatencyRecorder::with_capacity(max_requests),
+            stats: ServeStats::default(),
+            backend,
+            policy,
+            pool,
+            live,
+        })
+    }
+
+    pub fn backend(&self) -> &InferBackend {
+        &self.backend
+    }
+
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    /// Surviving chip count.
+    pub fn live_chips(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Saturated throughput of the **configured** (healthy) fleet:
+    /// `chips · max_batch / svc(max_batch)`.  Offered-load multipliers
+    /// are quoted against this, so a degraded fleet is measured against
+    /// what it was provisioned for.
+    pub fn capacity_rps(&self) -> f64 {
+        self.backend.chips() as f64 * self.policy.max_batch as f64
+            / self.backend.svc_latency(self.policy.max_batch)
+    }
+
+    /// Run every batch shape once on every surviving engine so the
+    /// shared arena holds exact-size buffers for each — after this, a
+    /// run allocates nothing.
+    pub fn warm(&mut self) -> Result<()> {
+        let sample_len = self.backend.sample_len();
+        for k in 0..self.live.len() {
+            for b in 1..=self.policy.max_batch {
+                self.batch_imgs.clear();
+                for r in 0..b {
+                    let row = (r % self.pool_n) * sample_len;
+                    self.batch_imgs.extend_from_slice(&self.pool[row..row + sample_len]);
+                }
+                self.backend.infer(
+                    self.live[k],
+                    &self.batch_imgs[..b * sample_len],
+                    b,
+                    &mut self.logits,
+                )?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Simulate serving the arrival schedule (seconds, ascending).
+    pub fn run(&mut self, arrivals: &[f64]) -> Result<ServeReport> {
+        self.run_hooked(arrivals, |_, _| {})
+    }
+
+    /// [`ServeSim::run`] with a per-completion sink: `sink(request_id,
+    /// logits_row)` fires for every delivered request, in dispatch
+    /// order.  The batching-invariance property test uses this to
+    /// compare coalesced logits against batch-1 reference evals
+    /// bit-for-bit.
+    pub fn run_hooked<F: FnMut(u32, &[f32])>(
+        &mut self,
+        arrivals: &[f64],
+        mut sink: F,
+    ) -> Result<ServeReport> {
+        self.stats = ServeStats::default();
+        self.rec.clear();
+        self.queue.clear();
+        self.free_at.iter_mut().for_each(|t| *t = 0.0);
+        let sample_len = self.backend.sample_len();
+        let classes = self.backend.classes();
+        let n = arrivals.len();
+        let mut i = 0usize;
+        let mut now = 0.0f64;
+        let mut step = 0u64;
+        let mut last_done = 0.0f64;
+        loop {
+            let drained = i >= n;
+            if self.queue.is_empty() {
+                if drained {
+                    break;
+                }
+                now = now.max(arrivals[i]);
+                self.admit(i as u32);
+                i += 1;
+                continue;
+            }
+            let mut t_chip = self.free_at[0];
+            for &t in &self.free_at[1..] {
+                t_chip = t_chip.min(t);
+            }
+            let front = arrivals[*self.queue.front().expect("queue nonempty") as usize];
+            let t_ready = if self.queue.len() >= self.policy.max_batch || drained {
+                now
+            } else {
+                front + self.policy.max_wait_s
+            };
+            let t_disp = now.max(t_chip).max(t_ready);
+            // Arrival-first tie-break: anything arriving at or before
+            // the dispatch instant joins the queue (and may fill the
+            // batch, or be rejected) before the batch seals.
+            if !drained && arrivals[i] <= t_disp {
+                now = now.max(arrivals[i]);
+                self.admit(i as u32);
+                i += 1;
+                continue;
+            }
+            now = t_disp;
+            // Deadline shedding, front-only: the queue is FIFO and all
+            // requests carry the same deadline offset, so the front
+            // always expires first (proven == full-scan in the mirror).
+            if self.policy.deadline_s > 0.0 {
+                while let Some(&j) = self.queue.front() {
+                    if self.policy.expired(arrivals[j as usize], now) {
+                        self.queue.pop_front();
+                        self.stats.shed += 1;
+                    } else {
+                        break;
+                    }
+                }
+            }
+            if self.queue.is_empty() {
+                continue;
+            }
+            let b = self.queue.len().min(self.policy.max_batch);
+            self.batch_ids.clear();
+            self.batch_imgs.clear();
+            for _ in 0..b {
+                let j = self.queue.pop_front().expect("queue holds b requests");
+                self.batch_ids.push(j);
+                let row = (j as usize % self.pool_n) * sample_len;
+                self.batch_imgs.extend_from_slice(&self.pool[row..row + sample_len]);
+            }
+            // Earliest-free surviving chip, lowest engine index wins
+            // ties.
+            let mut k = 0usize;
+            for c in 1..self.live.len() {
+                if self.free_at[c] < self.free_at[k] {
+                    k = c;
+                }
+            }
+            let mut start = now;
+            let this_step = step;
+            step += 1;
+            if let Some(s) = self.backend.session() {
+                if s.chip_failed_transiently(self.backend.chip_id(self.live[k]), this_step) {
+                    // The failed attempt wastes a clean service slot on
+                    // that chip; the batch re-dispatches on the next
+                    // earliest-free survivor.
+                    self.free_at[k] = start + self.backend.svc_latency(b);
+                    self.stats.redispatched += 1;
+                    k = 0;
+                    for c in 1..self.live.len() {
+                        if self.free_at[c] < self.free_at[k] {
+                            k = c;
+                        }
+                    }
+                    start = now.max(self.free_at[k]);
+                }
+            }
+            let oc =
+                self.backend
+                    .infer(self.live[k], &self.batch_imgs[..b * sample_len], b, &mut self.logits)?;
+            let done = start + oc.latency_s;
+            self.free_at[k] = done;
+            if done > last_done {
+                last_done = done;
+            }
+            self.stats.batches += 1;
+            self.stats.batched_samples += b as u64;
+            self.stats.fault_latency_s += oc.fault_latency_s;
+            if oc.unrecovered > 0 {
+                // Graceful failure: the batch is answered `Faulted`,
+                // counted, and the chips move on — no panic, no wedge.
+                self.stats.failed += b as u64;
+            } else {
+                self.stats.completed += b as u64;
+                for (bi, &j) in self.batch_ids.iter().enumerate() {
+                    self.rec.record(done - arrivals[j as usize]);
+                    sink(j, &self.logits[bi * classes..(bi + 1) * classes]);
+                }
+            }
+        }
+        let elapsed_s = now.max(last_done);
+        debug_assert!(self.stats.conservation_holds(), "request conservation: {:?}", self.stats);
+        Ok(ServeReport {
+            stats: self.stats,
+            elapsed_s,
+            throughput_rps: if elapsed_s > 0.0 {
+                self.stats.completed as f64 / elapsed_s
+            } else {
+                0.0
+            },
+            mean_s: self.rec.mean(),
+            p50_s: self.rec.percentile(50.0),
+            p99_s: self.rec.percentile(99.0),
+        })
+    }
+
+    fn admit(&mut self, j: u32) {
+        self.stats.submitted += 1;
+        if self.queue.len() >= self.policy.depth {
+            self.stats.rejected += 1;
+        } else {
+            self.queue.push_back(j);
+            self.stats.admitted += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::gemm::NetworkParams;
+    use crate::fpu::FpCostModel;
+    use crate::model::Network;
+    use crate::runtime::FUNCTIONAL_LANES;
+
+    fn sim(chips: usize, policy: BatchPolicy, max_requests: usize) -> ServeSim {
+        let net = Network::lenet5();
+        let sample_len = {
+            let (c, h, w) = net.input;
+            c * h * w
+        };
+        let params = NetworkParams::init(&net, 3);
+        let backend = InferBackend::new(
+            net,
+            params,
+            FpCostModel::proposed_fp32(),
+            FUNCTIONAL_LANES,
+            2,
+            chips,
+            None,
+        )
+        .unwrap();
+        let pool: Vec<f32> = (0..8 * sample_len).map(|i| (i % 11) as f32 * 0.05).collect();
+        ServeSim::new(backend, policy, pool, max_requests).unwrap()
+    }
+
+    #[test]
+    fn poisson_arrivals_are_deterministic_and_monotone() {
+        let a = open_loop_arrivals(500, 1000.0, 42);
+        let b = open_loop_arrivals(500, 1000.0, 42);
+        assert_eq!(a, b);
+        assert!(a.windows(2).all(|w| w[1] > w[0]), "strictly increasing");
+        let mean_gap = a.last().unwrap() / 500.0;
+        assert!((mean_gap - 1e-3).abs() < 2e-4, "mean gap ~ 1/rate, got {mean_gap}");
+        assert_ne!(a, open_loop_arrivals(500, 1000.0, 43), "seed matters");
+    }
+
+    #[test]
+    fn light_load_completes_everything() {
+        let mut s = sim(2, BatchPolicy::default(), 200);
+        let rate = 0.4 * s.capacity_rps();
+        let r = s.run(&open_loop_arrivals(200, rate, 42)).unwrap();
+        assert!(r.stats.conservation_holds());
+        assert_eq!(r.stats.completed, 200, "no overload, no loss: {:?}", r.stats);
+        assert_eq!(r.stats.rejected + r.stats.shed + r.stats.failed, 0);
+        assert!(r.stats.batches <= 200 && r.stats.batches > 0);
+        assert!(r.throughput_rps > 0.0 && r.p99_s >= r.p50_s && r.p50_s > 0.0);
+    }
+
+    #[test]
+    fn tiny_queue_rejects_under_burst() {
+        let policy = BatchPolicy { depth: 4, max_batch: 2, ..BatchPolicy::default() };
+        let mut s = sim(1, policy, 300);
+        // 10x overload into a 4-deep queue: admission control must bite.
+        let rate = 10.0 * s.capacity_rps();
+        let r = s.run(&open_loop_arrivals(300, rate, 7)).unwrap();
+        assert!(r.stats.rejected > 0, "{:?}", r.stats);
+        assert!(r.stats.conservation_holds());
+    }
+
+    #[test]
+    fn tight_deadline_sheds_stale_requests() {
+        // Deadline far below a single batch-32 service time: whatever
+        // queues behind the first dispatch goes stale.
+        let policy = BatchPolicy { deadline_s: 2e-4, max_wait_s: 0.0, ..BatchPolicy::default() };
+        let mut s = sim(1, policy, 400);
+        let rate = 3.0 * s.capacity_rps();
+        let r = s.run(&open_loop_arrivals(400, rate, 11)).unwrap();
+        assert!(r.stats.shed > 0, "{:?}", r.stats);
+        assert!(r.stats.conservation_holds());
+    }
+
+    #[test]
+    fn reruns_on_fresh_sims_replay_identically() {
+        let rate = 1.3 * sim(2, BatchPolicy::default(), 1).capacity_rps();
+        let arr = open_loop_arrivals(400, rate, 42);
+        let a = sim(2, BatchPolicy::default(), 400).run(&arr).unwrap();
+        let b = sim(2, BatchPolicy::default(), 400).run(&arr).unwrap();
+        assert_eq!(a, b, "virtual time + seeded arrivals: bit-identical replay");
+    }
+
+    #[test]
+    fn degenerate_pools_and_policies_are_typed_errors() {
+        let net = Network::lenet5();
+        let params = NetworkParams::init(&net, 3);
+        let backend = InferBackend::new(
+            net,
+            params,
+            FpCostModel::proposed_fp32(),
+            FUNCTIONAL_LANES,
+            1,
+            1,
+            None,
+        )
+        .unwrap();
+        assert!(ServeSim::new(backend, BatchPolicy::default(), vec![0.0; 17], 1).is_err());
+        let net = Network::lenet5();
+        let params = NetworkParams::init(&net, 3);
+        let backend = InferBackend::new(
+            net,
+            params,
+            FpCostModel::proposed_fp32(),
+            FUNCTIONAL_LANES,
+            1,
+            1,
+            None,
+        )
+        .unwrap();
+        let bad = BatchPolicy { max_batch: 0, ..BatchPolicy::default() };
+        assert!(ServeSim::new(backend, bad, vec![0.0; 784], 1).is_err());
+    }
+}

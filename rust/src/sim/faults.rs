@@ -328,6 +328,10 @@ pub struct FaultReport {
     pub reshard_macs: u64,
     /// Steps abandoned under [`RecoveryPolicy::Rollback`].
     pub rollbacks: u64,
+    /// Inference/eval batches that rode the same ABFT-guarded waves
+    /// (`TrainEngine::evaluate` and the serving tier) — the coverage
+    /// counter proving the session report spans more than train steps.
+    pub eval_batches: u64,
 }
 
 impl FaultReport {
@@ -349,6 +353,7 @@ impl FaultReport {
             reshards: self.reshards.wrapping_sub(earlier.reshards),
             reshard_macs: self.reshard_macs.wrapping_sub(earlier.reshard_macs),
             rollbacks: self.rollbacks.wrapping_sub(earlier.rollbacks),
+            eval_batches: self.eval_batches.wrapping_sub(earlier.eval_batches),
         }
     }
 
@@ -400,6 +405,7 @@ fault_counters!(
     reshards,
     reshard_macs,
     rollbacks,
+    eval_batches,
 );
 
 /// One fault-injection run: the config plus cumulative counters shared
@@ -616,6 +622,14 @@ impl FaultHook {
             counters.retry_macs.fetch_add(retry_macs, Ordering::Relaxed);
             counters.unrecovered.fetch_add(unrecovered, Ordering::Relaxed);
         }
+    }
+
+    /// Record one inference/eval batch served through this hook's
+    /// ABFT-guarded waves — eval and serving traffic count toward the
+    /// session report exactly like train-step waves do.
+    pub fn note_eval_batch(&self) {
+        self.local.eval_batches.fetch_add(1, Ordering::Relaxed);
+        self.session.totals.eval_batches.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record asserted weight-storage faults.
@@ -977,6 +991,19 @@ mod tests {
         assert!((1..=4u64).all(|c| all.chip_is_dead(c, 4)));
         let none = FaultSession::new(FaultConfig::default());
         assert!(!(1..=4u64).any(|c| none.chip_is_dead(c, 4)));
+    }
+
+    #[test]
+    fn eval_batches_count_on_hook_and_session() {
+        let s = Arc::new(FaultSession::new(FaultConfig::default()));
+        let h = FaultHook::new(s.clone(), 1, 32);
+        let before = s.report();
+        h.note_eval_batch();
+        h.note_eval_batch();
+        assert_eq!(h.report().eval_batches, 2);
+        assert_eq!(s.report().minus(&before).eval_batches, 2);
+        // the delta is field-wise: nothing else moved
+        assert_eq!(s.report().minus(&before).checksum_adds, 0);
     }
 
     #[test]

@@ -1,0 +1,239 @@
+//! PR 9 integration tests: the serving tier end to end.
+//!
+//! The load-bearing property is **batching invariance** — a request's
+//! logits must not depend on which batch it was coalesced into, which
+//! chip served it, or how many worker threads the engine ran: every
+//! delivered row is bit-identical to a batch-1 eval on a fresh
+//! single-thread single-chip backend.  On top of that: graceful
+//! degradation with one chip dead (reduced capacity, same bits, ABFT
+//! priced, `eval_batches` coverage), transient-failure re-dispatch,
+//! and the typed overload/deadline errors of the threaded server.
+
+use std::sync::Arc;
+
+use mram_pim::arch::NetworkParams;
+use mram_pim::data::Dataset;
+use mram_pim::fpu::FpCostModel;
+use mram_pim::model::Network;
+use mram_pim::runtime::FUNCTIONAL_LANES;
+use mram_pim::serve::{
+    open_loop_arrivals, BatchPolicy, InferBackend, ServeError, ServeSim, Server,
+};
+use mram_pim::sim::{FaultConfig, FaultSession};
+
+fn backend(threads: usize, chips: usize, session: Option<Arc<FaultSession>>) -> InferBackend {
+    let net = Network::lenet5();
+    let params = NetworkParams::init(&net, 3);
+    InferBackend::new(
+        net,
+        params,
+        FpCostModel::proposed_fp32(),
+        FUNCTIONAL_LANES,
+        threads,
+        chips,
+        session,
+    )
+    .unwrap()
+}
+
+fn pool(n: usize) -> Vec<f32> {
+    Dataset::synthetic(n, 7).full_batch(n).images
+}
+
+/// Batch-1 reference logits (as bit patterns) for every pool row, from
+/// a fresh single-thread single-chip unarmed backend.
+fn reference_bits(pool: &[f32]) -> Vec<Vec<u32>> {
+    let be = backend(1, 1, None);
+    let sample_len = be.sample_len();
+    let mut out = vec![0.0f32; be.classes()];
+    let mut rows = Vec::with_capacity(pool.len() / sample_len);
+    for row in pool.chunks_exact(sample_len) {
+        be.infer(0, row, 1, &mut out).unwrap();
+        rows.push(out.iter().map(|v| v.to_bits()).collect());
+    }
+    rows
+}
+
+fn assert_served_rows_match(
+    got: &[Option<Vec<u32>>],
+    reference: &[Vec<u32>],
+    what: &str,
+) {
+    for (j, row) in got.iter().enumerate() {
+        let row = row.as_ref().unwrap_or_else(|| panic!("{what}: request {j} never delivered"));
+        assert_eq!(
+            row,
+            &reference[j % reference.len()],
+            "{what}: request {j} logits diverged from the batch-1 reference"
+        );
+    }
+}
+
+#[test]
+fn coalesced_logits_are_bit_identical_to_batch1_reference() {
+    let pool = pool(32);
+    let reference = reference_bits(&pool);
+    let n = 96usize;
+    // threads x chips x max_batch grid: coalescing, chip placement and
+    // engine threading must all be invisible in the delivered bits.
+    for (threads, chips, max_batch) in
+        [(1, 1, 32), (1, 2, 5), (4, 1, 1), (4, 2, 5), (4, 2, 32)]
+    {
+        let policy = BatchPolicy {
+            max_batch,
+            depth: n,
+            deadline_s: 0.0,
+            ..BatchPolicy::default()
+        };
+        let mut sim =
+            ServeSim::new(backend(threads, chips, None), policy, pool.clone(), n).unwrap();
+        let arrivals = open_loop_arrivals(n, 1.5 * sim.capacity_rps(), 42);
+        let mut got: Vec<Option<Vec<u32>>> = vec![None; n];
+        let r = sim
+            .run_hooked(&arrivals, |j, row| {
+                got[j as usize] = Some(row.iter().map(|v| v.to_bits()).collect());
+            })
+            .unwrap();
+        let what = format!("threads {threads} chips {chips} max_batch {max_batch}");
+        assert!(r.stats.conservation_holds(), "{what}: {:?}", r.stats);
+        assert_eq!(r.stats.completed, n as u64, "{what}: deep queue, no deadline — all complete");
+        assert_served_rows_match(&got, &reference, &what);
+    }
+}
+
+#[test]
+fn one_dead_chip_keeps_serving_the_same_bits_at_reduced_capacity() {
+    let session = Arc::new(FaultSession::new(
+        FaultConfig::parse("chip_dead=1,seed=9").unwrap(),
+    ));
+    let pool = pool(32);
+    let reference = reference_bits(&pool);
+    let n = 128usize;
+    let mut sim = ServeSim::new(
+        backend(2, 2, Some(session.clone())),
+        BatchPolicy::default(),
+        pool,
+        n,
+    )
+    .unwrap();
+    assert_eq!(sim.live_chips(), 1, "chip_dead=1 of 2 leaves one survivor");
+    // 0.3x of the *configured* fleet = 0.6x of the survivor: degraded
+    // but not overloaded, so everything must still complete.
+    let arrivals = open_loop_arrivals(n, 0.3 * sim.capacity_rps(), 42);
+    let eval_before = session.report().eval_batches;
+    let mut got: Vec<Option<Vec<u32>>> = vec![None; n];
+    let r = sim
+        .run_hooked(&arrivals, |j, row| {
+            got[j as usize] = Some(row.iter().map(|v| v.to_bits()).collect());
+        })
+        .unwrap();
+    assert!(r.stats.conservation_holds(), "{:?}", r.stats);
+    assert_eq!(r.stats.completed, n as u64, "survivor absorbs the load: {:?}", r.stats);
+    assert!(
+        r.stats.fault_latency_s > 0.0,
+        "ABFT checksum waves must be priced into serving latency"
+    );
+    assert_eq!(session.report().unrecovered, 0);
+    assert_eq!(
+        session.report().eval_batches - eval_before,
+        r.stats.batches,
+        "every served batch rides the session's eval coverage"
+    );
+    assert_served_rows_match(&got, &reference, "one chip dead");
+}
+
+#[test]
+fn transient_chip_failures_redispatch_without_changing_bits() {
+    // chip_fail=1.0: every dispatch draws a transient chip failure,
+    // wastes a clean service slot, and re-dispatches on the next
+    // earliest-free survivor.
+    let session = Arc::new(FaultSession::new(
+        FaultConfig::parse("chip_fail=1.0,seed=5").unwrap(),
+    ));
+    let pool = pool(32);
+    let reference = reference_bits(&pool);
+    let n = 64usize;
+    let mut sim = ServeSim::new(
+        backend(2, 2, Some(session)),
+        BatchPolicy::default(),
+        pool,
+        n,
+    )
+    .unwrap();
+    let arrivals = open_loop_arrivals(n, 0.2 * sim.capacity_rps(), 42);
+    let mut got: Vec<Option<Vec<u32>>> = vec![None; n];
+    let r = sim
+        .run_hooked(&arrivals, |j, row| {
+            got[j as usize] = Some(row.iter().map(|v| v.to_bits()).collect());
+        })
+        .unwrap();
+    assert!(r.stats.conservation_holds(), "{:?}", r.stats);
+    assert_eq!(r.stats.completed, n as u64, "{:?}", r.stats);
+    assert_eq!(
+        r.stats.redispatched, r.stats.batches,
+        "chip_fail=1.0 forces a re-dispatch on every batch"
+    );
+    assert_served_rows_match(&got, &reference, "transient re-dispatch");
+}
+
+#[test]
+fn a_fully_dead_fleet_is_a_typed_error_not_a_panic() {
+    let session = Arc::new(FaultSession::new(
+        FaultConfig::parse("chip_dead=2,seed=9").unwrap(),
+    ));
+    let be = backend(1, 2, Some(session));
+    assert!(be.live_engines().is_empty());
+    let err = ServeSim::new(be, BatchPolicy::default(), pool(4), 8).unwrap_err();
+    assert!(
+        err.to_string().contains("dead"),
+        "all-dead fleet must explain itself: {err}"
+    );
+}
+
+#[test]
+fn threaded_server_overload_and_malformed_are_typed_errors() {
+    // depth 1, a batch that never fills, and an hour of patience: the
+    // first request parks in the queue, the second must bounce.
+    let policy = BatchPolicy {
+        depth: 1,
+        max_batch: 8,
+        max_wait_s: 3600.0,
+        deadline_s: 0.0,
+    };
+    let srv = Server::spawn(backend(1, 1, None), policy).unwrap();
+    let img = vec![0.1f32; srv.sample_len()];
+    let parked = srv.submit(&img).unwrap();
+    match srv.submit(&img) {
+        Err(ServeError::Overloaded { depth }) => assert_eq!(depth, 1),
+        other => panic!("expected Overloaded, got {other:?}"),
+    }
+    assert!(
+        matches!(srv.submit(&img[..10]), Err(ServeError::Malformed { .. })),
+        "short images must fast-fail before queueing"
+    );
+    // Shutdown drains the parked request through a real forward.
+    let st = srv.shutdown();
+    let logits = parked.wait().unwrap();
+    assert_eq!(logits.len(), 10);
+    assert_eq!(st.rejected, 1);
+    assert!(st.conservation_holds(), "{st:?}");
+}
+
+#[test]
+fn threaded_server_sheds_expired_requests_with_deadline_error() {
+    let policy = BatchPolicy {
+        deadline_s: 1e-6,
+        max_wait_s: 2e-2,
+        ..BatchPolicy::default()
+    };
+    let srv = Server::spawn(backend(1, 1, None), policy).unwrap();
+    let img = vec![0.1f32; srv.sample_len()];
+    let t = srv.submit(&img).unwrap();
+    assert!(
+        matches!(t.wait(), Err(ServeError::Deadline)),
+        "a 1 us deadline expires while the dispatcher coalesces"
+    );
+    let st = srv.shutdown();
+    assert_eq!(st.shed, 1);
+    assert!(st.conservation_holds(), "{st:?}");
+}

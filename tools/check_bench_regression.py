@@ -25,6 +25,14 @@ and must match the baseline bit-for-bit in either direction: any
 nonzero fresh value means a steady-state train step re-decoded a weight
 panel, which the resident-panel contract forbids.
 
+``CEILING_GATES`` entries carry serving SLO values in ``mean_ns``
+(p99 latency in ms, shed+reject percentage) where *lower or equal* is
+healthy and growth is the regression: they fail when the fresh value
+exceeds the committed baseline by more than ``SERVING_CEILING_PCT``
+percent (default 10; CI relaxes for shared-runner noise).  The serving
+simulation runs in virtual time, so these are near-deterministic — the
+slack only absorbs float summation-order drift, not hardware.
+
 ``cluster_scaling`` additionally gates shards=2 ≤ shards=1 *within the
 fresh run* (hardware-independent, like the ABFT overhead gate): PR 7
 replaced the per-sample micrograd lowering with one batched backward
@@ -53,6 +61,7 @@ BENCHES = [
     "BENCH_gemm_wave.json",
     "BENCH_cluster_scaling.json",
     "BENCH_fault_tolerance.json",
+    "BENCH_serving.json",
 ]
 
 # The gated headline entry of each bench file.
@@ -61,6 +70,7 @@ GATES = {
     "BENCH_gemm_wave.json": "gemm engine 128x256 batch 32 (threads 4)",
     "BENCH_cluster_scaling.json": "lenet5 cluster step batch 32 shards 4",
     "BENCH_fault_tolerance.json": "lenet5 fault-free train step batch 32 (threads 4)",
+    "BENCH_serving.json": "serving: 100000 open-loop arrivals @ 1.0x offered load (chips 2, healthy)",
 }
 
 # ``metric:`` entries carry verification percentages in ``mean_ns``
@@ -70,11 +80,27 @@ REVERSED_GATES = {
     "BENCH_fault_tolerance.json": ["metric: abft detection rate pct"],
 }
 
+# ``metric:`` entries where *growth* is the regression (tail latency in
+# ms, shed+reject percentages): fail when the fresh value exceeds the
+# committed baseline by more than ``SERVING_CEILING_PCT`` percent.
+CEILING_GATES = {
+    "BENCH_serving.json": [
+        "metric: serving p99 ms @1.0x healthy",
+        "metric: serving p99 ms @2.0x healthy",
+        "metric: serving shed+reject pct @2.0x healthy",
+        "metric: serving p99 ms @1.0x one-dead",
+    ],
+}
+
 # ``metric:`` entries that must equal the committed baseline *exactly*
 # (counters, not wall-clock — here: bulk weight-panel decode passes in a
 # steady-state pooled train step, resident-panel contract value 0.0).
 EXACT_GATES = {
     "BENCH_train_step.json": ["metric: decodes per step (threads 4, pooled)"],
+    "BENCH_serving.json": [
+        "metric: serving unrecovered faults",
+        "metric: serving steady-state dispatch allocs",
+    ],
 }
 
 # Cross-entry gate within the fresh fault_tolerance run: the
@@ -144,6 +170,8 @@ def main():
         gate_name = GATES.get(path)
         reversed_names = REVERSED_GATES.get(path, [])
         exact_names = EXACT_GATES.get(path, [])
+        ceiling_names = CEILING_GATES.get(path, [])
+        ceiling_pct = float(os.environ.get("SERVING_CEILING_PCT", "10"))
         # Unknown fresh entries: a name the committed baseline has never
         # seen can never be compared, so a new gate added without a
         # baseline refresh would silently pass forever.
@@ -156,7 +184,11 @@ def main():
             b, f = base[name]["mean_ns"], fresh[name]["mean_ns"]
             delta = (f - b) / b * 100.0 if b else 0.0
             if name.startswith("metric: "):
-                gated = name in reversed_names or name in exact_names
+                gated = (
+                    name in reversed_names
+                    or name in exact_names
+                    or name in ceiling_names
+                )
                 tag = "GATE" if gated else "info"
                 print(f"[{tag}] {name}: baseline {b:.1f}, fresh {f:.1f} ({delta:+.1f}%)")
                 if name in reversed_names and f < b - 1e-9:
@@ -166,7 +198,12 @@ def main():
                 if name in exact_names and abs(f - b) > 1e-9:
                     failures.append(
                         f"{name}: fresh {f:.1f} != committed {b:.1f} (exact gate; a "
-                        f"nonzero decode count means the resident-panel contract broke)"
+                        f"nonzero counter means a zero-contract broke)"
+                    )
+                if name in ceiling_names and f > b * (1.0 + ceiling_pct / 100.0):
+                    failures.append(
+                        f"{name}: fresh {f:.2f} exceeds baseline {b:.2f} "
+                        f"ceiling (+{ceiling_pct}%)"
                     )
                 continue
             gated = name == gate_name
@@ -191,6 +228,11 @@ def main():
                 failures.append(f"{path}: committed baseline lacks exact gate '{name}'")
             if fresh and name not in fresh:
                 failures.append(f"{path}: fresh run lacks exact gate '{name}'")
+        for name in ceiling_names:
+            if name not in base:
+                failures.append(f"{path}: committed baseline lacks ceiling gate '{name}'")
+            if fresh and name not in fresh:
+                failures.append(f"{path}: fresh run lacks ceiling gate '{name}'")
         # Fault-free ABFT overhead: compare the two fresh entries of the
         # same run (hardware-independent, unlike the baselines).
         if path == "BENCH_fault_tolerance.json" and fresh:
