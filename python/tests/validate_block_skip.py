@@ -1,0 +1,587 @@
+"""Validation harness for the PR 10 block-sparse panel skip.
+
+Ports the bit-exact PIM softfloat reference (rust/src/fpu/softfloat.rs)
+to Python and proves the block-skip algebra used by the masked resident
+panel kernels in rust/src/arch/gemm.rs:
+
+  * ``fold_zero_run``: folding a run of ``acc + w*x`` MACs where the
+    weight is a pruned (+0.0) block entry is NOT an unconditional
+    identity -- a zero-class (+-0 / subnormal) accumulator can flip sign
+    or flush, and an Inf/NaN activation makes the product QNAN.  The
+    fold handles the first two exactly and refuses (dense fallback) on
+    the third.
+  * the masked NT (forward), NN (dgrad) and TN (wgrad, output-skip)
+    kernel loops, mirrored structure-for-structure, are bit-identical
+    to flat ascending-k dense chains over a weight matrix whose masked
+    blocks are densified to +0.0 (NT/NN), and to the seed-projection
+    for TN.
+  * SGD with masked updates keeps pruned blocks pinned at +0.0 and is
+    bit-identical to a dense update followed by re-zeroing (projection).
+
+Run: python3 python/tests/validate_block_skip.py
+"""
+
+QNAN = 0x7FC00000
+INF = 0x7F800000
+EXP = 0x7F800000
+MIN_NORMAL_MANT = 0x00800000
+M32 = 0xFFFFFFFF
+
+
+def fields(bits):
+    return (bits >> 31) & 1, (bits >> 23) & 0xFF, bits & 0x7FFFFF
+
+
+def pim_mul_bits(abits, bbits):
+    sa, ea, fa = fields(abits)
+    sb, eb, fb = fields(bbits)
+    a_nan = ea == 255 and fa != 0
+    b_nan = eb == 255 and fb != 0
+    a_inf = ea == 255 and fa == 0
+    b_inf = eb == 255 and fb == 0
+    a_zero = ea == 0
+    b_zero = eb == 0
+    sign = ((sa ^ sb) << 31) & M32
+    if a_nan or b_nan or (a_inf and b_zero) or (b_inf and a_zero):
+        return QNAN
+    if a_inf or b_inf:
+        return sign | INF
+    if a_zero or b_zero:
+        return sign
+
+    ma = fa | MIN_NORMAL_MANT
+    mb = fb | MIN_NORMAL_MANT
+    p = ma * mb
+    top_set = (p >> 47) & 1
+    s = 23 + top_set
+    mant_preround = (p >> s) & 0xFFFFFF
+    guard = (p >> (s - 1)) & 1
+    sticky = (p & ((1 << (s - 1)) - 1)) != 0
+    round_up = guard == 1 and (sticky or (mant_preround & 1) == 1)
+    mant = mant_preround + (1 if round_up else 0)
+    e = ea + eb - 127 + top_set
+    e0 = e
+    if mant == 1 << 24:
+        mant >>= 1
+        e += 1
+    if e >= 255:
+        return sign | INF
+    if e <= 0:
+        if e0 == 0 and mant_preround == 0xFFFFFF:
+            return sign | MIN_NORMAL_MANT
+        return sign
+    return sign | (e << 23) | (mant & 0x7FFFFF)
+
+
+def pim_add_bits(abits, bbits):
+    sa, ea, fa = fields(abits)
+    sb, eb, fb = fields(bbits)
+    a_nan = ea == 255 and fa != 0
+    b_nan = eb == 255 and fb != 0
+    a_inf = ea == 255 and fa == 0
+    b_inf = eb == 255 and fb == 0
+    a_zero = ea == 0
+    b_zero = eb == 0
+    if a_nan or b_nan or (a_inf and b_inf and sa != sb):
+        return QNAN
+    if a_inf:
+        return abits
+    if b_inf:
+        return bbits
+    if a_zero and b_zero:
+        return ((sa & sb) << 31) & M32
+    if a_zero:
+        return bbits
+    if b_zero:
+        return abits
+
+    if (abits & 0x7FFFFFFF) >= (bbits & 0x7FFFFFFF):
+        xbits, ybits = abits, bbits
+    else:
+        xbits, ybits = bbits, abits
+    sx, ex, fx = fields(xbits)
+    _, ey, fy = fields(ybits)
+    mx = (fx | MIN_NORMAL_MANT) << 3
+    my = (fy | MIN_NORMAL_MANT) << 3
+    d = min(ex - ey, 27)
+    lost = my & ((1 << d) - 1)
+    my_al = (my >> d) | (1 if lost != 0 else 0)
+    subtract = sx != (ybits >> 31) & 1
+    total = (mx - my_al) if subtract else (mx + my_al)
+    if total == 0:
+        return 0
+    p = total.bit_length() - 1
+    if p == 27:
+        total_n, e0 = (total >> 1) | (total & 1), ex + 1
+    else:
+        total_n, e0 = total << (26 - p), ex - (26 - p)
+    kept_preround = total_n >> 3
+    rb = (total_n >> 2) & 1
+    st = (total_n & 3) != 0
+    round_up = rb == 1 and (st or (kept_preround & 1) == 1)
+    kept = kept_preround + (1 if round_up else 0)
+    e = e0
+    if kept == 1 << 24:
+        kept >>= 1
+        e += 1
+    sign = (sx << 31) & M32
+    if e >= 255:
+        return sign | INF
+    if e <= 0:
+        if e0 == 0 and kept_preround == 0xFFFFFF:
+            return sign | MIN_NORMAL_MANT
+        return sign
+    return sign | (e << 23) | (kept & 0x7FFFFF)
+
+
+def mac_reference(acc, w, x):
+    return pim_add_bits(acc, pim_mul_bits(w, x))
+
+
+def mac_fast(acc, w, x):
+    """The Rust pim_mac_acc shortcut, mirrored exactly (proven by PR 4)."""
+    we = w & EXP
+    xe = x & EXP
+    if (we == 0 or xe == 0) and we != EXP and xe != EXP:
+        if (acc & EXP) != 0 and (acc & 0x7FFFFFFF) <= INF:
+            return acc
+        return pim_add_bits(acc, (w ^ x) & 0x80000000)
+    return pim_add_bits(acc, pim_mul_bits(w, x))
+
+
+def sgd_bits(w, lr, g):
+    """w - lr*g via the PIM mul/sub chain (pim_sub = add of negation)."""
+    return pim_add_bits(w, pim_mul_bits(lr, g) ^ 0x80000000)
+
+
+# ---------------------------------------------------------------------------
+# Block-skip algebra (mirrors rust/src/arch/sparsity.rs helpers)
+# ---------------------------------------------------------------------------
+
+
+def skip_flags(xs):
+    """(all_finite, any_pos) over a run of activation bit patterns."""
+    all_finite = True
+    any_pos = False
+    for x in xs:
+        if x & EXP == EXP:
+            all_finite = False
+        if (x >> 31) == 0:
+            any_pos = True
+    return all_finite, any_pos
+
+
+def fold_zero_run(acc, all_finite, any_pos):
+    """Result of acc after a run (len >= 1) of +0-weight MACs, or None.
+
+    None means an activation in the run is Inf/NaN (product would be
+    QNAN) and the caller must fall back to the dense MAC loop.
+    """
+    if not all_finite:
+        return None
+    if acc & EXP == EXP:
+        if acc & 0x007FFFFF:
+            return QNAN  # NaN acc: any add collapses to the canonical QNAN
+        return acc  # +-Inf acc: identity
+    if acc & EXP:
+        return acc  # normal acc: signed-zero adds are identities
+    # zero-class acc (+-0 or subnormal): (sa & sb) chain; stays -0 only if
+    # the acc is negative and every product in the run is -0.
+    return 0x80000000 if (acc >> 31) == 1 and not any_pos else 0
+
+
+# ---------------------------------------------------------------------------
+# Masked kernel mirrors (structure-for-structure with arch/gemm.rs)
+# ---------------------------------------------------------------------------
+
+
+def nt_masked(a, w, bias, masked, m, k, n, br, kc):
+    """Forward y = x . W^T with block skip.  w row-major [n, k]."""
+    y = [[(bias[j] if bias is not None else 0) for j in range(n)] for _ in range(m)]
+    kp = 0
+    while kp < k:
+        kend = min(kp + kc, k)
+        gc = kp // kc
+        for r in range(m):
+            xrow = a[r * k + kp : r * k + kend]
+            flags = None
+            for j in range(n):
+                if (j // br, gc) in masked:
+                    if flags is None:
+                        flags = skip_flags(xrow)
+                    all_finite, any_pos = flags
+                    v = fold_zero_run(y[r][j], all_finite, any_pos)
+                    if v is None:
+                        acc = y[r][j]
+                        for kk in range(kp, kend):
+                            acc = mac_fast(acc, w[j * k + kk], a[r * k + kk])
+                        y[r][j] = acc
+                    else:
+                        y[r][j] = v
+                else:
+                    acc = y[r][j]
+                    for kk in range(kp, kend):
+                        acc = mac_fast(acc, w[j * k + kk], a[r * k + kk])
+                    y[r][j] = acc
+        kp = kend
+    return y
+
+
+def nt_dense(a, w, bias, m, k, n):
+    y = []
+    for r in range(m):
+        row = []
+        for j in range(n):
+            acc = bias[j] if bias is not None else 0
+            for kk in range(k):
+                acc = mac_fast(acc, w[j * k + kk], a[r * k + kk])
+            row.append(acc)
+        y.append(row)
+    return y
+
+
+def nn_masked(a, w, masked, m, k, n, br, kc):
+    """dgrad y = delta . W with block skip.  w read as [k, n] = [out, inp]."""
+    y = [[0] * n for _ in range(m)]
+    for r in range(m):
+        arow = a[r * k : (r + 1) * k]
+        ka = 0
+        while ka < k:
+            gr = ka // br
+            kb = min((gr + 1) * br, k)
+            flags = None
+            j = 0
+            while j < n:
+                gc = j // kc
+                jend = min((gc + 1) * kc, n)
+                if (gr, gc) in masked:
+                    if flags is None:
+                        flags = skip_flags(arow[ka:kb])
+                    all_finite, any_pos = flags
+                    if all_finite:
+                        for jj in range(j, jend):
+                            y[r][jj] = fold_zero_run(y[r][jj], True, any_pos)
+                    else:
+                        for kk in range(ka, kb):
+                            av = arow[kk]
+                            for jj in range(j, jend):
+                                y[r][jj] = mac_fast(y[r][jj], w[kk * n + jj], av)
+                else:
+                    for kk in range(ka, kb):
+                        av = arow[kk]
+                        for jj in range(j, jend):
+                            y[r][jj] = mac_fast(y[r][jj], w[kk * n + jj], av)
+                j = jend
+            ka = kb
+    return y
+
+
+def nn_dense(a, w, m, k, n):
+    y = []
+    for r in range(m):
+        row = []
+        for j in range(n):
+            acc = 0
+            for kk in range(k):
+                acc = mac_fast(acc, w[kk * n + j], a[r * k + kk])
+            row.append(acc)
+        y.append(row)
+    return y
+
+
+def tn_masked(a, b, seed, masked, m, k, n, br, kc):
+    """wgrad dW = delta^T . X with OUTPUT skip: masked cells keep the seed.
+
+    a is [k, m] (delta, batch-major), b is [k, n] (x), output [m, n] has
+    the weight-matrix shape, so the weight mask applies to it directly.
+    """
+    y = [
+        [(seed[r][j] if seed is not None else 0) for j in range(n)]
+        for r in range(m)
+    ]
+    for kk in range(k):
+        for r in range(m):
+            gr = r // br
+            ad = a[kk * m + r]
+            j = 0
+            while j < n:
+                gc = j // kc
+                jend = min((gc + 1) * kc, n)
+                if (gr, gc) not in masked:
+                    for jj in range(j, jend):
+                        y[r][jj] = mac_fast(y[r][jj], ad, b[kk * n + jj])
+                j = jend
+    return y
+
+
+def tn_dense(a, b, seed, m, k, n):
+    y = []
+    for r in range(m):
+        row = []
+        for j in range(n):
+            acc = seed[r][j] if seed is not None else 0
+            for kk in range(k):
+                acc = mac_fast(acc, a[kk * m + r], b[kk * n + j])
+            row.append(acc)
+        y.append(row)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Data generation
+# ---------------------------------------------------------------------------
+
+
+class Rng:
+    def __init__(self, seed):
+        self.s = seed & 0xFFFFFFFFFFFFFFFF
+
+    def next(self):
+        self.s ^= (self.s << 13) & 0xFFFFFFFFFFFFFFFF
+        self.s ^= self.s >> 7
+        self.s ^= (self.s << 17) & 0xFFFFFFFFFFFFFFFF
+        return self.s
+
+    def bits(self, specials=()):
+        """A finite fp32 pattern; occasionally a special from `specials`."""
+        r = self.next()
+        if specials and r % 11 == 0:
+            return specials[(r >> 8) % len(specials)]
+        c = (r >> 4) % 8
+        sign = (r >> 63) << 31
+        mant = (r >> 24) & 0x7FFFFF
+        if c == 0:
+            return sign  # +-0
+        if c == 1:
+            return (sign | (mant & 0xFFF)) & M32  # subnormal
+        exp = 100 + (r >> 40) % 56  # normals across ~56 binades
+        return (sign | (exp << 23) | mant) & M32
+
+
+def edge_bit_patterns():
+    exps = [0, 1, 2, 127, 253, 254, 255]
+    mants = [0, 1, 0x400000, 0x7FFFFF]
+    out = []
+    for e in exps:
+        for m in mants:
+            for s in (0, 1):
+                out.append(((s << 31) | (e << 23) | m) & M32)
+    return out
+
+
+def random_mask(rng, grid_r, grid_c, ratio):
+    nb = grid_r * grid_c
+    target = int(nb * ratio)
+    order = sorted(range(nb), key=lambda i: (rng.next(), i))
+    return {(i // grid_c, i % grid_c) for i in order[:target]}
+
+
+def zero_masked_w_nt(w, masked, n, k, br, kc):
+    out = list(w)
+    for j in range(n):
+        for kk in range(k):
+            if (j // br, kk // kc) in masked:
+                out[j * k + kk] = 0
+    return out
+
+
+def zero_masked_w_nn(w, masked, kdim, n, br, kc):
+    out = list(w)
+    for kk in range(kdim):
+        for j in range(n):
+            if (kk // br, j // kc) in masked:
+                out[kk * n + j] = 0
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Tests
+# ---------------------------------------------------------------------------
+
+
+def check_fold_rule():
+    grid = edge_bit_patterns()
+    finite = [g for g in grid if g & EXP != EXP]
+    n = 0
+    # exhaustive length-1 runs, strided length-2, random length-1..4
+    for acc in grid:
+        for x0 in grid:
+            n += check_one_run(acc, [x0])
+    for acc in grid:
+        for x0 in finite[::2]:
+            for x1 in finite[1::2]:
+                n += check_one_run(acc, [x0, x1])
+    rng = Rng(0xB10C5EED)
+    for _ in range(20_000):
+        acc = rng.bits(specials=(0, 0x80000000, INF, QNAN, 0x00000001, 0x80000001))
+        ln = 1 + rng.next() % 4
+        run = [
+            rng.bits(specials=(0, 0x80000000, INF, INF | 0x80000000, QNAN))
+            for _ in range(ln)
+        ]
+        n += check_one_run(acc, run)
+    print(f"fold-rule runs OK: {n}")
+
+
+def check_one_run(acc, run):
+    all_finite, any_pos = skip_flags(run)
+    seq = acc
+    for x in run:
+        seq = mac_reference(seq, 0, x)  # +0 weight: the pruned block entry
+    got = fold_zero_run(acc, all_finite, any_pos)
+    if got is None:
+        assert not all_finite, "fold refused a finite run"
+        return 1
+    assert got == seq, (
+        f"fold mismatch acc={acc:#010x} run={[hex(x) for x in run]}: "
+        f"fold={got:#010x} seq={seq:#010x}"
+    )
+    return 1
+
+
+def check_nt(rng, m, k, n, br, kc, masked, specials, bias_specials, tag):
+    a = [rng.bits(specials=specials) for _ in range(m * k)]
+    w = [rng.bits() for _ in range(n * k)]
+    w = zero_masked_w_nt(w, masked, n, k, br, kc)
+    bias = [rng.bits(specials=bias_specials) for _ in range(n)]
+    got = nt_masked(a, w, bias, masked, m, k, n, br, kc)
+    want = nt_dense(a, w, bias, m, k, n)
+    assert got == want, f"NT mismatch [{tag}] masked={sorted(masked)}"
+
+
+def check_nn(rng, m, k, n, br, kc, masked, specials, tag):
+    a = [rng.bits(specials=specials) for _ in range(m * k)]
+    w = [rng.bits() for _ in range(k * n)]
+    w = zero_masked_w_nn(w, masked, k, n, br, kc)
+    got = nn_masked(a, w, masked, m, k, n, br, kc)
+    want = nn_dense(a, w, m, k, n)
+    assert got == want, f"NN mismatch [{tag}] masked={sorted(masked)}"
+
+
+def check_tn(rng, m, k, n, br, kc, masked, with_seed, tag):
+    a = [rng.bits() for _ in range(k * m)]
+    b = [rng.bits() for _ in range(k * n)]
+    seed = (
+        [[rng.bits() for _ in range(n)] for _ in range(m)] if with_seed else None
+    )
+    got = tn_masked(a, b, seed, masked, m, k, n, br, kc)
+    want = tn_dense(a, b, seed, m, k, n)
+    for r in range(m):
+        for j in range(n):
+            if (r // br, j // kc) in masked:
+                expect = seed[r][j] if seed is not None else 0
+                assert got[r][j] == expect, f"TN masked cell not seed [{tag}]"
+            else:
+                assert got[r][j] == want[r][j], f"TN live mismatch [{tag}]"
+
+
+def check_kernels():
+    kc, br = 8, 3
+    m, k, n = 3, 2 * kc + 3, 2 * br + 1  # partial edge blocks on both axes
+    grid_r = (n + br - 1) // br
+    grid_c = (k + kc - 1) // kc
+    neg_only = [0x80000000 | (120 << 23) | 0x123456, 0x80000000, 0x80000001]
+    cases = 0
+    rng = Rng(0xD15EA5E0B10C)
+    for ratio in (0.0, 0.4, 0.75, 1.0):
+        for trial in range(6):
+            masked = random_mask(rng, grid_r, grid_c, ratio)
+            specials = (0, 0x80000000, 0x00000001, 0x80000001)
+            check_nt(rng, m, k, n, br, kc, masked, specials, specials, "mixed")
+            cases += 1
+    # NN: weight read as [k=out, n=inp]; mask grid is (out_block, inp_panel)
+    kdim, ndim = 2 * br + 1, 2 * kc + 3
+    grid_r_nn = (kdim + br - 1) // br
+    grid_c_nn = (ndim + kc - 1) // kc
+    for ratio in (0.0, 0.4, 0.75, 1.0):
+        for trial in range(6):
+            masked = random_mask(rng, grid_r_nn, grid_c_nn, ratio)
+            specials = (0, 0x80000000, 0x00000001, 0x80000001)
+            check_nn(rng, 3, kdim, ndim, br, kc, masked, specials, "mixed")
+            cases += 1
+    # TN: output [m=out, n=k_in] masked directly
+    grid_r_tn = (n + br - 1) // br
+    grid_c_tn = (k + kc - 1) // kc
+    for ratio in (0.0, 0.5, 1.0):
+        for with_seed in (False, True):
+            masked = random_mask(rng, grid_r_tn, grid_c_tn, ratio)
+            check_tn(rng, n, 4, k, br, kc, masked, with_seed, "mixed")
+            cases += 1
+
+    # targeted edge batteries ----------------------------------------------
+    full = {(gr, gc) for gr in range(grid_r) for gc in range(grid_c)}
+    # all-negative activations: any_pos=False path (acc can stay -0)
+    a = [0x80000000 | ((110 + i % 30) << 23) | (i * 2654435761 & 0x7FFFFF)
+         for i in range(m * k)]
+    for i in range(0, m * k, 5):
+        a[i] = 0x80000000  # sprinkle -0 activations
+    w = zero_masked_w_nt([rng.bits() for _ in range(n * k)], full, n, k, br, kc)
+    bias = [0x80000000, 0x80000001, 0, 0x00000001, 0x80000000, 0, 0x80000002]
+    got = nt_masked(a, w, bias, full, m, k, n, br, kc)
+    want = nt_dense(a, w, bias, m, k, n)
+    assert got == want, "NT all-masked/neg-activation mismatch"
+    for r in range(m):
+        for j in range(n):
+            assert got[r][j] in (0, 0x80000000), "fully-masked NT must fold to a signed zero"
+    cases += 1
+    # Inf/NaN activations force the dense fallback
+    specials = (INF, INF | 0x80000000, QNAN)
+    masked = random_mask(rng, grid_r, grid_c, 0.6)
+    check_nt(rng, m, k, n, br, kc, masked, specials, (0x80000000,), "nonfinite")
+    check_nn(rng, 3, kdim, ndim, br, kc,
+             random_mask(rng, grid_r_nn, grid_c_nn, 0.6), specials, "nonfinite")
+    cases += 2
+    # full-KC panel crossing (the real KC=256), small n
+    masked = {(0, 0), (1, 1)}
+    check_nt(rng, 2, 300, 5, 2, 256, masked, (0, 0x80000000), (0,), "kc256")
+    cases += 1
+    print(f"kernel mirrors OK: {cases} cases")
+
+
+def check_sgd_pinning():
+    """3-step single-layer loop: masked kernels + masked SGD == dense projection."""
+    rng = Rng(0xF00D5EED)
+    kc, br = 8, 2
+    batch, inp, out = 3, 2 * kc + 3, 2 * br + 1
+    grid_r = (out + br - 1) // br
+    grid_c = (inp + kc - 1) // kc
+    masked = random_mask(rng, grid_r, grid_c, 0.5)
+    lr = 0x3C23D70A  # 0.01f
+    w = zero_masked_w_nt([rng.bits() for _ in range(out * inp)], masked, out, inp, br, kc)
+    wd = list(w)  # dense-projection replica
+    x = [rng.bits(specials=(0, 0x80000000)) for _ in range(batch * inp)]
+    for step in range(3):
+        ys = nt_masked(x, w, None, masked, batch, inp, out, br, kc)
+        yd = nt_dense(x, wd, None, batch, inp, out)
+        assert ys == yd, f"fwd diverged at step {step}"
+        # synthetic upstream delta, same for both
+        delta = [rng.bits() for _ in range(batch * out)]
+        gs = tn_masked(delta, x, None, masked, out, batch, inp, br, kc)
+        gd = tn_dense(delta, x, None, out, batch, inp)
+        for r in range(out):
+            for j in range(inp):
+                if (r // br, j // kc) in masked:
+                    assert gs[r][j] == 0, "masked grad must be +0.0"
+                    # dense update then re-zero (projection)
+                    wd[r * inp + j] = 0
+                else:
+                    assert gs[r][j] == gd[r][j], "live grad diverged"
+                    w[r * inp + j] = sgd_bits(w[r * inp + j], lr, gs[r][j])
+                    wd[r * inp + j] = sgd_bits(wd[r * inp + j], lr, gd[r][j])
+    assert w == wd, "post-SGD params diverged from the dense projection"
+    for r in range(out):
+        for j in range(inp):
+            if (r // br, j // kc) in masked:
+                assert w[r * inp + j] == 0, "pruned weight drifted off +0.0"
+    print("SGD pinning / dense-projection OK: 3 steps bit-identical")
+
+
+def main():
+    check_fold_rule()
+    check_kernels()
+    check_sgd_pinning()
+    print("block-skip algebra and masked kernels are bit-identical")
+
+
+if __name__ == "__main__":
+    main()

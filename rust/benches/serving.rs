@@ -1,6 +1,6 @@
 //! PR 9 serving-tier bench + acceptance gates.
 //!
-//! Four deterministic virtual-time scenarios (open-loop Poisson
+//! Five deterministic virtual-time scenarios (open-loop Poisson
 //! arrivals, seed 42, the default `BatchPolicy`) over real warm
 //! resident-panel engines — wall-clock entries time the simulation
 //! itself (forward compute dominates), `metric:` entries carry the
@@ -14,7 +14,12 @@
 //!   for bounded latency, nothing is lost;
 //! * **1.0x-of-healthy, one chip dead** — `chip_dead=1,seed=9`: the
 //!   survivor serves at reduced capacity, ABFT checksum waves priced
-//!   into every request's latency.
+//!   into every request's latency;
+//! * **1.0x sparse** — the PR 10 block-sparse model (`block=4,
+//!   ratio=0.75`, pruned blocks pinned at +0.0): the fleet's capacity
+//!   rises with the skipped weight panels, so it serves **more krps
+//!   than the dense healthy scenario under the same analytic p99
+//!   gate** (in-binary assert).
 //!
 //! In-binary acceptance gates: request conservation in every scenario,
 //! zero unrecovered faults, admitted p99 within the analytic
@@ -30,7 +35,7 @@
 
 use std::sync::Arc;
 
-use mram_pim::arch::NetworkParams;
+use mram_pim::arch::{NetworkParams, SparsityConfig};
 use mram_pim::bench::{bench, emit, heap_allocations, BenchResult, CountingAllocator};
 use mram_pim::data::Dataset;
 use mram_pim::fpu::FpCostModel;
@@ -63,9 +68,18 @@ fn metric(name: &str, v: f64) -> BenchResult {
     }
 }
 
-fn make_backend(session: Option<Arc<FaultSession>>) -> InferBackend {
+fn make_backend(session: Option<Arc<FaultSession>>, sparse: bool) -> InferBackend {
     let net = Network::lenet5();
-    let params = NetworkParams::init(&net, 3);
+    let mut params = NetworkParams::init(&net, 3);
+    if sparse {
+        // PR 10 block-sparse model: pruned blocks pinned at +0.0, their
+        // forward waves skipped and the skip priced into svc latency.
+        SparsityConfig {
+            block_rows: 4,
+            ratio: 0.75,
+        }
+        .ensure(&mut params);
+    }
     InferBackend::new(
         net,
         params,
@@ -89,18 +103,22 @@ fn main() {
     let mut reports: Vec<ServeReport> = Vec::new();
     let mut total_unrecovered = 0u64;
 
-    let scenarios: [(&str, usize, f64, bool); 4] = [
+    let scenarios: [(&str, usize, f64, bool, bool); 5] = [
         ("serving: 100000 open-loop arrivals @ 1.0x offered load (chips 2, healthy)",
-         100_000, 1.0, false),
+         100_000, 1.0, false, false),
         ("serving: 20000 open-loop arrivals @ 2.0x offered load (chips 2, healthy)",
-         20_000, 2.0, false),
+         20_000, 2.0, false, false),
         ("serving: 20000 open-loop arrivals @ 0.5x offered load (chips 2, healthy)",
-         20_000, 0.5, false),
+         20_000, 0.5, false, false),
         ("serving: 20000 open-loop arrivals @ 1.0x-of-healthy load (chips 2, one dead)",
-         20_000, 1.0, true),
+         20_000, 1.0, true, false),
+        ("serving: 20000 open-loop arrivals @ 1.0x offered load \
+          (chips 2, sparse block=4 ratio=0.75)",
+         20_000, 1.0, false, true),
     ];
 
-    for (name, n, mult, dead) in scenarios {
+    let mut dense_capacity = 0.0f64;
+    for (name, n, mult, dead, sparse) in scenarios {
         let session = if dead {
             Some(Arc::new(FaultSession::new(
                 FaultConfig::parse("chip_dead=1,seed=9").expect("fault spec"),
@@ -108,9 +126,12 @@ fn main() {
         } else {
             None
         };
-        let mut sim = ServeSim::new(make_backend(session.clone()), policy, pool(), n)
+        let mut sim = ServeSim::new(make_backend(session.clone(), sparse), policy, pool(), n)
             .expect("serve sim");
         let cap = sim.capacity_rps();
+        if !dead && !sparse && dense_capacity == 0.0 {
+            dense_capacity = cap;
+        }
         sim.warm().expect("warm");
         let arrivals = open_loop_arrivals(n, mult * cap, 42);
         let mut report: Option<ServeReport> = None;
@@ -144,6 +165,30 @@ fn main() {
             );
             assert_eq!(sim.live_chips(), 1, "{name}: chip_dead=1 leaves one survivor");
         }
+        if sparse {
+            // The block-sparse fleet serves *more* requests per second
+            // under the same analytic p99 gate: skipped weight panels
+            // shorten every forward wave train.
+            assert!(
+                st.live_block_ratio < 1.0 && st.skipped_waves > 0,
+                "{name}: sparse backend skipped nothing: {st:?}"
+            );
+            assert!(
+                cap > dense_capacity,
+                "{name}: sparse capacity {cap:.0} rps must exceed dense \
+                 {dense_capacity:.0} rps"
+            );
+            assert!(
+                report.throughput_rps > reports[0].throughput_rps,
+                "{name}: sparse throughput {:.1} krps must beat the dense healthy \
+                 scenario's {:.1} krps at the same p99 gate",
+                report.throughput_rps / 1e3,
+                reports[0].throughput_rps / 1e3,
+            );
+        } else {
+            assert_eq!(st.skipped_waves, 0, "{name}: dense panels must skip nothing");
+            assert_eq!(st.live_block_ratio, 1.0);
+        }
         println!(
             "{name}\n  admitted {} / rejected {} / shed {} / completed {}  \
              batches {} (mean {:.1})  thr {:.1} krps  p50 {:.3} ms  p99 {:.3} ms",
@@ -165,7 +210,8 @@ fn main() {
     //      replayed end-to-end must not touch the heap — armed runs
     //      advance hook epochs and legitimately diverge, so the audit
     //      scenario runs clean ----
-    let mut audit = ServeSim::new(make_backend(None), policy, pool(), 4000).expect("audit sim");
+    let mut audit =
+        ServeSim::new(make_backend(None, false), policy, pool(), 4000).expect("audit sim");
     let audit_arrivals = open_loop_arrivals(4000, 1.2 * audit.capacity_rps(), 42);
     audit.warm().expect("audit warm");
     audit.run(&audit_arrivals).expect("audit settle run");
@@ -191,6 +237,19 @@ fn main() {
     results.push(metric(
         "metric: serving completed pct @1.0x one-dead",
         100.0 * rd.stats.completed as f64 / rd.stats.submitted as f64,
+    ));
+    let rsp = &reports[4];
+    results.push(metric(
+        "metric: serving throughput krps @1.0x sparse-0.75",
+        rsp.throughput_rps / 1e3,
+    ));
+    results.push(metric(
+        "metric: serving p99 ms @1.0x sparse-0.75",
+        rsp.p99_s * 1e3,
+    ));
+    results.push(metric(
+        "metric: serving live weight pct @1.0x sparse-0.75",
+        rsp.stats.live_block_ratio * 100.0,
     ));
     results.push(metric(
         "metric: serving unrecovered faults",

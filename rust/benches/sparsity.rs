@@ -1,0 +1,269 @@
+//! PR 10 block-sparse training bench + acceptance gates.
+//!
+//! Benches the wide 784-1024-1024-10 MLP (`Network::mlp_wide`) through
+//! the pooled resident-panel engine dense and at block-sparsity ratios
+//! {0.5, 0.75, 0.9} (block = 4 output rows × one 256-wide K-panel,
+//! magnitude-pruned).  Masked blocks are skipped at the wave level, so
+//! both the *priced* schedule (waves/latency/energy) and the *host*
+//! wall-clock must drop together — sparsity that only discounts the
+//! ledger would be a pricing fiction, and sparsity that only helps the
+//! host would be unpriced.
+//!
+//! In-binary acceptance gates:
+//!
+//! * counted ledger == occupancy-aware analytic `training_work` at
+//!   every ratio (MACs, waves, skipped counters — exactly);
+//! * at ratio 0.75 the priced wave count drops **≥ 2×** and the host
+//!   wall-clock **≥ 1.3×** vs dense (`SPARSITY_MIN_SPEEDUP` overrides
+//!   the wall-clock floor for noisy runners);
+//! * a ratio-0 mask is **bit-identical** to no mask (loss + updated
+//!   parameters; the mismatch count is emitted as an exact-gated
+//!   `metric:` with committed baseline 0);
+//! * the steady-state masked step performs **zero heap allocations**,
+//!   **zero thread spawns** and **zero panel decodes**
+//!   (`SPARSITY_ALLOC_TOLERANCE` overrides).
+//!
+//! `tools/check_bench_regression.py` additionally holds the fresh
+//! dense-vs-0.75 wall-clock ratio under `SPARSITY_SLACK_PCT` and the
+//! two zero counters under exact gates.
+//!
+//! Run: `cargo bench --bench sparsity` (add `-- --json` for
+//! `BENCH_sparsity.json`).
+
+use mram_pim::arch::pool::worker_launches;
+use mram_pim::arch::{
+    panel_decodes, NetworkParams, Occupancy, SparsityConfig, TrainEngine, TrainTotals,
+};
+use mram_pim::bench::{bench, emit, heap_allocations, BenchResult, CountingAllocator};
+use mram_pim::data::Dataset;
+use mram_pim::fpu::FpCostModel;
+use mram_pim::model::Network;
+use mram_pim::prop::Rng;
+use mram_pim::runtime::FUNCTIONAL_LANES;
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+fn env_f64(name: &str, default: f64) -> f64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn metric(name: &str, v: f64) -> BenchResult {
+    BenchResult {
+        name: name.to_string(),
+        iters: 1,
+        mean_ns: v,
+        p50_ns: v,
+        p99_ns: v,
+        min_ns: v,
+    }
+}
+
+/// Pruned-and-pinned parameter set for `ratio` (dense when 0 with no
+/// mask attached — the true baseline, not a ratio-0 mask).
+fn pruned_params(net: &Network, ratio: f64) -> NetworkParams {
+    let mut p = NetworkParams::init(net, 7);
+    if ratio > 0.0 {
+        SparsityConfig {
+            block_rows: 4,
+            ratio,
+        }
+        .ensure(&mut p);
+    }
+    p
+}
+
+fn main() {
+    let net = Network::mlp_wide();
+    let batch = 32usize;
+    let mut rng = Rng::new(0x59A5);
+    let data = Dataset::synthetic(batch, 0x59A5).full_batch(batch);
+    let labels: Vec<i32> = data.labels.clone();
+    let images: Vec<f32> = data
+        .images
+        .iter()
+        .map(|&v| v + rng.f32_normal(1) * 1e-6)
+        .collect();
+    let eng = TrainEngine::new(FpCostModel::proposed_fp32(), FUNCTIONAL_LANES, 4);
+
+    let mut results: Vec<BenchResult> = Vec::new();
+    // (ratio, mean_ns, step waves) per entry; ratio 0.0 first.
+    let mut measured: Vec<(f64, f64, u64)> = Vec::new();
+
+    for ratio in [0.0f64, 0.5, 0.75, 0.9] {
+        let name = if ratio == 0.0 {
+            format!("mlp-wide train step batch {batch} (threads 4, pooled, dense)")
+        } else {
+            format!(
+                "mlp-wide train step batch {batch} \
+                 (threads 4, pooled, sparse block=4 ratio={ratio})"
+            )
+        };
+        // Steady-state steps on persistent params: the mask (and thus
+        // the work) is fixed across iterations; only the weights move.
+        let mut p = pruned_params(&net, ratio);
+        let warm = eng
+            .train_step(&net, &mut p, &images, &labels, batch, 0.05)
+            .expect("warm step");
+        eng.recycle(warm);
+        let r = bench(&name, 0, 4, || {
+            let r = eng
+                .train_step(&net, &mut p, &images, &labels, batch, 0.05)
+                .expect("train step");
+            std::hint::black_box(r.loss);
+            eng.recycle(r);
+        });
+
+        // One verified step: counted ledger == occupancy-aware analytic
+        // model, skipped gap accounted exactly.
+        let occ = Occupancy::of(&net, &p);
+        let step = eng
+            .train_step(&net, &mut p, &images, &labels, batch, 0.05)
+            .expect("verified step");
+        assert!(step.loss.is_finite());
+        let mut totals = TrainTotals::default();
+        totals.absorb(&step);
+        assert!(
+            totals.matches_analytic_occ(&net, batch, FUNCTIONAL_LANES as u64, &occ),
+            "ratio {ratio}: counted ledger drifted from the occupancy model: {totals:?}"
+        );
+        let work = occ.training_work(&net, batch);
+        println!(
+            "ratio {ratio}: {:.1}% weights live, {} waves ({} skipped), \
+             {:.1}M MACs ({:.1}M skipped), latency {:.3e} s, energy {:.3e} J, host {:.0} ms",
+            occ.live_fraction() * 100.0,
+            step.waves,
+            step.skipped_waves,
+            work.total_macs() as f64 / 1e6,
+            step.skipped_macs as f64 / 1e6,
+            step.latency_s,
+            step.energy_j,
+            r.mean_ns / 1e6,
+        );
+        if ratio == 0.0 {
+            assert_eq!(step.skipped_macs, 0, "dense step must skip nothing");
+            assert_eq!(step.skipped_waves, 0);
+        } else {
+            assert!(step.skipped_waves > 0, "ratio {ratio}: no waves skipped");
+            assert!(
+                step.waves < measured[0].2,
+                "ratio {ratio}: priced waves must drop below dense"
+            );
+            assert!(
+                r.mean_ns < measured[0].1,
+                "ratio {ratio}: sparse wall-clock must beat dense"
+            );
+        }
+        measured.push((ratio, r.mean_ns, step.waves));
+        eng.recycle(step);
+        results.push(r);
+    }
+
+    // ---- ratio-0 mask ≡ no mask, bit for bit (2 steps) ----
+    let mut with_mask = NetworkParams::init(&net, 7);
+    SparsityConfig {
+        block_rows: 4,
+        ratio: 0.0,
+    }
+    .ensure(&mut with_mask);
+    let mut without = NetworkParams::init(&net, 7);
+    let mut mismatches = 0u64;
+    for _ in 0..2 {
+        let rm = eng
+            .train_step(&net, &mut with_mask, &images, &labels, batch, 0.05)
+            .expect("masked step");
+        let rp = eng
+            .train_step(&net, &mut without, &images, &labels, batch, 0.05)
+            .expect("plain step");
+        mismatches += (rm.loss.to_bits() != rp.loss.to_bits()) as u64;
+        mismatches += (rm.waves != rp.waves) as u64;
+        eng.recycle(rm);
+        eng.recycle(rp);
+        for (a, b) in with_mask.layers.iter().flatten().zip(without.layers.iter().flatten()) {
+            mismatches += a
+                .w
+                .iter()
+                .chain(&a.b)
+                .zip(b.w.iter().chain(&b.b))
+                .filter(|(x, y)| x.to_bits() != y.to_bits())
+                .count() as u64;
+        }
+    }
+    println!("dense-mask vs no-mask bit mismatches over 2 steps: {mismatches}");
+
+    // ---- steady-state audit at ratio 0.75: masked skips must not cost
+    //      allocations, spawns or panel re-decodes ----
+    let mut p = pruned_params(&net, 0.75);
+    for _ in 0..2 {
+        let r = eng
+            .train_step(&net, &mut p, &images, &labels, batch, 0.05)
+            .expect("audit warm");
+        eng.recycle(r);
+    }
+    let spawns0 = worker_launches();
+    let allocs0 = heap_allocations();
+    let decodes0 = panel_decodes();
+    let r = eng
+        .train_step(&net, &mut p, &images, &labels, batch, 0.05)
+        .expect("audit step");
+    eng.recycle(r);
+    let audit_allocs = heap_allocations() - allocs0;
+    let audit_spawns = worker_launches() - spawns0;
+    let audit_decodes = panel_decodes() - decodes0;
+    println!(
+        "steady-state audit (ratio 0.75): {audit_allocs} allocs / {audit_spawns} spawns / \
+         {audit_decodes} panel decodes"
+    );
+
+    let (dense_ns, dense_waves) = (measured[0].1, measured[0].2);
+    let (r75_ns, r75_waves) = (measured[2].1, measured[2].2);
+    let wave_ratio = dense_waves as f64 / r75_waves as f64;
+    let speedup = dense_ns / r75_ns;
+    println!(
+        "dense vs ratio 0.75: priced waves {wave_ratio:.2}x [acceptance: >=2x], \
+         host wall {speedup:.2}x [acceptance: >=1.3x]"
+    );
+
+    results.push(metric("metric: sparsity priced wave ratio dense/0.75", wave_ratio));
+    results.push(metric("metric: sparsity wall speedup dense/0.75", speedup));
+    results.push(metric(
+        "metric: sparsity dense-mask bit mismatches",
+        mismatches as f64,
+    ));
+    results.push(metric(
+        "metric: sparsity steady-state allocs (ratio 0.75)",
+        audit_allocs as f64,
+    ));
+    emit("sparsity", &results);
+
+    // ---- acceptance gates ----
+    assert_eq!(
+        mismatches, 0,
+        "acceptance: a ratio-0 mask must be bit-identical to dense training"
+    );
+    assert!(
+        wave_ratio >= 2.0,
+        "acceptance: ratio 0.75 must cut priced waves >= 2x (measured {wave_ratio:.2}x)"
+    );
+    let min_speedup = env_f64("SPARSITY_MIN_SPEEDUP", 1.3);
+    assert!(
+        speedup >= min_speedup,
+        "acceptance: ratio 0.75 must cut host wall-clock >= {min_speedup}x \
+         (measured {speedup:.2}x)"
+    );
+    let alloc_tolerance = env_f64("SPARSITY_ALLOC_TOLERANCE", 0.0) as u64;
+    assert!(
+        audit_allocs <= alloc_tolerance,
+        "acceptance: steady-state masked train step must not touch the heap \
+         (measured {audit_allocs} allocations, tolerance {alloc_tolerance})"
+    );
+    assert_eq!(audit_spawns, 0, "acceptance: masked step must not spawn threads");
+    assert_eq!(
+        audit_decodes, 0,
+        "acceptance: masked step must not re-decode weight panels"
+    );
+    println!("sparsity OK");
+}

@@ -3,11 +3,12 @@
 
 use crate::arch::gemm::GemmEngine;
 use crate::arch::mapper::{MappingPlan, FLOATPIM_LANE_COLS, OURS_LANE_COLS};
+use crate::arch::sparsity::Occupancy;
 use crate::arch::train::TrainEngine;
 use crate::device::{CellKind, TechNode};
 use crate::floatpim::{FloatPimCostModel, ReRamParams};
 use crate::fpu::{CostBreakdown, FloatFormat, FpCostModel};
-use crate::model::Network;
+use crate::model::{Network, TrainingWork};
 use crate::nvsim::array::ArrayArea;
 use crate::nvsim::{ArrayGeometry, OpCosts};
 
@@ -213,7 +214,24 @@ impl Accelerator {
 
     /// Cost of one training step (fwd + bwd + update) at `batch`.
     pub fn train_step_cost(&self, net: &Network, batch: usize) -> RunCost {
-        let work = net.training_work(batch);
+        self.work_cost(net, batch, &net.training_work(batch))
+    }
+
+    /// Occupancy-aware step cost: the same pricing over the live
+    /// (block-sparse) workload.  Skipped blocks cost nothing — MACs,
+    /// waves and MAC energy all shrink by the live fraction, while the
+    /// activation stash and bias adds stay dense (they are not gated by
+    /// the weight mask).
+    pub fn train_step_cost_occ(
+        &self,
+        net: &Network,
+        batch: usize,
+        occ: &Occupancy,
+    ) -> RunCost {
+        self.work_cost(net, batch, &occ.training_work(net, batch))
+    }
+
+    fn work_cost(&self, net: &Network, batch: usize, work: &TrainingWork) -> RunCost {
         let macs = work.total_macs();
         // MAC waves: `lanes` MACs execute per array step (row-parallel
         // across all provisioned lanes).

@@ -73,6 +73,7 @@ use std::thread;
 
 use crate::arch::pool::{note_worker_launches, SendPtr, WorkerPool};
 use crate::arch::scratch::Arena;
+use crate::arch::sparsity::{fold_zero_run, skip_flags, BlockMask};
 use crate::fpu::softfloat::{
     pim_add_f32, pim_decode, pim_encode, pim_mac_acc_bits, pim_mac_acc_dec, pim_mul_f32,
 };
@@ -456,7 +457,7 @@ impl GemmEngine {
             }
         }
 
-        self.abft_guard(&mut y, batch, out, inp, &|r, row| {
+        self.abft_guard(&mut y, batch, out, inp, (batch * out) as u64, &|r, row| {
             gemm_rows_flat(w, x_batch, bias, out, inp, r * out, row);
         });
         self.priced(y, macs)
@@ -483,12 +484,20 @@ impl GemmEngine {
     /// and thread counts.  Checksum and retry work is reported through
     /// the hook and priced by the callers as extra MAC waves; the clean
     /// ledger (`macs`/`waves`) is untouched.
+    ///
+    /// `checksum_elems` is the number of output elements the checksum
+    /// lane actually accumulated — `m·n` for a dense GEMM, the live
+    /// element count for the masked kernels (skipped blocks never
+    /// enter the redundant lane, so sparsity shrinks the ABFT overhead
+    /// too).  Detection still covers every row: the reference/verify
+    /// sums are bit-exact over the full output either way.
     fn abft_guard(
         &self,
         y: &mut [f32],
         m: usize,
         n: usize,
         k: usize,
+        checksum_elems: u64,
         recompute: &dyn Fn(usize, &mut [f32]),
     ) {
         let Some(hook) = self.faults.as_deref() else {
@@ -502,7 +511,7 @@ impl GemmEngine {
         }
         hook.inject(y, m, n, epoch);
         let budget = hook.retries();
-        let mut checksum_adds = 2 * (m * n) as u64; // reference + verify
+        let mut checksum_adds = 2 * checksum_elems; // reference + verify
         let mut detected = 0u64;
         let mut retried = 0u64;
         let mut retry_macs = 0u64;
@@ -681,7 +690,7 @@ impl GemmEngine {
         });
         // Retry chain: ascending-k from the same decoded operand —
         // bit-identical to the blocked panel kernel's per-element chain.
-        self.abft_guard(&mut y, m, n, k, &|r, row| {
+        self.abft_guard(&mut y, m, n, k, (m * n) as u64, &|r, row| {
             let arow = &a[r * k..(r + 1) * k];
             for (j, slot) in row.iter_mut().enumerate() {
                 let mut acc = bias.map(|bb| bb[j].to_bits()).unwrap_or(0);
@@ -692,6 +701,144 @@ impl GemmEngine {
             }
         });
         self.priced(y, (m * n * k) as u64)
+    }
+
+    /// [`GemmEngine::gemm_nt_dec`] with a block-sparsity mask over the
+    /// resident panel: pruned `block_rows × KC` weight blocks are
+    /// skipped at the wave level and priced as zero MACs/waves
+    /// (`macs = m × live`).  The skip is bit-exact
+    /// ([`fold_zero_run`]; pre-validated loop-for-loop in
+    /// `python/tests/validate_block_skip.py`): masked panel entries are
+    /// decoded `+0`, and the closed-form fold of a `+0`-weight MAC run
+    /// equals the dense chain — including the signed-zero and
+    /// subnormal-flush accumulator cases — with a dense fallback when
+    /// an Inf/NaN activation makes the run non-foldable.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemm_nt_dec_masked(
+        &self,
+        a: &[f32],
+        bdec: &[u64],
+        mask: &BlockMask,
+        bias: Option<&[f32]>,
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> GemmResult {
+        assert_eq!(a.len(), m * k, "nt A shape");
+        assert_eq!(bdec.len(), n * k, "nt panel shape");
+        assert_eq!((mask.rows, mask.cols), (n, k), "nt mask shape");
+        if let Some(bb) = bias {
+            assert_eq!(bb.len(), n, "nt bias shape");
+        }
+        assert_eq!(self.mode, ExecMode::Pooled, "resident panels are pooled-only");
+        if m * n == 0 {
+            return GemmResult {
+                y: Vec::new(),
+                macs: 0,
+                waves: 0,
+                latency_s: 0.0,
+                energy_j: 0.0,
+            };
+        }
+        if mask.fully_masked() {
+            if let Some(r) = self.nt_empty_guard(a, bias, m, k, n) {
+                return r;
+            }
+        }
+        self.nt_run_masked(a, bdec, mask, bias, m, k, n)
+    }
+
+    /// The empty-wave guard (the PR 4 `rows == 0` fix lifted to fully
+    /// pruned layers): a layer whose every block is masked computes
+    /// nothing — each output is the closed-form fold of its bias seed
+    /// over the all-`+0` weight row.  Zero MACs, zero waves, **no
+    /// worker dispatch**, no ABFT epoch (no wave ran, so there is no
+    /// writeback to guard).  Returns `None` when some activation row is
+    /// non-finite (the fold does not apply; the caller runs the general
+    /// masked kernel, whose ledger is zero-MAC for this layer anyway).
+    fn nt_empty_guard(
+        &self,
+        a: &[f32],
+        bias: Option<&[f32]>,
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> Option<GemmResult> {
+        let mut y = self.arena.take(m * n);
+        for r in 0..m {
+            let yrow_range = r * n..(r + 1) * n;
+            if k == 0 {
+                // Zero-length contraction: the seed bits verbatim (a
+                // zero-length fold is the identity, even on zero-class
+                // seeds).
+                match bias {
+                    Some(bb) => y[yrow_range].copy_from_slice(bb),
+                    None => y[yrow_range].fill(0.0),
+                }
+                continue;
+            }
+            let (all_finite, any_pos) = skip_flags(&a[r * k..(r + 1) * k]);
+            if !all_finite {
+                self.arena.give(y);
+                return None;
+            }
+            for (j, slot) in y[yrow_range].iter_mut().enumerate() {
+                let acc = bias.map(|bb| bb[j].to_bits()).unwrap_or(0);
+                let folded = fold_zero_run(acc, true, any_pos).expect("finite run folds");
+                *slot = f32::from_bits(folded);
+            }
+        }
+        Some(GemmResult {
+            y,
+            macs: 0,
+            waves: 0,
+            latency_s: 0.0,
+            energy_j: 0.0,
+        })
+    }
+
+    /// Masked NT core: the blocked kernel with a per-(column, K-panel)
+    /// block skip.  Live columns run the dense MAC loop (the NR
+    /// register tile is dropped — task rectangles are not
+    /// block-aligned, and the skip wins dwarf the tile's reuse);
+    /// masked columns fold in closed form.  Priced at `m × live` MACs.
+    fn nt_run_masked(
+        &self,
+        a: &[f32],
+        bdec: &[u64],
+        mask: &BlockMask,
+        bias: Option<&[f32]>,
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> GemmResult {
+        let mut y = self.arena.take(m * n);
+        let tasks = self.threads.min(m.max(n)).max(1);
+        let yp = SendPtr(y.as_mut_ptr());
+        self.dispatch_tasks(tasks, |t| {
+            let (r0, r1, j0, j1) = task_rect(m, n, t, tasks);
+            nt_rect_masked(a, bdec, mask, k, n, bias, r0, r1, j0, j1, &yp);
+        });
+        // The dense retry chain reproduces the fold bit-for-bit: masked
+        // panel entries are decoded +0, and the fold is provably equal
+        // to the +0-weight MAC run it replaces.  Checksum lane priced
+        // over computed (live-column) elements only.
+        let checksum_elems = if self.faults.is_some() {
+            (m * mask.live_rows()) as u64
+        } else {
+            0
+        };
+        self.abft_guard(&mut y, m, n, k, checksum_elems, &|r, row| {
+            let arow = &a[r * k..(r + 1) * k];
+            for (j, slot) in row.iter_mut().enumerate() {
+                let mut acc = bias.map(|bb| bb[j].to_bits()).unwrap_or(0);
+                for (kk, &xv) in arow.iter().enumerate() {
+                    acc = pim_mac_acc_dec(acc, bdec[j * k + kk], xv.to_bits());
+                }
+                *slot = f32::from_bits(acc);
+            }
+        });
+        self.priced(y, (m * mask.live_elems()) as u64)
     }
 
     /// `C = A·B` — the **dgrad layout** (`dX = δ·W`).
@@ -754,7 +901,7 @@ impl GemmEngine {
             let (r0, r1, j0, j1) = task_rect(m, n, t, tasks);
             nn_rect(a, bdec, k, n, r0, r1, j0, j1, &yp);
         });
-        self.abft_guard(&mut y, m, n, k, &|r, row| {
+        self.abft_guard(&mut y, m, n, k, (m * n) as u64, &|r, row| {
             let arow = &a[r * k..(r + 1) * k];
             for (j, slot) in row.iter_mut().enumerate() {
                 let mut acc = 0u32;
@@ -765,6 +912,94 @@ impl GemmEngine {
             }
         });
         self.priced(y, (m * n * k) as u64)
+    }
+
+    /// [`GemmEngine::gemm_nn_dec`] with a block-sparsity mask: the
+    /// dgrad twin of [`GemmEngine::gemm_nt_dec_masked`].  The mask is
+    /// read transposed — its row blocks tile the NN contraction
+    /// dimension (`k = out`) and its KC column panels tile the output
+    /// columns (`n = inp`) — so one mask serves forward and dgrad just
+    /// like one resident panel does.  Priced at `m × live` MACs.
+    pub fn gemm_nn_dec_masked(
+        &self,
+        a: &[f32],
+        bdec: &[u64],
+        mask: &BlockMask,
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> GemmResult {
+        assert_eq!(a.len(), m * k, "nn A shape");
+        assert_eq!(bdec.len(), k * n, "nn panel shape");
+        assert_eq!((mask.rows, mask.cols), (k, n), "nn mask shape");
+        assert_eq!(self.mode, ExecMode::Pooled, "resident panels are pooled-only");
+        if m * n == 0 {
+            return GemmResult {
+                y: Vec::new(),
+                macs: 0,
+                waves: 0,
+                latency_s: 0.0,
+                energy_j: 0.0,
+            };
+        }
+        if mask.fully_masked() {
+            // Empty-wave guard: every dX element is a fold of a +0
+            // accumulator — +0.0 whenever the deltas are finite (a +0
+            // acc can never turn negative).  No dispatch, zero ledger.
+            let finite = a
+                .iter()
+                .all(|v| v.to_bits() & 0x7F80_0000 != 0x7F80_0000);
+            if finite {
+                let mut y = self.arena.take(m * n);
+                y.fill(0.0);
+                return GemmResult {
+                    y,
+                    macs: 0,
+                    waves: 0,
+                    latency_s: 0.0,
+                    energy_j: 0.0,
+                };
+            }
+        }
+        self.nn_run_masked(a, bdec, mask, m, k, n)
+    }
+
+    /// Masked NN core: the axpy sweep restructured into
+    /// `block_rows`-runs of `kk` × KC-aligned column segments, so a
+    /// masked block's whole contribution folds per output element in
+    /// closed form.  Per-element chains stay ascending-k.
+    fn nn_run_masked(
+        &self,
+        a: &[f32],
+        bdec: &[u64],
+        mask: &BlockMask,
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> GemmResult {
+        let mut y = self.arena.take(m * n);
+        let tasks = self.threads.min(m.max(n)).max(1);
+        let yp = SendPtr(y.as_mut_ptr());
+        self.dispatch_tasks(tasks, |t| {
+            let (r0, r1, j0, j1) = task_rect(m, n, t, tasks);
+            nn_rect_masked(a, bdec, mask, k, n, r0, r1, j0, j1, &yp);
+        });
+        let checksum_elems = if self.faults.is_some() {
+            (m * mask.live_cols()) as u64
+        } else {
+            0
+        };
+        self.abft_guard(&mut y, m, n, k, checksum_elems, &|r, row| {
+            let arow = &a[r * k..(r + 1) * k];
+            for (j, slot) in row.iter_mut().enumerate() {
+                let mut acc = 0u32;
+                for (kk, &av) in arow.iter().enumerate() {
+                    acc = pim_mac_acc_dec(acc, bdec[kk * n + j], av.to_bits());
+                }
+                *slot = f32::from_bits(acc);
+            }
+        });
+        self.priced(y, (m * mask.live_elems()) as u64)
     }
 
     /// Decode an f32 weight matrix into its u64 panel form, split
@@ -857,7 +1092,7 @@ impl GemmEngine {
             let (r0, r1, j0, j1) = task_rect(m, n, t, tasks);
             tn_rect(a, b, seed, k, m, n, r0, r1, j0, j1, &yp);
         });
-        self.abft_guard(&mut y, m, n, k, &|r, row| {
+        self.abft_guard(&mut y, m, n, k, (m * n) as u64, &|r, row| {
             for (j, slot) in row.iter_mut().enumerate() {
                 let mut acc = seed.map(|s| s[r * n + j].to_bits()).unwrap_or(0);
                 for kk in 0..k {
@@ -873,6 +1108,96 @@ impl GemmEngine {
         self.priced(y, (m * n * k) as u64)
     }
 
+    /// [`GemmEngine::gemm_tn_seeded`] with a block-sparsity mask — the
+    /// wgrad **output skip**.  The `[m, n]` output has the weight
+    /// matrix's own shape, so the mask applies to it directly: a
+    /// masked cell's whole contraction is skipped and the cell keeps
+    /// its seed bits (or `+0`).  The gradient of a pinned weight is
+    /// discarded by the masked SGD update anyway, so skipping it here
+    /// drops `masked × k` MACs per wgrad — the projection semantics
+    /// the sparsity property tests pin (`dense grad, then re-zero
+    /// masked blocks`).  Works in every execution mode (the operands
+    /// are the f32 δ/X buffers, not the resident panel).  Priced at
+    /// `live × k` MACs.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemm_tn_seeded_masked(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        seed: Option<&[f32]>,
+        mask: &BlockMask,
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> GemmResult {
+        assert_eq!(a.len(), k * m, "tn A shape");
+        assert_eq!(b.len(), k * n, "tn B shape");
+        assert_eq!((mask.rows, mask.cols), (m, n), "tn mask shape");
+        if let Some(s) = seed {
+            assert_eq!(s.len(), m * n, "tn seed shape");
+        }
+        if m * n == 0 {
+            return GemmResult {
+                y: Vec::new(),
+                macs: 0,
+                waves: 0,
+                latency_s: 0.0,
+                energy_j: 0.0,
+            };
+        }
+        if mask.fully_masked() {
+            // Empty-wave guard: the whole gradient is pinned — the
+            // output is the seed (or +0) verbatim.  No dispatch, no
+            // ABFT epoch, zero ledger.
+            let mut y = self.arena.take(m * n);
+            match seed {
+                Some(s) => y.copy_from_slice(s),
+                None => y.fill(0.0),
+            }
+            return GemmResult {
+                y,
+                macs: 0,
+                waves: 0,
+                latency_s: 0.0,
+                energy_j: 0.0,
+            };
+        }
+        let mut y = self.arena.take(m * n);
+        let tasks = self.threads.min(m.max(n)).max(1);
+        let yp = SendPtr(y.as_mut_ptr());
+        self.dispatch_tasks(tasks, |t| {
+            let (r0, r1, j0, j1) = task_rect(m, n, t, tasks);
+            tn_rect_masked(a, b, seed, mask, k, m, n, r0, r1, j0, j1, &yp);
+        });
+        // Output-skip retry chain: masked cells re-assert the seed,
+        // live cells recompute the dense ascending-k chain.
+        let checksum_elems = if self.faults.is_some() {
+            mask.live_elems() as u64
+        } else {
+            0
+        };
+        self.abft_guard(&mut y, m, n, k, checksum_elems, &|r, row| {
+            let gr = r / mask.block_rows;
+            for (j, slot) in row.iter_mut().enumerate() {
+                let seeded = seed.map(|s| s[r * n + j].to_bits()).unwrap_or(0);
+                if mask.is_masked(gr, j / KC) {
+                    *slot = f32::from_bits(seeded);
+                    continue;
+                }
+                let mut acc = seeded;
+                for kk in 0..k {
+                    acc = pim_mac_acc_dec(
+                        acc,
+                        pim_decode(a[kk * m + r].to_bits()),
+                        b[kk * n + j].to_bits(),
+                    );
+                }
+                *slot = f32::from_bits(acc);
+            }
+        });
+        self.priced(y, (mask.live_elems() * k) as u64)
+    }
+
     /// `Layer::Conv2d` through the engine: im2col lowering, one batched
     /// GEMM over all `batch × oh × ow` output pixels, result re-laid-out
     /// as the conventional `[batch, out_ch, oh, ow]`.  The patch matrix
@@ -885,7 +1210,7 @@ impl GemmEngine {
         x_batch: &[f32],
         batch: usize,
     ) -> GemmResult {
-        self.conv2d_inner(layer, WeightRef::F32(w), bias, x_batch, batch)
+        self.conv2d_inner(layer, WeightRef::F32(w), None, bias, x_batch, batch)
     }
 
     /// [`GemmEngine::conv2d`] against a resident decoded weight panel
@@ -899,13 +1224,29 @@ impl GemmEngine {
         x_batch: &[f32],
         batch: usize,
     ) -> GemmResult {
-        self.conv2d_inner(layer, WeightRef::Dec(wdec), bias, x_batch, batch)
+        self.conv2d_inner(layer, WeightRef::Dec(wdec), None, bias, x_batch, batch)
+    }
+
+    /// [`GemmEngine::conv2d_dec`] with a block-sparsity mask over the
+    /// flattened `[out_ch, in_ch·kh·kw]` weight panel — masked blocks
+    /// are skipped at the wave level by the masked NT kernel.
+    pub fn conv2d_dec_masked(
+        &self,
+        layer: &Layer,
+        wdec: &[u64],
+        mask: &BlockMask,
+        bias: Option<&[f32]>,
+        x_batch: &[f32],
+        batch: usize,
+    ) -> GemmResult {
+        self.conv2d_inner(layer, WeightRef::Dec(wdec), Some(mask), bias, x_batch, batch)
     }
 
     fn conv2d_inner(
         &self,
         layer: &Layer,
         w: WeightRef<'_>,
+        mask: Option<&BlockMask>,
         bias: Option<&[f32]>,
         x_batch: &[f32],
         batch: usize,
@@ -946,9 +1287,14 @@ impl GemmEngine {
             );
         }
 
-        let r = match w {
-            WeightRef::F32(w) => self.gemm(w, &patches, bias, out_ch, k, batch * ohw),
-            WeightRef::Dec(d) => self.gemm_nt_dec(&patches, d, bias, batch * ohw, k, out_ch),
+        let r = match (w, mask) {
+            (WeightRef::F32(w), _) => self.gemm(w, &patches, bias, out_ch, k, batch * ohw),
+            (WeightRef::Dec(d), None) => {
+                self.gemm_nt_dec(&patches, d, bias, batch * ohw, k, out_ch)
+            }
+            (WeightRef::Dec(d), Some(ms)) => {
+                self.gemm_nt_dec_masked(&patches, d, ms, bias, batch * ohw, k, out_ch)
+            }
         };
         self.arena.give(patches);
 
@@ -995,9 +1341,17 @@ impl GemmEngine {
                 // Resident panel when present (pooled engines only —
                 // the frozen floors keep their per-MAC-decode path).
                 let r = match self.resident_panel(lp) {
-                    Some(panel) => {
-                        self.conv2d_dec(layer, panel, Some(&lp.b), act.as_slice(), batch)
-                    }
+                    Some(panel) => match lp.mask.as_ref() {
+                        Some(mask) => self.conv2d_dec_masked(
+                            layer,
+                            panel,
+                            mask,
+                            Some(&lp.b),
+                            act.as_slice(),
+                            batch,
+                        ),
+                        None => self.conv2d_dec(layer, panel, Some(&lp.b), act.as_slice(), batch),
+                    },
                     None => self.conv2d(layer, &lp.w, Some(&lp.b), act.as_slice(), batch),
                 };
                 if let ActIn::Owned(v) = act {
@@ -1008,9 +1362,20 @@ impl GemmEngine {
             Layer::Dense { inp, out } => {
                 let lp = p.expect("dense layer params");
                 let r = match self.resident_panel(lp) {
-                    Some(panel) => {
-                        self.gemm_nt_dec(act.as_slice(), panel, Some(&lp.b), batch, inp, out)
-                    }
+                    Some(panel) => match lp.mask.as_ref() {
+                        Some(mask) => self.gemm_nt_dec_masked(
+                            act.as_slice(),
+                            panel,
+                            mask,
+                            Some(&lp.b),
+                            batch,
+                            inp,
+                            out,
+                        ),
+                        None => {
+                            self.gemm_nt_dec(act.as_slice(), panel, Some(&lp.b), batch, inp, out)
+                        }
+                    },
                     None => self.gemm(&lp.w, act.as_slice(), Some(&lp.b), out, inp, batch),
                 };
                 if let ActIn::Owned(v) = act {
@@ -1133,7 +1498,7 @@ pub fn pim_gemm(
 /// in `nt`/`nn`) stays cache-resident across the task's sweep.  Partial
 /// accumulators park in the output buffer between panels as exact f32
 /// bits, so panelling never perturbs the accumulation chain.
-const KC: usize = 256;
+pub(crate) const KC: usize = 256;
 
 /// Register-tile width of the `nt` micro-kernel: output columns
 /// accumulated simultaneously per x-element load.
@@ -1365,6 +1730,203 @@ fn tn_rect(
     }
 }
 
+/// [`nt_rect`] with a block-sparsity mask.  A masked `(column-block,
+/// K-panel)` cell is a run of `acc ⊕ (+0)·x` FTZ MACs; the fold rule
+/// (`fold_zero_run`, pre-validated bit-for-bit in
+/// `python/tests/validate_block_skip.py`) collapses the whole run in
+/// O(1) when every activation in the panel is finite, and falls back
+/// to the dense chain over the (all-`+0`) weights when a NaN/Inf
+/// activation would poison the accumulator.  The `NR` register tile is
+/// dropped: columns walk individually so each can consult the mask.
+#[allow(clippy::too_many_arguments)]
+fn nt_rect_masked(
+    a: &[f32],
+    bdec: &[u64],
+    mask: &BlockMask,
+    k: usize,
+    n: usize,
+    bias: Option<&[f32]>,
+    r0: usize,
+    r1: usize,
+    j0: usize,
+    j1: usize,
+    yp: &SendPtr<f32>,
+) {
+    let jw = j1 - j0;
+    if jw == 0 || r1 <= r0 {
+        return;
+    }
+    for r in r0..r1 {
+        let yrow = unsafe { rect_row(yp, n, r, j0, j1) };
+        match bias {
+            Some(bb) => yrow.copy_from_slice(&bb[j0..j1]),
+            None => yrow.fill(0.0),
+        }
+    }
+    let mut kp = 0;
+    while kp < k {
+        let kend = (kp + KC).min(k);
+        let gc = kp / KC;
+        for r in r0..r1 {
+            let xrow = &a[r * k + kp..r * k + kend];
+            let yrow = unsafe { rect_row(yp, n, r, j0, j1) };
+            // Per-(row, panel) skip flags, computed lazily on the
+            // first masked column and reused across the rectangle —
+            // stack-local, zero-alloc.
+            let mut flags: Option<(bool, bool)> = None;
+            for (j, slot) in yrow.iter_mut().enumerate() {
+                let col = j0 + j;
+                let acc = slot.to_bits();
+                if mask.masked_at(col, gc) {
+                    let (all_finite, any_pos) =
+                        *flags.get_or_insert_with(|| skip_flags(xrow));
+                    if let Some(v) = fold_zero_run(acc, all_finite, any_pos) {
+                        *slot = f32::from_bits(v);
+                        continue;
+                    }
+                    // Non-finite activation: dense fallback over the
+                    // all-+0 panel entries keeps the chain bit-exact.
+                }
+                let mut acc = acc;
+                let brow = &bdec[col * k + kp..col * k + kend];
+                for (&w, &xv) in brow.iter().zip(xrow) {
+                    acc = pim_mac_acc_dec(acc, w, xv.to_bits());
+                }
+                *slot = f32::from_bits(acc);
+            }
+        }
+        kp = kend;
+    }
+}
+
+/// [`nn_rect`] with a block-sparsity mask, read **transposed**: the
+/// dgrad weight operand is `[k, n]` where the mask's `rows` dimension
+/// runs along `k` in `block_rows`-tall runs and its `cols` dimension
+/// along `j` in `KC`-wide segments.  A masked `(run, segment)` is a
+/// fold per output element over the run's δ-activations; a non-finite
+/// δ in the run forces the dense axpy over the zeroed weights.
+#[allow(clippy::too_many_arguments)]
+fn nn_rect_masked(
+    a: &[f32],
+    bdec: &[u64],
+    mask: &BlockMask,
+    k: usize,
+    n: usize,
+    r0: usize,
+    r1: usize,
+    j0: usize,
+    j1: usize,
+    yp: &SendPtr<f32>,
+) {
+    let jw = j1 - j0;
+    if jw == 0 || r1 <= r0 {
+        return;
+    }
+    for r in r0..r1 {
+        unsafe { rect_row(yp, n, r, j0, j1) }.fill(0.0);
+    }
+    let br = mask.block_rows;
+    for r in r0..r1 {
+        let arow = &a[r * k..(r + 1) * k];
+        let yrow = unsafe { rect_row(yp, n, r, j0, j1) };
+        let mut ka = 0;
+        while ka < k {
+            let gr = ka / br;
+            let kb = ((gr + 1) * br).min(k);
+            let mut flags: Option<(bool, bool)> = None;
+            let mut j = j0;
+            while j < j1 {
+                let gc = j / KC;
+                let jend = ((gc + 1) * KC).min(j1);
+                let masked = mask.is_masked(gr, gc);
+                let mut folded = false;
+                if masked {
+                    let (all_finite, any_pos) =
+                        *flags.get_or_insert_with(|| skip_flags(&arow[ka..kb]));
+                    if all_finite {
+                        for slot in &mut yrow[j - j0..jend - j0] {
+                            // all_finite=true ⇒ fold never fails.
+                            let v = fold_zero_run(slot.to_bits(), true, any_pos)
+                                .expect("finite fold");
+                            *slot = f32::from_bits(v);
+                        }
+                        folded = true;
+                    }
+                }
+                if !folded {
+                    for kk in ka..kb {
+                        let av = arow[kk].to_bits();
+                        let brow = &bdec[kk * n + j..kk * n + jend];
+                        for (slot, &w) in yrow[j - j0..jend - j0].iter_mut().zip(brow) {
+                            *slot = f32::from_bits(pim_mac_acc_dec(slot.to_bits(), w, av));
+                        }
+                    }
+                }
+                j = jend;
+            }
+            ka = kb;
+        }
+    }
+}
+
+/// [`tn_rect`] with the wgrad **output skip**: the `[m, n]` output is
+/// the weight matrix itself, so a masked cell's whole contraction is
+/// elided and the cell keeps its seed bits (+0 without a seed).  The
+/// δ decode is hoisted lazily per `(kk, r)` — a fully-masked row pays
+/// no decode at all.
+#[allow(clippy::too_many_arguments)]
+fn tn_rect_masked(
+    a: &[f32],
+    b: &[f32],
+    seed: Option<&[f32]>,
+    mask: &BlockMask,
+    k: usize,
+    m: usize,
+    n: usize,
+    r0: usize,
+    r1: usize,
+    j0: usize,
+    j1: usize,
+    yp: &SendPtr<f32>,
+) {
+    let jw = j1 - j0;
+    if jw == 0 || r1 <= r0 {
+        return;
+    }
+    for r in r0..r1 {
+        let yrow = unsafe { rect_row(yp, n, r, j0, j1) };
+        match seed {
+            Some(s) => yrow.copy_from_slice(&s[r * n + j0..r * n + j1]),
+            None => yrow.fill(0.0),
+        }
+    }
+    let br = mask.block_rows;
+    for kk in 0..k {
+        let arow = &a[kk * m..(kk + 1) * m];
+        let brow_all = &b[kk * n..(kk + 1) * n];
+        for r in r0..r1 {
+            let gr = r / br;
+            let yrow = unsafe { rect_row(yp, n, r, j0, j1) };
+            let mut ad: Option<u64> = None;
+            let mut j = j0;
+            while j < j1 {
+                let gc = j / KC;
+                let jend = ((gc + 1) * KC).min(j1);
+                if !mask.is_masked(gr, gc) {
+                    let adv = *ad.get_or_insert_with(|| pim_decode(arow[r].to_bits()));
+                    for (slot, &xv) in yrow[j - j0..jend - j0]
+                        .iter_mut()
+                        .zip(&brow_all[j..jend])
+                    {
+                        *slot = f32::from_bits(pim_mac_acc_dec(slot.to_bits(), adv, xv.to_bits()));
+                    }
+                }
+                j = jend;
+            }
+        }
+    }
+}
+
 /// im2col for one `[in_ch, h, w]` sample (valid padding, stride 1):
 /// one row per output pixel, columns ordered `(channel, ky, kx)` to
 /// match the `[out_ch, in_ch, kh, kw]` weight flattening.
@@ -1456,6 +2018,10 @@ pub struct LayerParams {
     pub b: Vec<f32>,
     /// Resident `pim_decode` panel of `w`; empty = not resident.
     pub wdec: Vec<u64>,
+    /// Block-sparsity mask (PR 10): pruned blocks are pinned at `+0.0`
+    /// and skipped at the wave level by the masked kernels.  `None` =
+    /// dense layer.
+    pub mask: Option<BlockMask>,
 }
 
 impl LayerParams {
@@ -1467,6 +2033,7 @@ impl LayerParams {
                 .collect(),
             b: vec![0.0; out],
             wdec: Vec::new(),
+            mask: None,
         }
     }
 

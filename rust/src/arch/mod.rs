@@ -11,6 +11,7 @@ pub mod mapper;
 pub mod pool;
 pub mod schedule;
 pub mod scratch;
+pub mod sparsity;
 pub mod tile;
 pub mod train;
 
@@ -24,6 +25,7 @@ pub use scratch::Arena;
 pub use gemv::{pim_gemv, GemvResult};
 pub use mapper::{MappingPlan, OURS_LANE_COLS, FLOATPIM_LANE_COLS};
 pub use schedule::PipelineSchedule;
+pub use sparsity::{BlockMask, Occupancy, SparsityConfig};
 pub use tile::Tile;
 pub use train::{
     softmax_xent, softmax_xent_terms, SampleGrad, TrainEngine, TrainStepResult, TrainTotals,

@@ -1,0 +1,575 @@
+//! Block-structured weight sparsity over the resident decoded panels.
+//!
+//! A [`BlockMask`] tiles a `[out, k]` weight matrix into blocks of
+//! `block_rows` output rows × [`KC`](super::gemm) contraction columns —
+//! the same geometry the PR 5 blocked kernels sweep, so a masked block
+//! is exactly the unit of work a wave-level skip can drop.  Masks are
+//! built by magnitude pruning ([`BlockMask::prune`]), the pruned
+//! weights are pinned at `+0.0` (and their panel entries at the decoded
+//! `+0`), and the masked NT/NN/TN kernels in `arch/gemm.rs` skip the
+//! pruned blocks entirely — priced as zero MACs and zero waves.
+//!
+//! ## Why the skip is exact (and when it is not)
+//!
+//! A skipped block replaces a run of `acc ⊕ (+0.0)·x` PIM MACs with a
+//! closed form.  That run is *not* an unconditional identity:
+//!
+//! * a **normal or ±Inf** accumulator is unchanged (the PR 4 shortcut's
+//!   proven identity);
+//! * a **NaN** accumulator collapses to the canonical QNAN on the first
+//!   add;
+//! * a **zero-class** accumulator (±0 or subnormal — FTZ zero class)
+//!   follows the signed-zero rule `(sa & sb)`: it stays `-0` only if it
+//!   was negative and *every* product in the run is `-0` (every
+//!   activation's sign bit set), otherwise it flushes to `+0`;
+//! * an **Inf/NaN activation** makes the product QNAN (`0 × Inf`), so
+//!   the block cannot be skipped at all — the kernels fall back to the
+//!   dense MAC loop over the (all-`+0`) panel entries for that run.
+//!
+//! [`skip_flags`] gathers the per-run facts (`all_finite`, `any_pos`)
+//! and [`fold_zero_run`] applies the algebra; both are mirrored
+//! loop-for-loop and fuzzed bit-exactly against the softfloat reference
+//! in `python/tests/validate_block_skip.py`.
+
+use crate::model::{Layer, Network, TrainingWork};
+
+use super::gemm::{LayerParams, NetworkParams, KC};
+
+/// Parsed `--sparsity block=K,ratio=R` directive: block height in
+/// output rows (the width is always one [`KC`] K-panel) and the
+/// fraction of blocks to prune per layer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SparsityConfig {
+    /// Output rows per block (NR-aligned by default: 4).
+    pub block_rows: usize,
+    /// Fraction of blocks pruned per weight matrix, in `[0, 1]`.
+    pub ratio: f64,
+}
+
+impl Default for SparsityConfig {
+    fn default() -> Self {
+        SparsityConfig {
+            block_rows: 4,
+            ratio: 0.75,
+        }
+    }
+}
+
+impl SparsityConfig {
+    /// Parse `block=K,ratio=R` (either key optional, defaults
+    /// `block=4,ratio=0.75`).
+    pub fn parse(spec: &str) -> Result<SparsityConfig, String> {
+        let mut cfg = SparsityConfig::default();
+        for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| format!("sparsity: expected key=value, got `{part}`"))?;
+            match key.trim() {
+                "block" => {
+                    let b: usize = val
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("sparsity: bad block `{val}`"))?;
+                    if b == 0 {
+                        return Err("sparsity: block must be >= 1".into());
+                    }
+                    cfg.block_rows = b;
+                }
+                "ratio" => {
+                    let r: f64 = val
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("sparsity: bad ratio `{val}`"))?;
+                    if !(0.0..=1.0).contains(&r) {
+                        return Err(format!("sparsity: ratio {r} outside [0, 1]"));
+                    }
+                    cfg.ratio = r;
+                }
+                other => return Err(format!("sparsity: unknown key `{other}`")),
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Prune every MAC-bearing layer of `params` in place: build (or
+    /// keep) its magnitude [`BlockMask`], zero the masked weights, and
+    /// invalidate the resident panel when any stored bit changed (the
+    /// next `ensure_resident` rebuilds it from the pruned mirror).
+    /// Idempotent in the steady state: once pruned and pinned, no bits
+    /// change and the panel survives untouched.
+    pub fn ensure(&self, params: &mut NetworkParams) {
+        for lp in params.layers.iter_mut().flatten() {
+            let rows = lp.b.len();
+            if rows == 0 || lp.w.is_empty() {
+                continue;
+            }
+            let cols = lp.w.len() / rows;
+            let rebuild = match &lp.mask {
+                Some(m) => m.block_rows != self.block_rows,
+                None => true,
+            };
+            if rebuild {
+                lp.mask = Some(BlockMask::prune(
+                    &lp.w,
+                    rows,
+                    cols,
+                    self.block_rows,
+                    self.ratio,
+                ));
+            }
+            let mask = lp.mask.as_ref().expect("mask just ensured");
+            if mask.zero_masked(&mut lp.w) {
+                // Stored bits changed: the resident panel (if any) is
+                // stale; clear it so the next build re-decodes the
+                // pruned weights.
+                lp.wdec.clear();
+            }
+        }
+    }
+}
+
+/// Pruning mask over one `[rows, cols]` weight matrix in blocks of
+/// `block_rows × KC`.  `masked[gr * grid_c + gc]` marks block
+/// `(gr, gc)` pruned; edge blocks are partial and accounted exactly in
+/// `masked_elems`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockMask {
+    /// Output rows per block.
+    pub block_rows: usize,
+    /// Weight matrix shape this mask was built for.
+    pub rows: usize,
+    pub cols: usize,
+    /// Block grid shape: `rows.div_ceil(block_rows) × cols.div_ceil(KC)`.
+    pub grid_r: usize,
+    pub grid_c: usize,
+    masked: Vec<bool>,
+    /// Exact count of pruned weight *elements* (partial edge blocks
+    /// contribute their true size).
+    masked_elems: usize,
+}
+
+impl BlockMask {
+    /// Magnitude pruning: score each block by the sum of `|w|` over its
+    /// elements (f64 accumulation), mask the `floor(nblocks · ratio)`
+    /// lowest-scoring blocks (ties broken by ascending block index —
+    /// fully deterministic).
+    pub fn prune(w: &[f32], rows: usize, cols: usize, block_rows: usize, ratio: f64) -> BlockMask {
+        assert_eq!(w.len(), rows * cols, "mask/weight shape");
+        let br = block_rows.max(1);
+        let grid_r = rows.div_ceil(br);
+        let grid_c = cols.div_ceil(KC);
+        let nb = grid_r * grid_c;
+        let mut score: Vec<(f64, usize)> = Vec::with_capacity(nb);
+        for i in 0..nb {
+            let (gr, gc) = (i / grid_c, i % grid_c);
+            let mut s = 0f64;
+            for r in gr * br..((gr + 1) * br).min(rows) {
+                for c in gc * KC..((gc + 1) * KC).min(cols) {
+                    s += w[r * cols + c].abs() as f64;
+                }
+            }
+            score.push((s, i));
+        }
+        score.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let target = ((nb as f64) * ratio.clamp(0.0, 1.0)).floor() as usize;
+        let mut masked = vec![false; nb];
+        for &(_, i) in score.iter().take(target.min(nb)) {
+            masked[i] = true;
+        }
+        let mut mask = BlockMask {
+            block_rows: br,
+            rows,
+            cols,
+            grid_r,
+            grid_c,
+            masked,
+            masked_elems: 0,
+        };
+        mask.masked_elems = (0..nb)
+            .filter(|&i| mask.masked[i])
+            .map(|i| mask.block_elems(i / grid_c, i % grid_c))
+            .sum();
+        mask
+    }
+
+    /// Build an explicit mask from a masked-block list (tests and the
+    /// fault-injection grids).
+    pub fn from_blocks(
+        rows: usize,
+        cols: usize,
+        block_rows: usize,
+        blocks: &[(usize, usize)],
+    ) -> BlockMask {
+        let br = block_rows.max(1);
+        let grid_r = rows.div_ceil(br);
+        let grid_c = cols.div_ceil(KC);
+        let mut masked = vec![false; grid_r * grid_c];
+        for &(gr, gc) in blocks {
+            assert!(gr < grid_r && gc < grid_c, "block ({gr},{gc}) out of grid");
+            masked[gr * grid_c + gc] = true;
+        }
+        let mut mask = BlockMask {
+            block_rows: br,
+            rows,
+            cols,
+            grid_r,
+            grid_c,
+            masked,
+            masked_elems: 0,
+        };
+        mask.masked_elems = (0..mask.masked.len())
+            .filter(|&i| mask.masked[i])
+            .map(|i| mask.block_elems(i / grid_c, i % grid_c))
+            .sum();
+        mask
+    }
+
+    /// Element count of block `(gr, gc)` (edge blocks are partial).
+    #[inline]
+    pub fn block_elems(&self, gr: usize, gc: usize) -> usize {
+        let h = ((gr + 1) * self.block_rows).min(self.rows) - gr * self.block_rows;
+        let w = ((gc + 1) * KC).min(self.cols) - gc * KC;
+        h * w
+    }
+
+    /// Whether grid block `(gr, gc)` is pruned.
+    #[inline(always)]
+    pub fn is_masked(&self, gr: usize, gc: usize) -> bool {
+        self.masked[gr * self.grid_c + gc]
+    }
+
+    /// Whether the block containing weight row `out_idx`, K-panel
+    /// `kpanel` is pruned — the per-column query the kernels use
+    /// (rectangle splits are not block-aligned).
+    #[inline(always)]
+    pub fn masked_at(&self, out_idx: usize, kpanel: usize) -> bool {
+        self.masked[(out_idx / self.block_rows) * self.grid_c + kpanel]
+    }
+
+    /// Count of pruned blocks.
+    pub fn masked_blocks(&self) -> usize {
+        self.masked.iter().filter(|&&m| m).count()
+    }
+
+    /// Exact count of pruned weight elements.
+    #[inline]
+    pub fn masked_elems(&self) -> usize {
+        self.masked_elems
+    }
+
+    /// Exact count of live (unpruned) weight elements.
+    #[inline]
+    pub fn live_elems(&self) -> usize {
+        self.rows * self.cols - self.masked_elems
+    }
+
+    /// Whether every block is pruned (the empty-wave layer).
+    #[inline]
+    pub fn fully_masked(&self) -> bool {
+        self.masked_elems == self.rows * self.cols
+    }
+
+    /// Count of weight rows with at least one live block — the ABFT
+    /// checksum extent of the masked NT output columns.
+    pub fn live_rows(&self) -> usize {
+        (0..self.rows)
+            .filter(|&r| (0..self.grid_c).any(|gc| !self.is_masked(r / self.block_rows, gc)))
+            .count()
+    }
+
+    /// Count of weight columns with at least one live block — the ABFT
+    /// checksum extent of the masked NN output columns.
+    pub fn live_cols(&self) -> usize {
+        (0..self.cols)
+            .filter(|&c| (0..self.grid_r).any(|gr| !self.is_masked(gr, c / KC)))
+            .count()
+    }
+
+    /// Force every masked element of a `[rows, cols]` buffer to `+0.0`
+    /// (weights at prune time, floor-mode wgrads as the projection).
+    /// Returns whether any stored bit changed.
+    pub fn zero_masked(&self, w: &mut [f32]) -> bool {
+        assert_eq!(w.len(), self.rows * self.cols, "mask/buffer shape");
+        let mut changed = false;
+        for (i, &m) in self.masked.iter().enumerate() {
+            if !m {
+                continue;
+            }
+            let (gr, gc) = (i / self.grid_c, i % self.grid_c);
+            for r in gr * self.block_rows..((gr + 1) * self.block_rows).min(self.rows) {
+                let row = &mut w[r * self.cols..(r + 1) * self.cols];
+                for v in &mut row[gc * KC..((gc + 1) * KC).min(self.cols)] {
+                    if v.to_bits() != 0 {
+                        *v = 0.0;
+                        changed = true;
+                    }
+                }
+            }
+        }
+        changed
+    }
+}
+
+/// Gather the skip facts over a run of activation values: whether every
+/// value is finite (an Inf/NaN activation forbids the skip — its `+0`
+/// product is QNAN) and whether any value has a clear sign bit (any
+/// `+0` product flushes a negative zero-class accumulator to `+0`).
+#[inline]
+pub(crate) fn skip_flags(xs: &[f32]) -> (bool, bool) {
+    const EXP: u32 = 0x7F80_0000;
+    let mut all_finite = true;
+    let mut any_pos = false;
+    for &x in xs {
+        let b = x.to_bits();
+        if b & EXP == EXP {
+            all_finite = false;
+        }
+        if b >> 31 == 0 {
+            any_pos = true;
+        }
+    }
+    (all_finite, any_pos)
+}
+
+/// Closed form of `acc` after a run (length ≥ 1) of `acc ⊕ (+0)·x`
+/// MACs whose activations produced `(all_finite, any_pos)` flags.
+/// `None` means the run contains an Inf/NaN activation and must run
+/// through the dense MAC loop instead (the panel's `+0` entries make
+/// that loop produce the exact dense bits).
+#[inline]
+pub(crate) fn fold_zero_run(acc: u32, all_finite: bool, any_pos: bool) -> Option<u32> {
+    const EXP: u32 = 0x7F80_0000;
+    const QNAN: u32 = 0x7FC0_0000;
+    if !all_finite {
+        return None;
+    }
+    if acc & EXP == EXP {
+        if acc & 0x007F_FFFF != 0 {
+            return Some(QNAN); // NaN acc: first add collapses to QNAN
+        }
+        return Some(acc); // ±Inf acc: identity
+    }
+    if acc & EXP != 0 {
+        return Some(acc); // normal acc: the proven PR 4 identity
+    }
+    // Zero-class acc: the signed-zero (sa & sb) chain.
+    Some(if acc >> 31 == 1 && !any_pos {
+        0x8000_0000
+    } else {
+        0
+    })
+}
+
+/// Per-layer live-weight occupancy of a parameterised network: the
+/// bridge between the counted ledger (which prices only live blocks)
+/// and the analytic cost model.  `dense()` is the all-live occupancy —
+/// every pre-sparsity call site goes through it unchanged.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Occupancy {
+    /// Live weight elements per layer (aligned with `net.layers`;
+    /// zero for parameter-free layers).
+    pub live_w: Vec<u64>,
+    /// Dense weight elements per layer.
+    pub dense_w: Vec<u64>,
+    /// Live parameters (live weights + all biases) — the SGD update
+    /// MAC count.
+    pub live_params: u64,
+    /// Dense parameter count.
+    pub dense_params: u64,
+}
+
+impl Occupancy {
+    /// All-live occupancy of a network (no masks).
+    pub fn dense(net: &Network) -> Occupancy {
+        let dense_w: Vec<u64> = net.layers.iter().map(|l| l.weight_elems() as u64).collect();
+        let live_w = dense_w.clone();
+        let dense_params = net.param_count() as u64;
+        Occupancy {
+            live_w,
+            dense_w,
+            live_params: dense_params,
+            dense_params,
+        }
+    }
+
+    /// Occupancy of `params` over `net`: per-layer live counts from the
+    /// masks actually present (a maskless layer is fully live).
+    pub fn of(net: &Network, params: &NetworkParams) -> Occupancy {
+        assert_eq!(params.layers.len(), net.layers.len(), "params/net mismatch");
+        let mut occ = Occupancy::dense(net);
+        for (i, lp) in params.layers.iter().enumerate() {
+            let Some(LayerParams {
+                mask: Some(mask), ..
+            }) = lp
+            else {
+                continue;
+            };
+            debug_assert_eq!(
+                mask.rows * mask.cols,
+                occ.dense_w[i] as usize,
+                "mask shape vs layer"
+            );
+            let masked = mask.masked_elems() as u64;
+            occ.live_w[i] = occ.dense_w[i] - masked;
+            occ.live_params -= masked;
+        }
+        occ
+    }
+
+    /// Fraction of weight elements live across the whole network
+    /// (`1.0` when dense or weightless).
+    pub fn live_fraction(&self) -> f64 {
+        let dense: u64 = self.dense_w.iter().sum();
+        if dense == 0 {
+            return 1.0;
+        }
+        let live: u64 = self.live_w.iter().sum();
+        live as f64 / dense as f64
+    }
+
+    /// Occupancy-aware training work: the live-block counterpart of
+    /// [`Network::training_work`].  Forward MACs scale per layer by its
+    /// live fraction (exactly — `macs_fwd` is an integer multiple of
+    /// the weight element count), backward keeps the 2× structure
+    /// (dgrad block-skips, wgrad output-skips — both live-sized), and
+    /// the update touches only live parameters.  Adds and stashed
+    /// activations are unchanged: bias seeding and activation stores
+    /// happen for masked outputs too.
+    pub fn training_work(&self, net: &Network, batch: usize) -> TrainingWork {
+        assert_eq!(self.live_w.len(), net.layers.len(), "occupancy/net mismatch");
+        let dense = net.training_work(batch);
+        let b = batch as u64;
+        let mut macs_fwd = 0u64;
+        for (i, layer) in net.layers.iter().enumerate() {
+            let dense_fwd = layer.macs_fwd() as u64;
+            let we = self.dense_w[i];
+            let fwd = if we == 0 {
+                dense_fwd
+            } else {
+                dense_fwd / we * self.live_w[i]
+            };
+            macs_fwd += fwd * b;
+        }
+        TrainingWork {
+            macs_fwd,
+            macs_bwd: 2 * macs_fwd,
+            macs_wu: self.live_params,
+            adds: dense.adds,
+            stored_activations: dense.stored_activations,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Network;
+
+    #[test]
+    fn prune_masks_lowest_magnitude_blocks_deterministically() {
+        // 8 rows x 512 cols, block 4x256 -> 2x2 grid; make block (0,0)
+        // clearly smallest, then (1,1).
+        let rows = 8;
+        let cols = 512;
+        let mut w = vec![1.0f32; rows * cols];
+        for r in 0..4 {
+            for c in 0..256 {
+                w[r * cols + c] = 0.001;
+            }
+        }
+        for r in 4..8 {
+            for c in 256..512 {
+                w[r * cols + c] = 0.01;
+            }
+        }
+        let m = BlockMask::prune(&w, rows, cols, 4, 0.5);
+        assert!(m.is_masked(0, 0) && m.is_masked(1, 1));
+        assert!(!m.is_masked(0, 1) && !m.is_masked(1, 0));
+        assert_eq!(m.masked_elems(), 2 * 4 * 256);
+        assert_eq!(m.live_elems(), rows * cols - 2 * 4 * 256);
+
+        // ratio 0 masks nothing; ratio 1 masks everything.
+        assert_eq!(BlockMask::prune(&w, rows, cols, 4, 0.0).masked_elems(), 0);
+        let full = BlockMask::prune(&w, rows, cols, 4, 1.0);
+        assert!(full.fully_masked());
+        assert_eq!(full.live_elems(), 0);
+    }
+
+    #[test]
+    fn partial_edge_blocks_are_counted_exactly() {
+        // 10 rows x 300 cols, block 4x256: grid 3x2 with ragged edges.
+        let rows = 10;
+        let cols = 300;
+        let w = vec![1.0f32; rows * cols];
+        let m = BlockMask::from_blocks(rows, cols, 4, &[(2, 1)]);
+        // block (2,1): rows 8..10 (2 rows) x cols 256..300 (44 cols).
+        assert_eq!(m.masked_elems(), 2 * 44);
+        assert!(m.masked_at(9, 1));
+        assert!(!m.masked_at(7, 1));
+        let mut buf = w;
+        assert!(m.zero_masked(&mut buf));
+        let zeroed = buf.iter().filter(|v| v.to_bits() == 0).count();
+        assert_eq!(zeroed, 2 * 44);
+        // second pass: already pinned, nothing changes.
+        assert!(!m.zero_masked(&mut buf));
+    }
+
+    #[test]
+    fn fold_zero_run_matches_softfloat_algebra() {
+        // normal acc: identity.
+        let acc = 1.5f32.to_bits();
+        assert_eq!(fold_zero_run(acc, true, true), Some(acc));
+        assert_eq!(fold_zero_run(acc, true, false), Some(acc));
+        // Inf acc: identity; NaN acc: canonical QNAN.
+        let inf = f32::INFINITY.to_bits();
+        assert_eq!(fold_zero_run(inf, true, false), Some(inf));
+        assert_eq!(fold_zero_run(0x7FAB_CDEF, true, true), Some(0x7FC0_0000));
+        // zero-class acc: -0 survives only all-negative runs.
+        assert_eq!(fold_zero_run(0x8000_0000, true, false), Some(0x8000_0000));
+        assert_eq!(fold_zero_run(0x8000_0000, true, true), Some(0));
+        assert_eq!(fold_zero_run(0, true, false), Some(0));
+        // subnormal acc flushes through the signed-zero rule.
+        assert_eq!(fold_zero_run(0x8000_0001, true, false), Some(0x8000_0000));
+        assert_eq!(fold_zero_run(0x0000_0001, true, false), Some(0));
+        // non-finite activation: no fold.
+        assert_eq!(fold_zero_run(acc, false, true), None);
+    }
+
+    #[test]
+    fn occupancy_scales_training_work_exactly() {
+        let net = Network::mlp_wide();
+        let mut params = NetworkParams::init(&net, 7);
+        let dense_occ = Occupancy::dense(&net);
+        assert_eq!(
+            dense_occ.training_work(&net, 32),
+            net.training_work(32),
+            "dense occupancy must reproduce the dense work"
+        );
+        SparsityConfig {
+            block_rows: 4,
+            ratio: 0.75,
+        }
+        .ensure(&mut params);
+        let occ = Occupancy::of(&net, &params);
+        assert!(occ.live_fraction() < 0.3, "0.75 pruning leaves <30% live");
+        let w = occ.training_work(&net, 32);
+        let d = net.training_work(32);
+        assert!(w.total_macs() * 2 < d.total_macs(), "waves drop >= 2x");
+        assert_eq!(w.adds, d.adds);
+        assert_eq!(w.stored_activations, d.stored_activations);
+        assert_eq!(w.macs_bwd, 2 * w.macs_fwd);
+    }
+
+    #[test]
+    fn parse_accepts_the_cli_grammar() {
+        let c = SparsityConfig::parse("block=8,ratio=0.5").unwrap();
+        assert_eq!(c.block_rows, 8);
+        assert_eq!(c.ratio, 0.5);
+        let d = SparsityConfig::parse("ratio=0.9").unwrap();
+        assert_eq!(d.block_rows, 4);
+        assert!(SparsityConfig::parse("block=0").is_err());
+        assert!(SparsityConfig::parse("ratio=1.5").is_err());
+        assert!(SparsityConfig::parse("nope=1").is_err());
+        assert!(SparsityConfig::parse("block").is_err());
+    }
+}

@@ -74,8 +74,9 @@
 
 use std::sync::{Arc, Mutex};
 
-use crate::arch::gemm::{im2col_into, ActIn, ExecMode, GemmEngine, LayerParams, NetworkParams};
+use crate::arch::gemm::{im2col_into, ActIn, ExecMode, GemmEngine, LayerParams, NetworkParams, KC};
 use crate::arch::scratch::TrainScratch;
+use crate::arch::sparsity::Occupancy;
 use crate::fpu::softfloat::{pim_add_f32, pim_encode, pim_mul_f32, pim_sgd_dec, pim_sub_f32};
 use crate::fpu::FpCostModel;
 use crate::model::{Layer, Network};
@@ -102,6 +103,11 @@ pub struct TrainStepResult {
     pub stored_activations: u64,
     /// Row-parallel MAC waves: `total_macs.div_ceil(lanes)`.
     pub waves: u64,
+    /// MACs the block-sparsity masks elided this step (dense
+    /// `training_work` minus the counted live work; zero on dense runs).
+    pub skipped_macs: u64,
+    /// Waves elided by the masks (dense wave count minus `waves`).
+    pub skipped_waves: u64,
     pub latency_s: f64,
     pub energy_j: f64,
     /// Per-layer gradients (`None` for parameter-free layers), in the
@@ -141,6 +147,10 @@ pub struct TrainTotals {
     pub adds_bwd: u64,
     pub stored_activations: u64,
     pub waves: u64,
+    /// MACs elided by the block-sparsity masks.
+    pub skipped_macs: u64,
+    /// Waves elided by the block-sparsity masks.
+    pub skipped_waves: u64,
     /// ABFT/recovery MAC waves (kept out of `waves` so the clean
     /// ledger still matches the analytic model under fault injection).
     pub fault_waves: u64,
@@ -158,6 +168,8 @@ impl TrainTotals {
         self.adds_bwd += r.adds_bwd;
         self.stored_activations += r.stored_activations;
         self.waves += r.waves;
+        self.skipped_macs += r.skipped_macs;
+        self.skipped_waves += r.skipped_waves;
         self.fault_waves += r.fault_waves;
         self.latency_s += r.latency_s;
         self.energy_j += r.energy_j;
@@ -171,11 +183,29 @@ impl TrainTotals {
     /// `training_work` model for `steps` train steps of `net` at
     /// `batch` on `lanes` lanes — the single definition of the
     /// "functional and analytic models never drift" invariant the CLI,
-    /// example and tests all check.
+    /// example and tests all check.  Dense form; a masked run checks
+    /// against its occupancy via [`TrainTotals::matches_analytic_occ`].
     pub fn matches_analytic(&self, net: &Network, batch: usize, lanes: u64) -> bool {
-        let work = net.training_work(batch);
+        self.matches_analytic_occ(net, batch, lanes, &Occupancy::dense(net))
+    }
+
+    /// Occupancy-aware analytic parity: counted MAC and wave totals
+    /// must equal the live-block `training_work` exactly, and the
+    /// skipped counters must account for precisely the dense − live
+    /// difference (nothing silently dropped, nothing double-counted).
+    pub fn matches_analytic_occ(
+        &self,
+        net: &Network,
+        batch: usize,
+        lanes: u64,
+        occ: &Occupancy,
+    ) -> bool {
+        let work = occ.training_work(net, batch);
+        let dense = net.training_work(batch);
         self.total_macs() == work.total_macs() * self.steps
             && self.waves == work.mac_waves(lanes) * self.steps
+            && self.skipped_macs == (dense.total_macs() - work.total_macs()) * self.steps
+            && self.skipped_waves == (dense.mac_waves(lanes) - work.mac_waves(lanes)) * self.steps
     }
 }
 
@@ -845,6 +875,15 @@ impl TrainEngine {
         //      does: the functional and analytic models never drift ----
         let total_macs = macs_fwd + macs_bwd + macs_wu;
         let waves = total_macs.div_ceil(self.gemm.lanes as u64);
+        // Skipped terms: what the dense model would have scheduled
+        // minus what the masks left live.  `training_work` is Copy and
+        // allocation-free, so the zero-alloc steady state holds; both
+        // terms are exactly zero on dense runs.
+        let dense_work = net.training_work(batch);
+        let skipped_macs = dense_work.total_macs().saturating_sub(total_macs);
+        let skipped_waves = dense_work
+            .mac_waves(self.gemm.lanes as u64)
+            .saturating_sub(waves);
         let mut latency_s = waves as f64 * self.gemm.model().t_mac();
         let e_mac = self.gemm.model().e_mac();
         let stash_writes = stored * 32;
@@ -874,6 +913,8 @@ impl TrainEngine {
             adds_bwd,
             stored_activations: stored,
             waves,
+            skipped_macs,
+            skipped_waves,
             latency_s,
             energy_j,
             grads,
@@ -981,20 +1022,56 @@ impl TrainEngine {
             let (Some(p), Some(g)) = (p.as_mut(), g.as_ref()) else {
                 continue;
             };
-            if p.wdec.len() == p.w.len() && !p.w.is_empty() {
+            let resident = p.wdec.len() == p.w.len() && !p.w.is_empty();
+            if let Some(mask) = p.mask.take() {
+                // Block-sparse layer: pruned blocks are pinned at +0.0
+                // — their update MACs are never scheduled (the masked
+                // wgrad left their gradients at +0 anyway), so the mask
+                // survives training and the update prices live
+                // parameters only.  The mask is moved out and restored
+                // to keep the borrow checker out of the hot loop.
+                for gr in 0..mask.grid_r {
+                    let rend = ((gr + 1) * mask.block_rows).min(mask.rows);
+                    for r in gr * mask.block_rows..rend {
+                        let off = r * mask.cols;
+                        for gc in 0..mask.grid_c {
+                            if mask.is_masked(gr, gc) {
+                                continue;
+                            }
+                            let c0 = off + gc * KC;
+                            let c1 = off + ((gc + 1) * KC).min(mask.cols);
+                            if resident {
+                                for i in c0..c1 {
+                                    let wd = &mut p.wdec[i];
+                                    *wd = pim_sgd_dec(*wd, lr_bits, g.w[i].to_bits());
+                                    p.w[i] = f32::from_bits(pim_encode(*wd));
+                                }
+                            } else {
+                                for i in c0..c1 {
+                                    p.w[i] = pim_sub_f32(p.w[i], pim_mul_f32(lr, g.w[i]));
+                                }
+                            }
+                        }
+                    }
+                }
+                macs_wu += mask.live_elems() as u64;
+                p.mask = Some(mask);
+            } else if resident {
                 for ((wd, w), gw) in p.wdec.iter_mut().zip(p.w.iter_mut()).zip(&g.w) {
                     *wd = pim_sgd_dec(*wd, lr_bits, gw.to_bits());
                     *w = f32::from_bits(pim_encode(*wd));
                 }
+                macs_wu += g.w.len() as u64;
             } else {
                 for (w, &gw) in p.w.iter_mut().zip(&g.w) {
                     *w = pim_sub_f32(*w, pim_mul_f32(lr, gw));
                 }
+                macs_wu += g.w.len() as u64;
             }
             for (b, &gb) in p.b.iter_mut().zip(&g.b) {
                 *b = pim_sub_f32(*b, pim_mul_f32(lr, gb));
             }
-            macs_wu += (g.w.len() + g.b.len()) as u64;
+            macs_wu += g.b.len() as u64;
         }
         macs_wu
     }
@@ -1034,11 +1111,19 @@ impl TrainEngine {
             let x_in: &[f32] = if l == 0 { x } else { &acts[l] };
             match *layer {
                 Layer::Dense { inp, out } => {
+                    let lp = params.layers[l].as_ref().expect("dense layer params");
                     // dW = δᵀ·X.
-                    let gw = if direct {
+                    let mut gw = if direct {
                         // TN layout: δ [batch, out] and X [batch, inp]
-                        // consumed row-major as-is.
-                        self.gemm.gemm_tn(&delta, x_in, out, batch, inp)
+                        // consumed row-major as-is.  Masked layers take
+                        // the wgrad output skip: pinned cells stay +0
+                        // and their contraction is never scheduled.
+                        match lp.mask.as_ref() {
+                            Some(mask) => self
+                                .gemm
+                                .gemm_tn_seeded_masked(&delta, x_in, None, mask, out, batch, inp),
+                            None => self.gemm.gemm_tn(&delta, x_in, out, batch, inp),
+                        }
                     } else {
                         // Frozen floor: transpose both operands, NT.
                         let mut xt = arena.take(batch * inp);
@@ -1050,6 +1135,15 @@ impl TrainEngine {
                         arena.give(dt);
                         gw
                     };
+                    if !direct {
+                        // Floor projection: the masked cells of the
+                        // dense wgrad are discarded (the pooled output
+                        // skip never computes them), keeping the floor
+                        // bit-identical to the masked fast path.
+                        if let Some(mask) = lp.mask.as_ref() {
+                            mask.zero_masked(&mut gw.y);
+                        }
+                    }
                     macs_bwd += gw.macs;
                     // db = column sums of δ (ride-along adds).
                     let mut gb = arena.take(out);
@@ -1060,13 +1154,17 @@ impl TrainEngine {
                     }
                     adds_bwd += (batch * out) as u64;
                     // dX = δ·W.
-                    let lp = params.layers[l].as_ref().expect("dense layer params");
                     let gx = if direct {
                         // NN layout: W [out, inp] read by k-rows — from
                         // the resident panel when one is held.
-                        match self.gemm.resident_panel(lp) {
-                            Some(panel) => self.gemm.gemm_nn_dec(&delta, panel, batch, out, inp),
-                            None => self.gemm.gemm_nn(&delta, &lp.w, batch, out, inp),
+                        match (self.gemm.resident_panel(lp), lp.mask.as_ref()) {
+                            (Some(panel), Some(mask)) => {
+                                self.gemm.gemm_nn_dec_masked(&delta, panel, mask, batch, out, inp)
+                            }
+                            (Some(panel), None) => {
+                                self.gemm.gemm_nn_dec(&delta, panel, batch, out, inp)
+                            }
+                            (None, _) => self.gemm.gemm_nn(&delta, &lp.w, batch, out, inp),
                         }
                     } else {
                         let mut wt = arena.take(out * inp);
@@ -1080,6 +1178,7 @@ impl TrainEngine {
                         w: gw.y,
                         b: gb,
                         wdec: Vec::new(),
+                        mask: None,
                     });
                     arena.give(std::mem::replace(&mut delta, gx.y));
                 }
@@ -1106,8 +1205,9 @@ impl TrainEngine {
                             }
                         }
                     }
+                    let lp = params.layers[l].as_ref().expect("conv layer params");
                     // dW = δᵀ·patches.
-                    let gw = if direct {
+                    let mut gw = if direct {
                         // Rebuild the forward-layout [rows, k] im2col
                         // patch matrix and consume it (and δ) row-major
                         // through the TN kernel — no transposed copy of
@@ -1124,7 +1224,12 @@ impl TrainEngine {
                                 &mut patches[b * ohw * k..(b + 1) * ohw * k],
                             );
                         }
-                        let gw = self.gemm.gemm_tn(&dmat, &patches, out_ch, rows, k);
+                        let gw = match lp.mask.as_ref() {
+                            Some(mask) => self.gemm.gemm_tn_seeded_masked(
+                                &dmat, &patches, None, mask, out_ch, rows, k,
+                            ),
+                            None => self.gemm.gemm_tn(&dmat, &patches, out_ch, rows, k),
+                        };
                         arena.give(patches);
                         gw
                     } else {
@@ -1152,6 +1257,12 @@ impl TrainEngine {
                         arena.give(dt);
                         gw
                     };
+                    if !direct {
+                        // Floor projection (see the Dense arm).
+                        if let Some(mask) = lp.mask.as_ref() {
+                            mask.zero_masked(&mut gw.y);
+                        }
+                    }
                     macs_bwd += gw.macs;
                     // db over every batch·pixel position.
                     let mut gb = arena.take(out_ch);
@@ -1162,13 +1273,17 @@ impl TrainEngine {
                     }
                     adds_bwd += (rows * out_ch) as u64;
                     // dX = col2im(δ·W).
-                    let lp = params.layers[l].as_ref().expect("conv layer params");
                     let gp = if direct {
                         // NN layout: W [out_ch, k] read by k-rows — from
                         // the resident panel when one is held.
-                        match self.gemm.resident_panel(lp) {
-                            Some(panel) => self.gemm.gemm_nn_dec(&dmat, panel, rows, out_ch, k),
-                            None => self.gemm.gemm_nn(&dmat, &lp.w, rows, out_ch, k),
+                        match (self.gemm.resident_panel(lp), lp.mask.as_ref()) {
+                            (Some(panel), Some(mask)) => {
+                                self.gemm.gemm_nn_dec_masked(&dmat, panel, mask, rows, out_ch, k)
+                            }
+                            (Some(panel), None) => {
+                                self.gemm.gemm_nn_dec(&dmat, panel, rows, out_ch, k)
+                            }
+                            (None, _) => self.gemm.gemm_nn(&dmat, &lp.w, rows, out_ch, k),
                         }
                     } else {
                         let mut wt = arena.take(out_ch * k);
@@ -1196,6 +1311,7 @@ impl TrainEngine {
                         w: gw.y,
                         b: gb,
                         wdec: Vec::new(),
+                        mask: None,
                     });
                     arena.give(std::mem::replace(&mut delta, dx));
                 }
@@ -1437,6 +1553,7 @@ impl TrainEngine {
     pub(crate) fn shard_wgrad(
         &self,
         net: &Network,
+        params: &NetworkParams,
         x: &[f32],
         sd: &ShardDelta,
         carry: &mut [Option<LayerParams>],
@@ -1459,10 +1576,23 @@ impl TrainEngine {
                     // [chunk, inp] row-major as-is, accumulators seeded
                     // with the merged partial.  The TN layout works in
                     // every execution mode (dispatch differs, values
-                    // cannot).
-                    let gw = self
-                        .gemm
-                        .gemm_tn_seeded(dmat, x_in, Some(&seed.w), out, batch, inp);
+                    // cannot); masked layers keep their pinned cells at
+                    // the seed's exact bits (+0 from shard 0 onward).
+                    let mask = params.layers[l].as_ref().and_then(|lp| lp.mask.as_ref());
+                    let gw = match mask {
+                        Some(mask) => self.gemm.gemm_tn_seeded_masked(
+                            dmat,
+                            x_in,
+                            Some(&seed.w),
+                            mask,
+                            out,
+                            batch,
+                            inp,
+                        ),
+                        None => self
+                            .gemm
+                            .gemm_tn_seeded(dmat, x_in, Some(&seed.w), out, batch, inp),
+                    };
                     macs_wgrad += gw.macs;
                     // db chain continuation over the chunk's rows.
                     let mut gb = arena.take(out);
@@ -1477,6 +1607,7 @@ impl TrainEngine {
                         w: gw.y,
                         b: gb,
                         wdec: Vec::new(),
+                        mask: None,
                     });
                 }
                 Layer::Conv2d {
@@ -1506,9 +1637,21 @@ impl TrainEngine {
                         );
                     }
                     let seed = carry[l].as_ref().expect("conv carry");
-                    let gw = self
-                        .gemm
-                        .gemm_tn_seeded(dmat, &patches, Some(&seed.w), out_ch, rows, k);
+                    let mask = params.layers[l].as_ref().and_then(|lp| lp.mask.as_ref());
+                    let gw = match mask {
+                        Some(mask) => self.gemm.gemm_tn_seeded_masked(
+                            dmat,
+                            &patches,
+                            Some(&seed.w),
+                            mask,
+                            out_ch,
+                            rows,
+                            k,
+                        ),
+                        None => self
+                            .gemm
+                            .gemm_tn_seeded(dmat, &patches, Some(&seed.w), out_ch, rows, k),
+                    };
                     arena.give(patches);
                     macs_wgrad += gw.macs;
                     let mut gb = arena.take(out_ch);
@@ -1524,6 +1667,7 @@ impl TrainEngine {
                         w: gw.y,
                         b: gb,
                         wdec: Vec::new(),
+                        mask: None,
                     });
                 }
                 Layer::AvgPool2 { .. } | Layer::Relu { .. } => {}

@@ -4,10 +4,12 @@
 //! mram-pim report [--table1] [--fig5] [--fig6] [--fa] [--fast-switch] [--all]
 //! mram-pim train  [--steps N] [--lr F] [--seed N] [--artifacts DIR]
 //!                 [--train-size N] [--threads N] [--shards N]
+//!                 [--model NAME] [--sparsity SPEC]
 //!                 [--no-deep-validate] [--config FILE]
 //! mram-pim serve  [--requests N] [--load F] [--chips N] [--threads N]
 //!                 [--depth N] [--max-batch N] [--max-wait-ms F]
-//!                 [--deadline-ms F] [--seed N] [--faults SPEC] [--real-time]
+//!                 [--deadline-ms F] [--seed N] [--model NAME]
+//!                 [--sparsity SPEC] [--faults SPEC] [--real-time]
 //! mram-pim mac    [--format fp32|fp16|bf16] [--ultrafast]
 //! mram-pim sweep  [--what align|formats|subarray|shards]
 //! mram-pim selfcheck
@@ -96,11 +98,12 @@ USAGE:
   mram-pim report [--table1|--fig5|--fig6|--fa|--fast-switch|--all] [--steps N]
   mram-pim train  [--steps N] [--lr F] [--seed N] [--artifacts DIR]
                   [--train-size N] [--eval-every N] [--threads N]
-                  [--shards N] [--faults SPEC] [--no-deep-validate]
-                  [--config FILE]
+                  [--shards N] [--model NAME] [--sparsity SPEC]
+                  [--faults SPEC] [--no-deep-validate] [--config FILE]
   mram-pim serve  [--requests N] [--load F] [--chips N] [--threads N]
                   [--depth N] [--max-batch N] [--max-wait-ms F]
-                  [--deadline-ms F] [--seed N] [--faults SPEC] [--real-time]
+                  [--deadline-ms F] [--seed N] [--model NAME]
+                  [--sparsity SPEC] [--faults SPEC] [--real-time]
   mram-pim mac    [--format fp32|fp16|bf16] [--ultrafast]
   mram-pim sweep  [--what align|formats|subarray|shards]
   mram-pim selfcheck
@@ -117,6 +120,13 @@ arms the seeded device fault model with ABFT recovery, e.g.
 `--faults transient=1e-4,stuck=4,weight_stuck=2,chip_dead=1,seed=7`
 (keys: transient, stuck, weight_stuck, weight_flip, chip_fail,
 chip_dead, seed, retries, shard_retries, policy=reshard|rollback).
+`--model NAME` picks the trained network (lenet5 | lenet-300-100 |
+cnn-medium | mlp-wide).  `--sparsity block=K,ratio=R` prunes each
+weight matrix by block magnitude (blocks of K output rows x one
+256-wide K-panel, ratio R of blocks pruned), pins pruned blocks at
++0.0 through SGD, and *skips their waves entirely* — MACs, latency
+and energy all drop by the live-block fraction, counted and
+cross-checked against the occupancy-aware analytic model every run.
 `serve` runs the inference serving tier over the warm resident-panel
 engines: an open-loop load generator offers `--load`x the fleet's
 saturated capacity, requests coalesce into batched GEMM waves

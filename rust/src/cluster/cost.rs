@@ -30,6 +30,7 @@
 //! wave pool over fwd + bwd + update, nothing moved, nothing reduced —
 //! the seed invariant that a 1-chip cluster *is* the PR 2 engine.
 
+use crate::arch::sparsity::Occupancy;
 use crate::arch::train::TrainTotals;
 use crate::cluster::plan::ShardPlan;
 use crate::fpu::FpCostModel;
@@ -70,7 +71,20 @@ pub struct ClusterCounts {
 impl ClusterCounts {
     /// Counts from the analytic workload model, per [`ShardPlan`] chunk.
     pub fn analytic(net: &Network, plan: &ShardPlan) -> ClusterCounts {
-        let fwd_per_sample: u64 = net.layers.iter().map(|l| l.macs_fwd()).sum();
+        ClusterCounts::analytic_occ(net, plan, &Occupancy::dense(net))
+    }
+
+    /// Occupancy-aware analytic counts: compute MACs scale per layer by
+    /// its live-block fraction (fwd, dgrad and wgrad are all
+    /// live-sized), and the update / reduce / broadcast terms cover
+    /// live parameters only — pruned blocks carry no gradient, so they
+    /// are neither merged nor moved.  Dense occupancy reproduces
+    /// [`ClusterCounts::analytic`] exactly.
+    pub fn analytic_occ(net: &Network, plan: &ShardPlan, occ: &Occupancy) -> ClusterCounts {
+        let work1 = occ.training_work(net, 1);
+        // fwd + dgrad + wgrad per sample, all live-sized (macs_wu is
+        // per step, not per sample — excluded here, carried in params).
+        let fwd_per_sample = work1.macs_fwd;
         let adds_per_sample: u64 = net.layers.iter().map(|l| l.adds_fwd()).sum();
         let stash_per_sample: u64 =
             net.layers.iter().map(|l| l.out_units() as u64).sum();
@@ -81,7 +95,7 @@ impl ClusterCounts {
             shard_macs: sizes.iter().map(|&b| 3 * fwd_per_sample * b as u64).collect(),
             shard_adds: sizes.iter().map(|&b| adds_per_sample * b as u64).collect(),
             shard_stash: sizes.iter().map(|&b| stash_per_sample * b as u64).collect(),
-            params: net.param_count() as u64,
+            params: occ.live_params,
             fault_checksum_adds: 0,
             fault_retry_macs: 0,
             fault_reshard_macs: 0,
@@ -348,9 +362,22 @@ pub fn cluster_step_cost(
     lanes: usize,
     model: &FpCostModel,
 ) -> Result<ClusterCost> {
+    cluster_step_cost_occ(net, batch, shards, lanes, model, &Occupancy::dense(net))
+}
+
+/// [`cluster_step_cost`] at an explicit live-block occupancy — the
+/// analytic model of a block-sparse cluster step.
+pub fn cluster_step_cost_occ(
+    net: &Network,
+    batch: usize,
+    shards: usize,
+    lanes: usize,
+    model: &FpCostModel,
+    occ: &Occupancy,
+) -> Result<ClusterCost> {
     let plan = ShardPlan::split(batch, shards)?;
     Ok(ClusterCost::from_counts(
-        &ClusterCounts::analytic(net, &plan),
+        &ClusterCounts::analytic_occ(net, &plan, occ),
         lanes,
         model,
     ))
@@ -369,7 +396,24 @@ pub fn verify_cluster_totals(
     lanes: usize,
     model: &FpCostModel,
 ) -> Result<ClusterCost> {
-    let cost = cluster_step_cost(net, batch, shards, lanes, model)?;
+    verify_cluster_totals_occ(totals, net, batch, shards, lanes, model, &Occupancy::dense(net))
+}
+
+/// [`verify_cluster_totals`] at an explicit occupancy: the counted
+/// ledger must equal the live-block analytic cost exactly, and the
+/// skipped counters must account for precisely the dense − live
+/// difference.
+#[allow(clippy::too_many_arguments)]
+pub fn verify_cluster_totals_occ(
+    totals: &TrainTotals,
+    net: &Network,
+    batch: usize,
+    shards: usize,
+    lanes: usize,
+    model: &FpCostModel,
+    occ: &Occupancy,
+) -> Result<ClusterCost> {
+    let cost = cluster_step_cost_occ(net, batch, shards, lanes, model, occ)?;
     if !cost.matches_totals(totals) {
         return Err(crate::Error::Sim(format!(
             "cluster ledger drifted from cluster_step_cost: \
@@ -378,6 +422,16 @@ pub fn verify_cluster_totals(
             totals.waves,
             cost.total_macs() * totals.steps,
             cost.total_waves() * totals.steps,
+        )));
+    }
+    let dense = cluster_step_cost(net, batch, shards, lanes, model)?;
+    let want_macs = (dense.total_macs() - cost.total_macs()) * totals.steps;
+    let want_waves = (dense.total_waves() - cost.total_waves()) * totals.steps;
+    if totals.skipped_macs != want_macs || totals.skipped_waves != want_waves {
+        return Err(crate::Error::Sim(format!(
+            "cluster skipped ledger drifted: {} skipped MACs / {} skipped \
+             waves, want {want_macs} / {want_waves}",
+            totals.skipped_macs, totals.skipped_waves,
         )));
     }
     Ok(cost)

@@ -79,6 +79,11 @@ pub struct ClusterStepResult {
     pub stored_activations: u64,
     /// Total array wave events (`cost.total_waves()`).
     pub waves: u64,
+    /// MACs the block-sparse masks elided cluster-wide this step
+    /// (dense analytic cluster cost − counted; zero on dense models).
+    pub skipped_macs: u64,
+    /// Wave events elided cluster-wide this step.
+    pub skipped_waves: u64,
     /// Cluster step latency (`cost.latency_s()`).
     pub latency_s: f64,
     /// Cluster step energy (`cost.energy_j()`).
@@ -109,6 +114,8 @@ impl ClusterStepResult {
         totals.adds_bwd += self.adds_bwd;
         totals.stored_activations += self.stored_activations;
         totals.waves += self.waves;
+        totals.skipped_macs += self.skipped_macs;
+        totals.skipped_waves += self.skipped_waves;
         totals.fault_waves += self.cost.fault_waves;
         totals.latency_s += self.latency_s;
         totals.energy_j += self.energy_j;
@@ -141,6 +148,8 @@ impl ClusterStepResult {
             adds_bwd: r.adds_bwd,
             stored_activations: r.stored_activations,
             waves: r.waves,
+            skipped_macs: r.skipped_macs,
+            skipped_waves: r.skipped_waves,
             latency_s: r.latency_s,
             energy_j: r.energy_j,
             cost,
@@ -431,7 +440,7 @@ impl ClusterEngine {
         let budget = cx.session.map(|s| s.config().shard_retries).unwrap_or(0);
         let mut attempt = 0u32;
         let folded = loop {
-            match self.engine.shard_wgrad(cx.net, x, &sd, &mut w.carry) {
+            match self.engine.shard_wgrad(cx.net, cx.frozen, x, &sd, &mut w.carry) {
                 Ok(counts) => break Ok(counts),
                 Err(e) => {
                     let Some(s) = cx.session else { break Err(e) };
@@ -551,6 +560,7 @@ impl ClusterEngine {
                     w: vec![0.0; lp.w.len()],
                     b: vec![0.0; lp.b.len()],
                     wdec: Vec::new(),
+                    mask: None,
                 })
             })
             .collect();
@@ -813,6 +823,18 @@ impl ClusterEngine {
         };
         let cost = ClusterCost::from_counts(&counts, self.lanes, self.engine.gemm().model());
 
+        // Skipped ledger: dense analytic cluster cost of the same step
+        // minus the counted live work — zero when no layer is masked,
+        // the exact mask-elided MAC/wave gap otherwise.
+        let dense = ClusterCost::from_counts(
+            &ClusterCounts::analytic(net, &plan),
+            self.lanes,
+            self.engine.gemm().model(),
+        );
+        let counted_macs = w.macs_fwd + w.macs_bwd + macs_wu;
+        let skipped_macs = dense.total_macs().saturating_sub(counted_macs);
+        let skipped_waves = dense.total_waves().saturating_sub(cost.total_waves());
+
         Ok(ClusterStepResult {
             loss,
             macs_fwd: w.macs_fwd,
@@ -822,6 +844,8 @@ impl ClusterEngine {
             adds_bwd: w.adds_bwd,
             stored_activations: w.stored,
             waves: cost.total_waves(),
+            skipped_macs,
+            skipped_waves,
             latency_s: cost.latency_s(),
             energy_j: cost.energy_j(),
             cost,

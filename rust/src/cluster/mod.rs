@@ -26,7 +26,10 @@ pub mod engine;
 pub mod plan;
 pub mod reduce;
 
-pub use cost::{cluster_step_cost, verify_cluster_totals, ClusterCost, ClusterCounts};
+pub use cost::{
+    cluster_step_cost, cluster_step_cost_occ, verify_cluster_totals, verify_cluster_totals_occ,
+    ClusterCost, ClusterCounts,
+};
 pub use engine::{ClusterEngine, ClusterStepResult};
 pub use plan::{live_chips, ClusterConfig, ShardPlan};
 pub use reduce::{reduce_grads, GradSet};

@@ -50,6 +50,7 @@ pub fn reduce_grads(parts: &[GradSet]) -> Result<(GradSet, u64)> {
                 w: vec![0f32; g.w.len()],
                 b: vec![0f32; g.b.len()],
                 wdec: Vec::new(),
+                mask: None,
             })
         })
         .collect();
@@ -103,6 +104,7 @@ mod tests {
                     w: (0..w).map(|_| rng.f32_normal(6)).collect(),
                     b: (0..b).map(|_| rng.f32_normal(6)).collect(),
                     wdec: Vec::new(),
+                    mask: None,
                 })
             })
             .collect()

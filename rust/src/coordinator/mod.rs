@@ -96,9 +96,13 @@ pub struct Coordinator {
 
 impl Coordinator {
     pub fn new(runtime: Runtime) -> Coordinator {
+        // The coordinator trains whatever network the runtime was
+        // provisioned with (`Runtime::set_model`), so reports, eval
+        // batching and the cost simulation all price the same graph.
+        let net = runtime.network();
         Coordinator {
             runtime,
-            net: Network::lenet5(),
+            net,
             proposed: Accelerator::new(AccelKind::Proposed, FloatFormat::FP32, 32_768),
             floatpim: Accelerator::new(AccelKind::FloatPim, FloatFormat::FP32, 32_768),
         }

@@ -1,9 +1,9 @@
 //! `mram-pim` — leader binary: report generation, coordinated training,
 //! MAC cost queries and design-space sweeps.
 
-use mram_pim::arch::{AccelKind, Accelerator, PipelineSchedule};
+use mram_pim::arch::{AccelKind, Accelerator, Occupancy, PipelineSchedule, SparsityConfig};
 use mram_pim::cli::{usage, Args};
-use mram_pim::cluster::{cluster_step_cost, verify_cluster_totals};
+use mram_pim::cluster::{cluster_step_cost, verify_cluster_totals_occ};
 use mram_pim::config::AccelConfig;
 use mram_pim::coordinator::{Coordinator, RunConfig};
 use mram_pim::floatpim::FloatPimCostModel;
@@ -108,6 +108,24 @@ fn cmd_train(args: &Args) -> mram_pim::Result<()> {
     let mut runtime = Runtime::load_dir(&artifacts)?;
     runtime.set_threads(cfg.threads);
     runtime.set_shards(cfg.shards);
+    runtime.set_model(&args.str_or("model", "lenet5"))?;
+    let sparsity_spec = args.str_or("sparsity", "");
+    if !sparsity_spec.is_empty() {
+        let sp = SparsityConfig::parse(&sparsity_spec).map_err(mram_pim::Error::Config)?;
+        runtime.set_sparsity(Some(sp));
+        match runtime.sparsity() {
+            Some(sp) => println!(
+                "block sparsity armed: blocks of {} output rows x 256-wide K-panels, \
+                 ratio {:.2} pruned by magnitude (pinned at +0.0; masked waves \
+                 skipped and priced)",
+                sp.block_rows, sp.ratio
+            ),
+            None => println!(
+                "note: --sparsity ignored — the {} backend serves dense panels only",
+                runtime.platform()
+            ),
+        }
+    }
     let fault_spec = args.str_or("faults", "");
     if !fault_spec.is_empty() {
         let fault_cfg = mram_pim::sim::FaultConfig::parse(&fault_spec)?;
@@ -179,7 +197,7 @@ fn cmd_train(args: &Args) -> mram_pim::Result<()> {
         );
     }
     if let Some(f) = &report.functional {
-        report_functional_ledger(f, coord.network(), shards)?;
+        report_functional_ledger(f, coord.network(), shards, &coord.runtime().occupancy())?;
     }
     if let Some(fr) = coord.runtime().fault_report() {
         println!("\nfault tolerance ({} steps under the armed fault model):", fr.steps);
@@ -219,13 +237,16 @@ fn cmd_train(args: &Args) -> mram_pim::Result<()> {
 }
 
 /// Print the merged functional train ledger and cross-check it against
-/// the analytic models — `training_work`/`train_step_cost` for the
-/// single-chip engine, `cluster::cluster_step_cost` for a sharded run.
-/// The functional and analytic paths must never drift.
+/// the analytic models — the occupancy-aware `training_work` /
+/// `train_step_cost_occ` for the single-chip engine,
+/// `cluster::verify_cluster_totals_occ` for a sharded run.  The
+/// functional and analytic paths must never drift, at any live-block
+/// fraction.
 fn report_functional_ledger(
     f: &mram_pim::arch::TrainTotals,
     net: &Network,
     shards: usize,
+    occ: &Occupancy,
 ) -> mram_pim::Result<()> {
     let steps = f.steps.max(1);
     println!("\nfunctional PIM ledger ({} train steps through the train engine):", f.steps);
@@ -237,19 +258,29 @@ fn report_functional_ledger(
         f.macs_wu / steps,
         f.waves / steps,
     );
+    if occ.live_fraction() < 1.0 {
+        println!(
+            "  block sparsity: {:.1}% of weight elements live; skipped per step: \
+             {} MACs / {} waves",
+            occ.live_fraction() * 100.0,
+            f.skipped_macs / steps,
+            f.skipped_waves / steps,
+        );
+    }
     println!(
         "  simulated: latency {} energy {}",
         fmt_si(f.latency_s, "s"),
         fmt_si(f.energy_j, "J")
     );
     if shards > 1 {
-        let cost = verify_cluster_totals(
+        let cost = verify_cluster_totals_occ(
             f,
             net,
             TRAIN_BATCH,
             shards,
             FUNCTIONAL_LANES,
             &FpCostModel::proposed_fp32(),
+            occ,
         )?;
         println!(
             "  matches cluster::cluster_step_cost exactly ({shards} shards; \
@@ -258,22 +289,27 @@ fn report_functional_ledger(
         );
         return Ok(());
     }
-    // `train_step_cost` prices exactly `training_work`'s MAC total, so
-    // one shared predicate covers both analytic models.
+    // `train_step_cost_occ` prices exactly the occupancy-aware
+    // `training_work`'s MAC total, so one shared predicate covers both
+    // analytic models (dense runs have `occ.live_fraction() == 1.0` and
+    // reduce to the PR-5 check bit for bit).
     let accel = Accelerator::new(AccelKind::Proposed, FloatFormat::FP32, FUNCTIONAL_LANES);
-    let cost = accel.train_step_cost(net, TRAIN_BATCH);
-    debug_assert_eq!(cost.macs, net.training_work(TRAIN_BATCH).total_macs());
-    if !f.matches_analytic(net, TRAIN_BATCH, FUNCTIONAL_LANES as u64) {
+    let cost = accel.train_step_cost_occ(net, TRAIN_BATCH, occ);
+    debug_assert_eq!(
+        cost.macs,
+        occ.training_work(net, TRAIN_BATCH).total_macs()
+    );
+    if !f.matches_analytic_occ(net, TRAIN_BATCH, FUNCTIONAL_LANES as u64, occ) {
         return Err(mram_pim::Error::Sim(format!(
             "functional ledger drifted from the analytic model: \
              {} MACs / {} waves, want {} / {}",
             f.total_macs(),
             f.waves,
             cost.macs * f.steps,
-            net.training_work(TRAIN_BATCH).mac_waves(FUNCTIONAL_LANES as u64) * f.steps,
+            occ.training_work(net, TRAIN_BATCH).mac_waves(FUNCTIONAL_LANES as u64) * f.steps,
         )));
     }
-    println!("  matches model::training_work and accel::train_step_cost exactly");
+    println!("  matches the occupancy-aware training_work and train_step_cost exactly");
     Ok(())
 }
 
@@ -302,6 +338,18 @@ fn cmd_serve(args: &Args) -> mram_pim::Result<()> {
     let artifacts = args.str_or("artifacts", "artifacts");
     let mut rt = Runtime::load_dir(&artifacts)?;
     rt.set_threads(threads);
+    rt.set_model(&args.str_or("model", "lenet5"))?;
+    let sparsity_spec = args.str_or("sparsity", "");
+    if !sparsity_spec.is_empty() {
+        let sp = SparsityConfig::parse(&sparsity_spec).map_err(mram_pim::Error::Config)?;
+        rt.set_sparsity(Some(sp));
+        if rt.sparsity().is_none() {
+            println!(
+                "note: --sparsity ignored — the {} backend serves dense panels only",
+                rt.platform()
+            );
+        }
+    }
     let fault_spec = args.str_or("faults", "");
     if !fault_spec.is_empty() {
         rt.set_faults(Some(mram_pim::sim::FaultConfig::parse(&fault_spec)?));
@@ -354,6 +402,13 @@ fn cmd_serve(args: &Args) -> mram_pim::Result<()> {
         st.batched_samples as f64 / st.batches.max(1) as f64,
         st.redispatched
     );
+    if st.live_block_ratio < 1.0 || st.skipped_waves > 0 {
+        println!(
+            "{:>10} wave(s) skipped by block masks ({:.1}% of weight elements live)",
+            st.skipped_waves,
+            st.live_block_ratio * 100.0
+        );
+    }
     println!(
         "\nthroughput {:.1} req/s ({:.1}% of healthy capacity)",
         r.throughput_rps,
@@ -460,6 +515,13 @@ fn serve_real_time(
         wall_s,
         completed as f64 / wall_s.max(1e-9)
     );
+    if st.live_block_ratio < 1.0 || st.skipped_waves > 0 {
+        println!(
+            "{} wave(s) skipped by block masks ({:.1}% of weight elements live)",
+            st.skipped_waves,
+            st.live_block_ratio * 100.0
+        );
+    }
     Ok(())
 }
 

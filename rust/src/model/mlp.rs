@@ -1,0 +1,74 @@
+//! The wide MNIST MLP — the block-sparsity scale story.
+//!
+//! LeNet-5's largest weight matrix is 97×192: at block 4×KC it is a
+//! 25×1 block grid, too coarse for magnitude pruning to bite.  The wide
+//! 784-1024-1024-10 MLP (1.86 M parameters, ~86× LeNet-5) gives the
+//! sparsity machinery realistic panels: its 1024×1024 hidden matrix
+//! alone is a 256×4 block grid.
+
+use super::lenet::{Layer, Network};
+
+impl Network {
+    /// Wide 784-1024-1024-10 MLP: 1,863,690 parameters.
+    pub fn mlp_wide() -> Network {
+        Network {
+            name: "mlp-wide",
+            input: (1, 28, 28),
+            layers: vec![
+                Layer::Dense {
+                    inp: 784,
+                    out: 1024,
+                },
+                Layer::Relu { units: 1024 },
+                Layer::Dense {
+                    inp: 1024,
+                    out: 1024,
+                },
+                Layer::Relu { units: 1024 },
+                Layer::Dense {
+                    inp: 1024,
+                    out: 10,
+                },
+            ],
+        }
+    }
+
+    /// Model lookup for the CLI's `--model NAME` flag.
+    pub fn by_name(name: &str) -> Option<Network> {
+        match name {
+            "lenet5" => Some(Network::lenet5()),
+            "lenet-300-100" => Some(Network::lenet_300_100()),
+            "cnn-medium" => Some(Network::cnn_medium()),
+            "mlp-wide" => Some(Network::mlp_wide()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mlp_wide_param_count() {
+        // 784*1024+1024 + 1024*1024+1024 + 1024*10+10 = 1,863,690
+        assert_eq!(Network::mlp_wide().param_count(), 1_863_690);
+    }
+
+    #[test]
+    fn by_name_round_trips_every_model() {
+        for name in ["lenet5", "lenet-300-100", "cnn-medium", "mlp-wide"] {
+            let net = Network::by_name(name).expect(name);
+            assert_eq!(net.name, name);
+        }
+        assert!(Network::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn weight_elems_excludes_biases() {
+        let net = Network::mlp_wide();
+        let w: usize = net.layers.iter().map(Layer::weight_elems).sum();
+        assert_eq!(w, 784 * 1024 + 1024 * 1024 + 1024 * 10);
+        assert_eq!(net.param_count() - w, 1024 + 1024 + 10);
+    }
+}

@@ -6,5 +6,6 @@
 //! same computation).
 
 pub mod lenet;
+pub mod mlp;
 
 pub use lenet::{Layer, Network, TrainingWork};

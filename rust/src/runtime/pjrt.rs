@@ -171,6 +171,38 @@ impl Runtime {
     /// expose — accepted for API parity, ignored.
     pub fn set_faults(&mut self, _cfg: Option<crate::sim::FaultConfig>) {}
 
+    /// The AOT artifacts compile LeNet-5 only: selecting it is a no-op,
+    /// anything else is a typed refusal (API parity with the functional
+    /// runtime's model registry).
+    pub fn set_model(&mut self, name: &str) -> Result<()> {
+        if name == "lenet5" {
+            return Ok(());
+        }
+        Err(Error::Runtime(format!(
+            "model '{name}' requires the functional PIM backend \
+             (build without --features pjrt)"
+        )))
+    }
+
+    /// The network the compiled artifacts train (always LeNet-5).
+    pub fn network(&self) -> crate::model::Network {
+        crate::model::Network::lenet5()
+    }
+
+    /// Block-sparse training models the PIM wave schedule, which XLA
+    /// does not expose — accepted for API parity, ignored.
+    pub fn set_sparsity(&mut self, _cfg: Option<crate::arch::SparsityConfig>) {}
+
+    /// No sparsity config is ever armed on the XLA backend.
+    pub fn sparsity(&self) -> Option<crate::arch::SparsityConfig> {
+        None
+    }
+
+    /// The XLA graph is always dense.
+    pub fn occupancy(&self) -> crate::arch::Occupancy {
+        crate::arch::Occupancy::dense(&self.network())
+    }
+
     /// No fault session ever runs on the XLA backend.
     pub fn fault_report(&self) -> Option<crate::sim::FaultReport> {
         None

@@ -21,6 +21,7 @@ use std::sync::{Arc, Mutex};
 
 use super::{HostTensor, FUNCTIONAL_LANES};
 use crate::arch::gemm::{LayerParams, NetworkParams};
+use crate::arch::sparsity::{Occupancy, SparsityConfig};
 use crate::arch::train::{TrainEngine, TrainTotals};
 use crate::cluster::{ClusterConfig, ClusterEngine};
 use crate::fpu::softfloat::{pim_add_f32, pim_mul_f32};
@@ -90,8 +91,10 @@ fn state_to_params(net: &Network, state: &TrainState) -> Result<NetworkParams> {
             w: w.data.clone(),
             b: b.data.clone(),
             // Decode-on-load: the resident decoded panel is rebuilt by
-            // the engine's `ensure_resident` on the next step.
+            // the engine's `ensure_resident` on the next step, and the
+            // block mask (if sparsity is armed) by `SparsityConfig::ensure`.
             wdec: Vec::new(),
+            mask: None,
         }));
     }
     if it.next().is_some() {
@@ -186,6 +189,9 @@ pub struct Runtime {
     /// Armed fault session (CLI `--faults`).  `None` ⇒ fault-free fast
     /// path, bit-identical to a runtime without the feature.
     faults: Option<Arc<FaultSession>>,
+    /// Armed block-sparsity config (CLI `--sparsity`).  `None` ⇒ dense
+    /// training, bit-identical to a runtime without the feature.
+    sparsity: Option<SparsityConfig>,
 }
 
 impl Runtime {
@@ -206,7 +212,55 @@ impl Runtime {
             cluster: Mutex::new(None),
             cached: Mutex::new(None),
             faults: None,
+            sparsity: None,
         })
+    }
+
+    /// Swap the trained network (the CLI `--model` flag).  Resets the
+    /// parameter cache, the cluster and the run ledger — callers must
+    /// re-init parameters for the new shapes.
+    pub fn set_model(&mut self, name: &str) -> Result<()> {
+        let net = Network::by_name(name).ok_or_else(|| {
+            Error::Runtime(format!(
+                "unknown model '{name}' (try lenet5, lenet-300-100, cnn-medium, mlp-wide)"
+            ))
+        })?;
+        self.net = net;
+        *self.cached.get_mut().expect("param cache poisoned") = None;
+        *self.cluster.get_mut().expect("cluster lock poisoned") = None;
+        *self.totals.get_mut().expect("totals lock poisoned") = TrainTotals::default();
+        Ok(())
+    }
+
+    /// The network every step trains/evaluates.
+    pub fn network(&self) -> Network {
+        self.net.clone()
+    }
+
+    /// Arm (or disarm, with `None`) block-sparse training (the CLI
+    /// `--sparsity` flag): every subsequent step prunes once to the
+    /// configured block geometry/ratio, pins the pruned blocks at +0.0,
+    /// and skips their waves.  Resets the parameter cache so the mask
+    /// is (re)built from the next state handed in.
+    pub fn set_sparsity(&mut self, cfg: Option<SparsityConfig>) {
+        self.sparsity = cfg;
+        *self.cached.get_mut().expect("param cache poisoned") = None;
+        *self.cluster.get_mut().expect("cluster lock poisoned") = None;
+    }
+
+    /// The armed sparsity config, if any.
+    pub fn sparsity(&self) -> Option<SparsityConfig> {
+        self.sparsity
+    }
+
+    /// Live-block occupancy of the cached parameter set — the analytic
+    /// ledger cross-check argument (`Occupancy::dense` until the first
+    /// step builds the masks).
+    pub fn occupancy(&self) -> Occupancy {
+        match self.cached.lock().expect("param cache poisoned").as_ref() {
+            Some(p) => Occupancy::of(&self.net, p),
+            None => Occupancy::dense(&self.net),
+        }
     }
 
     /// Re-provision the engine's host worker threads (the CLI
@@ -316,6 +370,12 @@ impl Runtime {
             None => *cache = Some(state_to_params(&self.net, state)?),
         }
         let params = cache.as_mut().expect("cache just filled");
+        if let Some(cfg) = &self.sparsity {
+            // Idempotent in the steady state: the pruned bits round-trip
+            // through the state unchanged, so after the first step this
+            // re-zeroes nothing and the resident panel survives.
+            cfg.ensure(params);
+        }
         let loss = if self.shards > 1 {
             let mut cl = self.cluster.lock().expect("cluster lock poisoned");
             let cl = cl.get_or_insert_with(|| self.build_cluster());
@@ -359,6 +419,9 @@ impl Runtime {
             None => *cache = Some(state_to_params(&self.net, state)?),
         }
         let params = cache.as_mut().expect("cache just filled");
+        if let Some(cfg) = &self.sparsity {
+            cfg.ensure(params);
+        }
         self.engine.ensure_resident(params);
         let (loss, correct) =
             self.engine
@@ -371,6 +434,9 @@ impl Runtime {
     /// serving tier reads concurrently from every chip engine.
     pub fn snapshot_params(&self, state: &TrainState) -> Result<NetworkParams> {
         let mut params = state_to_params(&self.net, state)?;
+        if let Some(cfg) = &self.sparsity {
+            cfg.ensure(&mut params);
+        }
         self.engine.ensure_resident(&mut params);
         Ok(params)
     }

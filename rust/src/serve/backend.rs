@@ -4,6 +4,7 @@
 use std::sync::Arc;
 
 use crate::arch::gemm::{GemmEngine, NetworkParams};
+use crate::arch::sparsity::Occupancy;
 use crate::cluster::live_chips;
 use crate::fpu::FpCostModel;
 use crate::model::Network;
@@ -161,17 +162,56 @@ impl InferBackend {
     /// per MAC-bearing layer, `ceil(batch · macs / lanes)` waves at
     /// `t_mac` each, accumulated in layer order — exactly the
     /// `ForwardResult::latency_s` the engine's ledger reports
-    /// (asserted in `rust/tests/serving.rs`).
+    /// (asserted in `rust/tests/serving.rs`).  Layers carrying a block
+    /// mask price their *live* MACs only, matching the masked kernels'
+    /// wave-level skip.
     pub fn svc_latency(&self, batch: usize) -> f64 {
         let lanes = self.engines[0].lanes as u64;
         let mut t = 0.0f64;
-        for layer in &self.net.layers {
-            let macs = layer.macs_fwd() * batch as u64;
+        for (layer, lp) in self.net.layers.iter().zip(&self.params.layers) {
+            let macs = Self::layer_macs(layer, lp.as_ref(), batch);
             if macs > 0 {
                 t += macs.div_ceil(lanes) as f64 * self.t_mac;
             }
         }
         t
+    }
+
+    /// Forward MACs of `layer` at `batch`, live-sized when its
+    /// parameters carry a block mask (exact integer scaling: the dense
+    /// MAC count is a multiple of the weight-element count).
+    fn layer_macs(
+        layer: &crate::model::Layer,
+        lp: Option<&crate::arch::gemm::LayerParams>,
+        batch: usize,
+    ) -> u64 {
+        let macs = layer.macs_fwd() * batch as u64;
+        match lp.and_then(|lp| lp.mask.as_ref()) {
+            Some(mask) if layer.weight_elems() > 0 => {
+                macs / layer.weight_elems() as u64 * mask.live_elems() as u64
+            }
+            _ => macs,
+        }
+    }
+
+    /// Wave events the block masks elide in one `batch`-sample dispatch
+    /// (dense forward waves − live forward waves; zero on dense
+    /// panels).
+    pub fn skipped_waves(&self, batch: usize) -> u64 {
+        let lanes = self.engines[0].lanes as u64;
+        let mut skipped = 0u64;
+        for (layer, lp) in self.net.layers.iter().zip(&self.params.layers) {
+            let dense = layer.macs_fwd() * batch as u64;
+            let live = Self::layer_macs(layer, lp.as_ref(), batch);
+            skipped += dense.div_ceil(lanes).saturating_sub(live.div_ceil(lanes));
+        }
+        skipped
+    }
+
+    /// Live fraction of the snapshot's weight elements (1.0 when no
+    /// layer carries a mask) — the occupancy the serve report quotes.
+    pub fn live_block_ratio(&self) -> f64 {
+        Occupancy::of(&self.net, &self.params).live_fraction()
     }
 
     /// Run one coalesced batch on chip engine `idx`, writing the logits

@@ -27,6 +27,13 @@ pub struct ServeStats {
     /// Total per-request latency attributable to fault handling (ABFT
     /// checksum + retry waves), from the hook ledger deltas.
     pub fault_latency_s: f64,
+    /// Wave events the snapshot's block masks elided across every
+    /// dispatched batch (zero when serving a dense model).
+    pub skipped_waves: u64,
+    /// Live fraction of the served snapshot's weight elements (1.0
+    /// dense) — constant per run, carried here so reports are
+    /// self-describing.
+    pub live_block_ratio: f64,
 }
 
 impl ServeStats {

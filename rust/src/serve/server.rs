@@ -105,7 +105,10 @@ impl Server {
             q: Mutex::new(QueueState {
                 queue: VecDeque::with_capacity(policy.depth),
                 closed: false,
-                stats: ServeStats::default(),
+                stats: ServeStats {
+                    live_block_ratio: backend.live_block_ratio(),
+                    ..ServeStats::default()
+                },
             }),
             cv: Condvar::new(),
         });
@@ -248,6 +251,7 @@ fn dispatcher(shared: Arc<Shared>, backend: InferBackend, live: Vec<usize>) {
         let mut st = shared.q.lock().expect("serve queue lock poisoned");
         st.stats.batches += 1;
         st.stats.batched_samples += b as u64;
+        st.stats.skipped_waves += backend.skipped_waves(b);
         match outcome {
             Ok(oc) if oc.unrecovered == 0 => {
                 st.stats.completed += b as u64;

@@ -187,6 +187,7 @@ impl ServeSim {
         mut sink: F,
     ) -> Result<ServeReport> {
         self.stats = ServeStats::default();
+        self.stats.live_block_ratio = self.backend.live_block_ratio();
         self.rec.clear();
         self.queue.clear();
         self.free_at.iter_mut().for_each(|t| *t = 0.0);
@@ -272,6 +273,8 @@ impl ServeSim {
                     // earliest-free survivor.
                     self.free_at[k] = start + self.backend.svc_latency(b);
                     self.stats.redispatched += 1;
+                    // The wasted attempt ran the live wave schedule too.
+                    self.stats.skipped_waves += self.backend.skipped_waves(b);
                     k = 0;
                     for c in 1..self.live.len() {
                         if self.free_at[c] < self.free_at[k] {
@@ -292,6 +295,7 @@ impl ServeSim {
             self.stats.batches += 1;
             self.stats.batched_samples += b as u64;
             self.stats.fault_latency_s += oc.fault_latency_s;
+            self.stats.skipped_waves += self.backend.skipped_waves(b);
             if oc.unrecovered > 0 {
                 // Graceful failure: the batch is answered `Faulted`,
                 // counted, and the chips move on — no panic, no wedge.

@@ -223,6 +223,7 @@ fn prop_allreduce_equals_host_chain() {
                             w: (0..w_len).map(|_| r.f32_adversarial()).collect(),
                             b: (0..b_len).map(|_| r.f32_normal(8)).collect(),
                             wdec: Vec::new(),
+                            mask: None,
                         }),
                         None,
                     ]

@@ -1,0 +1,481 @@
+//! Block-sparse training suite (ISSUE 10): the wave-level block skip
+//! must be *exact* — a masked network trains bit-identically to a dense
+//! engine running over the same pinned-zero weights with the gradients
+//! projected through the mask — and *priced* — the counted ledger
+//! equals the occupancy-aware analytic `training_work` /
+//! `cluster_step_cost` at every ratio and shard count, with the skipped
+//! MAC/wave gap accounted exactly.  Pruned blocks stay pinned at `+0.0`
+//! forever (SGD masks the update), layers whose live-block count drops
+//! to zero — or to nothing at all — still schedule (the empty-wave
+//! guard), and the runtime wires the whole path end to end.
+//!
+//! Ledger-parity asserts run in `ExecMode::Pooled` only: the frozen
+//! `Flat` floor computes the dense wgrad and *projects* it through the
+//! mask (bit-identical values, dense-priced MACs), so only the pooled
+//! resident-panel path earns the skipped pricing.
+
+use mram_pim::arch::{
+    AccelKind, Accelerator, BlockMask, ExecMode, LayerParams, NetworkParams, Occupancy,
+    SparsityConfig, TrainEngine, TrainTotals,
+};
+use mram_pim::cluster::{verify_cluster_totals_occ, ClusterConfig, ClusterEngine};
+use mram_pim::data::Dataset;
+use mram_pim::fpu::{FloatFormat, FpCostModel};
+use mram_pim::model::{Layer, Network};
+use mram_pim::prop::Rng;
+use mram_pim::runtime::{Runtime, FUNCTIONAL_LANES};
+use mram_pim::sim::faults::{FaultConfig, FaultHook, FaultSession};
+use std::sync::Arc;
+
+const LANES: usize = 1024;
+
+/// Wide enough that the 784-free first layer spans 3 K-panels (600
+/// cols), so masks exercise multi-panel grids and ragged edge blocks.
+fn wide_mlp() -> Network {
+    Network {
+        name: "sparsity-test-mlp",
+        input: (1, 20, 30),
+        layers: vec![
+            Layer::Dense { inp: 600, out: 12 },
+            Layer::Relu { units: 12 },
+            Layer::Dense { inp: 12, out: 5 },
+        ],
+    }
+}
+
+fn convnet() -> Network {
+    Network {
+        name: "sparsity-test-conv",
+        input: (1, 6, 6),
+        layers: vec![
+            Layer::Conv2d {
+                in_ch: 1,
+                out_ch: 2,
+                kh: 3,
+                kw: 3,
+                in_h: 6,
+                in_w: 6,
+            },
+            Layer::Relu { units: 2 * 4 * 4 },
+            Layer::AvgPool2 {
+                ch: 2,
+                in_h: 4,
+                in_w: 4,
+            },
+            Layer::Dense { inp: 8, out: 4 },
+        ],
+    }
+}
+
+fn step_batches(net: &Network, batch: usize, steps: usize, seed: u64) -> Vec<(Vec<f32>, Vec<i32>)> {
+    let (c, h, w) = net.input;
+    let classes = net.layers.last().unwrap().out_units();
+    let mut rng = Rng::new(seed);
+    (0..steps)
+        .map(|_| {
+            (
+                (0..batch * c * h * w).map(|_| rng.f32_normal(1)).collect(),
+                (0..batch).map(|_| rng.below(classes as u64) as i32).collect(),
+            )
+        })
+        .collect()
+}
+
+fn param_bits(p: &NetworkParams) -> Vec<u32> {
+    p.layers
+        .iter()
+        .flatten()
+        .flat_map(|lp| lp.w.iter().chain(&lp.b).map(|v| v.to_bits()))
+        .collect()
+}
+
+fn grad_bits(grads: &[Option<LayerParams>]) -> Vec<u32> {
+    grads
+        .iter()
+        .flatten()
+        .flat_map(|g| g.w.iter().chain(&g.b).map(|v| v.to_bits()))
+        .collect()
+}
+
+/// Project a dense gradient set through the masks of `masked` (the
+/// floor-mode projection, applied host-side as the reference).
+fn project_grads(grads: &mut [Option<LayerParams>], masked: &NetworkParams) {
+    for (g, lp) in grads.iter_mut().zip(&masked.layers) {
+        if let (Some(g), Some(lp)) = (g.as_mut(), lp.as_ref()) {
+            if let Some(mask) = &lp.mask {
+                mask.zero_masked(&mut g.w);
+            }
+        }
+    }
+}
+
+/// Every masked element of every layer still holds bit-exact `+0.0`.
+fn masks_pinned(params: &NetworkParams) -> bool {
+    params.layers.iter().flatten().all(|lp| {
+        lp.mask
+            .as_ref()
+            .map_or(true, |m| !m.zero_masked(&mut lp.w.clone()))
+    })
+}
+
+/// Run `steps` masked training steps next to the dense reference —
+/// a dense engine over the same pinned-zero weights, gradients
+/// projected through the masks before the update — asserting bit-equal
+/// loss, gradients and post-step parameters at every step.  Returns the
+/// masked run's accumulated ledger.
+fn check_masked_vs_dense_reference(
+    net: &Network,
+    masked: &mut NetworkParams,
+    mode: ExecMode,
+    threads: usize,
+    batch: usize,
+    steps: usize,
+    seed: u64,
+    tag: &str,
+) -> TrainTotals {
+    let mut dense_ref = masked.clone();
+    for lp in dense_ref.layers.iter_mut().flatten() {
+        lp.mask = None;
+    }
+    let eng = TrainEngine::new_mode(FpCostModel::proposed_fp32(), LANES, threads, mode);
+    let mut totals = TrainTotals::default();
+    for (step, (x, y)) in step_batches(net, batch, steps, seed).iter().enumerate() {
+        let rm = eng.train_step(net, masked, x, y, batch, 0.1).unwrap();
+        // Dense gradients harvested on a throwaway clone (its densely
+        // updated weights are discarded; only the gradients matter).
+        let mut scratch = dense_ref.clone();
+        let rd = eng.train_step(net, &mut scratch, x, y, batch, 0.1).unwrap();
+        assert_eq!(
+            rm.loss.to_bits(),
+            rd.loss.to_bits(),
+            "{tag}: loss diverged at step {step}"
+        );
+        let mut projected = rd.grads;
+        project_grads(&mut projected, masked);
+        assert_eq!(
+            grad_bits(&rm.grads),
+            grad_bits(&projected),
+            "{tag}: gradients diverged at step {step}"
+        );
+        eng.apply_sgd(&mut dense_ref, &projected, 0.1);
+        assert_eq!(
+            param_bits(masked),
+            param_bits(&dense_ref),
+            "{tag}: parameters diverged at step {step}"
+        );
+        assert!(masks_pinned(masked), "{tag}: pruned block moved at step {step}");
+        totals.absorb(&rm);
+    }
+    totals
+}
+
+#[test]
+fn masked_training_is_the_projected_dense_chain() {
+    // Satellite (c): the full property grid.  {Pooled, Flat floor} x
+    // threads x block geometry x ratio — masked training is bit-equal
+    // to dense training over pinned-zero weights with mask-projected
+    // gradients, for 3 full steps.  Ledger parity is Pooled-only (the
+    // floor prices its dense wgrad densely by design).
+    let net = wide_mlp();
+    let batch = 4;
+    for mode in [ExecMode::Pooled, ExecMode::Flat] {
+        for threads in [1usize, 4] {
+            for block_rows in [1usize, 4, 8] {
+                for ratio in [0.25f64, 0.5, 0.75] {
+                    let tag = format!("{mode:?}/t{threads}/b{block_rows}/r{ratio}");
+                    let cfg = SparsityConfig { block_rows, ratio };
+                    let mut params = NetworkParams::init(&net, 7);
+                    cfg.ensure(&mut params);
+                    let occ = Occupancy::of(&net, &params);
+                    assert!(occ.live_fraction() < 1.0, "{tag}: nothing pruned");
+                    let totals = check_masked_vs_dense_reference(
+                        &net, &mut params, mode, threads, batch, 3, 0xB10C + block_rows as u64,
+                        &tag,
+                    );
+                    assert!(totals.skipped_macs > 0, "{tag}: nothing skipped");
+                    if mode == ExecMode::Pooled {
+                        assert!(
+                            totals.matches_analytic_occ(&net, batch, LANES as u64, &occ),
+                            "{tag}: counted ledger drifted from the analytic occupancy \
+                             model: {totals:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn masked_conv_layers_skip_and_stay_exact() {
+    // The conv path rides the same masked kernels (im2col rows): an
+    // explicit from_blocks mask over the conv weight matrix must train
+    // bit-identically to the projected dense chain in both modes.
+    let net = convnet();
+    let batch = 4;
+    for mode in [ExecMode::Pooled, ExecMode::Flat] {
+        let mut params = NetworkParams::init(&net, 3);
+        {
+            let lp = params.layers[0].as_mut().unwrap();
+            // Conv weights are [out_ch=2, in_ch*kh*kw=9]: mask output
+            // channel 1's whole (single-panel) row band.
+            let m = BlockMask::from_blocks(2, 9, 1, &[(1, 0)]);
+            m.zero_masked(&mut lp.w);
+            lp.wdec.clear();
+            lp.mask = Some(m);
+        }
+        let occ = Occupancy::of(&net, &params);
+        assert_eq!(occ.live_w[0], 9, "half the conv weights pruned");
+        let tag = format!("conv/{mode:?}");
+        let totals =
+            check_masked_vs_dense_reference(&net, &mut params, mode, 2, batch, 3, 0xC0DE, &tag);
+        assert!(totals.skipped_macs > 0, "{tag}: conv blocks not skipped");
+        if mode == ExecMode::Pooled {
+            assert!(
+                totals.matches_analytic_occ(&net, batch, LANES as u64, &occ),
+                "{tag}: {totals:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn ratio_zero_mask_is_bit_identical_to_no_mask() {
+    // A mask that prunes nothing must be a bit-level no-op with a zero
+    // skipped ledger — the dense-regression guarantee of the feature.
+    let net = wide_mlp();
+    let batch = 4;
+    let eng = TrainEngine::new(FpCostModel::proposed_fp32(), LANES, 2);
+    let mut with_mask = NetworkParams::init(&net, 11);
+    SparsityConfig {
+        block_rows: 4,
+        ratio: 0.0,
+    }
+    .ensure(&mut with_mask);
+    assert!(with_mask.layers.iter().flatten().any(|lp| lp.mask.is_some()));
+    let mut without = NetworkParams::init(&net, 11);
+    let mut t_mask = TrainTotals::default();
+    let mut t_plain = TrainTotals::default();
+    for (x, y) in &step_batches(&net, batch, 3, 0xD0) {
+        let rm = eng.train_step(&net, &mut with_mask, x, y, batch, 0.1).unwrap();
+        let rp = eng.train_step(&net, &mut without, x, y, batch, 0.1).unwrap();
+        assert_eq!(rm.loss.to_bits(), rp.loss.to_bits());
+        assert_eq!(param_bits(&with_mask), param_bits(&without));
+        t_mask.absorb(&rm);
+        t_plain.absorb(&rp);
+    }
+    assert_eq!(t_mask, t_plain, "ratio-0 mask must not change the ledger");
+    assert_eq!(t_mask.skipped_macs, 0);
+    assert_eq!(t_mask.skipped_waves, 0);
+    assert!(t_mask.matches_analytic(&net, batch, LANES as u64));
+}
+
+#[test]
+fn pruned_blocks_stay_pinned_for_twenty_steps_under_armed_abft() {
+    // Mask persistence: 20 SGD steps with the fault machinery armed at
+    // zero rates (ABFT checksums run, over live extents only) never
+    // move a pruned element off +0.0, and the skip keeps pricing.
+    let net = wide_mlp();
+    let batch = 4;
+    let mut eng = TrainEngine::new(FpCostModel::proposed_fp32(), LANES, 2);
+    let session = Arc::new(FaultSession::new(FaultConfig::default()));
+    eng.set_fault_hook(Some(Arc::new(FaultHook::new(session.clone(), 0, LANES))));
+    let mut params = NetworkParams::init(&net, 5);
+    SparsityConfig::default().ensure(&mut params);
+    let occ = Occupancy::of(&net, &params);
+    let mut totals = TrainTotals::default();
+    for (x, y) in &step_batches(&net, batch, 20, 0xFA17) {
+        let r = eng.train_step(&net, &mut params, x, y, batch, 0.1).unwrap();
+        assert!(r.loss.is_finite());
+        totals.absorb(&r);
+        assert!(masks_pinned(&params), "a pruned block drifted off +0.0");
+    }
+    assert_eq!(totals.steps, 20);
+    assert!(totals.skipped_waves > 0);
+    assert!(
+        totals.matches_analytic_occ(&net, batch, LANES as u64, &occ),
+        "armed-at-zero ABFT must not disturb the skipped ledger: {totals:?}"
+    );
+    let report = session.report();
+    assert!(report.checksum_adds > 0, "ABFT guard never ran");
+    assert_eq!(report.injected, 0, "zero rates must inject nothing");
+    assert_eq!(report.retried_rows, 0);
+}
+
+#[test]
+fn fully_masked_layer_schedules_empty_waves() {
+    // Satellite (b): a layer whose live-block count is zero still
+    // forwards (bias-only outputs), trains, and prices exactly — the
+    // empty-wave guard — in both modes and across shard counts.
+    let net = wide_mlp();
+    let batch = 6;
+    let mut masked = NetworkParams::init(&net, 9);
+    {
+        let lp = masked.layers[0].as_mut().unwrap();
+        let m = BlockMask::prune(&lp.w, 12, 600, 4, 1.0);
+        assert!(m.fully_masked());
+        assert_eq!(m.live_rows(), 0);
+        assert_eq!(m.live_cols(), 0);
+        m.zero_masked(&mut lp.w);
+        lp.wdec.clear();
+        lp.mask = Some(m);
+    }
+    let occ = Occupancy::of(&net, &masked);
+    assert_eq!(occ.live_w[0], 0, "layer 0 fully pruned");
+
+    for mode in [ExecMode::Pooled, ExecMode::Flat] {
+        let tag = format!("fully-masked/{mode:?}");
+        let mut p = masked.clone();
+        let totals =
+            check_masked_vs_dense_reference(&net, &mut p, mode, 2, batch, 2, 0xE0F, &tag);
+        if mode == ExecMode::Pooled {
+            assert!(
+                totals.matches_analytic_occ(&net, batch, LANES as u64, &occ),
+                "{tag}: empty waves must price as zero, exactly: {totals:?}"
+            );
+        }
+    }
+
+    // Sharded: the cluster must tolerate the empty-wave layer and stay
+    // bit-identical to the single chip at every shard count.
+    let model = FpCostModel::proposed_fp32();
+    let mut reference: Option<Vec<u32>> = None;
+    for shards in [1usize, 2, 4] {
+        let eng = ClusterEngine::new(model, LANES, ClusterConfig::new(shards, 2));
+        let mut p = masked.clone();
+        let mut totals = TrainTotals::default();
+        for (x, y) in &step_batches(&net, batch, 2, 0x5EED) {
+            let r = eng.train_step(&net, &mut p, x, y, batch, 0.1).unwrap();
+            assert!(r.loss.is_finite(), "shards {shards}");
+            r.absorb_into(&mut totals);
+        }
+        verify_cluster_totals_occ(&totals, &net, batch, shards, LANES, &model, &occ)
+            .unwrap_or_else(|e| panic!("shards {shards}: {e}"));
+        let bits = param_bits(&p);
+        match &reference {
+            None => reference = Some(bits),
+            Some(want) => assert_eq!(&bits, want, "shards {shards} diverged"),
+        }
+    }
+}
+
+#[test]
+fn cluster_sparsity_parity_across_ratios_and_shards() {
+    // The priced skip survives sharding: at every ratio and shard
+    // count the counted cluster ledger equals the occupancy-aware
+    // analytic cluster_step_cost, and the merged update stays
+    // bit-identical across shard counts.
+    let net = wide_mlp();
+    let batch = 6;
+    let model = FpCostModel::proposed_fp32();
+    for ratio in [0.0f64, 0.5, 0.75, 0.9] {
+        let mut pruned = NetworkParams::init(&net, 17);
+        SparsityConfig {
+            block_rows: 4,
+            ratio,
+        }
+        .ensure(&mut pruned);
+        let occ = Occupancy::of(&net, &pruned);
+        let mut reference: Option<Vec<u32>> = None;
+        for shards in [1usize, 2, 4] {
+            let eng = ClusterEngine::new(model, LANES, ClusterConfig::new(shards, 2));
+            let mut p = pruned.clone();
+            let mut totals = TrainTotals::default();
+            for (x, y) in &step_batches(&net, batch, 2, 0xAB5) {
+                let r = eng.train_step(&net, &mut p, x, y, batch, 0.1).unwrap();
+                r.absorb_into(&mut totals);
+            }
+            let cost = verify_cluster_totals_occ(
+                &totals, &net, batch, shards, LANES, &model, &occ,
+            )
+            .unwrap_or_else(|e| panic!("ratio {ratio} shards {shards}: {e}"));
+            if ratio > 0.0 {
+                assert!(
+                    totals.skipped_waves > 0,
+                    "ratio {ratio} shards {shards}: no waves skipped"
+                );
+            } else {
+                assert_eq!(totals.skipped_macs, 0);
+                assert_eq!(totals.skipped_waves, 0);
+            }
+            assert_eq!(totals.waves, cost.total_waves() * totals.steps);
+            assert!(masks_pinned(&p), "ratio {ratio} shards {shards}");
+            let bits = param_bits(&p);
+            match &reference {
+                None => reference = Some(bits),
+                Some(want) => {
+                    assert_eq!(&bits, want, "ratio {ratio} shards {shards} diverged")
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn runtime_wires_sparsity_end_to_end() {
+    // The CLI path: set_model + set_sparsity, train, and the runtime's
+    // occupancy/ledger cross-check — exactly what `report_functional
+    // _ledger` asserts at the end of a `train --sparsity` run.
+    let mut rt = Runtime::load_dir("artifacts").unwrap();
+    rt.set_threads(2);
+    rt.set_model("lenet-300-100").unwrap();
+    assert!(rt.set_model("no-such-net").is_err());
+    rt.set_sparsity(Some(SparsityConfig::parse("block=4,ratio=0.75").unwrap()));
+    assert_eq!(rt.sparsity().unwrap().ratio, 0.75);
+    let mut data = Dataset::synthetic(16, 21);
+    let mut state = rt.init_params(21).unwrap();
+    let batch = 4;
+    for _ in 0..2 {
+        let b = data.next_batch(batch);
+        let loss = rt.train_step(&mut state, &b.images, &b.labels, 0.05).unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+    }
+    let net = rt.network();
+    let occ = rt.occupancy();
+    assert!(
+        occ.live_fraction() < 0.35,
+        "0.75 pruning leaves under 35% live, got {}",
+        occ.live_fraction()
+    );
+    let totals = rt.functional_totals().unwrap();
+    assert_eq!(totals.steps, 2);
+    assert!(totals.skipped_macs > 0 && totals.skipped_waves > 0);
+    assert!(
+        totals.matches_analytic_occ(&net, batch, FUNCTIONAL_LANES as u64, &occ),
+        "runtime ledger drifted from the occupancy model: {totals:?}"
+    );
+    // Eval and the serving snapshot ride the same pruned cache.
+    let b = data.next_batch(batch);
+    let (loss, correct) = rt.eval(&state, &b.images, &b.labels).unwrap();
+    assert!(loss.is_finite());
+    assert!((0.0..=batch as f32).contains(&correct));
+    let snap = rt.snapshot_params(&state).unwrap();
+    assert!(masks_pinned(&snap), "snapshot lost the pinned zeros");
+    assert!(
+        snap.layers.iter().flatten().any(|lp| lp.mask.is_some()),
+        "snapshot lost the masks"
+    );
+}
+
+#[test]
+fn analytic_step_cost_takes_occupancy() {
+    // `train_step_cost_occ` at the dense occupancy IS `train_step_cost`;
+    // at a pruned occupancy it prices exactly the live training work.
+    let net = wide_mlp();
+    let accel = Accelerator::new(AccelKind::Proposed, FloatFormat::FP32, LANES);
+    let dense = accel.train_step_cost(&net, 32);
+    let dense_occ = accel.train_step_cost_occ(&net, 32, &Occupancy::dense(&net));
+    assert_eq!(dense.macs, dense_occ.macs);
+    assert_eq!(dense.latency_s, dense_occ.latency_s);
+    assert_eq!(dense.energy_j, dense_occ.energy_j);
+    assert_eq!(dense.area_m2, dense_occ.area_m2);
+
+    let mut params = NetworkParams::init(&net, 7);
+    SparsityConfig::default().ensure(&mut params);
+    let occ = Occupancy::of(&net, &params);
+    let sparse = accel.train_step_cost_occ(&net, 32, &occ);
+    assert_eq!(sparse.macs, occ.training_work(&net, 32).total_macs());
+    assert!(sparse.macs < dense.macs);
+    assert!(sparse.latency_s < dense.latency_s);
+    assert!(sparse.energy_j < dense.energy_j);
+}

@@ -33,6 +33,12 @@ percent (default 10; CI relaxes for shared-runner noise).  The serving
 simulation runs in virtual time, so these are near-deterministic — the
 slack only absorbs float summation-order drift, not hardware.
 
+``sparsity`` gates the dense-vs-ratio-0.75 wall-clock *within the fresh
+run* (hardware-independent): the PR 10 wave-level block skip must keep
+paying ``SPARSITY_MIN_SPEEDUP`` on the host, minus ``SPARSITY_SLACK_PCT``
+of runner noise, and its dense-mask bit-identity / steady-state alloc
+counters sit under exact zero gates.
+
 ``cluster_scaling`` additionally gates shards=2 ≤ shards=1 *within the
 fresh run* (hardware-independent, like the ABFT overhead gate): PR 7
 replaced the per-sample micrograd lowering with one batched backward
@@ -62,6 +68,7 @@ BENCHES = [
     "BENCH_cluster_scaling.json",
     "BENCH_fault_tolerance.json",
     "BENCH_serving.json",
+    "BENCH_sparsity.json",
 ]
 
 # The gated headline entry of each bench file.
@@ -71,6 +78,7 @@ GATES = {
     "BENCH_cluster_scaling.json": "lenet5 cluster step batch 32 shards 4",
     "BENCH_fault_tolerance.json": "lenet5 fault-free train step batch 32 (threads 4)",
     "BENCH_serving.json": "serving: 100000 open-loop arrivals @ 1.0x offered load (chips 2, healthy)",
+    "BENCH_sparsity.json": "mlp-wide train step batch 32 (threads 4, pooled, dense)",
 }
 
 # ``metric:`` entries carry verification percentages in ``mean_ns``
@@ -89,6 +97,7 @@ CEILING_GATES = {
         "metric: serving p99 ms @2.0x healthy",
         "metric: serving shed+reject pct @2.0x healthy",
         "metric: serving p99 ms @1.0x one-dead",
+        "metric: serving p99 ms @1.0x sparse-0.75",
     ],
 }
 
@@ -100,6 +109,10 @@ EXACT_GATES = {
     "BENCH_serving.json": [
         "metric: serving unrecovered faults",
         "metric: serving steady-state dispatch allocs",
+    ],
+    "BENCH_sparsity.json": [
+        "metric: sparsity dense-mask bit mismatches",
+        "metric: sparsity steady-state allocs (ratio 0.75)",
     ],
 }
 
@@ -116,6 +129,17 @@ ZERO_RATE_ENTRY = "lenet5 abft-armed zero-rate train step batch 32 (threads 4)"
 # on noisy shared runners (default 5%).
 SHARDS_1_ENTRY = "lenet5 cluster step batch 32 shards 1"
 SHARDS_2_ENTRY = "lenet5 cluster step batch 32 shards 2"
+
+# Cross-entry gate within the fresh sparsity run: the ratio-0.75
+# block-sparse step must beat the dense step by ``SPARSITY_MIN_SPEEDUP``
+# (default 1.3x, mirroring the bench's in-binary gate), with
+# ``SPARSITY_SLACK_PCT`` percent of measurement slack for noisy shared
+# runners (default 10 -> effective floor 1.3 * 0.9 = 1.17x).  Hardware-
+# independent like the shards gate: both entries come from the same run.
+SPARSITY_DENSE_ENTRY = "mlp-wide train step batch 32 (threads 4, pooled, dense)"
+SPARSITY_SPARSE_ENTRY = (
+    "mlp-wide train step batch 32 (threads 4, pooled, sparse block=4 ratio=0.75)"
+)
 
 
 def load_committed(path):
@@ -273,6 +297,30 @@ def main():
             else:
                 failures.append(
                     f"{path}: fresh run lacks the shards=1/shards=2 entry pair"
+                )
+        # Sparse-vs-dense speedup gate: compare the two fresh entries of
+        # the same sparsity run (hardware-independent).
+        if path == "BENCH_sparsity.json" and fresh:
+            min_speedup = float(os.environ.get("SPARSITY_MIN_SPEEDUP", "1.3"))
+            slack = float(os.environ.get("SPARSITY_SLACK_PCT", "10"))
+            floor = min_speedup * (1.0 - slack / 100.0)
+            if SPARSITY_DENSE_ENTRY in fresh and SPARSITY_SPARSE_ENTRY in fresh:
+                dense = fresh[SPARSITY_DENSE_ENTRY]["mean_ns"]
+                sparse = fresh[SPARSITY_SPARSE_ENTRY]["mean_ns"]
+                speedup = dense / sparse if sparse else 0.0
+                print(
+                    f"[GATE] sparse ratio=0.75 vs dense wall-clock: {speedup:.2f}x "
+                    f"(must be >= {floor:.2f}x)"
+                )
+                if speedup < floor:
+                    failures.append(
+                        f"block-sparse step speedup {speedup:.2f}x below the "
+                        f"{floor:.2f}x floor ({min_speedup}x minus {slack}% slack); "
+                        f"wave-level skips must pay on the host too"
+                    )
+            else:
+                failures.append(
+                    f"{path}: fresh run lacks the dense/sparse-0.75 entry pair"
                 )
 
     if failures:
